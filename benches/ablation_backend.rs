@@ -1,0 +1,88 @@
+//! ABL-B: backend ablation — native GEMM vs xla-stepped (Pallas artifact)
+//! vs xla-stepped (plain-XLA-dot artifact) vs xla-fused, on a real layer.
+//!
+//! Numerics must agree across backends (same sketch seed ⇒ near-identical
+//! factorizations); wallclock differs wildly because interpret-mode Pallas
+//! is a correctness vehicle, not a TPU performance proxy (DESIGN.md §Perf).
+
+use rsi_compress::bench::Harness;
+use rsi_compress::compress::rsi::{rsi_factorize, RsiOptions};
+use rsi_compress::compress::{GemmEngine, NativeEngine};
+use rsi_compress::report::{write_report, Table};
+use rsi_compress::runtime::{ArtifactRegistry, ExecutableCache, XlaFusedRsi, XlaGemmEngine};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let registry = match ArtifactRegistry::load_default() {
+        Ok(r) => Arc::new(r),
+        Err(e) => {
+            eprintln!("[skip] ablation_backend needs artifacts: {e:#}");
+            return Ok(());
+        }
+    };
+    let cache = Arc::new(ExecutableCache::new());
+    // Use the vit fc2 layer (192×768) — covered by pallas, xla and fused
+    // artifact sets.
+    let lut = rsi_compress::cli::experiments::load_layer(
+        rsi_compress::model::ModelKind::SynthVit,
+        "blocks.2.fc2",
+    )?;
+    let (k, q, seed) = (64usize, 2usize, 42u64);
+    let opts = RsiOptions::with_q(q, seed);
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let iters = if fast { 2 } else { 6 };
+
+    let mut h = Harness::new(1, iters);
+    let mut table = Table::new(
+        format!("Ablation B — backends ({}, k={k}, q={q})", lut.label),
+        &["backend", "‖W−AB‖₂", "mean secs"],
+    );
+
+    let native_err = {
+        let f = rsi_factorize(&lut.w, k, &opts, &NativeEngine);
+        let s = h.bench("backend/native", || rsi_factorize(&lut.w, k, &opts, &NativeEngine));
+        table.row(&["native".into(), format!("{:.5}", f.spectral_error(&lut.w)), format!("{:.4}", s.mean)]);
+        f.spectral_error(&lut.w)
+    };
+
+    let pallas = XlaGemmEngine::new(registry.clone(), cache.clone());
+    let f = rsi_factorize(&lut.w, k, &opts, &pallas);
+    let err_pallas = f.spectral_error(&lut.w);
+    let s = h.bench("backend/xla-pallas", || rsi_factorize(&lut.w, k, &opts, &pallas));
+    table.row(&["xla-stepped(pallas)".into(), format!("{err_pallas:.5}"), format!("{:.4}", s.mean)]);
+
+    if registry.find_gemm("gemm_wy", lut.w.rows(), lut.w.cols(), k, "xla").is_some() {
+        let xla = XlaGemmEngine::new(registry.clone(), cache.clone()).with_xla_flavor();
+        let f = rsi_factorize(&lut.w, k, &opts, &xla);
+        let err = f.spectral_error(&lut.w);
+        let s = h.bench("backend/xla-dot", || rsi_factorize(&lut.w, k, &opts, &xla));
+        table.row(&["xla-stepped(dot)".into(), format!("{err:.5}"), format!("{:.4}", s.mean)]);
+    }
+
+    let fused = XlaFusedRsi::new(registry.clone(), cache.clone());
+    if fused.supports(lut.w.rows(), lut.w.cols(), k, q) {
+        let f = fused.factorize(&lut.w, k, q, seed)?;
+        let err = f.spectral_error(&lut.w);
+        let s = h.bench("backend/xla-fused", || fused.factorize(&lut.w, k, q, seed).unwrap());
+        table.row(&["xla-fused(NS)".into(), format!("{err:.5}"), format!("{:.4}", s.mean)]);
+        // Same subspace quality within a few percent despite different
+        // orthonormalization.
+        assert!(
+            (err - native_err).abs() / native_err < 0.2,
+            "fused error {err} vs native {native_err}"
+        );
+    }
+
+    // Numerics agreement between native and pallas paths (same seed).
+    assert!(
+        (err_pallas - native_err).abs() / native_err < 0.05,
+        "pallas {err_pallas} vs native {native_err}"
+    );
+
+    println!("{}", table.render());
+    let (hits, misses) = cache.stats();
+    println!("executable cache: {hits} hits, {misses} misses");
+    write_report("reports/ablation_backend.csv", &table.to_csv())?;
+    println!("wrote reports/ablation_backend.csv");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! ABL-A + EQ-3.14: orthonormalization-strategy ablation and the
+//! error-vs-iterations decay law.
+//!
+//! Series A — Householder vs CholeskyQR2 vs Newton–Schulz inside
+//! Algorithm 3.1 (quality + runtime at fixed k, q). The Newton–Schulz
+//! variant is what the fused TPU-shaped artifact uses; this ablation
+//! quantifies what that substitution costs on a CPU testbed.
+//!
+//! Series B — log(E‖W−W̃‖²/s²_{k+1}) vs the multiplication count
+//! m = 2q: Eq. 3.14 predicts ~1/(m−1) decay.
+
+use rsi_compress::bench::Harness;
+use rsi_compress::compress::rsi::{rsi_factorize, OrthoStrategy, RsiOptions};
+use rsi_compress::compress::NativeEngine;
+use rsi_compress::report::{write_report, FigureSeries, Table};
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::tensor::init::{matrix_with_spectrum, SpectrumShape};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (c, d, k, trials) = if fast { (96, 256, 12, 2) } else { (512, 2048, 64, 8) };
+    let mut g = GaussianSource::new(11);
+    let spec = SpectrumShape::pretrained_like().values(c);
+    let w = matrix_with_spectrum(c, d, &spec, &mut g);
+    let mut h = Harness::from_env();
+
+    // Series A: ortho strategies.
+    let mut table = Table::new(
+        format!("Ablation A — ortho strategy ({c}x{d}, k={k}, q=2)"),
+        &["strategy", "mean ‖W−AB‖₂", "normalized", "mean secs"],
+    );
+    for ortho in [
+        OrthoStrategy::Householder,
+        OrthoStrategy::CholeskyQr2,
+        OrthoStrategy::NewtonSchulz(14),
+    ] {
+        let mut errs = Vec::new();
+        let mut secs = Vec::new();
+        for t in 0..trials {
+            let opts = RsiOptions { q: 2, oversample: 0, ortho, seed: 100 + t as u64 };
+            let sw = rsi_compress::util::Stopwatch::start();
+            let f = rsi_factorize(&w, k, &opts, &NativeEngine);
+            secs.push(sw.secs());
+            errs.push(f.spectral_error(&w));
+        }
+        let me = errs.iter().sum::<f64>() / errs.len() as f64;
+        let ms = secs.iter().sum::<f64>() / secs.len() as f64;
+        h.record(&format!("ortho/{}", ortho.name()), &secs);
+        table.row(&[
+            ortho.name().to_string(),
+            format!("{me:.5}"),
+            format!("{:.4}", me / spec[k]),
+            format!("{ms:.4}"),
+        ]);
+    }
+    println!("{}", table.render());
+    write_report("reports/ablation_ortho.csv", &table.to_csv())?;
+
+    // Series B: Eq. 3.14 — log normalized squared error vs m = 2q.
+    let mut fig = FigureSeries::new(
+        "Eq 3.14 — log(E‖W−W̃‖²/s²_k+1) vs multiplications m=2q",
+        "m",
+        "log normalized sq. error",
+    );
+    let s_idx = fig.add_series("measured");
+    let qs: Vec<usize> = if fast { vec![1, 2, 3] } else { vec![1, 2, 3, 4, 5, 6] };
+    for &q in &qs {
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let opts = RsiOptions::with_q(q, 500 + t as u64);
+            let f = rsi_factorize(&w, k, &opts, &NativeEngine);
+            let e = f.spectral_error(&w);
+            acc += (e * e) / (spec[k] * spec[k]);
+        }
+        let mean_sq = acc / trials as f64;
+        fig.push(s_idx, (2 * q) as f64, mean_sq.ln());
+    }
+    println!("{}", fig.render());
+    // The law: decreasing and convex-ish toward 0.
+    let pts = fig.points(s_idx);
+    assert!(
+        pts.windows(2).all(|w| w[1].y <= w[0].y + 1e-9),
+        "Eq 3.14: error must decrease with m"
+    );
+    write_report("reports/eq314_decay.csv", &fig.to_csv())?;
+    println!("{}", h.table());
+    println!("wrote reports/ablation_ortho.csv, reports/eq314_decay.csv");
+    Ok(())
+}

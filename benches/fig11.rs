@@ -1,0 +1,29 @@
+//! FIG-1.1: singular spectrum of a pretrained layer + normalized RSVD
+//! spectral error vs rank (the motivation figure).
+//!
+//! `cargo bench --bench fig11` — writes reports/fig11_*.csv.
+//! Set RSIC_BENCH_FAST=1 for a smoke run.
+
+use rsi_compress::cli::experiments::{figure_11, load_layer};
+use rsi_compress::model::ModelKind;
+use rsi_compress::report::write_report;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let layer = match load_layer(ModelKind::SynthVgg, "layers.0") {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("[skip] fig11 needs artifacts: {e:#}");
+            return Ok(());
+        }
+    };
+    let ranks: Vec<usize> = if fast { vec![64, 256] } else { vec![32, 64, 128, 256, 512, 832] };
+    let trials = if fast { 2 } else { 10 };
+    let (spec, err) = figure_11(&layer, &ranks, trials, 42)?;
+    println!("{}", spec.render());
+    println!("{}", err.render());
+    write_report("reports/fig11_spectrum.csv", &spec.to_csv())?;
+    write_report("reports/fig11_error.csv", &err.to_csv())?;
+    println!("wrote reports/fig11_spectrum.csv, reports/fig11_error.csv");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! FIG-4.1: normalized error + runtime vs rank k and iteration count q on
+//! the (scaled) VGG19 fc layer, with the exact-SVD baseline — paper §4.1.
+//!
+//! `cargo bench --bench fig41` — writes reports/fig41_*.csv.
+
+use rsi_compress::cli::experiments::{load_layer, single_layer_sweep};
+use rsi_compress::compress::backend::BackendKind;
+use rsi_compress::model::ModelKind;
+use rsi_compress::report::write_report;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let layer = match load_layer(ModelKind::SynthVgg, "layers.0") {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("[skip] fig41 needs artifacts: {e:#}");
+            return Ok(());
+        }
+    };
+    // Paper sweeps k ∈ {100..1000} on 4096×25088; ours is the ÷4-scaled
+    // layer so the grid scales accordingly.
+    let ranks: Vec<usize> =
+        if fast { vec![64, 256] } else { vec![32, 64, 128, 256, 384, 512, 640, 832] };
+    let trials = if fast { 2 } else { 20 }; // paper: 20 trials
+    let sweep =
+        single_layer_sweep(&layer, &ranks, &[1, 2, 3, 4], trials, BackendKind::Native, 42)?;
+    println!("{}", sweep.error_fig.render());
+    println!("{}", sweep.runtime_fig.render());
+    // Speedup summary (the paper quotes 76×/51× at k=200).
+    println!("exact SVD: {:.3}s", sweep.svd_seconds);
+    for (qi, name) in sweep.runtime_fig.series_names().iter().enumerate().skip(1) {
+        let pts = sweep.runtime_fig.points(qi);
+        if let Some(first) = pts.first() {
+            println!(
+                "  {name} at k={}: {:.4}s → {:.1}× faster than exact SVD",
+                first.x,
+                first.y,
+                sweep.svd_seconds / first.y
+            );
+        }
+    }
+    write_report("reports/fig41_error.csv", &sweep.error_fig.to_csv())?;
+    write_report("reports/fig41_runtime.csv", &sweep.runtime_fig.to_csv())?;
+    println!("wrote reports/fig41_error.csv, reports/fig41_runtime.csv");
+    Ok(())
+}

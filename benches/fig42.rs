@@ -1,0 +1,31 @@
+//! FIG-4.2: the ViT encoder feedforward layer (scaled 192×768 analog of
+//! the paper's 768×3072) — normalized error + runtime vs k, q.
+//!
+//! `cargo bench --bench fig42` — writes reports/fig42_*.csv.
+
+use rsi_compress::cli::experiments::{load_layer, single_layer_sweep};
+use rsi_compress::compress::backend::BackendKind;
+use rsi_compress::model::ModelKind;
+use rsi_compress::report::write_report;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let layer = match load_layer(ModelKind::SynthVit, "blocks.2.fc1") {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("[skip] fig42 needs artifacts: {e:#}");
+            return Ok(());
+        }
+    };
+    let ranks: Vec<usize> = if fast { vec![32, 96] } else { vec![16, 32, 64, 96, 128, 160] };
+    let trials = if fast { 2 } else { 20 };
+    let sweep =
+        single_layer_sweep(&layer, &ranks, &[1, 2, 3, 4], trials, BackendKind::Native, 43)?;
+    println!("{}", sweep.error_fig.render());
+    println!("{}", sweep.runtime_fig.render());
+    println!("exact SVD: {:.4}s (paper: 0.07s on A100 for 768×3072)", sweep.svd_seconds);
+    write_report("reports/fig42_error.csv", &sweep.error_fig.to_csv())?;
+    write_report("reports/fig42_runtime.csv", &sweep.runtime_fig.to_csv())?;
+    println!("wrote reports/fig42_error.csv, reports/fig42_runtime.csv");
+    Ok(())
+}

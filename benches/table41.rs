@@ -1,0 +1,31 @@
+//! TAB-4.1: end-to-end compression of synthvgg + synthvit across the
+//! α × q grid: compression time, ratio, Top-1/Top-5 on the held-out
+//! 10-class eval set (1000→100-way head per DESIGN.md §Substitutions).
+//!
+//! `cargo bench --bench table41` — writes reports/table41_<model>.{txt,csv}.
+
+use rsi_compress::cli::experiments::table_41;
+use rsi_compress::compress::backend::BackendKind;
+use rsi_compress::model::ModelKind;
+use rsi_compress::report::write_report;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let alphas: Vec<f64> = if fast { vec![0.4] } else { vec![0.8, 0.6, 0.4, 0.2] };
+    let qs: Vec<usize> = if fast { vec![1, 4] } else { vec![1, 2, 3, 4] };
+    for model in [ModelKind::SynthVgg, ModelKind::SynthVit] {
+        let table = match table_41(model, &alphas, &qs, BackendKind::Native, 42) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("[skip] table41 needs artifacts: {e:#}");
+                return Ok(());
+            }
+        };
+        println!("{}", table.render());
+        let base = format!("reports/table41_{}", model.name());
+        write_report(format!("{base}.txt"), &table.render())?;
+        write_report(format!("{base}.csv"), &table.to_csv())?;
+        println!("wrote {base}.txt / .csv");
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Allow `pytest python/tests/` from the repo root: the build-time package
+# lives under python/.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,22 @@
+//! Single-layer analysis (paper §4.1): normalized error + runtime versus
+//! rank k and iteration count q on the scaled VGG19 fc1 layer — the
+//! machinery behind Figs 4.1/4.2, runnable as a standalone example.
+//!
+//! Run: `make artifacts && cargo run --release --example single_layer_sweep`
+
+use rsi_compress::cli::experiments::{load_layer, single_layer_sweep};
+use rsi_compress::compress::backend::BackendKind;
+use rsi_compress::model::ModelKind;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let layer = load_layer(ModelKind::SynthVgg, "layers.0")?;
+    println!("analyzing {}", layer.label);
+    let ranks: &[usize] = if fast { &[64, 256] } else { &[64, 128, 256, 512, 832] };
+    let trials = if fast { 2 } else { 5 };
+    let sweep = single_layer_sweep(&layer, ranks, &[1, 2, 3, 4], trials, BackendKind::Native, 42)?;
+    println!("{}", sweep.error_fig.render());
+    println!("{}", sweep.runtime_fig.render());
+    println!("exact SVD baseline: {:.3}s — compare the speedup column shape to Fig 4.1(b)", sweep.svd_seconds);
+    Ok(())
+}

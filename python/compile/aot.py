@@ -1,0 +1,348 @@
+"""AOT artifact builder: `make artifacts` entry point.
+
+Lowers every L2 graph to **HLO text** (not serialized protos: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids — see /opt/xla-example/README.md), trains the two
+"pretrained" models, and writes all data the Rust coordinator consumes:
+
+  artifacts/
+    manifest.txt                      # key=value lines, one per artifact
+    *.hlo.txt                         # exported graphs
+    data/synthvgg.tenz                # checkpoints (+ exact spectra)
+    data/synthvit.tenz
+    data/eval_vgg.tenz, eval_vit.tenz # held-out 10-class eval sets
+    data/golden_linalg.tenz           # numpy references for rust tests
+
+Python runs only here; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen
+from . import model as M
+from . import train
+from .kernels import matmul as kmm
+from .tenz import write_tenz
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        self.data_dir = os.path.join(out_dir, "data")
+        os.makedirs(self.data_dir, exist_ok=True)
+        self.manifest: list[str] = []
+
+    def export(self, name: str, fn, specs, **meta) -> None:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, path), "w") as f:
+            f.write(text)
+        kind = meta.pop("kind", "graph")
+        kv = " ".join(f"{k}={v}" for k, v in meta.items())
+        self.manifest.append(f"kind={kind} path={path} {kv}".strip())
+        print(f"  [hlo] {path:<48} {len(text) / 1024:8.1f} KiB  ({time.time() - t0:.1f}s)")
+
+    def add_data(self, name: str, tensors: dict, **meta) -> None:
+        path = os.path.join("data", name)
+        write_tenz(os.path.join(self.out, path), tensors)
+        kv = " ".join(f"{k}={v}" for k, v in meta.items())
+        self.manifest.append(f"kind=data path={path} {kv}".strip())
+        print(f"  [data] {path}")
+
+    def finish(self) -> None:
+        with open(os.path.join(self.out, "manifest.txt"), "w") as f:
+            f.write("# rsi-compress artifact manifest (key=value per line)\n")
+            f.write("\n".join(self.manifest) + "\n")
+        print(f"manifest: {len(self.manifest)} artifacts")
+
+
+# ---------------------------------------------------------------------------
+# GEMM artifact inventory — the shape buckets the runtime pads into.
+# ---------------------------------------------------------------------------
+
+GEMM_BUCKETS = [
+    # (C, D, [k...]) — synthvgg layers (fc1 1024×6272, fc2 1024×1024,
+    # head 1000×1024 → padded to 1024×1024) + figure-sweep ranks.
+    (1024, 6272, [64, 128, 256, 512, 832, 1024]),
+    (1024, 1024, [128, 256, 512, 832]),
+    (128, 1024, [32, 64, 96, 128]),
+    # synthvit: attn 192×192, fc1 768×192, fc2 192×768,
+    # head 1000×192 → 1024×192, patch-embed 192×192.
+    (192, 192, [64, 96, 128, 160, 192]),
+    (768, 192, [64, 128, 160, 192]),
+    (192, 768, [64, 128, 160, 192]),
+    (128, 192, [32, 64, 96, 128]),
+]
+
+# Plain-XLA-dot flavor for the backend ablation (two representative shapes).
+XLA_FLAVOR_BUCKETS = [(1024, 6272, [256]), (192, 768, [64])]
+
+# Fused whole-algorithm graphs for the headline configs.
+FUSED_CONFIGS = [
+    (1024, 6272, 256, [1, 2, 3, 4]),
+    (192, 768, 64, [1, 2, 3, 4]),
+]
+
+
+def export_gemm(b: Builder, fast: bool) -> None:
+    buckets = GEMM_BUCKETS if not fast else [(192, 192, [64]), (192, 768, [64])]
+    for c, d, ks in buckets:
+        for k in ks:
+            w = jax.ShapeDtypeStruct((c, d), F32)
+            y = jax.ShapeDtypeStruct((d, k), F32)
+            x = jax.ShapeDtypeStruct((c, k), F32)
+            bm, bk, bn = kmm.pick_blocks(c, d, k)
+            vmem = kmm.vmem_footprint_bytes(bm, bk, bn)
+            b.export(
+                f"gemm_wy_{c}x{d}_k{k}",
+                lambda w_, y_: M.gemm_wy(w_, y_, "pallas"),
+                [w, y],
+                kind="gemm_wy", c=c, d=d, k=k, flavor="pallas",
+                blocks=f"{bm}x{bk}x{bn}", vmem_bytes=vmem,
+            )
+            b.export(
+                f"gemm_wtx_{c}x{d}_k{k}",
+                lambda w_, x_: M.gemm_wtx(w_, x_, "pallas"),
+                [w, x],
+                kind="gemm_wtx", c=c, d=d, k=k, flavor="pallas",
+                blocks=f"{bm}x{bk}x{bn}", vmem_bytes=vmem,
+            )
+    flavor_buckets = XLA_FLAVOR_BUCKETS if not fast else []
+    for c, d, ks in flavor_buckets:
+        for k in ks:
+            w = jax.ShapeDtypeStruct((c, d), F32)
+            y = jax.ShapeDtypeStruct((d, k), F32)
+            x = jax.ShapeDtypeStruct((c, k), F32)
+            b.export(
+                f"gemm_wy_{c}x{d}_k{k}_xla",
+                lambda w_, y_: M.gemm_wy(w_, y_, "xla"),
+                [w, y],
+                kind="gemm_wy", c=c, d=d, k=k, flavor="xla",
+            )
+            b.export(
+                f"gemm_wtx_{c}x{d}_k{k}_xla",
+                lambda w_, x_: M.gemm_wtx(w_, x_, "xla"),
+                [w, x],
+                kind="gemm_wtx", c=c, d=d, k=k, flavor="xla",
+            )
+
+
+def export_fused(b: Builder, fast: bool) -> None:
+    configs = FUSED_CONFIGS if not fast else [(192, 768, 64, [1, 2])]
+    for c, d, k, qs in configs:
+        for q in qs:
+            w = jax.ShapeDtypeStruct((c, d), F32)
+            om = jax.ShapeDtypeStruct((d, k), F32)
+            b.export(
+                f"rsi_fused_{c}x{d}_k{k}_q{q}",
+                lambda w_, om_, q_=q: M.rsi_fused(w_, om_, q_, flavor="xla"),
+                [w, om],
+                kind="rsi_fused", c=c, d=d, k=k, q=q, ortho="newton-schulz",
+            )
+
+
+def export_forwards(b: Builder, fast: bool) -> None:
+    vgg_batch, vit_batch = (256, 128) if not fast else (32, 16)
+    b.export(
+        f"forward_synthvgg_b{vgg_batch}",
+        M.mlp_forward,
+        M.mlp_param_specs(vgg_batch),
+        kind="forward", model="synthvgg", batch=vgg_batch,
+        inputs="h,layers.0.weight,layers.0.bias,layers.1.weight,layers.1.bias,head.weight,head.bias",
+    )
+    b.export(
+        f"forward_synthvit_b{vit_batch}",
+        M.vit_forward_flat,
+        M.vit_param_specs(vit_batch),
+        kind="forward", model="synthvit", batch=vit_batch,
+        inputs="patches," + ",".join(M.vit_param_order()),
+    )
+    n, c = (256, 100) if not fast else (32, 100)
+    b.export(
+        f"softmax_{n}x{c}",
+        M.softmax_head,
+        [jax.ShapeDtypeStruct((n, c), F32)],
+        kind="softmax", n=n, c=c,
+    )
+    for cc, d, k in ([(1024, 6272, 256), (192, 768, 64)] if not fast else []):
+        b.export(
+            f"specnorm_{cc}x{d}_k{k}",
+            M.specnorm_residual,
+            [
+                jax.ShapeDtypeStruct((cc, d), F32),
+                jax.ShapeDtypeStruct((cc, k), F32),
+                jax.ShapeDtypeStruct((k, d), F32),
+                jax.ShapeDtypeStruct((d,), F32),
+            ],
+            kind="specnorm", c=cc, d=d, k=k,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Models, spectra, eval sets, golden data
+# ---------------------------------------------------------------------------
+
+
+def layer_spectra(params: dict) -> dict:
+    """Exact singular values (numpy, f64) for every 2-D weight — shipped so
+    the rust side gets s_{k+1} denominators without recomputing SVDs."""
+    out = {}
+    for k, v in params.items():
+        if k.endswith("weight") and v.ndim == 2:
+            s = np.linalg.svd(v.astype(np.float64), compute_uv=False)
+            out[k.replace(".weight", ".spectrum")] = s.astype(np.float64)
+    return out
+
+
+def build_models(b: Builder, fast: bool) -> None:
+    ridge_n, vit_steps = (16384, 200) if not fast else (2048, 10)
+
+    print("building synthvgg head (spiked init + ridge)...")
+    mlp, _ = train.build_mlp(ridge_samples=ridge_n)
+    print("computing synthvgg spectra (exact SVD per layer)...")
+    ck = dict(mlp)
+    ck.update(layer_spectra(mlp))
+    b.add_data("synthvgg.tenz", ck, model="synthvgg")
+
+    h, labels, eval_ids = datagen.vgg_eval_set(n=2048 if not fast else 128)
+    r_max = float(np.linalg.norm(h, axis=1).max())
+    logits = np.asarray(
+        M.mlp_forward(
+            jnp.asarray(h),
+            *(jnp.asarray(mlp[k]) for k in (
+                "layers.0.weight", "layers.0.bias", "layers.1.weight",
+                "layers.1.bias", "head.weight", "head.bias")),
+        )[0]
+    )
+    top1 = train.topk_accuracy(logits, labels, 1)
+    top5 = train.topk_accuracy(logits, labels, 5)
+    print(f"synthvgg eval: top1 {top1:.3f} top5 {top5:.3f} R {r_max:.2f}")
+    b.add_data(
+        "eval_vgg.tenz",
+        {
+            "features": h,
+            "labels": labels,
+            "eval_class_ids": eval_ids,
+            "meta.R": np.array([r_max], np.float32),
+            "meta.top1_uncompressed": np.array([top1], np.float32),
+            "meta.top5_uncompressed": np.array([top5], np.float32),
+        },
+        model="synthvgg", n=len(labels),
+    )
+
+    print("training synthvit...")
+    vit, _ = train.train_vit(steps=vit_steps)
+    print("computing synthvit spectra...")
+    ck = dict(vit)
+    ck.update(layer_spectra(vit))
+    # Flatten 3-D extras for tenz (rust only needs 2-D weights + vectors).
+    ck["cls"] = ck["cls"].reshape(1, -1)
+    ck["pos"] = ck["pos"].reshape(M.VIT_DIMS["patches"] + 1, M.VIT_DIMS["dim"])
+    b.add_data("synthvit.tenz", ck, model="synthvit")
+
+    patches, vlabels, veval_ids = datagen.vit_eval_set(n=1024 if not fast else 64)
+    logits = np.asarray(M.vit_forward(jnp.asarray(patches), {k: jnp.asarray(v) for k, v in vit.items()})[0])
+    vtop1 = train.topk_accuracy(logits, vlabels, 1)
+    vtop5 = train.topk_accuracy(logits, vlabels, 5)
+    r_max_v = float(np.linalg.norm(patches.reshape(len(patches), -1), axis=1).max())
+    print(f"synthvit eval: top1 {vtop1:.3f} top5 {vtop5:.3f}")
+    b.add_data(
+        "eval_vit.tenz",
+        {
+            "patches": patches.reshape(patches.shape[0], -1),  # (N, 16*192)
+            "patches.shape": np.array(patches.shape, np.int32),
+            "labels": vlabels,
+            "eval_class_ids": veval_ids,
+            "meta.R": np.array([r_max_v], np.float32),
+            "meta.top1_uncompressed": np.array([vtop1], np.float32),
+            "meta.top5_uncompressed": np.array([vtop5], np.float32),
+        },
+        model="synthvit", n=len(vlabels),
+    )
+
+
+def build_golden(b: Builder) -> None:
+    """Fixed-seed matrices + numpy factorizations for rust cross-checks."""
+    rng = np.random.RandomState(20260711)
+    tensors = {}
+    for name, (m, n) in [("a", (24, 60)), ("b", (64, 64)), ("c", (96, 32))]:
+        w = rng.randn(m, n).astype(np.float32)
+        u, s, vt = np.linalg.svd(w.astype(np.float64), full_matrices=False)
+        q, r = np.linalg.qr(w.astype(np.float64)) if m >= n else (None, None)
+        tensors[f"{name}.w"] = w
+        tensors[f"{name}.s"] = s
+        tensors[f"{name}.u"] = u.astype(np.float32)
+        tensors[f"{name}.v"] = vt.T.astype(np.float32)
+        if q is not None:
+            tensors[f"{name}.q"] = q.astype(np.float32)
+            tensors[f"{name}.r"] = r.astype(np.float32)
+    # An RSI reference run (Alg 3.1 with exact QR) for backend validation.
+    from .kernels import ref
+
+    w = rng.randn(48, 160).astype(np.float32)
+    tensors["rsi.w"] = w
+    for q_iters in (1, 2, 4):
+        approx = ref.rsi_reconstruct(w, k=8, q=q_iters, seed=3)
+        tensors[f"rsi.recon_q{q_iters}"] = approx.astype(np.float32)
+        tensors[f"rsi.err_q{q_iters}"] = np.array(
+            [ref.spectral_error(w, approx)], np.float64
+        )
+    b.add_data("golden_linalg.tenz", tensors)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true", help="small smoke-mode artifact set")
+    ap.add_argument(
+        "--only",
+        default="all",
+        choices=["all", "hlo", "models", "golden"],
+        help="restrict what gets rebuilt",
+    )
+    args = ap.parse_args()
+
+    t0 = time.time()
+    b = Builder(args.out)
+    if args.only in ("all", "hlo"):
+        print("== exporting GEMM artifacts ==")
+        export_gemm(b, args.fast)
+        print("== exporting fused RSI artifacts ==")
+        export_fused(b, args.fast)
+        print("== exporting forward/softmax/specnorm artifacts ==")
+        export_forwards(b, args.fast)
+    if args.only in ("all", "models"):
+        print("== building models + eval sets ==")
+        build_models(b, args.fast)
+    if args.only in ("all", "golden"):
+        print("== golden linalg data ==")
+        build_golden(b)
+    b.finish()
+    print(f"done in {time.time() - t0:.1f}s → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Synthetic pretraining/eval data (the ImageNet/Imagenette substitute).
+
+The paper evaluates frozen pretrained models on Imagenette (10 ImageNet
+classes) while keeping the 1000-way head. We reproduce the protocol with
+synthetic data (DESIGN.md §Substitutions):
+
+* `vgg_features`  — class-conditional Gaussian features in R^6272 for the
+  synthvgg head: 1000 prototype directions + shared low-rank "style"
+  structure + isotropic noise. The structure matters: it gives trained
+  weights the fast-head/slow-tail spectrum of Fig 1.1.
+* `vit_patches`   — 32×32×3 images built from class-specific frequency
+  patterns + noise, pre-cut into the 16 flattened 8×8 patches the
+  patch-embed layer consumes.
+* eval sets use 10 held-out classes' *fresh* samples, mirroring
+  "similar test data, no retraining" (Section 4).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N_CLASSES = 100
+EVAL_CLASSES = 10  # Imagenette is a 10-class subset
+
+
+def class_prototypes(dim: int, seed: int) -> np.ndarray:
+    """Unit-norm class prototype directions (N_CLASSES × dim)."""
+    rng = np.random.RandomState(seed)
+    p = rng.randn(N_CLASSES, dim).astype(np.float32)
+    p /= np.linalg.norm(p, axis=1, keepdims=True)
+    return p
+
+
+def vgg_features(
+    n: int,
+    seed: int,
+    labels: np.ndarray | None = None,
+    feat_dim: int = 6272,
+    margin: float = 16.0,
+    noise: float = 1.0,
+    style_rank: int = 64,
+    style_scale: float = 2.0,
+):
+    """Sample (features, labels) for the synthvgg head.
+
+    h = margin·proto[y] + style·z + noise·ε, with `style` a shared random
+    style_rank-dimensional subspace. ‖h‖ concentrates around
+    √(margin² + style_scale²·style_rank/feat_dim·feat_dim ...) — the eval
+    set's max norm is what Theorem 3.2's R measures.
+    """
+    rng = np.random.RandomState(seed)
+    protos = class_prototypes(feat_dim, 1234)
+    style = rng.randn(style_rank, feat_dim).astype(np.float32)
+    style /= np.linalg.norm(style, axis=1, keepdims=True)
+    if labels is None:
+        labels = rng.randint(0, N_CLASSES, size=n).astype(np.int32)
+    z = rng.randn(n, style_rank).astype(np.float32) * style_scale
+    eps = rng.randn(n, feat_dim).astype(np.float32) * noise
+    h = margin * protos[labels] + z @ style + eps
+    return h.astype(np.float32), labels.astype(np.int32)
+
+
+def vgg_eval_set(n: int = 2048, seed: int = 777):
+    """Held-out eval features over EVAL_CLASSES classes (fresh draws)."""
+    rng = np.random.RandomState(seed)
+    eval_class_ids = rng.choice(N_CLASSES, size=EVAL_CLASSES, replace=False)
+    labels = eval_class_ids[rng.randint(0, EVAL_CLASSES, size=n)].astype(np.int32)
+    h, labels = vgg_features(n, seed + 1, labels=labels)
+    return h, labels, eval_class_ids.astype(np.int32)
+
+
+def _class_pattern(label: int, hw: int = 32) -> np.ndarray:
+    """Deterministic per-class image pattern: a 2-frequency plaid keyed by
+    the label plus a class-colored gradient. Cheap, high-margin, and
+    non-trivially spread across patches."""
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float32) / hw
+    f1 = 1 + (label % 7)
+    f2 = 1 + ((label // 7) % 11)
+    phase = (label % 13) / 13.0 * 2 * np.pi
+    base = np.sin(2 * np.pi * f1 * xx + phase) + np.cos(2 * np.pi * f2 * yy)
+    img = np.stack(
+        [
+            base * np.cos(2 * np.pi * label / N_CLASSES),
+            base * np.sin(2 * np.pi * label / N_CLASSES),
+            xx * ((label % 5) - 2) / 2.0 + yy * ((label % 3) - 1),
+        ],
+        axis=-1,
+    )
+    return img.astype(np.float32)
+
+
+_PATTERN_CACHE: dict[int, np.ndarray] = {}
+
+
+def _pattern(label: int) -> np.ndarray:
+    if label not in _PATTERN_CACHE:
+        _PATTERN_CACHE[label] = _class_pattern(label)
+    return _PATTERN_CACHE[label]
+
+
+def vit_images(n: int, seed: int, labels: np.ndarray | None = None, noise: float = 0.6):
+    """(images NHWC 32×32×3, labels)."""
+    rng = np.random.RandomState(seed)
+    if labels is None:
+        labels = rng.randint(0, N_CLASSES, size=n).astype(np.int32)
+    imgs = np.stack([_pattern(int(l)) for l in labels])
+    imgs = imgs + rng.randn(*imgs.shape).astype(np.float32) * noise
+    return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+def patchify(imgs: np.ndarray, patch: int = 8) -> np.ndarray:
+    """NHWC → (N, num_patches, patch·patch·C) in raster order."""
+    n, h, w, c = imgs.shape
+    gh, gw = h // patch, w // patch
+    x = imgs.reshape(n, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(n, gh * gw, patch * patch * c)
+    return np.ascontiguousarray(x)
+
+
+def vit_eval_set(n: int = 1024, seed: int = 888):
+    """Held-out eval patches over EVAL_CLASSES classes."""
+    rng = np.random.RandomState(seed)
+    eval_class_ids = rng.choice(N_CLASSES, size=EVAL_CLASSES, replace=False)
+    labels = eval_class_ids[rng.randint(0, EVAL_CLASSES, size=n)].astype(np.int32)
+    imgs, labels = vit_images(n, seed + 1, labels=labels)
+    return patchify(imgs), labels, eval_class_ids.astype(np.int32)

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (build-time; lowered with interpret=True for CPU-PJRT)."""

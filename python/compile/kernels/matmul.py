@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: VMEM-tiled GEMM — the RSI hot spot (Alg. 3.1 l.3/l.5).
+
+The paper runs RSI on an A100 where cuBLAS GEMMs dominate. The TPU rethink
+(DESIGN.md §Hardware-Adaptation): express the HBM↔VMEM schedule with
+`BlockSpec`s over a (M/bm, N/bn, K/bk) grid, keep each (bm, bn) output
+tile resident in VMEM while the K-grid walks (its index map is constant in
+kk, so Pallas accumulates in place), and size blocks for the 128×128 MXU.
+`interpret=True` everywhere on this CPU testbed — real-TPU perf is
+estimated from the block geometry (DESIGN.md §Perf), never from interpret
+wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _largest_divisor(n: int, candidates) -> int:
+    for c in candidates:
+        if c <= n and n % c == 0:
+            return c
+    return n
+
+
+def pick_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Choose (bm, bk, bn) tile sizes.
+
+    Preference order is MXU-shaped (multiples of 128 where the operand
+    allows it) while guaranteeing exact divisibility so the BlockSpec grid
+    covers the array with no remainder. The VMEM footprint is
+    bm·bk + bk·bn + bm·bn floats; the defaults keep it ≤ ~1 MiB, far under
+    the ~16 MiB/core budget, leaving headroom for double buffering.
+    """
+    bm = _largest_divisor(m, (256, 128, 64, 32, 16, 8, 4, 2, 1))
+    bn = _largest_divisor(n, (128, 64, 32, 16, 8, 4, 2, 1))
+    bk = _largest_divisor(k, (448, 256, 128, 64, 32, 16, 8, 4, 2, 1))
+    return bm, bk, bn
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int) -> int:
+    """Estimated VMEM bytes per grid step (f32 X tile + Y tile + output
+    accumulator tile). Reported per artifact for the perf pass."""
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid point (i, j, kk): accumulate X[i,kk] @ Y[kk,j] into O[i,j].
+
+    The output BlockSpec's index map ignores kk, so the same VMEM tile is
+    revisited across the whole K walk — the classic Pallas accumulate-in-
+    output pattern.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(x: jax.Array, y: jax.Array, interpret: bool = True) -> jax.Array:
+    """C = X @ Y via the tiled Pallas kernel. X: (m, k), Y: (k, n), f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bk, bn = pick_blocks(m, k, n)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def matmul_tn(w: jax.Array, x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Y = Wᵀ @ X (Alg. 3.1 line 5) with W passed untransposed (C×D).
+
+    Lowered as a transpose feeding the tiled kernel; XLA fuses the
+    transpose into the operand load on both CPU and TPU.
+    """
+    return matmul(jnp.transpose(w), x, interpret=interpret)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel and exported graph.
+
+These are the correctness ground truth: pytest sweeps shapes and checks
+kernels and AOT graphs against them (`python/tests/test_kernel.py`,
+`test_model.py`). Nothing here is exported to HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_tn(w, x):
+    return jnp.dot(w.T, x, preferred_element_type=jnp.float32)
+
+
+def softmax(z):
+    return jax.nn.softmax(z, axis=-1)
+
+
+def newton_schulz_orthonormalize(x, iters: int = 14):
+    """Reference for the fused-graph orthonormalization (matches
+    model.newton_schulz_ortho and the rust native implementation)."""
+    g = x.T @ x
+    trace = jnp.trace(g)
+    gs = g / trace
+    y = gs
+    z = jnp.eye(x.shape[1], dtype=x.dtype)
+    for _ in range(iters):
+        t = 0.5 * (3.0 * jnp.eye(x.shape[1], dtype=x.dtype) - z @ y)
+        y = y @ t
+        z = t @ z
+    return x @ (z / jnp.sqrt(trace))
+
+
+def rsi_numpy(w: np.ndarray, k: int, q: int, seed: int):
+    """Algorithm 3.1 in numpy with exact QR — the oracle the exported RSI
+    graphs and the Rust native backend are both validated against."""
+    rng = np.random.RandomState(seed)
+    d = w.shape[1]
+    y = rng.randn(d, k).astype(np.float64)
+    w64 = w.astype(np.float64)
+    x = None
+    for _ in range(max(1, q)):
+        x = w64 @ y
+        x, _ = np.linalg.qr(x)
+        y = w64.T @ x
+    uh, s, vt = np.linalg.svd(y.T, full_matrices=False)
+    u = x @ uh
+    return u, s, vt.T  # (C×k, k, D×k)
+
+
+def rsi_reconstruct(w: np.ndarray, k: int, q: int, seed: int) -> np.ndarray:
+    u, s, v = rsi_numpy(w, k, q, seed)
+    return (u[:, :k] * s[:k]) @ v[:, :k].T
+
+
+def spectral_error(w: np.ndarray, w_approx: np.ndarray) -> float:
+    return float(np.linalg.norm(w - w_approx, ord=2))
+
+
+def mlp_forward(h, params):
+    """synthvgg classifier head: 2 hidden relu layers + linear head.
+
+    params = [w1, b1, w2, b2, w3, b3] with wi stored (out, in) — the
+    C×D convention the paper compresses.
+    """
+    w1, b1, w2, b2, w3, b3 = params
+    z = jnp.maximum(h @ w1.T + b1, 0.0)
+    z = jnp.maximum(z @ w2.T + b2, 0.0)
+    return z @ w3.T + b3
+
+
+def layernorm(x, gamma, beta, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gamma * (x - mu) / jnp.sqrt(var + eps) + beta

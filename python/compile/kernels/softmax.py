@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: fused, numerically-stable softmax over the class axis.
+
+Used by the eval path (class probabilities for Theorem 3.2's perturbation
+measurements). One grid row per batch tile; max-subtraction and the
+normalizing sum stay in VMEM, so logits make a single HBM round trip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(z_ref, o_ref):
+    z = z_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _largest_divisor(n: int, candidates) -> int:
+    for c in candidates:
+        if c <= n and n % c == 0:
+            return c
+    return n
+
+
+def softmax(z: jax.Array, interpret: bool = True) -> jax.Array:
+    """Row-wise softmax of an (n, c) logit matrix via Pallas."""
+    n, c = z.shape
+    bn = _largest_divisor(n, (128, 64, 32, 16, 8, 4, 2, 1))
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=interpret,
+    )(z)

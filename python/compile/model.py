@@ -1,0 +1,296 @@
+"""L2 JAX graphs — everything the Rust coordinator executes via PJRT.
+
+Exported by aot.py as HLO text (see that file for the interchange rules).
+Every graph here must be custom-call-free: no `lax.linalg.*` (the
+xla_extension 0.5.1 runtime can't execute jax 0.8's LAPACK FFI calls).
+Factorizations therefore use matmul-only Newton–Schulz orthonormalization
+in the fused RSI graph; the stepped path returns raw GEMM results and the
+Rust side runs its own Householder QR between steps.
+
+Graphs:
+  * gemm_wy / gemm_wtx     — Alg. 3.1 lines 3/5 (Pallas or plain-XLA flavor)
+  * rsi_fused              — the whole Alg. 3.1 loop, Newton–Schulz ortho
+  * mlp_forward            — synthvgg classifier head (weights as params)
+  * vit_forward            — synthvit encoder (weights as params)
+  * softmax_head           — Pallas fused softmax
+  * specnorm_residual      — power-iteration ‖W − A·B‖₂ estimator
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as kmm
+from .kernels import softmax as ksm
+
+
+# ---------------------------------------------------------------------------
+# RSI building blocks
+# ---------------------------------------------------------------------------
+
+
+def gemm_wy(w, y, flavor: str = "pallas"):
+    """X = W·Y (Alg. 3.1 line 3)."""
+    if flavor == "pallas":
+        return (kmm.matmul(w, y),)
+    return (jnp.dot(w, y, preferred_element_type=jnp.float32),)
+
+
+def gemm_wtx(w, x, flavor: str = "pallas"):
+    """Y = Wᵀ·X (Alg. 3.1 line 5)."""
+    if flavor == "pallas":
+        return (kmm.matmul_tn(w, x),)
+    return (jnp.dot(w.T, x, preferred_element_type=jnp.float32),)
+
+
+def newton_schulz_ortho(x, iters: int = 14):
+    """Matmul-only orthonormalization Q = X(XᵀX)^{-1/2}.
+
+    Trace scaling puts the Gram spectrum inside the Newton–Schulz
+    convergence region for any full-rank X. This is the TPU-shaped
+    replacement for line 4's Householder QR (DESIGN.md
+    §Hardware-Adaptation); on the MXU the whole loop is k×k matmuls.
+    """
+    l = x.shape[1]
+    g = jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+    trace = jnp.trace(g) + 1e-30
+    y = g / trace
+    z = jnp.eye(l, dtype=x.dtype)
+    eye3 = 3.0 * jnp.eye(l, dtype=x.dtype)
+
+    def body(_, carry):
+        y, z = carry
+        t = 0.5 * (eye3 - jnp.dot(z, y, preferred_element_type=jnp.float32))
+        return (
+            jnp.dot(y, t, preferred_element_type=jnp.float32),
+            jnp.dot(t, z, preferred_element_type=jnp.float32),
+        )
+
+    y, z = jax.lax.fori_loop(0, iters, body, (y, z))
+    inv_sqrt = z / jnp.sqrt(trace)
+    return jnp.dot(x, inv_sqrt, preferred_element_type=jnp.float32)
+
+
+def rsi_fused(w, omega, q: int, ns_iters: int = 14, flavor: str = "pallas"):
+    """Lines 1–6 of Algorithm 3.1 as one graph: returns (X, Y).
+
+    The small SVD (lines 7–9) runs in Rust from the ℓ×ℓ Gram of Y — it is
+    O(ℓ³) against the O(C·D·ℓ·q) done here, and needs an eigensolver that
+    must not appear in exported HLO.
+    """
+    y = omega
+    x = None
+    for _ in range(max(1, q)):
+        x = gemm_wy(w, y, flavor)[0]
+        x = newton_schulz_ortho(x, ns_iters)
+        y = gemm_wtx(w, x, flavor)[0]
+    return (x, y)
+
+
+def specnorm_residual(w, a, b, v0, iters: int = 60):
+    """Power-iteration estimate of ‖W − A·B‖₂ starting from v0 (D-vector).
+
+    Runs the residual operator without materializing W − A·B.
+    """
+
+    def apply(v):
+        y = jnp.dot(w, v) - jnp.dot(a, jnp.dot(b, v))
+        z = jnp.dot(w.T, y) - jnp.dot(b.T, jnp.dot(a.T, y))
+        return z
+
+    def body(_, carry):
+        v, _sigma = carry
+        z = apply(v)
+        nz = jnp.linalg.norm(z)
+        return (z / (nz + 1e-30), jnp.sqrt(nz))
+
+    v0 = v0 / (jnp.linalg.norm(v0) + 1e-30)
+    _, sigma = jax.lax.fori_loop(0, iters, body, (v0, jnp.float32(0)))
+    return (sigma,)
+
+
+# ---------------------------------------------------------------------------
+# synthvgg: 3-linear-layer classifier head (the paper's VGG19 analog)
+# ---------------------------------------------------------------------------
+
+VGG_DIMS = dict(feat=6272, hidden=1024, classes=100)
+
+
+def mlp_forward(h, w1, b1, w2, b2, w3, b3):
+    """Logits for a feature batch. Weights are runtime parameters so the
+    coordinator can feed original or compressed-reconstructed weights."""
+    z = jnp.maximum(jnp.dot(h, w1.T, preferred_element_type=jnp.float32) + b1, 0.0)
+    z = jnp.maximum(jnp.dot(z, w2.T, preferred_element_type=jnp.float32) + b2, 0.0)
+    return (jnp.dot(z, w3.T, preferred_element_type=jnp.float32) + b3,)
+
+
+def mlp_param_specs(batch: int):
+    d = VGG_DIMS
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((batch, d["feat"]), f32),
+        jax.ShapeDtypeStruct((d["hidden"], d["feat"]), f32),
+        jax.ShapeDtypeStruct((d["hidden"],), f32),
+        jax.ShapeDtypeStruct((d["hidden"], d["hidden"]), f32),
+        jax.ShapeDtypeStruct((d["hidden"],), f32),
+        jax.ShapeDtypeStruct((d["classes"], d["hidden"]), f32),
+        jax.ShapeDtypeStruct((d["classes"],), f32),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# synthvit: tiny ViT encoder (the paper's ViT-B/32 analog; 38 linear layers)
+# ---------------------------------------------------------------------------
+
+VIT_DIMS = dict(
+    patches=16,  # 32×32 image, 8×8 patches
+    patch_dim=192,  # 8·8·3
+    dim=192,
+    depth=6,
+    heads=3,
+    mlp=768,
+    classes=100,
+)
+
+
+def _layernorm(x, gamma, beta, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gamma * (x - mu) / jnp.sqrt(var + eps) + beta
+
+
+def _attention(x, wq, wk, wv, wo, heads: int):
+    """Standard multi-head self-attention; weights (out, in) convention."""
+    n, t, d = x.shape
+    hd = d // heads
+    q = jnp.dot(x, wq.T).reshape(n, t, heads, hd).transpose(0, 2, 1, 3)
+    k = jnp.dot(x, wk.T).reshape(n, t, heads, hd).transpose(0, 2, 1, 3)
+    v = jnp.dot(x, wv.T).reshape(n, t, heads, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("nhqd,nhkd->nhqk", q, k) / jnp.sqrt(float(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("nhqk,nhkd->nhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(n, t, d)
+    return jnp.dot(out, wo.T)
+
+
+def vit_layer_names(depth: int = VIT_DIMS["depth"]) -> List[str]:
+    """Linear-layer prefixes in checkpoint order (38 for depth 6) —
+    shared vocabulary between train.py, aot.py and the Rust model registry."""
+    names = ["patch_embed"]
+    for i in range(depth):
+        for part in ("wq", "wk", "wv", "wo", "fc1", "fc2"):
+            names.append(f"blocks.{i}.{part}")
+    names.append("head")
+    return names
+
+
+def vit_forward(patches, params: dict):
+    """synthvit forward.
+
+    patches: (N, 16, 192) flattened 8×8×3 patches.
+    params: dict with keys
+      patch_embed.{weight,bias}, cls, pos,
+      blocks.<i>.{ln1.gamma,ln1.beta,wq,wk,wv,wo,ln2.gamma,ln2.beta,
+                  fc1.weight,fc1.bias,fc2.weight,fc2.bias, wq.bias...},
+      ln_f.{gamma,beta}, head.{weight,bias}
+    Returns logits (N, classes).
+    """
+    d = VIT_DIMS
+    n = patches.shape[0]
+    x = jnp.dot(patches, params["patch_embed.weight"].T) + params["patch_embed.bias"]
+    cls = jnp.broadcast_to(params["cls"], (n, 1, d["dim"]))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    for i in range(d["depth"]):
+        p = f"blocks.{i}"
+        h = _layernorm(x, params[f"{p}.ln1.gamma"], params[f"{p}.ln1.beta"])
+        x = x + _attention(
+            h,
+            params[f"{p}.wq.weight"],
+            params[f"{p}.wk.weight"],
+            params[f"{p}.wv.weight"],
+            params[f"{p}.wo.weight"],
+            d["heads"],
+        )
+        h = _layernorm(x, params[f"{p}.ln2.gamma"], params[f"{p}.ln2.beta"])
+        h = jnp.dot(h, params[f"{p}.fc1.weight"].T) + params[f"{p}.fc1.bias"]
+        h = jax.nn.gelu(h)
+        h = jnp.dot(h, params[f"{p}.fc2.weight"].T) + params[f"{p}.fc2.bias"]
+        x = x + h
+    x = _layernorm(x, params["ln_f.gamma"], params["ln_f.beta"])
+    cls_tok = x[:, 0, :]
+    return (jnp.dot(cls_tok, params["head.weight"].T) + params["head.bias"],)
+
+
+def vit_param_order() -> List[str]:
+    """Flat parameter order for the exported vit_forward artifact. The Rust
+    side feeds literals in exactly this order (recorded in the manifest)."""
+    d = VIT_DIMS
+    order = ["patch_embed.weight", "patch_embed.bias", "cls", "pos"]
+    for i in range(d["depth"]):
+        p = f"blocks.{i}"
+        order += [
+            f"{p}.ln1.gamma",
+            f"{p}.ln1.beta",
+            f"{p}.wq.weight",
+            f"{p}.wk.weight",
+            f"{p}.wv.weight",
+            f"{p}.wo.weight",
+            f"{p}.ln2.gamma",
+            f"{p}.ln2.beta",
+            f"{p}.fc1.weight",
+            f"{p}.fc1.bias",
+            f"{p}.fc2.weight",
+            f"{p}.fc2.bias",
+        ]
+    order += ["ln_f.gamma", "ln_f.beta", "head.weight", "head.bias"]
+    return order
+
+
+def vit_param_specs(batch: int):
+    """ShapeDtypeStructs matching vit_param_order()."""
+    d = VIT_DIMS
+    f32 = jnp.float32
+    shapes = {
+        "patch_embed.weight": (d["dim"], d["patch_dim"]),
+        "patch_embed.bias": (d["dim"],),
+        "cls": (1, 1, d["dim"]),
+        "pos": (1, d["patches"] + 1, d["dim"]),
+        "ln_f.gamma": (d["dim"],),
+        "ln_f.beta": (d["dim"],),
+        "head.weight": (d["classes"], d["dim"]),
+        "head.bias": (d["classes"],),
+    }
+    for i in range(d["depth"]):
+        p = f"blocks.{i}"
+        shapes[f"{p}.ln1.gamma"] = (d["dim"],)
+        shapes[f"{p}.ln1.beta"] = (d["dim"],)
+        for w in ("wq", "wk", "wv", "wo"):
+            shapes[f"{p}.{w}.weight"] = (d["dim"], d["dim"])
+        shapes[f"{p}.ln2.gamma"] = (d["dim"],)
+        shapes[f"{p}.ln2.beta"] = (d["dim"],)
+        shapes[f"{p}.fc1.weight"] = (d["mlp"], d["dim"])
+        shapes[f"{p}.fc1.bias"] = (d["mlp"],)
+        shapes[f"{p}.fc2.weight"] = (d["dim"], d["mlp"])
+        shapes[f"{p}.fc2.bias"] = (d["dim"],)
+    specs = [jax.ShapeDtypeStruct((batch, d["patches"], d["patch_dim"]), f32)]
+    specs += [jax.ShapeDtypeStruct(shapes[k], f32) for k in vit_param_order()]
+    return specs
+
+
+def vit_forward_flat(patches, *flat_params):
+    """vit_forward with parameters flattened per vit_param_order()."""
+    params = dict(zip(vit_param_order(), flat_params))
+    return vit_forward(patches, params)
+
+
+# ---------------------------------------------------------------------------
+# Softmax head
+# ---------------------------------------------------------------------------
+
+
+def softmax_head(logits):
+    return (ksm.softmax(logits),)

@@ -1,0 +1,80 @@
+"""Python side of the `.tenz` tensor container format.
+
+Mirror of `rust/src/io/tenz.rs` — see that file for the layout spec.
+Build-time only: used by aot.py to hand checkpoints, eval sets and golden
+data to the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"TENZ0001"
+
+_DTYPE_TAGS = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.float64): 1,
+    np.dtype(np.int32): 2,
+}
+_TAG_DTYPES = {v: k for k, v in _DTYPE_TAGS.items()}
+
+
+def write_tenz(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a dict of arrays. Keys are sorted for byte-stable output
+    (matches the Rust BTreeMap ordering)."""
+    items = sorted(tensors.items())
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(items)))
+        for name, arr in items:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_TAGS:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_TAGS[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tenz(path: str) -> Dict[str, np.ndarray]:
+    """Read a `.tenz` file back into a dict of arrays."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    if buf[:8] != MAGIC:
+        raise ValueError("bad magic: not a .tenz file")
+    pos = 8
+    (count,) = struct.unpack_from("<I", buf, pos)
+    pos += 4
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<H", buf, pos)
+        pos += 2
+        name = buf[pos : pos + name_len].decode("utf-8")
+        pos += name_len
+        tag, ndim = struct.unpack_from("<BB", buf, pos)
+        pos += 2
+        dims = []
+        for _ in range(ndim):
+            (d,) = struct.unpack_from("<Q", buf, pos)
+            pos += 8
+            dims.append(d)
+        dtype = _TAG_DTYPES[tag]
+        numel = int(np.prod(dims)) if dims else 1
+        nbytes = numel * dtype.itemsize
+        arr = np.frombuffer(buf[pos : pos + nbytes], dtype=dtype.newbyteorder("<"))
+        pos += nbytes
+        out[name] = arr.reshape(dims).astype(dtype)
+    if pos != len(buf):
+        raise ValueError(f"trailing bytes: {len(buf) - pos}")
+    return out

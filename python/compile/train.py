@@ -1,0 +1,225 @@
+"""Build-time construction of the two "pretrained" models.
+
+Runs once inside `make artifacts` (never on the request path) and writes
+checkpoints the Rust pipeline compresses.
+
+Spectrum engineering (DESIGN.md §Substitutions): genuinely pretrained
+weights are *spiked* — a fast-decaying signal head aligned with the data
+manifold sitting on a slowly-decaying Marchenko–Pastur bulk (Fig 1.1).
+Brief from-scratch training cannot reproduce that structure in CI time,
+so we synthesize it directly:
+
+  W = (G_out · diag(s_head)) · B_inᵀ + τ·Z/(√out + √in)
+
+with B_in an orthonormal basis of the layer's signal subspace, G_out random
+orthonormal, s_head fast-decaying, and Z Gaussian (tail spectral norm ≈ τ).
+The τ level is calibrated so compression behaves like Table 4.1: exact
+truncation is benign, RSVD's ≈2× spectral error is destructive at small α,
+and RSI's q-controlled error interpolates. `python/tests/test_train.py`
+asserts the resulting spectrum shape and the accuracy dynamics.
+
+* synthvgg — spiked W1, W2 + activation-centering biases, ridge-trained
+  100-way head (the "pretrained classifier head" analog).
+* synthvit — spiked init for all 38 linear layers, then a short hand-rolled
+  Adam fine-tune so the transformer genuinely classifies.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen
+from . import model as M
+
+# Calibrated in the τ sweep recorded in EXPERIMENTS.md (τ=2 leaves the
+# ridge head exploiting tail-noise statistics and inverts the q ordering;
+# τ=4 reproduces the paper's dynamics).
+VGG_TAU = 4.0
+VGG_MARGIN = 16.0
+VIT_TAU = 2.5
+
+
+def spiked_weight(
+    out_dim: int, in_dim: int, b_in: np.ndarray, s_head: np.ndarray, tau: float, seed: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Spiked-spectrum weight; returns (W, G_out) so the next layer can
+    align its signal subspace with this layer's output spikes."""
+    r = np.random.RandomState(seed)
+    g_out, _ = np.linalg.qr(r.randn(out_dim, b_in.shape[1]))
+    g_out = g_out.astype(np.float32)
+    z = r.randn(out_dim, in_dim).astype(np.float32)
+    z *= tau / (np.sqrt(out_dim) + np.sqrt(in_dim))
+    w = (g_out * s_head[None, :]) @ b_in.T + z
+    return w.astype(np.float32), g_out
+
+
+# ---------------------------------------------------------------------------
+# synthvgg head
+# ---------------------------------------------------------------------------
+
+
+def build_mlp(seed: int = 0, ridge_samples: int = 16384, verbose: bool = True):
+    """Construct the synthvgg classifier head; returns (params, history)."""
+    t0 = time.time()
+    d = M.VGG_DIMS
+    protos = datagen.class_prototypes(d["feat"], 1234)
+    b1, _ = np.linalg.qr(protos.T.astype(np.float64))
+    b1 = b1.astype(np.float32)
+    nsig = b1.shape[1]
+    s_head = (6.0 * np.exp(-np.arange(nsig) / 50.0) + 2.0).astype(np.float32)
+
+    w1, g1 = spiked_weight(d["hidden"], d["feat"], b1, s_head, VGG_TAU, seed + 1)
+    w2, _g2 = spiked_weight(d["hidden"], d["hidden"], g1, s_head, VGG_TAU, seed + 2)
+
+    # Activation-centering biases: keep most ReLU units active so the model
+    # operates in the near-linear regime where Theorem 3.2's perturbation
+    # analysis is tight.
+    h0, _ = datagen.vgg_features(4096, seed=seed + 3, margin=VGG_MARGIN)
+    pre1 = h0 @ w1.T
+    bias1 = (2.0 * pre1.std(axis=0)).astype(np.float32)
+    z1 = np.maximum(pre1 + bias1, 0.0)
+    pre2 = z1 @ w2.T
+    bias2 = (2.0 * pre2.std(axis=0)).astype(np.float32)
+
+    # Ridge-regression head on the hidden representation.
+    @jax.jit
+    def reps(h):
+        z = jnp.maximum(h @ w1.T + bias1, 0.0)
+        return jnp.maximum(z @ w2.T + bias2, 0.0)
+
+    h, y = datagen.vgg_features(ridge_samples, seed=seed + 4, margin=VGG_MARGIN)
+    z = np.asarray(reps(jnp.asarray(h)))
+    onehot = np.zeros((ridge_samples, d["classes"]), np.float32)
+    onehot[np.arange(ridge_samples), y] = 1.0
+    gram = (z.T @ z).astype(np.float64)
+    lam = 0.03 * np.trace(gram) / d["hidden"]
+    w3 = np.linalg.solve(gram + lam * np.eye(d["hidden"]), z.T @ onehot)
+    w3 = (w3.astype(np.float32).T) * 20.0  # logit scale
+
+    params = {
+        "layers.0.weight": w1,
+        "layers.0.bias": bias1,
+        "layers.1.weight": w2,
+        "layers.1.bias": bias2,
+        "head.weight": w3,
+        "head.bias": np.zeros(d["classes"], np.float32),
+    }
+    if verbose:
+        print(f"[mlp] built in {time.time() - t0:.1f}s (ridge on {ridge_samples} samples)")
+    return params, [("ridge", 0.0, 0.0)]
+
+
+# Back-compat alias used by aot.py / tests.
+train_mlp = build_mlp
+
+
+# ---------------------------------------------------------------------------
+# synthvit
+# ---------------------------------------------------------------------------
+
+
+def init_vit_spiked(seed: int = 0) -> Dict[str, np.ndarray]:
+    """Spiked init for every linear layer (signal rank 64, random
+    alignment except patch-embed which aligns with the patch PCA basis)."""
+    d = M.VIT_DIMS
+    rng = np.random.RandomState(seed)
+    nsig = 64
+    s_head = (3.0 * np.exp(-np.arange(nsig) / 20.0) + 1.2).astype(np.float32)
+
+    def spike(out_dim, in_dim, sd, b_in=None):
+        if b_in is None:
+            b, _ = np.linalg.qr(np.random.RandomState(sd + 7).randn(in_dim, nsig))
+            b_in = b.astype(np.float32)
+        w, _ = spiked_weight(out_dim, in_dim, b_in, s_head, VIT_TAU, sd)
+        # Transformers keep unit-ish activation scale; normalize.
+        return w / np.sqrt(in_dim) * 8.0
+
+    # Patch PCA basis for the embed layer's signal subspace.
+    imgs, _ = datagen.vit_images(1024, seed=seed + 11)
+    patches = datagen.patchify(imgs).reshape(-1, d["patch_dim"])
+    cov = (patches.T @ patches).astype(np.float64)
+    evals, evecs = np.linalg.eigh(cov)
+    b_patch = evecs[:, ::-1][:, :nsig].astype(np.float32)
+
+    p: Dict[str, np.ndarray] = {
+        "patch_embed.weight": spike(d["dim"], d["patch_dim"], seed + 1, b_patch),
+        "patch_embed.bias": np.zeros(d["dim"], np.float32),
+        "cls": (rng.randn(1, 1, d["dim"]) * 0.02).astype(np.float32),
+        "pos": (rng.randn(1, d["patches"] + 1, d["dim"]) * 0.02).astype(np.float32),
+        "ln_f.gamma": np.ones(d["dim"], np.float32),
+        "ln_f.beta": np.zeros(d["dim"], np.float32),
+        "head.weight": spike(d["classes"], d["dim"], seed + 2),
+        "head.bias": np.zeros(d["classes"], np.float32),
+    }
+    s = seed + 100
+    for i in range(d["depth"]):
+        pre = f"blocks.{i}"
+        p[f"{pre}.ln1.gamma"] = np.ones(d["dim"], np.float32)
+        p[f"{pre}.ln1.beta"] = np.zeros(d["dim"], np.float32)
+        for w in ("wq", "wk", "wv", "wo"):
+            p[f"{pre}.{w}.weight"] = spike(d["dim"], d["dim"], s)
+            s += 1
+        p[f"{pre}.ln2.gamma"] = np.ones(d["dim"], np.float32)
+        p[f"{pre}.ln2.beta"] = np.zeros(d["dim"], np.float32)
+        p[f"{pre}.fc1.weight"] = spike(d["mlp"], d["dim"], s)
+        s += 1
+        p[f"{pre}.fc1.bias"] = np.zeros(d["mlp"], np.float32)
+        p[f"{pre}.fc2.weight"] = spike(d["dim"], d["mlp"], s)
+        s += 1
+        p[f"{pre}.fc2.bias"] = np.zeros(d["dim"], np.float32)
+    return p
+
+
+def _vit_loss(params, patches, y):
+    logits = M.vit_forward(patches, params)[0]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1)), logits
+
+
+@jax.jit
+def _vit_adam_step(params, m, v, step, patches, y):
+    (loss, logits), grads = jax.value_and_grad(_vit_loss, has_aux=True)(params, patches, y)
+    b1, b2, lr, eps = 0.9, 0.999, 1e-3, 1e-8
+    t = step + 1.0
+    new_m = {k: b1 * m[k] + (1 - b1) * grads[k] for k in params}
+    new_v = {k: b2 * v[k] + (1 - b2) * grads[k] ** 2 for k in params}
+    upd = {
+        k: lr * (new_m[k] / (1 - b1**t)) / (jnp.sqrt(new_v[k] / (1 - b2**t)) + eps)
+        for k in params
+    }
+    new_params = {k: params[k] - upd[k] for k in params}
+    acc = jnp.mean(jnp.argmax(logits, axis=1) == y)
+    return new_params, new_m, new_v, loss, acc
+
+
+def train_vit(steps: int = 200, batch: int = 64, seed: int = 0, verbose: bool = True):
+    """Spiked init + short Adam fine-tune; returns (params, history)."""
+    params = {k: jnp.asarray(v) for k, v in init_vit_spiked(seed).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v) for k, v in params.items()}
+    hist = []
+    t0 = time.time()
+    for step in range(steps):
+        imgs, y = datagen.vit_images(batch, seed=5000 + step)
+        patches = datagen.patchify(imgs)
+        params, m, v, loss, acc = _vit_adam_step(
+            params, m, v, jnp.float32(step), jnp.asarray(patches), jnp.asarray(y)
+        )
+        if step % 25 == 0 or step == steps - 1:
+            hist.append((step, float(loss), float(acc)))
+            if verbose:
+                print(f"[vit] step {step:4d} loss {float(loss):.4f} acc {float(acc):.3f}")
+    if verbose:
+        print(f"[vit] trained in {time.time() - t0:.1f}s")
+    return {k: np.asarray(v) for k, v in params.items()}, hist
+
+
+def topk_accuracy(logits: np.ndarray, labels: np.ndarray, k: int) -> float:
+    topk = np.argsort(-logits, axis=1)[:, :k]
+    return float(np.mean([labels[i] in topk[i] for i in range(len(labels))]))

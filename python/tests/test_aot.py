@@ -1,0 +1,92 @@
+"""AOT builder: HLO export validity + manifest integrity.
+
+Checks the exported HLO text parses structurally and — critically — that
+no exported graph contains custom-calls (the xla_extension 0.5.1 runtime
+cannot execute jax 0.8's LAPACK/FFI custom-calls; DESIGN.md constraint 2).
+"""
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def hlo_of(fn, specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+F32 = jnp.float32
+
+
+def custom_calls(text):
+    return set(re.findall(r'custom_call_target="([^"]+)"', text))
+
+
+def test_gemm_graph_custom_call_free():
+    w = jax.ShapeDtypeStruct((192, 768), F32)
+    y = jax.ShapeDtypeStruct((768, 64), F32)
+    t = hlo_of(lambda a, b: M.gemm_wy(a, b, "pallas"), [w, y])
+    assert custom_calls(t) == set()
+    assert "ENTRY" in t
+
+
+def test_fused_rsi_custom_call_free():
+    w = jax.ShapeDtypeStruct((192, 768), F32)
+    om = jax.ShapeDtypeStruct((768, 64), F32)
+    for q in (1, 3):
+        t = hlo_of(lambda a, b, q_=q: M.rsi_fused(a, b, q_, flavor="xla"), [w, om])
+        assert custom_calls(t) == set(), f"q={q}"
+
+
+def test_forward_graphs_custom_call_free():
+    t = hlo_of(M.mlp_forward, M.mlp_param_specs(8))
+    assert custom_calls(t) == set()
+    t2 = hlo_of(M.vit_forward_flat, M.vit_param_specs(2))
+    assert custom_calls(t2) == set()
+
+
+def test_manifest_written(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    b.export(
+        "toy",
+        lambda x: (x + 1.0,),
+        [jax.ShapeDtypeStruct((2, 2), F32)],
+        kind="graph", c=2, d=2,
+    )
+    b.add_data("toy.tenz", {"x": __import__("numpy").zeros((2, 2), "float32")}, model="toy")
+    b.finish()
+    manifest = open(tmp_path / "manifest.txt").read()
+    assert "kind=graph path=toy.hlo.txt c=2 d=2" in manifest
+    assert "kind=data" in manifest
+    assert (tmp_path / "toy.hlo.txt").exists()
+    assert (tmp_path / "data" / "toy.tenz").exists()
+
+
+def test_built_artifacts_manifest_consistent():
+    """When artifacts/ exists, every manifest path must resolve."""
+    art = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built")
+    for line in open(manifest):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        kv = dict(tok.split("=", 1) for tok in line.split())
+        assert os.path.exists(os.path.join(art, kv["path"])), kv["path"]
+        if kv["kind"] in ("gemm_wy", "gemm_wtx", "rsi_fused"):
+            assert int(kv["c"]) > 0 and int(kv["d"]) > 0 and int(kv["k"]) > 0
+
+
+def test_layer_spectra_helper():
+    import numpy as np
+
+    params = {"a.weight": np.diag([3.0, 2.0, 1.0]).astype(np.float32), "a.bias": np.zeros(3)}
+    spec = aot.layer_spectra(params)
+    assert "a.spectrum" in spec
+    np.testing.assert_allclose(spec["a.spectrum"], [3.0, 2.0, 1.0], atol=1e-6)

@@ -1,0 +1,80 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; assert_allclose against ref.py — the core
+correctness signal for the AOT compute path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as kmm
+from compile.kernels import ref
+from compile.kernels import softmax as ksm
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 48, 64, 96, 128, 192])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(m, k).astype(np.float32)
+    y = rng.randn(k, n).astype(np.float32)
+    got = np.asarray(kmm.matmul(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.matmul(jnp.asarray(x), jnp.asarray(y)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_tn_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(m, k).astype(np.float32)  # W is C×D; compute Wᵀ X
+    x = rng.randn(m, n).astype(np.float32)
+    got = np.asarray(kmm.matmul_tn(jnp.asarray(w), jnp.asarray(x)))
+    want = np.asarray(ref.matmul_tn(jnp.asarray(w), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * m)
+
+
+def test_matmul_nonsquare_bucket_shapes():
+    # The exact artifact bucket shapes (divisibility edge cases: 6272 = 128·49).
+    for (c, d, k) in [(1024, 6272, 64), (192, 768, 64), (128, 192, 32)]:
+        rng = np.random.RandomState(0)
+        w = rng.randn(c, d).astype(np.float32) * 0.1
+        y = rng.randn(d, k).astype(np.float32) * 0.1
+        got = np.asarray(kmm.matmul(jnp.asarray(w), jnp.asarray(y)))
+        want = w @ y
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_block_picker_divides():
+    for (m, k, n) in [(1024, 6272, 256), (192, 768, 64), (7, 13, 5), (1000, 999, 3)]:
+        bm, bk, bn = kmm.pick_blocks(m, k, n)
+        assert m % bm == 0 and k % bk == 0 and n % bn == 0
+
+
+def test_vmem_footprint_under_budget():
+    # Every bucket must fit VMEM (~16 MiB) with generous headroom.
+    for (m, k, n) in [(1024, 6272, 1024), (1024, 1024, 832), (768, 192, 192)]:
+        bm, bk, bn = kmm.pick_blocks(m, k, n)
+        assert kmm.vmem_footprint_bytes(bm, bk, bn) < 4 * 2**20
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=DIMS, c=st.sampled_from([2, 10, 100, 1000]), seed=st.integers(0, 2**31 - 1))
+def test_softmax_matches_ref(n, c, seed):
+    rng = np.random.RandomState(seed)
+    z = (rng.randn(n, c) * 5).astype(np.float32)
+    got = np.asarray(ksm.softmax(jnp.asarray(z)))
+    want = np.asarray(ref.softmax(jnp.asarray(z)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_softmax_extreme_logits_stable():
+    z = np.array([[1000.0, 999.0, -1000.0]], np.float32)
+    got = np.asarray(ksm.softmax(jnp.asarray(z)))
+    assert np.all(np.isfinite(got))
+    assert abs(got.sum() - 1.0) < 1e-5

@@ -1,0 +1,126 @@
+"""L2 graph correctness: exported graphs vs numpy/jnp references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def test_newton_schulz_orthonormalizes():
+    rng = np.random.RandomState(0)
+    x = rng.randn(80, 12).astype(np.float32)
+    q = np.asarray(M.newton_schulz_ortho(jnp.asarray(x), iters=16))
+    g = q.T @ q
+    np.testing.assert_allclose(g, np.eye(12), atol=5e-3)
+
+
+def test_newton_schulz_matches_ref():
+    rng = np.random.RandomState(1)
+    x = rng.randn(40, 8).astype(np.float32)
+    a = np.asarray(M.newton_schulz_ortho(jnp.asarray(x), iters=14))
+    b = np.asarray(ref.newton_schulz_orthonormalize(jnp.asarray(x), iters=14))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+@pytest.mark.parametrize("q", [1, 2, 4])
+def test_rsi_fused_error_vs_numpy_rsi(q):
+    """The fused graph (NS ortho) must land within a few percent of the
+    exact-QR numpy RSI on spectral error — same subspace, different
+    orthonormalization."""
+    rng = np.random.RandomState(2)
+    # Slow-decay synthetic matrix.
+    c, d, k = 48, 160, 8
+    u, _ = np.linalg.qr(rng.randn(c, c))
+    v, _ = np.linalg.qr(rng.randn(d, c))
+    s = 6.0 * np.exp(-np.arange(c) / 10.0) + 1.0
+    w = (u * s) @ v.T
+    w = w.astype(np.float32)
+
+    omega = rng.randn(d, k).astype(np.float32)
+    x, y = M.rsi_fused(jnp.asarray(w), jnp.asarray(omega), q, flavor="xla")
+    x, y = np.asarray(x), np.asarray(y)
+    # Finalize as the Rust side does: B = Yᵀ, approx = X Xᵀ-basis...
+    approx = x @ (x.T @ w)
+    err_fused = np.linalg.norm(w - approx, ord=2)
+
+    ref_recon = ref.rsi_reconstruct(w, k, q, seed=3)
+    err_ref = np.linalg.norm(w - ref_recon, ord=2)
+    # Not same sketch → compare magnitudes loosely.
+    assert err_fused < err_ref * 1.5 + 1e-3
+    # Monotone in q vs optimal bound s_{k+1}:
+    assert err_fused >= s[k] * 0.99
+
+
+def test_rsi_fused_improves_with_q():
+    rng = np.random.RandomState(4)
+    c, d, k = 40, 120, 6
+    u, _ = np.linalg.qr(rng.randn(c, c))
+    v, _ = np.linalg.qr(rng.randn(d, c))
+    s = 5.0 * np.exp(-np.arange(c) / 8.0) + 1.5
+    w = ((u * s) @ v.T).astype(np.float32)
+    errs = []
+    for q in (1, 4):
+        omega = rng.randn(d, k).astype(np.float32)
+        x, _ = M.rsi_fused(jnp.asarray(w), jnp.asarray(omega), q, flavor="xla")
+        x = np.asarray(x)
+        approx = x @ (x.T @ w)
+        errs.append(np.linalg.norm(w - approx, ord=2))
+    assert errs[1] < errs[0]
+
+
+def test_mlp_forward_matches_ref():
+    rng = np.random.RandomState(5)
+    h = rng.randn(4, M.VGG_DIMS["feat"]).astype(np.float32)
+    params = [
+        rng.randn(M.VGG_DIMS["hidden"], M.VGG_DIMS["feat"]).astype(np.float32) * 0.01,
+        rng.randn(M.VGG_DIMS["hidden"]).astype(np.float32),
+        rng.randn(M.VGG_DIMS["hidden"], M.VGG_DIMS["hidden"]).astype(np.float32) * 0.01,
+        rng.randn(M.VGG_DIMS["hidden"]).astype(np.float32),
+        rng.randn(M.VGG_DIMS["classes"], M.VGG_DIMS["hidden"]).astype(np.float32) * 0.01,
+        rng.randn(M.VGG_DIMS["classes"]).astype(np.float32),
+    ]
+    got = np.asarray(M.mlp_forward(jnp.asarray(h), *[jnp.asarray(p) for p in params])[0])
+    want = np.asarray(ref.mlp_forward(jnp.asarray(h), [jnp.asarray(p) for p in params]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_vit_param_order_matches_specs():
+    order = M.vit_param_order()
+    specs = M.vit_param_specs(batch=2)
+    assert len(specs) == len(order) + 1  # + patches input
+    assert len([n for n in order if n.endswith(".weight")]) == 38
+
+
+def test_vit_forward_shapes_and_flat_equivalence():
+    from compile import train
+
+    params = train.init_vit_spiked(seed=0)
+    rng = np.random.RandomState(6)
+    patches = rng.randn(2, 16, 192).astype(np.float32)
+    logits = np.asarray(M.vit_forward(jnp.asarray(patches), {k: jnp.asarray(v) for k, v in params.items()})[0])
+    assert logits.shape == (2, M.VIT_DIMS["classes"])
+    # Flat variant must agree (it feeds cls/pos reshaped).
+    flat = []
+    for name in M.vit_param_order():
+        v = params[name]
+        if name == "cls":
+            v = v.reshape(1, 1, -1)
+        if name == "pos":
+            v = v.reshape(1, 17, 192)
+        flat.append(jnp.asarray(v))
+    logits2 = np.asarray(M.vit_forward_flat(jnp.asarray(patches), *flat)[0])
+    np.testing.assert_allclose(logits, logits2, atol=1e-5)
+
+
+def test_specnorm_residual_matches_numpy():
+    rng = np.random.RandomState(7)
+    w = rng.randn(32, 64).astype(np.float32)
+    a = rng.randn(32, 4).astype(np.float32) * 0.3
+    b = rng.randn(4, 64).astype(np.float32) * 0.3
+    v0 = rng.randn(64).astype(np.float32)
+    got = float(M.specnorm_residual(jnp.asarray(w), jnp.asarray(a), jnp.asarray(b), jnp.asarray(v0), iters=200)[0])
+    want = np.linalg.norm(w - a @ b, ord=2)
+    assert abs(got - want) / want < 1e-3

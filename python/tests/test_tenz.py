@@ -1,0 +1,65 @@
+"""`.tenz` container: python round-trip + byte-stability (the Rust side
+re-checks cross-language compatibility in rust/tests/tenz_interop.rs)."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile.tenz import read_tenz, write_tenz, MAGIC
+
+
+def roundtrip(tensors):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.tenz")
+        write_tenz(path, tensors)
+        return read_tenz(path), open(path, "rb").read()
+
+
+def test_roundtrip_f32_f64_i32():
+    t = {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "s": np.linspace(0, 1, 5).astype(np.float64),
+        "labels": np.array([1, -2, 3], np.int32),
+    }
+    back, raw = roundtrip(t)
+    assert raw[:8] == MAGIC
+    for k in t:
+        np.testing.assert_array_equal(back[k], t[k])
+        assert back[k].dtype == t[k].dtype
+
+
+def test_key_order_is_byte_stable():
+    a = {"b": np.zeros(2, np.float32), "a": np.ones(3, np.float32)}
+    b = {"a": np.ones(3, np.float32), "b": np.zeros(2, np.float32)}
+    _, raw_a = roundtrip(a)
+    _, raw_b = roundtrip(b)
+    assert raw_a == raw_b
+
+
+def test_float64_downcast_and_int_coercion():
+    t = {"x": np.arange(3, dtype=np.int64)}
+    back, _ = roundtrip(t)
+    assert back["x"].dtype == np.int32
+
+
+def test_unsupported_dtype_raises():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(TypeError):
+            write_tenz(os.path.join(d, "x.tenz"), {"c": np.zeros(2, np.complex64)})
+
+
+def test_bad_magic_raises():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bad.tenz")
+        open(path, "wb").write(b"NOTMAGICxxxx")
+        with pytest.raises(ValueError):
+            read_tenz(path)
+
+
+def test_scalar_and_empty_shapes():
+    t = {"scalar": np.float32(3.5).reshape(()), "empty": np.zeros((0, 4), np.float32)}
+    back, _ = roundtrip({"scalar": np.array(3.5, np.float32), "empty": np.zeros((0, 4), np.float32)})
+    assert back["scalar"] == np.float32(3.5)
+    assert back["empty"].shape == (0, 4)

@@ -1,0 +1,96 @@
+"""Model-construction invariants: spectrum shape + compression dynamics.
+
+These pin the properties DESIGN.md §Substitutions promises: spiked
+fast-head/slow-tail spectra (Fig 1.1 regime) and the Table 4.1 accuracy
+ordering (q=4 ≥ q=1 under aggressive compression).
+"""
+
+import numpy as np
+import pytest
+
+from compile import datagen, train
+from compile import model as M
+from compile.kernels import ref
+
+
+def test_spiked_weight_spectrum_shape():
+    rng = np.random.RandomState(0)
+    b, _ = np.linalg.qr(rng.randn(512, 64))
+    s_head = (6.0 * np.exp(-np.arange(64) / 20.0) + 2.0).astype(np.float32)
+    w, _ = train.spiked_weight(256, 512, b.astype(np.float32), s_head, tau=4.0, seed=1)
+    s = np.linalg.svd(w, compute_uv=False)
+    # Fast head: s1 >> s64; slow tail beyond the spike rank.
+    assert s[0] / s[63] > 1.5
+    # Tail decays slowly relative to the head (MP bulk): compare the decay
+    # *rate* per index, not a fixed ratio.
+    head_rate = (s[0] / s[63]) ** (1 / 63)
+    tail_rate = (s[100] / s[220]) ** (1 / 120)
+    assert tail_rate < head_rate, f"tail {tail_rate} vs head {head_rate}"
+    assert s[-1] > 0, "full rank"
+
+
+def test_vgg_features_separable():
+    h, y = datagen.vgg_features(512, seed=0)
+    protos = datagen.class_prototypes(h.shape[1], 1234)
+    scores = h @ protos.T
+    acc = (scores.argmax(1) == y).mean()
+    assert acc > 0.95, f"nearest-prototype accuracy {acc}"
+
+
+def test_patchify_shapes_and_inverse_energy():
+    imgs, y = datagen.vit_images(8, seed=1)
+    p = datagen.patchify(imgs)
+    assert p.shape == (8, 16, 192)
+    # Energy preserved (pure reshape/transpose).
+    np.testing.assert_allclose((p ** 2).sum(), (imgs ** 2).sum(), rtol=1e-5)
+
+
+def test_eval_sets_use_10_classes():
+    _, labels, ids = datagen.vgg_eval_set(n=256)
+    assert len(ids) == 10
+    assert set(labels).issubset(set(ids.tolist()))
+    _, vlabels, vids = datagen.vit_eval_set(n=128)
+    assert len(vids) == 10
+    assert set(vlabels).issubset(set(vids.tolist()))
+
+
+@pytest.mark.slow
+def test_mlp_accuracy_and_q_ordering():
+    """End-to-end (python-side) check of the Table 4.1 dynamic for the MLP.
+    Slowish (~1 min); `pytest -m "not slow"` skips it."""
+    import jax
+    import jax.numpy as jnp
+
+    params, _ = train.build_mlp(ridge_samples=8192, verbose=False)
+    he, ye = datagen.vgg_features(1024, seed=778)
+
+    def evalacc(p):
+        logits = np.asarray(
+            M.mlp_forward(
+                jnp.asarray(he),
+                *(jnp.asarray(p[k]) for k in (
+                    "layers.0.weight", "layers.0.bias", "layers.1.weight",
+                    "layers.1.bias", "head.weight", "head.bias")),
+            )[0]
+        )
+        return train.topk_accuracy(logits, ye, 1)
+
+    base = evalacc(params)
+    assert base > 0.9, f"uncompressed top1 {base}"
+
+    accs = {}
+    for q in (1, 4):
+        pc = dict(params)
+        for i, k in enumerate(("layers.0.weight", "layers.1.weight", "head.weight")):
+            w = params[k]
+            kk = int(np.ceil(0.2 * min(w.shape)))
+            pc[k] = ref.rsi_reconstruct(w, kk, q, seed=10 + i).astype(np.float32)
+        accs[q] = evalacc(pc)
+    assert accs[4] > accs[1], f"q ordering violated: {accs}"
+
+
+def test_topk_accuracy_helper():
+    logits = np.array([[0.1, 0.9, 0.0], [1.0, 0.0, 0.5]], np.float32)
+    assert train.topk_accuracy(logits, np.array([1, 0]), 1) == 1.0
+    assert train.topk_accuracy(logits, np.array([0, 1]), 1) == 0.0
+    assert train.topk_accuracy(logits, np.array([0, 1]), 3) == 1.0

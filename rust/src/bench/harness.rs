@@ -1,0 +1,176 @@
+//! Warmup + timed-iteration benchmark runner with table output.
+//!
+//! Intentionally criterion-shaped: `harness.bench("name", || work())`
+//! runs warmup iterations, then timed samples, and records a [`Summary`].
+//! Unlike criterion we also support *single-shot* measurements
+//! (`bench_once`) for expensive end-to-end cells (Table 4.1 rows), where
+//! the paper itself reports one run.
+
+use super::stats::Summary;
+use crate::util::fmt_duration;
+use crate::util::timer::Stopwatch;
+
+/// One benchmark's recorded outcome.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+/// Harness configuration + result sink.
+#[derive(Debug)]
+pub struct Harness {
+    warmup_iters: usize,
+    sample_iters: usize,
+    max_seconds: f64,
+    results: Vec<BenchResult>,
+    quiet: bool,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness { warmup_iters: 1, sample_iters: 10, max_seconds: 30.0, results: vec![], quiet: false }
+    }
+}
+
+impl Harness {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        Harness { warmup_iters, sample_iters, ..Default::default() }
+    }
+
+    /// Cap total sampling time per benchmark; sampling stops early once
+    /// exceeded (at least one sample is always taken).
+    pub fn with_max_seconds(mut self, secs: f64) -> Self {
+        self.max_seconds = secs;
+        self
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Honor `RSIC_BENCH_FAST=1`: slash iteration counts (CI smoke mode).
+    pub fn from_env() -> Self {
+        let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        if fast {
+            Harness::new(0, 3).with_max_seconds(5.0)
+        } else {
+            Harness::default()
+        }
+    }
+
+    /// Benchmark a closure; returns the summary and records it.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        let budget = Stopwatch::start();
+        for _ in 0..self.sample_iters.max(1) {
+            let sw = Stopwatch::start();
+            std::hint::black_box(f());
+            samples.push(sw.secs());
+            if budget.secs() > self.max_seconds {
+                break;
+            }
+        }
+        let summary = Summary::from_samples(&samples);
+        if !self.quiet {
+            println!(
+                "bench {name:<42} {:>12} ± {:>10}  (n={}, p95 {})",
+                fmt_duration(summary.mean),
+                fmt_duration(summary.std),
+                summary.n,
+                fmt_duration(summary.p95),
+            );
+        }
+        self.results.push(BenchResult { name: name.to_string(), summary: summary.clone() });
+        summary
+    }
+
+    /// Record an externally-measured sample set under a name.
+    pub fn record(&mut self, name: &str, samples: &[f64]) -> Summary {
+        let summary = Summary::from_samples(samples);
+        self.results.push(BenchResult { name: name.to_string(), summary: summary.clone() });
+        summary
+    }
+
+    /// One timed execution (no warmup) — for expensive end-to-end cells.
+    pub fn bench_once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+        let sw = Stopwatch::start();
+        let out = f();
+        let secs = sw.secs();
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary: Summary::from_samples(&[secs]),
+        });
+        if !self.quiet {
+            println!("bench {name:<42} {:>12}  (single shot)", fmt_duration(secs));
+        }
+        (out, secs)
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all recorded results as an aligned text table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>6}\n",
+            "benchmark", "mean", "std", "p95", "n"
+        ));
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12} {:>6}\n",
+                r.name,
+                fmt_duration(r.summary.mean),
+                fmt_duration(r.summary.std),
+                fmt_duration(r.summary.p95),
+                r.summary.n
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut h = Harness::new(1, 5).quiet();
+        let mut count = 0usize;
+        let s = h.bench("noop", || count += 1);
+        assert_eq!(s.n, 5);
+        assert_eq!(count, 6); // warmup + samples
+        assert_eq!(h.results().len(), 1);
+        assert!(h.table().contains("noop"));
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let mut h = Harness::new(0, 1000).with_max_seconds(0.02).quiet();
+        let s = h.bench("sleepy", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s.n < 1000, "early stop expected, ran {}", s.n);
+        assert!(s.n >= 1);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let mut h = Harness::default().quiet();
+        let (v, secs) = h.bench_once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut h = Harness::default().quiet();
+        let s = h.record("ext", &[1.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+    }
+}

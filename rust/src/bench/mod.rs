@@ -1,0 +1,11 @@
+//! Benchmark harness (criterion is not in the offline crate universe).
+//!
+//! `benches/*.rs` binaries use [`Harness`] for warmup → timed iterations →
+//! robust statistics, and the [`stats`] module for the mean/stddev/
+//! percentile summaries printed in the paper-style tables.
+
+pub mod harness;
+pub mod stats;
+
+pub use harness::{BenchResult, Harness};
+pub use stats::Summary;

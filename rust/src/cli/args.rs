@@ -1,0 +1,178 @@
+//! Minimal CLI argument parser (clap is not in the offline crate universe).
+//!
+//! Supports: positional arguments, `--flag`, `--key value` / `--key=value`,
+//! repeated keys, and typed getters with defaults.
+
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ArgsError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("option --{0}: cannot parse {1:?} as {2}")]
+    Parse(String, String, &'static str),
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw tokens (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    // Value-taking if next token exists and isn't an option.
+                    let takes_value =
+                        iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        let v = iter.next().unwrap();
+                        out.options.entry(rest.to_string()).or_default().push(v);
+                    } else {
+                        out.flags.push(rest.to_string());
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn opt_all(&self, name: &str) -> Vec<&str> {
+        self.options.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, ArgsError> {
+        self.opt(name).ok_or_else(|| ArgsError::Missing(name.into()))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgsError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| ArgsError::Parse(name.into(), v.into(), "usize"))
+            }
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgsError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgsError::Parse(name.into(), v.into(), "f64")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, ArgsError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgsError::Parse(name.into(), v.into(), "u64")),
+        }
+    }
+
+    /// Comma-separated list: `--qs 1,2,4`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, ArgsError> {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| ArgsError::Parse(name.into(), s.into(), "usize list"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, ArgsError> {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| ArgsError::Parse(name.into(), s.into(), "f64 list"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("table 4.1 --model synthvgg --trials 3 --verbose");
+        assert_eq!(a.positional, vec!["table", "4.1"]);
+        assert_eq!(a.opt("model"), Some("synthvgg"));
+        assert_eq!(a.usize_or("trials", 20).unwrap(), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = parse("--x=1 --x=2 --y 3");
+        assert_eq!(a.opt("x"), Some("2"));
+        assert_eq!(a.opt_all("x"), vec!["1", "2"]);
+        assert_eq!(a.opt("y"), Some("3"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--qs 1,2,4 --alphas 0.8,0.2");
+        assert_eq!(a.usize_list_or("qs", &[9]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.f64_list_or("alphas", &[]).unwrap(), vec![0.8, 0.2]);
+        assert_eq!(a.usize_list_or("missing", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn errors() {
+        let a = parse("--n abc");
+        assert!(matches!(a.usize_or("n", 1), Err(ArgsError::Parse(_, _, _))));
+        assert!(matches!(a.require("zzz"), Err(ArgsError::Missing(_))));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("cmd --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+}

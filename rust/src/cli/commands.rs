@@ -1,0 +1,335 @@
+//! `rsic` subcommands.
+//!
+//! ```text
+//! rsic compress --model synthvgg --alpha 0.4 --q 4 [--backend native|xla|fused]
+//!               [--out compressed.tenz] [--validate]
+//! rsic eval     --model synthvgg [--checkpoint path.tenz]
+//! rsic table 4.1   [--model vgg|vit|both] [--backend ...] [--alphas 0.8,0.6]
+//! rsic figure 1.1|4.1|4.2 [--trials N] [--ranks 64,128,...]
+//! rsic theorem  [--alpha 0.2] [--q 1]
+//! rsic spectrum --model synthvgg --layer layers.0
+//! rsic info
+//! ```
+
+use super::args::Args;
+use super::experiments;
+use crate::compress::backend::BackendKind;
+use crate::compress::plan::{CompressionPlan, Method};
+use crate::compress::rsi::RsiOptions;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
+use crate::eval::ModelEvaluator;
+use crate::io::tenz::TensorFile;
+use crate::model::ModelKind;
+use crate::report::write_report;
+use crate::runtime::{ArtifactRegistry, ExecutableCache};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+const USAGE: &str = "\
+rsic — low-rank compression of pretrained models via randomized subspace iteration
+
+USAGE:
+  rsic compress --model <synthvgg|synthvit> --alpha <a> [--q N] [--backend B] [--out F] [--validate]
+                [--adaptive <budget-ratio>]   # section-5 adaptive layer-wise ranks
+  rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
+  rsic run <config.toml>                       # config-driven sweep (see configs/)
+  rsic table 4.1  [--model vgg|vit|both] [--alphas L] [--qs L] [--backend B] [--out-dir D]
+  rsic figure <1.1|4.1|4.2> [--ranks L] [--qs L] [--trials N] [--out-dir D]
+  rsic theorem  [--alpha a] [--q N]
+  rsic spectrum --model M --layer L [--top N]
+  rsic info
+Backends: native (default), xla (stepped Pallas artifacts), fused.
+Run `make artifacts` before any command that touches models or XLA.";
+
+/// Entry point used by main.rs. Returns the process exit code.
+pub fn run(args: Args) -> Result<()> {
+    crate::util::logging::init(None);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "compress" => cmd_compress(&args),
+        "eval" => cmd_eval(&args),
+        "run" => cmd_run(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "theorem" => cmd_theorem(&args),
+        "spectrum" => cmd_spectrum(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn backend_of(args: &Args) -> Result<BackendKind> {
+    BackendKind::parse(args.str_or("backend", "native"))
+        .context("bad --backend (native|xla|fused)")
+}
+
+fn model_of(args: &Args) -> Result<ModelKind> {
+    ModelKind::parse(args.require("model")?).context("bad --model (synthvgg|synthvit)")
+}
+
+fn load_checkpoint(args: &Args, model: ModelKind) -> Result<TensorFile> {
+    if let Some(path) = args.opt("checkpoint") {
+        return Ok(TensorFile::read(path)?);
+    }
+    let registry = ArtifactRegistry::load_default()?;
+    let def = crate::model::ModelDef::get(model);
+    let entry = registry
+        .find_data(def.ckpt_file)
+        .with_context(|| format!("{} not in manifest — run `make artifacts`", def.ckpt_file))?;
+    Ok(TensorFile::read(registry.abs_path(entry))?)
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let alpha = args.f64_or("alpha", 0.4)?;
+    let q = args.usize_or("q", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    let ckpt = load_checkpoint(args, model)?;
+    let method = Method::Rsi(RsiOptions::with_q(q, seed));
+    let plan = if let Some(budget) = args.opt("adaptive") {
+        // Paper section 5 future work: adaptive layer-wise ranks from the
+        // shipped exact spectra, under a global parameter budget.
+        let budget: f64 = budget.parse().context("bad --adaptive ratio")?;
+        let layers = spectra_of(&ckpt)?;
+        let ranks = crate::compress::allocate_ranks(&layers, budget, 1, 4);
+        println!("adaptive allocation (budget {budget}):");
+        for (name, k) in &ranks {
+            println!("  {name}: k={k}");
+        }
+        CompressionPlan::with_ranks(ranks, method)
+    } else {
+        CompressionPlan::uniform_alpha(alpha, method)
+    };
+    let pipe = Pipeline::new(PipelineConfig {
+        backend: backend_of(args)?,
+        validate: args.flag("validate"),
+        workers: args.usize_or("workers", crate::util::default_threads())?,
+        ..Default::default()
+    })?;
+    let report = pipe.compress_checkpoint(&ckpt, &plan)?;
+    println!("{}", report.summary());
+    for o in &report.outcomes {
+        let err = o
+            .spectral_error
+            .map(|e| format!(" ‖W−AB‖₂≈{e:.4}"))
+            .unwrap_or_default();
+        match &o.error {
+            None => println!(
+                "  {}: ({}, {}) k={} {} → {} params ({:.3}s){err}",
+                o.plan.layer,
+                o.plan.c,
+                o.plan.d,
+                o.plan.k,
+                o.plan.params_before,
+                o.plan.params_after,
+                o.seconds
+            ),
+            Some(e) => println!("  {}: FAILED — {e}", o.plan.layer),
+        }
+    }
+    let out = args.str_or("out", "compressed.tenz");
+    report.compressed.write(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+
+/// Collect per-layer spectra from a checkpoint (shipped by aot.py as
+/// `<layer>.spectrum` f64 tensors).
+fn spectra_of(ckpt: &TensorFile) -> Result<Vec<crate::compress::LayerSpectrum>> {
+    let mut out = Vec::new();
+    for layer in crate::io::checkpoint::list_layers(ckpt) {
+        let w = crate::io::checkpoint::load_weight(ckpt, &layer)?;
+        let (c, d) = w.shape();
+        let spec_key = format!("{layer}.spectrum");
+        let spectrum: Vec<f64> = match ckpt.get(&spec_key) {
+            Some(e) => e
+                .bytes
+                .chunks_exact(8)
+                .map(|ch| f64::from_le_bytes(ch.try_into().unwrap()))
+                .collect(),
+            None => crate::linalg::svd::svd_via_gram(&w.materialize()).s,
+        };
+        out.push(crate::compress::LayerSpectrum { layer, c, d, spectrum });
+    }
+    Ok(out)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let ckpt = load_checkpoint(args, model)?;
+    let registry = Arc::new(ArtifactRegistry::load_default()?);
+    let cache = Arc::new(ExecutableCache::new());
+    let evaluator = ModelEvaluator::load(&registry, &cache, model)?;
+    let acc = evaluator.evaluate(&ckpt)?;
+    println!(
+        "{}: top1 {:.2}% top5 {:.2}% over {} samples (uncompressed reference {:.2}%/{:.2}%)",
+        model.name(),
+        acc.top1 * 100.0,
+        acc.top5 * 100.0,
+        acc.n,
+        evaluator.eval_set.top1_uncompressed * 100.0,
+        evaluator.eval_set.top5_uncompressed * 100.0,
+    );
+    Ok(())
+}
+
+
+/// Config-driven sweep: an `ExperimentConfig` TOML file describes the
+/// model, the alpha x q grid, and pipeline settings; results land in the
+/// config's out_dir as Table-4.1-style reports.
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: rsic run <config.toml>")?;
+    let cfg = crate::config::ExperimentConfig::load(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!("experiment {:?}: model {} via {:?}", cfg.name, cfg.model.name, cfg.pipeline.backend);
+    let model = ModelKind::parse(&cfg.model.name).context("config model.name")?;
+    let table = experiments::table_41(
+        model,
+        &cfg.sweep.alphas,
+        &cfg.sweep.qs,
+        cfg.pipeline.backend,
+        cfg.sweep.seed,
+    )?;
+    println!("{}", table.render());
+    let base = format!("{}/{}", cfg.out_dir, cfg.name);
+    write_report(format!("{base}.txt"), &table.render())?;
+    write_report(format!("{base}.csv"), &table.to_csv())?;
+    println!("wrote {base}.txt / .csv");
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("4.1");
+    if which != "4.1" {
+        bail!("only table 4.1 exists in the paper");
+    }
+    let alphas = args.f64_list_or("alphas", &[0.8, 0.6, 0.4, 0.2])?;
+    let qs = args.usize_list_or("qs", &[1, 2, 3, 4])?;
+    let backend = backend_of(args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let out_dir = args.str_or("out-dir", "reports");
+    let models = match args.str_or("model", "both") {
+        "both" => vec![ModelKind::SynthVgg, ModelKind::SynthVit],
+        m => vec![ModelKind::parse(m).context("bad --model")?],
+    };
+    for model in models {
+        let table = experiments::table_41(model, &alphas, &qs, backend, seed)?;
+        println!("{}", table.render());
+        let base = format!("{out_dir}/table41_{}", model.name());
+        write_report(format!("{base}.txt"), &table.render())?;
+        write_report(format!("{base}.csv"), &table.to_csv())?;
+        println!("wrote {base}.txt / .csv");
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("4.1");
+    let trials = args.usize_or("trials", 5)?;
+    let seed = args.u64_or("seed", 42)?;
+    let out_dir = args.str_or("out-dir", "reports");
+    let backend = backend_of(args)?;
+    let (model, layer, default_ranks): (ModelKind, &str, Vec<usize>) = match which {
+        "1.1" | "4.1" => (ModelKind::SynthVgg, "layers.0", vec![64, 128, 256, 512, 832]),
+        "4.2" => (ModelKind::SynthVit, "blocks.2.fc1", vec![32, 64, 96, 128, 160]),
+        other => bail!("unknown figure {other:?} (1.1, 4.1, 4.2)"),
+    };
+    let ranks = args.usize_list_or("ranks", &default_ranks)?;
+    let lut = experiments::load_layer(model, layer)?;
+    if which == "1.1" {
+        let (spec, err) = experiments::figure_11(&lut, &ranks, trials, seed)?;
+        println!("{}", spec.render());
+        println!("{}", err.render());
+        write_report(format!("{out_dir}/fig11_spectrum.csv"), &spec.to_csv())?;
+        write_report(format!("{out_dir}/fig11_error.csv"), &err.to_csv())?;
+    } else {
+        let qs = args.usize_list_or("qs", &[1, 2, 3, 4])?;
+        let sweep = experiments::single_layer_sweep(&lut, &ranks, &qs, trials, backend, seed)?;
+        println!("{}", sweep.error_fig.render());
+        println!("{}", sweep.runtime_fig.render());
+        println!("exact SVD baseline: {:.3}s", sweep.svd_seconds);
+        let tag = which.replace('.', "");
+        write_report(format!("{out_dir}/fig{tag}_error.csv"), &sweep.error_fig.to_csv())?;
+        write_report(format!("{out_dir}/fig{tag}_runtime.csv"), &sweep.runtime_fig.to_csv())?;
+    }
+    println!("wrote CSVs under {out_dir}/");
+    Ok(())
+}
+
+fn cmd_theorem(args: &Args) -> Result<()> {
+    let alpha = args.f64_or("alpha", 0.2)?;
+    let q = args.usize_or("q", 1)?;
+    let rep = experiments::theorem_check(alpha, q, args.u64_or("seed", 42)?)?;
+    println!(
+        "Theorem 3.2 @ alpha={alpha}, q={q}: bound {:.5}, measured max ‖Δp‖∞ {:.5} (mean {:.5})",
+        rep.bound, rep.max_deviation, rep.mean_deviation
+    );
+    println!("tightness {:.3}, violations {}", rep.tightness, rep.violations);
+    if !rep.holds() {
+        bail!("bound violated!");
+    }
+    Ok(())
+}
+
+fn cmd_spectrum(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let layer = args.require("layer")?;
+    let top = args.usize_or("top", 16)?;
+    let lut = experiments::load_layer(model, layer)?;
+    println!("{}: {} singular values", lut.label, lut.spectrum.len());
+    for (i, s) in lut.spectrum.iter().take(top).enumerate() {
+        println!("  s_{:<4} = {s:.6}", i + 1);
+    }
+    let n = lut.spectrum.len();
+    for frac in [0.25, 0.5, 0.75, 1.0] {
+        let i = ((n as f64 * frac) as usize).clamp(1, n) - 1;
+        println!("  s_{:<4} = {:.6}", i + 1, lut.spectrum[i]);
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("rsic v{} — artifacts at {:?}", crate::VERSION, crate::artifacts_dir());
+    let registry = ArtifactRegistry::load_default()?;
+    let mut by_kind: std::collections::BTreeMap<&str, usize> = Default::default();
+    for e in registry.entries() {
+        *by_kind.entry(e.kind.as_str()).or_default() += 1;
+    }
+    for (kind, count) in by_kind {
+        println!("  {kind:<12} {count}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_errors() {
+        let args = Args::parse(["frobnicate".to_string()]);
+        assert!(run(args).is_err());
+    }
+
+    #[test]
+    fn help_is_ok() {
+        let args = Args::parse(["help".to_string()]);
+        run(args).unwrap();
+    }
+
+    #[test]
+    fn backend_parsing() {
+        let args = Args::parse(["x".to_string(), "--backend".into(), "fused".into()]);
+        assert_eq!(backend_of(&args).unwrap(), BackendKind::XlaFused);
+        let bad = Args::parse(["x".to_string(), "--backend".into(), "quantum".into()]);
+        assert!(backend_of(&bad).is_err());
+    }
+}

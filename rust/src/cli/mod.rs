@@ -1,0 +1,9 @@
+//! Command-line interface: argument parsing, subcommands, and the shared
+//! experiment drivers behind tables/figures.
+
+pub mod args;
+pub mod commands;
+pub mod experiments;
+
+pub use args::Args;
+pub use commands::run;

@@ -1,0 +1,87 @@
+//! Approximation-quality metrics tying the code back to the paper's
+//! reported numbers.
+
+use super::factor::Factorization;
+use crate::linalg::svd::Svd;
+use crate::tensor::Mat;
+
+/// Everything the single-layer figures report for one (k, q, trial) cell.
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    /// ‖W − A·B‖₂ (power-iteration estimate).
+    pub spectral_error: f64,
+    /// ‖W − A·B‖₂ / s_{k+1} — Figs 1.1b, 4.1a, 4.2a. 1.0 is optimal.
+    pub normalized_error: f64,
+    /// The optimal error s_{k+1} itself.
+    pub optimal_error: f64,
+    /// Relative Frobenius reconstruction error (secondary diagnostic).
+    pub rel_fro_error: f64,
+}
+
+/// Evaluate a factorization against the exact SVD of the same matrix.
+pub fn quality(w: &Mat<f32>, f: &Factorization, exact: &Svd) -> QualityReport {
+    let k = f.rank();
+    let spectral_error = f.spectral_error(w);
+    let optimal_error = exact.s.get(k).copied().unwrap_or(0.0);
+    let normalized_error = crate::linalg::norms::normalized_error(spectral_error, optimal_error);
+    let resid = w.sub(&f.reconstruct());
+    let wf = w.fro_norm().max(f64::MIN_POSITIVE);
+    QualityReport {
+        spectral_error,
+        normalized_error,
+        optimal_error,
+        rel_fro_error: resid.fro_norm() / wf,
+    }
+}
+
+/// Evaluate when the exact spectrum is known analytically (synthetic
+/// matrices) without computing an SVD.
+pub fn quality_vs_spectrum(w: &Mat<f32>, f: &Factorization, spectrum: &[f64]) -> QualityReport {
+    let k = f.rank();
+    let spectral_error = f.spectral_error(w);
+    let optimal_error = spectrum.get(k).copied().unwrap_or(0.0);
+    let normalized_error = crate::linalg::norms::normalized_error(spectral_error, optimal_error);
+    let resid = w.sub(&f.reconstruct());
+    let wf = w.fro_norm().max(f64::MIN_POSITIVE);
+    QualityReport {
+        spectral_error,
+        normalized_error,
+        optimal_error,
+        rel_fro_error: resid.fro_norm() / wf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::backend::NativeEngine;
+    use crate::compress::rsi::{rsi_factorize, RsiOptions};
+    use crate::linalg::svd::svd_via_gram;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::{matrix_with_spectrum, SpectrumShape};
+
+    #[test]
+    fn exact_svd_truncation_scores_one() {
+        let mut g = GaussianSource::new(1);
+        let spec = SpectrumShape::pretrained_like().values(24);
+        let w = matrix_with_spectrum(24, 60, &spec, &mut g);
+        let svd = svd_via_gram(&w);
+        let k = 6;
+        let (a, b) = svd.factors(k);
+        let f = Factorization { a, b, s: svd.s[..k].to_vec() };
+        let q = quality(&w, &f, &svd);
+        assert!((q.normalized_error - 1.0).abs() < 0.02, "got {}", q.normalized_error);
+        assert!(q.rel_fro_error < 1.0);
+    }
+
+    #[test]
+    fn rsvd_scores_above_one_on_slow_decay() {
+        let mut g = GaussianSource::new(2);
+        let spec = SpectrumShape::pretrained_like().values(48);
+        let w = matrix_with_spectrum(48, 120, &spec, &mut g);
+        let f = rsi_factorize(&w, 8, &RsiOptions::rsvd(3), &NativeEngine);
+        let q = quality_vs_spectrum(&w, &f, &spec);
+        assert!(q.normalized_error > 1.05, "RSVD unexpectedly near-optimal: {}", q.normalized_error);
+        assert!((q.optimal_error - spec[8]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,100 @@
+//! The rank-k factorization W ≈ A·B (Section 3: A = Ũ S̃^{1/2},
+//! B = S̃^{1/2} Ṽᵀ) plus quality diagnostics.
+
+use crate::linalg::{gemm, norms};
+use crate::tensor::Mat;
+
+/// A rank-k factorization of a C×D weight matrix.
+#[derive(Debug, Clone)]
+pub struct Factorization {
+    /// C×k left factor.
+    pub a: Mat<f32>,
+    /// k×D right factor.
+    pub b: Mat<f32>,
+    /// Estimated leading singular values (length k, descending).
+    pub s: Vec<f64>,
+}
+
+impl Factorization {
+    pub fn rank(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Logical shape (C, D) of the approximated matrix.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.a.rows(), self.b.cols())
+    }
+
+    /// Parameters stored by the factorization: (C + D)·k.
+    pub fn param_count(&self) -> usize {
+        self.a.rows() * self.a.cols() + self.b.rows() * self.b.cols()
+    }
+
+    /// Materialize the dense approximation W̃ = A·B.
+    pub fn reconstruct(&self) -> Mat<f32> {
+        gemm::matmul(&self.a, &self.b)
+    }
+
+    /// ‖W − A·B‖₂ estimated by power iteration without forming W − A·B.
+    pub fn spectral_error(&self, w: &Mat<f32>) -> f64 {
+        norms::residual_spectral_norm(w, &self.a, &self.b, 300, 1e-9, 0xabcd)
+    }
+
+    /// The paper's normalized error ‖W − W̃‖₂ / s_{k+1} given the exact
+    /// (k+1)-th singular value.
+    pub fn normalized_error(&self, w: &Mat<f32>, s_next: f64) -> f64 {
+        norms::normalized_error(self.spectral_error(w), s_next)
+    }
+
+    /// Apply to a feature batch: logits = A·(B·Hᵀ) without reconstructing —
+    /// the two-small-layers inference rewrite. `h` is N×D (row = sample);
+    /// returns N×C.
+    pub fn apply(&self, h: &Mat<f32>) -> Mat<f32> {
+        // (N×D)·(k×D)ᵀ = N×k, then (N×k)·(C×k)ᵀ = N×C.
+        let hk = gemm::matmul_nt(h, &self.b);
+        gemm::matmul_nt(&hk, &self.a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    fn sample() -> (Mat<f32>, Factorization) {
+        let mut g = GaussianSource::new(1);
+        let w = gaussian(8, 14, 1.0, &mut g);
+        let a = gaussian(8, 3, 0.5, &mut g);
+        let b = gaussian(3, 14, 0.5, &mut g);
+        (w, Factorization { a, b, s: vec![3.0, 2.0, 1.0] })
+    }
+
+    #[test]
+    fn shapes_and_counts() {
+        let (_, f) = sample();
+        assert_eq!(f.rank(), 3);
+        assert_eq!(f.shape(), (8, 14));
+        assert_eq!(f.param_count(), 8 * 3 + 3 * 14);
+    }
+
+    #[test]
+    fn apply_matches_reconstruct() {
+        let (_, f) = sample();
+        let mut g = GaussianSource::new(2);
+        let h = gaussian(5, 14, 1.0, &mut g);
+        let fast = f.apply(&h);
+        let dense = gemm::matmul_nt(&h, &f.reconstruct());
+        assert!(fast.sub(&dense).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn spectral_error_zero_when_exact() {
+        let mut g = GaussianSource::new(3);
+        let a = gaussian(6, 2, 1.0, &mut g);
+        let b = gaussian(2, 9, 1.0, &mut g);
+        let w = gemm::matmul(&a, &b);
+        let f = Factorization { a, b, s: vec![] };
+        assert!(f.spectral_error(&w) < 1e-4);
+    }
+}

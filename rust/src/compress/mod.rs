@@ -1,0 +1,25 @@
+//! The paper's core contribution: low-rank compression of linear layers
+//! via randomized subspace iteration (Algorithm 3.1).
+//!
+//! * [`rsi`] — the algorithm itself, generic over a [`backend::GemmEngine`]
+//!   so the O(C·D·k) GEMM hot spot can run natively or through the AOT
+//!   Pallas/XLA artifacts.
+//! * [`plan`] — the compression planner: the α → per-layer rank rule,
+//!   parameter accounting, and layer selection.
+//! * [`factor`] — the rank-k factorization type (A·B with diagnostics).
+//! * [`backend`] — GEMM engine trait + the native engine; the PJRT engine
+//!   lives in `runtime::xla_engine`.
+//! * [`error`] — approximation-quality metrics (normalized spectral error).
+
+pub mod adaptive;
+pub mod backend;
+pub mod error;
+pub mod factor;
+pub mod plan;
+pub mod rsi;
+
+pub use adaptive::{allocate_ranks, LayerSpectrum};
+pub use backend::{BackendKind, GemmEngine, NativeEngine};
+pub use factor::Factorization;
+pub use plan::{CompressionPlan, LayerPlan, Method};
+pub use rsi::{rsi_factorize, OrthoStrategy, RsiOptions};

@@ -1,0 +1,187 @@
+//! Compression planning: translate a sweep cell (α, q, method) into
+//! per-layer jobs with exact parameter accounting — the "Ratio" column of
+//! Table 4.1.
+
+use super::rsi::RsiOptions;
+use crate::io::checkpoint::{list_layers, load_weight};
+use crate::io::tenz::TensorFile;
+use crate::util::rank_for_alpha;
+
+/// How a layer gets factored.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// Randomized subspace iteration (q=1 ⇒ the RSVD baseline).
+    Rsi(RsiOptions),
+    /// Exact truncated SVD (the paper's optimal baseline).
+    ExactSvd,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Rsi(o) if o.q == 1 => "rsvd".to_string(),
+            Method::Rsi(o) => format!("rsi(q={})", o.q),
+            Method::ExactSvd => "svd".to_string(),
+        }
+    }
+}
+
+/// Per-layer job emitted by the planner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub layer: String,
+    /// Logical shape (C, D).
+    pub c: usize,
+    pub d: usize,
+    /// Target rank k = ⌈α·min(C,D)⌉ (or explicit).
+    pub k: usize,
+    pub params_before: usize,
+    pub params_after: usize,
+}
+
+impl LayerPlan {
+    pub fn new(layer: impl Into<String>, c: usize, d: usize, k: usize) -> Self {
+        LayerPlan {
+            layer: layer.into(),
+            c,
+            d,
+            k,
+            params_before: c * d,
+            params_after: (c + d) * k,
+        }
+    }
+}
+
+/// A full-model compression plan.
+#[derive(Debug, Clone)]
+pub struct CompressionPlan {
+    pub method: Method,
+    /// Uniform α applied to every linear layer (`None` ⇒ explicit ranks).
+    pub alpha: Option<f64>,
+    /// Explicit per-layer ranks overriding α (layer name → k).
+    pub explicit_ranks: Vec<(String, usize)>,
+    /// Skip layers whose min(C,D) is below this (tiny layers aren't worth
+    /// the factored-storage overhead; 0 = compress everything, matching
+    /// the paper which compresses all linear layers).
+    pub min_dim: usize,
+}
+
+impl CompressionPlan {
+    /// The paper's protocol: one α for all linear layers.
+    pub fn uniform_alpha(alpha: f64, method: Method) -> Self {
+        assert!(alpha > 0.0, "alpha must be positive");
+        CompressionPlan { method, alpha: Some(alpha), explicit_ranks: vec![], min_dim: 0 }
+    }
+
+    /// Explicit ranks per layer (future-work §5: adaptive layer-wise ranks).
+    pub fn with_ranks(ranks: Vec<(String, usize)>, method: Method) -> Self {
+        CompressionPlan { method, alpha: None, explicit_ranks: ranks, min_dim: 0 }
+    }
+
+    /// Rank for a (C, D) layer under this plan; None = not covered.
+    pub fn rank_for(&self, layer: &str, c: usize, d: usize) -> Option<usize> {
+        if c.min(d) < self.min_dim {
+            return None;
+        }
+        if let Some(alpha) = self.alpha {
+            return Some(rank_for_alpha(alpha, c, d));
+        }
+        self.explicit_ranks.iter().find(|(n, _)| n == layer).map(|(_, k)| *k)
+    }
+
+    /// Expand against a checkpoint into per-layer jobs (weights with 2 dims
+    /// only; biases and scalars pass through untouched).
+    pub fn expand(&self, ckpt: &TensorFile) -> Vec<LayerPlan> {
+        let mut out = Vec::new();
+        for layer in list_layers(ckpt) {
+            let Ok(w) = load_weight(ckpt, &layer) else { continue };
+            let (c, d) = w.shape();
+            if let Some(k) = self.rank_for(&layer, c, d) {
+                out.push(LayerPlan::new(layer, c, d, k));
+            }
+        }
+        out
+    }
+
+    /// Whole-model compression ratio for a set of layer plans, given the
+    /// total parameter count of the model (compressed params / original),
+    /// counting uncompressed parameters unchanged — Table 4.1's "Ratio".
+    pub fn model_ratio(plans: &[LayerPlan], total_params: usize) -> f64 {
+        let before: usize = plans.iter().map(|p| p.params_before).sum();
+        let after: usize = plans.iter().map(|p| p.params_after).sum();
+        debug_assert!(before <= total_params);
+        let untouched = total_params - before;
+        (untouched + after) as f64 / total_params.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::{store_weight, StoredWeight};
+    use crate::tensor::Mat;
+
+    fn ckpt() -> TensorFile {
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "layers.0", &StoredWeight::Dense(Mat::zeros(100, 400)));
+        store_weight(&mut tf, "layers.1", &StoredWeight::Dense(Mat::zeros(100, 100)));
+        store_weight(&mut tf, "head", &StoredWeight::Dense(Mat::zeros(10, 100)));
+        tf
+    }
+
+    #[test]
+    fn uniform_alpha_ranks() {
+        let plan = CompressionPlan::uniform_alpha(0.4, Method::ExactSvd);
+        let jobs = plan.expand(&ckpt());
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].k, 40); // ceil(0.4*100)
+        assert_eq!(jobs[2].k, 4); // head: ceil(0.4*10)
+        assert_eq!(jobs[0].params_after, (100 + 400) * 40);
+    }
+
+    #[test]
+    fn explicit_ranks_and_coverage() {
+        let plan = CompressionPlan::with_ranks(
+            vec![("layers.0".into(), 7), ("head".into(), 2)],
+            Method::ExactSvd,
+        );
+        let jobs = plan.expand(&ckpt());
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs.iter().find(|j| j.layer == "head").unwrap().k, 2);
+        assert!(plan.rank_for("layers.1", 100, 100).is_none());
+    }
+
+    #[test]
+    fn min_dim_filter() {
+        let mut plan = CompressionPlan::uniform_alpha(0.5, Method::ExactSvd);
+        plan.min_dim = 50;
+        let jobs = plan.expand(&ckpt());
+        assert_eq!(jobs.len(), 2); // head (min dim 10) filtered out
+    }
+
+    #[test]
+    fn ratio_accounting() {
+        // Two layers, only one compressed: ratio mixes compressed + untouched.
+        let plans = vec![LayerPlan::new("a", 100, 400, 40)];
+        let total = 100 * 400 + 100 * 100;
+        let r = CompressionPlan::model_ratio(&plans, total);
+        let want = ((100 * 100) + (100 + 400) * 40) as f64 / total as f64;
+        assert!((r - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_can_exceed_one() {
+        // Paper Table 4.1: α=0.8 rows show ratio 1.01–1.02 because
+        // (C+D)k > C·D when k is close to min(C,D).
+        let plans = vec![LayerPlan::new("a", 100, 100, 90)];
+        let r = CompressionPlan::model_ratio(&plans, 100 * 100);
+        assert!(r > 1.0);
+    }
+
+    #[test]
+    fn method_names() {
+        assert_eq!(Method::Rsi(RsiOptions::rsvd(0)).name(), "rsvd");
+        assert_eq!(Method::Rsi(RsiOptions::with_q(3, 0)).name(), "rsi(q=3)");
+        assert_eq!(Method::ExactSvd.name(), "svd");
+    }
+}

@@ -1,0 +1,404 @@
+//! Randomized subspace iteration — Algorithm 3.1 of the paper.
+//!
+//! ```text
+//! Require: W ∈ R^{C×D}, target rank k, iteration count q ≥ 1
+//! 1: draw Ω ∈ R^{D×k}; Y = Ω
+//! 2: for t = 1..q:
+//! 3:     X = W·Y
+//! 4:     [X, _] = qr(X)
+//! 5:     Y = Wᵀ·X
+//! 6: end
+//! 7: [Û, S̃, Ṽ] = svd(Yᵀ)
+//! 8: Ũ = X·Û
+//! 9: return Ũ, S̃, Ṽ
+//! ```
+//!
+//! q = 1 is exactly RSVD (Section 2); q > 1 amplifies spectral separation
+//! with singular values raised to the (2q−1)-th power (Eq. 3.2).
+//!
+//! The GEMMs on lines 3 and 5 run through a [`GemmEngine`]; the
+//! orthonormalization on line 4 is pluggable ([`OrthoStrategy`]) because
+//! the TPU-shaped fused artifact replaces Householder QR with the
+//! matmul-only Newton–Schulz iteration (see DESIGN.md §Hardware-Adaptation).
+//! The final small SVD (line 7) is computed from the ℓ×ℓ Gram of Y — the
+//! only dense eigenproblem, solved by our cyclic-Jacobi `eigh`.
+
+use super::backend::GemmEngine;
+use super::factor::Factorization;
+use crate::linalg::{chol, eigh, gemm, qr};
+use crate::rng::GaussianSource;
+use crate::tensor::Mat;
+
+/// How line 4's orthonormalization runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrthoStrategy {
+    /// Householder thin QR (the paper's `qr()`, reference behaviour).
+    Householder,
+    /// CholeskyQR2 — GEMM-rich; falls back to Householder when the Gram
+    /// matrix goes numerically indefinite.
+    CholeskyQr2,
+    /// Newton–Schulz inverse-square-root iteration (matmuls only; what the
+    /// fused XLA artifact uses). The value is the iteration count.
+    NewtonSchulz(usize),
+}
+
+impl OrthoStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "householder" | "qr" => Some(OrthoStrategy::Householder),
+            "choleskyqr2" | "cholqr2" | "cholesky" => Some(OrthoStrategy::CholeskyQr2),
+            "newtonschulz" | "ns" => Some(OrthoStrategy::NewtonSchulz(12)),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OrthoStrategy::Householder => "householder",
+            OrthoStrategy::CholeskyQr2 => "choleskyqr2",
+            OrthoStrategy::NewtonSchulz(_) => "newton-schulz",
+        }
+    }
+}
+
+/// RSI options (Algorithm 3.1 inputs beyond W and k).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RsiOptions {
+    /// Power-iteration count q ≥ 1; q = 1 ⇒ RSVD.
+    pub q: usize,
+    /// Extra sketch columns beyond k (oversampling p; paper uses 0).
+    pub oversample: usize,
+    /// Line-4 orthonormalization strategy.
+    pub ortho: OrthoStrategy,
+    /// Seed for Ω.
+    pub seed: u64,
+}
+
+impl Default for RsiOptions {
+    fn default() -> Self {
+        RsiOptions { q: 2, oversample: 0, ortho: OrthoStrategy::Householder, seed: 0 }
+    }
+}
+
+impl RsiOptions {
+    /// The paper's RSVD baseline (q = 1).
+    pub fn rsvd(seed: u64) -> Self {
+        RsiOptions { q: 1, seed, ..Default::default() }
+    }
+
+    pub fn with_q(q: usize, seed: u64) -> Self {
+        RsiOptions { q: q.max(1), seed, ..Default::default() }
+    }
+}
+
+/// Orthonormalize the columns of X per the selected strategy.
+pub fn orthonormalize(x: &Mat<f32>, strategy: OrthoStrategy) -> Mat<f32> {
+    match strategy {
+        OrthoStrategy::Householder => qr::orthonormalize(x),
+        OrthoStrategy::CholeskyQr2 => match chol::cholesky_qr2(x) {
+            Ok((q, _)) => q,
+            Err(_) => qr::orthonormalize(x), // indefinite Gram → robust path
+        },
+        OrthoStrategy::NewtonSchulz(iters) => newton_schulz_ortho(x, iters),
+    }
+}
+
+/// Newton–Schulz orthonormalization: Q = X·(XᵀX)^{-1/2} computed with
+/// matmuls only. Converges when the spectrum of G/τ lies in (0, 2);
+/// we scale by τ = tr(G) which guarantees it for full-rank X.
+///
+/// This is the TPU-friendly substitute for line 4: on a systolic array the
+/// k×k iteration stays on the MXU, while Householder QR serializes.
+pub fn newton_schulz_ortho(x: &Mat<f32>, iters: usize) -> Mat<f32> {
+    let g64 = gemm::gram_tn_f64(x); // ℓ×ℓ
+    let l = x.cols();
+    let trace: f64 = (0..l).map(|i| g64.get(i, i)).sum();
+    if trace <= 0.0 {
+        return x.clone();
+    }
+    // Work in f64 for the small iteration; cost O(ℓ³) per iter.
+    let mut gs = g64.clone();
+    gs.scale(1.0 / trace);
+    // Z ≈ (G/τ)^{-1/2} via coupled Newton–Schulz:
+    //   Y_{t+1} = Y_t (3I − Z_t Y_t)/2,  Z_{t+1} = (3I − Z_t Y_t)/2 Z_t
+    // with Y₀ = G/τ, Z₀ = I; then (G)^{-1/2} = Z_∞ / √τ.
+    let mut y = gs.clone();
+    let mut z = Mat::<f64>::eye(l);
+    for _ in 0..iters {
+        // T = (3I − Z·Y)/2
+        let zy = gemm::matmul(&z, &y);
+        let mut t = Mat::<f64>::eye(l);
+        t.scale(3.0);
+        t.axpy(-1.0, &zy);
+        t.scale(0.5);
+        y = gemm::matmul(&y, &t);
+        z = gemm::matmul(&t, &z);
+    }
+    z.scale(1.0 / trace.sqrt());
+    // Q = X · G^{-1/2}.
+    gemm::matmul(x, &z.cast::<f32>())
+}
+
+/// Run Algorithm 3.1 and return the rank-k factorization
+/// (A = Ũ_k S̃_k^{1/2}, B = S̃_k^{1/2} Ṽ_kᵀ) plus the estimated spectrum.
+pub fn rsi_factorize(
+    w: &Mat<f32>,
+    k: usize,
+    opts: &RsiOptions,
+    engine: &dyn GemmEngine,
+) -> Factorization {
+    let (c, d) = w.shape();
+    let k = k.clamp(1, c.min(d));
+    let l = (k + opts.oversample).min(c.min(d)); // sketch width ℓ
+    let q = opts.q.max(1);
+
+    // Line 1: Ω ∈ R^{D×ℓ}.
+    let mut gsrc = GaussianSource::new(opts.seed);
+    let mut y = Mat::from_vec(d, l, gsrc.matrix_f32(d, l));
+
+    // Lines 2–6.
+    let mut x = Mat::zeros(c, l);
+    for _t in 0..q {
+        x = engine.wy(w, &y); // line 3: X = W·Y
+        x = orthonormalize(&x, opts.ortho); // line 4
+        y = engine.wtx(w, &x); // line 5: Y = Wᵀ·X
+    }
+
+    finalize(&x, &y, k)
+}
+
+/// Above this sketch width the ℓ×ℓ Jacobi eigensolve in [`finalize`]
+/// dominates the whole factorization, so when no truncation is needed
+/// (ℓ == k) we return the equivalent split A = X, B = Yᵀ directly:
+/// X·Yᵀ = X·(Û S̃ Ṽᵀ) = Ũ S̃ Ṽᵀ — the *same matrix* the SVD-completed
+/// factors multiply to, skipping the O(ℓ³) eigensolve. Singular values
+/// are then estimated from Y's column norms (exact when X converged).
+const FAST_SPLIT_THRESHOLD: usize = 384;
+
+/// Lines 7–9: SVD of Yᵀ (ℓ×D) via its ℓ×ℓ Gram, then Ũ = X·Û; truncate
+/// to rank k and split into balanced factors.
+pub fn finalize(x: &Mat<f32>, y: &Mat<f32>, k: usize) -> Factorization {
+    let l = x.cols();
+    debug_assert_eq!(y.cols(), l);
+    let k = k.min(l);
+    if l == k && l > FAST_SPLIT_THRESHOLD {
+        return finalize_fast_split(x, y);
+    }
+
+    // Gram of the columns of Y: G = YᵀY = (Yᵀ)(Yᵀ)ᵀ, ℓ×ℓ, f64.
+    let g = gemm::gram_tn_f64(y);
+    let e = eigh::eigh_default(&g);
+    // Singular values of Yᵀ are √λ.
+    let s: Vec<f64> = e.values.iter().map(|&v| v.max(0.0).sqrt()).collect();
+    let uhat = e.vectors.cast::<f32>(); // ℓ×ℓ: left singular vectors of Yᵀ
+
+    // Ṽ = Y · Û S⁻¹ (D×ℓ): right singular vectors of Yᵀ.
+    let cutoff = 1e-7 * s.first().copied().unwrap_or(0.0);
+    let mut us_inv = uhat.clone();
+    for cix in 0..l {
+        let inv = if s[cix] > cutoff { (1.0 / s[cix]) as f32 } else { 0.0 };
+        for r in 0..l {
+            let v = us_inv.get(r, cix) * inv;
+            us_inv.set(r, cix, v);
+        }
+    }
+    let vt_full = gemm::matmul(y, &us_inv); // D×ℓ
+
+    // Ũ = X·Û (C×ℓ).
+    let u_full = gemm::matmul(x, &uhat);
+
+    // Truncate to k and build balanced factors A = Ũ√S, B = √S Ṽᵀ.
+    let mut a = u_full.cols_range(0, k);
+    let vk = vt_full.cols_range(0, k); // D×k
+    let mut b = vk.transpose(); // k×D
+    for cix in 0..k {
+        let sq = s[cix].sqrt() as f32;
+        for r in 0..a.rows() {
+            let v = a.get(r, cix) * sq;
+            a.set(r, cix, v);
+        }
+        for j in 0..b.cols() {
+            let v = b.get(cix, j) * sq;
+            b.set(cix, j, v);
+        }
+    }
+    Factorization { a, b, s: s[..k].to_vec() }
+}
+
+/// ℓ == k fast path: A = X (orthonormal), B = Yᵀ. Reconstruction is
+/// bit-identical in exact arithmetic to the SVD-completed factors; only
+/// the internal balance differs. Singular-value estimates come from Y's
+/// column norms (‖y_j‖ = s̃_j when X's columns are the converged singular
+/// directions), sorted descending.
+fn finalize_fast_split(x: &Mat<f32>, y: &Mat<f32>) -> Factorization {
+    let l = x.cols();
+    let mut s: Vec<f64> = (0..l)
+        .map(|j| {
+            let mut acc = 0.0f64;
+            for r in 0..y.rows() {
+                let v = y.get(r, j) as f64;
+                acc += v * v;
+            }
+            acc.sqrt()
+        })
+        .collect();
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    Factorization { a: x.clone(), b: y.transpose(), s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::backend::NativeEngine;
+    use crate::linalg::svd::svd_via_gram;
+    use crate::tensor::init::{matrix_with_spectrum, SpectrumShape};
+
+    fn slow_decay_matrix(c: usize, d: usize, seed: u64) -> (Mat<f32>, Vec<f64>) {
+        let mut g = GaussianSource::new(seed);
+        let spec = SpectrumShape::pretrained_like().values(c);
+        let w = matrix_with_spectrum(c, d, &spec, &mut g);
+        (w, spec)
+    }
+
+    #[test]
+    fn q1_is_rsvd_and_error_above_optimal() {
+        // RSI error can never beat s_{k+1} (SVD optimality, Eq. 2.3).
+        let (w, spec) = slow_decay_matrix(48, 120, 1);
+        let k = 8;
+        let f = rsi_factorize(&w, k, &RsiOptions::rsvd(7), &NativeEngine);
+        assert_eq!(f.rank(), k);
+        let err = f.spectral_error(&w);
+        assert!(err >= spec[k] * 0.999, "err {err} < s_k+1 {}", spec[k]);
+    }
+
+    #[test]
+    fn error_decreases_with_q() {
+        // The paper's core claim (Fig 4.1a): more power iterations →
+        // better approximation in the slow-decay regime.
+        let (w, spec) = slow_decay_matrix(64, 160, 2);
+        let k = 10;
+        let mut errs = Vec::new();
+        for q in [1usize, 2, 4] {
+            // Average over a few sketches to avoid fluke orderings.
+            let mut acc = 0.0;
+            for trial in 0..3u64 {
+                let opts = RsiOptions::with_q(q, 100 + trial);
+                let f = rsi_factorize(&w, k, &opts, &NativeEngine);
+                acc += f.spectral_error(&w);
+            }
+            errs.push(acc / 3.0);
+        }
+        assert!(
+            errs[0] > errs[1] && errs[1] > errs[2] * 0.999,
+            "errors not decreasing with q: {errs:?}"
+        );
+        // And q=4 should be near-optimal (normalized error close to 1,
+        // paper reports ≈1.1).
+        let norm_err = errs[2] / spec[k];
+        assert!(norm_err < 1.6, "q=4 normalized error {norm_err} too high");
+    }
+
+    #[test]
+    fn exact_on_low_rank_input() {
+        // If rank(W) ≤ k, RSI recovers W (up to fp noise) for any q.
+        let mut g = GaussianSource::new(3);
+        let u = crate::tensor::init::gaussian(20, 4, 1.0, &mut g);
+        let v = crate::tensor::init::gaussian(4, 35, 1.0, &mut g);
+        let w = gemm::matmul(&u, &v);
+        for q in [1usize, 3] {
+            let f = rsi_factorize(&w, 4, &RsiOptions::with_q(q, 5), &NativeEngine);
+            let err = f.reconstruct().sub(&w).max_abs();
+            assert!(err < 1e-3, "q={q}: err {err}");
+        }
+    }
+
+    #[test]
+    fn singular_value_estimates_improve_with_q() {
+        let (w, spec) = slow_decay_matrix(40, 100, 4);
+        let k = 6;
+        let f1 = rsi_factorize(&w, k, &RsiOptions::with_q(1, 9), &NativeEngine);
+        let f4 = rsi_factorize(&w, k, &RsiOptions::with_q(4, 9), &NativeEngine);
+        // Estimated s₁ should be ≤ true s₁ and tighter for larger q.
+        assert!(f4.s[0] <= spec[0] * 1.001);
+        let gap1 = (spec[0] - f1.s[0]).abs();
+        let gap4 = (spec[0] - f4.s[0]).abs();
+        assert!(gap4 <= gap1 + 1e-9, "s1 gap should shrink: q1 {gap1} q4 {gap4}");
+    }
+
+    #[test]
+    fn ortho_strategies_agree_on_well_conditioned() {
+        let (w, _) = slow_decay_matrix(32, 80, 5);
+        let k = 6;
+        let mk = |ortho| {
+            let opts = RsiOptions { q: 2, oversample: 0, ortho, seed: 11 };
+            rsi_factorize(&w, k, &opts, &NativeEngine).spectral_error(&w)
+        };
+        let eh = mk(OrthoStrategy::Householder);
+        let ec = mk(OrthoStrategy::CholeskyQr2);
+        let en = mk(OrthoStrategy::NewtonSchulz(16));
+        // Same sketch seed → all three should land on near-identical errors.
+        assert!((eh - ec).abs() / eh < 0.02, "householder {eh} vs cholqr2 {ec}");
+        assert!((eh - en).abs() / eh < 0.05, "householder {eh} vs ns {en}");
+    }
+
+    #[test]
+    fn newton_schulz_orthogonality() {
+        let mut g = GaussianSource::new(6);
+        let x = crate::tensor::init::gaussian(50, 8, 1.0, &mut g);
+        let q = newton_schulz_ortho(&x, 20);
+        let err = qr::ortho_error(&q);
+        assert!(err < 1e-3, "NS ortho error {err}");
+    }
+
+    #[test]
+    fn oversampling_helps_rsvd() {
+        let (w, _) = slow_decay_matrix(48, 120, 7);
+        let k = 8;
+        let plain = RsiOptions { q: 1, oversample: 0, ortho: OrthoStrategy::Householder, seed: 3 };
+        let over = RsiOptions { q: 1, oversample: 8, ortho: OrthoStrategy::Householder, seed: 3 };
+        let mut e_plain = 0.0;
+        let mut e_over = 0.0;
+        for t in 0..3u64 {
+            let mut p = plain;
+            p.seed = 3 + t;
+            let mut o = over;
+            o.seed = 3 + t;
+            e_plain += rsi_factorize(&w, k, &p, &NativeEngine).spectral_error(&w);
+            e_over += rsi_factorize(&w, k, &o, &NativeEngine).spectral_error(&w);
+        }
+        assert!(e_over < e_plain, "oversampling should reduce error: {e_over} vs {e_plain}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (w, _) = slow_decay_matrix(24, 50, 8);
+        let opts = RsiOptions::with_q(2, 42);
+        let f1 = rsi_factorize(&w, 5, &opts, &NativeEngine);
+        let f2 = rsi_factorize(&w, 5, &opts, &NativeEngine);
+        assert_eq!(f1.a, f2.a);
+        assert_eq!(f1.b, f2.b);
+    }
+
+    #[test]
+    fn agrees_with_exact_svd_when_q_large() {
+        // With many iterations the subspace converges to the exact one.
+        let (w, _) = slow_decay_matrix(30, 70, 9);
+        let k = 5;
+        let svd = svd_via_gram(&w);
+        let f = rsi_factorize(&w, k, &RsiOptions::with_q(8, 13), &NativeEngine);
+        let optimal = svd.s[k];
+        let err = f.spectral_error(&w);
+        assert!(err / optimal < 1.15, "q=8 err {err} vs optimal {optimal}");
+        // Singular value estimates match the exact leading spectrum.
+        for i in 0..k {
+            crate::testutil::assert_relclose(f.s[i], svd.s[i], 0.05, "s_i");
+        }
+    }
+
+    #[test]
+    fn rank_clamped_to_min_dim() {
+        let (w, _) = slow_decay_matrix(10, 30, 10);
+        let f = rsi_factorize(&w, 999, &RsiOptions::default(), &NativeEngine);
+        assert_eq!(f.rank(), 10);
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration system: a mini-TOML parser (the crate universe has no
+//! serde/toml) plus the typed experiment/pipeline schema used by the CLI.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ExperimentConfig, ModelSpec, PipelineSettings, SweepSpec};
+pub use toml::{TomlDoc, TomlError, TomlValue};

@@ -1,0 +1,204 @@
+//! Typed configuration schema on top of the mini-TOML parser.
+//!
+//! One config file drives a whole experiment: which checkpoint/model,
+//! which compression sweep (α × q grids, rank grids, trial counts), and
+//! pipeline execution settings (workers, queue depth, backend).
+
+use super::toml::{TomlDoc, TomlError};
+use crate::compress::backend::BackendKind;
+
+/// Which model/checkpoint an experiment runs against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Logical name ("synthvgg" | "synthvit" | arbitrary checkpoint name).
+    pub name: String,
+    /// Path to the `.tenz` checkpoint.
+    pub checkpoint: String,
+    /// Path to the eval set `.tenz` (features/images + labels).
+    pub eval_set: Option<String>,
+}
+
+/// The compression sweep grid of Table 4.1 / Figs 4.1–4.2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    /// Compression factors α (Table 4.1 uses {0.8, 0.6, 0.4, 0.2}).
+    pub alphas: Vec<f64>,
+    /// Power-iteration counts q (paper: {1, 2, 3, 4}; q=1 ⇒ RSVD).
+    pub qs: Vec<usize>,
+    /// Explicit rank grid for single-layer figures (overrides alphas).
+    pub ranks: Vec<usize>,
+    /// Independent sketch repetitions per cell (paper: 20).
+    pub trials: usize,
+    /// Master seed; per-trial seeds derive from it.
+    pub seed: u64,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            alphas: vec![0.8, 0.6, 0.4, 0.2],
+            qs: vec![1, 2, 3, 4],
+            ranks: vec![],
+            trials: 20,
+            seed: 42,
+        }
+    }
+}
+
+/// Execution settings for the compression pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSettings {
+    /// Worker threads compressing layers concurrently.
+    pub workers: usize,
+    /// Bounded queue depth (backpressure window).
+    pub queue_depth: usize,
+    /// Compute backend for the RSI GEMMs.
+    pub backend: BackendKind,
+    /// Oversampling columns added to the sketch (p in the RSVD literature;
+    /// the paper uses p=0 so the default is 0).
+    pub oversample: usize,
+    /// Validate each compressed layer with a residual-norm estimate.
+    pub validate: bool,
+}
+
+impl Default for PipelineSettings {
+    fn default() -> Self {
+        PipelineSettings {
+            workers: crate::util::default_threads(),
+            queue_depth: 16,
+            backend: BackendKind::Native,
+            oversample: 0,
+            validate: false,
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub model: ModelSpec,
+    pub sweep: SweepSpec,
+    pub pipeline: PipelineSettings,
+    /// Output directory for reports/CSVs.
+    pub out_dir: String,
+}
+
+impl ExperimentConfig {
+    /// Parse from a mini-TOML document. Missing optional keys fall back to
+    /// defaults; `name` and `model.checkpoint` are required.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, TomlError> {
+        let name = doc.str("name")?.to_string();
+        let model = ModelSpec {
+            name: doc.str("model.name").unwrap_or("model").to_string(),
+            checkpoint: doc.str("model.checkpoint")?.to_string(),
+            eval_set: doc.str("model.eval_set").ok().map(|s| s.to_string()),
+        };
+        let mut sweep = SweepSpec::default();
+        if let Ok(a) = doc.floats("sweep.alphas") {
+            sweep.alphas = a;
+        }
+        if let Ok(q) = doc.ints("sweep.qs") {
+            sweep.qs = q.into_iter().map(|v| v.max(1) as usize).collect();
+        }
+        if let Ok(r) = doc.ints("sweep.ranks") {
+            sweep.ranks = r.into_iter().map(|v| v.max(1) as usize).collect();
+        }
+        if let Ok(t) = doc.int("sweep.trials") {
+            sweep.trials = t.max(1) as usize;
+        }
+        if let Ok(s) = doc.int("sweep.seed") {
+            sweep.seed = s as u64;
+        }
+        let mut pipeline = PipelineSettings::default();
+        if let Ok(w) = doc.int("pipeline.workers") {
+            pipeline.workers = w.max(1) as usize;
+        }
+        if let Ok(d) = doc.int("pipeline.queue_depth") {
+            pipeline.queue_depth = d.max(1) as usize;
+        }
+        if let Ok(b) = doc.str("pipeline.backend") {
+            pipeline.backend = BackendKind::parse(b)
+                .ok_or(TomlError::Type("pipeline.backend".into(), "backend name"))?;
+        }
+        if let Ok(o) = doc.int("pipeline.oversample") {
+            pipeline.oversample = o.max(0) as usize;
+        }
+        if let Ok(v) = doc.bool("pipeline.validate") {
+            pipeline.validate = v;
+        }
+        let out_dir = doc.str("out_dir").unwrap_or("reports").to_string();
+        Ok(ExperimentConfig { name, model, sweep, pipeline, out_dir })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self, TomlError> {
+        Self::from_doc(&TomlDoc::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "table41-vgg"
+out_dir = "reports/table41"
+
+[model]
+name = "synthvgg"
+checkpoint = "artifacts/data/synthvgg.tenz"
+eval_set = "artifacts/data/eval_vgg.tenz"
+
+[sweep]
+alphas = [0.8, 0.6, 0.4, 0.2]
+qs = [1, 2, 3, 4]
+trials = 3
+seed = 7
+
+[pipeline]
+workers = 4
+queue_depth = 8
+backend = "native"
+validate = true
+"#;
+
+    #[test]
+    fn full_parse() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "table41-vgg");
+        assert_eq!(cfg.model.name, "synthvgg");
+        assert_eq!(cfg.model.eval_set.as_deref(), Some("artifacts/data/eval_vgg.tenz"));
+        assert_eq!(cfg.sweep.alphas, vec![0.8, 0.6, 0.4, 0.2]);
+        assert_eq!(cfg.sweep.qs, vec![1, 2, 3, 4]);
+        assert_eq!(cfg.sweep.trials, 3);
+        assert_eq!(cfg.pipeline.workers, 4);
+        assert!(cfg.pipeline.validate);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let doc = TomlDoc::parse("name = \"x\"\n[model]\ncheckpoint = \"c.tenz\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sweep.trials, 20);
+        assert_eq!(cfg.sweep.alphas.len(), 4);
+        assert!(cfg.pipeline.workers >= 1);
+        assert_eq!(cfg.out_dir, "reports");
+        assert!(cfg.model.eval_set.is_none());
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        let doc = TomlDoc::parse("name = \"x\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let doc = TomlDoc::parse(
+            "name = \"x\"\n[model]\ncheckpoint = \"c\"\n[pipeline]\nbackend = \"gpu\"",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+}

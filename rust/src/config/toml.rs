@@ -1,0 +1,323 @@
+//! A deliberately small TOML-subset parser: tables `[a.b]`, key/value
+//! pairs with strings, integers, floats, booleans, and flat arrays.
+//! Enough for experiment configs; not a general TOML implementation
+//! (no inline tables, no multiline strings, no datetimes).
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+    #[error("key {0:?} not found")]
+    Missing(String),
+    #[error("key {0:?}: expected {1}")]
+    Type(String, &'static str),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flat map from dotted path (`table.key`) to value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let lineno = lineno + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(TomlError::Parse(lineno, "unterminated table header".into()));
+                }
+                prefix = line[1..line.len() - 1].trim().to_string();
+                if prefix.is_empty() {
+                    return Err(TomlError::Parse(lineno, "empty table name".into()));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| TomlError::Parse(lineno, format!("expected key = value: {line}")))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(TomlError::Parse(lineno, "empty key".into()));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| TomlError::Parse(lineno, e))?;
+            let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            map.insert(full, val);
+        }
+        Ok(TomlDoc { map })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self, TomlError> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| TomlError::Parse(0, format!("read error: {e}")))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str, TomlError> {
+        self.map
+            .get(key)
+            .ok_or_else(|| TomlError::Missing(key.into()))?
+            .as_str()
+            .ok_or(TomlError::Type(key.into(), "string"))
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64, TomlError> {
+        self.map
+            .get(key)
+            .ok_or_else(|| TomlError::Missing(key.into()))?
+            .as_int()
+            .ok_or(TomlError::Type(key.into(), "integer"))
+    }
+
+    pub fn float(&self, key: &str) -> Result<f64, TomlError> {
+        self.map
+            .get(key)
+            .ok_or_else(|| TomlError::Missing(key.into()))?
+            .as_float()
+            .ok_or(TomlError::Type(key.into(), "float"))
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool, TomlError> {
+        self.map
+            .get(key)
+            .ok_or_else(|| TomlError::Missing(key.into()))?
+            .as_bool()
+            .ok_or(TomlError::Type(key.into(), "bool"))
+    }
+
+    pub fn floats(&self, key: &str) -> Result<Vec<f64>, TomlError> {
+        let arr = self
+            .map
+            .get(key)
+            .ok_or_else(|| TomlError::Missing(key.into()))?
+            .as_array()
+            .ok_or(TomlError::Type(key.into(), "array"))?;
+        arr.iter()
+            .map(|v| v.as_float().ok_or(TomlError::Type(key.into(), "float array")))
+            .collect()
+    }
+
+    pub fn ints(&self, key: &str) -> Result<Vec<i64>, TomlError> {
+        let arr = self
+            .map
+            .get(key)
+            .ok_or_else(|| TomlError::Missing(key.into()))?
+            .as_array()
+            .ok_or(TomlError::Type(key.into(), "array"))?;
+        arr.iter().map(|v| v.as_int().ok_or(TomlError::Type(key.into(), "int array"))).collect()
+    }
+
+    /// Keys under a dotted prefix (without the prefix).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.map.keys().filter_map(move |k| k.strip_prefix(want.as_str()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Split on commas that are not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0i32, false, 0usize);
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig41"
+trials = 20
+
+[rsi]
+qs = [1, 2, 3, 4]
+ranks = [100, 200, 500, 1000]
+seed = 42
+fused = false
+
+[layer]
+rows = 1024
+cols = 6272
+spectrum = "pretrained"  # trailing comment
+scale = 0.5
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str("name").unwrap(), "fig41");
+        assert_eq!(doc.int("trials").unwrap(), 20);
+        assert_eq!(doc.ints("rsi.qs").unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(doc.int("layer.rows").unwrap(), 1024);
+        assert_eq!(doc.float("layer.scale").unwrap(), 0.5);
+        assert_eq!(doc.str("layer.spectrum").unwrap(), "pretrained");
+        assert!(!doc.bool("rsi.fused").unwrap());
+    }
+
+    #[test]
+    fn float_from_int_coercion() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.float("x").unwrap(), 3.0);
+        assert!(doc.str("x").is_err());
+    }
+
+    #[test]
+    fn string_with_hash_and_escape() {
+        let doc = TomlDoc::parse(r#"s = "a # not comment \" q" "#).unwrap();
+        assert_eq!(doc.str("s").unwrap(), "a # not comment \" q");
+    }
+
+    #[test]
+    fn arrays_mixed_and_nested_reject_gracefully() {
+        let doc = TomlDoc::parse("a = [1, 2.5, 3]").unwrap();
+        assert_eq!(doc.floats("a").unwrap(), vec![1.0, 2.5, 3.0]);
+        assert!(doc.ints("a").is_err()); // 2.5 is not an int
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbad line").unwrap_err();
+        assert!(matches!(err, TomlError::Parse(2, _)));
+        let err2 = TomlDoc::parse("[unclosed").unwrap_err();
+        assert!(matches!(err2, TomlError::Parse(1, _)));
+    }
+
+    #[test]
+    fn missing_and_type_errors() {
+        let doc = TomlDoc::parse("x = 1").unwrap();
+        assert_eq!(doc.int("y").unwrap_err(), TomlError::Missing("y".into()));
+        assert_eq!(doc.bool("x").unwrap_err(), TomlError::Type("x".into(), "bool"));
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse("[t]\na = 1\nb = 2\n[t2]\nc = 3").unwrap();
+        let keys: Vec<_> = doc.keys_under("t").collect();
+        assert_eq!(keys, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn empty_doc_ok() {
+        let doc = TomlDoc::parse("\n# just a comment\n").unwrap();
+        assert_eq!(doc, TomlDoc::default());
+    }
+}

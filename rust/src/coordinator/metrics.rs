@@ -1,0 +1,85 @@
+//! Pipeline metrics: lock-free counters + stage timing aggregation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Counters shared across workers.
+#[derive(Debug, Default)]
+pub struct PipelineMetrics {
+    pub layers_submitted: AtomicU64,
+    pub layers_completed: AtomicU64,
+    pub layers_failed: AtomicU64,
+    /// Nanoseconds spent inside factorization (summed across workers).
+    factorize_nanos: AtomicU64,
+    /// Nanoseconds spent validating (residual norms).
+    validate_nanos: AtomicU64,
+    /// Per-stage wall timings recorded by the driver.
+    stage_secs: Mutex<Vec<(String, f64)>>,
+}
+
+impl PipelineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_factorize_secs(&self, secs: f64) {
+        self.factorize_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_validate_secs(&self, secs: f64) {
+        self.validate_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn factorize_secs(&self) -> f64 {
+        self.factorize_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn validate_secs(&self) -> f64 {
+        self.validate_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn record_stage(&self, name: &str, secs: f64) {
+        self.stage_secs.lock().unwrap().push((name.to_string(), secs));
+    }
+
+    pub fn stages(&self) -> Vec<(String, f64)> {
+        self.stage_secs.lock().unwrap().clone()
+    }
+
+    pub fn summary(&self) -> String {
+        let sub = self.layers_submitted.load(Ordering::Relaxed);
+        let done = self.layers_completed.load(Ordering::Relaxed);
+        let failed = self.layers_failed.load(Ordering::Relaxed);
+        let mut s = format!(
+            "layers: {done}/{sub} completed ({failed} failed); factorize {:.3}s, validate {:.3}s",
+            self.factorize_secs(),
+            self.validate_secs()
+        );
+        for (name, secs) in self.stages() {
+            s.push_str(&format!("\n  stage {name}: {secs:.3}s"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let m = PipelineMetrics::new();
+        m.layers_submitted.fetch_add(3, Ordering::Relaxed);
+        m.layers_completed.fetch_add(2, Ordering::Relaxed);
+        m.layers_failed.fetch_add(1, Ordering::Relaxed);
+        m.add_factorize_secs(0.5);
+        m.add_factorize_secs(0.25);
+        m.add_validate_secs(0.1);
+        m.record_stage("plan", 0.01);
+        assert!((m.factorize_secs() - 0.75).abs() < 1e-6);
+        assert!((m.validate_secs() - 0.1).abs() < 1e-6);
+        let s = m.summary();
+        assert!(s.contains("2/3 completed"));
+        assert!(s.contains("stage plan"));
+    }
+}

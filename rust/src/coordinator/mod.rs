@@ -1,0 +1,25 @@
+//! L3 coordination: the compression pipeline.
+//!
+//! The paper's workload shape is a *data pipeline*: a stream of per-layer
+//! compression jobs (Table 4.1 compresses 3 layers for VGG, 38 for ViT;
+//! a sweep multiplies that by the α×q×trial grid). The coordinator owns:
+//!
+//! * [`pool`]  — a from-scratch worker thread pool (no tokio in the
+//!   offline crate universe).
+//! * [`queue`] — a bounded MPMC job queue providing backpressure: the
+//!   planner blocks when workers fall behind, keeping peak memory
+//!   proportional to queue depth, not model size.
+//! * [`pipeline`] — the end-to-end flow: checkpoint → plan → compress
+//!   (per-layer jobs on the pool) → validate → emit compressed checkpoint
+//!   + metrics.
+//! * [`metrics`] — counters/timers reported in pipeline summaries.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod pool;
+pub mod queue;
+
+pub use metrics::PipelineMetrics;
+pub use pipeline::{LayerOutcome, Pipeline, PipelineConfig, PipelineReport};
+pub use pool::WorkerPool;
+pub use queue::BoundedQueue;

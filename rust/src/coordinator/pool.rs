@@ -1,0 +1,164 @@
+//! Worker thread pool over the bounded queue.
+//!
+//! Jobs are boxed closures; results flow back through an mpsc channel the
+//! submitter drains. Panics in jobs are caught and surfaced as errors so a
+//! single bad layer cannot take down the pipeline.
+
+use super::queue::BoundedQueue;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct WorkerPool {
+    queue: Arc<BoundedQueue<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads with a `queue_depth`-bounded job queue.
+    pub fn new(workers: usize, queue_depth: usize) -> Self {
+        let workers = workers.max(1);
+        let queue = Arc::new(BoundedQueue::<Job>::new(queue_depth.max(1)));
+        let handles = (0..workers)
+            .map(|i| {
+                let q = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("rsic-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = q.pop() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { queue, workers: handles }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job (blocks under backpressure). Returns false if the pool
+    /// is already shut down.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        self.queue.push(Box::new(job)).is_ok()
+    }
+
+    /// Run a batch of independent tasks, catching panics per task, and
+    /// collect their results in submission order.
+    pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Vec<Result<T, String>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        let (tx, rx): (Sender<(usize, Result<T, String>)>, Receiver<_>) = channel();
+        for (idx, task) in tasks.into_iter().enumerate() {
+            let tx_job = tx.clone();
+            let ok = self.submit(move || {
+                let out = std::panic::catch_unwind(AssertUnwindSafe(task)).map_err(|p| {
+                    p.downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "job panicked".into())
+                });
+                let _ = tx_job.send((idx, out));
+            });
+            if !ok {
+                let _ = tx.send((idx, Err("pool shut down".into())));
+            }
+        }
+        drop(tx);
+        let mut results: Vec<Option<Result<T, String>>> = (0..n).map(|_| None).collect();
+        for (idx, r) in rx {
+            results[idx] = Some(r);
+        }
+        results
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| Err("job result lost".into())))
+            .collect()
+    }
+
+    /// Stop accepting jobs and join all workers (drains the queue first).
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        // Threads detach if shutdown() wasn't called; queue closure makes
+        // them exit promptly.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_tasks_in_order() {
+        let pool = WorkerPool::new(4, 2);
+        let tasks: Vec<_> = (0..32).map(|i| move || i * 2).collect();
+        let results = pool.run_all(tasks);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), i * 2);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panic_isolated_to_one_task() {
+        let pool = WorkerPool::new(2, 2);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom {}", 42)),
+            Box::new(|| 3),
+        ];
+        let results = pool.run_all(tasks);
+        assert_eq!(*results[0].as_ref().unwrap(), 1);
+        assert!(results[1].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(*results[2].as_ref().unwrap(), 3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = WorkerPool::new(4, 8);
+        let concurrent = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<_> = (0..8)
+            .map(|_| {
+                let c = concurrent.clone();
+                let p = peak.clone();
+                move || {
+                    let now = c.fetch_add(1, Ordering::SeqCst) + 1;
+                    p.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    c.fetch_sub(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run_all(tasks);
+        assert!(peak.load(Ordering::SeqCst) >= 2, "expected ≥2 concurrent jobs");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let pool = WorkerPool::new(1, 1);
+        let results = pool.run_all((0..5).map(|i| move || i).collect::<Vec<_>>());
+        assert!(results.iter().all(|r| r.is_ok()));
+        pool.shutdown();
+    }
+}

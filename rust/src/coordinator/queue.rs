@@ -1,0 +1,158 @@
+//! Bounded MPMC queue (condvar-based) — the pipeline's backpressure
+//! mechanism. `push` blocks while full; `pop` blocks while empty; `close`
+//! wakes everyone and drains remaining items.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded blocking queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            inner: Mutex::new(Inner { buf: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push. Returns `Err(item)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.buf.len() < self.capacity {
+                g.buf.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop. Returns `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: pushes fail, pops drain then return None.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(q.push(8).is_err());
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(0).unwrap();
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let p2 = pushed.clone();
+        let t = std::thread::spawn(move || {
+            q2.push(2).unwrap(); // must block until a pop
+            p2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "producer should be blocked");
+        assert_eq!(q.pop(), Some(0));
+        t.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q = Arc::new(BoundedQueue::new(3));
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            let seen = seen.clone();
+            consumers.push(std::thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    seen.lock().unwrap().push(v);
+                }
+            }));
+        }
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..200 {
+                q2.push(i).unwrap();
+            }
+            q2.close();
+        });
+        producer.join().unwrap();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..200).collect::<Vec<_>>());
+    }
+}

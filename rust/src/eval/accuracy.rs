@@ -1,0 +1,116 @@
+//! Top-1/Top-5 accuracy — the paper's Table 4.1 metrics.
+
+use crate::tensor::Mat;
+
+/// Accuracy summary for one evaluated configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyReport {
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+impl AccuracyReport {
+    pub fn percent(&self) -> (f64, f64) {
+        (self.top1 * 100.0, self.top5 * 100.0)
+    }
+}
+
+/// Fraction of rows whose true label is within the top-k logits.
+/// Ties broken by lower class index (deterministic).
+pub fn topk_accuracy(logits: &Mat<f32>, labels: &[i32], k: usize) -> f64 {
+    assert_eq!(logits.rows(), labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    for (r, &label) in labels.iter().enumerate() {
+        let row = logits.row(r);
+        let label = label as usize;
+        if label >= row.len() {
+            continue;
+        }
+        let target = row[label];
+        // Count classes strictly better, and ties at lower index.
+        let mut better = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > target || (v == target && c < label) {
+                better += 1;
+            }
+        }
+        if better < k {
+            hits += 1;
+        }
+    }
+    hits as f64 / labels.len() as f64
+}
+
+/// Both headline metrics at once.
+pub fn accuracy_report(logits: &Mat<f32>, labels: &[i32]) -> AccuracyReport {
+    AccuracyReport {
+        top1: topk_accuracy(logits, labels, 1),
+        top5: topk_accuracy(logits, labels, 5),
+        n: labels.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Mat<f32> {
+        // 3 samples, 4 classes.
+        Mat::from_vec(
+            3,
+            4,
+            vec![
+                0.1, 0.9, 0.5, 0.2, // best: 1, then 2, 3, 0
+                2.0, 1.0, 0.0, -1.0, // best: 0
+                0.0, 0.0, 0.0, 5.0, // best: 3
+            ],
+        )
+    }
+
+    #[test]
+    fn top1() {
+        let l = logits();
+        assert_eq!(topk_accuracy(&l, &[1, 0, 3], 1), 1.0);
+        assert_eq!(topk_accuracy(&l, &[2, 0, 3], 1), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn topk_widens() {
+        let l = logits();
+        // Sample 0: class 2 is second-best → hits at k=2.
+        assert_eq!(topk_accuracy(&l, &[2, 1, 0], 1), 0.0);
+        assert!(topk_accuracy(&l, &[2, 1, 0], 2) > 0.3);
+        assert_eq!(topk_accuracy(&l, &[2, 1, 0], 4), 1.0);
+    }
+
+    #[test]
+    fn tie_breaking_deterministic() {
+        let l = Mat::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        // All tied: label 0 wins at k=1; label 2 loses (two lower indexes tie).
+        assert_eq!(topk_accuracy(&l, &[0], 1), 1.0);
+        assert_eq!(topk_accuracy(&l, &[2], 1), 0.0);
+        assert_eq!(topk_accuracy(&l, &[2], 3), 1.0);
+    }
+
+    #[test]
+    fn report() {
+        let l = logits();
+        let r = accuracy_report(&l, &[1, 0, 3]);
+        assert_eq!(r.top1, 1.0);
+        assert_eq!(r.top5, 1.0);
+        assert_eq!(r.n, 3);
+        assert_eq!(r.percent(), (100.0, 100.0));
+    }
+
+    #[test]
+    fn empty_and_oob_labels() {
+        let l = logits();
+        assert_eq!(topk_accuracy(&Mat::zeros(0, 4), &[], 1), 0.0);
+        // Out-of-range label counts as a miss, not a panic.
+        assert_eq!(topk_accuracy(&l, &[99, 0, 3], 1), 2.0 / 3.0);
+    }
+}

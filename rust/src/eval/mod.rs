@@ -1,0 +1,12 @@
+//! Evaluation engine: Top-k accuracy (Table 4.1), softmax probabilities,
+//! and the Theorem 3.2 perturbation-bound validation.
+
+pub mod accuracy;
+pub mod model_eval;
+pub mod perturbation;
+pub mod softmax;
+
+pub use accuracy::{topk_accuracy, AccuracyReport};
+pub use model_eval::ModelEvaluator;
+pub use perturbation::{check_bound, PerturbationReport};
+pub use softmax::{softmax_rows, SoftmaxStats};

@@ -1,0 +1,72 @@
+//! End-to-end model evaluation through the AOT forward artifacts.
+//!
+//! Reconstructs dense weights from factored checkpoints (A·B — numerically
+//! identical to applying the two small layers in sequence), feeds them as
+//! runtime parameters to the compiled forward graph, and scores Top-1/Top-5
+//! over the eval set — the measurement loop behind Table 4.1.
+
+use super::accuracy::{accuracy_report, AccuracyReport};
+use crate::io::checkpoint::load_weight;
+use crate::io::tenz::TensorFile;
+use crate::model::{EvalSet, ModelDef, ModelKind};
+use crate::runtime::exec::{mat_to_literal, vec_to_literal_shaped};
+use crate::runtime::{ArtifactRegistry, ExecutableCache, XlaForward};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Loads a model's forward artifact + eval set and scores checkpoints.
+pub struct ModelEvaluator {
+    pub def: ModelDef,
+    pub eval_set: EvalSet,
+    forward: XlaForward,
+}
+
+impl ModelEvaluator {
+    pub fn load(
+        registry: &Arc<ArtifactRegistry>,
+        cache: &Arc<ExecutableCache>,
+        kind: ModelKind,
+    ) -> Result<ModelEvaluator> {
+        let def = ModelDef::get(kind);
+        let forward = XlaForward::load(registry, cache, kind.name(), def.sample_dims.clone())?;
+        let eval_entry = registry
+            .find_data(def.eval_file)
+            .with_context(|| format!("eval set {} not in manifest", def.eval_file))?;
+        let tf = TensorFile::read(registry.abs_path(eval_entry))?;
+        let eval_set = EvalSet::from_tenz(&tf, kind)?;
+        Ok(ModelEvaluator { def, eval_set, forward })
+    }
+
+    /// Build the forward artifact's parameter literals from a checkpoint
+    /// (dense or factored — factored weights are reconstructed).
+    pub fn params_from_checkpoint(&self, ckpt: &TensorFile) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(self.def.param_order.len());
+        for name in &self.def.param_order {
+            if let Some(prefix) = name.strip_suffix(".weight") {
+                let w = load_weight(ckpt, prefix)
+                    .with_context(|| format!("checkpoint missing layer {prefix}"))?;
+                out.push(mat_to_literal(&w.materialize())?);
+            } else {
+                let entry = ckpt
+                    .get(name)
+                    .with_context(|| format!("checkpoint missing tensor {name}"))?;
+                let vals = entry.to_f32().map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+                let dims = self.def.param_feed_dims(name, &entry.dims);
+                out.push(vec_to_literal_shaped(&vals, &dims)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Logits over the whole eval set.
+    pub fn logits(&self, ckpt: &TensorFile) -> Result<crate::tensor::Mat<f32>> {
+        let params = self.params_from_checkpoint(ckpt)?;
+        self.forward.logits(&self.eval_set.data, &params)
+    }
+
+    /// Top-1/Top-5 over the eval set.
+    pub fn evaluate(&self, ckpt: &TensorFile) -> Result<AccuracyReport> {
+        let logits = self.logits(ckpt)?;
+        Ok(accuracy_report(&logits, &self.eval_set.labels))
+    }
+}

@@ -1,0 +1,144 @@
+//! Theorem 3.2 validation: ‖p̃(x) − p(x)‖_∞ ≤ ½·R·‖W − W̃‖₂.
+//!
+//! For the classifier-head setting (z = W·h + b, fixed features), the bound
+//! is checked sample-by-sample: the measured softmax deviation must sit
+//! under the theoretical envelope, and we also report the tightness ratio
+//! (measured / bound) the paper's Remark 3.3 discusses.
+
+use super::softmax::{deviation_stats, max_prob_deviation, softmax_rows};
+use crate::linalg::gemm;
+use crate::tensor::Mat;
+
+/// Result of a Theorem 3.2 check over an eval set.
+#[derive(Debug, Clone)]
+pub struct PerturbationReport {
+    /// ½·R·‖W − W̃‖₂ — the theorem's envelope.
+    pub bound: f64,
+    /// Measured max_x ‖p̃(x) − p(x)‖_∞.
+    pub max_deviation: f64,
+    /// Mean deviation across samples.
+    pub mean_deviation: f64,
+    /// max_deviation / bound ∈ [0, 1] when the theorem holds.
+    pub tightness: f64,
+    /// Number of samples violating the bound (must be 0).
+    pub violations: usize,
+}
+
+impl PerturbationReport {
+    pub fn holds(&self) -> bool {
+        self.violations == 0
+    }
+}
+
+/// Check the bound for a single linear layer + softmax:
+/// logits = h·Wᵀ + b vs h·W̃ᵀ + b over the rows of `h`.
+///
+/// `spectral_err` is ‖W − W̃‖₂ (the caller estimates it once), `r_bound`
+/// the feature-norm bound R (Eq. 3.6).
+pub fn check_bound(
+    h: &Mat<f32>,
+    w: &Mat<f32>,
+    w_approx: &Mat<f32>,
+    bias: &[f32],
+    spectral_err: f64,
+    r_bound: f64,
+) -> PerturbationReport {
+    assert_eq!(w.shape(), w_approx.shape());
+    assert_eq!(h.cols(), w.cols());
+    let logits = add_bias(&gemm::matmul_nt(h, w), bias);
+    let logits_t = add_bias(&gemm::matmul_nt(h, w_approx), bias);
+    let p = softmax_rows(&logits);
+    let pt = softmax_rows(&logits_t);
+    let devs = max_prob_deviation(&p, &pt);
+    let stats = deviation_stats(&devs);
+    let bound = 0.5 * r_bound * spectral_err;
+    // Tolerate fp noise when counting violations: deviations are measured
+    // in f32 while the bound is analytic.
+    let tol = 1e-5;
+    let violations = devs.iter().filter(|&&d| d > bound + tol).count();
+    PerturbationReport {
+        bound,
+        max_deviation: stats.max,
+        mean_deviation: stats.mean,
+        tightness: if bound > 0.0 { stats.max / bound } else { 0.0 },
+        violations,
+    }
+}
+
+fn add_bias(logits: &Mat<f32>, bias: &[f32]) -> Mat<f32> {
+    let mut out = logits.clone();
+    if !bias.is_empty() {
+        assert_eq!(bias.len(), logits.cols());
+        for r in 0..out.rows() {
+            for (v, b) in out.row_mut(r).iter_mut().zip(bias) {
+                *v += *b;
+            }
+        }
+    }
+    out
+}
+
+/// Per-sample refinement: the theorem also bounds each sample by
+/// ½·‖ΔW·h(x)‖₂ ≤ ½·‖ΔW‖₂·‖h(x)‖₂; returns the per-sample bound using
+/// actual feature norms (tighter than the uniform R bound).
+pub fn per_sample_bounds(h: &Mat<f32>, spectral_err: f64) -> Vec<f64> {
+    (0..h.rows())
+        .map(|r| {
+            let norm = h.row(r).iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            0.5 * spectral_err * norm
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::backend::NativeEngine;
+    use crate::compress::rsi::{rsi_factorize, RsiOptions};
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::{gaussian, matrix_with_spectrum, SpectrumShape};
+
+    #[test]
+    fn bound_holds_for_rsi_compression() {
+        let mut g = GaussianSource::new(1);
+        let spec = SpectrumShape::pretrained_like().values(32);
+        let w = matrix_with_spectrum(32, 80, &spec, &mut g);
+        let h = gaussian(50, 80, 1.0, &mut g);
+        let bias = vec![0.1f32; 32];
+        for q in [1usize, 3] {
+            let f = rsi_factorize(&w, 6, &RsiOptions::with_q(q, 7), &NativeEngine);
+            let wa = f.reconstruct();
+            let err = f.spectral_error(&w);
+            let r = (0..h.rows())
+                .map(|i| h.row(i).iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt())
+                .fold(0.0f64, f64::max);
+            let rep = check_bound(&h, &w, &wa, &bias, err, r);
+            assert!(rep.holds(), "q={q}: {} violations (bound {})", rep.violations, rep.bound);
+            assert!(rep.tightness <= 1.0 + 1e-9);
+            assert!(rep.max_deviation >= rep.mean_deviation);
+        }
+    }
+
+    #[test]
+    fn identical_weights_zero_deviation() {
+        let mut g = GaussianSource::new(2);
+        let w = gaussian(8, 20, 1.0, &mut g);
+        let h = gaussian(10, 20, 1.0, &mut g);
+        let rep = check_bound(&h, &w, &w.clone(), &[], 0.0, 5.0);
+        assert_eq!(rep.max_deviation, 0.0);
+        assert!(rep.holds());
+    }
+
+    #[test]
+    fn per_sample_tighter_than_uniform() {
+        let mut g = GaussianSource::new(3);
+        let h = gaussian(20, 15, 1.0, &mut g);
+        let bounds = per_sample_bounds(&h, 2.0);
+        let r_max = (0..20)
+            .map(|i| h.row(i).iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt())
+            .fold(0.0f64, f64::max);
+        let uniform = 0.5 * 2.0 * r_max;
+        assert!(bounds.iter().all(|&b| b <= uniform + 1e-12));
+        assert!(bounds.iter().any(|&b| b < uniform));
+    }
+}

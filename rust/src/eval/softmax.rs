@@ -1,0 +1,103 @@
+//! Numerically-stable softmax (native path) and probability statistics.
+//!
+//! The native twin of the Pallas softmax kernel; the runtime integration
+//! test checks the two agree on real logits.
+
+use crate::tensor::Mat;
+
+/// Row-wise softmax.
+pub fn softmax_rows(logits: &Mat<f32>) -> Mat<f32> {
+    let (n, c) = logits.shape();
+    let mut out = Mat::zeros(n, c);
+    for r in 0..n {
+        let row = logits.row(r);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += ((v - m) as f64).exp();
+        }
+        let orow = out.row_mut(r);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (((v - m) as f64).exp() / sum) as f32;
+        }
+    }
+    out
+}
+
+/// Max-abs probability deviation between two softmax outputs —
+/// ‖p̃(x) − p(x)‖_∞ per sample (left side of Eq. 3.8).
+pub fn max_prob_deviation(p: &Mat<f32>, q: &Mat<f32>) -> Vec<f64> {
+    assert_eq!(p.shape(), q.shape());
+    (0..p.rows())
+        .map(|r| {
+            p.row(r)
+                .iter()
+                .zip(q.row(r))
+                .map(|(a, b)| (*a as f64 - *b as f64).abs())
+                .fold(0.0f64, f64::max)
+        })
+        .collect()
+}
+
+/// Distribution statistics over per-sample deviations.
+#[derive(Debug, Clone, Copy)]
+pub struct SoftmaxStats {
+    pub mean: f64,
+    pub max: f64,
+}
+
+pub fn deviation_stats(devs: &[f64]) -> SoftmaxStats {
+    if devs.is_empty() {
+        return SoftmaxStats { mean: 0.0, max: 0.0 };
+    }
+    SoftmaxStats {
+        mean: devs.iter().sum::<f64>() / devs.len() as f64,
+        max: devs.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let l = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let p = softmax_rows(&l);
+        for r in 0..2 {
+            let s: f64 = p.row(r).iter().map(|v| *v as f64).sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // Monotone in logits.
+        assert!(p.get(0, 2) > p.get(0, 1));
+    }
+
+    #[test]
+    fn stable_for_large_logits() {
+        let l = Mat::from_vec(1, 2, vec![1000.0, 999.0]);
+        let p = softmax_rows(&l);
+        assert!(p.data().iter().all(|v| v.is_finite()));
+        assert!((p.get(0, 0) as f64 - 1.0 / (1.0 + (-1.0f64).exp())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shift_invariance() {
+        let a = Mat::from_vec(1, 3, vec![0.0, 1.0, 2.0]);
+        let b = Mat::from_vec(1, 3, vec![100.0, 101.0, 102.0]);
+        let pa = softmax_rows(&a);
+        let pb = softmax_rows(&b);
+        assert!(pa.sub(&pb).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn deviations() {
+        let p = Mat::from_vec(2, 2, vec![0.5, 0.5, 0.9, 0.1]);
+        let q = Mat::from_vec(2, 2, vec![0.4, 0.6, 0.9, 0.1]);
+        let d = max_prob_deviation(&p, &q);
+        assert!((d[0] - 0.1).abs() < 1e-6);
+        assert_eq!(d[1], 0.0);
+        let s = deviation_stats(&d);
+        assert!((s.mean - 0.05).abs() < 1e-6);
+        assert!((s.max - 0.1).abs() < 1e-6);
+    }
+}

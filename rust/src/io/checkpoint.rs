@@ -1,0 +1,183 @@
+//! Checkpoint conventions on top of `.tenz`.
+//!
+//! A model checkpoint is a `.tenz` file whose keys follow
+//! `layers.<i>.weight` / `layers.<i>.bias` plus a few metadata scalars.
+//! A *compressed* checkpoint replaces `weight` with `weight.A` (C×k) and
+//! `weight.B` (k×D) — exactly the two-smaller-linear-layers rewrite of
+//! Section 3.
+
+use super::tenz::{TensorEntry, TensorFile, TenzError};
+use crate::tensor::Mat;
+
+/// Key helpers.
+pub fn weight_key(layer: &str) -> String {
+    format!("{layer}.weight")
+}
+pub fn bias_key(layer: &str) -> String {
+    format!("{layer}.bias")
+}
+pub fn factor_a_key(layer: &str) -> String {
+    format!("{layer}.weight.A")
+}
+pub fn factor_b_key(layer: &str) -> String {
+    format!("{layer}.weight.B")
+}
+
+/// A layer as stored: either dense or factored.
+#[derive(Debug, Clone)]
+pub enum StoredWeight {
+    Dense(Mat<f32>),
+    Factored { a: Mat<f32>, b: Mat<f32> },
+}
+
+impl StoredWeight {
+    /// Logical (C, D) shape of the layer.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            StoredWeight::Dense(w) => w.shape(),
+            StoredWeight::Factored { a, b } => (a.rows(), b.cols()),
+        }
+    }
+
+    /// Stored parameter count (the quantity Table 4.1's "Ratio" compares).
+    pub fn param_count(&self) -> usize {
+        match self {
+            StoredWeight::Dense(w) => w.rows() * w.cols(),
+            StoredWeight::Factored { a, b } => a.rows() * a.cols() + b.rows() * b.cols(),
+        }
+    }
+
+    /// Materialize the dense weight (W or A·B) for forward execution.
+    pub fn materialize(&self) -> Mat<f32> {
+        match self {
+            StoredWeight::Dense(w) => w.clone(),
+            StoredWeight::Factored { a, b } => crate::linalg::gemm::matmul(a, b),
+        }
+    }
+
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            StoredWeight::Dense(_) => None,
+            StoredWeight::Factored { a, .. } => Some(a.cols()),
+        }
+    }
+}
+
+/// Load the weight for `layer`, preferring factored form if present.
+pub fn load_weight(tf: &TensorFile, layer: &str) -> Result<StoredWeight, TenzError> {
+    if tf.contains(&factor_a_key(layer)) {
+        let a = tf.mat(&factor_a_key(layer))?;
+        let b = tf.mat(&factor_b_key(layer))?;
+        Ok(StoredWeight::Factored { a, b })
+    } else {
+        Ok(StoredWeight::Dense(tf.mat(&weight_key(layer))?))
+    }
+}
+
+/// Store a weight, clearing any previous representation of the same layer.
+pub fn store_weight(tf: &mut TensorFile, layer: &str, w: &StoredWeight) {
+    tf.remove(&weight_key(layer));
+    tf.remove(&factor_a_key(layer));
+    tf.remove(&factor_b_key(layer));
+    match w {
+        StoredWeight::Dense(m) => tf.insert_mat(weight_key(layer), m),
+        StoredWeight::Factored { a, b } => {
+            tf.insert_mat(factor_a_key(layer), a);
+            tf.insert_mat(factor_b_key(layer), b);
+        }
+    }
+}
+
+/// Enumerate layer prefixes present in a checkpoint, in index order.
+/// Recognizes both `<prefix>.weight` and `<prefix>.weight.A`.
+pub fn list_layers(tf: &TensorFile) -> Vec<String> {
+    let mut layers: Vec<String> = Vec::new();
+    for name in tf.names() {
+        let prefix = if let Some(p) = name.strip_suffix(".weight") {
+            p
+        } else if let Some(p) = name.strip_suffix(".weight.A") {
+            p
+        } else {
+            continue;
+        };
+        if !layers.iter().any(|l| l == prefix) {
+            layers.push(prefix.to_string());
+        }
+    }
+    layers.sort_by_key(|name| {
+        // Sort by trailing integer when present ("layers.10" after "layers.2").
+        let idx = name.rsplit('.').next().and_then(|s| s.parse::<u64>().ok());
+        (idx.is_none(), idx, name.clone())
+    });
+    layers
+}
+
+/// Store a scalar metadata value as a 1-element f32 tensor.
+pub fn store_scalar(tf: &mut TensorFile, key: &str, v: f32) {
+    tf.insert(key, TensorEntry::from_f32(vec![1], &[v]));
+}
+
+/// Read a scalar metadata value.
+pub fn load_scalar(tf: &TensorFile, key: &str) -> Result<f32, TenzError> {
+    Ok(tf.vec_f32(key)?[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut g = GaussianSource::new(1);
+        let w = gaussian(4, 6, 1.0, &mut g);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "layers.0", &StoredWeight::Dense(w.clone()));
+        let back = load_weight(&tf, "layers.0").unwrap();
+        assert_eq!(back.shape(), (4, 6));
+        assert_eq!(back.param_count(), 24);
+        assert_eq!(back.materialize(), w);
+        assert_eq!(back.rank(), None);
+    }
+
+    #[test]
+    fn factored_roundtrip_and_replacement() {
+        let mut g = GaussianSource::new(2);
+        let w = gaussian(4, 6, 1.0, &mut g);
+        let a = gaussian(4, 2, 1.0, &mut g);
+        let b = gaussian(2, 6, 1.0, &mut g);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "l", &StoredWeight::Dense(w));
+        store_weight(&mut tf, "l", &StoredWeight::Factored { a: a.clone(), b: b.clone() });
+        // Dense key must be gone; factored load wins.
+        assert!(!tf.contains("l.weight"));
+        let back = load_weight(&tf, "l").unwrap();
+        assert_eq!(back.param_count(), 4 * 2 + 2 * 6);
+        assert_eq!(back.rank(), Some(2));
+        let m = back.materialize();
+        assert_eq!(m.shape(), (4, 6));
+    }
+
+    #[test]
+    fn layer_listing_numeric_order() {
+        let mut tf = TensorFile::new();
+        for i in [0usize, 2, 10, 1] {
+            store_weight(&mut tf, &format!("layers.{i}"), &StoredWeight::Dense(Mat::zeros(2, 2)));
+        }
+        store_weight(
+            &mut tf,
+            "head",
+            &StoredWeight::Factored { a: Mat::zeros(2, 1), b: Mat::zeros(1, 2) },
+        );
+        let layers = list_layers(&tf);
+        assert_eq!(layers, vec!["layers.0", "layers.1", "layers.2", "layers.10", "head"]);
+    }
+
+    #[test]
+    fn scalars() {
+        let mut tf = TensorFile::new();
+        store_scalar(&mut tf, "meta.alpha", 0.4);
+        assert_eq!(load_scalar(&tf, "meta.alpha").unwrap(), 0.4);
+    }
+}

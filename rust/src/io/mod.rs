@@ -1,0 +1,8 @@
+//! Binary I/O: the `.tenz` tensor-container format (our safetensors
+//! stand-in, mirrored by `python/compile/tenz.py`), checkpoint helpers,
+//! and report file output.
+
+pub mod checkpoint;
+pub mod tenz;
+
+pub use tenz::{DType, TensorEntry, TensorFile};

@@ -1,0 +1,369 @@
+//! `.tenz` — a minimal tensor container format.
+//!
+//! The offline crate universe has no safetensors/serde, and the build-time
+//! Python side must hand checkpoints, eval sets, and golden factorizations
+//! to the Rust coordinator. `.tenz` is the interchange: a little-endian
+//! sequence of named n-d arrays. Layout:
+//!
+//! ```text
+//! magic  "TENZ0001"                       8 bytes
+//! count  u32
+//! entry* :
+//!   name_len u16 | name utf-8
+//!   dtype    u8   (0=f32, 1=f64, 2=i32)
+//!   ndim     u8
+//!   dims     u64 × ndim
+//!   payload  raw little-endian values (row-major)
+//! ```
+//!
+//! The Python writer lives in `python/compile/tenz.py`; cross-language
+//! round-trip is covered by `python/tests/test_tenz.py` +
+//! `rust/tests/tenz_interop.rs`.
+
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+use thiserror::Error;
+
+const MAGIC: &[u8; 8] = b"TENZ0001";
+
+#[derive(Debug, Error)]
+pub enum TenzError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic (not a .tenz file)")]
+    BadMagic,
+    #[error("corrupt entry: {0}")]
+    Corrupt(String),
+    #[error("tensor {0:?} not found")]
+    NotFound(String),
+    #[error("tensor {name:?} has dtype {got:?}, wanted {want:?}")]
+    WrongDType { name: String, got: DType, want: DType },
+    #[error("tensor {name:?} has {ndim} dims, wanted a matrix")]
+    NotAMatrix { name: String, ndim: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+}
+
+impl DType {
+    fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I32 => 2,
+        }
+    }
+    fn from_tag(t: u8) -> Option<Self> {
+        match t {
+            0 => Some(DType::F32),
+            1 => Some(DType::F64),
+            2 => Some(DType::I32),
+            _ => None,
+        }
+    }
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+        }
+    }
+}
+
+/// One named array.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian payload.
+    pub bytes: Vec<u8>,
+}
+
+impl TensorEntry {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn from_f32(dims: Vec<usize>, vals: &[f32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        TensorEntry { dtype: DType::F32, dims, bytes }
+    }
+
+    pub fn from_i32(dims: Vec<usize>, vals: &[i32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        TensorEntry { dtype: DType::I32, dims, bytes }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>, TenzError> {
+        match self.dtype {
+            DType::F32 => Ok(self
+                .bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            DType::F64 => Ok(self
+                .bytes
+                .chunks_exact(8)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect()),
+            DType::I32 => Err(TenzError::WrongDType {
+                name: String::new(),
+                got: DType::I32,
+                want: DType::F32,
+            }),
+        }
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>, TenzError> {
+        if self.dtype != DType::I32 {
+            return Err(TenzError::WrongDType {
+                name: String::new(),
+                got: self.dtype,
+                want: DType::I32,
+            });
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Debug, Clone, Default)]
+pub struct TensorFile {
+    entries: BTreeMap<String, TensorEntry>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+    pub fn get(&self, name: &str) -> Option<&TensorEntry> {
+        self.entries.get(name)
+    }
+    pub fn insert(&mut self, name: impl Into<String>, entry: TensorEntry) {
+        self.entries.insert(name.into(), entry);
+    }
+    pub fn remove(&mut self, name: &str) -> Option<TensorEntry> {
+        self.entries.remove(name)
+    }
+
+    /// Insert a matrix as f32.
+    pub fn insert_mat(&mut self, name: impl Into<String>, m: &Mat<f32>) {
+        self.insert(name, TensorEntry::from_f32(vec![m.rows(), m.cols()], m.data()));
+    }
+
+    /// Fetch a 2-D f32 tensor as a `Mat`.
+    pub fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
+        let e = self.entries.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        if e.dims.len() != 2 {
+            return Err(TenzError::NotAMatrix { name: name.into(), ndim: e.dims.len() });
+        }
+        let vals = e.to_f32().map_err(|err| match err {
+            TenzError::WrongDType { got, want, .. } => {
+                TenzError::WrongDType { name: name.into(), got, want }
+            }
+            other => other,
+        })?;
+        Ok(Mat::from_vec(e.dims[0], e.dims[1], vals))
+    }
+
+    /// Fetch a 1-D f32 tensor.
+    pub fn vec_f32(&self, name: &str) -> Result<Vec<f32>, TenzError> {
+        let e = self.entries.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        e.to_f32()
+    }
+
+    /// Fetch a 1-D i32 tensor (labels).
+    pub fn vec_i32(&self, name: &str) -> Result<Vec<i32>, TenzError> {
+        let e = self.entries.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        e.to_i32()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, e) in &self.entries {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(e.dtype.tag());
+            out.push(e.dims.len() as u8);
+            for d in &e.dims {
+                out.extend_from_slice(&(*d as u64).to_le_bytes());
+            }
+            out.extend_from_slice(&e.bytes);
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, TenzError> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8], TenzError> {
+            if *pos + n > buf.len() {
+                return Err(TenzError::Corrupt(format!(
+                    "truncated at offset {} (need {n} bytes of {})",
+                    *pos,
+                    buf.len()
+                )));
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != MAGIC {
+            return Err(TenzError::BadMagic);
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|_| TenzError::Corrupt("name not utf-8".into()))?;
+            let dtype = DType::from_tag(take(&mut pos, 1)?[0])
+                .ok_or_else(|| TenzError::Corrupt(format!("bad dtype in {name}")))?;
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let payload = take(&mut pos, numel * dtype.size())?.to_vec();
+            entries.insert(name, TensorEntry { dtype, dims, bytes: payload });
+        }
+        Ok(TensorFile { entries })
+    }
+
+    /// Write to a file (atomically via a temp sibling).
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<(), TenzError> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tenz.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn read(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())?.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    /// Total payload bytes (storage accounting).
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.bytes.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut tf = TensorFile::new();
+        tf.insert("w1", TensorEntry::from_f32(vec![2, 3], &[1., 2., 3., 4., 5., 6.]));
+        tf.insert("labels", TensorEntry::from_i32(vec![4], &[0, 5, -3, 999]));
+        let back = TensorFile::from_bytes(&tf.to_bytes()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.vec_i32("labels").unwrap(), vec![0, 5, -3, 999]);
+        let m = back.mat("w1").unwrap();
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join(format!("tenz_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.tenz");
+        let mut tf = TensorFile::new();
+        let m = Mat::from_fn(7, 5, |r, c| (r * 5 + c) as f32 * 0.5);
+        tf.insert_mat("layer.weight", &m);
+        tf.write(&path).unwrap();
+        let back = TensorFile::read(&path).unwrap();
+        assert_eq!(back.mat("layer.weight").unwrap(), m);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_magic() {
+        assert!(matches!(TensorFile::from_bytes(b"NOTMAGIC\0\0\0\0"), Err(TenzError::BadMagic)));
+    }
+
+    #[test]
+    fn truncated_payload() {
+        let mut tf = TensorFile::new();
+        tf.insert("x", TensorEntry::from_f32(vec![10], &[0.0; 10]));
+        let bytes = tf.to_bytes();
+        let cut = &bytes[..bytes.len() - 5];
+        assert!(matches!(TensorFile::from_bytes(cut), Err(TenzError::Corrupt(_))));
+    }
+
+    #[test]
+    fn missing_and_wrong_type() {
+        let mut tf = TensorFile::new();
+        tf.insert("ints", TensorEntry::from_i32(vec![2], &[1, 2]));
+        assert!(matches!(tf.mat("nope"), Err(TenzError::NotFound(_))));
+        assert!(tf.vec_f32("ints").is_err());
+        assert!(tf.vec_i32("ints").is_ok());
+    }
+
+    #[test]
+    fn f64_reads_as_f32() {
+        let mut tf = TensorFile::new();
+        let mut bytes = Vec::new();
+        for v in [1.5f64, -2.25] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        tf.insert("d", TensorEntry { dtype: DType::F64, dims: vec![2], bytes });
+        assert_eq!(tf.vec_f32("d").unwrap(), vec![1.5f32, -2.25]);
+    }
+
+    #[test]
+    fn ordering_stable() {
+        let mut tf = TensorFile::new();
+        tf.insert("b", TensorEntry::from_f32(vec![1], &[1.0]));
+        tf.insert("a", TensorEntry::from_f32(vec![1], &[2.0]));
+        let names: Vec<_> = tf.names().collect();
+        assert_eq!(names, vec!["a", "b"]); // BTreeMap: deterministic bytes
+        assert_eq!(tf.to_bytes(), TensorFile::from_bytes(&tf.to_bytes()).unwrap().to_bytes());
+    }
+}

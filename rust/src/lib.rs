@@ -1,0 +1,68 @@
+//! # rsi-compress
+//!
+//! Low-rank compression of pretrained models via **randomized subspace
+//! iteration (RSI)** — a production-shaped reproduction of
+//! Pourkamali-Anaraki, *"Low-Rank Compression of Pretrained Models via
+//! Randomized Subspace Iteration"* (CS.LG 2026).
+//!
+//! The crate is the L3 (coordination) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the VMEM-tiled
+//!   GEMM hot spot of the RSI power iteration, plus a fused softmax head.
+//! * **L2** — JAX graphs (`python/compile/model.py`): the RSI pipeline and
+//!   the model forward passes, lowered once to HLO text by
+//!   `python/compile/aot.py` (`make artifacts`).
+//! * **L3** — this crate: checkpoint I/O, the compression planner, a
+//!   work-queue pipeline over layers, PJRT execution of the AOT artifacts,
+//!   the evaluation engine, and the paper's benchmark harness.
+//!
+//! Python never runs on the request path; after `make artifacts` the `rsic`
+//! binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use rsi_compress::compress::{CompressionPlan, Method, RsiOptions};
+//! use rsi_compress::io::tenz::TensorFile;
+//! use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+//!
+//! let ckpt = TensorFile::read("artifacts/data/synthvgg.tenz").unwrap();
+//! let plan = CompressionPlan::uniform_alpha(0.4, Method::Rsi(RsiOptions { q: 4, ..Default::default() }));
+//! let pipe = Pipeline::new(PipelineConfig::default()).unwrap();
+//! let report = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod io;
+pub mod linalg;
+pub mod model;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string baked into reports and the CLI banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default location of AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$RSIC_ARTIFACTS` overrides the
+/// default `artifacts/` (relative to the current directory).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("RSIC_ARTIFACTS") {
+        Ok(v) if !v.is_empty() => std::path::PathBuf::from(v),
+        _ => std::path::PathBuf::from(ARTIFACTS_DIR),
+    }
+}

@@ -1,0 +1,193 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Used to finalize RSI (Algorithm 3.1 lines 7–8): the SVD of the small
+//! k×D matrix Yᵀ is recovered from the eigendecomposition of its k×k Gram
+//! matrix, so the only dense eigenproblem in the system is k×k. Jacobi is
+//! O(n³) per sweep but unconditionally robust and embarrassingly simple to
+//! verify — the right trade for a from-scratch substrate.
+
+use crate::tensor::Mat;
+
+/// Eigendecomposition result, sorted by descending eigenvalue.
+#[derive(Debug, Clone)]
+pub struct Eigh {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Column i of `vectors` is the eigenvector for `values[i]` (n×n).
+    pub vectors: Mat<f64>,
+}
+
+/// Cyclic Jacobi on a symmetric matrix (upper triangle read).
+/// `tol` is the off-diagonal stopping threshold relative to ‖A‖_F;
+/// `max_sweeps` bounds the work.
+pub fn eigh(a: &Mat<f64>, tol: f64, max_sweeps: usize) -> Eigh {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "eigh needs a square matrix");
+    let mut m = a.clone();
+    let mut v = Mat::<f64>::eye(n);
+    if n == 0 {
+        return Eigh { values: vec![], vectors: v };
+    }
+    let fro = m.fro_norm().max(f64::MIN_POSITIVE);
+    let thresh = tol * fro;
+
+    for _sweep in 0..max_sweeps {
+        // Largest off-diagonal magnitude this sweep.
+        let mut off_max = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                off_max = off_max.max(apq.abs());
+                if apq.abs() <= thresh * 1e-3 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // Rotation angle: tan(2θ) = 2 a_pq / (a_qq − a_pp).
+                let theta = 0.5 * (aqq - app);
+                let t = if theta.abs() < 1e-300 {
+                    1.0f64.copysign(apq)
+                } else {
+                    let sign = if theta >= 0.0 { 1.0 } else { -1.0 };
+                    sign * apq / (theta.abs() + (theta * theta + apq * apq).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Apply rotation J(p,q,θ)ᵀ M J(p,q,θ) — rows/cols p and q.
+                for i in 0..n {
+                    let mip = m.get(i, p);
+                    let miq = m.get(i, q);
+                    m.set(i, p, c * mip - s * miq);
+                    m.set(i, q, s * mip + c * miq);
+                }
+                for i in 0..n {
+                    let mpi = m.get(p, i);
+                    let mqi = m.get(q, i);
+                    m.set(p, i, c * mpi - s * mqi);
+                    m.set(q, i, s * mpi + c * mqi);
+                }
+                // Accumulate eigenvectors.
+                for i in 0..n {
+                    let vip = v.get(i, p);
+                    let viq = v.get(i, q);
+                    v.set(i, p, c * vip - s * viq);
+                    v.set(i, q, s * vip + c * viq);
+                }
+            }
+        }
+        if off_max <= thresh {
+            break;
+        }
+    }
+
+    // Collect and sort descending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let vals: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    idx.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
+    let mut vectors = Mat::<f64>::zeros(n, n);
+    for (new_c, &old_c) in idx.iter().enumerate() {
+        for r in 0..n {
+            vectors.set(r, new_c, v.get(r, old_c));
+        }
+    }
+    Eigh { values, vectors }
+}
+
+/// Convenience: default tolerance/sweeps good to f64 roundoff for n ≤ ~2k.
+pub fn eigh_default(a: &Mat<f64>) -> Eigh {
+    eigh(a, 1e-12, 30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    fn random_sym(n: usize, seed: u64) -> Mat<f64> {
+        let mut g = GaussianSource::new(seed);
+        let a = gaussian(n, n, 1.0, &mut g).cast::<f64>();
+        let at = a.transpose();
+        let mut s = a.clone();
+        s.axpy(1.0, &at);
+        s.scale(0.5);
+        s
+    }
+
+    #[test]
+    fn diagonal_is_fixed_point() {
+        let d = Mat::<f64>::diag(&[5.0, 3.0, 1.0]);
+        let e = eigh_default(&d);
+        assert_eq!(e.values, vec![5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn two_by_two_analytic() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let m = Mat::<f64>::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = eigh_default(&m);
+        assert!((e.values[0] - 3.0).abs() < 1e-10);
+        assert!((e.values[1] - 1.0).abs() < 1e-10);
+        // Eigenvector for 3 is (1,1)/√2 up to sign.
+        let v0: Vec<f64> = e.vectors.col(0);
+        assert!((v0[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-8);
+        assert!((v0[0] - v0[1]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        let s = random_sym(24, 1);
+        let e = eigh_default(&s);
+        // V diag(λ) Vᵀ = S.
+        let mut vd = e.vectors.clone();
+        for c in 0..24 {
+            for r in 0..24 {
+                let val = vd.get(r, c) * e.values[c];
+                vd.set(r, c, val);
+            }
+        }
+        let back = matmul(&vd, &e.vectors.transpose());
+        assert!(back.sub(&s).max_abs() < 1e-8, "err {}", back.sub(&s).max_abs());
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        let s = random_sym(16, 2);
+        let e = eigh_default(&s);
+        let vtv = matmul_tn(&e.vectors, &e.vectors);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.get(i, j) - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn values_sorted_descending() {
+        let s = random_sym(20, 3);
+        let e = eigh_default(&s);
+        assert!(e.values.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let s = random_sym(15, 4);
+        let tr: f64 = (0..15).map(|i| s.get(i, i)).sum();
+        let e = eigh_default(&s);
+        let sum: f64 = e.values.iter().sum();
+        assert!((tr - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e = eigh_default(&Mat::<f64>::zeros(0, 0));
+        assert!(e.values.is_empty());
+        let one = Mat::<f64>::from_vec(1, 1, vec![7.5]);
+        let e1 = eigh_default(&one);
+        assert_eq!(e1.values, vec![7.5]);
+    }
+}

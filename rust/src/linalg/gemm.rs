@@ -1,0 +1,384 @@
+//! Blocked, multi-threaded GEMM for the native backend.
+//!
+//! Loop orders are chosen per orientation so the innermost loop is always a
+//! contiguous AXPY/dot over rows of the operands (auto-vectorizable):
+//!
+//! * `matmul`   (A·B):   ikj — C[i,:] += A[i,k] * B[k,:]
+//! * `matmul_nt`(A·Bᵀ):  dot(A[i,:], B[j,:])
+//! * `matmul_tn`(Aᵀ·B):  kij — C[i,:] += A[k,i] * B[k,:]
+//!
+//! Work is partitioned over output rows across `std::thread` scopes; we
+//! only spawn when the flop count clears a threshold so small multiplies
+//! stay single-threaded.
+
+use crate::tensor::{Mat, Scalar};
+use crate::util::default_threads;
+
+/// Below this many fused multiply-adds we stay single-threaded.
+const PAR_FLOP_THRESHOLD: usize = 4 << 20;
+
+fn par_rows(rows: usize, flops: usize) -> usize {
+    if flops < PAR_FLOP_THRESHOLD {
+        return 1;
+    }
+    default_threads().min(rows).max(1)
+}
+
+/// C = A · B. Panics on inner-dimension mismatch.
+pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul: {m}x{ka} · {kb}x{n}");
+    let mut c = Mat::zeros(m, n);
+    let nthreads = par_rows(m, m * ka * n);
+    if nthreads <= 1 {
+        matmul_rows(a, b, c.data_mut(), 0, m);
+        return c;
+    }
+    let chunk = m.div_ceil(nthreads);
+    let cdata = c.data_mut();
+    std::thread::scope(|s| {
+        for (t, cslice) in cdata.chunks_mut(chunk * n).enumerate() {
+            let lo = t * chunk;
+            let hi = (lo + cslice.len() / n).min(m);
+            s.spawn(move || matmul_rows(a, b, cslice, lo, hi));
+        }
+    });
+    c
+}
+
+/// K-panel height: sized so a (KB x n) panel of B stays resident in L2
+/// while every row of A streams against it (perf pass iteration 1: the
+/// unblocked ikj loop re-streamed all of B per output row and was
+/// memory-bound at ~4.5 GFLOP/s on this 1-core testbed; see
+/// EXPERIMENTS.md section Perf).
+const KB: usize = 256;
+
+/// Rows [lo, hi) of C = A·B, writing into `cslice` (rows relative to lo).
+fn matmul_rows<T: Scalar>(a: &Mat<T>, b: &Mat<T>, cslice: &mut [T], lo: usize, hi: usize) {
+    let k = a.cols();
+    let n = b.cols();
+    for p0 in (0..k).step_by(KB) {
+        let p1 = (p0 + KB).min(k);
+        // 4-row micro-kernel (perf pass iteration 2): each B row loaded
+        // from cache feeds four C-row accumulators, quartering B traffic
+        // and giving the autovectorizer four independent FMA streams.
+        let mut i = lo;
+        while i + 4 <= hi {
+            let base = (i - lo) * n;
+            let (head, rest) = cslice[base..].split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3full) = rest.split_at_mut(n);
+            let r3 = &mut r3full[..n];
+            let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+            for p in p0..p1 {
+                let (x0, x1, x2, x3) = (a0[p], a1[p], a2[p], a3[p]);
+                let brow = b.row(p);
+                for j in 0..n {
+                    let bv = brow[j];
+                    head[j] += x0 * bv;
+                    r1[j] += x1 * bv;
+                    r2[j] += x2 * bv;
+                    r3[j] += x3 * bv;
+                }
+            }
+            i += 4;
+        }
+        while i < hi {
+            let crow = &mut cslice[(i - lo) * n..(i - lo + 1) * n];
+            let arow = a.row(i);
+            for p in p0..p1 {
+                let aip = arow[p];
+                if aip == T::zero() {
+                    continue;
+                }
+                let brow = b.row(p);
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += aip * *bv;
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+/// C = A · Bᵀ.
+pub fn matmul_nt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let (m, ka) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(ka, kb, "matmul_nt: {m}x{ka} · ({n}x{kb})ᵀ");
+    let mut c = Mat::zeros(m, n);
+    let nthreads = par_rows(m, m * ka * n);
+    let chunk = if nthreads <= 1 { m.max(1) } else { m.div_ceil(nthreads) };
+    let cdata = c.data_mut();
+    std::thread::scope(|s| {
+        for (t, cslice) in cdata.chunks_mut(chunk * n.max(1)).enumerate() {
+            let lo = t * chunk;
+            let rows = if n == 0 { 0 } else { cslice.len() / n };
+            let hi = (lo + rows).min(m);
+            s.spawn(move || {
+                for i in lo..hi {
+                    let arow = a.row(i);
+                    let crow = &mut cslice[(i - lo) * n..(i - lo + 1) * n];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        let brow = b.row(j);
+                        let mut acc = T::zero();
+                        for (x, y) in arow.iter().zip(brow.iter()) {
+                            acc += *x * *y;
+                        }
+                        *cv = acc;
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// C = Aᵀ · B.
+pub fn matmul_tn<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let (ka, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul_tn: ({ka}x{m})ᵀ · {kb}x{n}");
+    let mut c = Mat::zeros(m, n);
+    let nthreads = par_rows(m, m * ka * n);
+    let chunk = if nthreads <= 1 { m.max(1) } else { m.div_ceil(nthreads) };
+    let cdata = c.data_mut();
+    std::thread::scope(|s| {
+        for (t, cslice) in cdata.chunks_mut(chunk * n.max(1)).enumerate() {
+            let ilo = t * chunk;
+            let rows = if n == 0 { 0 } else { cslice.len() / n };
+            let ihi = (ilo + rows).min(m);
+            s.spawn(move || {
+                for p0 in (0..ka).step_by(KB) {
+                    let p1 = (p0 + KB).min(ka);
+                    // Same 4-row micro-kernel as matmul_rows, reading the
+                    // four A coefficients from one (transposed) row.
+                    let mut i = ilo;
+                    while i + 4 <= ihi {
+                        let base = (i - ilo) * n;
+                        let (c0, rest) = cslice[base..].split_at_mut(n);
+                        let (c1, rest) = rest.split_at_mut(n);
+                        let (c2, c3full) = rest.split_at_mut(n);
+                        let c3 = &mut c3full[..n];
+                        for p in p0..p1 {
+                            let arow = a.row(p);
+                            let (x0, x1, x2, x3) =
+                                (arow[i], arow[i + 1], arow[i + 2], arow[i + 3]);
+                            let brow = b.row(p);
+                            for j in 0..n {
+                                let bv = brow[j];
+                                c0[j] += x0 * bv;
+                                c1[j] += x1 * bv;
+                                c2[j] += x2 * bv;
+                                c3[j] += x3 * bv;
+                            }
+                        }
+                        i += 4;
+                    }
+                    while i < ihi {
+                        let crow = &mut cslice[(i - ilo) * n..(i - ilo + 1) * n];
+                        for p in p0..p1 {
+                            let api = a.row(p)[i];
+                            if api == T::zero() {
+                                continue;
+                            }
+                            let brow = b.row(p);
+                            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                                *cv += api * *bv;
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Gram matrix G = Aᵀ·A accumulated in f64 (symmetrized), returned in T.
+/// Used by CholeskyQR and the Gram-based SVD where f32 accumulation error
+/// would square into the factorization.
+pub fn gram_tn_f64<T: Scalar>(a: &Mat<T>) -> Mat<f64> {
+    let (m, n) = a.shape();
+    let mut g = Mat::<f64>::zeros(n, n);
+    for p in 0..m {
+        let row = a.row(p);
+        for i in 0..n {
+            let v = row[i].as_f64();
+            if v == 0.0 {
+                continue;
+            }
+            let grow = g.row_mut(i);
+            for j in i..n {
+                grow[j] += v * row[j].as_f64();
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            let v = g.get(j, i);
+            g.set(i, j, v);
+        }
+    }
+    g
+}
+
+/// Gram matrix G = A·Aᵀ accumulated in f64. Rows-of-A inner products;
+/// threaded over the upper triangle.
+pub fn gram_nt_f64<T: Scalar>(a: &Mat<T>) -> Mat<f64> {
+    let (m, _n) = a.shape();
+    let mut g = Mat::<f64>::zeros(m, m);
+    let nthreads = par_rows(m, m * m * a.cols() / 2);
+    let chunk = m.div_ceil(nthreads.max(1)).max(1);
+    let gdata = g.data_mut();
+    std::thread::scope(|s| {
+        for (t, gslice) in gdata.chunks_mut(chunk * m).enumerate() {
+            let ilo = t * chunk;
+            let ihi = (ilo + gslice.len() / m).min(m);
+            s.spawn(move || {
+                for i in ilo..ihi {
+                    let ri = a.row(i);
+                    for j in 0..m {
+                        if j < i {
+                            continue; // fill upper triangle; mirror later
+                        }
+                        let rj = a.row(j);
+                        let mut acc = 0.0f64;
+                        for (x, y) in ri.iter().zip(rj.iter()) {
+                            acc += x.as_f64() * y.as_f64();
+                        }
+                        gslice[(i - ilo) * m + j] = acc;
+                    }
+                }
+            });
+        }
+    });
+    for i in 0..m {
+        for j in 0..i {
+            let v = g.get(j, i);
+            g.set(i, j, v);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    fn naive<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = T::zero();
+                for p in 0..a.cols() {
+                    acc += a.get(i, p) * b.get(p, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat<f32>, b: &Mat<f32>, tol: f64) {
+        assert_eq!(a.shape(), b.shape());
+        let d = a.sub(b).max_abs();
+        assert!(d <= tol, "max abs diff {d} > {tol}");
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut g = GaussianSource::new(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 48, 31)] {
+            let a = gaussian(m, k, 1.0, &mut g);
+            let b = gaussian(k, n, 1.0, &mut g);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches() {
+        let mut g = GaussianSource::new(2);
+        let a = gaussian(13, 21, 1.0, &mut g);
+        let b = gaussian(17, 21, 1.0, &mut g);
+        assert_close(&matmul_nt(&a, &b), &naive(&a, &b.transpose()), 1e-3);
+    }
+
+    #[test]
+    fn matmul_tn_matches() {
+        let mut g = GaussianSource::new(3);
+        let a = gaussian(21, 13, 1.0, &mut g);
+        let b = gaussian(21, 17, 1.0, &mut g);
+        assert_close(&matmul_tn(&a, &b), &naive(&a.transpose(), &b), 1e-3);
+    }
+
+    #[test]
+    fn threaded_path_matches_single() {
+        // Big enough to clear PAR_FLOP_THRESHOLD.
+        let mut g = GaussianSource::new(4);
+        let a = gaussian(256, 300, 1.0, &mut g);
+        let b = gaussian(300, 128, 1.0, &mut g);
+        let c = matmul(&a, &b);
+        // Spot-check against naive dots.
+        for &(i, j) in &[(0, 0), (255, 127), (100, 64), (17, 93)] {
+            let mut acc = 0.0f64;
+            for p in 0..300 {
+                acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+            }
+            assert!((c.get(i, j) as f64 - acc).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn identity_neutral() {
+        let mut g = GaussianSource::new(5);
+        let a = gaussian(10, 10, 1.0, &mut g);
+        let i = Mat::<f32>::eye(10);
+        assert_close(&matmul(&a, &i), &a, 1e-6);
+        assert_close(&matmul(&i, &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut g = GaussianSource::new(6);
+        let a = gaussian(40, 12, 1.0, &mut g);
+        let gt = gram_tn_f64(&a);
+        let want = matmul_tn(&a, &a);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((gt.get(i, j) - want.get(i, j) as f64).abs() < 1e-3);
+            }
+        }
+        let gn = gram_nt_f64(&a);
+        let want2 = matmul_nt(&a, &a);
+        for i in 0..40 {
+            for j in 0..40 {
+                assert!((gn.get(i, j) - want2.get(i, j) as f64).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_symmetric() {
+        let mut g = GaussianSource::new(7);
+        let a = gaussian(33, 9, 1.0, &mut g);
+        let gt = gram_tn_f64(&a);
+        for i in 0..9 {
+            for j in 0..9 {
+                assert_eq!(gt.get(i, j), gt.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dimension_mismatch_panics() {
+        let a = Mat::<f32>::zeros(2, 3);
+        let b = Mat::<f32>::zeros(4, 2);
+        let _ = matmul(&a, &b);
+    }
+}

@@ -1,0 +1,30 @@
+//! Dense linear algebra substrate, implemented from scratch.
+//!
+//! The offline crate universe has no LAPACK/BLAS bindings and the exported
+//! HLO may not contain LAPACK custom-calls (xla_extension 0.5.1 cannot run
+//! them), so every factorization this system needs is implemented here:
+//!
+//! * [`gemm`] — blocked, multi-threaded matrix multiply (all transpose
+//!   orientations). The native fallback for the Pallas GEMM artifacts.
+//! * [`qr`] — Householder thin QR: the per-iteration orthonormalization of
+//!   Algorithm 3.1 in the `xla-stepped` and `native` backends.
+//! * [`chol`] — Cholesky, triangular solves, and CholeskyQR2 (the
+//!   matmul-rich QR alternative benchmarked in `ablation_ortho`).
+//! * [`eigh`] — cyclic Jacobi symmetric eigensolver: finalizes RSI factors
+//!   (SVD of the small k×D matrix via its k×k Gram).
+//! * [`svd`] — exact SVD baselines: one-sided Jacobi (reference grade) and
+//!   a Gram-based fast path (the paper's "exact SVD" timing baseline).
+//! * [`norms`] — power-iteration spectral norms, including the residual
+//!   operator ‖W − A·B‖₂ evaluated without forming W − A·B.
+
+pub mod chol;
+pub mod eigh;
+pub mod gemm;
+pub mod norms;
+pub mod qr;
+pub mod svd;
+
+pub use gemm::{matmul, matmul_nt, matmul_tn};
+pub use norms::spectral_norm;
+pub use qr::qr_thin;
+pub use svd::{svd_jacobi, svd_via_gram, Svd};

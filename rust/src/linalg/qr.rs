@@ -1,0 +1,217 @@
+//! Householder thin QR.
+//!
+//! Algorithm 3.1 orthonormalizes the sketch after every application of W
+//! (line 4). In the `native` and `xla-stepped` backends that QR runs here:
+//! classic Householder reflections, accumulated in f64 for stability, thin
+//! factors returned in the caller's precision.
+//!
+//! Cost is O(m·n²) — negligible next to the O(C·D·k) GEMMs when k ≪ D,
+//! which is exactly why the coordinator keeps QR native while shipping the
+//! GEMMs to the XLA artifacts.
+
+use crate::tensor::{Mat, Scalar};
+
+/// Thin QR of an m×n matrix with m ≥ n: returns (Q m×n with orthonormal
+/// columns, R n×n upper triangular with non-negative diagonal).
+pub fn qr_thin<T: Scalar>(a: &Mat<T>) -> (Mat<T>, Mat<T>) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin requires rows >= cols, got {m}x{n}");
+    // f64 working copy, row-major.
+    let mut w: Vec<f64> = a.data().iter().map(|v| v.as_f64()).collect();
+    // Householder vectors are stored below the diagonal of `w`; the scalar
+    // factors tau and the R diagonal go in side arrays.
+    let mut tau = vec![0.0f64; n];
+    let mut rdiag = vec![0.0f64; n];
+
+    for j in 0..n {
+        // Column norm of w[j..m, j].
+        let mut norm2 = 0.0;
+        for i in j..m {
+            let v = w[i * n + j];
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            tau[j] = 0.0;
+            rdiag[j] = 0.0;
+            continue;
+        }
+        let x0 = w[j * n + j];
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1; normalize so v[0] = 1 (LAPACK convention).
+        let v0 = x0 - alpha;
+        // tau = -v0 / alpha satisfies H = I - tau v vᵀ with v[0]=1... use
+        // the standard 2/(vᵀv) form instead: store unnormalized v.
+        let mut vnorm2 = v0 * v0;
+        for i in j + 1..m {
+            let v = w[i * n + j];
+            vnorm2 += v * v;
+        }
+        w[j * n + j] = v0;
+        tau[j] = if vnorm2 > 0.0 { 2.0 / vnorm2 } else { 0.0 };
+        rdiag[j] = alpha;
+
+        // Apply H to the remaining columns: A[:, c] -= tau * v (vᵀ A[:, c]).
+        for c in j + 1..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += w[i * n + j] * w[i * n + c];
+            }
+            let s = tau[j] * dot;
+            for i in j..m {
+                w[i * n + c] -= s * w[i * n + j];
+            }
+        }
+    }
+
+    // Extract R (upper triangle; diagonal from rdiag).
+    let mut r = Mat::<T>::zeros(n, n);
+    for i in 0..n {
+        r.set(i, i, T::from_f64(rdiag[i]));
+        for j in i + 1..n {
+            r.set(i, j, T::from_f64(w[i * n + j]));
+        }
+    }
+
+    // Build thin Q = H_0 H_1 ... H_{n-1} · [I_n; 0] by applying reflectors
+    // in reverse to the identity block.
+    let mut q = vec![0.0f64; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for j in (0..n).rev() {
+        if tau[j] == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += w[i * n + j] * q[i * n + c];
+            }
+            let s = tau[j] * dot;
+            for i in j..m {
+                q[i * n + c] -= s * w[i * n + j];
+            }
+        }
+    }
+
+    // Fix signs so R has a non-negative diagonal (flip matching Q column).
+    for j in 0..n {
+        if rdiag[j] < 0.0 {
+            for i in 0..m {
+                q[i * n + j] = -q[i * n + j];
+            }
+            for c in j..n {
+                let v = r.get(j, c);
+                r.set(j, c, T::from_f64(-v.as_f64()));
+            }
+        }
+    }
+
+    let qm = Mat::from_vec(m, n, q.iter().map(|v| T::from_f64(*v)).collect());
+    (qm, r)
+}
+
+/// Orthonormalize the columns of `a` in place of a full QR when R is not
+/// needed (Algorithm 3.1 line 4 discards R).
+pub fn orthonormalize<T: Scalar>(a: &Mat<T>) -> Mat<T> {
+    qr_thin(a).0
+}
+
+/// Max deviation from orthonormality ‖QᵀQ − I‖_max — a test/diagnostic
+/// metric also reported by the perf harness for the Newton–Schulz path.
+pub fn ortho_error<T: Scalar>(q: &Mat<T>) -> f64 {
+    let n = q.cols();
+    let g = super::gemm::gram_tn_f64(q);
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.get(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut g = GaussianSource::new(1);
+        for (m, n) in [(4, 4), (10, 3), (50, 20), (33, 1)] {
+            let a = gaussian(m, n, 1.0, &mut g);
+            let (q, r) = qr_thin(&a);
+            assert_eq!(q.shape(), (m, n));
+            assert_eq!(r.shape(), (n, n));
+            let qr = matmul(&q, &r);
+            let err = qr.sub(&a).max_abs();
+            assert!(err < 1e-4, "{m}x{n}: reconstruction err {err}");
+        }
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut g = GaussianSource::new(2);
+        let a = gaussian(64, 24, 1.0, &mut g);
+        let (q, _) = qr_thin(&a);
+        assert!(ortho_error(&q) < 1e-5);
+    }
+
+    #[test]
+    fn r_upper_triangular_nonneg_diag() {
+        let mut g = GaussianSource::new(3);
+        let a = gaussian(20, 8, 1.0, &mut g);
+        let (_, r) = qr_thin(&a);
+        for i in 0..8 {
+            assert!(r.get(i, i) >= 0.0, "diag {i}");
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0, "below diag ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_column_handled() {
+        // Second column is a multiple of the first: QR must not produce NaN.
+        let mut a = Mat::<f32>::zeros(6, 3);
+        for i in 0..6 {
+            a.set(i, 0, (i + 1) as f32);
+            a.set(i, 1, 2.0 * (i + 1) as f32);
+            a.set(i, 2, if i == 0 { 1.0 } else { 0.0 });
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(q.data().iter().all(|v| v.is_finite()));
+        let qr = matmul(&q, &r);
+        assert!(qr.sub(&a).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::<f32>::zeros(5, 2);
+        let (q, r) = qr_thin(&a);
+        assert!(q.data().iter().all(|v| v.is_finite()));
+        assert_eq!(r.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn ill_conditioned_still_orthonormal() {
+        // Columns with wildly different scales — classic Gram–Schmidt would
+        // lose orthogonality; Householder must not.
+        let mut g = GaussianSource::new(4);
+        let mut a = gaussian(40, 6, 1.0, &mut g);
+        for j in 0..6 {
+            let s = 10f32.powi(-(2 * j as i32));
+            for i in 0..40 {
+                let v = a.get(i, j) * s;
+                a.set(i, j, v);
+            }
+        }
+        let (q, _) = qr_thin(&a);
+        assert!(ortho_error(&q) < 1e-4, "ortho err {}", ortho_error(&q));
+    }
+}

@@ -1,0 +1,300 @@
+//! Exact SVD — the paper's baseline (Section 2, Eq. 2.1–2.4).
+//!
+//! Two implementations with different precision/speed trades:
+//!
+//! * [`svd_jacobi`] — one-sided Jacobi (Hestenes). Reference grade: works
+//!   directly on the matrix, so small singular values keep full relative
+//!   accuracy. O(m·n²) per sweep; used for tests and small problems.
+//! * [`svd_via_gram`] — eigendecomposition of the C×C Gram matrix W·Wᵀ
+//!   (f64 accumulated) followed by V = Wᵀ·U·S⁻¹. The fast baseline used in
+//!   the figure benchmarks, matching how the paper amortizes "compute the
+//!   exact SVD once, build any rank-k from it". Squares the condition
+//!   number, which is harmless here: compression only consumes the leading
+//!   part of the spectrum.
+
+use super::{eigh, gemm};
+use crate::tensor::Mat;
+
+/// Thin SVD result: `a ≈ u · diag(s) · vᵀ` with u m×r, v n×r, r = min(m,n).
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Mat<f32>,
+    pub s: Vec<f64>,
+    pub v: Mat<f32>,
+}
+
+impl Svd {
+    /// Reconstruct the rank-k truncation W_k = Σ_{i<k} s_i u_i v_iᵀ
+    /// (paper Eq. 2.2).
+    pub fn truncate(&self, k: usize) -> Mat<f32> {
+        let k = k.min(self.s.len());
+        let uk = self.u.cols_range(0, k);
+        let vk = self.v.cols_range(0, k);
+        let mut usk = uk;
+        for c in 0..k {
+            let sc = self.s[c] as f32;
+            for r in 0..usk.rows() {
+                let v = usk.get(r, c) * sc;
+                usk.set(r, c, v);
+            }
+        }
+        gemm::matmul_nt(&usk, &vk)
+    }
+
+    /// The balanced rank-k factors of Section 3: A = U_k S_k^{1/2} (m×k),
+    /// B = S_k^{1/2} V_kᵀ (k×n).
+    pub fn factors(&self, k: usize) -> (Mat<f32>, Mat<f32>) {
+        let k = k.min(self.s.len());
+        let mut a = self.u.cols_range(0, k);
+        let vk = self.v.cols_range(0, k);
+        let mut b = vk.transpose();
+        for c in 0..k {
+            let sq = (self.s[c].max(0.0)).sqrt() as f32;
+            for r in 0..a.rows() {
+                let v = a.get(r, c) * sq;
+                a.set(r, c, v);
+            }
+            for j in 0..b.cols() {
+                let v = b.get(c, j) * sq;
+                b.set(c, j, v);
+            }
+        }
+        (a, b)
+    }
+}
+
+/// One-sided Jacobi SVD (Hestenes). Accepts any m×n; internally operates
+/// on the taller orientation and swaps factors back.
+pub fn svd_jacobi(a: &Mat<f32>) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // SVD(Aᵀ) = (V, S, U).
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    // Tall case: orthogonalize columns by plane rotations.
+    let mut w: Vec<f64> = a.data().iter().map(|v| *v as f64).collect(); // m×n
+    let mut v = Mat::<f64>::eye(n);
+    let eps = 1e-12;
+    let max_sweeps = 40;
+
+    for _sweep in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2×2 Gram of columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let xp = w[i * n + p];
+                    let xq = w[i * n + q];
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                let theta = 0.5 * (aqq - app);
+                let sign = if theta >= 0.0 { 1.0 } else { -1.0 };
+                let t = sign * apq / (theta.abs() + (theta * theta + apq * apq).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let xp = w[i * n + p];
+                    let xq = w[i * n + q];
+                    w[i * n + p] = c * xp - s * xq;
+                    w[i * n + q] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let vp = v.get(i, p);
+                    let vq = v.get(i, q);
+                    v.set(i, p, c * vp - s * vq);
+                    v.set(i, q, s * vp + c * vq);
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Column norms are the singular values; normalize to get U.
+    let mut entries: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let mut nrm2 = 0.0;
+            for i in 0..m {
+                nrm2 += w[i * n + j] * w[i * n + j];
+            }
+            (nrm2.sqrt(), j)
+        })
+        .collect();
+    entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Mat::<f32>::zeros(m, n);
+    let mut vv = Mat::<f32>::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (new_j, &(sj, old_j)) in entries.iter().enumerate() {
+        s.push(sj);
+        let inv = if sj > 0.0 { 1.0 / sj } else { 0.0 };
+        for i in 0..m {
+            u.set(i, new_j, (w[i * n + old_j] * inv) as f32);
+        }
+        for i in 0..n {
+            vv.set(i, new_j, v.get(i, old_j) as f32);
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+/// Gram-based exact SVD for wide matrices (C ≤ D): eigh(W·Wᵀ) → U, s²;
+/// V = Wᵀ U S⁻¹. f64 Gram accumulation; singular values below
+/// `rel_cutoff · s₁` get zero right singular vectors (they are never used
+/// by compression).
+pub fn svd_via_gram(a: &Mat<f32>) -> Svd {
+    let (m, n) = a.shape();
+    if m > n {
+        let t = svd_via_gram(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let g = gemm::gram_nt_f64(a); // m×m = W·Wᵀ
+    let e = eigh::eigh_default(&g);
+    let s: Vec<f64> = e.values.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    let u32 = e.vectors.cast::<f32>();
+    // V = Wᵀ · (U S⁻¹): scale U columns then one GEMM.
+    let rel_cutoff = 1e-7 * s.first().copied().unwrap_or(0.0);
+    let mut us = u32.clone();
+    for c in 0..m {
+        let inv = if s[c] > rel_cutoff { (1.0 / s[c]) as f32 } else { 0.0 };
+        for r in 0..m {
+            let v = us.get(r, c) * inv;
+            us.set(r, c, v);
+        }
+    }
+    let v = gemm::matmul_tn(a, &us); // n×m
+    Svd { u: u32, s, v }
+}
+
+/// `‖W − W_k‖₂ = s_{k+1}` (paper Eq. 2.4): the optimal rank-k error read
+/// off a computed SVD; returns 0 beyond the spectrum.
+pub fn optimal_error(svd: &Svd, k: usize) -> f64 {
+    svd.s.get(k).copied().unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::ortho_error;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::{gaussian, matrix_with_spectrum};
+
+    fn reconstruct(svd: &Svd) -> Mat<f32> {
+        svd.truncate(svd.s.len())
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let mut g = GaussianSource::new(1);
+        for (m, n) in [(8, 8), (20, 6), (6, 20)] {
+            let a = gaussian(m, n, 1.0, &mut g);
+            let svd = svd_jacobi(&a);
+            let err = reconstruct(&svd).sub(&a).max_abs();
+            assert!(err < 1e-4, "{m}x{n} err {err}");
+            assert!(svd.s.windows(2).all(|w| w[0] >= w[1]));
+            assert!(ortho_error(&svd.u) < 1e-4);
+            assert!(ortho_error(&svd.v) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gram_svd_matches_jacobi_on_values() {
+        let mut g = GaussianSource::new(2);
+        let a = gaussian(12, 30, 1.0, &mut g);
+        let sj = svd_jacobi(&a);
+        let sg = svd_via_gram(&a);
+        for i in 0..12 {
+            assert!(
+                (sj.s[i] - sg.s[i]).abs() < 1e-3 * sj.s[0],
+                "s[{i}]: jacobi {} gram {}",
+                sj.s[i],
+                sg.s[i]
+            );
+        }
+        let err = reconstruct(&sg).sub(&a).max_abs();
+        assert!(err < 1e-3, "gram reconstruction err {err}");
+    }
+
+    #[test]
+    fn known_spectrum_recovered() {
+        let mut g = GaussianSource::new(3);
+        let spec: Vec<f64> = (0..16).map(|i| 20.0 * 0.7f64.powi(i)).collect();
+        let a = matrix_with_spectrum(16, 40, &spec, &mut g);
+        let svd = svd_via_gram(&a);
+        for i in 0..16 {
+            assert!(
+                (svd.s[i] - spec[i]).abs() < 1e-3 * spec[0],
+                "s[{i}] {} vs {}",
+                svd.s[i],
+                spec[i]
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_error_is_next_singular_value() {
+        // ‖W − W_k‖₂ = s_{k+1} — the identity behind "normalized error = 1
+        // for exact SVD" in Fig. 1.1(b).
+        let mut g = GaussianSource::new(4);
+        let spec: Vec<f64> = (0..12).map(|i| 10.0 / (1.0 + i as f64)).collect();
+        let a = matrix_with_spectrum(12, 30, &spec, &mut g);
+        let svd = svd_via_gram(&a);
+        for k in [1, 3, 6] {
+            let wk = svd.truncate(k);
+            let resid = a.sub(&wk);
+            let sn = crate::linalg::norms::spectral_norm(&resid, 300, 1e-10);
+            assert!(
+                (sn - spec[k]).abs() / spec[k] < 5e-3,
+                "k={k}: ‖W−W_k‖₂ {sn} vs s_k+1 {}",
+                spec[k]
+            );
+        }
+    }
+
+    #[test]
+    fn factors_multiply_to_truncation() {
+        let mut g = GaussianSource::new(5);
+        let a = gaussian(10, 25, 1.0, &mut g);
+        let svd = svd_via_gram(&a);
+        let k = 4;
+        let (fa, fb) = svd.factors(k);
+        assert_eq!(fa.shape(), (10, k));
+        assert_eq!(fb.shape(), (k, 25));
+        let ab = gemm::matmul(&fa, &fb);
+        let wk = svd.truncate(k);
+        assert!(ab.sub(&wk).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn rank_deficient_input() {
+        // Rank-2 matrix: s_3.. must be ~0 and factors finite.
+        let mut g = GaussianSource::new(6);
+        let u = gaussian(9, 2, 1.0, &mut g);
+        let v = gaussian(2, 14, 1.0, &mut g);
+        let a = gemm::matmul(&u, &v);
+        let svd = svd_via_gram(&a);
+        assert!(svd.s[2] < 1e-3 * svd.s[0]);
+        assert!(svd.u.data().iter().all(|x| x.is_finite()));
+        assert!(svd.v.data().iter().all(|x| x.is_finite()));
+        let err = svd.truncate(2).sub(&a).max_abs();
+        assert!(err < 1e-3);
+    }
+
+    #[test]
+    fn optimal_error_bounds() {
+        let mut g = GaussianSource::new(7);
+        let a = gaussian(8, 16, 1.0, &mut g);
+        let svd = svd_via_gram(&a);
+        assert_eq!(optimal_error(&svd, 100), 0.0);
+        assert!(optimal_error(&svd, 0) >= optimal_error(&svd, 1));
+    }
+}

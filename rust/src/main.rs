@@ -1,0 +1,11 @@
+//! `rsic` — the leader binary: CLI over the compression pipeline.
+
+use rsi_compress::cli::{run, Args};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,7 @@
+//! Model registry: what the coordinator knows about each supported model —
+//! its linear-layer inventory, how its forward artifact is fed, and where
+//! its eval set lives.
+
+pub mod registry;
+
+pub use registry::{EvalSet, ModelDef, ModelKind};

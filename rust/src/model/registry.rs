@@ -1,0 +1,229 @@
+//! Built-in model definitions (synthvgg, synthvit) and eval-set loading.
+//!
+//! A [`ModelDef`] binds together: the checkpoint layer naming, the forward
+//! artifact's parameter feed order, and per-sample data dims — everything
+//! the eval engine needs to run original or compressed weights through the
+//! same compiled graph.
+
+use crate::io::tenz::{TensorFile, TenzError};
+use crate::tensor::Mat;
+use anyhow::{Context, Result};
+
+/// Supported model families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    SynthVgg,
+    SynthVit,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "synthvgg" | "vgg" => Some(ModelKind::SynthVgg),
+            "synthvit" | "vit" => Some(ModelKind::SynthVit),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::SynthVgg => "synthvgg",
+            ModelKind::SynthVit => "synthvit",
+        }
+    }
+}
+
+/// Static description of a model.
+#[derive(Debug, Clone)]
+pub struct ModelDef {
+    pub kind: ModelKind,
+    /// Parameter feed order of the forward artifact (after the data input);
+    /// `.weight` entries are fed as (possibly reconstructed) matrices.
+    pub param_order: Vec<String>,
+    /// Per-sample data dims for the forward artifact ([] = flat features).
+    pub sample_dims: Vec<usize>,
+    /// Eval-set file name under artifacts/data/.
+    pub eval_file: &'static str,
+    /// Checkpoint file name under artifacts/data/.
+    pub ckpt_file: &'static str,
+}
+
+const VIT_DEPTH: usize = 6;
+
+impl ModelDef {
+    pub fn get(kind: ModelKind) -> ModelDef {
+        match kind {
+            ModelKind::SynthVgg => ModelDef {
+                kind,
+                param_order: vec![
+                    "layers.0.weight".into(),
+                    "layers.0.bias".into(),
+                    "layers.1.weight".into(),
+                    "layers.1.bias".into(),
+                    "head.weight".into(),
+                    "head.bias".into(),
+                ],
+                sample_dims: vec![],
+                eval_file: "eval_vgg.tenz",
+                ckpt_file: "synthvgg.tenz",
+            },
+            ModelKind::SynthVit => {
+                // Mirrors python/compile/model.py::vit_param_order().
+                let mut order = vec![
+                    "patch_embed.weight".to_string(),
+                    "patch_embed.bias".to_string(),
+                    "cls".to_string(),
+                    "pos".to_string(),
+                ];
+                for i in 0..VIT_DEPTH {
+                    let p = format!("blocks.{i}");
+                    for suffix in [
+                        "ln1.gamma", "ln1.beta", "wq.weight", "wk.weight", "wv.weight",
+                        "wo.weight", "ln2.gamma", "ln2.beta", "fc1.weight", "fc1.bias",
+                        "fc2.weight", "fc2.bias",
+                    ] {
+                        order.push(format!("{p}.{suffix}"));
+                    }
+                }
+                order.extend(
+                    ["ln_f.gamma", "ln_f.beta", "head.weight", "head.bias"]
+                        .iter()
+                        .map(|s| s.to_string()),
+                );
+                ModelDef {
+                    kind,
+                    param_order: order,
+                    sample_dims: vec![16, 192],
+                    eval_file: "eval_vit.tenz",
+                    ckpt_file: "synthvit.tenz",
+                }
+            }
+        }
+    }
+
+    /// Names of the compressible (2-D weight) parameters, in feed order.
+    pub fn weight_names(&self) -> Vec<&str> {
+        self.param_order
+            .iter()
+            .filter(|n| n.ends_with(".weight"))
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    /// Shape metadata needed to feed a non-weight parameter from a
+    /// checkpoint tensor: the literal's dims. `cls`/`pos` are stored 2-D in
+    /// the checkpoint but fed 3-D to the vit artifact.
+    pub fn param_feed_dims(&self, name: &str, stored: &[usize]) -> Vec<usize> {
+        match (self.kind, name) {
+            (ModelKind::SynthVit, "cls") => vec![1, 1, stored.iter().product()],
+            (ModelKind::SynthVit, "pos") => {
+                vec![1, stored[0], stored[1]]
+            }
+            _ => stored.to_vec(),
+        }
+    }
+}
+
+/// A loaded evaluation set.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    /// One sample per row (flat features or flattened patches).
+    pub data: Mat<f32>,
+    pub labels: Vec<i32>,
+    /// The 10 class ids present (Imagenette protocol).
+    pub eval_class_ids: Vec<i32>,
+    /// Feature-norm bound R of Theorem 3.2.
+    pub r_bound: f32,
+    /// Uncompressed reference accuracies measured at build time.
+    pub top1_uncompressed: f32,
+    pub top5_uncompressed: f32,
+}
+
+impl EvalSet {
+    pub fn from_tenz(tf: &TensorFile, kind: ModelKind) -> Result<EvalSet> {
+        let data_key = match kind {
+            ModelKind::SynthVgg => "features",
+            ModelKind::SynthVit => "patches",
+        };
+        let data = tf.mat(data_key).with_context(|| format!("eval set missing {data_key}"))?;
+        let labels = tf.vec_i32("labels").context("eval set missing labels")?;
+        anyhow::ensure!(data.rows() == labels.len(), "data/label count mismatch");
+        let eval_class_ids = tf.vec_i32("eval_class_ids").unwrap_or_default();
+        let scalar = |k: &str| -> Result<f32, TenzError> { Ok(tf.vec_f32(k)?[0]) };
+        Ok(EvalSet {
+            data,
+            labels,
+            eval_class_ids,
+            r_bound: scalar("meta.R").unwrap_or(0.0),
+            top1_uncompressed: scalar("meta.top1_uncompressed").unwrap_or(f32::NAN),
+            top5_uncompressed: scalar("meta.top5_uncompressed").unwrap_or(f32::NAN),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::tenz::TensorEntry;
+
+    #[test]
+    fn vgg_def() {
+        let def = ModelDef::get(ModelKind::SynthVgg);
+        assert_eq!(def.param_order.len(), 6);
+        assert_eq!(def.weight_names().len(), 3);
+        assert!(def.sample_dims.is_empty());
+    }
+
+    #[test]
+    fn vit_def_has_38_linear_layers() {
+        // The paper stresses ViT's 37 linear layers; our synthvit has 38
+        // (36 in blocks + patch embed + head).
+        let def = ModelDef::get(ModelKind::SynthVit);
+        assert_eq!(def.weight_names().len(), 38);
+        assert_eq!(def.param_order.len(), 4 + 6 * 12 + 4);
+        assert_eq!(def.sample_dims, vec![16, 192]);
+    }
+
+    #[test]
+    fn vit_param_feed_dims() {
+        let def = ModelDef::get(ModelKind::SynthVit);
+        assert_eq!(def.param_feed_dims("cls", &[1, 192]), vec![1, 1, 192]);
+        assert_eq!(def.param_feed_dims("pos", &[17, 192]), vec![1, 17, 192]);
+        assert_eq!(def.param_feed_dims("ln_f.gamma", &[192]), vec![192]);
+    }
+
+    #[test]
+    fn model_kind_parse() {
+        assert_eq!(ModelKind::parse("VGG"), Some(ModelKind::SynthVgg));
+        assert_eq!(ModelKind::parse("synthvit"), Some(ModelKind::SynthVit));
+        assert_eq!(ModelKind::parse("resnet"), None);
+    }
+
+    #[test]
+    fn eval_set_loading_and_validation() {
+        let mut tf = TensorFile::new();
+        tf.insert("features", TensorEntry::from_f32(vec![4, 8], &[0.5; 32]));
+        tf.insert("labels", TensorEntry::from_i32(vec![4], &[1, 2, 3, 1]));
+        tf.insert("eval_class_ids", TensorEntry::from_i32(vec![3], &[1, 2, 3]));
+        tf.insert("meta.R", TensorEntry::from_f32(vec![1], &[83.0]));
+        tf.insert("meta.top1_uncompressed", TensorEntry::from_f32(vec![1], &[0.8]));
+        tf.insert("meta.top5_uncompressed", TensorEntry::from_f32(vec![1], &[0.95]));
+        let es = EvalSet::from_tenz(&tf, ModelKind::SynthVgg).unwrap();
+        assert_eq!(es.len(), 4);
+        assert_eq!(es.r_bound, 83.0);
+        assert_eq!(es.top1_uncompressed, 0.8);
+        // Mismatched labels error.
+        let mut bad = TensorFile::new();
+        bad.insert("features", TensorEntry::from_f32(vec![4, 8], &[0.5; 32]));
+        bad.insert("labels", TensorEntry::from_i32(vec![3], &[1, 2, 3]));
+        assert!(EvalSet::from_tenz(&bad, ModelKind::SynthVgg).is_err());
+    }
+}

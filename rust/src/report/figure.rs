@@ -1,0 +1,147 @@
+//! Figure data as printed series: each paper figure is reproduced as
+//! (x, series...) rows plus CSV, so the "shape" (who wins, crossovers)
+//! is inspectable without plotting.
+
+/// One (x, y) point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeriesPoint {
+    pub x: f64,
+    pub y: f64,
+}
+
+/// A named collection of series over a shared x-axis.
+#[derive(Debug, Clone, Default)]
+pub struct FigureSeries {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    series: Vec<(String, Vec<SeriesPoint>)>,
+}
+
+impl FigureSeries {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>, y_label: impl Into<String>) -> Self {
+        FigureSeries {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: vec![],
+        }
+    }
+
+    pub fn add_series(&mut self, name: impl Into<String>) -> usize {
+        self.series.push((name.into(), vec![]));
+        self.series.len() - 1
+    }
+
+    pub fn push(&mut self, series_idx: usize, x: f64, y: f64) {
+        self.series[series_idx].1.push(SeriesPoint { x, y });
+    }
+
+    pub fn series_names(&self) -> Vec<&str> {
+        self.series.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn points(&self, idx: usize) -> &[SeriesPoint] {
+        &self.series[idx].1
+    }
+
+    /// All distinct x values in first-seen order.
+    fn xs(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = Vec::new();
+        for (_, pts) in &self.series {
+            for p in pts {
+                if !xs.iter().any(|&x| x == p.x) {
+                    xs.push(p.x);
+                }
+            }
+        }
+        xs
+    }
+
+    fn value_at(&self, idx: usize, x: f64) -> Option<f64> {
+        self.series[idx].1.iter().find(|p| p.x == x).map(|p| p.y)
+    }
+
+    /// Render as an aligned value grid.
+    pub fn render(&self) -> String {
+        let mut out = format!("## {}\n# x = {}, y = {}\n", self.title, self.x_label, self.y_label);
+        let names: Vec<String> = self.series.iter().map(|(n, _)| n.clone()).collect();
+        out.push_str(&format!("{:>10}", self.x_label));
+        for n in &names {
+            out.push_str(&format!("  {n:>14}"));
+        }
+        out.push('\n');
+        for x in self.xs() {
+            out.push_str(&format!("{x:>10.4}"));
+            for i in 0..self.series.len() {
+                match self.value_at(i, x) {
+                    Some(y) => out.push_str(&format!("  {y:>14.6}")),
+                    None => out.push_str(&format!("  {:>14}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV export.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(&self.x_label);
+        for (n, _) in &self.series {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        for x in self.xs() {
+            out.push_str(&format!("{x}"));
+            for i in 0..self.series.len() {
+                out.push(',');
+                if let Some(y) = self.value_at(i, x) {
+                    out.push_str(&format!("{y}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> FigureSeries {
+        let mut f = FigureSeries::new("Fig 4.1(a)", "rank k", "normalized error");
+        let a = f.add_series("q=1");
+        let b = f.add_series("q=4");
+        f.push(a, 100.0, 2.0);
+        f.push(a, 200.0, 2.1);
+        f.push(b, 100.0, 1.1);
+        f
+    }
+
+    #[test]
+    fn renders_grid_with_missing() {
+        let r = fig().render();
+        assert!(r.contains("Fig 4.1(a)"));
+        assert!(r.contains("q=1"));
+        // Missing q=4 at x=200 renders as '-'.
+        let line200 = r.lines().find(|l| l.trim_start().starts_with("200")).unwrap();
+        assert!(line200.trim_end().ends_with('-'));
+    }
+
+    #[test]
+    fn csv() {
+        let c = fig().to_csv();
+        assert!(c.starts_with("rank k,q=1,q=4\n"));
+        assert!(c.contains("100,2,1.1"));
+        assert!(c.contains("200,2.1,\n"));
+    }
+
+    #[test]
+    fn accessors() {
+        let f = fig();
+        assert_eq!(f.series_names(), vec!["q=1", "q=4"]);
+        assert_eq!(f.points(0).len(), 2);
+    }
+}

@@ -1,0 +1,31 @@
+//! Paper-style output: aligned text tables, CSV series, and the
+//! experiment drivers that regenerate each table/figure.
+
+pub mod figure;
+pub mod table;
+
+pub use figure::{FigureSeries, SeriesPoint};
+pub use table::Table;
+
+use std::path::Path;
+
+/// Write a report file, creating parent directories.
+pub fn write_report(path: impl AsRef<Path>, contents: &str) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn write_report_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("rsic_report_{}", std::process::id()));
+        let path = dir.join("nested/out.txt");
+        super::write_report(&path, "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "hello");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,143 @@
+//! Aligned text tables (the Table 4.1 renderer) with CSV export.
+
+use crate::util::humanfmt::{pad_left, pad_right};
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_count(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as aligned text (numbers right-aligned heuristically).
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncols)
+            .map(|i| {
+                self.rows.iter().all(|r| {
+                    let c = r[i].trim_end_matches('%');
+                    c.is_empty() || c.parse::<f64>().is_ok()
+                }) && !self.rows.is_empty()
+            })
+            .collect();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let header_line: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| pad_right(h, widths[i]))
+            .collect();
+        out.push_str(&header_line.join("  "));
+        out.push('\n');
+        out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    if numeric[i] {
+                        pad_left(c, widths[i])
+                    } else {
+                        pad_right(c, widths[i])
+                    }
+                })
+                .collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV export (headers + rows; quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Table 4.1 (vgg)", &["alpha", "q", "Time", "Top-1"]);
+        t.row(&["0.8".into(), "1".into(), "3.48".into(), "82.40%".into()]);
+        t.row(&["0.2".into(), "4".into(), "0.61".into(), "78.63%".into()]);
+        t
+    }
+
+    #[test]
+    fn renders_aligned() {
+        let r = sample().render();
+        assert!(r.contains("## Table 4.1 (vgg)"));
+        assert!(r.contains("alpha"));
+        let lines: Vec<&str> = r.lines().collect();
+        // Header + separator + 2 rows + title.
+        assert_eq!(lines.len(), 5);
+        // Numeric columns right-aligned: "0.8" padded to width 5 ("alpha").
+        assert!(lines[3].starts_with("  0.8"));
+    }
+
+    #[test]
+    fn csv_round() {
+        let c = sample().to_csv();
+        assert!(c.starts_with("alpha,q,Time,Top-1\n"));
+        assert!(c.contains("0.2,4,0.61,78.63%"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a"]);
+        t.row(&["x,y \"z\"".into()]);
+        assert!(t.to_csv().contains("\"x,y \"\"z\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

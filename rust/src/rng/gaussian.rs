@@ -1,0 +1,113 @@
+//! Standard-normal sampling via Box–Muller, and Gaussian matrix fills for
+//! the RSI sketch Ω ∈ R^{D×k} (paper Eq. 2.5).
+
+use super::pcg::Pcg64;
+
+/// A Gaussian N(0,1) source over PCG64, caching the spare Box–Muller draw.
+#[derive(Debug, Clone)]
+pub struct GaussianSource {
+    rng: Pcg64,
+    spare: Option<f64>,
+}
+
+impl GaussianSource {
+    pub fn new(seed: u64) -> Self {
+        GaussianSource { rng: Pcg64::new(seed), spare: None }
+    }
+
+    pub fn from_rng(rng: Pcg64) -> Self {
+        GaussianSource { rng, spare: None }
+    }
+
+    /// One standard-normal draw.
+    #[inline]
+    pub fn next(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        // Box–Muller: u1 in (0,1) to keep log finite.
+        let u1 = self.rng.next_f64_open();
+        let u2 = self.rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fill a slice with N(0,1) f32 draws.
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next() as f32;
+        }
+    }
+
+    /// Fill a slice with N(0,1) f64 draws.
+    pub fn fill_f64(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.next();
+        }
+    }
+
+    /// A fresh row-major Gaussian buffer of `rows*cols` f32 values —
+    /// the sketch matrix Ω.
+    pub fn matrix_f32(&mut self, rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * cols];
+        self.fill_f32(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let mut g = GaussianSource::new(17);
+        let n = 400_000;
+        let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let v = g.next();
+            s1 += v;
+            s2 += v * v;
+            s3 += v * v * v;
+            s4 += v * v * v * v;
+        }
+        let nf = n as f64;
+        let mean = s1 / nf;
+        let var = s2 / nf - mean * mean;
+        let skew = s3 / nf;
+        let kurt = s4 / nf;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!(skew.abs() < 0.03, "skew {skew}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn tail_mass() {
+        // P(|Z| > 2) ≈ 4.55%.
+        let mut g = GaussianSource::new(23);
+        let n = 100_000;
+        let tails = (0..n).filter(|_| g.next().abs() > 2.0).count();
+        let frac = tails as f64 / n as f64;
+        assert!((frac - 0.0455).abs() < 0.006, "tail {frac}");
+    }
+
+    #[test]
+    fn deterministic_matrix() {
+        let mut a = GaussianSource::new(5);
+        let mut b = GaussianSource::new(5);
+        assert_eq!(a.matrix_f32(8, 8), b.matrix_f32(8, 8));
+    }
+
+    #[test]
+    fn fill_f32_finite() {
+        let mut g = GaussianSource::new(1);
+        let mut buf = vec![0.0f32; 4096];
+        g.fill_f32(&mut buf);
+        assert!(buf.iter().all(|v| v.is_finite()));
+        // Not all equal.
+        assert!(buf.windows(2).any(|w| w[0] != w[1]));
+    }
+}

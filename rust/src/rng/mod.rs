@@ -1,0 +1,49 @@
+//! Deterministic random number generation.
+//!
+//! The crate universe ships no `rand`, so we implement the RNG substrate
+//! ourselves: a PCG64 (XSL-RR 128/64) generator and a Box–Muller Gaussian
+//! transform. RSI draws its random test matrix Ω from [`GaussianSource`].
+//!
+//! Determinism matters here: every experiment in the paper's evaluation is
+//! repeated over independent sketches; we reproduce that with seed streams
+//! derived from a master seed so every table row is replayable.
+
+pub mod gaussian;
+pub mod pcg;
+
+pub use gaussian::GaussianSource;
+pub use pcg::Pcg64;
+
+/// Derive the seed for trial `t` of experiment `label` from a master seed.
+///
+/// Uses SplitMix64-style mixing over (seed, fnv(label), t) so distinct
+/// labels/trials give decorrelated streams.
+pub fn derive_seed(master: u64, label: &str, trial: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in label.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut z = master ^ h.rotate_left(17) ^ trial.wrapping_mul(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_seeds_distinct() {
+        let a = derive_seed(42, "fig41", 0);
+        let b = derive_seed(42, "fig41", 1);
+        let c = derive_seed(42, "fig42", 0);
+        let d = derive_seed(43, "fig41", 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        // Deterministic.
+        assert_eq!(a, derive_seed(42, "fig41", 0));
+    }
+}

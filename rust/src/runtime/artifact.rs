@@ -1,0 +1,224 @@
+//! Artifact manifest parsing and shape-bucket lookup.
+//!
+//! `artifacts/manifest.txt` is a sequence of `key=value` lines (written by
+//! aot.py). The registry indexes entries by kind and answers "which GEMM
+//! bucket covers a (C, D, k) request?" — the smallest artifact with
+//! `c_pad ≥ C, d_pad ≥ D, k_pad ≥ k`. Zero-padding W is spectrum-
+//! preserving, so bucketing is exact, not approximate (see
+//! `tensor::matrix::pad_to`).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest line.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub kind: String,
+    /// Path relative to the artifacts dir.
+    pub path: String,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactEntry {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Parsed manifest with lookup indexes.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    root: PathBuf,
+    entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactRegistry {
+    /// Parse manifest text.
+    pub fn parse(root: impl Into<PathBuf>, text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kind = None;
+            let mut path = None;
+            let mut meta = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                match k {
+                    "kind" => kind = Some(v.to_string()),
+                    "path" => path = Some(v.to_string()),
+                    _ => {
+                        meta.insert(k.to_string(), v.to_string());
+                    }
+                }
+            }
+            entries.push(ArtifactEntry {
+                kind: kind.with_context(|| format!("manifest line {}: no kind", lineno + 1))?,
+                path: path.with_context(|| format!("manifest line {}: no path", lineno + 1))?,
+                meta,
+            });
+        }
+        Ok(ArtifactRegistry { root: root.into(), entries })
+    }
+
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("reading {manifest:?} — run `make artifacts` first")
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Load from the default artifacts dir ($RSIC_ARTIFACTS or artifacts/).
+    pub fn load_default() -> Result<Self> {
+        Self::load(crate::artifacts_dir())
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn by_kind<'a>(&'a self, kind: &str) -> impl Iterator<Item = &'a ArtifactEntry> + 'a {
+        let kind = kind.to_string();
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// Absolute path of an entry.
+    pub fn abs_path(&self, e: &ArtifactEntry) -> PathBuf {
+        self.root.join(&e.path)
+    }
+
+    /// Smallest GEMM bucket of `kind` ("gemm_wy" | "gemm_wtx") covering
+    /// (c, d, k) with the requested flavor. Cost model: padded flop count.
+    pub fn find_gemm(
+        &self,
+        kind: &str,
+        c: usize,
+        d: usize,
+        k: usize,
+        flavor: &str,
+    ) -> Option<&ArtifactEntry> {
+        self.by_kind(kind)
+            .filter(|e| e.meta_str("flavor") == Some(flavor))
+            .filter(|e| {
+                e.meta_usize("c").is_some_and(|v| v >= c)
+                    && e.meta_usize("d").is_some_and(|v| v >= d)
+                    && e.meta_usize("k").is_some_and(|v| v >= k)
+            })
+            .min_by_key(|e| {
+                e.meta_usize("c").unwrap() * e.meta_usize("d").unwrap() * e.meta_usize("k").unwrap()
+            })
+    }
+
+    /// Fused RSI artifact exactly matching (c_pad ≥ c, d_pad ≥ d, k_pad ≥ k,
+    /// q). Fused graphs bake q in, so q matches exactly.
+    pub fn find_fused(&self, c: usize, d: usize, k: usize, q: usize) -> Option<&ArtifactEntry> {
+        self.by_kind("rsi_fused")
+            .filter(|e| e.meta_usize("q") == Some(q))
+            .filter(|e| {
+                e.meta_usize("c").is_some_and(|v| v >= c)
+                    && e.meta_usize("d").is_some_and(|v| v >= d)
+                    && e.meta_usize("k").is_some_and(|v| v >= k)
+            })
+            .min_by_key(|e| {
+                e.meta_usize("c").unwrap() * e.meta_usize("d").unwrap() * e.meta_usize("k").unwrap()
+            })
+    }
+
+    /// Forward artifact for a model name.
+    pub fn find_forward(&self, model: &str) -> Option<&ArtifactEntry> {
+        self.by_kind("forward").find(|e| e.meta_str("model") == Some(model))
+    }
+
+    /// Data artifact whose path ends with `name`.
+    pub fn find_data(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.by_kind("data").find(|e| e.path.ends_with(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+kind=gemm_wy path=g1.hlo.txt c=1024 d=6272 k=256 flavor=pallas vmem_bytes=819200
+kind=gemm_wy path=g2.hlo.txt c=1024 d=6272 k=512 flavor=pallas
+kind=gemm_wy path=g3.hlo.txt c=192 d=768 k=64 flavor=pallas
+kind=gemm_wtx path=g4.hlo.txt c=192 d=768 k=64 flavor=pallas
+kind=rsi_fused path=f1.hlo.txt c=192 d=768 k=64 q=2 ortho=newton-schulz
+kind=forward path=fw.hlo.txt model=synthvgg batch=256 inputs=h,w1
+kind=data path=data/synthvgg.tenz model=synthvgg
+";
+
+    fn reg() -> ArtifactRegistry {
+        ArtifactRegistry::parse("/art", SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn parses_all_kinds() {
+        let r = reg();
+        assert_eq!(r.entries().len(), 7);
+        assert_eq!(r.by_kind("gemm_wy").count(), 3);
+        assert_eq!(
+            r.by_kind("gemm_wy").next().unwrap().meta_usize("vmem_bytes"),
+            Some(819200)
+        );
+    }
+
+    #[test]
+    fn gemm_bucket_selection() {
+        let r = reg();
+        // Exact match.
+        let e = r.find_gemm("gemm_wy", 1024, 6272, 256, "pallas").unwrap();
+        assert_eq!(e.path, "g1.hlo.txt");
+        // Smaller request covered by smallest bucket: (100, 700, 30)
+        let e = r.find_gemm("gemm_wy", 100, 700, 30, "pallas").unwrap();
+        assert_eq!(e.path, "g3.hlo.txt");
+        // k too large for small bucket → bigger one.
+        let e = r.find_gemm("gemm_wy", 1024, 6272, 300, "pallas").unwrap();
+        assert_eq!(e.path, "g2.hlo.txt");
+        // Nothing covers.
+        assert!(r.find_gemm("gemm_wy", 5000, 5000, 1, "pallas").is_none());
+        // Flavor must match.
+        assert!(r.find_gemm("gemm_wy", 100, 700, 30, "xla").is_none());
+    }
+
+    #[test]
+    fn fused_lookup_q_exact() {
+        let r = reg();
+        assert!(r.find_fused(192, 768, 64, 2).is_some());
+        assert!(r.find_fused(192, 768, 64, 3).is_none());
+        assert!(r.find_fused(100, 500, 30, 2).is_some());
+    }
+
+    #[test]
+    fn forward_and_data_lookup() {
+        let r = reg();
+        assert_eq!(r.find_forward("synthvgg").unwrap().meta_usize("batch"), Some(256));
+        assert!(r.find_forward("nope").is_none());
+        assert!(r.find_data("synthvgg.tenz").is_some());
+        assert_eq!(r.abs_path(r.find_data("synthvgg.tenz").unwrap()),
+                   PathBuf::from("/art/data/synthvgg.tenz"));
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(ArtifactRegistry::parse("/a", "kind=x").is_err()); // no path
+        assert!(ArtifactRegistry::parse("/a", "garbage line").is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! Compiled-executable cache.
+//!
+//! Compiling an HLO module takes 10–500 ms; the pipeline executes the same
+//! GEMM bucket hundreds of times across layers/trials. The cache holds one
+//! `PjRtLoadedExecutable` per artifact path for the process lifetime.
+
+use super::client::{compile_hlo_file, shared_client, XlaExecutable};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Thread-safe executable cache.
+#[derive(Default)]
+pub struct ExecutableCache {
+    inner: Mutex<HashMap<PathBuf, Arc<XlaExecutable>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl ExecutableCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch (compiling on miss) the executable for an artifact path.
+    pub fn get(&self, path: &Path) -> Result<Arc<XlaExecutable>> {
+        use std::sync::atomic::Ordering;
+        if let Some(exe) = self.inner.lock().unwrap().get(path) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(exe.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let client = shared_client()?;
+        let exe = Arc::new(compile_hlo_file(&client, path)?);
+        self.inner.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses) counters for the perf report.
+    pub fn stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering;
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_on_absent_file_is_error_not_poison() {
+        let cache = ExecutableCache::new();
+        let r = cache.get(Path::new("/nonexistent/nope.hlo.txt"));
+        assert!(r.is_err());
+        assert_eq!(cache.len(), 0);
+        let (h, m) = cache.stats();
+        assert_eq!((h, m), (0, 1));
+    }
+}

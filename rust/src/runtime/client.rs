@@ -1,0 +1,84 @@
+//! Process-wide PJRT CPU client + thread-safety wrappers.
+//!
+//! The `xla` crate's types wrap raw C pointers and carry no `Send`/`Sync`
+//! impls. The underlying PJRT C API, however, *is* documented thread-safe
+//! for client and loaded-executable use (XLA runs them from arbitrary
+//! threads in JAX/TF; the CPU client serializes internally where needed).
+//! We wrap the two types our worker pool shares and assert that contract
+//! here, in one place:
+//!
+//! * [`XlaClient`] — shared, internally synchronized by PJRT.
+//! * [`XlaExecutable`] — immutable after compilation; `execute` is
+//!   thread-safe per the PJRT contract.
+//!
+//! Compilation itself is serialized through [`compile_hlo_file`]'s mutex:
+//! the 0.5.1-era xla_extension compiler is not re-entrancy-hardened, and
+//! parallel compiles of large modules also spike memory.
+
+use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Thread-safe wrapper for the PJRT client (see module docs for safety).
+pub struct XlaClient(pub xla::PjRtClient);
+// SAFETY: PJRT clients are thread-safe per the PJRT C API contract; all
+// mutation is internally synchronized by xla_extension.
+unsafe impl Send for XlaClient {}
+unsafe impl Sync for XlaClient {}
+
+/// Thread-safe wrapper for a compiled executable (immutable post-compile).
+pub struct XlaExecutable(pub xla::PjRtLoadedExecutable);
+// SAFETY: loaded executables are immutable; PJRT's Execute is thread-safe.
+unsafe impl Send for XlaExecutable {}
+unsafe impl Sync for XlaExecutable {}
+
+impl XlaExecutable {
+    /// Execute with literal inputs, returning the first device's first
+    /// result literal (our graphs are single-output-tuple, single-device).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let outs = self.0.execute::<xla::Literal>(args)?;
+        anyhow::ensure!(!outs.is_empty() && !outs[0].is_empty(), "empty execution result");
+        Ok(outs[0][0].to_literal_sync()?)
+    }
+}
+
+static CLIENT: OnceLock<Result<Arc<XlaClient>, String>> = OnceLock::new();
+
+/// The shared PJRT CPU client (created on first use).
+pub fn shared_client() -> Result<Arc<XlaClient>> {
+    let slot = CLIENT.get_or_init(|| {
+        xla::PjRtClient::cpu()
+            .map(|c| Arc::new(XlaClient(c)))
+            .map_err(|e| format!("PJRT CPU client init failed: {e}"))
+    });
+    match slot {
+        Ok(c) => Ok(c.clone()),
+        Err(msg) => anyhow::bail!("{msg}"),
+    }
+}
+
+static COMPILE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Compile an HLO-text file into a loaded executable (serialized).
+pub fn compile_hlo_file(client: &XlaClient, path: &std::path::Path) -> Result<XlaExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("{e}"))
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let _guard = COMPILE_LOCK.lock().unwrap();
+    let exe = client.0.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+    Ok(XlaExecutable(exe))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_initializes_and_is_shared() {
+        let a = shared_client().expect("pjrt cpu client");
+        let b = shared_client().unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.0.device_count() >= 1);
+        assert!(a.0.platform_name().contains("cpu") || a.0.platform_name().contains("Host"));
+    }
+}

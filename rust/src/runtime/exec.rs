@@ -1,0 +1,72 @@
+//! `Mat` ⇄ `xla::Literal` adapters and padding helpers.
+
+use crate::tensor::Mat;
+use anyhow::Result;
+
+/// Row-major Mat → rank-2 Literal.
+pub fn mat_to_literal(m: &Mat<f32>) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// f32 slice → rank-1 Literal.
+pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 slice → arbitrary-rank Literal.
+pub fn vec_to_literal_shaped(v: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == v.len(), "shape {:?} != len {}", dims, v.len());
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+/// Rank-2 Literal → Mat (shape taken from the literal).
+pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat<f32>> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    anyhow::ensure!(dims.len() == 2, "expected rank-2 literal, got {:?}", dims);
+    let data = lit.to_vec::<f32>()?;
+    Ok(Mat::from_vec(dims[0] as usize, dims[1] as usize, data))
+}
+
+/// Pad a matrix into a (c_pad × d_pad) bucket (no-op when already sized).
+pub fn pad_mat(m: &Mat<f32>, c_pad: usize, d_pad: usize) -> Mat<f32> {
+    if m.rows() == c_pad && m.cols() == d_pad {
+        m.clone()
+    } else {
+        m.pad_to(c_pad, d_pad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_literal_roundtrip() {
+        let m = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        let lit = mat_to_literal(&m).unwrap();
+        let back = literal_to_mat(&lit).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn shaped_literal() {
+        let v: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let lit = vec_to_literal_shaped(&v, &[2, 3, 4]).unwrap();
+        assert_eq!(lit.element_count(), 24);
+        assert!(vec_to_literal_shaped(&v, &[5, 5]).is_err());
+    }
+
+    #[test]
+    fn padding() {
+        let m = Mat::from_fn(2, 3, |r, c| (r + c) as f32);
+        let p = pad_mat(&m, 4, 4);
+        assert_eq!(p.shape(), (4, 4));
+        assert_eq!(p.get(1, 2), 3.0);
+        assert_eq!(p.get(3, 3), 0.0);
+        // No-op path returns an equal matrix.
+        assert_eq!(pad_mat(&m, 2, 3), m);
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! * [`client`]    — process-wide PJRT CPU client (one per process).
+//! * [`artifact`]  — manifest parsing + artifact registry (shape lookup).
+//! * [`exec`]      — `Mat` ⇄ `xla::Literal` adapters, padding helpers.
+//! * [`cache`]     — compiled-executable cache keyed by artifact path.
+//! * [`xla_engine`]— the [`crate::compress::GemmEngine`] implementations
+//!   backed by artifacts (stepped GEMMs and fused whole-RSI graphs), plus
+//!   forward-pass execution for model evaluation.
+//!
+//! Everything degrades gracefully: when `artifacts/` is absent the
+//! constructors return errors the callers turn into "run `make artifacts`"
+//! messages, and tests skip.
+
+pub mod artifact;
+pub mod cache;
+pub mod client;
+pub mod exec;
+pub mod xla_engine;
+
+pub use artifact::{ArtifactEntry, ArtifactRegistry};
+pub use cache::ExecutableCache;
+pub use client::shared_client;
+pub use xla_engine::{XlaForward, XlaFusedRsi, XlaGemmEngine};

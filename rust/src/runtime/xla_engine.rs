@@ -1,0 +1,234 @@
+//! Artifact-backed execution engines.
+//!
+//! * [`XlaGemmEngine`] — implements [`GemmEngine`]: Algorithm 3.1's GEMMs
+//!   run through the AOT Pallas artifacts, with shape bucketing
+//!   (pad → execute → slice). The RSI loop and QR stay in Rust.
+//! * [`XlaFusedRsi`] — whole Alg. 3.1 loop as one compiled graph
+//!   (Newton–Schulz ortho baked in); Rust only finalizes (lines 7–9).
+//! * [`XlaForward`] — batched model forward passes for the eval engine.
+
+use super::artifact::ArtifactRegistry;
+use super::cache::ExecutableCache;
+use super::exec::{literal_to_mat, mat_to_literal, pad_mat, vec_to_literal_shaped};
+use crate::compress::backend::GemmEngine;
+use crate::compress::factor::Factorization;
+use crate::compress::rsi;
+use crate::rng::GaussianSource;
+use crate::tensor::Mat;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// GEMM engine backed by the `gemm_wy` / `gemm_wtx` artifacts.
+pub struct XlaGemmEngine {
+    registry: Arc<ArtifactRegistry>,
+    cache: Arc<ExecutableCache>,
+    flavor: &'static str,
+}
+
+impl XlaGemmEngine {
+    pub fn new(registry: Arc<ArtifactRegistry>, cache: Arc<ExecutableCache>) -> Self {
+        XlaGemmEngine { registry, cache, flavor: "pallas" }
+    }
+
+    /// Use the plain-XLA-dot artifact flavor (backend ablation).
+    pub fn with_xla_flavor(mut self) -> Self {
+        self.flavor = "xla";
+        self
+    }
+
+    fn run_gemm(
+        &self,
+        kind: &str,
+        w: &Mat<f32>,
+        other: &Mat<f32>,
+        out_rows_of: impl Fn(usize, usize) -> (usize, usize),
+        // (cp, dp) provided for cost logging by future engines
+    ) -> Result<Mat<f32>> {
+        let (c, d) = w.shape();
+        let k = other.cols();
+        let entry = self
+            .registry
+            .find_gemm(kind, c, d, k, self.flavor)
+            .with_context(|| format!("no {kind} artifact covers ({c},{d},k={k}) flavor={}", self.flavor))?;
+        let (cp, dp, kp) = (
+            entry.meta_usize("c").unwrap(),
+            entry.meta_usize("d").unwrap(),
+            entry.meta_usize("k").unwrap(),
+        );
+        let exe = self.cache.get(&self.registry.abs_path(entry))?;
+        let wp = pad_mat(w, cp, dp);
+        // The non-W operand's row dim depends on orientation.
+        let (or_rows, _or_cols) = out_rows_of(cp, dp);
+        let other_rows = if kind == "gemm_wy" { dp } else { cp };
+        let op = pad_mat(other, other_rows, kp);
+        let result = exe.run(&[mat_to_literal(&wp)?, mat_to_literal(&op)?])?;
+        let out = literal_to_mat(&result.to_tuple1()?)?;
+        // Slice back to logical shape.
+        let want_rows = or_rows;
+        Ok(out.slice_topleft(want_rows, k))
+    }
+}
+
+impl GemmEngine for XlaGemmEngine {
+    fn wy(&self, w: &Mat<f32>, y: &Mat<f32>) -> Mat<f32> {
+        self.run_gemm("gemm_wy", w, y, |_cp, _dp| (w.rows(), 0))
+            .expect("XlaGemmEngine::wy failed")
+    }
+    fn wtx(&self, w: &Mat<f32>, x: &Mat<f32>) -> Mat<f32> {
+        self.run_gemm("gemm_wtx", w, x, |_cp, _dp| (w.cols(), 0))
+            .expect("XlaGemmEngine::wtx failed")
+    }
+    fn name(&self) -> &'static str {
+        if self.flavor == "pallas" {
+            "xla-stepped(pallas)"
+        } else {
+            "xla-stepped(xla)"
+        }
+    }
+}
+
+/// Fused whole-RSI execution.
+pub struct XlaFusedRsi {
+    registry: Arc<ArtifactRegistry>,
+    cache: Arc<ExecutableCache>,
+}
+
+impl XlaFusedRsi {
+    pub fn new(registry: Arc<ArtifactRegistry>, cache: Arc<ExecutableCache>) -> Self {
+        XlaFusedRsi { registry, cache }
+    }
+
+    /// True when a fused artifact covers this configuration.
+    pub fn supports(&self, c: usize, d: usize, k: usize, q: usize) -> bool {
+        self.registry.find_fused(c, d, k, q).is_some()
+    }
+
+    /// Run Algorithm 3.1 via the fused artifact and finalize in Rust.
+    pub fn factorize(&self, w: &Mat<f32>, k: usize, q: usize, seed: u64) -> Result<Factorization> {
+        let (c, d) = w.shape();
+        let entry = self
+            .registry
+            .find_fused(c, d, k, q)
+            .with_context(|| format!("no rsi_fused artifact covers ({c},{d},k={k},q={q})"))?;
+        let (cp, dp, kp) = (
+            entry.meta_usize("c").unwrap(),
+            entry.meta_usize("d").unwrap(),
+            entry.meta_usize("k").unwrap(),
+        );
+        let exe = self.cache.get(&self.registry.abs_path(entry))?;
+        let wp = pad_mat(w, cp, dp);
+        // Ω drawn at the padded width: the extra kp−k columns act as
+        // oversampling and are truncated away by finalize().
+        let mut g = GaussianSource::new(seed);
+        let omega = Mat::from_vec(dp, kp, g.matrix_f32(dp, kp));
+        let result = exe.run(&[mat_to_literal(&wp)?, mat_to_literal(&omega)?])?;
+        let (x_lit, y_lit) = result.to_tuple2()?;
+        let x = literal_to_mat(&x_lit)?.slice_topleft(c, kp);
+        let y = literal_to_mat(&y_lit)?.slice_topleft(d, kp);
+        // Newton-Schulz orthonormalization degrades when q amplifies the
+        // sketch's condition number past what 14 f32 iterations resolve
+        // (cond ~ (s1/sk)^(2q-1)). finalize() assumes orthonormal X, so
+        // measure the deviation and, when material, re-orthonormalize with
+        // Householder QR and recompute Y = W^T Q natively (one extra GEMM,
+        // off the artifact path). This is the documented CPU-side guard of
+        // DESIGN.md section Hardware-Adaptation.
+        let dev = crate::linalg::qr::ortho_error(&x);
+        if dev <= 1e-3 {
+            return Ok(rsi::finalize(&x, &y, k));
+        }
+        log::debug!("fused RSI: NS ortho deviation {dev:.2e}; re-orthonormalizing");
+        let qx = crate::linalg::qr::orthonormalize(&x);
+        let y2 = crate::linalg::gemm::matmul_tn(w, &qx);
+        Ok(rsi::finalize(&qx, &y2, k))
+    }
+}
+
+/// Batched forward-pass execution for model evaluation.
+pub struct XlaForward {
+    exe: Arc<super::client::XlaExecutable>,
+    /// Batch size baked into the artifact.
+    pub batch: usize,
+    /// Input names after the leading data input (manifest `inputs=`).
+    pub param_names: Vec<String>,
+    /// Extra data dims per sample (e.g. [16, 192] for vit patches; empty
+    /// for flat features).
+    pub sample_dims: Vec<usize>,
+}
+
+impl XlaForward {
+    pub fn load(
+        registry: &ArtifactRegistry,
+        cache: &ExecutableCache,
+        model: &str,
+        sample_dims: Vec<usize>,
+    ) -> Result<Self> {
+        let entry = registry
+            .find_forward(model)
+            .with_context(|| format!("no forward artifact for model {model:?}"))?;
+        let batch = entry.meta_usize("batch").context("forward artifact missing batch")?;
+        let inputs = entry.meta_str("inputs").context("forward artifact missing inputs")?;
+        let mut names: Vec<String> = inputs.split(',').map(|s| s.to_string()).collect();
+        anyhow::ensure!(!names.is_empty(), "empty inputs list");
+        names.remove(0); // leading data input
+        let exe = cache.get(&registry.abs_path(entry))?;
+        Ok(XlaForward { exe, batch, param_names: names, sample_dims })
+    }
+
+    /// Run all samples (rows of `data`; row length = prod(sample_dims) or
+    /// the flat feature dim) through the model with the given parameter
+    /// literals (ordered per `param_names`). Returns logits (n × classes).
+    pub fn logits(&self, data: &Mat<f32>, params: &[xla::Literal]) -> Result<Mat<f32>> {
+        anyhow::ensure!(
+            params.len() == self.param_names.len(),
+            "expected {} params, got {}",
+            self.param_names.len(),
+            params.len()
+        );
+        let n = data.rows();
+        let width = data.cols();
+        let mut out: Option<Mat<f32>> = None;
+        let mut batch_dims = vec![self.batch];
+        if self.sample_dims.is_empty() {
+            batch_dims.push(width);
+        } else {
+            anyhow::ensure!(
+                self.sample_dims.iter().product::<usize>() == width,
+                "sample dims {:?} != row width {width}",
+                self.sample_dims
+            );
+            batch_dims.extend_from_slice(&self.sample_dims);
+        }
+        let mut row = 0usize;
+        while row < n {
+            let take = (n - row).min(self.batch);
+            // Assemble a padded batch buffer (zeros beyond `take`).
+            let mut buf = vec![0.0f32; self.batch * width];
+            for i in 0..take {
+                buf[i * width..(i + 1) * width].copy_from_slice(data.row(row + i));
+            }
+            let data_lit = vec_to_literal_shaped(&buf, &batch_dims)?;
+            let mut args = Vec::with_capacity(1 + params.len());
+            args.push(data_lit);
+            for p in params {
+                args.push(p.clone());
+            }
+            let result = self.exe.run(&args)?;
+            let logits = literal_to_mat(&result.to_tuple1()?)?;
+            let classes = logits.cols();
+            let out_mat = out.get_or_insert_with(|| Mat::zeros(n, classes));
+            for i in 0..take {
+                out_mat.row_mut(row + i).copy_from_slice(logits.row(i));
+            }
+            row += take;
+        }
+        Ok(out.unwrap_or_else(|| Mat::zeros(0, 0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests that need real artifacts live in
+    // rust/tests/runtime_integration.rs (they skip when artifacts are
+    // absent). Unit-testable logic here is pure shape plumbing already
+    // covered by exec::tests and artifact::tests.
+}

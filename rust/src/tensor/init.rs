@@ -1,0 +1,167 @@
+//! Structured matrix initializers: Gaussian fills, random orthogonal
+//! factors, and — central to this reproduction — parametric singular
+//! spectra that mimic the spectrum shapes of pretrained layers
+//! (paper Fig. 1.1: fast initial decay followed by a long slow tail).
+
+use super::matrix::Mat;
+use crate::rng::GaussianSource;
+
+/// Gaussian N(0, sigma²) matrix.
+pub fn gaussian(rows: usize, cols: usize, sigma: f32, g: &mut GaussianSource) -> Mat<f32> {
+    let mut m = Mat::zeros(rows, cols);
+    g.fill_f32(m.data_mut());
+    if sigma != 1.0 {
+        m.scale(sigma);
+    }
+    m
+}
+
+/// Random matrix with Haar-ish orthonormal *columns* (rows ≥ cols),
+/// produced by QR of a Gaussian matrix.
+pub fn random_orthonormal(rows: usize, cols: usize, g: &mut GaussianSource) -> Mat<f32> {
+    assert!(rows >= cols, "need rows >= cols for orthonormal columns");
+    let a = gaussian(rows, cols, 1.0, g);
+    let (q, _r) = crate::linalg::qr::qr_thin(&a);
+    q
+}
+
+/// Parametric spectrum: `s_i = head * exp(-decay * i) + tail / (1 + i)^p`.
+///
+/// With a large `head`/`decay` and a heavy `tail` exponent `p ∈ (0.3, 1)`,
+/// this reproduces the "sharp drop then slow decay" shape measured on the
+/// VGG19 fc layer in Fig. 1.1 — the regime where plain RSVD degrades.
+#[derive(Debug, Clone, Copy)]
+pub struct SpectrumShape {
+    pub head: f64,
+    pub decay: f64,
+    pub tail: f64,
+    pub p: f64,
+}
+
+impl SpectrumShape {
+    /// The Fig-1.1-like default: fast initial decay then a slow power tail.
+    pub fn pretrained_like() -> Self {
+        SpectrumShape { head: 30.0, decay: 0.15, tail: 2.0, p: 0.35 }
+    }
+
+    /// Fast-decay spectrum (easy regime where RSVD already works).
+    pub fn fast_decay() -> Self {
+        SpectrumShape { head: 30.0, decay: 0.2, tail: 0.05, p: 2.0 }
+    }
+
+    /// Nearly flat spectrum (hardest regime).
+    pub fn flat() -> Self {
+        SpectrumShape { head: 1.0, decay: 0.0, tail: 1.0, p: 0.05 }
+    }
+
+    /// Evaluate the first n singular values (non-increasing, positive).
+    pub fn values(&self, n: usize) -> Vec<f64> {
+        let mut s: Vec<f64> = (0..n)
+            .map(|i| {
+                let i = i as f64;
+                self.head * (-self.decay * i).exp() + self.tail / (1.0 + i).powf(self.p)
+            })
+            .collect();
+        // Guard against parameterizations that are not monotone.
+        for i in 1..n {
+            if s[i] > s[i - 1] {
+                s[i] = s[i - 1];
+            }
+        }
+        s
+    }
+}
+
+/// Build `W = U diag(s) Vᵀ` with random orthonormal factors and the given
+/// spectrum. `rows <= cols` (classifier-layer convention C×D); the spectrum
+/// length is `rows`.
+pub fn matrix_with_spectrum(
+    rows: usize,
+    cols: usize,
+    spectrum: &[f64],
+    g: &mut GaussianSource,
+) -> Mat<f32> {
+    assert!(rows <= cols);
+    assert_eq!(spectrum.len(), rows);
+    let u = random_orthonormal(rows, rows, g); // rows×rows
+    let v = random_orthonormal(cols, rows, g); // cols×rows, orthonormal cols
+    // W = U S Vᵀ: scale columns of U by s, then multiply by Vᵀ.
+    let mut us = u;
+    for r in 0..rows {
+        for c in 0..rows {
+            let val = us.get(r, c) * spectrum[c] as f32;
+            us.set(r, c, val);
+        }
+    }
+    crate::linalg::gemm::matmul_nt(&us, &v) // (rows×rows) · (cols×rows)ᵀ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, norms};
+
+    #[test]
+    fn gaussian_stats() {
+        let mut g = GaussianSource::new(1);
+        let m = gaussian(64, 64, 2.0, &mut g);
+        let mean: f64 = m.data().iter().map(|v| *v as f64).sum::<f64>() / m.len() as f64;
+        let var: f64 =
+            m.data().iter().map(|v| (*v as f64 - mean).powi(2)).sum::<f64>() / m.len() as f64;
+        assert!(mean.abs() < 0.1);
+        assert!((var - 4.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn orthonormal_columns() {
+        let mut g = GaussianSource::new(2);
+        let q = random_orthonormal(40, 12, &mut g);
+        let qtq = gemm::matmul_tn(&q, &q);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq.get(i, j) - want).abs() < 1e-4,
+                    "QtQ[{i},{j}] = {}",
+                    qtq.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spectrum_monotone_positive() {
+        for shape in [
+            SpectrumShape::pretrained_like(),
+            SpectrumShape::fast_decay(),
+            SpectrumShape::flat(),
+        ] {
+            let s = shape.values(128);
+            assert!(s.iter().all(|&v| v > 0.0));
+            assert!(s.windows(2).all(|w| w[0] >= w[1]));
+        }
+    }
+
+    #[test]
+    fn pretrained_like_has_slow_tail() {
+        // The defining property of the Fig-1.1 regime: the tail ratio
+        // s_{k+1}/s_{2k} stays close to 1 for large k (slow decay), while
+        // the head drops fast.
+        let s = SpectrumShape::pretrained_like().values(512);
+        assert!(s[0] / s[10] > 3.0, "head must decay fast");
+        assert!(s[256] / s[511] < 1.4, "tail must decay slowly");
+    }
+
+    #[test]
+    fn matrix_realizes_spectrum() {
+        let mut g = GaussianSource::new(3);
+        let spec: Vec<f64> = (0..24).map(|i| 10.0 / (1.0 + i as f64)).collect();
+        let w = matrix_with_spectrum(24, 60, &spec, &mut g);
+        assert_eq!(w.shape(), (24, 60));
+        // Spectral norm should match s_1; Frobenius² = Σ s_i².
+        let s1 = norms::spectral_norm(&w, 200, 1e-9);
+        assert!((s1 - spec[0]).abs() / spec[0] < 1e-3, "s1 {s1} vs {}", spec[0]);
+        let fro2: f64 = spec.iter().map(|v| v * v).sum();
+        assert!((w.fro_norm().powi(2) - fro2).abs() / fro2 < 1e-3);
+    }
+}

@@ -1,0 +1,358 @@
+//! Row-major dense matrix.
+
+use super::Scalar;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum MatError {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("index out of bounds: ({r}, {c}) in {rows}x{cols}")]
+    Oob { r: usize, c: usize, rows: usize, cols: usize },
+}
+
+/// Row-major dense matrix with contiguous storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat<T: Scalar = f32> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Mat<T> {
+    /// Zero-filled rows×cols matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![T::zero(); rows * cols] }
+    }
+
+    /// Identity of size n.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = T::one();
+        }
+        m
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length {} != {rows}x{cols}", data.len());
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[T]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+    /// Consume into the underlying row-major buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Immutable row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column c.
+    pub fn col(&self, c: usize) -> Vec<T> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Top-left (r×c) submatrix copy.
+    pub fn slice_topleft(&self, r: usize, c: usize) -> Self {
+        assert!(r <= self.rows && c <= self.cols);
+        let mut out = Self::zeros(r, c);
+        for i in 0..r {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..c]);
+        }
+        out
+    }
+
+    /// Zero-pad to (r×c), keeping this matrix in the top-left corner.
+    /// Padding with zeros preserves the nonzero singular values, which is
+    /// what makes shape-bucketed XLA artifacts mathematically free.
+    pub fn pad_to(&self, r: usize, c: usize) -> Self {
+        assert!(r >= self.rows && c >= self.cols);
+        let mut out = Self::zeros(r, c);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Columns `[lo, hi)` as a new matrix.
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Self::zeros(self.rows, hi - lo);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[lo..hi]);
+        }
+        out
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, s: T) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// self += alpha * other.
+    pub fn axpy(&mut self, alpha: T, other: &Self) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * *b;
+        }
+    }
+
+    /// Subtract: self - other (new matrix).
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(other.data.iter()).map(|(&a, &b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm (accumulated in f64).
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v.as_f64() * v.as_f64()).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.as_f64().abs()))
+    }
+
+    /// Cast to another scalar type.
+    pub fn cast<U: Scalar>(&self) -> Mat<U> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| U::from_f64(v.as_f64())).collect(),
+        }
+    }
+
+    /// Matrix–vector product y = A x.
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![T::zero(); self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = T::zero();
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += *a * *b;
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Transposed matrix–vector product y = Aᵀ x.
+    pub fn matvec_t(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![T::zero(); self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            for (yc, a) in y.iter_mut().zip(self.row(r)) {
+                *yc += *a * xr;
+            }
+        }
+        y
+    }
+
+    /// Number of parameters a rank-k factorization of this matrix stores:
+    /// (rows + cols) * k — the paper's O((C+D)k) accounting.
+    pub fn factored_params(&self, k: usize) -> usize {
+        (self.rows + self.cols) * k
+    }
+}
+
+impl Mat<f32> {
+    /// Bytes of the raw f32 buffer (storage accounting in reports).
+    pub fn nbytes(&self) -> u64 {
+        (self.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Mat::<f32>::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.get(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i3 = Mat::<f64>::eye(3);
+        assert_eq!(i3.get(1, 1), 1.0);
+        assert_eq!(i3.get(0, 1), 0.0);
+        let d = Mat::<f64>::diag(&[1.0, 2.0]);
+        assert_eq!(d.get(1, 1), 2.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::<f32>::from_fn(5, 7, |r, c| (r * 7 + c) as f32);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (7, 5));
+        assert_eq!(t.get(3, 2), m.get(2, 3));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_naive_large() {
+        let m = Mat::<f32>::from_fn(70, 45, |r, c| (r * 45 + c) as f32);
+        let t = m.transpose();
+        for r in 0..70 {
+            for c in 0..45 {
+                assert_eq!(t.get(c, r), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn pad_and_slice_inverse() {
+        let m = Mat::<f32>::from_fn(3, 5, |r, c| (r + c) as f32);
+        let p = m.pad_to(8, 8);
+        assert_eq!(p.shape(), (8, 8));
+        assert_eq!(p.get(7, 7), 0.0);
+        assert_eq!(p.slice_topleft(3, 5), m);
+    }
+
+    #[test]
+    fn axpy_sub_scale() {
+        let a = Mat::<f64>::from_fn(2, 2, |r, c| (r + c) as f64);
+        let mut b = a.clone();
+        b.axpy(2.0, &a);
+        assert_eq!(b.get(1, 1), 6.0);
+        let d = b.sub(&a);
+        assert_eq!(d.get(1, 1), 4.0);
+        let mut s = a;
+        s.scale(10.0);
+        assert_eq!(s.get(0, 1), 10.0);
+    }
+
+    #[test]
+    fn matvec_both_ways() {
+        let m = Mat::<f64>::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.matvec(&[1., 1., 1.]), vec![6., 15.]);
+        assert_eq!(m.matvec_t(&[1., 1.]), vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::<f32>::from_vec(1, 2, vec![3.0, -4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn cols_range() {
+        let m = Mat::<f32>::from_fn(2, 4, |r, c| (r * 4 + c) as f32);
+        let s = m.cols_range(1, 3);
+        assert_eq!(s.shape(), (2, 2));
+        assert_eq!(s.get(1, 0), 5.0);
+    }
+
+    #[test]
+    fn factored_params_accounting() {
+        // Paper §1: rank-k uses (C+D)k params vs C*D.
+        let w = Mat::<f32>::zeros(4096, 25088);
+        assert_eq!(w.factored_params(200), (4096 + 25088) * 200);
+        assert!(w.factored_params(200) < 4096 * 25088);
+    }
+
+    #[test]
+    fn cast_f32_f64() {
+        let m = Mat::<f32>::from_fn(2, 2, |r, c| (r + c) as f32 + 0.5);
+        let d: Mat<f64> = m.cast();
+        assert_eq!(d.get(1, 1), 2.5);
+    }
+}

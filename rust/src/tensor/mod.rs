@@ -1,0 +1,45 @@
+//! Dense tensor substrate: the `Mat` matrix type used throughout L3, plus
+//! structured initializers (Gaussian, orthogonal, synthetic spectra).
+//!
+//! Everything downstream (linalg, compression, runtime adapters) works in
+//! terms of row-major [`Mat<T>`]. We deliberately keep a single dense
+//! layout rather than a general strided tensor: every object in this system
+//! is a 2-D weight matrix, a factor, or a batch of feature vectors.
+
+pub mod init;
+pub mod matrix;
+
+pub use matrix::{Mat, MatError};
+
+/// Element trait: the two float types the system computes in.
+pub trait Scalar:
+    num_traits::Float + num_traits::NumAssign + std::fmt::Debug + Default + Copy + Send + Sync + 'static
+{
+    const DTYPE_NAME: &'static str;
+    fn from_f64(v: f64) -> Self;
+    fn as_f64(self) -> f64;
+}
+
+impl Scalar for f32 {
+    const DTYPE_NAME: &'static str = "f32";
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn as_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Scalar for f64 {
+    const DTYPE_NAME: &'static str = "f64";
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn as_f64(self) -> f64 {
+        self
+    }
+}

@@ -1,0 +1,46 @@
+//! Golden-data helpers: numpy-produced reference factorizations are
+//! shipped in `artifacts/data/golden_linalg.tenz` by `make artifacts`;
+//! tests that need them skip gracefully when artifacts are absent so
+//! `cargo test` stays green before the Python build step.
+
+use crate::io::tenz::TensorFile;
+use std::path::PathBuf;
+
+/// Path to a golden data file under the artifacts dir.
+pub fn golden_path(name: &str) -> PathBuf {
+    crate::artifacts_dir().join("data").join(name)
+}
+
+/// Load a golden `.tenz`, or `None` when artifacts have not been built.
+/// Set `RSIC_REQUIRE_ARTIFACTS=1` to turn the skip into a hard failure
+/// (CI after `make artifacts`).
+pub fn load_golden(name: &str) -> Option<TensorFile> {
+    let path = golden_path(name);
+    match TensorFile::read(&path) {
+        Ok(tf) => Some(tf),
+        Err(_) => {
+            if std::env::var("RSIC_REQUIRE_ARTIFACTS").map(|v| v == "1").unwrap_or(false) {
+                panic!("golden data {path:?} missing but RSIC_REQUIRE_ARTIFACTS=1");
+            }
+            eprintln!("[skip] golden data {path:?} not present (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_path_layout() {
+        let p = golden_path("x.tenz");
+        assert!(p.to_string_lossy().ends_with("data/x.tenz"));
+    }
+
+    #[test]
+    fn missing_golden_is_none() {
+        std::env::remove_var("RSIC_REQUIRE_ARTIFACTS");
+        assert!(load_golden("definitely_not_here.tenz").is_none());
+    }
+}

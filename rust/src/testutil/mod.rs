@@ -1,0 +1,42 @@
+//! Test infrastructure: a minimal property-testing runner (proptest is not
+//! in the offline crate universe) and golden-data helpers.
+
+pub mod golden;
+pub mod prop;
+
+pub use prop::{Gen, PropRunner};
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let d = (*x as f64 - *y as f64).abs();
+        assert!(d <= atol, "{what}: element {i}: {x} vs {y} (|Δ|={d} > {atol})");
+    }
+}
+
+/// Relative closeness for scalars with a floor to avoid 0/0.
+pub fn assert_relclose(a: f64, b: f64, rtol: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    let rel = (a - b).abs() / denom;
+    assert!(rel <= rtol, "{what}: {a} vs {b} (rel {rel} > {rtol})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, "ok");
+        let r = std::panic::catch_unwind(|| assert_allclose(&[1.0], &[2.0], 1e-5, "bad"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn relclose() {
+        assert_relclose(100.0, 100.5, 0.01, "ok");
+        let r = std::panic::catch_unwind(|| assert_relclose(1.0, 2.0, 0.01, "bad"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Human-readable formatting for reports and log lines.
+
+/// Format a byte count: `1.50 GiB`, `213.4 MiB`, `812 B`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a parameter count: `102.76M`, `2.36M`, `4.1K`.
+pub fn fmt_count(n: u64) -> String {
+    let v = n as f64;
+    if v >= 1e9 {
+        format!("{:.2}B", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}K", v / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Format a duration in seconds adaptively: `1.23 s`, `45.1 ms`, `890 µs`.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.1} µs", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+/// Format a compression ratio the way Table 4.1 does (compressed/original).
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.2}")
+}
+
+/// Left-pad `s` to `w` columns (for ASCII tables).
+pub fn pad_left(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(w - s.len()), s)
+    }
+}
+
+/// Right-pad `s` to `w` columns.
+pub fn pad_right(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{}", s, " ".repeat(w - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(812), "812 B");
+        assert_eq!(fmt_bytes(1024), "1.00 KiB");
+        assert_eq!(fmt_bytes(1024 * 1024 * 3 / 2), "1.50 MiB");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(102_760_448), "102.76M");
+        assert_eq!(fmt_count(2_359_296), "2.36M");
+        assert_eq!(fmt_count(4_100), "4.1K");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(2.333), "2.333 s");
+        assert_eq!(fmt_duration(0.0451), "45.10 ms");
+        assert_eq!(fmt_duration(8.9e-4), "890.0 µs");
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad_left("ab", 4), "  ab");
+        assert_eq!(pad_right("ab", 4), "ab  ");
+        assert_eq!(pad_left("abcd", 2), "abcd");
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal `log` facade backend (the crate universe has `log` but no
+//! env_logger). Verbosity from `$RSIC_LOG` (error|warn|info|debug|trace)
+//! or CLI `-v` flags.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static LOGGER: StderrLogger = StderrLogger;
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{tag}] {} — {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name; unknown names map to Info.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" | "warning" => LevelFilter::Warn,
+        "info" => LevelFilter::Info,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the stderr logger (idempotent). Level resolution order:
+/// explicit argument > `$RSIC_LOG` > Info.
+pub fn init(level: Option<LevelFilter>) {
+    let lvl = level
+        .or_else(|| std::env::var("RSIC_LOG").ok().map(|s| parse_level(&s)))
+        .unwrap_or(LevelFilter::Info);
+    if INSTALLED
+        .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok()
+    {
+        let _ = log::set_logger(&LOGGER);
+    }
+    log::set_max_level(lvl);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("debug"), LevelFilter::Debug);
+        assert_eq!(parse_level("WARN"), LevelFilter::Warn);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+    }
+
+    #[test]
+    fn init_idempotent() {
+        init(Some(LevelFilter::Warn));
+        init(Some(LevelFilter::Info)); // second call must not panic
+        log::info!("logging smoke");
+    }
+}

@@ -1,0 +1,80 @@
+//! Small shared utilities: timing, human formatting, logging, errors.
+
+pub mod humanfmt;
+pub mod logging;
+pub mod timer;
+
+pub use humanfmt::{fmt_bytes, fmt_count, fmt_duration, fmt_ratio};
+pub use timer::{Stopwatch, TimedScope};
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(a: usize, m: usize) -> usize {
+    ceil_div(a, m) * m
+}
+
+/// `⌈alpha * min(c, d)⌉` — the paper's rank rule (Section 4.2), clamped to
+/// `[1, min(c, d)]`.
+#[inline]
+pub fn rank_for_alpha(alpha: f64, c: usize, d: usize) -> usize {
+    let m = c.min(d);
+    let k = (alpha * m as f64).ceil() as usize;
+    k.clamp(1, m)
+}
+
+/// Number of worker threads to use: `$RSIC_THREADS` or available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("RSIC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(8, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 128), 0);
+        assert_eq!(round_up(1, 128), 128);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(round_up(129, 128), 256);
+    }
+
+    #[test]
+    fn rank_rule_matches_paper() {
+        // k = ceil(alpha * min(C, D)); examples from Table 4.1 geometry.
+        assert_eq!(rank_for_alpha(0.2, 1000, 1024), 200);
+        assert_eq!(rank_for_alpha(0.8, 768, 3072), 615); // ceil(0.8*768) = 615
+        assert_eq!(rank_for_alpha(1.0, 4096, 25088), 4096);
+        // Clamps.
+        assert_eq!(rank_for_alpha(0.0001, 10, 10), 1);
+        assert_eq!(rank_for_alpha(5.0, 10, 20), 10);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

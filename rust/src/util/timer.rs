@@ -1,0 +1,93 @@
+//! Wall-clock timing helpers used by the bench harness and the pipeline
+//! metrics. `std::time::Instant` based; monotonic.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch now.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time since start/reset.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Reset and return the elapsed time up to the reset.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// RAII scope timer: records elapsed seconds into a callback on drop.
+/// Used to attribute time to pipeline stages without threading timers
+/// through every call.
+pub struct TimedScope<F: FnMut(f64)> {
+    start: Instant,
+    sink: F,
+}
+
+impl<F: FnMut(f64)> TimedScope<F> {
+    pub fn new(sink: F) -> Self {
+        TimedScope { start: Instant::now(), sink }
+    }
+}
+
+impl<F: FnMut(f64)> Drop for TimedScope<F> {
+    fn drop(&mut self) {
+        let secs = self.start.elapsed().as_secs_f64();
+        (self.sink)(secs);
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let lap = sw.lap();
+        assert!(lap >= Duration::from_millis(1));
+        assert!(sw.secs() < lap.as_secs_f64() + 1.0);
+    }
+
+    #[test]
+    fn timed_scope_fires_on_drop() {
+        let mut got = -1.0f64;
+        {
+            let _t = TimedScope::new(|s| got = s);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(got >= 0.0);
+    }
+
+    #[test]
+    fn timeit_returns_value() {
+        let (v, secs) = timeit(|| 7 * 6);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Cross-validation of the from-scratch linalg against numpy golden data
+//! (artifacts/data/golden_linalg.tenz, written by `make artifacts`).
+//! Skips gracefully when artifacts are absent.
+
+use rsi_compress::compress::rsi::{rsi_factorize, RsiOptions};
+use rsi_compress::compress::NativeEngine;
+use rsi_compress::linalg::{norms, qr::qr_thin, svd::svd_via_gram};
+use rsi_compress::testutil::golden::load_golden;
+
+#[test]
+fn singular_values_match_numpy() {
+    let Some(g) = load_golden("golden_linalg.tenz") else { return };
+    for name in ["a", "b", "c"] {
+        let w = g.mat(&format!("{name}.w")).unwrap();
+        let want = g.vec_f32(&format!("{name}.s")).unwrap();
+        let svd = svd_via_gram(&w);
+        for (i, (&ws, gs)) in want.iter().zip(svd.s.iter()).enumerate() {
+            assert!(
+                (ws as f64 - gs).abs() < 1e-3 * want[0] as f64,
+                "{name}: s[{i}] numpy {ws} vs ours {gs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn qr_r_matches_numpy_up_to_sign() {
+    let Some(g) = load_golden("golden_linalg.tenz") else { return };
+    // "c" is tall (96x32): numpy qr exists.
+    let w = g.mat("c.w").unwrap();
+    let r_np = g.mat("c.r").unwrap();
+    let (_, r) = qr_thin(&w);
+    for i in 0..r.rows() {
+        for j in i..r.cols() {
+            // numpy R rows can differ by sign; ours has non-negative diag.
+            let sign = if r_np.get(i, i) < 0.0 { -1.0 } else { 1.0 };
+            let want = sign * r_np.get(i, j);
+            assert!(
+                (want - r.get(i, j)).abs() < 2e-3,
+                "R[{i},{j}]: numpy(sign-fixed) {want} vs ours {}",
+                r.get(i, j)
+            );
+        }
+    }
+}
+
+#[test]
+fn rsi_spectral_error_matches_numpy_reference() {
+    let Some(g) = load_golden("golden_linalg.tenz") else { return };
+    let w = g.mat("rsi.w").unwrap();
+    for q in [1usize, 2, 4] {
+        let want_err = g.vec_f32(&format!("rsi.err_q{q}")).unwrap()[0] as f64;
+        // Different RNG → different sketch; compare error magnitudes over
+        // a few trials (they concentrate).
+        let mut ours = 0.0;
+        let trials = 5;
+        for t in 0..trials {
+            let f = rsi_factorize(&w, 8, &RsiOptions::with_q(q, 900 + t), &NativeEngine);
+            ours += f.spectral_error(&w);
+        }
+        ours /= trials as f64;
+        assert!(
+            (ours - want_err).abs() / want_err < 0.25,
+            "q={q}: numpy err {want_err} vs ours {ours}"
+        );
+    }
+}
+
+#[test]
+fn reconstruction_against_numpy_reconstruction() {
+    let Some(g) = load_golden("golden_linalg.tenz") else { return };
+    let w = g.mat("rsi.w").unwrap();
+    // numpy's q=4 reconstruction error ≈ ours; also both ≥ optimal.
+    let recon = g.mat("rsi.recon_q4").unwrap();
+    let resid = w.sub(&recon);
+    let np_err = norms::spectral_norm(&resid, 300, 1e-10);
+    let svd = svd_via_gram(&w);
+    assert!(np_err >= svd.s[8] * 0.99, "numpy recon can't beat optimal");
+}

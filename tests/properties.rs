@@ -1,0 +1,168 @@
+//! Property-based invariants over the coordinator and the algorithm
+//! (mini-proptest runner; cases replayable by seed).
+
+use rsi_compress::compress::plan::{CompressionPlan, Method};
+use rsi_compress::compress::rsi::{rsi_factorize, OrthoStrategy, RsiOptions};
+use rsi_compress::compress::NativeEngine;
+use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+use rsi_compress::io::checkpoint::{store_weight, StoredWeight};
+use rsi_compress::io::tenz::TensorFile;
+use rsi_compress::linalg::{norms, qr, svd};
+use rsi_compress::testutil::prop::PropRunner;
+use rsi_compress::util::rank_for_alpha;
+
+#[test]
+fn prop_qr_orthonormal_and_reconstructs() {
+    PropRunner::new(24).run("qr", |g| {
+        let n = g.usize_in(1, 12);
+        let m = n + g.usize_in(0, 30);
+        let a = g.mat(m, n, 1.0);
+        let (q, r) = qr::qr_thin(&a);
+        assert!(qr::ortho_error(&q) < 1e-4);
+        let back = rsi_compress::linalg::gemm::matmul(&q, &r);
+        assert!(back.sub(&a).max_abs() < 1e-3);
+    });
+}
+
+#[test]
+fn prop_svd_reconstructs_and_sorted() {
+    PropRunner::new(16).run("svd", |g| {
+        let c = g.usize_in(2, 16);
+        let d = c + g.usize_in(0, 24);
+        let a = g.spectral_mat(c, d);
+        let s = svd::svd_via_gram(&a);
+        assert!(s.s.windows(2).all(|w| w[0] >= w[1] - 1e-9), "sorted");
+        let back = s.truncate(s.s.len());
+        assert!(back.sub(&a).max_abs() < 1e-2 * (1.0 + a.max_abs()));
+    });
+}
+
+#[test]
+fn prop_rsi_error_never_beats_optimal() {
+    // SVD optimality (Eq. 2.3): no randomized method can do better than
+    // s_{k+1}; and the factor rank is exactly k.
+    PropRunner::new(12).run("rsi-optimality", |g| {
+        let c = g.usize_in(8, 24);
+        let d = c + g.usize_in(4, 40);
+        let w = g.spectral_mat(c, d);
+        let k = g.usize_in(1, c - 1);
+        let q = g.usize_in(1, 4);
+        let ortho = *g.choice(&[
+            OrthoStrategy::Householder,
+            OrthoStrategy::CholeskyQr2,
+            OrthoStrategy::NewtonSchulz(14),
+        ]);
+        let opts = RsiOptions { q, oversample: g.usize_in(0, 3), ortho, seed: g.seed() };
+        let f = rsi_factorize(&w, k, &opts, &NativeEngine);
+        assert_eq!(f.rank(), k);
+        let exact = svd::svd_via_gram(&w);
+        let optimal = exact.s[k];
+        let err = f.spectral_error(&w);
+        assert!(err >= optimal * 0.995, "err {err} < optimal {optimal}");
+        // Factors finite.
+        assert!(f.a.data().iter().all(|v| v.is_finite()));
+        assert!(f.b.data().iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn prop_padding_preserves_singular_values() {
+    PropRunner::new(16).run("padding-spectrum", |g| {
+        let c = g.usize_in(2, 12);
+        let d = g.usize_in(2, 20);
+        let w = g.mat(c, d, 1.0);
+        let p = w.pad_to(c + g.usize_in(1, 16), d + g.usize_in(1, 16));
+        let s1 = norms::spectral_norm(&w, 300, 1e-10);
+        let s1p = norms::spectral_norm(&p, 300, 1e-10);
+        assert!((s1 - s1p).abs() < 1e-3 * s1.max(1.0), "{s1} vs {s1p}");
+        assert!((w.fro_norm() - p.fro_norm()).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_rank_rule_bounds() {
+    PropRunner::new(64).run("rank-rule", |g| {
+        let c = g.usize_in(1, 5000);
+        let d = g.usize_in(1, 5000);
+        let alpha = g.f64_in(0.001, 1.0);
+        let k = rank_for_alpha(alpha, c, d);
+        assert!(k >= 1 && k <= c.min(d));
+        // Monotone in alpha.
+        let k2 = rank_for_alpha((alpha * 1.5).min(1.0), c, d);
+        assert!(k2 >= k);
+    });
+}
+
+#[test]
+fn prop_pipeline_every_layer_compressed_exactly_once() {
+    PropRunner::new(6).run("pipeline-exactly-once", |g| {
+        let n_layers = g.usize_in(1, 6);
+        let mut tf = TensorFile::new();
+        let mut dims = Vec::new();
+        for i in 0..n_layers {
+            let c = g.usize_in(4, 20);
+            let d = g.usize_in(4, 20);
+            dims.push((c, d));
+            store_weight(&mut tf, &format!("layers.{i}"), &StoredWeight::Dense(g.mat(c, d, 1.0)));
+        }
+        let alpha = g.f64_in(0.1, 0.9);
+        let plan = CompressionPlan::uniform_alpha(
+            alpha,
+            Method::Rsi(RsiOptions::with_q(g.usize_in(1, 3), g.seed())),
+        );
+        let workers = g.usize_in(1, 5);
+        let queue = g.usize_in(1, 4);
+        let pipe = Pipeline::new(PipelineConfig {
+            workers,
+            queue_depth: queue,
+            ..Default::default()
+        })
+        .unwrap();
+        let report = pipe.compress_checkpoint(&tf, &plan).unwrap();
+        assert_eq!(report.outcomes.len(), n_layers);
+        assert!(report.outcomes.iter().all(|o| o.error.is_none()));
+        for i in 0..n_layers {
+            let (c, d) = dims[i];
+            let a = report.compressed.mat(&format!("layers.{i}.weight.A")).unwrap();
+            let b = report.compressed.mat(&format!("layers.{i}.weight.B")).unwrap();
+            let k = rank_for_alpha(alpha, c, d);
+            assert_eq!(a.shape(), (c, k));
+            assert_eq!(b.shape(), (k, d));
+            assert!(!report.compressed.contains(&format!("layers.{i}.weight")));
+        }
+    });
+}
+
+#[test]
+fn prop_factored_apply_equals_reconstructed_matmul() {
+    PropRunner::new(16).run("factored-apply", |g| {
+        let c = g.usize_in(2, 16);
+        let d = g.usize_in(2, 24);
+        let w = g.spectral_mat(c, d);
+        let k = g.usize_in(1, c.min(d));
+        let f = rsi_factorize(&w, k, &RsiOptions::with_q(2, g.seed()), &NativeEngine);
+        let rows = g.usize_in(1, 8);
+        let h = g.mat(rows, d, 1.0);
+        let fast = f.apply(&h);
+        let dense = rsi_compress::linalg::gemm::matmul_nt(&h, &f.reconstruct());
+        assert!(fast.sub(&dense).max_abs() < 1e-3 * (1.0 + dense.max_abs()));
+    });
+}
+
+#[test]
+fn prop_tenz_roundtrip_arbitrary() {
+    PropRunner::new(24).run("tenz-roundtrip", |g| {
+        let mut tf = TensorFile::new();
+        let n = g.usize_in(0, 6);
+        for i in 0..n {
+            let r = g.usize_in(0, 8);
+            let c = g.usize_in(0, 8);
+            tf.insert_mat(format!("t{i}"), &g.mat(r, c, 3.0));
+        }
+        let back = TensorFile::from_bytes(&tf.to_bytes()).unwrap();
+        assert_eq!(back.len(), tf.len());
+        for i in 0..n {
+            assert_eq!(back.mat(&format!("t{i}")).unwrap(), tf.mat(&format!("t{i}")).unwrap());
+        }
+    });
+}

@@ -1,0 +1,177 @@
+//! Integration over the PJRT runtime: artifact GEMMs vs native linalg,
+//! fused RSI vs stepped, forward artifacts vs native forward, Pallas
+//! softmax vs native softmax. All tests skip when `make artifacts` hasn't
+//! run.
+
+use rsi_compress::compress::rsi::{rsi_factorize, RsiOptions};
+use rsi_compress::compress::{GemmEngine, NativeEngine};
+use rsi_compress::io::tenz::TensorFile;
+use rsi_compress::linalg::gemm;
+use rsi_compress::model::ModelKind;
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::runtime::{ArtifactRegistry, ExecutableCache, XlaFusedRsi, XlaGemmEngine};
+use rsi_compress::tensor::init::gaussian;
+use std::sync::Arc;
+
+fn registry() -> Option<Arc<ArtifactRegistry>> {
+    match ArtifactRegistry::load_default() {
+        Ok(r) => Some(Arc::new(r)),
+        Err(e) => {
+            eprintln!("[skip] artifacts not built: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn xla_gemm_matches_native_exact_bucket() {
+    let Some(reg) = registry() else { return };
+    let cache = Arc::new(ExecutableCache::new());
+    let engine = XlaGemmEngine::new(reg, cache);
+    let mut g = GaussianSource::new(1);
+    let w = gaussian(192, 768, 0.5, &mut g);
+    let y = gaussian(768, 64, 0.5, &mut g);
+    let got = engine.wy(&w, &y);
+    let want = gemm::matmul(&w, &y);
+    assert!(got.sub(&want).max_abs() < 1e-2, "wy diff {}", got.sub(&want).max_abs());
+    let x = got;
+    let got2 = engine.wtx(&w, &x);
+    let want2 = gemm::matmul_tn(&w, &x);
+    assert!(got2.sub(&want2).max_abs() < 1e-1, "wtx diff {}", got2.sub(&want2).max_abs());
+}
+
+#[test]
+fn xla_gemm_padded_bucket_correct() {
+    // Odd logical shape → padded into a bigger bucket, sliced back.
+    let Some(reg) = registry() else { return };
+    let cache = Arc::new(ExecutableCache::new());
+    let engine = XlaGemmEngine::new(reg, cache);
+    let mut g = GaussianSource::new(2);
+    let w = gaussian(100, 700, 0.5, &mut g); // → (128|192, 768) bucket
+    let y = gaussian(700, 30, 0.5, &mut g);
+    let got = engine.wy(&w, &y);
+    assert_eq!(got.shape(), (100, 30));
+    let want = gemm::matmul(&w, &y);
+    assert!(got.sub(&want).max_abs() < 1e-2);
+}
+
+#[test]
+fn stepped_rsi_via_artifacts_matches_native_quality() {
+    let Some(reg) = registry() else { return };
+    let cache = Arc::new(ExecutableCache::new());
+    let engine = XlaGemmEngine::new(reg, cache);
+    let mut g = GaussianSource::new(3);
+    let spec = rsi_compress::tensor::init::SpectrumShape::pretrained_like().values(192);
+    let w = rsi_compress::tensor::init::matrix_with_spectrum(192, 768, &spec, &mut g);
+    let opts = RsiOptions::with_q(2, 77);
+    let f_native = rsi_factorize(&w, 48, &opts, &NativeEngine);
+    let f_xla = rsi_factorize(&w, 48, &opts, &engine);
+    // Same sketch seed ⇒ same subspace up to fp noise.
+    let e1 = f_native.spectral_error(&w);
+    let e2 = f_xla.spectral_error(&w);
+    assert!((e1 - e2).abs() / e1 < 0.02, "native {e1} vs xla {e2}");
+}
+
+#[test]
+fn fused_rsi_runs_and_improves_with_q() {
+    let Some(reg) = registry() else { return };
+    let cache = Arc::new(ExecutableCache::new());
+    let fused = XlaFusedRsi::new(reg, cache);
+    if !fused.supports(192, 768, 64, 1) {
+        eprintln!("[skip] no fused artifacts");
+        return;
+    }
+    let mut g = GaussianSource::new(4);
+    let spec = rsi_compress::tensor::init::SpectrumShape::pretrained_like().values(192);
+    let w = rsi_compress::tensor::init::matrix_with_spectrum(192, 768, &spec, &mut g);
+    // Average over sketches: single-draw orderings are noisy at this size.
+    let mean_err = |q: usize| -> f64 {
+        (0..3u64)
+            .map(|t| fused.factorize(&w, 64, q, 5 + t).unwrap().spectral_error(&w))
+            .sum::<f64>()
+            / 3.0
+    };
+    let e1 = mean_err(1);
+    let e4 = mean_err(4);
+    assert!(e4 <= e1 * 1.02, "fused: q=4 mean err {e4} !<= q=1 mean err {e1}");
+    assert!(e4 >= spec[64] * 0.98, "can't beat optimal");
+    // And the fused (Newton-Schulz) path must match the native
+    // (Householder) path's quality for the same q.
+    let e4_native = (0..3u64)
+        .map(|t| {
+            rsi_factorize(&w, 64, &RsiOptions::with_q(4, 5 + t), &NativeEngine)
+                .spectral_error(&w)
+        })
+        .sum::<f64>()
+        / 3.0;
+    assert!(
+        (e4 - e4_native).abs() / e4_native < 0.15,
+        "fused q=4 {e4} vs native {e4_native}"
+    );
+}
+
+#[test]
+fn forward_artifact_matches_native_mlp() {
+    let Some(reg) = registry() else { return };
+    let cache = Arc::new(ExecutableCache::new());
+    let Ok(evaluator) =
+        rsi_compress::eval::ModelEvaluator::load(&reg, &cache, ModelKind::SynthVgg)
+    else {
+        eprintln!("[skip] no synthvgg forward");
+        return;
+    };
+    let ckpt_path = reg.abs_path(reg.find_data("synthvgg.tenz").unwrap());
+    let ckpt = TensorFile::read(ckpt_path).unwrap();
+    let logits = evaluator.logits(&ckpt).unwrap();
+    // Native forward for the first few samples.
+    let w1 = ckpt.mat("layers.0.weight").unwrap();
+    let b1 = ckpt.vec_f32("layers.0.bias").unwrap();
+    let w2 = ckpt.mat("layers.1.weight").unwrap();
+    let b2 = ckpt.vec_f32("layers.1.bias").unwrap();
+    let w3 = ckpt.mat("head.weight").unwrap();
+    let b3 = ckpt.vec_f32("head.bias").unwrap();
+    let n = 8;
+    let h = evaluator.eval_set.data.slice_topleft(n, evaluator.eval_set.data.cols());
+    let relu_bias = |mut m: rsi_compress::tensor::Mat<f32>, b: &[f32]| {
+        for r in 0..m.rows() {
+            for (v, bb) in m.row_mut(r).iter_mut().zip(b) {
+                *v = (*v + *bb).max(0.0);
+            }
+        }
+        m
+    };
+    let z1 = relu_bias(gemm::matmul_nt(&h, &w1), &b1);
+    let z2 = relu_bias(gemm::matmul_nt(&z1, &w2), &b2);
+    let mut want = gemm::matmul_nt(&z2, &w3);
+    for r in 0..n {
+        for (v, bb) in want.row_mut(r).iter_mut().zip(&b3) {
+            *v += *bb;
+        }
+    }
+    for r in 0..n {
+        for c in 0..want.cols() {
+            let a = logits.get(r, c);
+            let b = want.get(r, c);
+            assert!(
+                (a - b).abs() < 0.05 * b.abs().max(1.0),
+                "logit ({r},{c}): artifact {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_cache_hits_across_calls() {
+    let Some(reg) = registry() else { return };
+    let cache = Arc::new(ExecutableCache::new());
+    let engine = XlaGemmEngine::new(reg, cache.clone());
+    let mut g = GaussianSource::new(6);
+    let w = gaussian(192, 192, 0.5, &mut g);
+    let y = gaussian(192, 32, 0.5, &mut g);
+    let _ = engine.wy(&w, &y);
+    let _ = engine.wy(&w, &y);
+    let _ = engine.wy(&w, &y);
+    let (hits, misses) = cache.stats();
+    assert_eq!(misses, 1, "one compile only");
+    assert!(hits >= 2);
+}
