@@ -6,6 +6,7 @@
 
 use rsi_compress::cli::experiments::table_41;
 use rsi_compress::compress::backend::BackendKind;
+use rsi_compress::compress::rsi::RsiOptions;
 use rsi_compress::model::ModelKind;
 use rsi_compress::report::write_report;
 
@@ -14,7 +15,8 @@ fn main() -> anyhow::Result<()> {
     let alphas: Vec<f64> = if fast { vec![0.4] } else { vec![0.8, 0.6, 0.4, 0.2] };
     let qs: Vec<usize> = if fast { vec![1, 4] } else { vec![1, 2, 3, 4] };
     for model in [ModelKind::SynthVgg, ModelKind::SynthVit] {
-        let table = match table_41(model, &alphas, &qs, BackendKind::Native, 42) {
+        let opts = RsiOptions { seed: 42, ..Default::default() };
+        let table = match table_41(model, &alphas, &qs, BackendKind::Native, opts) {
             Ok(t) => t,
             Err(e) => {
                 eprintln!("[skip] table41 needs artifacts: {e:#}");

@@ -9,6 +9,7 @@
 
 use rsi_compress::cli::experiments;
 use rsi_compress::compress::backend::BackendKind;
+use rsi_compress::compress::rsi::RsiOptions;
 use rsi_compress::model::ModelKind;
 
 fn main() -> anyhow::Result<()> {
@@ -18,7 +19,8 @@ fn main() -> anyhow::Result<()> {
 
     for model in [ModelKind::SynthVgg, ModelKind::SynthVit] {
         println!("=== {} ===", model.name());
-        let table = experiments::table_41(model, alphas, qs, BackendKind::Native, 42)?;
+        let opts = RsiOptions { seed: 42, ..Default::default() };
+        let table = experiments::table_41(model, alphas, qs, BackendKind::Native, opts)?;
         println!("{}", table.render());
     }
 

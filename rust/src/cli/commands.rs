@@ -30,6 +30,7 @@ rsic — low-rank compression of pretrained models via randomized subspace itera
 
 USAGE:
   rsic compress --model <synthvgg|synthvit> --alpha <a> [--q N] [--backend B] [--out F] [--validate]
+                [--method rsi|svd] [--ortho qr|cholqr2|ns[:N]] [--oversample P]
                 [--adaptive <budget-ratio>]   # section-5 adaptive layer-wise ranks
   rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
   rsic run <config.toml>                       # config-driven sweep (see configs/)
@@ -83,13 +84,35 @@ fn load_checkpoint(args: &Args, model: ModelKind) -> Result<TensorFile> {
     Ok(TensorFile::read(registry.abs_path(entry))?)
 }
 
+/// Build the method from CLI options (`--method`, `--q`, `--ortho`,
+/// `--oversample`, `--seed`).
+fn method_of(args: &Args) -> Result<Method> {
+    let mut opts = RsiOptions::with_q(args.usize_or("q", 4)?, args.u64_or("seed", 42)?);
+    if let Some(o) = args.opt("ortho") {
+        opts.ortho = crate::compress::rsi::OrthoStrategy::parse(o)
+            .with_context(|| format!("bad --ortho {o:?} (householder|cholqr2|ns[:N])"))?;
+    }
+    opts.oversample = args.usize_or("oversample", 0)?;
+    match args.str_or("method", "rsi") {
+        "rsi" => Ok(Method::Rsi(opts)),
+        // RSVD is RSI with q = 1 by definition; an explicit conflicting
+        // --q is a contradiction, not something to silently override.
+        "rsvd" => {
+            if args.opt("q").is_some() && opts.q != 1 {
+                bail!("--method rsvd means q=1; drop --q or use --method rsi");
+            }
+            Ok(Method::Rsi(RsiOptions { q: 1, ..opts }))
+        }
+        "svd" | "exact-svd" => Ok(Method::ExactSvd),
+        other => bail!("unknown --method {other:?} (rsi|rsvd|svd)"),
+    }
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let model = model_of(args)?;
     let alpha = args.f64_or("alpha", 0.4)?;
-    let q = args.usize_or("q", 4)?;
-    let seed = args.u64_or("seed", 42)?;
     let ckpt = load_checkpoint(args, model)?;
-    let method = Method::Rsi(RsiOptions::with_q(q, seed));
+    let method = method_of(args)?;
     let plan = if let Some(budget) = args.opt("adaptive") {
         // Paper section 5 future work: adaptive layer-wise ranks from the
         // shipped exact spectra, under a global parameter budget.
@@ -191,12 +214,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     println!("experiment {:?}: model {} via {:?}", cfg.name, cfg.model.name, cfg.pipeline.backend);
     let model = ModelKind::parse(&cfg.model.name).context("config model.name")?;
+    let base = RsiOptions {
+        seed: cfg.sweep.seed,
+        ortho: cfg.sweep.ortho,
+        oversample: cfg.pipeline.oversample,
+        ..Default::default()
+    };
     let table = experiments::table_41(
         model,
         &cfg.sweep.alphas,
         &cfg.sweep.qs,
         cfg.pipeline.backend,
-        cfg.sweep.seed,
+        base,
     )?;
     println!("{}", table.render());
     let base = format!("{}/{}", cfg.out_dir, cfg.name);
@@ -214,14 +243,14 @@ fn cmd_table(args: &Args) -> Result<()> {
     let alphas = args.f64_list_or("alphas", &[0.8, 0.6, 0.4, 0.2])?;
     let qs = args.usize_list_or("qs", &[1, 2, 3, 4])?;
     let backend = backend_of(args)?;
-    let seed = args.u64_or("seed", 42)?;
+    let base = RsiOptions { seed: args.u64_or("seed", 42)?, ..Default::default() };
     let out_dir = args.str_or("out-dir", "reports");
     let models = match args.str_or("model", "both") {
         "both" => vec![ModelKind::SynthVgg, ModelKind::SynthVit],
         m => vec![ModelKind::parse(m).context("bad --model")?],
     };
     for model in models {
-        let table = experiments::table_41(model, &alphas, &qs, backend, seed)?;
+        let table = experiments::table_41(model, &alphas, &qs, backend, base)?;
         println!("{}", table.render());
         let base = format!("{out_dir}/table41_{}", model.name());
         write_report(format!("{base}.txt"), &table.render())?;
@@ -331,5 +360,40 @@ mod tests {
         assert_eq!(backend_of(&args).unwrap(), BackendKind::XlaFused);
         let bad = Args::parse(["x".to_string(), "--backend".into(), "quantum".into()]);
         assert!(backend_of(&bad).is_err());
+    }
+
+    #[test]
+    fn method_parsing() {
+        use crate::compress::rsi::OrthoStrategy;
+        let parse = |s: &str| {
+            Args::parse(s.split_whitespace().map(|t| t.to_string()))
+        };
+        // Defaults: RSI with q=4.
+        match method_of(&parse("compress")).unwrap() {
+            Method::Rsi(o) => {
+                assert_eq!(o.q, 4);
+                assert_eq!(o.ortho, OrthoStrategy::Householder);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Explicit Newton–Schulz count + oversampling flow into RsiOptions.
+        match method_of(&parse("compress --q 2 --ortho ns:20 --oversample 8")).unwrap() {
+            Method::Rsi(o) => {
+                assert_eq!(o.q, 2);
+                assert_eq!(o.ortho, OrthoStrategy::NewtonSchulz(20));
+                assert_eq!(o.oversample, 8);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(method_of(&parse("compress --method svd")).unwrap(), Method::ExactSvd);
+        // rsvd is q=1 by definition; a conflicting explicit --q is refused.
+        match method_of(&parse("compress --method rsvd")).unwrap() {
+            Method::Rsi(o) => assert_eq!(o.q, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(method_of(&parse("compress --method rsvd --q 1")).is_ok());
+        assert!(method_of(&parse("compress --method rsvd --q 4")).is_err());
+        assert!(method_of(&parse("compress --ortho warp")).is_err());
+        assert!(method_of(&parse("compress --method quantum")).is_err());
     }
 }

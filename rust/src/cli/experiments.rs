@@ -163,12 +163,16 @@ pub fn figure_11(layer: &LayerUnderTest, ranks: &[usize], trials: usize, seed: u
 }
 
 /// One Table 4.1 half (one model): rows over α × q.
+///
+/// `base` carries the sweep-invariant RSI options (seed, ortho strategy,
+/// oversampling); each cell overrides `q` and derives its own seed. One
+/// pipeline (and therefore one worker pool) serves the whole grid.
 pub fn table_41(
     model: ModelKind,
     alphas: &[f64],
     qs: &[usize],
     backend: BackendKind,
-    seed: u64,
+    base: RsiOptions,
 ) -> Result<Table> {
     let registry = Arc::new(ArtifactRegistry::load_default()?);
     let cache = Arc::new(ExecutableCache::new());
@@ -179,12 +183,12 @@ pub fn table_41(
         .with_context(|| format!("{} not in manifest", def.ckpt_file))?;
     let ckpt = TensorFile::read(registry.abs_path(ckpt_entry))?;
 
-    let base = evaluator.evaluate(&ckpt)?;
+    let baseline = evaluator.evaluate(&ckpt)?;
     log::info!(
         "{}: uncompressed top1 {:.2}% top5 {:.2}% (build-time: {:.2}%/{:.2}%)",
         model.name(),
-        base.top1 * 100.0,
-        base.top5 * 100.0,
+        baseline.top1 * 100.0,
+        baseline.top5 * 100.0,
         evaluator.eval_set.top1_uncompressed * 100.0,
         evaluator.eval_set.top5_uncompressed * 100.0,
     );
@@ -193,21 +197,20 @@ pub fn table_41(
         format!(
             "Table 4.1 — {} (uncompressed: {:.2}%/{:.2}%)",
             model.name(),
-            base.top1 * 100.0,
-            base.top5 * 100.0
+            baseline.top1 * 100.0,
+            baseline.top5 * 100.0
         ),
         &["alpha", "q", "Time", "Ratio", "Top-1", "Top-5"],
     );
+    let pipe = Pipeline::new(PipelineConfig { backend, ..Default::default() })?;
     for &alpha in alphas {
         for &q in qs {
-            let plan = CompressionPlan::uniform_alpha(
-                alpha,
-                Method::Rsi(RsiOptions::with_q(q, derive_seed(seed, "table41", q as u64))),
-            );
-            let pipe = Pipeline::new(PipelineConfig {
-                backend,
-                ..Default::default()
-            })?;
+            let opts = RsiOptions {
+                q: q.max(1),
+                seed: derive_seed(base.seed, "table41", q as u64),
+                ..base
+            };
+            let plan = CompressionPlan::uniform_alpha(alpha, Method::Rsi(opts));
             let report = pipe.compress_checkpoint(&ckpt, &plan)?;
             let acc = evaluator.evaluate(&report.compressed)?;
             table.row(&[

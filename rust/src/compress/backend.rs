@@ -24,6 +24,21 @@ pub trait GemmEngine: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// Engines behind `Arc` are engines too — lets `RsiFactorizer<E>` stay
+/// monomorphized for the native path while accepting shared dynamic
+/// engines (`Arc<dyn GemmEngine>`) from backend resources.
+impl<E: GemmEngine + ?Sized> GemmEngine for std::sync::Arc<E> {
+    fn wy(&self, w: &Mat<f32>, y: &Mat<f32>) -> Mat<f32> {
+        (**self).wy(w, y)
+    }
+    fn wtx(&self, w: &Mat<f32>, x: &Mat<f32>) -> Mat<f32> {
+        (**self).wtx(w, x)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
 /// Pure-Rust threaded GEMM engine.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeEngine;
@@ -67,6 +82,12 @@ impl BackendKind {
             BackendKind::XlaStepped => "xla-stepped",
             BackendKind::XlaFused => "xla-fused",
         }
+    }
+
+    /// Whether this backend needs the AOT artifact registry (and therefore
+    /// PJRT runtime resources) to operate.
+    pub fn needs_artifacts(self) -> bool {
+        !matches!(self, BackendKind::Native)
     }
 }
 

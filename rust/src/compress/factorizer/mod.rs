@@ -1,0 +1,266 @@
+//! The `Factorizer` abstraction: *one* interface for every way this crate
+//! can turn a weight matrix into a rank-k factorization.
+//!
+//! The paper presents RSI as one point in a family of strategies — exact
+//! SVD (the optimal baseline), RSVD (q = 1), RSI with varying q and
+//! orthonormalization, and the fused whole-algorithm XLA graph. Before
+//! this module existed, the pipeline dispatched over a hardcoded
+//! `match (Method, BackendKind)`, so every new strategy meant editing the
+//! pipeline, the CLI, and the config in lockstep. Now:
+//!
+//! * [`Factorizer`] — the strategy interface (`factorize` + `name`).
+//! * [`ExactSvdFactorizer`] — truncated SVD via the Gram eigensolve.
+//! * [`RsiFactorizer`] — Algorithm 3.1 over any [`GemmEngine`].
+//! * [`FusedXlaFactorizer`] — the whole-RSI AOT graph; *fails* on shapes
+//!   its artifact buckets don't cover, by design.
+//! * [`WithFallback`] — explicit composition: try a primary factorizer,
+//!   fall back to another on failure. The xla-fused default is
+//!   `WithFallback(FusedXlaFactorizer, RsiFactorizer<stepped>)`, making
+//!   the old implicit fallback path a visible, testable object.
+//! * [`registry::FactorizerRegistry`] — resolves `(Method, BackendKind)`
+//!   to a factorizer. Adding a method or backend is one registry entry;
+//!   the pipeline never inspects methods or backends again.
+//!
+//! `compress` stays free of PJRT/runtime types: the fused executor is
+//! abstracted as [`FusedRsiExec`] (implemented by
+//! `runtime::XlaFusedRsi`), and [`BackendResources`] carries whatever
+//! engines the selected backend constructed. See DESIGN.md §Factorizer.
+
+pub mod registry;
+
+pub use registry::{BackendResources, FactorizerRegistry};
+
+use super::backend::GemmEngine;
+use super::factor::Factorization;
+use super::rsi::{rsi_factorize, RsiOptions};
+use crate::linalg::svd::svd_via_gram;
+use crate::rng::derive_seed;
+use crate::tensor::Mat;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A strategy that factors one weight matrix to rank k.
+///
+/// Implementations must be `Send + Sync`: the pipeline shares one
+/// factorizer across all worker threads of a run.
+pub trait Factorizer: Send + Sync {
+    /// Factor `w` (C×D) to rank `k`. `layer` is the weight's name in the
+    /// checkpoint — used to derive per-layer decorrelated sketch seeds and
+    /// for error messages.
+    fn factorize(&self, w: &Mat<f32>, k: usize, layer: &str) -> Result<Factorization>;
+
+    /// Human-readable strategy name for reports and logs.
+    fn name(&self) -> String;
+}
+
+/// Executor for the fused whole-Algorithm-3.1 path. Implemented by
+/// `runtime::XlaFusedRsi`; kept as a trait so this module (and its tests)
+/// never touch PJRT types.
+pub trait FusedRsiExec: Send + Sync {
+    /// True when a compiled artifact covers this (C, D, k, q) bucket.
+    fn supports(&self, c: usize, d: usize, k: usize, q: usize) -> bool;
+    /// Run the fused graph and finalize to a rank-k factorization.
+    fn factorize(&self, w: &Mat<f32>, k: usize, q: usize, seed: u64) -> Result<Factorization>;
+}
+
+/// Exact truncated SVD — the paper's optimal baseline (Eq. 2.3).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExactSvdFactorizer;
+
+impl Factorizer for ExactSvdFactorizer {
+    fn factorize(&self, w: &Mat<f32>, k: usize, _layer: &str) -> Result<Factorization> {
+        let svd = svd_via_gram(w);
+        let (a, b) = svd.factors(k);
+        Ok(Factorization { a, b, s: svd.s[..k.min(svd.s.len())].to_vec() })
+    }
+
+    fn name(&self) -> String {
+        "exact-svd".into()
+    }
+}
+
+/// Randomized subspace iteration over a pluggable GEMM engine.
+///
+/// The engine is a type parameter so the native path stays monomorphized
+/// (no virtual dispatch in the GEMM hot loop); backends that only exist
+/// behind `Arc<dyn GemmEngine>` plug in through the blanket
+/// `GemmEngine for Arc<E>` impl.
+pub struct RsiFactorizer<E: GemmEngine> {
+    opts: RsiOptions,
+    engine: E,
+}
+
+impl<E: GemmEngine> RsiFactorizer<E> {
+    pub fn new(opts: RsiOptions, engine: E) -> Self {
+        RsiFactorizer { opts, engine }
+    }
+
+    pub fn options(&self) -> &RsiOptions {
+        &self.opts
+    }
+}
+
+impl<E: GemmEngine> Factorizer for RsiFactorizer<E> {
+    fn factorize(&self, w: &Mat<f32>, k: usize, layer: &str) -> Result<Factorization> {
+        // Per-layer decorrelated sketch seed.
+        let mut opts = self.opts;
+        opts.seed = derive_seed(opts.seed, layer, 0);
+        Ok(rsi_factorize(w, k, &opts, &self.engine))
+    }
+
+    fn name(&self) -> String {
+        let method = if self.opts.q == 1 {
+            "rsvd".to_string()
+        } else {
+            format!("rsi(q={})", self.opts.q)
+        };
+        format!("{method}[{}]", self.engine.name())
+    }
+}
+
+/// Whole Algorithm 3.1 as one compiled graph. Errors when no artifact
+/// bucket covers the shape — compose with [`WithFallback`] for the
+/// degrade-to-stepped behaviour the pipeline ships by default.
+pub struct FusedXlaFactorizer {
+    opts: RsiOptions,
+    exec: Arc<dyn FusedRsiExec>,
+}
+
+impl FusedXlaFactorizer {
+    pub fn new(opts: RsiOptions, exec: Arc<dyn FusedRsiExec>) -> Self {
+        FusedXlaFactorizer { opts, exec }
+    }
+}
+
+impl Factorizer for FusedXlaFactorizer {
+    fn factorize(&self, w: &Mat<f32>, k: usize, layer: &str) -> Result<Factorization> {
+        let (c, d) = w.shape();
+        let q = self.opts.q.max(1);
+        anyhow::ensure!(
+            self.exec.supports(c, d, k, q),
+            "no rsi_fused artifact covers ({c},{d},k={k},q={q})"
+        );
+        let seed = derive_seed(self.opts.seed, layer, 0);
+        self.exec.factorize(w, k, q, seed)
+    }
+
+    fn name(&self) -> String {
+        format!("rsi-fused(q={})", self.opts.q.max(1))
+    }
+}
+
+/// Explicit fallback composition: run `primary`; on any error, log it and
+/// run `fallback`. Replaces the implicit `supports()` branch the pipeline
+/// used to hide inside its dispatch `match`.
+pub struct WithFallback {
+    primary: Arc<dyn Factorizer>,
+    fallback: Arc<dyn Factorizer>,
+}
+
+impl WithFallback {
+    pub fn new(primary: Arc<dyn Factorizer>, fallback: Arc<dyn Factorizer>) -> Self {
+        WithFallback { primary, fallback }
+    }
+}
+
+impl Factorizer for WithFallback {
+    fn factorize(&self, w: &Mat<f32>, k: usize, layer: &str) -> Result<Factorization> {
+        match self.primary.factorize(w, k, layer) {
+            Ok(f) => Ok(f),
+            Err(e) => {
+                // Visible by default: a genuine primary-path failure
+                // (not just missing artifact coverage) that degrades to
+                // the fallback must not hide at debug level, or a broken
+                // fused deployment just looks mysteriously slow.
+                log::warn!(
+                    "{layer}: {} failed ({e:#}); falling back to {}",
+                    self.primary.name(),
+                    self.fallback.name()
+                );
+                self.fallback.factorize(w, k, layer)
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("{}→{}", self.primary.name(), self.fallback.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::backend::NativeEngine;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::{matrix_with_spectrum, SpectrumShape};
+
+    fn test_matrix(c: usize, d: usize, seed: u64) -> Mat<f32> {
+        let mut g = GaussianSource::new(seed);
+        let spec = SpectrumShape::pretrained_like().values(c.min(d));
+        matrix_with_spectrum(c, d, &spec, &mut g)
+    }
+
+    #[test]
+    fn exact_svd_factorizer_matches_direct_svd() {
+        let w = test_matrix(20, 36, 1);
+        let k = 5;
+        let f = ExactSvdFactorizer.factorize(&w, k, "layers.0").unwrap();
+        assert_eq!(f.rank(), k);
+        let svd = svd_via_gram(&w);
+        // SVD is optimal: error equals s_{k+1} (up to estimator noise).
+        let err = f.spectral_error(&w);
+        let rel = (err - svd.s[k]).abs() / svd.s[k].max(1e-12);
+        assert!(rel < 0.05, "err {err} vs s_k+1 {}", svd.s[k]);
+    }
+
+    #[test]
+    fn rsi_factorizer_derives_per_layer_seeds() {
+        let w = test_matrix(24, 48, 2);
+        let fz = RsiFactorizer::new(RsiOptions::with_q(2, 7), NativeEngine);
+        let f0 = fz.factorize(&w, 6, "layers.0").unwrap();
+        let f0_again = fz.factorize(&w, 6, "layers.0").unwrap();
+        let f1 = fz.factorize(&w, 6, "layers.1").unwrap();
+        // Deterministic per layer, decorrelated across layers.
+        assert_eq!(f0.a, f0_again.a);
+        assert_ne!(f0.a, f1.a);
+    }
+
+    #[test]
+    fn rsi_factorizer_over_dyn_engine() {
+        let w = test_matrix(16, 30, 3);
+        let engine: Arc<dyn GemmEngine> = Arc::new(NativeEngine);
+        let fz = RsiFactorizer::new(RsiOptions::with_q(2, 3), engine);
+        let f = fz.factorize(&w, 4, "l").unwrap();
+        assert_eq!(f.rank(), 4);
+        assert!(fz.name().contains("native"));
+    }
+
+    struct NeverFused;
+    impl FusedRsiExec for NeverFused {
+        fn supports(&self, _c: usize, _d: usize, _k: usize, _q: usize) -> bool {
+            false
+        }
+        fn factorize(&self, _w: &Mat<f32>, _k: usize, _q: usize, _seed: u64) -> Result<Factorization> {
+            anyhow::bail!("unreachable: supports() is false")
+        }
+    }
+
+    #[test]
+    fn fused_errors_without_coverage_and_fallback_recovers() {
+        let w = test_matrix(12, 20, 4);
+        let opts = RsiOptions::with_q(2, 11);
+        let fused = FusedXlaFactorizer::new(opts, Arc::new(NeverFused));
+        assert!(fused.factorize(&w, 3, "l").is_err());
+
+        let composed = WithFallback::new(
+            Arc::new(FusedXlaFactorizer::new(opts, Arc::new(NeverFused))),
+            Arc::new(RsiFactorizer::new(opts, NativeEngine)),
+        );
+        let f = composed.factorize(&w, 3, "l").unwrap();
+        assert_eq!(f.rank(), 3);
+        // Fallback result is exactly the stepped path's result.
+        let direct = RsiFactorizer::new(opts, NativeEngine).factorize(&w, 3, "l").unwrap();
+        assert_eq!(f.a, direct.a);
+        assert!(composed.name().contains("→"));
+    }
+}

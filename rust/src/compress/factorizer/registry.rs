@@ -1,0 +1,217 @@
+//! Resolving `(Method, BackendKind)` → [`Factorizer`].
+//!
+//! The registry is a list of `(method key, backend, builder)` entries.
+//! Resolution prefers an exact backend match, then a wildcard entry
+//! (`backend: None`) — exact SVD, for example, is backend-agnostic and
+//! registers once as a wildcard. Builders receive the concrete [`Method`]
+//! (for its options) and the [`BackendResources`] the pipeline
+//! constructed for its backend, and return a shareable factorizer.
+//!
+//! Adding a new method end-to-end:
+//!
+//! 1. implement [`Factorizer`] in this module (one file),
+//! 2. register a builder under a key,
+//! 3. plan with `Method::Custom("key")` (or a new `Method` variant if it
+//!    carries options).
+//!
+//! The pipeline, CLI, and config never change.
+
+use super::{
+    ExactSvdFactorizer, Factorizer, FusedRsiExec, FusedXlaFactorizer, RsiFactorizer, WithFallback,
+};
+use crate::compress::backend::{BackendKind, GemmEngine, NativeEngine};
+use crate::compress::plan::Method;
+use crate::compress::rsi::RsiOptions;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Engines the selected backend constructed; consumed by builders.
+/// `Native` needs nothing; the XLA backends populate both fields.
+#[derive(Default, Clone)]
+pub struct BackendResources {
+    /// Stepped-GEMM engine (Algorithm 3.1's lines 3/5 off-loaded).
+    pub gemm: Option<Arc<dyn GemmEngine>>,
+    /// Whole-algorithm fused executor.
+    pub fused: Option<Arc<dyn FusedRsiExec>>,
+}
+
+type Builder =
+    Box<dyn Fn(&Method, &BackendResources) -> Result<Arc<dyn Factorizer>> + Send + Sync>;
+
+struct Entry {
+    method: String,
+    /// `None` = any backend (used when no exact match exists).
+    backend: Option<BackendKind>,
+    build: Builder,
+}
+
+/// Maps `(Method::key(), BackendKind)` to factorizer builders.
+pub struct FactorizerRegistry {
+    entries: Vec<Entry>,
+}
+
+impl Default for FactorizerRegistry {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+impl FactorizerRegistry {
+    /// An empty registry (tests / fully custom setups).
+    pub fn new() -> Self {
+        FactorizerRegistry { entries: Vec::new() }
+    }
+
+    /// The shipped strategy family: exact SVD (any backend), RSI on the
+    /// native and stepped-XLA engines, and fused-XLA with explicit
+    /// fallback to stepped.
+    pub fn with_defaults() -> Self {
+        let mut r = Self::new();
+        r.register("svd", None, |_m, _res| Ok(Arc::new(ExactSvdFactorizer)));
+        r.register("rsi", Some(BackendKind::Native), |m, _res| {
+            Ok(Arc::new(RsiFactorizer::new(rsi_opts(m)?, NativeEngine)))
+        });
+        r.register("rsi", Some(BackendKind::XlaStepped), |m, res| {
+            let gemm = res.gemm.clone().context("xla-stepped backend without a GEMM engine")?;
+            Ok(Arc::new(RsiFactorizer::new(rsi_opts(m)?, gemm)))
+        });
+        r.register("rsi", Some(BackendKind::XlaFused), |m, res| {
+            let opts = rsi_opts(m)?;
+            let fused = res.fused.clone().context("xla-fused backend without a fused executor")?;
+            let gemm = res.gemm.clone().context("xla-fused backend without a GEMM engine")?;
+            Ok(Arc::new(WithFallback::new(
+                Arc::new(FusedXlaFactorizer::new(opts, fused)),
+                Arc::new(RsiFactorizer::new(opts, gemm)),
+            )))
+        });
+        r
+    }
+
+    /// Register a builder for `method` (a [`Method::key`] value) on
+    /// `backend`, or on any backend when `backend` is `None`. Later
+    /// registrations shadow earlier ones with the same key.
+    pub fn register<F>(&mut self, method: impl Into<String>, backend: Option<BackendKind>, build: F)
+    where
+        F: Fn(&Method, &BackendResources) -> Result<Arc<dyn Factorizer>> + Send + Sync + 'static,
+    {
+        self.entries.insert(
+            0,
+            Entry { method: method.into(), backend, build: Box::new(build) },
+        );
+    }
+
+    /// Resolve a factorizer for this method/backend pair. Entries are
+    /// scanned newest-first and an entry matches when its backend is the
+    /// requested one *or* a wildcard — so the most recent registration
+    /// for a key always wins, including a wildcard registered over the
+    /// per-backend defaults.
+    pub fn resolve(
+        &self,
+        method: &Method,
+        backend: BackendKind,
+        resources: &BackendResources,
+    ) -> Result<Arc<dyn Factorizer>> {
+        let key = method.key();
+        let entry = self
+            .entries
+            .iter()
+            .find(|e| e.method == key && (e.backend == Some(backend) || e.backend.is_none()))
+            .with_context(|| {
+                format!(
+                    "no factorizer registered for method {key:?} on backend {:?} (known: {})",
+                    backend.name(),
+                    self.known_methods().join(", ")
+                )
+            })?;
+        (entry.build)(method, resources)
+    }
+
+    /// Distinct registered method keys (diagnostics).
+    pub fn known_methods(&self) -> Vec<String> {
+        let mut keys: Vec<String> = self.entries.iter().map(|e| e.method.clone()).collect();
+        keys.sort();
+        keys.dedup();
+        keys
+    }
+}
+
+fn rsi_opts(m: &Method) -> Result<RsiOptions> {
+    match m {
+        Method::Rsi(o) => Ok(*o),
+        other => anyhow::bail!("RSI factorizer builder got non-RSI method {:?}", other.name()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::factor::Factorization;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn defaults_cover_the_shipped_family() {
+        let reg = FactorizerRegistry::with_defaults();
+        let res = BackendResources::default();
+        let rsi = reg
+            .resolve(&Method::Rsi(RsiOptions::with_q(3, 1)), BackendKind::Native, &res)
+            .unwrap();
+        assert!(rsi.name().contains("rsi(q=3)"));
+        // SVD resolves on every backend through the wildcard entry.
+        for b in [BackendKind::Native, BackendKind::XlaStepped, BackendKind::XlaFused] {
+            let svd = reg.resolve(&Method::ExactSvd, b, &res).unwrap();
+            assert_eq!(svd.name(), "exact-svd");
+        }
+    }
+
+    #[test]
+    fn xla_entries_demand_resources() {
+        let reg = FactorizerRegistry::with_defaults();
+        let method = Method::Rsi(RsiOptions::default());
+        let empty = BackendResources::default();
+        assert!(reg.resolve(&method, BackendKind::XlaStepped, &empty).is_err());
+        assert!(reg.resolve(&method, BackendKind::XlaFused, &empty).is_err());
+    }
+
+    #[test]
+    fn unknown_method_lists_known_keys() {
+        let reg = FactorizerRegistry::with_defaults();
+        let err = reg
+            .resolve(&Method::Custom("anchored-svd"), BackendKind::Native, &Default::default())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("anchored-svd"), "{msg}");
+        assert!(msg.contains("rsi"), "{msg}");
+    }
+
+    struct Doubler;
+    impl Factorizer for Doubler {
+        fn factorize(&self, w: &Mat<f32>, k: usize, _layer: &str) -> anyhow::Result<Factorization> {
+            let (c, d) = w.shape();
+            Ok(Factorization { a: Mat::zeros(c, k), b: Mat::zeros(k, d), s: vec![0.0; k] })
+        }
+        fn name(&self) -> String {
+            "doubler".into()
+        }
+    }
+
+    #[test]
+    fn custom_registration_and_shadowing() {
+        let mut reg = FactorizerRegistry::with_defaults();
+        reg.register("doubler", None, |_m, _r| Ok(Arc::new(Doubler)));
+        let f = reg
+            .resolve(&Method::Custom("doubler"), BackendKind::Native, &Default::default())
+            .unwrap();
+        assert_eq!(f.name(), "doubler");
+        // Shadow the default svd entry: later registrations win.
+        reg.register("svd", None, |_m, _r| Ok(Arc::new(Doubler)));
+        let f = reg.resolve(&Method::ExactSvd, BackendKind::Native, &Default::default()).unwrap();
+        assert_eq!(f.name(), "doubler");
+        // A later *wildcard* also shadows earlier per-backend defaults —
+        // the natural way to globally replace a shipped strategy.
+        reg.register("rsi", None, |_m, _r| Ok(Arc::new(Doubler)));
+        let f = reg
+            .resolve(&Method::Rsi(RsiOptions::default()), BackendKind::Native, &Default::default())
+            .unwrap();
+        assert_eq!(f.name(), "doubler");
+    }
+}

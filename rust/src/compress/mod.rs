@@ -7,6 +7,9 @@
 //! * [`plan`] — the compression planner: the α → per-layer rank rule,
 //!   parameter accounting, and layer selection.
 //! * [`factor`] — the rank-k factorization type (A·B with diagnostics).
+//! * [`factorizer`] — the pluggable strategy layer: the [`Factorizer`]
+//!   trait, the shipped implementations (exact SVD, RSI, fused-XLA with
+//!   fallback), and the registry that resolves `(Method, BackendKind)`.
 //! * [`backend`] — GEMM engine trait + the native engine; the PJRT engine
 //!   lives in `runtime::xla_engine`.
 //! * [`error`] — approximation-quality metrics (normalized spectral error).
@@ -15,11 +18,16 @@ pub mod adaptive;
 pub mod backend;
 pub mod error;
 pub mod factor;
+pub mod factorizer;
 pub mod plan;
 pub mod rsi;
 
 pub use adaptive::{allocate_ranks, LayerSpectrum};
 pub use backend::{BackendKind, GemmEngine, NativeEngine};
 pub use factor::Factorization;
+pub use factorizer::{
+    BackendResources, ExactSvdFactorizer, Factorizer, FactorizerRegistry, FusedRsiExec,
+    FusedXlaFactorizer, RsiFactorizer, WithFallback,
+};
 pub use plan::{CompressionPlan, LayerPlan, Method};
 pub use rsi::{rsi_factorize, OrthoStrategy, RsiOptions};

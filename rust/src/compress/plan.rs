@@ -3,7 +3,7 @@
 //! Table 4.1.
 
 use super::rsi::RsiOptions;
-use crate::io::checkpoint::{list_layers, load_weight};
+use crate::io::checkpoint::{layer_infos, LayerInfo};
 use crate::io::tenz::TensorFile;
 use crate::util::rank_for_alpha;
 
@@ -14,6 +14,9 @@ pub enum Method {
     Rsi(RsiOptions),
     /// Exact truncated SVD (the paper's optimal baseline).
     ExactSvd,
+    /// A method resolved purely by its `FactorizerRegistry` key — lets
+    /// external strategies plug in without touching this enum.
+    Custom(&'static str),
 }
 
 impl Method {
@@ -22,6 +25,16 @@ impl Method {
             Method::Rsi(o) if o.q == 1 => "rsvd".to_string(),
             Method::Rsi(o) => format!("rsi(q={})", o.q),
             Method::ExactSvd => "svd".to_string(),
+            Method::Custom(key) => key.to_string(),
+        }
+    }
+
+    /// The `FactorizerRegistry` lookup key for this method.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::Rsi(_) => "rsi",
+            Method::ExactSvd => "svd",
+            Method::Custom(key) => key,
         }
     }
 }
@@ -92,12 +105,22 @@ impl CompressionPlan {
     /// Expand against a checkpoint into per-layer jobs (weights with 2 dims
     /// only; biases and scalars pass through untouched).
     pub fn expand(&self, ckpt: &TensorFile) -> Vec<LayerPlan> {
+        self.expand_infos(&layer_infos(ckpt))
+    }
+
+    /// Expand against pre-scanned layer metadata. The pipeline shares one
+    /// [`layer_infos`] pass between planning and whole-model parameter
+    /// accounting, so no tensor is ever loaded just for its shape.
+    /// `params_before` is the layer's *stored* size: an already-factored
+    /// input layer counts (C+D)·k, not C·D.
+    pub fn expand_infos(&self, infos: &[LayerInfo]) -> Vec<LayerPlan> {
         let mut out = Vec::new();
-        for layer in list_layers(ckpt) {
-            let Ok(w) = load_weight(ckpt, &layer) else { continue };
-            let (c, d) = w.shape();
-            if let Some(k) = self.rank_for(&layer, c, d) {
-                out.push(LayerPlan::new(layer, c, d, k));
+        for info in infos {
+            let (c, d) = info.shape;
+            if let Some(k) = self.rank_for(&info.layer, c, d) {
+                let mut p = LayerPlan::new(info.layer.clone(), c, d, k);
+                p.params_before = info.stored_params;
+                out.push(p);
             }
         }
         out
@@ -183,5 +206,32 @@ mod tests {
         assert_eq!(Method::Rsi(RsiOptions::rsvd(0)).name(), "rsvd");
         assert_eq!(Method::Rsi(RsiOptions::with_q(3, 0)).name(), "rsi(q=3)");
         assert_eq!(Method::ExactSvd.name(), "svd");
+        assert_eq!(Method::Custom("anchored").name(), "anchored");
+    }
+
+    #[test]
+    fn method_registry_keys() {
+        assert_eq!(Method::Rsi(RsiOptions::default()).key(), "rsi");
+        assert_eq!(Method::ExactSvd.key(), "svd");
+        assert_eq!(Method::Custom("anchored").key(), "anchored");
+    }
+
+    #[test]
+    fn factored_input_layers_counted_at_stored_size() {
+        let mut tf = ckpt();
+        // Re-store layers.1 (100×100) as an already-factored rank-5 pair.
+        store_weight(
+            &mut tf,
+            "layers.1",
+            &StoredWeight::Factored { a: Mat::zeros(100, 5), b: Mat::zeros(5, 100) },
+        );
+        let plan = CompressionPlan::uniform_alpha(0.4, Method::ExactSvd);
+        let jobs = plan.expand(&tf);
+        let j = jobs.iter().find(|j| j.layer == "layers.1").unwrap();
+        assert_eq!((j.c, j.d), (100, 100), "logical shape preserved");
+        assert_eq!(j.params_before, (100 + 100) * 5, "stored, not logical, size");
+        // Dense layers keep params_before = C·D.
+        let j0 = jobs.iter().find(|j| j.layer == "layers.0").unwrap();
+        assert_eq!(j0.params_before, 100 * 400);
     }
 }

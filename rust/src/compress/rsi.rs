@@ -42,12 +42,30 @@ pub enum OrthoStrategy {
     NewtonSchulz(usize),
 }
 
+/// Newton–Schulz iteration count used when none is given explicitly.
+pub const DEFAULT_NS_ITERS: usize = 12;
+
 impl OrthoStrategy {
+    /// Parse a strategy name. Newton–Schulz accepts an explicit iteration
+    /// count as `ns:N` / `newtonschulz:N` (N ≥ 1); the bare names use
+    /// [`DEFAULT_NS_ITERS`].
     pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
+        let t = s.to_ascii_lowercase();
+        if let Some((head, count)) = t.split_once(':') {
+            return match head.trim() {
+                "newtonschulz" | "ns" => count
+                    .trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .map(OrthoStrategy::NewtonSchulz),
+                _ => None,
+            };
+        }
+        match t.as_str() {
             "householder" | "qr" => Some(OrthoStrategy::Householder),
             "choleskyqr2" | "cholqr2" | "cholesky" => Some(OrthoStrategy::CholeskyQr2),
-            "newtonschulz" | "ns" => Some(OrthoStrategy::NewtonSchulz(12)),
+            "newtonschulz" | "ns" => Some(OrthoStrategy::NewtonSchulz(DEFAULT_NS_ITERS)),
             _ => None,
         }
     }
@@ -229,10 +247,13 @@ pub fn finalize(x: &Mat<f32>, y: &Mat<f32>, k: usize) -> Factorization {
 /// bit-identical in exact arithmetic to the SVD-completed factors; only
 /// the internal balance differs. Singular-value estimates come from Y's
 /// column norms (‖y_j‖ = s̃_j when X's columns are the converged singular
-/// directions), sorted descending.
+/// directions). The descending sort is applied as a *joint* permutation of
+/// (s, A's columns, B's rows), so `s[i]` always describes factor column
+/// `i` — sorting the estimates alone would silently decouple them from
+/// the factors.
 fn finalize_fast_split(x: &Mat<f32>, y: &Mat<f32>) -> Factorization {
     let l = x.cols();
-    let mut s: Vec<f64> = (0..l)
+    let norms: Vec<f64> = (0..l)
         .map(|j| {
             let mut acc = 0.0f64;
             for r in 0..y.rows() {
@@ -242,8 +263,23 @@ fn finalize_fast_split(x: &Mat<f32>, y: &Mat<f32>) -> Factorization {
             acc.sqrt()
         })
         .collect();
-    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    Factorization { a: x.clone(), b: y.transpose(), s }
+    let mut perm: Vec<usize> = (0..l).collect();
+    perm.sort_by(|&i, &j| {
+        norms[j].partial_cmp(&norms[i]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let (c, d) = (x.rows(), y.rows());
+    let mut a = Mat::zeros(c, l);
+    let mut b = Mat::zeros(l, d);
+    for (new_j, &old_j) in perm.iter().enumerate() {
+        for r in 0..c {
+            a.set(r, new_j, x.get(r, old_j));
+        }
+        for col in 0..d {
+            b.set(new_j, col, y.get(col, old_j));
+        }
+    }
+    let s = perm.iter().map(|&j| norms[j]).collect();
+    Factorization { a, b, s }
 }
 
 #[cfg(test)]
@@ -392,6 +428,80 @@ mod tests {
         // Singular value estimates match the exact leading spectrum.
         for i in 0..k {
             crate::testutil::assert_relclose(f.s[i], svd.s[i], 0.05, "s_i");
+        }
+    }
+
+    #[test]
+    fn ortho_strategy_parse() {
+        assert_eq!(OrthoStrategy::parse("qr"), Some(OrthoStrategy::Householder));
+        assert_eq!(OrthoStrategy::parse("Householder"), Some(OrthoStrategy::Householder));
+        assert_eq!(OrthoStrategy::parse("cholqr2"), Some(OrthoStrategy::CholeskyQr2));
+        // Bare Newton–Schulz names use the default iteration count…
+        assert_eq!(OrthoStrategy::parse("ns"), Some(OrthoStrategy::NewtonSchulz(DEFAULT_NS_ITERS)));
+        assert_eq!(
+            OrthoStrategy::parse("newtonschulz"),
+            Some(OrthoStrategy::NewtonSchulz(DEFAULT_NS_ITERS))
+        );
+        // …while `ns:N` / `newtonschulz:N` set it explicitly.
+        assert_eq!(OrthoStrategy::parse("ns:20"), Some(OrthoStrategy::NewtonSchulz(20)));
+        assert_eq!(OrthoStrategy::parse("NS:4"), Some(OrthoStrategy::NewtonSchulz(4)));
+        assert_eq!(OrthoStrategy::parse("newtonschulz:8"), Some(OrthoStrategy::NewtonSchulz(8)));
+        assert_eq!(OrthoStrategy::parse("ns: 6"), Some(OrthoStrategy::NewtonSchulz(6)));
+        // Invalid counts and hosts are rejected.
+        assert_eq!(OrthoStrategy::parse("ns:0"), None);
+        assert_eq!(OrthoStrategy::parse("ns:abc"), None);
+        assert_eq!(OrthoStrategy::parse("ns:"), None);
+        assert_eq!(OrthoStrategy::parse("qr:3"), None);
+        assert_eq!(OrthoStrategy::parse("warp"), None);
+    }
+
+    #[test]
+    fn fast_split_factor_columns_follow_sorted_spectrum() {
+        // Regression: finalize_fast_split used to sort the singular-value
+        // estimates while leaving A's columns / B's rows in sketch order,
+        // so f.s[i] stopped describing factor column i. Build an (X, Y)
+        // pair whose column norms arrive deliberately out of order and
+        // check the joint permutation.
+        let (c, d, l) = (30, 40, 4);
+        let mut g = GaussianSource::new(33);
+        let x = qr::orthonormalize(&crate::tensor::init::gaussian(c, l, 1.0, &mut g));
+        let v = qr::orthonormalize(&crate::tensor::init::gaussian(d, l, 1.0, &mut g));
+        let s_true = [2.0f64, 5.0, 1.0, 4.0]; // unsorted on purpose
+        let mut y = v.clone();
+        for j in 0..l {
+            for r in 0..d {
+                let val = y.get(r, j) * s_true[j] as f32;
+                y.set(r, j, val);
+            }
+        }
+
+        let fast = finalize_fast_split(&x, &y);
+        let full = finalize(&x, &y, l);
+
+        // Reconstruction must equal X·Yᵀ on both paths (the permutation
+        // cancels between A and B).
+        let want = gemm::matmul(&x, &y.transpose());
+        assert!(fast.reconstruct().sub(&want).max_abs() < 1e-4);
+        assert!(full.reconstruct().sub(&want).max_abs() < 1e-3);
+
+        // Spectra agree with the SVD-completed path and come out sorted.
+        for i in 0..l {
+            crate::testutil::assert_relclose(fast.s[i], full.s[i], 1e-3, "s_i fast vs full");
+        }
+        let mut sorted = s_true.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for i in 0..l {
+            crate::testutil::assert_relclose(fast.s[i], sorted[i], 1e-3, "s_i sorted");
+        }
+
+        // The regression check: column i of the factors carries s[i].
+        // A's columns are orthonormal, so ‖B row i‖ must equal s[i].
+        for i in 0..l {
+            let norm_b: f64 = (0..fast.b.cols())
+                .map(|j| (fast.b.get(i, j) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            crate::testutil::assert_relclose(norm_b, fast.s[i], 1e-3, "‖b_i‖ vs s_i");
         }
     }
 

@@ -6,6 +6,7 @@
 
 use super::toml::{TomlDoc, TomlError};
 use crate::compress::backend::BackendKind;
+use crate::compress::rsi::OrthoStrategy;
 
 /// Which model/checkpoint an experiment runs against.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,6 +32,9 @@ pub struct SweepSpec {
     pub trials: usize,
     /// Master seed; per-trial seeds derive from it.
     pub seed: u64,
+    /// Line-4 orthonormalization strategy for RSI sweeps
+    /// (`householder` | `cholqr2` | `ns[:N]`).
+    pub ortho: OrthoStrategy,
 }
 
 impl Default for SweepSpec {
@@ -41,6 +45,7 @@ impl Default for SweepSpec {
             ranks: vec![],
             trials: 20,
             seed: 42,
+            ortho: OrthoStrategy::Householder,
         }
     }
 }
@@ -109,6 +114,15 @@ impl ExperimentConfig {
         }
         if let Ok(s) = doc.int("sweep.seed") {
             sweep.seed = s as u64;
+        }
+        // Present-but-wrong values (non-string or unknown name) are hard
+        // errors; only a genuinely absent key falls back to the default.
+        if let Some(v) = doc.get("sweep.ortho") {
+            let s = v
+                .as_str()
+                .ok_or(TomlError::Type("sweep.ortho".into(), "ortho strategy string"))?;
+            sweep.ortho = OrthoStrategy::parse(s)
+                .ok_or(TomlError::Type("sweep.ortho".into(), "ortho strategy"))?;
         }
         let mut pipeline = PipelineSettings::default();
         if let Ok(w) = doc.int("pipeline.workers") {
@@ -190,6 +204,33 @@ validate = true
     #[test]
     fn missing_required_fails() {
         let doc = TomlDoc::parse("name = \"x\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn sweep_ortho_parsed_with_iteration_count() {
+        let doc = TomlDoc::parse(
+            "name = \"x\"\n[model]\ncheckpoint = \"c\"\n[sweep]\northo = \"ns:20\"",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sweep.ortho, OrthoStrategy::NewtonSchulz(20));
+        // Default is the paper's Householder QR.
+        let doc = TomlDoc::parse("name = \"x\"\n[model]\ncheckpoint = \"c\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sweep.ortho, OrthoStrategy::Householder);
+        // Unknown strategies are rejected.
+        let doc = TomlDoc::parse(
+            "name = \"x\"\n[model]\ncheckpoint = \"c\"\n[sweep]\northo = \"warp\"",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // A present-but-non-string value is an error too, not a silent
+        // fallback to the default.
+        let doc = TomlDoc::parse(
+            "name = \"x\"\n[model]\ncheckpoint = \"c\"\n[sweep]\northo = 5",
+        )
+        .unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 

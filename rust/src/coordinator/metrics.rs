@@ -6,6 +6,9 @@ use std::sync::Mutex;
 /// Counters shared across workers.
 #[derive(Debug, Default)]
 pub struct PipelineMetrics {
+    /// `compress_checkpoint` invocations served by this pipeline (the
+    /// pipeline object — pool included — is reused across runs).
+    pub runs: AtomicU64,
     pub layers_submitted: AtomicU64,
     pub layers_completed: AtomicU64,
     pub layers_failed: AtomicU64,
@@ -47,11 +50,12 @@ impl PipelineMetrics {
     }
 
     pub fn summary(&self) -> String {
+        let runs = self.runs.load(Ordering::Relaxed);
         let sub = self.layers_submitted.load(Ordering::Relaxed);
         let done = self.layers_completed.load(Ordering::Relaxed);
         let failed = self.layers_failed.load(Ordering::Relaxed);
         let mut s = format!(
-            "layers: {done}/{sub} completed ({failed} failed); factorize {:.3}s, validate {:.3}s",
+            "runs: {runs}; layers: {done}/{sub} completed ({failed} failed); factorize {:.3}s, validate {:.3}s",
             self.factorize_secs(),
             self.validate_secs()
         );

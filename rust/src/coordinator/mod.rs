@@ -11,7 +11,10 @@
 //!   proportional to queue depth, not model size.
 //! * [`pipeline`] — the end-to-end flow: checkpoint → plan → compress
 //!   (per-layer jobs on the pool) → validate → emit compressed checkpoint
-//!   + metrics.
+//!   + metrics. The pipeline owns one persistent pool, resolves its
+//!   factorization strategy through `compress::factorizer`'s registry,
+//!   and materializes weights inside worker tasks so peak memory tracks
+//!   in-flight work, not model size.
 //! * [`metrics`] — counters/timers reported in pipeline summaries.
 
 pub mod metrics;

@@ -6,20 +6,30 @@
 //! checkpoint (every planned `weight` replaced by `weight.A`/`weight.B`)
 //! plus per-layer timings and quality estimates — the machinery behind
 //! Table 4.1's "Time", "Ratio" and the accuracy evaluations.
+//!
+//! Execution model (see DESIGN.md §Streaming-Pipeline):
+//!
+//! * The pipeline never dispatches on `(Method, BackendKind)` itself —
+//!   it resolves an `Arc<dyn Factorizer>` from its
+//!   [`FactorizerRegistry`] once per run and shares it across workers.
+//! * Planning and whole-model parameter accounting run on a single
+//!   [`layer_infos`] metadata pass; no tensor is loaded for its shape.
+//! * Weights are materialized *inside* worker tasks, so peak memory is
+//!   bounded by the number of in-flight jobs (≤ workers + queue_depth),
+//!   not by model size, and layer I/O overlaps factorization.
+//! * The [`WorkerPool`] is constructed once per `Pipeline` and reused by
+//!   every `compress_checkpoint` call.
 
 use super::metrics::PipelineMetrics;
 use super::pool::WorkerPool;
-use crate::compress::backend::{BackendKind, NativeEngine};
-use crate::compress::plan::{CompressionPlan, LayerPlan, Method};
-use crate::compress::rsi::rsi_factorize;
+use crate::compress::factorizer::{BackendResources, Factorizer, FactorizerRegistry};
+use crate::compress::plan::{CompressionPlan, LayerPlan};
 use crate::compress::Factorization;
-use crate::io::checkpoint::{load_weight, store_weight, StoredWeight};
+use crate::io::checkpoint::{layer_infos, load_weight, store_weight, StoredWeight};
 use crate::io::tenz::TensorFile;
-use crate::linalg::svd::svd_via_gram;
-use crate::rng::derive_seed;
-use crate::runtime::{ArtifactRegistry, ExecutableCache, XlaFusedRsi, XlaGemmEngine};
+use crate::compress::backend::BackendKind;
 use crate::util::timer::Stopwatch;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Pipeline construction options (usually from `config::PipelineSettings`).
@@ -78,6 +88,9 @@ pub struct PipelineReport {
     /// Compressed/original parameter ratio over the whole model.
     pub ratio: f64,
     pub method: String,
+    /// The resolved factorizer's self-description (e.g.
+    /// `rsi-fused(q=4)→rsi(q=4)[xla-stepped(pallas)]`).
+    pub factorizer: String,
     pub backend: &'static str,
 }
 
@@ -96,80 +109,51 @@ impl PipelineReport {
     }
 }
 
-/// Shared XLA runtime state (lazily created for the XLA backends).
-struct RuntimeBundle {
-    gemm: XlaGemmEngine,
-    fused: XlaFusedRsi,
-}
-
-/// The pipeline object. Owns a worker pool; reusable across runs.
+/// The pipeline object. Owns its worker pool and factorizer registry;
+/// reusable across `compress_checkpoint` runs (metrics accumulate).
 pub struct Pipeline {
     config: PipelineConfig,
     metrics: Arc<PipelineMetrics>,
-    runtime: Option<Arc<RuntimeBundle>>,
+    pool: WorkerPool,
+    registry: Arc<FactorizerRegistry>,
+    resources: BackendResources,
 }
 
 impl Pipeline {
-    /// Build a pipeline. XLA backends load the artifact registry eagerly so
-    /// misconfiguration fails fast with a "run make artifacts" error.
+    /// Build a pipeline with the default factorizer registry. XLA backends
+    /// load the artifact registry eagerly so misconfiguration fails fast
+    /// with a "run make artifacts" error.
     pub fn new(config: PipelineConfig) -> Result<Pipeline> {
-        let runtime = match config.backend {
-            BackendKind::Native => None,
-            BackendKind::XlaStepped | BackendKind::XlaFused => {
-                let registry = Arc::new(ArtifactRegistry::load_default()?);
-                let cache = Arc::new(ExecutableCache::new());
-                Some(Arc::new(RuntimeBundle {
-                    gemm: XlaGemmEngine::new(registry.clone(), cache.clone()),
-                    fused: XlaFusedRsi::new(registry, cache),
-                }))
-            }
-        };
-        Ok(Pipeline { config, metrics: Arc::new(PipelineMetrics::new()), runtime })
+        Self::with_registry(config, FactorizerRegistry::with_defaults())
+    }
+
+    /// Build a pipeline around a custom [`FactorizerRegistry`] — the
+    /// extension point for new factorization strategies.
+    pub fn with_registry(config: PipelineConfig, registry: FactorizerRegistry) -> Result<Pipeline> {
+        let resources = crate::runtime::backend_resources(config.backend)?;
+        let pool = WorkerPool::new(config.workers, config.queue_depth);
+        Ok(Pipeline {
+            config,
+            metrics: Arc::new(PipelineMetrics::new()),
+            pool,
+            registry: Arc::new(registry),
+            resources,
+        })
     }
 
     pub fn metrics(&self) -> &PipelineMetrics {
         &self.metrics
     }
 
-    /// Factor one weight matrix per the method/backend.
-    fn factorize_one(
-        method: &Method,
-        backend: BackendKind,
-        runtime: Option<&RuntimeBundle>,
-        w: &crate::tensor::Mat<f32>,
-        k: usize,
-        layer: &str,
-    ) -> Result<Factorization> {
-        match method {
-            Method::ExactSvd => {
-                let svd = svd_via_gram(w);
-                let (a, b) = svd.factors(k);
-                Ok(Factorization { a, b, s: svd.s[..k.min(svd.s.len())].to_vec() })
-            }
-            Method::Rsi(opts) => {
-                // Per-layer decorrelated sketch seed.
-                let mut opts = *opts;
-                opts.seed = derive_seed(opts.seed, layer, 0);
-                match backend {
-                    BackendKind::Native => Ok(rsi_factorize(w, k, &opts, &NativeEngine)),
-                    BackendKind::XlaStepped => {
-                        let rt = runtime.context("xla backend without runtime")?;
-                        Ok(rsi_factorize(w, k, &opts, &rt.gemm))
-                    }
-                    BackendKind::XlaFused => {
-                        let rt = runtime.context("xla backend without runtime")?;
-                        let (c, d) = w.shape();
-                        if rt.fused.supports(c, d, k, opts.q) {
-                            rt.fused.factorize(w, k, opts.q, opts.seed)
-                        } else {
-                            // No fused artifact for this bucket — fall back
-                            // to the stepped path (documented behaviour).
-                            Ok(rsi_factorize(w, k, &opts, &rt.gemm))
-                        }
-                    }
-                }
-            }
-        }
+    /// The persistent worker pool (one per pipeline, shared by all runs).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Resolve the factorizer this pipeline would use for `plan` — also
+    /// useful to validate a configuration before a long run.
+    pub fn resolve_factorizer(&self, plan: &CompressionPlan) -> Result<Arc<dyn Factorizer>> {
+        self.registry.resolve(&plan.method, self.config.backend, &self.resources)
     }
 
     /// Compress every planned layer of a checkpoint.
@@ -180,48 +164,42 @@ impl Pipeline {
     ) -> Result<PipelineReport> {
         use std::sync::atomic::Ordering;
         let sw = Stopwatch::start();
-        let jobs = plan.expand(ckpt);
+
+        // One metadata pass serves both planning and the ratio
+        // denominator: stored parameter counts come from entry headers,
+        // so already-factored layers count at (C+D)·k and no tensor is
+        // decoded just for accounting.
+        let infos = layer_infos(ckpt);
+        let jobs = plan.expand_infos(&infos);
+        let total_params: usize = infos.iter().map(|i| i.stored_params).sum();
+
+        let factorizer = self.resolve_factorizer(plan)?;
+        self.metrics.runs.fetch_add(1, Ordering::Relaxed);
         self.metrics.layers_submitted.fetch_add(jobs.len() as u64, Ordering::Relaxed);
 
-        // Total model params (2-D weights only) for the ratio denominator.
-        let total_params: usize = crate::io::checkpoint::list_layers(ckpt)
-            .iter()
-            .filter_map(|l| load_weight(ckpt, l).ok())
-            .map(|w| {
-                let (c, d) = w.shape();
-                c * d
-            })
-            .sum();
-
-        let pool = WorkerPool::new(self.config.workers, self.config.queue_depth);
-        let method = plan.method;
-        let backend = self.config.backend;
         let validate = self.config.validate;
-        let metrics = self.metrics.clone();
+        // Workers borrow the checkpoint through an Arc; it is reclaimed
+        // (not copied) once they finish, so the run still clones the
+        // checkpoint exactly once — into the compressed output.
+        let shared: Arc<TensorFile> = Arc::new(ckpt.clone());
 
         let tasks: Vec<_> = jobs
             .iter()
             .map(|job| {
                 let job = job.clone();
-                let w = load_weight(ckpt, &job.layer)
-                    .map(|sw| sw.materialize())
-                    .map_err(|e| e.to_string());
-                let runtime = self.runtime.clone();
-                let metrics = metrics.clone();
+                let ckpt = shared.clone();
+                let factorizer = factorizer.clone();
+                let metrics = self.metrics.clone();
                 move || -> (LayerPlan, Result<(Factorization, f64, Option<f64>), String>) {
-                    let w = match w {
+                    // Materialization happens here, on the worker: tasks
+                    // waiting in the bounded queue hold only an Arc and a
+                    // layer name, so peak memory tracks in-flight work.
+                    let w = match load_weight(&ckpt, &job.layer).map(|stored| stored.materialize()) {
                         Ok(w) => w,
-                        Err(e) => return (job.clone(), Err(e)),
+                        Err(e) => return (job, Err(e.to_string())),
                     };
                     let t = Stopwatch::start();
-                    let f = Self::factorize_one(
-                        &method,
-                        backend,
-                        runtime.as_deref(),
-                        &w,
-                        job.k,
-                        &job.layer,
-                    );
+                    let f = factorizer.factorize(&w, job.k, &job.layer);
                     let secs = t.secs();
                     metrics.add_factorize_secs(secs);
                     match f {
@@ -234,18 +212,22 @@ impl Pipeline {
                             } else {
                                 None
                             };
-                            (job.clone(), Ok((f, secs, err)))
+                            (job, Ok((f, secs, err)))
                         }
-                        Err(e) => (job.clone(), Err(format!("{e:#}"))),
+                        Err(e) => (job, Err(format!("{e:#}"))),
                     }
                 }
             })
             .collect();
 
-        let results = pool.run_all(tasks);
-        pool.shutdown();
+        let results = self.pool.run_all(tasks);
+        // All workers are done with the Arc; take the checkpoint back as
+        // the output container without a second copy.
+        let mut compressed = match Arc::try_unwrap(shared) {
+            Ok(tf) => tf,
+            Err(arc) => (*arc).clone(),
+        };
 
-        let mut compressed = ckpt.clone();
         let mut outcomes = Vec::with_capacity(results.len());
         for r in results {
             match r {
@@ -296,6 +278,7 @@ impl Pipeline {
             total_seconds: sw.secs(),
             ratio,
             method: plan.method.name(),
+            factorizer: factorizer.name(),
             backend: self.config.backend.name(),
         })
     }
@@ -304,6 +287,7 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::plan::Method;
     use crate::compress::rsi::RsiOptions;
     use crate::rng::GaussianSource;
     use crate::tensor::init::{matrix_with_spectrum, SpectrumShape};
@@ -340,6 +324,7 @@ mod tests {
         // Validation populated spectral errors.
         assert!(report.outcomes.iter().all(|o| o.spectral_error.is_some()));
         assert!(report.summary().contains("3 layers"));
+        assert!(report.factorizer.contains("rsi(q=2)"));
     }
 
     #[test]
@@ -350,6 +335,7 @@ mod tests {
         let report = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
         assert!(report.outcomes.iter().all(|o| o.error.is_none()));
         assert_eq!(report.method, "svd");
+        assert_eq!(report.factorizer, "exact-svd");
     }
 
     #[test]
@@ -388,5 +374,76 @@ mod tests {
         let before = 24 * 60 + 24 * 24 + 10 * 24;
         let want = ((24 * 24 + 10 * 24) + (24 + 60) * 4) as f64 / before as f64;
         assert!((report.ratio - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_and_metrics_survive_across_runs() {
+        let ckpt = test_ckpt();
+        let plan = CompressionPlan::uniform_alpha(0.3, Method::Rsi(RsiOptions::with_q(1, 5)));
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+        let r1 = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+        let jobs_after_first = pipe.pool().jobs_executed();
+        let r2 = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+        assert_eq!(r1.outcomes.len(), 3);
+        assert_eq!(r2.outcomes.len(), 3);
+        // Same pool served both runs; metrics accumulated.
+        assert_eq!(jobs_after_first, 3);
+        assert_eq!(pipe.pool().jobs_executed(), 6);
+        use std::sync::atomic::Ordering;
+        assert_eq!(pipe.metrics().runs.load(Ordering::Relaxed), 2);
+        assert_eq!(pipe.metrics().layers_submitted.load(Ordering::Relaxed), 6);
+        assert_eq!(pipe.metrics().layers_completed.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn custom_factorizer_through_registry() {
+        use crate::compress::factorizer::Factorizer;
+        use crate::tensor::Mat;
+
+        // A mock strategy: rank-k zeros. Registered under its own key and
+        // driven end-to-end through compress_checkpoint — the pipeline
+        // needs no changes to run a brand-new method.
+        struct ZeroFactorizer;
+        impl Factorizer for ZeroFactorizer {
+            fn factorize(
+                &self,
+                w: &Mat<f32>,
+                k: usize,
+                _layer: &str,
+            ) -> anyhow::Result<Factorization> {
+                let (c, d) = w.shape();
+                Ok(Factorization { a: Mat::zeros(c, k), b: Mat::zeros(k, d), s: vec![0.0; k] })
+            }
+            fn name(&self) -> String {
+                "zeros".into()
+            }
+        }
+
+        let mut registry = FactorizerRegistry::with_defaults();
+        registry.register("zeros", None, |_m, _r| Ok(Arc::new(ZeroFactorizer)));
+        let pipe = Pipeline::with_registry(
+            PipelineConfig { workers: 2, ..Default::default() },
+            registry,
+        )
+        .unwrap();
+        let ckpt = test_ckpt();
+        let plan = CompressionPlan::uniform_alpha(0.3, Method::Custom("zeros"));
+        let report = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+        assert_eq!(report.outcomes.len(), 3);
+        assert!(report.outcomes.iter().all(|o| o.error.is_none()), "{:?}", report.outcomes);
+        assert_eq!(report.method, "zeros");
+        assert_eq!(report.factorizer, "zeros");
+        let a = report.compressed.mat("layers.0.weight.A").unwrap();
+        assert_eq!(a.shape().0, 24);
+        assert_eq!(a.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn unknown_method_fails_with_registry_error() {
+        let pipe = Pipeline::new(PipelineConfig::default()).unwrap();
+        let ckpt = test_ckpt();
+        let plan = CompressionPlan::uniform_alpha(0.3, Method::Custom("no-such-method"));
+        let err = pipe.compress_checkpoint(&ckpt, &plan).unwrap_err();
+        assert!(format!("{err:#}").contains("no-such-method"));
     }
 }

@@ -6,6 +6,7 @@
 
 use super::queue::BoundedQueue;
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -16,6 +17,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct WorkerPool {
     queue: Arc<BoundedQueue<Job>>,
     workers: Vec<JoinHandle<()>>,
+    executed: Arc<AtomicU64>,
 }
 
 impl WorkerPool {
@@ -23,24 +25,36 @@ impl WorkerPool {
     pub fn new(workers: usize, queue_depth: usize) -> Self {
         let workers = workers.max(1);
         let queue = Arc::new(BoundedQueue::<Job>::new(queue_depth.max(1)));
+        let executed = Arc::new(AtomicU64::new(0));
         let handles = (0..workers)
             .map(|i| {
                 let q = queue.clone();
+                let done = executed.clone();
                 std::thread::Builder::new()
                     .name(format!("rsic-worker-{i}"))
                     .spawn(move || {
                         while let Some(job) = q.pop() {
+                            // Count before running: by the time a batch's
+                            // results are all delivered, its jobs are all
+                            // counted (no tail race for observers).
+                            done.fetch_add(1, Ordering::Relaxed);
                             job();
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        WorkerPool { queue, workers: handles }
+        WorkerPool { queue, workers: handles, executed }
     }
 
     pub fn worker_count(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Total jobs this pool's threads have completed over its lifetime —
+    /// lets callers verify that one pool really is reused across runs.
+    pub fn jobs_executed(&self) -> u64 {
+        self.executed.load(Ordering::Relaxed)
     }
 
     /// Submit a job (blocks under backpressure). Returns false if the pool
@@ -114,6 +128,10 @@ mod tests {
         for (i, r) in results.iter().enumerate() {
             assert_eq!(*r.as_ref().unwrap(), i * 2);
         }
+        assert_eq!(pool.jobs_executed(), 32);
+        // A second batch runs on the same threads and keeps counting.
+        pool.run_all((0..5).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(pool.jobs_executed(), 37);
         pool.shutdown();
     }
 

@@ -112,6 +112,55 @@ pub fn list_layers(tf: &TensorFile) -> Vec<String> {
     layers
 }
 
+/// Shape/size metadata for one layer, read from entry headers alone — no
+/// tensor payload is decoded. This is what planning and whole-model
+/// parameter accounting run on, so a checkpoint is scanned exactly once
+/// and weights are only materialized inside worker tasks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerInfo {
+    pub layer: String,
+    /// Logical (C, D) shape (the factored form's A·B shape).
+    pub shape: (usize, usize),
+    /// Parameters as stored: dense C·D, factored (C+D)·k.
+    pub stored_params: usize,
+    pub factored: bool,
+}
+
+/// One metadata pass over a checkpoint: every layer's logical shape and
+/// stored parameter count, in [`list_layers`] order. Layers whose weight
+/// entries are not 2-D are skipped (they cannot be planned); dtype is NOT
+/// checked here — a weight with a bogus dtype still gets planned and then
+/// surfaces a per-layer load error from the worker instead of vanishing
+/// silently.
+pub fn layer_infos(tf: &TensorFile) -> Vec<LayerInfo> {
+    let mut out = Vec::new();
+    for layer in list_layers(tf) {
+        if let Some(a) = tf.get(&factor_a_key(&layer)) {
+            let Some(b) = tf.get(&factor_b_key(&layer)) else { continue };
+            if a.dims.len() != 2 || b.dims.len() != 2 {
+                continue;
+            }
+            out.push(LayerInfo {
+                layer,
+                shape: (a.dims[0], b.dims[1]),
+                stored_params: a.numel() + b.numel(),
+                factored: true,
+            });
+        } else if let Some(w) = tf.get(&weight_key(&layer)) {
+            if w.dims.len() != 2 {
+                continue;
+            }
+            out.push(LayerInfo {
+                layer,
+                shape: (w.dims[0], w.dims[1]),
+                stored_params: w.numel(),
+                factored: false,
+            });
+        }
+    }
+    out
+}
+
 /// Store a scalar metadata value as a 1-element f32 tensor.
 pub fn store_scalar(tf: &mut TensorFile, key: &str, v: f32) {
     tf.insert(key, TensorEntry::from_f32(vec![1], &[v]));
@@ -172,6 +221,29 @@ mod tests {
         );
         let layers = list_layers(&tf);
         assert_eq!(layers, vec!["layers.0", "layers.1", "layers.2", "layers.10", "head"]);
+    }
+
+    #[test]
+    fn layer_infos_without_materializing() {
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "layers.0", &StoredWeight::Dense(Mat::zeros(6, 9)));
+        store_weight(
+            &mut tf,
+            "layers.1",
+            &StoredWeight::Factored { a: Mat::zeros(6, 2), b: Mat::zeros(2, 9) },
+        );
+        tf.insert("layers.0.bias", TensorEntry::from_f32(vec![6], &[0.0; 6]));
+        // A 3-D "weight" can't be planned and is skipped.
+        tf.insert("conv.weight", TensorEntry::from_f32(vec![2, 3, 4], &[0.0; 24]));
+        let infos = layer_infos(&tf);
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].layer, "layers.0");
+        assert_eq!(infos[0].shape, (6, 9));
+        assert_eq!(infos[0].stored_params, 54);
+        assert!(!infos[0].factored);
+        assert_eq!(infos[1].shape, (6, 9));
+        assert_eq!(infos[1].stored_params, (6 + 9) * 2);
+        assert!(infos[1].factored);
     }
 
     #[test]

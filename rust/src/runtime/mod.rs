@@ -23,3 +23,24 @@ pub use artifact::{ArtifactEntry, ArtifactRegistry};
 pub use cache::ExecutableCache;
 pub use client::shared_client;
 pub use xla_engine::{XlaForward, XlaFusedRsi, XlaGemmEngine};
+
+use crate::compress::backend::BackendKind;
+use crate::compress::factorizer::BackendResources;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Build the engines a backend needs, failing fast (with a "run `make
+/// artifacts`" error) when the artifact registry is missing. `Native`
+/// needs nothing; the XLA backends share one registry + executable cache
+/// between the stepped GEMM engine and the fused executor.
+pub fn backend_resources(kind: BackendKind) -> Result<BackendResources> {
+    if !kind.needs_artifacts() {
+        return Ok(BackendResources::default());
+    }
+    let registry = Arc::new(ArtifactRegistry::load_default()?);
+    let cache = Arc::new(ExecutableCache::new());
+    Ok(BackendResources {
+        gemm: Some(Arc::new(XlaGemmEngine::new(registry.clone(), cache.clone()))),
+        fused: Some(Arc::new(XlaFusedRsi::new(registry, cache))),
+    })
+}

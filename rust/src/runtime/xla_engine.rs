@@ -143,6 +143,18 @@ impl XlaFusedRsi {
     }
 }
 
+/// The fused executor as the `compress` layer sees it: this is what lets
+/// `FusedXlaFactorizer` live in `compress::factorizer` without importing
+/// any PJRT types.
+impl crate::compress::factorizer::FusedRsiExec for XlaFusedRsi {
+    fn supports(&self, c: usize, d: usize, k: usize, q: usize) -> bool {
+        XlaFusedRsi::supports(self, c, d, k, q)
+    }
+    fn factorize(&self, w: &Mat<f32>, k: usize, q: usize, seed: u64) -> Result<Factorization> {
+        XlaFusedRsi::factorize(self, w, k, q, seed)
+    }
+}
+
 /// Batched forward-pass execution for model evaluation.
 pub struct XlaForward {
     exe: Arc<super::client::XlaExecutable>,

@@ -1,0 +1,234 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) binding.
+//!
+//! The rsi-compress crate talks to XLA through a narrow surface: host-side
+//! `Literal` construction/inspection, a PJRT CPU client, HLO-text
+//! compilation, and executable invocation. This stub keeps the whole
+//! `Literal` side *fully functional* (it is plain shaped host data, so
+//! adapters and their unit tests work), while client construction returns
+//! an "unavailable" error — every artifact-dependent path then degrades
+//! exactly like a missing `artifacts/` directory already does.
+//!
+//! To run the real PJRT path, replace this with the actual `xla` crate
+//! (xla_extension 0.5.x era) in `rust/Cargo.toml`; the API subset below
+//! matches it.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real binding's (string-backed here).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (stub `xla` crate; \
+         swap in the real binding in rust/Cargo.toml to execute artifacts)"
+    ))
+}
+
+/// A host-side tensor value: either a dense f32 array or a tuple.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array { dims: Vec<i64>, data: Vec<f32> },
+    Tuple(Vec<Literal>),
+}
+
+/// Shape of a (non-tuple) literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Element types `Literal::to_vec` can extract.
+pub trait LiteralElem: Sized {
+    fn collect(data: &[f32]) -> Vec<Self>;
+}
+
+impl LiteralElem for f32 {
+    fn collect(data: &[f32]) -> Vec<Self> {
+        data.to_vec()
+    }
+}
+
+impl LiteralElem for f64 {
+    fn collect(data: &[f32]) -> Vec<Self> {
+        data.iter().map(|&v| v as f64).collect()
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal::Array { dims: vec![v.len() as i64], data: v.to_vec() }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        match self {
+            Literal::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want as usize != data.len() {
+                    return Err(Error(format!(
+                        "reshape {:?} incompatible with {} elements",
+                        dims,
+                        data.len()
+                    )));
+                }
+                Ok(Literal::Array { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => Err(Error("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.iter().map(|p| p.element_count()).sum(),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+        }
+    }
+
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>, Error> {
+        match self {
+            Literal::Array { data, .. } => Ok(T::collect(data)),
+            Literal::Tuple(_) => Err(Error("cannot read a tuple literal as a vector".into())),
+        }
+    }
+
+    /// Unwrap a 1-tuple (identity on a bare array, like the real binding's
+    /// decompose on single-output graphs).
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        match self {
+            Literal::Tuple(mut parts) => {
+                if parts.len() != 1 {
+                    return Err(Error(format!("expected 1-tuple, got {} parts", parts.len())));
+                }
+                Ok(parts.remove(0))
+            }
+            arr => Ok(arr),
+        }
+    }
+
+    /// Unwrap a 2-tuple.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), Error> {
+        match self {
+            Literal::Tuple(mut parts) if parts.len() == 2 => {
+                let b = parts.remove(1);
+                let a = parts.remove(0);
+                Ok((a, b))
+            }
+            other => Err(Error(format!(
+                "expected 2-tuple, got {}",
+                match other {
+                    Literal::Tuple(p) => format!("{}-tuple", p.len()),
+                    Literal::Array { .. } => "array".into(),
+                }
+            ))),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation handle (never constructible without a proto in practice).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client — unconstructible in the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+}
+
+/// Device-resident result buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Loaded executable — only obtainable through `PjRtClient::compile`,
+/// which the stub never grants.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_tuples() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap().len(), 6);
+        assert!(Literal::vec1(&[1.0]).reshape(&[7]).is_err());
+
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0]), Literal::vec1(&[2.0])]);
+        let (a, b) = t.to_tuple2().unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(b.to_vec::<f32>().unwrap(), vec![2.0]);
+        // A bare array passes through to_tuple1.
+        assert!(Literal::vec1(&[0.5]).to_tuple1().is_ok());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Pipeline failure/fallback behaviour and resource reuse, driven through
+//! the public API only (no artifacts needed — everything runs on the
+//! native backend).
+
+use rsi_compress::compress::factorizer::{Factorizer, FactorizerRegistry};
+use rsi_compress::compress::plan::{CompressionPlan, Method};
+use rsi_compress::compress::rsi::RsiOptions;
+use rsi_compress::compress::Factorization;
+use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+use rsi_compress::io::checkpoint::{store_weight, StoredWeight};
+use rsi_compress::io::tenz::{TensorEntry, TensorFile};
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::tensor::init::gaussian;
+use rsi_compress::tensor::Mat;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn checkpoint(n_layers: usize, seed: u64) -> TensorFile {
+    let mut g = GaussianSource::new(seed);
+    let mut tf = TensorFile::new();
+    for i in 0..n_layers {
+        let w = gaussian(12, 20, 1.0, &mut g);
+        store_weight(&mut tf, &format!("layers.{i}"), &StoredWeight::Dense(w));
+    }
+    tf
+}
+
+#[test]
+fn bad_layer_fails_alone_and_the_rest_compresses() {
+    let mut ckpt = checkpoint(3, 1);
+    // A planned layer whose payload cannot be loaded as an f32 matrix:
+    // 2-D dims make it plannable from metadata, the i32 dtype makes the
+    // worker-side load fail.
+    ckpt.insert("layers.9.weight", TensorEntry::from_i32(vec![4, 6], &[0; 24]));
+
+    let plan = CompressionPlan::uniform_alpha(0.4, Method::Rsi(RsiOptions::with_q(2, 7)));
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+    let report = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+
+    assert_eq!(report.outcomes.len(), 4);
+    let failed: Vec<_> = report.outcomes.iter().filter(|o| o.error.is_some()).collect();
+    assert_eq!(failed.len(), 1, "{:?}", report.outcomes);
+    assert_eq!(failed[0].plan.layer, "layers.9");
+    let msg = failed[0].error.as_deref().unwrap();
+    assert!(msg.contains("dtype") || msg.contains("I32"), "unexpected error: {msg}");
+
+    // The healthy layers all compressed and landed in the output.
+    for i in 0..3 {
+        assert!(report.compressed.contains(&format!("layers.{i}.weight.A")));
+        assert!(!report.compressed.contains(&format!("layers.{i}.weight")));
+    }
+    // The bad layer passes through untouched (still dense, still i32).
+    assert!(report.compressed.contains("layers.9.weight"));
+    assert!(!report.compressed.contains("layers.9.weight.A"));
+    assert_eq!(pipe.metrics().layers_failed.load(Ordering::Relaxed), 1);
+    assert!(report.summary().contains("(1 failed)"));
+}
+
+#[test]
+fn pipeline_reuses_pool_and_metrics_across_runs() {
+    let plan = CompressionPlan::uniform_alpha(0.3, Method::Rsi(RsiOptions::with_q(1, 3)));
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+
+    let first = pipe.compress_checkpoint(&checkpoint(3, 10), &plan).unwrap();
+    assert_eq!(first.outcomes.len(), 3);
+    assert_eq!(pipe.pool().jobs_executed(), 3);
+    assert_eq!(pipe.metrics().runs.load(Ordering::Relaxed), 1);
+
+    let second = pipe.compress_checkpoint(&checkpoint(4, 11), &plan).unwrap();
+    assert_eq!(second.outcomes.len(), 4);
+    // Same pool object kept counting — no per-run pool was built.
+    assert_eq!(pipe.pool().jobs_executed(), 7);
+    assert_eq!(pipe.metrics().runs.load(Ordering::Relaxed), 2);
+    assert_eq!(pipe.metrics().layers_submitted.load(Ordering::Relaxed), 7);
+    assert_eq!(pipe.metrics().layers_completed.load(Ordering::Relaxed), 7);
+}
+
+/// A strategy the crate has never heard of, registered from the outside:
+/// keeps the top-left k×k identity pattern (nonsense numerically, but
+/// easily recognizable in the output).
+struct StampFactorizer;
+
+impl Factorizer for StampFactorizer {
+    fn factorize(&self, w: &Mat<f32>, k: usize, _layer: &str) -> anyhow::Result<Factorization> {
+        let (c, d) = w.shape();
+        let mut a = Mat::zeros(c, k);
+        for i in 0..k.min(c) {
+            a.set(i, i, 2.0);
+        }
+        Ok(Factorization { a, b: Mat::zeros(k, d), s: vec![2.0; k] })
+    }
+    fn name(&self) -> String {
+        "stamp".into()
+    }
+}
+
+#[test]
+fn externally_registered_factorizer_runs_end_to_end() {
+    let mut registry = FactorizerRegistry::with_defaults();
+    registry.register("stamp", None, |_method, _resources| Ok(Arc::new(StampFactorizer)));
+    let pipe = Pipeline::with_registry(
+        PipelineConfig { workers: 2, ..Default::default() },
+        registry,
+    )
+    .unwrap();
+
+    let plan = CompressionPlan::uniform_alpha(0.5, Method::Custom("stamp"));
+    let report = pipe.compress_checkpoint(&checkpoint(2, 20), &plan).unwrap();
+    assert!(report.outcomes.iter().all(|o| o.error.is_none()), "{:?}", report.outcomes);
+    assert_eq!(report.method, "stamp");
+    assert_eq!(report.factorizer, "stamp");
+    let a = report.compressed.mat("layers.0.weight.A").unwrap();
+    assert_eq!(a.get(0, 0), 2.0);
+}
