@@ -3,6 +3,19 @@
 Mirror of `rust/src/io/tenz.rs` — see that file for the layout spec.
 Build-time only: used by aot.py to hand checkpoints, eval sets and golden
 data to the Rust coordinator.
+
+Interop contract (enforced by the Rust parser — `scan_index` — for both
+the eager `TensorFile` and the lazy `TenzReader`, and mirrored here):
+
+* ndim ≥ 1. Zero-dim arrays are rejected on read, so `write_tenz`
+  reshapes numpy scalars to shape ``(1,)``.
+* Entry names are unique; writers emit them sorted so equal tensor dicts
+  serialize to identical bytes. The Rust streaming writer (`TenzWriter`)
+  patches the leading count after appending, so readers must trust the
+  count field, not assume it was known up front.
+* No trailing bytes after the last entry.
+* Declared sizes (name length, dim product, payload bytes) are validated
+  against the remaining file length *before* any allocation.
 """
 
 from __future__ import annotations
@@ -31,6 +44,9 @@ def write_tenz(path: str, tensors: Dict[str, np.ndarray]) -> None:
         f.write(struct.pack("<I", len(items)))
         for name, arr in items:
             arr = np.ascontiguousarray(arr)
+            if arr.ndim == 0:
+                # The Rust parser rejects ndim=0; scalars travel as [1].
+                arr = arr.reshape(1)
             if arr.dtype not in _DTYPE_TAGS:
                 if np.issubdtype(arr.dtype, np.floating):
                     arr = arr.astype(np.float32)
@@ -47,31 +63,55 @@ def write_tenz(path: str, tensors: Dict[str, np.ndarray]) -> None:
             f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
 
 
+def _need(buf: bytes, pos: int, n: int, what: str) -> None:
+    if pos + n > len(buf):
+        raise ValueError(f"truncated at offset {pos}: need {n} bytes for {what}")
+
+
 def read_tenz(path: str) -> Dict[str, np.ndarray]:
-    """Read a `.tenz` file back into a dict of arrays."""
+    """Read a `.tenz` file back into a dict of arrays, validating every
+    declared size against the remaining buffer first (mirrors the Rust
+    parser's corruption handling)."""
     with open(path, "rb") as f:
         buf = f.read()
     if buf[:8] != MAGIC:
         raise ValueError("bad magic: not a .tenz file")
     pos = 8
+    _need(buf, pos, 4, "count")
     (count,) = struct.unpack_from("<I", buf, pos)
     pos += 4
     out: Dict[str, np.ndarray] = {}
     for _ in range(count):
+        _need(buf, pos, 2, "name length")
         (name_len,) = struct.unpack_from("<H", buf, pos)
         pos += 2
+        _need(buf, pos, name_len, "name")
         name = buf[pos : pos + name_len].decode("utf-8")
         pos += name_len
+        _need(buf, pos, 2, f"{name} dtype/ndim")
         tag, ndim = struct.unpack_from("<BB", buf, pos)
         pos += 2
+        if tag not in _TAG_DTYPES:
+            raise ValueError(f"{name}: bad dtype tag {tag}")
+        if ndim == 0:
+            raise ValueError(f"{name}: zero dimensions (scalars must be shape [1])")
+        _need(buf, pos, 8 * ndim, f"{name} dims")
         dims = []
         for _ in range(ndim):
             (d,) = struct.unpack_from("<Q", buf, pos)
             pos += 8
             dims.append(d)
+        if name in out:
+            raise ValueError(f"duplicate tensor name {name!r}")
         dtype = _TAG_DTYPES[tag]
-        numel = int(np.prod(dims)) if dims else 1
+        # Pure-python product: arbitrary precision, so hostile dims cannot
+        # wrap to a small numel and dodge the bound check (np.prod is
+        # modular int64).
+        numel = 1
+        for d in dims:
+            numel *= d
         nbytes = numel * dtype.itemsize
+        _need(buf, pos, nbytes, f"{name} payload")
         arr = np.frombuffer(buf[pos : pos + nbytes], dtype=dtype.newbyteorder("<"))
         pos += nbytes
         out[name] = arr.reshape(dims).astype(dtype)

@@ -59,7 +59,48 @@ def test_bad_magic_raises():
 
 
 def test_scalar_and_empty_shapes():
-    t = {"scalar": np.float32(3.5).reshape(()), "empty": np.zeros((0, 4), np.float32)}
     back, _ = roundtrip({"scalar": np.array(3.5, np.float32), "empty": np.zeros((0, 4), np.float32)})
-    assert back["scalar"] == np.float32(3.5)
+    # Interop contract: the Rust parser rejects ndim=0, so scalars travel
+    # as shape (1,).
+    assert back["scalar"].shape == (1,)
+    assert back["scalar"][0] == np.float32(3.5)
     assert back["empty"].shape == (0, 4)
+
+
+def test_corrupt_inputs_raise_value_error():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "c.tenz")
+
+        # Payload shorter than dims claim.
+        good = os.path.join(d, "g.tenz")
+        write_tenz(good, {"w": np.arange(100, dtype=np.float32)})
+        raw = open(good, "rb").read()
+        open(path, "wb").write(raw[:-13])
+        with pytest.raises(ValueError):
+            read_tenz(path)
+
+        # Trailing garbage after the last entry.
+        open(path, "wb").write(raw + b"junk")
+        with pytest.raises(ValueError):
+            read_tenz(path)
+
+        # ndim = 0 (hand-crafted; the writer never emits it).
+        import struct
+
+        crafted = MAGIC + struct.pack("<I", 1) + struct.pack("<H", 1) + b"s" + struct.pack("<BB", 0, 0)
+        open(path, "wb").write(crafted)
+        with pytest.raises(ValueError):
+            read_tenz(path)
+
+        # Unknown dtype tag.
+        crafted = (
+            MAGIC
+            + struct.pack("<I", 1)
+            + struct.pack("<H", 1)
+            + b"s"
+            + struct.pack("<BB", 9, 1)
+            + struct.pack("<Q", 0)
+        )
+        open(path, "wb").write(crafted)
+        with pytest.raises(ValueError):
+            read_tenz(path)

@@ -18,6 +18,7 @@ use crate::compress::plan::{CompressionPlan, Method};
 use crate::compress::rsi::RsiOptions;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::eval::ModelEvaluator;
+use crate::io::checkpoint::CheckpointReader;
 use crate::io::tenz::TensorFile;
 use crate::model::ModelKind;
 use crate::report::write_report;
@@ -72,16 +73,25 @@ fn model_of(args: &Args) -> Result<ModelKind> {
     ModelKind::parse(args.require("model")?).context("bad --model (synthvgg|synthvit)")
 }
 
-fn load_checkpoint(args: &Args, model: ModelKind) -> Result<TensorFile> {
+/// Resolve the checkpoint path: explicit `--checkpoint` or the model's
+/// artifact-manifest entry.
+fn checkpoint_path(args: &Args, model: ModelKind) -> Result<std::path::PathBuf> {
     if let Some(path) = args.opt("checkpoint") {
-        return Ok(TensorFile::read(path)?);
+        return Ok(path.into());
     }
     let registry = ArtifactRegistry::load_default()?;
     let def = crate::model::ModelDef::get(model);
     let entry = registry
         .find_data(def.ckpt_file)
         .with_context(|| format!("{} not in manifest — run `make artifacts`", def.ckpt_file))?;
-    Ok(TensorFile::read(registry.abs_path(entry))?)
+    Ok(registry.abs_path(entry))
+}
+
+/// Eagerly materialize the checkpoint (evaluation reconstructs every
+/// weight anyway). The compress path opens lazily instead — see
+/// [`cmd_compress`].
+fn load_checkpoint(args: &Args, model: ModelKind) -> Result<TensorFile> {
+    Ok(TensorFile::read(checkpoint_path(args, model)?)?)
 }
 
 /// Build the method from CLI options (`--method`, `--q`, `--ortho`,
@@ -111,13 +121,16 @@ fn method_of(args: &Args) -> Result<Method> {
 fn cmd_compress(args: &Args) -> Result<()> {
     let model = model_of(args)?;
     let alpha = args.f64_or("alpha", 0.4)?;
-    let ckpt = load_checkpoint(args, model)?;
+    // Lazy open: planning runs on the header index; weights materialize
+    // one per in-flight worker job, and the output streams to disk — the
+    // checkpoint is never fully resident in either direction.
+    let src = Arc::new(CheckpointReader::open(checkpoint_path(args, model)?)?);
     let method = method_of(args)?;
     let plan = if let Some(budget) = args.opt("adaptive") {
         // Paper section 5 future work: adaptive layer-wise ranks from the
         // shipped exact spectra, under a global parameter budget.
         let budget: f64 = budget.parse().context("bad --adaptive ratio")?;
-        let layers = spectra_of(&ckpt)?;
+        let layers = spectra_of(&src)?;
         let ranks = crate::compress::allocate_ranks(&layers, budget, 1, 4);
         println!("adaptive allocation (budget {budget}):");
         for (name, k) in &ranks {
@@ -133,7 +146,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", crate::util::default_threads())?,
         ..Default::default()
     })?;
-    let report = pipe.compress_checkpoint(&ckpt, &plan)?;
+    let out = args.str_or("out", "compressed.tenz");
+    let report = pipe.compress_to_path(src.clone(), &plan, out)?;
     println!("{}", report.summary());
     for o in &report.outcomes {
         let err = o
@@ -154,30 +168,35 @@ fn cmd_compress(args: &Args) -> Result<()> {
             Some(e) => println!("  {}: FAILED — {e}", o.plan.layer),
         }
     }
-    let out = args.str_or("out", "compressed.tenz");
-    report.compressed.write(out)?;
-    println!("wrote {out}");
+    println!(
+        "wrote {out} ({} tensors; {} payload reads from source)",
+        report.tensors_written,
+        src.tenz().payload_reads()
+    );
     Ok(())
 }
 
 
 /// Collect per-layer spectra from a checkpoint (shipped by aot.py as
-/// `<layer>.spectrum` f64 tensors).
-fn spectra_of(ckpt: &TensorFile) -> Result<Vec<crate::compress::LayerSpectrum>> {
+/// `<layer>.spectrum` f64 tensors), reading lazily: only spectrum entries
+/// are materialized unless a layer is missing one (then its weight is
+/// loaded for a local SVD fallback).
+fn spectra_of(src: &CheckpointReader) -> Result<Vec<crate::compress::LayerSpectrum>> {
     let mut out = Vec::new();
-    for layer in crate::io::checkpoint::list_layers(ckpt) {
-        let w = crate::io::checkpoint::load_weight(ckpt, &layer)?;
-        let (c, d) = w.shape();
-        let spec_key = format!("{layer}.spectrum");
-        let spectrum: Vec<f64> = match ckpt.get(&spec_key) {
-            Some(e) => e
+    for info in src.layer_infos() {
+        let (c, d) = info.shape;
+        let spec_key = format!("{}.spectrum", info.layer);
+        let spectrum: Vec<f64> = if src.tenz().contains(&spec_key) {
+            src.tenz()
+                .entry(&spec_key)?
                 .bytes
                 .chunks_exact(8)
                 .map(|ch| f64::from_le_bytes(ch.try_into().unwrap()))
-                .collect(),
-            None => crate::linalg::svd::svd_via_gram(&w.materialize()).s,
+                .collect()
+        } else {
+            crate::linalg::svd::svd_via_gram(&src.load_weight(&info.layer)?.materialize()).s
         };
-        out.push(crate::compress::LayerSpectrum { layer, c, d, spectrum });
+        out.push(crate::compress::LayerSpectrum { layer: info.layer, c, d, spectrum });
     }
     Ok(out)
 }

@@ -10,6 +10,7 @@ use crate::compress::rsi::{rsi_factorize, RsiOptions};
 use crate::compress::{GemmEngine, NativeEngine};
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::eval::ModelEvaluator;
+use crate::io::lazy::TenzReader;
 use crate::io::tenz::TensorFile;
 use crate::linalg::svd::svd_via_gram;
 use crate::model::ModelKind;
@@ -32,21 +33,25 @@ pub struct LayerUnderTest {
 }
 
 /// Load a named layer + its exact spectrum from a model checkpoint.
+/// Opens the checkpoint lazily: only the one weight (and its shipped
+/// spectrum, when present) is materialized, not the whole model.
 pub fn load_layer(model: ModelKind, layer: &str) -> Result<LayerUnderTest> {
     let registry = ArtifactRegistry::load_default()?;
     let def = crate::model::ModelDef::get(model);
     let entry = registry
         .find_data(def.ckpt_file)
         .with_context(|| format!("{} not in manifest", def.ckpt_file))?;
-    let ckpt = TensorFile::read(registry.abs_path(entry))?;
+    let ckpt = TenzReader::open(registry.abs_path(entry))?;
     let w = ckpt.mat(&format!("{layer}.weight"))?;
-    let spectrum: Vec<f64> = match ckpt.get(&format!("{layer}.spectrum")) {
-        Some(e) => e
+    let spec_key = format!("{layer}.spectrum");
+    let spectrum: Vec<f64> = if ckpt.contains(&spec_key) {
+        ckpt.entry(&spec_key)?
             .bytes
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect(),
-        None => svd_via_gram(&w).s,
+            .collect()
+    } else {
+        svd_via_gram(&w).s
     };
     Ok(LayerUnderTest {
         label: format!("{} {layer} ({}x{})", model.name(), w.rows(), w.cols()),

@@ -12,6 +12,16 @@ pub struct PipelineMetrics {
     pub layers_submitted: AtomicU64,
     pub layers_completed: AtomicU64,
     pub layers_failed: AtomicU64,
+    /// Gauge: worker-side weights currently materialized. The streaming
+    /// pipeline's memory claim — peak ≤ in-flight jobs, never model size —
+    /// is asserted against the high-water marks below in debug/CI runs.
+    pub weights_resident: AtomicU64,
+    /// High-water mark of `weights_resident` over the pipeline's lifetime.
+    pub weights_resident_peak: AtomicU64,
+    /// Gauge: bytes of worker-side weights currently materialized.
+    pub resident_bytes: AtomicU64,
+    /// High-water mark of `resident_bytes` over the pipeline's lifetime.
+    pub resident_bytes_peak: AtomicU64,
     /// Nanoseconds spent inside factorization (summed across workers).
     factorize_nanos: AtomicU64,
     /// Nanoseconds spent validating (residual norms).
@@ -23,6 +33,21 @@ pub struct PipelineMetrics {
 impl PipelineMetrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A worker materialized a weight of `bytes`; bumps the gauges and
+    /// their peaks.
+    pub fn weight_materialized(&self, bytes: u64) {
+        let cur = self.weights_resident.fetch_add(1, Ordering::SeqCst) + 1;
+        self.weights_resident_peak.fetch_max(cur, Ordering::SeqCst);
+        let cur_bytes = self.resident_bytes.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.resident_bytes_peak.fetch_max(cur_bytes, Ordering::SeqCst);
+    }
+
+    /// The materialized weight was dropped.
+    pub fn weight_released(&self, bytes: u64) {
+        self.weights_resident.fetch_sub(1, Ordering::SeqCst);
+        self.resident_bytes.fetch_sub(bytes, Ordering::SeqCst);
     }
 
     pub fn add_factorize_secs(&self, secs: f64) {
@@ -55,9 +80,11 @@ impl PipelineMetrics {
         let done = self.layers_completed.load(Ordering::Relaxed);
         let failed = self.layers_failed.load(Ordering::Relaxed);
         let mut s = format!(
-            "runs: {runs}; layers: {done}/{sub} completed ({failed} failed); factorize {:.3}s, validate {:.3}s",
+            "runs: {runs}; layers: {done}/{sub} completed ({failed} failed); factorize {:.3}s, validate {:.3}s; peak resident: {} weights / {} bytes",
             self.factorize_secs(),
-            self.validate_secs()
+            self.validate_secs(),
+            self.weights_resident_peak.load(Ordering::Relaxed),
+            self.resident_bytes_peak.load(Ordering::Relaxed),
         );
         for (name, secs) in self.stages() {
             s.push_str(&format!("\n  stage {name}: {secs:.3}s"));
@@ -85,5 +112,23 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("2/3 completed"));
         assert!(s.contains("stage plan"));
+    }
+
+    #[test]
+    fn resident_gauges_track_peak() {
+        let m = PipelineMetrics::new();
+        m.weight_materialized(100);
+        m.weight_materialized(50);
+        assert_eq!(m.weights_resident.load(Ordering::SeqCst), 2);
+        assert_eq!(m.resident_bytes.load(Ordering::SeqCst), 150);
+        m.weight_released(100);
+        m.weight_materialized(10);
+        m.weight_released(50);
+        m.weight_released(10);
+        assert_eq!(m.weights_resident.load(Ordering::SeqCst), 0);
+        assert_eq!(m.resident_bytes.load(Ordering::SeqCst), 0);
+        // Peaks survive the releases.
+        assert_eq!(m.weights_resident_peak.load(Ordering::SeqCst), 2);
+        assert_eq!(m.resident_bytes_peak.load(Ordering::SeqCst), 150);
     }
 }

@@ -13,23 +13,41 @@
 //!   it resolves an `Arc<dyn Factorizer>` from its
 //!   [`FactorizerRegistry`] once per run and shares it across workers.
 //! * Planning and whole-model parameter accounting run on a single
-//!   [`layer_infos`] metadata pass; no tensor is loaded for its shape.
+//!   [`layer_infos_for_names`] metadata pass; no tensor is loaded for
+//!   its shape. On a lazy [`CheckpointReader`](crate::io::CheckpointReader)
+//!   source that pass touches zero payload bytes.
 //! * Weights are materialized *inside* worker tasks, so peak memory is
 //!   bounded by the number of in-flight jobs (≤ workers + queue_depth),
-//!   not by model size, and layer I/O overlaps factorization.
+//!   not by model size, and layer I/O overlaps factorization. The
+//!   [`PipelineMetrics`] resident gauges record the high-water mark.
+//! * Two output modes: [`compress_checkpoint`](Pipeline::compress_checkpoint)
+//!   keeps the compressed checkpoint in memory (the evaluator consumes it
+//!   directly); [`compress_to_path`](Pipeline::compress_to_path) streams
+//!   results through a [`TenzWriter`] in sorted-name order as workers
+//!   finish, so neither the input nor the output is ever fully resident —
+//!   the path for checkpoints larger than RAM. Both modes produce
+//!   bit-identical tensors (and, for conventional layer names, identical
+//!   files).
 //! * The [`WorkerPool`] is constructed once per `Pipeline` and reused by
-//!   every `compress_checkpoint` call.
+//!   every run.
 
 use super::metrics::PipelineMetrics;
 use super::pool::WorkerPool;
+use crate::compress::backend::BackendKind;
 use crate::compress::factorizer::{BackendResources, Factorizer, FactorizerRegistry};
 use crate::compress::plan::{CompressionPlan, LayerPlan};
 use crate::compress::Factorization;
-use crate::io::checkpoint::{layer_infos, load_weight, store_weight, StoredWeight};
-use crate::io::tenz::TensorFile;
-use crate::compress::backend::BackendKind;
+use crate::io::checkpoint::{
+    factor_a_key, factor_b_key, layer_infos, layer_infos_for_names, load_weight_from,
+    store_weight, weight_key, StoredWeight, WeightSource,
+};
+use crate::io::tenz::{TensorFile, TenzError};
+use crate::io::writer::TenzWriter;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 /// Pipeline construction options (usually from `config::PipelineSettings`).
@@ -77,7 +95,7 @@ pub struct LayerOutcome {
     pub error: Option<String>,
 }
 
-/// Whole-run report.
+/// Whole-run report (eager mode).
 #[derive(Debug)]
 pub struct PipelineReport {
     /// The compressed checkpoint (unplanned tensors pass through).
@@ -109,8 +127,137 @@ impl PipelineReport {
     }
 }
 
+/// Whole-run report for the streaming mode: the compressed checkpoint is
+/// already on disk at `out_path`, never fully resident.
+#[derive(Debug)]
+pub struct StreamReport {
+    pub out_path: PathBuf,
+    pub outcomes: Vec<LayerOutcome>,
+    pub total_seconds: f64,
+    /// Compressed/original parameter ratio over the whole model.
+    pub ratio: f64,
+    pub method: String,
+    pub factorizer: String,
+    pub backend: &'static str,
+    /// Entries written to the output container (passthrough + factors).
+    pub tensors_written: usize,
+}
+
+impl StreamReport {
+    pub fn summary(&self) -> String {
+        let ok = self.outcomes.iter().filter(|o| o.error.is_none()).count();
+        format!(
+            "{} layers compressed ({} failed) via {} [{}] → {}: {:.2}s, ratio {:.3}, {} tensors",
+            ok,
+            self.outcomes.len() - ok,
+            self.method,
+            self.backend,
+            self.out_path.display(),
+            self.total_seconds,
+            self.ratio,
+            self.tensors_written
+        )
+    }
+}
+
+/// What a worker returns for one layer job.
+type JobOutput = (LayerPlan, Result<(Factorization, f64, Option<f64>), String>);
+
+/// Decrements the resident-weight gauges even if factorization panics
+/// (the pool catches the panic; this guard runs during unwind).
+struct ResidentGuard {
+    metrics: Arc<PipelineMetrics>,
+    bytes: u64,
+}
+
+impl Drop for ResidentGuard {
+    fn drop(&mut self) {
+        self.metrics.weight_released(self.bytes);
+    }
+}
+
+/// Flips a shared cancellation flag unless defused — armed around the
+/// streaming write loop so an aborted run (writer/source I/O error)
+/// stops the not-yet-started jobs instead of leaving them factorizing
+/// for a dead receiver.
+struct CancelOnDrop {
+    flag: Arc<AtomicBool>,
+    armed: bool,
+}
+
+impl Drop for CancelOnDrop {
+    fn drop(&mut self) {
+        if self.armed {
+            self.flag.store(true, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+}
+
+/// Build one worker task: materialize the layer's weight from the source,
+/// factorize, optionally validate. Shared by the eager and streaming
+/// modes so their per-layer semantics (and failure behaviour) cannot
+/// drift apart. Tasks waiting in the bounded queue hold only an `Arc` and
+/// a layer name; the weight exists between load and the end of this
+/// closure, which the resident gauges record. A task that starts after
+/// `cancel` is set returns immediately without touching the source.
+fn make_task(
+    job: LayerPlan,
+    source: Arc<dyn WeightSource>,
+    factorizer: Arc<dyn Factorizer>,
+    metrics: Arc<PipelineMetrics>,
+    validate: bool,
+    cancel: Arc<AtomicBool>,
+) -> impl FnOnce() -> JobOutput + Send + 'static {
+    move || {
+        if cancel.load(std::sync::atomic::Ordering::Relaxed) {
+            return (job, Err("run aborted before this layer started".into()));
+        }
+        let stored = match load_weight_from(&*source, &job.layer) {
+            Ok(s) => s,
+            Err(e) => return (job, Err(e.to_string())),
+        };
+        // Account the layer's true worker-side footprint before anything
+        // else is built from it: a dense weight is moved (not cloned), so
+        // it is exactly C·D floats; a factored input holds A, B and the
+        // reconstructed product simultaneously while materializing.
+        let (c, d) = stored.shape();
+        let dense_bytes = (c * d * std::mem::size_of::<f32>()) as u64;
+        let bytes = match &stored {
+            StoredWeight::Dense(_) => dense_bytes,
+            StoredWeight::Factored { .. } => {
+                dense_bytes + (stored.param_count() * std::mem::size_of::<f32>()) as u64
+            }
+        };
+        metrics.weight_materialized(bytes);
+        let _resident = ResidentGuard { metrics: metrics.clone(), bytes };
+        let w = match stored {
+            StoredWeight::Dense(w) => w,
+            factored => factored.materialize(),
+        };
+        let t = Stopwatch::start();
+        let f = factorizer.factorize(&w, job.k, &job.layer);
+        let secs = t.secs();
+        metrics.add_factorize_secs(secs);
+        let out = match f {
+            Ok(f) => {
+                let err = if validate {
+                    let tv = Stopwatch::start();
+                    let e = f.spectral_error(&w);
+                    metrics.add_validate_secs(tv.secs());
+                    Some(e)
+                } else {
+                    None
+                };
+                Ok((f, secs, err))
+            }
+            Err(e) => Err(format!("{e:#}")),
+        };
+        (job, out)
+    }
+}
+
 /// The pipeline object. Owns its worker pool and factorizer registry;
-/// reusable across `compress_checkpoint` runs (metrics accumulate).
+/// reusable across runs (metrics accumulate).
 pub struct Pipeline {
     config: PipelineConfig,
     metrics: Arc<PipelineMetrics>,
@@ -156,7 +303,10 @@ impl Pipeline {
         self.registry.resolve(&plan.method, self.config.backend, &self.resources)
     }
 
-    /// Compress every planned layer of a checkpoint.
+    /// Compress every planned layer of an in-memory checkpoint; the
+    /// compressed checkpoint comes back in memory. For checkpoints that
+    /// should never be fully resident, use
+    /// [`compress_to_path`](Pipeline::compress_to_path).
     pub fn compress_checkpoint(
         &self,
         ckpt: &TensorFile,
@@ -177,46 +327,25 @@ impl Pipeline {
         self.metrics.runs.fetch_add(1, Ordering::Relaxed);
         self.metrics.layers_submitted.fetch_add(jobs.len() as u64, Ordering::Relaxed);
 
-        let validate = self.config.validate;
         // Workers borrow the checkpoint through an Arc; it is reclaimed
         // (not copied) once they finish, so the run still clones the
         // checkpoint exactly once — into the compressed output.
         let shared: Arc<TensorFile> = Arc::new(ckpt.clone());
 
+        // run_all waits for every job, so the eager mode never aborts
+        // mid-run: the flag stays unset.
+        let cancel = Arc::new(AtomicBool::new(false));
         let tasks: Vec<_> = jobs
             .iter()
             .map(|job| {
-                let job = job.clone();
-                let ckpt = shared.clone();
-                let factorizer = factorizer.clone();
-                let metrics = self.metrics.clone();
-                move || -> (LayerPlan, Result<(Factorization, f64, Option<f64>), String>) {
-                    // Materialization happens here, on the worker: tasks
-                    // waiting in the bounded queue hold only an Arc and a
-                    // layer name, so peak memory tracks in-flight work.
-                    let w = match load_weight(&ckpt, &job.layer).map(|stored| stored.materialize()) {
-                        Ok(w) => w,
-                        Err(e) => return (job, Err(e.to_string())),
-                    };
-                    let t = Stopwatch::start();
-                    let f = factorizer.factorize(&w, job.k, &job.layer);
-                    let secs = t.secs();
-                    metrics.add_factorize_secs(secs);
-                    match f {
-                        Ok(f) => {
-                            let err = if validate {
-                                let tv = Stopwatch::start();
-                                let e = f.spectral_error(&w);
-                                metrics.add_validate_secs(tv.secs());
-                                Some(e)
-                            } else {
-                                None
-                            };
-                            (job, Ok((f, secs, err)))
-                        }
-                        Err(e) => (job, Err(format!("{e:#}"))),
-                    }
-                }
+                make_task(
+                    job.clone(),
+                    shared.clone() as Arc<dyn WeightSource>,
+                    factorizer.clone(),
+                    self.metrics.clone(),
+                    self.config.validate,
+                    cancel.clone(),
+                )
             })
             .collect();
 
@@ -229,7 +358,7 @@ impl Pipeline {
         };
 
         let mut outcomes = Vec::with_capacity(results.len());
-        for r in results {
+        for (idx, r) in results.into_iter().enumerate() {
             match r {
                 Ok((job, Ok((f, secs, err)))) => {
                     store_weight(
@@ -255,9 +384,12 @@ impl Pipeline {
                     });
                 }
                 Err(panic_msg) => {
+                    // run_all returns results in submission order, so the
+                    // panicking layer is identifiable — same attribution
+                    // as the streaming mode.
                     self.metrics.layers_failed.fetch_add(1, Ordering::Relaxed);
                     outcomes.push(LayerOutcome {
-                        plan: LayerPlan::new("<unknown>", 0, 0, 0),
+                        plan: jobs[idx].clone(),
                         seconds: 0.0,
                         spectral_error: None,
                         error: Some(panic_msg),
@@ -281,6 +413,222 @@ impl Pipeline {
             factorizer: factorizer.name(),
             backend: self.config.backend.name(),
         })
+    }
+
+    /// Compress every planned layer of `source`, streaming the output to
+    /// `out` as workers finish. Neither the input checkpoint nor the
+    /// compressed output is ever fully resident: planning runs on the
+    /// source's header metadata, workers materialize one weight per
+    /// in-flight job (via [`make_task`], same as the eager mode), and
+    /// completed factors are appended to a [`TenzWriter`] in sorted-name
+    /// order — for conventional layer names the file is byte-identical to
+    /// eager-compressing and writing the same checkpoint. Failed layers
+    /// pass through in their original representation, like the eager mode.
+    ///
+    /// Pass an `Arc<CheckpointReader>` (coerced to `Arc<dyn WeightSource>`)
+    /// to stream from disk; an `Arc<TensorFile>` also works when the input
+    /// is already resident but the output should not be.
+    pub fn compress_to_path(
+        &self,
+        source: Arc<dyn WeightSource>,
+        plan: &CompressionPlan,
+        out: impl AsRef<Path>,
+    ) -> Result<StreamReport> {
+        use std::sync::atomic::Ordering;
+        let sw = Stopwatch::start();
+
+        // One tensor_names pass serves metadata planning and slot
+        // resolution below.
+        let names = source.tensor_names();
+        let infos = layer_infos_for_names(&*source, &names);
+        let jobs = plan.expand_infos(&infos);
+        let total_params: usize = infos.iter().map(|i| i.stored_params).sum();
+
+        let factorizer = self.resolve_factorizer(plan)?;
+        self.metrics.runs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.layers_submitted.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+
+        // A planned layer occupies one output "slot" at the sorted position
+        // of its first representation key; its other representation keys
+        // are consumed by that slot.
+        let mut slot_of_layer: HashMap<String, usize> =
+            jobs.iter().enumerate().map(|(i, j)| (j.layer.clone(), i)).collect();
+        let mut rep_key_layer: HashMap<String, String> = HashMap::new();
+        for j in &jobs {
+            for key in [weight_key(&j.layer), factor_a_key(&j.layer), factor_b_key(&j.layer)] {
+                rep_key_layer.insert(key, j.layer.clone());
+            }
+        }
+
+        // Resolve the sorted name stream into output slots up front, so
+        // jobs can be submitted in *write* order and paced against the
+        // write frontier below.
+        enum Slot {
+            Pass(String),
+            Job(usize),
+        }
+        let mut slots: Vec<Slot> = Vec::new();
+        for name in names {
+            match rep_key_layer.get(name.as_str()) {
+                None => slots.push(Slot::Pass(name)),
+                Some(layer) => {
+                    if let Some(job_idx) = slot_of_layer.remove(layer.as_str()) {
+                        slots.push(Slot::Job(job_idx));
+                    }
+                    // else: later representation key of an already-placed slot
+                }
+            }
+        }
+        let job_order: Vec<usize> = slots
+            .iter()
+            .filter_map(|s| match s {
+                Slot::Job(i) => Some(*i),
+                Slot::Pass(_) => None,
+            })
+            .collect();
+
+        let cancel = Arc::new(AtomicBool::new(false));
+        let mut tasks: Vec<Option<Box<dyn FnOnce() -> JobOutput + Send>>> = jobs
+            .iter()
+            .map(|job| {
+                Some(Box::new(make_task(
+                    job.clone(),
+                    source.clone(),
+                    factorizer.clone(),
+                    self.metrics.clone(),
+                    self.config.validate,
+                    cancel.clone(),
+                )) as Box<dyn FnOnce() -> JobOutput + Send>)
+            })
+            .collect();
+
+        // The writer is created before any job is submitted: an
+        // immediately-detectable output-path failure costs zero
+        // factorization work.
+        let mut writer = TenzWriter::create(out.as_ref())?;
+
+        // Jobs are submitted in write order, never more than `window`
+        // ahead of the write frontier: completed-but-unwritten results
+        // (the channel plus `pending`) are bounded by the window, not by
+        // the model, keeping the output side O(in-flight) too. No
+        // deadlock: the job a slot waits on is always submitted first,
+        // and the FIFO queue guarantees it gets a worker.
+        let window = (self.config.workers + self.config.queue_depth).max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<JobOutput, String>)>();
+        let mut submitted = 0usize;
+        let mut written_jobs = 0usize;
+        let mut submit_window = |frontier: usize, submitted: &mut usize| {
+            let target = frontier.saturating_add(window).min(job_order.len());
+            while *submitted < target {
+                let idx = job_order[*submitted];
+                let task = tasks[idx].take().expect("job submitted once");
+                self.pool.submit_indexed(idx, task, &tx);
+                *submitted += 1;
+            }
+        };
+        submit_window(0, &mut submitted);
+
+        // Any early `?` below (writer/source I/O failure) trips the flag,
+        // so queued jobs bail out instead of factorizing for a dead run.
+        let mut abort_guard = CancelOnDrop { flag: cancel.clone(), armed: true };
+        // Results that arrived ahead of their slot (≤ window entries).
+        let mut pending: HashMap<usize, Result<JobOutput, String>> = HashMap::new();
+        let mut outcomes_by_job: Vec<Option<LayerOutcome>> =
+            (0..jobs.len()).map(|_| None).collect();
+
+        for slot in &slots {
+            let job_idx = match slot {
+                Slot::Pass(name) => {
+                    // Passthrough: copy one tensor at a time, source → writer.
+                    writer.append(name, &source.entry(name)?)?;
+                    continue;
+                }
+                Slot::Job(job_idx) => *job_idx,
+            };
+            let result: Result<JobOutput, String> = loop {
+                if let Some(r) = pending.remove(&job_idx) {
+                    break r;
+                }
+                match rx.recv() {
+                    Ok((i, r)) if i == job_idx => break r,
+                    Ok((i, r)) => {
+                        pending.insert(i, r);
+                    }
+                    Err(_) => break Err("job result lost".into()),
+                }
+            };
+            written_jobs += 1;
+            submit_window(written_jobs, &mut submitted);
+            let outcome = match result {
+                Ok((job, Ok((f, secs, err)))) => {
+                    writer.append_mat(&factor_a_key(&job.layer), &f.a)?;
+                    writer.append_mat(&factor_b_key(&job.layer), &f.b)?;
+                    self.metrics.layers_completed.fetch_add(1, Ordering::Relaxed);
+                    LayerOutcome { plan: job, seconds: secs, spectral_error: err, error: None }
+                }
+                Ok((job, Err(msg))) => {
+                    self.copy_representation(&*source, &mut writer, &job.layer)?;
+                    self.metrics.layers_failed.fetch_add(1, Ordering::Relaxed);
+                    LayerOutcome { plan: job, seconds: 0.0, spectral_error: None, error: Some(msg) }
+                }
+                Err(panic_msg) => {
+                    let job = jobs[job_idx].clone();
+                    self.copy_representation(&*source, &mut writer, &job.layer)?;
+                    self.metrics.layers_failed.fetch_add(1, Ordering::Relaxed);
+                    LayerOutcome {
+                        plan: job,
+                        seconds: 0.0,
+                        spectral_error: None,
+                        error: Some(panic_msg),
+                    }
+                }
+            };
+            outcomes_by_job[job_idx] = Some(outcome);
+        }
+        let tensors_written = writer.tensors_written();
+        writer.finish()?;
+        abort_guard.armed = false;
+        drop(rx);
+
+        let outcomes: Vec<LayerOutcome> = outcomes_by_job
+            .into_iter()
+            .map(|o| o.expect("every planned job has an output slot"))
+            .collect();
+        let succeeded: Vec<LayerPlan> = outcomes
+            .iter()
+            .filter(|o| o.error.is_none())
+            .map(|o| o.plan.clone())
+            .collect();
+        let ratio = CompressionPlan::model_ratio(&succeeded, total_params.max(1));
+        Ok(StreamReport {
+            out_path: out.as_ref().to_path_buf(),
+            outcomes,
+            total_seconds: sw.secs(),
+            ratio,
+            method: plan.method.name(),
+            factorizer: factorizer.name(),
+            backend: self.config.backend.name(),
+            tensors_written,
+        })
+    }
+
+    /// Copy a failed layer's original stored representation straight
+    /// through to the streaming writer: every representation key present
+    /// in the source (degenerate inputs may carry dense *and* factored),
+    /// in key order so sorted output order is preserved — exactly what the
+    /// eager mode's untouched-clone semantics keep.
+    fn copy_representation(
+        &self,
+        source: &dyn WeightSource,
+        writer: &mut TenzWriter,
+        layer: &str,
+    ) -> Result<(), TenzError> {
+        for key in [weight_key(layer), factor_a_key(layer), factor_b_key(layer)] {
+            if source.contains(&key) {
+                writer.append(&key, &source.entry(&key)?)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -325,6 +673,13 @@ mod tests {
         assert!(report.outcomes.iter().all(|o| o.spectral_error.is_some()));
         assert!(report.summary().contains("3 layers"));
         assert!(report.factorizer.contains("rsi(q=2)"));
+        // The resident gauges saw the workers' weights and drained back.
+        use std::sync::atomic::Ordering;
+        let m = pipe.metrics();
+        assert!(m.weights_resident_peak.load(Ordering::SeqCst) >= 1);
+        assert!(m.weights_resident_peak.load(Ordering::SeqCst) <= 3);
+        assert_eq!(m.weights_resident.load(Ordering::SeqCst), 0);
+        assert_eq!(m.resident_bytes.load(Ordering::SeqCst), 0);
     }
 
     #[test]
@@ -445,5 +800,32 @@ mod tests {
         let plan = CompressionPlan::uniform_alpha(0.3, Method::Custom("no-such-method"));
         let err = pipe.compress_checkpoint(&ckpt, &plan).unwrap_err();
         assert!(format!("{err:#}").contains("no-such-method"));
+    }
+
+    #[test]
+    fn streaming_mode_from_in_memory_source() {
+        // compress_to_path also accepts an eager TensorFile source; the
+        // on-disk result must decode to the same tensors as the eager
+        // report. (Lazy-source coverage lives in
+        // tests/pipeline_streaming.rs.)
+        let dir = std::env::temp_dir().join(format!("pipe_stream_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("out.tenz");
+
+        let ckpt = test_ckpt();
+        let plan = CompressionPlan::uniform_alpha(0.4, Method::Rsi(RsiOptions::with_q(2, 11)));
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+        let eager = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+        let shared: Arc<TensorFile> = Arc::new(ckpt);
+        let stream = pipe.compress_to_path(shared, &plan, &out).unwrap();
+
+        assert_eq!(stream.outcomes.len(), 3);
+        assert!(stream.outcomes.iter().all(|o| o.error.is_none()), "{:?}", stream.outcomes);
+        assert!((stream.ratio - eager.ratio).abs() < 1e-12);
+        assert!(stream.summary().contains("3 layers"));
+        let back = TensorFile::read(&out).unwrap();
+        assert_eq!(back.to_bytes(), eager.compressed.to_bytes());
+        assert_eq!(stream.tensors_written, back.len());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -13,6 +13,26 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Wrap a task so its result — or its caught panic, rendered to a
+/// message — is delivered as `(idx, result)` on `tx`. Send failures
+/// (receiver gone) are ignored.
+fn wrap_task<T, F>(idx: usize, task: F, tx: &Sender<(usize, Result<T, String>)>) -> Job
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let tx_job = tx.clone();
+    Box::new(move || {
+        let out = std::panic::catch_unwind(AssertUnwindSafe(task)).map_err(|p| {
+            p.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "job panicked".into())
+        });
+        let _ = tx_job.send((idx, out));
+    })
+}
+
 /// Fixed-size worker pool.
 pub struct WorkerPool {
     queue: Arc<BoundedQueue<Job>>,
@@ -63,6 +83,62 @@ impl WorkerPool {
         self.queue.push(Box::new(job)).is_ok()
     }
 
+    /// Submit one task whose result (or caught panic message) is sent as
+    /// `(idx, result)` on `tx`. Blocks under queue backpressure. The
+    /// building block for both batch modes below and for callers that
+    /// pace their own submissions (the streaming pipeline submits at most
+    /// a window of jobs ahead of its write frontier, bounding completed
+    /// but unconsumed results). If the pool is shut down, the error
+    /// result is sent on `tx` and `false` is returned.
+    pub fn submit_indexed<T, F>(
+        &self,
+        idx: usize,
+        task: F,
+        tx: &Sender<(usize, Result<T, String>)>,
+    ) -> bool
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        if self.queue.push(wrap_task(idx, task, tx)).is_ok() {
+            true
+        } else {
+            let _ = tx.send((idx, Err("pool shut down".into())));
+            false
+        }
+    }
+
+    /// Submit a batch of independent tasks and return a receiver that
+    /// yields `(submission_index, result)` pairs **as jobs complete**.
+    /// Submission happens on a helper thread (pushes block under the
+    /// bounded queue's backpressure), so this returns immediately; panics
+    /// are caught per task.
+    pub fn run_streaming<T, F>(&self, tasks: Vec<F>) -> Receiver<(usize, Result<T, String>)>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        let (tx, rx): (Sender<(usize, Result<T, String>)>, Receiver<_>) = channel();
+        let queue = self.queue.clone();
+        let tx_thread = tx.clone();
+        let spawned = std::thread::Builder::new().name("rsic-submit".into()).spawn(move || {
+            for (idx, task) in tasks.into_iter().enumerate() {
+                if queue.push(wrap_task(idx, task, &tx_thread)).is_err() {
+                    let _ = tx_thread.send((idx, Err("pool shut down".into())));
+                }
+            }
+        });
+        if spawned.is_err() {
+            // Thread limit hit: fail every task like any other per-task
+            // error instead of panicking the caller.
+            for idx in 0..n {
+                let _ = tx.send((idx, Err("failed to spawn submitter thread".into())));
+            }
+        }
+        rx
+    }
+
     /// Run a batch of independent tasks, catching panics per task, and
     /// collect their results in submission order.
     pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Vec<Result<T, String>>
@@ -71,23 +147,7 @@ impl WorkerPool {
         F: FnOnce() -> T + Send + 'static,
     {
         let n = tasks.len();
-        let (tx, rx): (Sender<(usize, Result<T, String>)>, Receiver<_>) = channel();
-        for (idx, task) in tasks.into_iter().enumerate() {
-            let tx_job = tx.clone();
-            let ok = self.submit(move || {
-                let out = std::panic::catch_unwind(AssertUnwindSafe(task)).map_err(|p| {
-                    p.downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
-                        .unwrap_or_else(|| "job panicked".into())
-                });
-                let _ = tx_job.send((idx, out));
-            });
-            if !ok {
-                let _ = tx.send((idx, Err("pool shut down".into())));
-            }
-        }
-        drop(tx);
+        let rx = self.run_streaming(tasks);
         let mut results: Vec<Option<Result<T, String>>> = (0..n).map(|_| None).collect();
         for (idx, r) in rx {
             results[idx] = Some(r);
@@ -169,6 +229,28 @@ mod tests {
             .collect();
         pool.run_all(tasks);
         assert!(peak.load(Ordering::SeqCst) >= 2, "expected ≥2 concurrent jobs");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn run_streaming_delivers_all_results_incrementally() {
+        let pool = WorkerPool::new(3, 2);
+        let rx = pool.run_streaming((0..16).map(|i| move || i * i).collect::<Vec<_>>());
+        let mut got: Vec<(usize, i32)> = rx.iter().map(|(i, r)| (i, r.unwrap())).collect();
+        got.sort_unstable();
+        assert_eq!(got.len(), 16);
+        for (i, v) in got {
+            assert_eq!(v, (i * i) as i32);
+        }
+        // Panics are isolated per task, like run_all.
+        let rx = pool.run_streaming(vec![
+            Box::new(|| 1usize) as Box<dyn FnOnce() -> usize + Send>,
+            Box::new(|| panic!("stream boom")),
+        ]);
+        let mut results: Vec<_> = rx.iter().collect();
+        results.sort_by_key(|(i, _)| *i);
+        assert_eq!(*results[0].1.as_ref().unwrap(), 1);
+        assert!(results[1].1.as_ref().unwrap_err().contains("stream boom"));
         pool.shutdown();
     }
 

@@ -5,9 +5,22 @@
 //! A *compressed* checkpoint replaces `weight` with `weight.A` (C×k) and
 //! `weight.B` (k×D) — exactly the two-smaller-linear-layers rewrite of
 //! Section 3.
+//!
+//! Checkpoints are accessed through the [`WeightSource`] trait, which has
+//! two implementations with identical semantics:
+//!
+//! * [`TensorFile`] — eager; the whole checkpoint is resident.
+//! * [`CheckpointReader`] — lazy, over [`TenzReader`]: `open` indexes
+//!   headers only, [`layer_infos`](CheckpointReader::layer_infos) plans
+//!   from that index without touching payload bytes, and
+//!   [`load_weight`](CheckpointReader::load_weight) materializes exactly
+//!   one layer on demand. This is what lets the streaming pipeline run
+//!   checkpoints larger than RAM.
 
+use super::lazy::TenzReader;
 use super::tenz::{TensorEntry, TensorFile, TenzError};
 use crate::tensor::Mat;
+use std::path::Path;
 
 /// Key helpers.
 pub fn weight_key(layer: &str) -> String {
@@ -63,15 +76,131 @@ impl StoredWeight {
     }
 }
 
-/// Load the weight for `layer`, preferring factored form if present.
-pub fn load_weight(tf: &TensorFile, layer: &str) -> Result<StoredWeight, TenzError> {
-    if tf.contains(&factor_a_key(layer)) {
-        let a = tf.mat(&factor_a_key(layer))?;
-        let b = tf.mat(&factor_b_key(layer))?;
+/// Uniform access to a checkpoint's tensors, eager or lazy. Metadata
+/// queries (`tensor_names`, `dims_of`) must not materialize payloads;
+/// `entry`/`mat` materialize exactly the named tensor. Implementations
+/// are `Send + Sync` so one source can feed all pipeline workers.
+pub trait WeightSource: Send + Sync {
+    /// All tensor names, sorted.
+    fn tensor_names(&self) -> Vec<String>;
+    /// Header-only shape of `name` (`None` when absent).
+    fn dims_of(&self, name: &str) -> Option<Vec<usize>>;
+    /// Materialize one raw tensor.
+    fn entry(&self, name: &str) -> Result<TensorEntry, TenzError>;
+    /// Materialize a 2-D f32 tensor.
+    fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError>;
+
+    fn contains(&self, name: &str) -> bool {
+        self.dims_of(name).is_some()
+    }
+}
+
+impl WeightSource for TensorFile {
+    fn tensor_names(&self) -> Vec<String> {
+        self.names().map(str::to_string).collect()
+    }
+    fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
+        self.get(name).map(|e| e.dims.clone())
+    }
+    fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
+        self.get(name).cloned().ok_or_else(|| TenzError::NotFound(name.into()))
+    }
+    fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
+        TensorFile::mat(self, name)
+    }
+    fn contains(&self, name: &str) -> bool {
+        TensorFile::contains(self, name)
+    }
+}
+
+impl WeightSource for TenzReader {
+    fn tensor_names(&self) -> Vec<String> {
+        self.names().map(str::to_string).collect()
+    }
+    fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
+        self.meta(name).map(|m| m.dims.clone())
+    }
+    fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
+        TenzReader::entry(self, name)
+    }
+    fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
+        TenzReader::mat(self, name)
+    }
+    fn contains(&self, name: &str) -> bool {
+        TenzReader::contains(self, name)
+    }
+}
+
+/// Lazy checkpoint access: a [`TenzReader`] plus the layer conventions.
+/// `open` costs O(header) bytes; weights materialize per layer on demand.
+#[derive(Debug)]
+pub struct CheckpointReader {
+    tenz: TenzReader,
+}
+
+impl CheckpointReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        Ok(CheckpointReader { tenz: TenzReader::open(path)? })
+    }
+
+    /// The underlying indexed reader (metadata, payload-read counters).
+    pub fn tenz(&self) -> &TenzReader {
+        &self.tenz
+    }
+
+    /// Layer prefixes present, in index order (headers only).
+    pub fn list_layers(&self) -> Vec<String> {
+        list_layers_from(self)
+    }
+
+    /// One header-only metadata pass (see [`layer_infos`]).
+    pub fn layer_infos(&self) -> Vec<LayerInfo> {
+        layer_infos_from(self)
+    }
+
+    /// Materialize the weight for one layer, preferring factored form.
+    pub fn load_weight(&self, layer: &str) -> Result<StoredWeight, TenzError> {
+        load_weight_from(self, layer)
+    }
+
+    /// Materialize the whole checkpoint (escape hatch for eager callers).
+    pub fn read_all(&self) -> Result<TensorFile, TenzError> {
+        self.tenz.read_all()
+    }
+}
+
+impl WeightSource for CheckpointReader {
+    fn tensor_names(&self) -> Vec<String> {
+        WeightSource::tensor_names(&self.tenz)
+    }
+    fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
+        WeightSource::dims_of(&self.tenz, name)
+    }
+    fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
+        WeightSource::entry(&self.tenz, name)
+    }
+    fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
+        WeightSource::mat(&self.tenz, name)
+    }
+    fn contains(&self, name: &str) -> bool {
+        self.tenz.contains(name)
+    }
+}
+
+/// Load the weight for `layer` from any source, preferring factored form.
+pub fn load_weight_from(src: &dyn WeightSource, layer: &str) -> Result<StoredWeight, TenzError> {
+    if src.contains(&factor_a_key(layer)) {
+        let a = src.mat(&factor_a_key(layer))?;
+        let b = src.mat(&factor_b_key(layer))?;
         Ok(StoredWeight::Factored { a, b })
     } else {
-        Ok(StoredWeight::Dense(tf.mat(&weight_key(layer))?))
+        Ok(StoredWeight::Dense(src.mat(&weight_key(layer))?))
     }
+}
+
+/// Load the weight for `layer`, preferring factored form if present.
+pub fn load_weight(tf: &TensorFile, layer: &str) -> Result<StoredWeight, TenzError> {
+    load_weight_from(tf, layer)
 }
 
 /// Store a weight, clearing any previous representation of the same layer.
@@ -88,11 +217,11 @@ pub fn store_weight(tf: &mut TensorFile, layer: &str, w: &StoredWeight) {
     }
 }
 
-/// Enumerate layer prefixes present in a checkpoint, in index order.
-/// Recognizes both `<prefix>.weight` and `<prefix>.weight.A`.
-pub fn list_layers(tf: &TensorFile) -> Vec<String> {
+/// Layer prefixes present among `names`, in index order. Recognizes both
+/// `<prefix>.weight` and `<prefix>.weight.A`.
+fn list_layer_names(names: &[String]) -> Vec<String> {
     let mut layers: Vec<String> = Vec::new();
-    for name in tf.names() {
+    for name in names {
         let prefix = if let Some(p) = name.strip_suffix(".weight") {
             p
         } else if let Some(p) = name.strip_suffix(".weight.A") {
@@ -112,6 +241,16 @@ pub fn list_layers(tf: &TensorFile) -> Vec<String> {
     layers
 }
 
+/// Enumerate layer prefixes in any source, in index order.
+pub fn list_layers_from(src: &dyn WeightSource) -> Vec<String> {
+    list_layer_names(&src.tensor_names())
+}
+
+/// Enumerate layer prefixes present in a checkpoint, in index order.
+pub fn list_layers(tf: &TensorFile) -> Vec<String> {
+    list_layers_from(tf)
+}
+
 /// Shape/size metadata for one layer, read from entry headers alone — no
 /// tensor payload is decoded. This is what planning and whole-model
 /// parameter accounting run on, so a checkpoint is scanned exactly once
@@ -126,39 +265,56 @@ pub struct LayerInfo {
     pub factored: bool,
 }
 
-/// One metadata pass over a checkpoint: every layer's logical shape and
-/// stored parameter count, in [`list_layers`] order. Layers whose weight
-/// entries are not 2-D are skipped (they cannot be planned); dtype is NOT
-/// checked here — a weight with a bogus dtype still gets planned and then
-/// surfaces a per-layer load error from the worker instead of vanishing
-/// silently.
-pub fn layer_infos(tf: &TensorFile) -> Vec<LayerInfo> {
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// One metadata pass over any checkpoint source: every layer's logical
+/// shape and stored parameter count, in [`list_layers`] order. Layers
+/// whose weight entries are not 2-D are skipped (they cannot be planned);
+/// dtype is NOT checked here — a weight with a bogus dtype still gets
+/// planned and then surfaces a per-layer load error from the worker
+/// instead of vanishing silently. On a lazy source this touches zero
+/// payload bytes.
+pub fn layer_infos_from(src: &dyn WeightSource) -> Vec<LayerInfo> {
+    layer_infos_for_names(src, &src.tensor_names())
+}
+
+/// [`layer_infos_from`] over an already-fetched sorted name list — lets a
+/// caller that needs the names anyway (the streaming driver's slot
+/// resolution) pay for one `tensor_names` pass instead of two.
+pub fn layer_infos_for_names(src: &dyn WeightSource, names: &[String]) -> Vec<LayerInfo> {
     let mut out = Vec::new();
-    for layer in list_layers(tf) {
-        if let Some(a) = tf.get(&factor_a_key(&layer)) {
-            let Some(b) = tf.get(&factor_b_key(&layer)) else { continue };
-            if a.dims.len() != 2 || b.dims.len() != 2 {
+    for layer in list_layer_names(names) {
+        if let Some(a) = src.dims_of(&factor_a_key(&layer)) {
+            let Some(b) = src.dims_of(&factor_b_key(&layer)) else { continue };
+            if a.len() != 2 || b.len() != 2 {
                 continue;
             }
             out.push(LayerInfo {
                 layer,
-                shape: (a.dims[0], b.dims[1]),
-                stored_params: a.numel() + b.numel(),
+                shape: (a[0], b[1]),
+                stored_params: numel(&a) + numel(&b),
                 factored: true,
             });
-        } else if let Some(w) = tf.get(&weight_key(&layer)) {
-            if w.dims.len() != 2 {
+        } else if let Some(w) = src.dims_of(&weight_key(&layer)) {
+            if w.len() != 2 {
                 continue;
             }
             out.push(LayerInfo {
                 layer,
-                shape: (w.dims[0], w.dims[1]),
-                stored_params: w.numel(),
+                shape: (w[0], w[1]),
+                stored_params: numel(&w),
                 factored: false,
             });
         }
     }
     out
+}
+
+/// One metadata pass over an eager checkpoint (see [`layer_infos_from`]).
+pub fn layer_infos(tf: &TensorFile) -> Vec<LayerInfo> {
+    layer_infos_from(tf)
 }
 
 /// Store a scalar metadata value as a 1-element f32 tensor.
@@ -251,5 +407,40 @@ mod tests {
         let mut tf = TensorFile::new();
         store_scalar(&mut tf, "meta.alpha", 0.4);
         assert_eq!(load_scalar(&tf, "meta.alpha").unwrap(), 0.4);
+    }
+
+    #[test]
+    fn checkpoint_reader_matches_eager_semantics() {
+        let dir = std::env::temp_dir().join(format!("ckpt_reader_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.tenz");
+
+        let mut g = GaussianSource::new(3);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "layers.0", &StoredWeight::Dense(gaussian(5, 7, 1.0, &mut g)));
+        store_weight(
+            &mut tf,
+            "layers.1",
+            &StoredWeight::Factored { a: gaussian(5, 2, 1.0, &mut g), b: gaussian(2, 7, 1.0, &mut g) },
+        );
+        tf.insert("layers.0.bias", TensorEntry::from_f32(vec![5], &[0.1; 5]));
+        tf.write(&path).unwrap();
+
+        let ckpt = CheckpointReader::open(&path).unwrap();
+        // Planning metadata comes from headers only: zero payload reads.
+        assert_eq!(ckpt.layer_infos(), layer_infos(&tf));
+        assert_eq!(ckpt.list_layers(), list_layers(&tf));
+        assert_eq!(ckpt.tenz().payload_reads(), 0);
+
+        // Per-layer materialization matches the eager loader.
+        let lazy = ckpt.load_weight("layers.0").unwrap();
+        let eager = load_weight(&tf, "layers.0").unwrap();
+        assert_eq!(lazy.materialize(), eager.materialize());
+        assert_eq!(ckpt.tenz().payload_reads(), 1);
+        let lazy = ckpt.load_weight("layers.1").unwrap();
+        assert_eq!(lazy.rank(), Some(2));
+        assert_eq!(ckpt.tenz().payload_reads(), 3); // + A and B
+
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,267 @@
+//! Lazy, indexed `.tenz` reading: [`TenzReader`].
+//!
+//! `open` runs the shared header scan ([`scan_index`]) over the file —
+//! O(header) bytes for an N-tensor container — and keeps a
+//! name → [`TensorMeta`] index plus the open file handle. Tensor payloads
+//! are materialized one at a time via positional reads, so a checkpoint
+//! larger than RAM can flow through the streaming pipeline: peak memory
+//! tracks the tensors actually in flight, never the container size.
+//!
+//! Payload reads are counted ([`TenzReader::payload_reads`]) so tests and
+//! callers can prove how often the disk was touched — the streaming
+//! pipeline asserts each planned weight is read exactly once.
+
+use super::tenz::{mat_from_entry, scan_index, TensorEntry, TensorFile, TensorMeta, TenzError};
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Indexed lazy reader over an on-disk `.tenz` container.
+///
+/// All accessors take `&self`; payloads are fetched with positional reads
+/// (`pread` on unix), so one reader can serve many worker threads
+/// concurrently without a lock.
+#[derive(Debug)]
+pub struct TenzReader {
+    path: PathBuf,
+    file: File,
+    index: BTreeMap<String, TensorMeta>,
+    total_len: u64,
+    payload_reads: AtomicU64,
+}
+
+impl TenzReader {
+    /// Open a container and index it by scanning entry headers only.
+    /// Every declared size is validated against the file length before
+    /// anything is allocated; payload bytes are seeked past, not read.
+    ///
+    /// The scan runs on the bare file handle — deliberately unbuffered,
+    /// because `BufReader`'s `Seek` impl discards (and then refills) its
+    /// buffer on every payload skip, which would turn the O(header) open
+    /// into O(file) reads for sub-buffer-sized tensors. Header fields are
+    /// tiny, so the extra syscalls per entry are the cheaper trade.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::open(&path)?;
+        let total_len = file.metadata()?.len();
+        let metas = {
+            let mut r = &file;
+            scan_index(&mut r, total_len)?
+        };
+        let index = metas.into_iter().map(|m| (m.name.clone(), m)).collect();
+        Ok(TenzReader { path, file, index, total_len, payload_reads: AtomicU64::new(0) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Sorted tensor names.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.index.keys().map(|s| s.as_str())
+    }
+
+    /// Header metadata for one tensor (no payload I/O).
+    pub fn meta(&self, name: &str) -> Option<&TensorMeta> {
+        self.index.get(name)
+    }
+
+    /// All tensor metadata, in sorted-name order (no payload I/O).
+    pub fn metas(&self) -> impl Iterator<Item = &TensorMeta> {
+        self.index.values()
+    }
+
+    /// Container size on disk.
+    pub fn file_bytes(&self) -> u64 {
+        self.total_len
+    }
+
+    /// Total payload bytes across all tensors (storage accounting),
+    /// computed from headers alone.
+    pub fn payload_bytes(&self) -> u64 {
+        self.index.values().map(|m| m.nbytes).sum()
+    }
+
+    /// Bytes `open` actually parsed: magic + count + entry headers. For a
+    /// well-formed container this is `file_bytes() - payload_bytes()` —
+    /// the O(header) cost of building the index.
+    pub fn header_bytes(&self) -> u64 {
+        self.total_len - self.payload_bytes()
+    }
+
+    /// How many payloads have been materialized through this reader —
+    /// the instrumentation hook streaming tests assert against.
+    pub fn payload_reads(&self) -> u64 {
+        self.payload_reads.load(Ordering::Relaxed)
+    }
+
+    #[cfg(unix)]
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.read_exact_at(buf, offset)
+    }
+
+    #[cfg(windows)]
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        // seek_read takes an explicit offset per call, so concurrent
+        // readers don't race on a shared cursor — and the original handle
+        // is kept, so an atomic replace of the path mid-run cannot pair
+        // this index with another file's bytes.
+        use std::os::windows::fs::FileExt;
+        let mut done = 0usize;
+        while done < buf.len() {
+            let n = self.file.seek_read(&mut buf[done..], offset + done as u64)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "unexpected eof in .tenz payload",
+                ));
+            }
+            done += n;
+        }
+        Ok(())
+    }
+
+    #[cfg(not(any(unix, windows)))]
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        // Last-resort fallback: a fresh handle per read keeps `&self`
+        // concurrent. Caveat: reopening by path means a file atomically
+        // replaced mid-run is read with this reader's stale index.
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = File::open(&self.path)?;
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+
+    /// Materialize one tensor's payload.
+    pub fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
+        let m = self.index.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        // nbytes was proven ≤ file length at open, so this allocation is
+        // bounded by the container size.
+        let mut bytes = vec![0u8; m.nbytes as usize];
+        self.read_at(&mut bytes, m.offset)?;
+        self.payload_reads.fetch_add(1, Ordering::Relaxed);
+        Ok(TensorEntry { dtype: m.dtype, dims: m.dims.clone(), bytes })
+    }
+
+    /// Fetch a 2-D f32 tensor as a `Mat` (same semantics as
+    /// [`TensorFile::mat`]).
+    pub fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
+        let e = self.entry(name)?;
+        mat_from_entry(name, &e)
+    }
+
+    /// Fetch a 1-D f32 tensor.
+    pub fn vec_f32(&self, name: &str) -> Result<Vec<f32>, TenzError> {
+        self.entry(name)?.to_f32()
+    }
+
+    /// Fetch a 1-D i32 tensor (labels).
+    pub fn vec_i32(&self, name: &str) -> Result<Vec<i32>, TenzError> {
+        self.entry(name)?.to_i32()
+    }
+
+    /// Materialize the whole container as an eager [`TensorFile`] — the
+    /// escape hatch for callers that genuinely need everything resident
+    /// (e.g. the evaluator's reconstruct-and-execute path).
+    pub fn read_all(&self) -> Result<TensorFile, TenzError> {
+        let mut tf = TensorFile::new();
+        let names: Vec<String> = self.index.keys().cloned().collect();
+        for name in names {
+            let e = self.entry(&name)?;
+            tf.insert(name, e);
+        }
+        Ok(tf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tenz_lazy_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample() -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.insert_mat("layers.0.weight", &Mat::from_fn(4, 6, |r, c| (r * 6 + c) as f32));
+        tf.insert("layers.0.bias", TensorEntry::from_f32(vec![4], &[0.5; 4]));
+        tf.insert("labels", TensorEntry::from_i32(vec![3], &[7, -1, 2]));
+        tf
+    }
+
+    #[test]
+    fn open_indexes_without_reading_payloads() {
+        let dir = tmp_dir("index");
+        let path = dir.join("s.tenz");
+        sample().write(&path).unwrap();
+        let r = TenzReader::open(&path).unwrap();
+        assert_eq!(r.len(), 3);
+        assert!(r.contains("labels"));
+        assert_eq!(r.payload_reads(), 0, "open must not touch payloads");
+        let m = r.meta("layers.0.weight").unwrap();
+        assert_eq!(m.dims, vec![4, 6]);
+        assert_eq!(m.nbytes, 4 * 6 * 4);
+        assert_eq!(r.header_bytes() + r.payload_bytes(), r.file_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lazy_reads_match_eager() {
+        let dir = tmp_dir("match");
+        let path = dir.join("s.tenz");
+        let tf = sample();
+        tf.write(&path).unwrap();
+        let r = TenzReader::open(&path).unwrap();
+        assert_eq!(r.mat("layers.0.weight").unwrap(), tf.mat("layers.0.weight").unwrap());
+        assert_eq!(r.vec_f32("layers.0.bias").unwrap(), tf.vec_f32("layers.0.bias").unwrap());
+        assert_eq!(r.vec_i32("labels").unwrap(), tf.vec_i32("labels").unwrap());
+        assert_eq!(r.payload_reads(), 3);
+        assert!(matches!(r.entry("nope"), Err(TenzError::NotFound(_))));
+        // Wrong-dtype errors carry the tensor name, like the eager reader.
+        match r.mat("labels") {
+            Err(TenzError::NotAMatrix { name, .. }) => assert_eq!(name, "labels"),
+            other => panic!("unexpected {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_all_materializes_everything() {
+        let dir = tmp_dir("all");
+        let path = dir.join("s.tenz");
+        let tf = sample();
+        tf.write(&path).unwrap();
+        let r = TenzReader::open(&path).unwrap();
+        let back = r.read_all().unwrap();
+        assert_eq!(back.to_bytes(), tf.to_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_fails_at_open() {
+        let dir = tmp_dir("trunc");
+        let path = dir.join("s.tenz");
+        let bytes = sample().to_bytes();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(matches!(TenzReader::open(&path), Err(TenzError::Truncated { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,8 +1,19 @@
 //! Binary I/O: the `.tenz` tensor-container format (our safetensors
 //! stand-in, mirrored by `python/compile/tenz.py`), checkpoint helpers,
 //! and report file output.
+//!
+//! Three access modes share one validated parser (`tenz::scan_index`):
+//! eager [`TensorFile`] for writers and small files, lazy indexed
+//! [`TenzReader`] for checkpoints that should stream from disk, and
+//! append-mode [`TenzWriter`] for outputs produced layer-by-layer. See
+//! `io::tenz` module docs for the eager-vs-lazy decision rule.
 
 pub mod checkpoint;
+pub mod lazy;
 pub mod tenz;
+pub mod writer;
 
-pub use tenz::{DType, TensorEntry, TensorFile};
+pub use checkpoint::{CheckpointReader, WeightSource};
+pub use lazy::TenzReader;
+pub use tenz::{DType, TensorEntry, TensorFile, TensorMeta};
+pub use writer::TenzWriter;

@@ -11,22 +11,50 @@
 //! entry* :
 //!   name_len u16 | name utf-8
 //!   dtype    u8   (0=f32, 1=f64, 2=i32)
-//!   ndim     u8
+//!   ndim     u8   (≥ 1; scalars are stored as shape [1])
 //!   dims     u64 × ndim
 //!   payload  raw little-endian values (row-major)
 //! ```
 //!
-//! The Python writer lives in `python/compile/tenz.py`; cross-language
-//! round-trip is covered by `python/tests/test_tenz.py` +
-//! `rust/tests/tenz_interop.rs`.
+//! Entry names must be unique; writers emit them in sorted order so the
+//! same tensors always serialize to the same bytes. No trailing bytes are
+//! allowed after the last entry.
+//!
+//! ## Eager vs. lazy access
+//!
+//! Two readers share one parser ([`scan_index`], which walks entry
+//! *headers* only and validates every declared size against the remaining
+//! file length **before** any payload allocation):
+//!
+//! * [`TensorFile`] (this module) — eager: the whole container lives in
+//!   memory. The right tool for *writing*, for small files (eval sets,
+//!   golden data, configs), and whenever the caller needs random access
+//!   to most tensors anyway.
+//! * [`crate::io::lazy::TenzReader`] — lazy: `open` reads O(header)
+//!   bytes, builds a name → [`TensorMeta`] index, and materializes
+//!   individual tensors on demand via positional reads. The right tool
+//!   for *checkpoints* — anything whose payload may rival RAM — and what
+//!   the streaming compression pipeline runs on.
+//! * [`crate::io::writer::TenzWriter`] — append-mode writer: streams
+//!   entries to disk one at a time and patches the leading count on
+//!   `finish`, so outputs never accumulate in memory.
+//!
+//! Decision rule: if you hold all the tensors in memory already (or are
+//! about to), use `TensorFile`; if you are reading a checkpoint to
+//! process layer-by-layer, use `TenzReader`; if you are producing a
+//! checkpoint layer-by-layer, use `TenzWriter`.
+//!
+//! The Python writer lives in `python/compile/tenz.py` (same interop
+//! contract: ndim ≥ 1, unique sorted names, no trailing bytes);
+//! cross-language round-trip is covered by `python/tests/test_tenz.py`.
 
 use crate::tensor::Mat;
-use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 use thiserror::Error;
 
-const MAGIC: &[u8; 8] = b"TENZ0001";
+pub(crate) const MAGIC: &[u8; 8] = b"TENZ0001";
 
 #[derive(Debug, Error)]
 pub enum TenzError {
@@ -34,6 +62,14 @@ pub enum TenzError {
     Io(#[from] std::io::Error),
     #[error("bad magic (not a .tenz file)")]
     BadMagic,
+    #[error("truncated at offset {offset}: need {need} bytes, have {have}")]
+    Truncated { offset: u64, need: u64, have: u64 },
+    #[error("tensor {0:?} declares zero dimensions (scalars must be stored as shape [1])")]
+    ZeroDims(String),
+    #[error("arithmetic overflow: {0}")]
+    Overflow(String),
+    #[error("duplicate tensor name {0:?}")]
+    DuplicateName(String),
     #[error("corrupt entry: {0}")]
     Corrupt(String),
     #[error("tensor {0:?} not found")]
@@ -52,14 +88,14 @@ pub enum DType {
 }
 
 impl DType {
-    fn tag(self) -> u8 {
+    pub(crate) fn tag(self) -> u8 {
         match self {
             DType::F32 => 0,
             DType::F64 => 1,
             DType::I32 => 2,
         }
     }
-    fn from_tag(t: u8) -> Option<Self> {
+    pub(crate) fn from_tag(t: u8) -> Option<Self> {
         match t {
             0 => Some(DType::F32),
             1 => Some(DType::F64),
@@ -73,6 +109,187 @@ impl DType {
             DType::F64 => 8,
         }
     }
+}
+
+/// Header-only description of one stored tensor: everything `scan_index`
+/// learns without touching payload bytes. This is what metadata passes
+/// (planning, parameter accounting) run on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Absolute payload offset in the container.
+    pub offset: u64,
+    /// Payload length in bytes (`numel · dtype.size()`).
+    pub nbytes: u64,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Read exactly `buf.len()` bytes, first proving they exist: `pos` is the
+/// current absolute offset and `total` the container length. Keeps the
+/// invariant `pos ≤ total` so truncation is reported with exact numbers
+/// and nothing is ever read (or allocated) past the end.
+fn read_exact_checked<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    pos: &mut u64,
+    total: u64,
+) -> Result<(), TenzError> {
+    let need = buf.len() as u64;
+    match pos.checked_add(need) {
+        Some(end) if end <= total => {}
+        _ => return Err(TenzError::Truncated { offset: *pos, need, have: total - *pos }),
+    }
+    r.read_exact(buf)?;
+    *pos += need;
+    Ok(())
+}
+
+/// Single-pass header scan of a `.tenz` container: validates the magic,
+/// walks every entry header, and *seeks past* payloads instead of reading
+/// them. Every declared length (name, dims product, payload bytes) is
+/// checked against the remaining container length — with overflow-checked
+/// arithmetic — **before** any allocation, so a corrupt or adversarial
+/// file can neither panic the parser nor make it balloon-allocate.
+///
+/// Both readers are built on this: [`TensorFile::from_bytes`] runs it over
+/// a `Cursor` and then materializes every payload; `TenzReader::open` runs
+/// it over the file and stops at the index.
+pub fn scan_index<R: Read + Seek>(r: &mut R, total_len: u64) -> Result<Vec<TensorMeta>, TenzError> {
+    let mut pos: u64 = 0;
+    let mut magic = [0u8; 8];
+    read_exact_checked(r, &mut magic, &mut pos, total_len)?;
+    if &magic != MAGIC {
+        return Err(TenzError::BadMagic);
+    }
+    let mut count_buf = [0u8; 4];
+    read_exact_checked(r, &mut count_buf, &mut pos, total_len)?;
+    let count = u32::from_le_bytes(count_buf);
+
+    // No `with_capacity(count)`: the declared count is untrusted input and
+    // must not drive an allocation before the entries actually parse.
+    let mut metas: Vec<TensorMeta> = Vec::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for _ in 0..count {
+        let mut len_buf = [0u8; 2];
+        read_exact_checked(r, &mut len_buf, &mut pos, total_len)?;
+        let name_len = u16::from_le_bytes(len_buf) as usize;
+        // name_len ≤ u16::MAX, so this buffer is bounded even when the
+        // declared length overruns the file (read_exact_checked rejects).
+        let mut name_buf = vec![0u8; name_len];
+        read_exact_checked(r, &mut name_buf, &mut pos, total_len)?;
+        let name = String::from_utf8(name_buf)
+            .map_err(|_| TenzError::Corrupt("name not utf-8".into()))?;
+
+        let mut byte = [0u8; 1];
+        read_exact_checked(r, &mut byte, &mut pos, total_len)?;
+        let dtype = DType::from_tag(byte[0])
+            .ok_or_else(|| TenzError::Corrupt(format!("bad dtype tag {} in {name}", byte[0])))?;
+        read_exact_checked(r, &mut byte, &mut pos, total_len)?;
+        let ndim = byte[0] as usize;
+        if ndim == 0 {
+            return Err(TenzError::ZeroDims(name));
+        }
+
+        let mut dims = Vec::with_capacity(ndim); // ndim ≤ 255
+        let mut numel: u64 = 1;
+        for _ in 0..ndim {
+            let mut dim_buf = [0u8; 8];
+            read_exact_checked(r, &mut dim_buf, &mut pos, total_len)?;
+            let d = u64::from_le_bytes(dim_buf);
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| TenzError::Overflow(format!("dim product of {name} overflows u64")))?;
+            let du = usize::try_from(d)
+                .map_err(|_| TenzError::Overflow(format!("dim of {name} exceeds usize")))?;
+            dims.push(du);
+        }
+        let nbytes = numel
+            .checked_mul(dtype.size() as u64)
+            .ok_or_else(|| TenzError::Overflow(format!("payload bytes of {name} overflow u64")))?;
+        // Prove the payload exists before anything allocates for it.
+        match pos.checked_add(nbytes) {
+            Some(end) if end <= total_len => {}
+            _ => return Err(TenzError::Truncated { offset: pos, need: nbytes, have: total_len - pos }),
+        }
+        if !seen.insert(name.clone()) {
+            return Err(TenzError::DuplicateName(name));
+        }
+        let offset = pos;
+        pos += nbytes;
+        r.seek(SeekFrom::Start(pos))?;
+        metas.push(TensorMeta { name, dtype, dims, offset, nbytes });
+    }
+    if pos != total_len {
+        return Err(TenzError::Corrupt(format!(
+            "{} trailing bytes after last entry",
+            total_len - pos
+        )));
+    }
+    Ok(metas)
+}
+
+/// Temp sibling for atomic writes: `<path>.tmp` appended to the full
+/// file name (never `with_extension`, which would map distinct outputs
+/// like `model.v1`/`model.v2` onto one colliding temp file).
+pub(crate) fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+/// Serialize one entry's header (everything before the payload bytes) —
+/// the single source of the wire layout, shared by the eager
+/// [`TensorFile::to_bytes`] and the streaming
+/// [`crate::io::writer::TenzWriter`] so the two writers cannot drift.
+pub(crate) fn encode_entry_header(name: &str, e: &TensorEntry) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + name.len() + 2 + 8 * e.dims.len());
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.push(e.dtype.tag());
+    out.push(e.dims.len() as u8);
+    for d in &e.dims {
+        out.extend_from_slice(&(*d as u64).to_le_bytes());
+    }
+    out
+}
+
+/// Check that an entry is representable on the wire and will round-trip
+/// through [`scan_index`]: name length fits u16, 1–255 dims, and the
+/// payload length matches the dims × dtype claim (overflow-checked).
+/// Shared by both writers so neither can emit a file the parser refuses.
+pub fn validate_entry(name: &str, e: &TensorEntry) -> Result<(), TenzError> {
+    if name.len() > u16::MAX as usize {
+        return Err(TenzError::Corrupt(format!("name of {} bytes exceeds u16", name.len())));
+    }
+    if e.dims.is_empty() {
+        return Err(TenzError::ZeroDims(name.into()));
+    }
+    if e.dims.len() > u8::MAX as usize {
+        return Err(TenzError::Corrupt(format!("{name}: {} dims exceed u8", e.dims.len())));
+    }
+    let mut numel: u64 = 1;
+    for d in &e.dims {
+        numel = numel
+            .checked_mul(*d as u64)
+            .ok_or_else(|| TenzError::Overflow(format!("dim product of {name} overflows u64")))?;
+    }
+    let nbytes = numel
+        .checked_mul(e.dtype.size() as u64)
+        .ok_or_else(|| TenzError::Overflow(format!("payload bytes of {name} overflow u64")))?;
+    if nbytes != e.bytes.len() as u64 {
+        return Err(TenzError::Corrupt(format!(
+            "{name}: dims claim {nbytes} payload bytes, entry holds {}",
+            e.bytes.len()
+        )));
+    }
+    Ok(())
 }
 
 /// One named array.
@@ -145,7 +362,22 @@ impl TensorEntry {
     }
 }
 
-/// An ordered collection of named tensors.
+/// Decode an entry as a 2-D f32 matrix, attributing errors to `name`.
+/// Shared by the eager and lazy readers so both report identically.
+pub(crate) fn mat_from_entry(name: &str, e: &TensorEntry) -> Result<Mat<f32>, TenzError> {
+    if e.dims.len() != 2 {
+        return Err(TenzError::NotAMatrix { name: name.into(), ndim: e.dims.len() });
+    }
+    let vals = e.to_f32().map_err(|err| match err {
+        TenzError::WrongDType { got, want, .. } => {
+            TenzError::WrongDType { name: name.into(), got, want }
+        }
+        other => other,
+    })?;
+    Ok(Mat::from_vec(e.dims[0], e.dims[1], vals))
+}
+
+/// An ordered collection of named tensors (the eager reader/writer).
 #[derive(Debug, Clone, Default)]
 pub struct TensorFile {
     entries: BTreeMap<String, TensorEntry>,
@@ -186,16 +418,7 @@ impl TensorFile {
     /// Fetch a 2-D f32 tensor as a `Mat`.
     pub fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
         let e = self.entries.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
-        if e.dims.len() != 2 {
-            return Err(TenzError::NotAMatrix { name: name.into(), ndim: e.dims.len() });
-        }
-        let vals = e.to_f32().map_err(|err| match err {
-            TenzError::WrongDType { got, want, .. } => {
-                TenzError::WrongDType { name: name.into(), got, want }
-            }
-            other => other,
-        })?;
-        Ok(Mat::from_vec(e.dims[0], e.dims[1], vals))
+        mat_from_entry(name, e)
     }
 
     /// Fetch a 1-D f32 tensor.
@@ -210,76 +433,62 @@ impl TensorFile {
         e.to_i32()
     }
 
-    /// Serialize to bytes.
+    /// Serialize to bytes (entries in sorted-name order: byte-stable).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
         for (name, e) in &self.entries {
-            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
-            out.extend_from_slice(name.as_bytes());
-            out.push(e.dtype.tag());
-            out.push(e.dims.len() as u8);
-            for d in &e.dims {
-                out.extend_from_slice(&(*d as u64).to_le_bytes());
-            }
+            out.extend_from_slice(&encode_entry_header(name, e));
             out.extend_from_slice(&e.bytes);
         }
         out
     }
 
-    /// Parse from bytes.
+    /// Parse from bytes. Headers are validated by [`scan_index`] first —
+    /// declared payload sizes are proven against the buffer length before
+    /// any payload allocation.
     pub fn from_bytes(buf: &[u8]) -> Result<Self, TenzError> {
-        let mut pos = 0usize;
-        let take = |pos: &mut usize, n: usize| -> Result<&[u8], TenzError> {
-            if *pos + n > buf.len() {
-                return Err(TenzError::Corrupt(format!(
-                    "truncated at offset {} (need {n} bytes of {})",
-                    *pos,
-                    buf.len()
-                )));
-            }
-            let s = &buf[*pos..*pos + n];
-            *pos += n;
-            Ok(s)
-        };
-        if take(&mut pos, 8)? != MAGIC {
-            return Err(TenzError::BadMagic);
-        }
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut cur = std::io::Cursor::new(buf);
+        let metas = scan_index(&mut cur, buf.len() as u64)?;
         let mut entries = BTreeMap::new();
-        for _ in 0..count {
-            let name_len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
-            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
-                .map_err(|_| TenzError::Corrupt("name not utf-8".into()))?;
-            let dtype = DType::from_tag(take(&mut pos, 1)?[0])
-                .ok_or_else(|| TenzError::Corrupt(format!("bad dtype in {name}")))?;
-            let ndim = take(&mut pos, 1)?[0] as usize;
-            let mut dims = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
-            }
-            let numel: usize = dims.iter().product();
-            let payload = take(&mut pos, numel * dtype.size())?.to_vec();
-            entries.insert(name, TensorEntry { dtype, dims, bytes: payload });
+        for m in metas {
+            // Offsets were validated against buf.len() by the scan.
+            let start = m.offset as usize;
+            let end = start + m.nbytes as usize;
+            entries.insert(
+                m.name,
+                TensorEntry { dtype: m.dtype, dims: m.dims, bytes: buf[start..end].to_vec() },
+            );
         }
         Ok(TensorFile { entries })
     }
 
-    /// Write to a file (atomically via a temp sibling).
+    /// Write to a file (atomically via a temp sibling). Entries are
+    /// [`validate_entry`]-checked first, so this cannot produce a file the
+    /// hardened parser would then refuse (`TensorEntry` fields are public;
+    /// a hand-built entry with empty dims or a short payload fails here
+    /// with a typed error instead of at the next read).
     pub fn write(&self, path: impl AsRef<Path>) -> Result<(), TenzError> {
+        for (name, e) in &self.entries {
+            validate_entry(name, e)?;
+        }
         let path = path.as_ref();
-        let tmp = path.with_extension("tenz.tmp");
-        {
+        let tmp = tmp_sibling(path);
+        let written: std::io::Result<()> = (|| {
             let mut f = std::fs::File::create(&tmp)?;
             f.write_all(&self.to_bytes())?;
-            f.sync_all()?;
+            f.sync_all()
+        })();
+        if let Err(e) = written {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
         }
         std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
-    /// Read from a file.
+    /// Read from a file, materializing every payload.
     pub fn read(path: impl AsRef<Path>) -> Result<Self, TenzError> {
         let mut buf = Vec::new();
         std::fs::File::open(path.as_ref())?.read_to_end(&mut buf)?;
@@ -334,7 +543,16 @@ mod tests {
         tf.insert("x", TensorEntry::from_f32(vec![10], &[0.0; 10]));
         let bytes = tf.to_bytes();
         let cut = &bytes[..bytes.len() - 5];
-        assert!(matches!(TensorFile::from_bytes(cut), Err(TenzError::Corrupt(_))));
+        assert!(matches!(TensorFile::from_bytes(cut), Err(TenzError::Truncated { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut tf = TensorFile::new();
+        tf.insert("x", TensorEntry::from_f32(vec![2], &[1.0, 2.0]));
+        let mut bytes = tf.to_bytes();
+        bytes.push(0xAB);
+        assert!(matches!(TensorFile::from_bytes(&bytes), Err(TenzError::Corrupt(_))));
     }
 
     #[test]
@@ -365,5 +583,39 @@ mod tests {
         let names: Vec<_> = tf.names().collect();
         assert_eq!(names, vec!["a", "b"]); // BTreeMap: deterministic bytes
         assert_eq!(tf.to_bytes(), TensorFile::from_bytes(&tf.to_bytes()).unwrap().to_bytes());
+    }
+
+    #[test]
+    fn write_rejects_entries_the_parser_would_refuse() {
+        let dir = std::env::temp_dir().join(format!("tenz_wval_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tenz");
+        // TensorEntry fields are public: hand-built invalid entries must
+        // fail at write time with a typed error, not at the next read.
+        let mut tf = TensorFile::new();
+        tf.insert("scalar", TensorEntry { dtype: DType::F32, dims: vec![], bytes: vec![] });
+        assert!(matches!(tf.write(&path), Err(TenzError::ZeroDims(_))));
+        let mut tf = TensorFile::new();
+        tf.insert("short", TensorEntry { dtype: DType::F32, dims: vec![4], bytes: vec![0; 8] });
+        assert!(matches!(tf.write(&path), Err(TenzError::Corrupt(_))));
+        assert!(!path.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scan_index_reports_offsets_without_payload_reads() {
+        let mut tf = TensorFile::new();
+        tf.insert("a", TensorEntry::from_f32(vec![3], &[1.0, 2.0, 3.0]));
+        tf.insert("b", TensorEntry::from_i32(vec![2, 2], &[1, 2, 3, 4]));
+        let bytes = tf.to_bytes();
+        let metas = scan_index(&mut std::io::Cursor::new(&bytes), bytes.len() as u64).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].name, "a");
+        assert_eq!(metas[0].nbytes, 12);
+        assert_eq!(metas[1].name, "b");
+        assert_eq!(metas[1].dims, vec![2, 2]);
+        // The second payload starts right after the first plus its header.
+        assert_eq!(&bytes[metas[0].offset as usize..][..4], &1.0f32.to_le_bytes()[..]);
+        assert_eq!(metas[1].offset + metas[1].nbytes, bytes.len() as u64);
     }
 }

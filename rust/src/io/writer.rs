@@ -1,0 +1,232 @@
+//! Append-mode `.tenz` writing: [`TenzWriter`].
+//!
+//! The eager [`TensorFile::write`] path assembles the whole container in
+//! memory first — fine for eval sets and golden data, wrong for streaming
+//! compression where outputs should leave RAM as soon as they are
+//! computed. `TenzWriter` writes `magic | count=0` up front, appends one
+//! entry at a time, and on [`finish`](TenzWriter::finish) patches the
+//! leading count and atomically renames a temp sibling into place. A
+//! writer dropped without `finish` removes its temp file and leaves any
+//! pre-existing destination untouched.
+//!
+//! Appending entries in sorted-name order with the same tensors produces
+//! bytes identical to [`TensorFile::to_bytes`] — the streaming pipeline
+//! relies on this for bit-identical eager/lazy outputs.
+
+use super::tenz::{encode_entry_header, tmp_sibling, validate_entry, TensorEntry, TenzError, MAGIC};
+use crate::tensor::Mat;
+use std::collections::HashSet;
+use std::fs::File;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Streaming `.tenz` writer (append entries, then `finish`).
+#[derive(Debug)]
+pub struct TenzWriter {
+    final_path: PathBuf,
+    tmp_path: PathBuf,
+    /// `None` once finished (the Drop impl uses this to know whether the
+    /// temp file still needs cleaning up).
+    file: Option<File>,
+    names: HashSet<String>,
+    count: u32,
+    /// Set when a write failed mid-entry: the temp file tail is garbage,
+    /// so further appends and `finish` refuse rather than rename a
+    /// corrupt container over the destination.
+    poisoned: bool,
+}
+
+impl TenzWriter {
+    /// Start writing to `path` via a `<path>.tmp` sibling.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        let final_path = path.as_ref().to_path_buf();
+        let tmp_path = tmp_sibling(&final_path);
+        let mut file = File::create(&tmp_path)?;
+        // The count placeholder is patched by finish(). A failed preamble
+        // write removes the temp sibling — the no-orphaned-.tmp guarantee
+        // holds even before the writer value exists to be dropped.
+        if let Err(e) = file.write_all(MAGIC).and_then(|()| file.write_all(&0u32.to_le_bytes())) {
+            drop(file);
+            let _ = std::fs::remove_file(&tmp_path);
+            return Err(e.into());
+        }
+        Ok(TenzWriter {
+            final_path,
+            tmp_path,
+            file: Some(file),
+            names: HashSet::new(),
+            count: 0,
+            poisoned: false,
+        })
+    }
+
+    pub fn tensors_written(&self) -> usize {
+        self.count as usize
+    }
+
+    /// Append one entry (header + payload straight to disk). A failed
+    /// write poisons the writer: the temp file tail is indeterminate, so
+    /// all further appends and `finish` refuse.
+    pub fn append(&mut self, name: &str, e: &TensorEntry) -> Result<(), TenzError> {
+        if self.poisoned {
+            return Err(TenzError::Corrupt("writer poisoned by an earlier write failure".into()));
+        }
+        validate_entry(name, e)?;
+        if self.count == u32::MAX {
+            return Err(TenzError::Overflow("entry count overflows u32".into()));
+        }
+        if !self.names.insert(name.to_string()) {
+            return Err(TenzError::DuplicateName(name.into()));
+        }
+
+        let f = self.file.as_mut().expect("TenzWriter used after finish");
+        let wrote = f
+            .write_all(&encode_entry_header(name, e))
+            .and_then(|()| f.write_all(&e.bytes));
+        if let Err(io_err) = wrote {
+            self.poisoned = true;
+            return Err(io_err.into());
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Append a matrix as f32.
+    pub fn append_mat(&mut self, name: &str, m: &Mat<f32>) -> Result<(), TenzError> {
+        self.append(name, &TensorEntry::from_f32(vec![m.rows(), m.cols()], m.data()))
+    }
+
+    /// Patch the leading count, sync, and atomically rename into place.
+    /// Returns the final path. A poisoned writer discards its temp file
+    /// and errors instead — a pre-existing destination is never replaced
+    /// by a corrupt container.
+    pub fn finish(mut self) -> Result<PathBuf, TenzError> {
+        let mut f = self.file.take().expect("TenzWriter finished twice");
+        // Every failure below removes the temp sibling before returning,
+        // matching the Drop guarantee — no orphaned .tmp, and the final
+        // path is only ever touched by the successful rename.
+        let patched = if self.poisoned {
+            Err(TenzError::Corrupt(
+                "writer poisoned by an earlier write failure; output discarded".into(),
+            ))
+        } else {
+            patch_count(&mut f, self.count).map_err(TenzError::from)
+        };
+        drop(f);
+        if let Err(e) = patched {
+            let _ = std::fs::remove_file(&self.tmp_path);
+            return Err(e);
+        }
+        if let Err(e) = std::fs::rename(&self.tmp_path, &self.final_path) {
+            let _ = std::fs::remove_file(&self.tmp_path);
+            return Err(e.into());
+        }
+        Ok(self.final_path.clone())
+    }
+}
+
+/// Rewrite the leading entry count and flush to disk.
+fn patch_count(f: &mut File, count: u32) -> std::io::Result<()> {
+    f.seek(SeekFrom::Start(MAGIC.len() as u64))?;
+    f.write_all(&count.to_le_bytes())?;
+    f.sync_all()
+}
+
+impl Drop for TenzWriter {
+    fn drop(&mut self) {
+        if self.file.take().is_some() {
+            // Abandoned mid-write: clean up the temp sibling; the final
+            // path was never touched.
+            let _ = std::fs::remove_file(&self.tmp_path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::lazy::TenzReader;
+    use crate::io::tenz::{DType, TensorFile};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tenz_writer_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn sorted_appends_match_eager_bytes() {
+        let dir = tmp_dir("sorted");
+        let mut tf = TensorFile::new();
+        tf.insert("a.weight", TensorEntry::from_f32(vec![2, 2], &[1., 2., 3., 4.]));
+        tf.insert("b.bias", TensorEntry::from_f32(vec![2], &[0.1, 0.2]));
+        tf.insert("labels", TensorEntry::from_i32(vec![2], &[5, 6]));
+        let eager_path = dir.join("eager.tenz");
+        tf.write(&eager_path).unwrap();
+
+        let stream_path = dir.join("stream.tenz");
+        let mut w = TenzWriter::create(&stream_path).unwrap();
+        for name in tf.names().map(str::to_string).collect::<Vec<_>>() {
+            w.append(&name, tf.get(&name).unwrap()).unwrap();
+        }
+        assert_eq!(w.tensors_written(), 3);
+        w.finish().unwrap();
+
+        assert_eq!(std::fs::read(&eager_path).unwrap(), std::fs::read(&stream_path).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn count_patched_and_readable_in_any_append_order() {
+        let dir = tmp_dir("order");
+        let path = dir.join("o.tenz");
+        let mut w = TenzWriter::create(&path).unwrap();
+        w.append("zzz", &TensorEntry::from_f32(vec![1], &[9.0])).unwrap();
+        w.append("aaa", &TensorEntry::from_i32(vec![3], &[1, 2, 3])).unwrap();
+        w.finish().unwrap();
+        let r = TenzReader::open(&path).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.vec_f32("zzz").unwrap(), vec![9.0]);
+        assert_eq!(r.vec_i32("aaa").unwrap(), vec![1, 2, 3]);
+        let eager = TensorFile::read(&path).unwrap();
+        assert_eq!(eager.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_entries() {
+        let dir = tmp_dir("bad");
+        let mut w = TenzWriter::create(dir.join("b.tenz")).unwrap();
+        w.append("x", &TensorEntry::from_f32(vec![1], &[1.0])).unwrap();
+        assert!(matches!(
+            w.append("x", &TensorEntry::from_f32(vec![1], &[2.0])),
+            Err(TenzError::DuplicateName(_))
+        ));
+        assert!(matches!(
+            w.append("scalar", &TensorEntry { dtype: DType::F32, dims: vec![], bytes: vec![] }),
+            Err(TenzError::ZeroDims(_))
+        ));
+        assert!(matches!(
+            w.append(
+                "short",
+                &TensorEntry { dtype: DType::F32, dims: vec![4], bytes: vec![0; 8] }
+            ),
+            Err(TenzError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drop_without_finish_cleans_up() {
+        let dir = tmp_dir("drop");
+        let path = dir.join("d.tenz");
+        {
+            let mut w = TenzWriter::create(&path).unwrap();
+            w.append("x", &TensorEntry::from_f32(vec![1], &[1.0])).unwrap();
+            // dropped here without finish()
+        }
+        assert!(!path.exists());
+        assert!(!dir.join("d.tenz.tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -32,6 +32,23 @@
 //! let report = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
 //! println!("{}", report.summary());
 //! ```
+//!
+//! For checkpoints that should never be fully resident, open lazily and
+//! stream the output (planning reads headers only; each worker
+//! materializes one weight at a time):
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use rsi_compress::compress::{CompressionPlan, Method, RsiOptions};
+//! use rsi_compress::io::checkpoint::CheckpointReader;
+//! use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+//!
+//! let src = Arc::new(CheckpointReader::open("artifacts/data/synthvgg.tenz").unwrap());
+//! let plan = CompressionPlan::uniform_alpha(0.4, Method::Rsi(RsiOptions { q: 4, ..Default::default() }));
+//! let pipe = Pipeline::new(PipelineConfig::default()).unwrap();
+//! let report = pipe.compress_to_path(src, &plan, "compressed.tenz").unwrap();
+//! println!("{}", report.summary());
+//! ```
 
 pub mod bench;
 pub mod cli;

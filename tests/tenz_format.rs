@@ -1,0 +1,271 @@
+//! `.tenz` format hardening: property-based round-trips through the
+//! eager reader, the lazy indexed reader, and the append-mode writer,
+//! plus a corruption/fuzz matrix proving the parser returns typed
+//! `TenzError`s — never a panic, never an allocation driven by
+//! unvalidated declared sizes — on hostile input. Both readers share one
+//! parser (`scan_index`), so every case is asserted against both.
+
+use rsi_compress::io::lazy::TenzReader;
+use rsi_compress::io::tenz::{DType, TensorEntry, TensorFile, TenzError};
+use rsi_compress::io::writer::TenzWriter;
+use rsi_compress::testutil::prop::PropRunner;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tenz_format_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------
+// Property round-trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_roundtrip_eager_lazy_writer_byte_identical() {
+    let dir = tmp_dir("prop");
+    let dir2 = dir.clone();
+    PropRunner::new(24).run("tenz-roundtrip-3-ways", move |g| {
+        // Random container: dtypes × dims × name lengths, payloads as raw
+        // bytes so every f32 bit pattern (NaN included) must survive.
+        let n = g.usize_in(0, 6);
+        let mut tf = TensorFile::new();
+        for i in 0..n {
+            let name_len = g.usize_in(0, 24);
+            let mut name = format!("t{i}_"); // unique prefix
+            for _ in 0..name_len {
+                name.push(*g.choice(&['a', 'b', 'z', 'Z', '.', '_', '0', '9']));
+            }
+            let dtype = *g.choice(&[DType::F32, DType::F64, DType::I32]);
+            let ndim = g.usize_in(1, 3);
+            let dims: Vec<usize> = (0..ndim).map(|_| g.usize_in(0, 5)).collect();
+            let nbytes = dims.iter().product::<usize>() * dtype.size();
+            let bytes: Vec<u8> = (0..nbytes).map(|_| g.usize_in(0, 255) as u8).collect();
+            tf.insert(name, TensorEntry { dtype, dims, bytes });
+        }
+
+        let eager_path = dir2.join(format!("e_{:x}.tenz", g.seed()));
+        tf.write(&eager_path).unwrap();
+
+        // Eager read-back: byte-identical entries.
+        let eager = TensorFile::read(&eager_path).unwrap();
+        assert_eq!(eager.len(), tf.len());
+
+        // Lazy read-back: same entries through the indexed reader.
+        let lazy = TenzReader::open(&eager_path).unwrap();
+        assert_eq!(lazy.len(), tf.len());
+        assert_eq!(lazy.payload_reads(), 0);
+        for name in tf.names() {
+            let want = tf.get(name).unwrap();
+            for got in [eager.get(name).unwrap(), &lazy.entry(name).unwrap()] {
+                assert_eq!(got.dtype, want.dtype, "{name}");
+                assert_eq!(got.dims, want.dims, "{name}");
+                assert_eq!(got.bytes, want.bytes, "{name}");
+            }
+        }
+        assert_eq!(lazy.payload_reads(), tf.len() as u64);
+        // The index alone accounts for the whole file.
+        assert_eq!(lazy.header_bytes() + lazy.payload_bytes(), lazy.file_bytes());
+
+        // Append-mode writer, sorted order: whole-file byte identity.
+        let stream_path = dir2.join(format!("s_{:x}.tenz", g.seed()));
+        let mut w = TenzWriter::create(&stream_path).unwrap();
+        for name in tf.names().map(str::to_string).collect::<Vec<_>>() {
+            w.append(&name, tf.get(&name).unwrap()).unwrap();
+        }
+        w.finish().unwrap();
+        assert_eq!(
+            std::fs::read(&eager_path).unwrap(),
+            std::fs::read(&stream_path).unwrap(),
+            "writer bytes must match eager serialization"
+        );
+
+        std::fs::remove_file(&eager_path).unwrap();
+        std::fs::remove_file(&stream_path).unwrap();
+    });
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Corruption / fuzz matrix
+// ---------------------------------------------------------------------
+
+fn magic_and_count(count: u32) -> Vec<u8> {
+    let mut v = b"TENZ0001".to_vec();
+    v.extend_from_slice(&count.to_le_bytes());
+    v
+}
+
+fn entry_header(name: &[u8], tag: u8, dims: &[u64]) -> Vec<u8> {
+    let mut v = Vec::new();
+    v.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    v.extend_from_slice(name);
+    v.push(tag);
+    v.push(dims.len() as u8);
+    for d in dims {
+        v.extend_from_slice(&d.to_le_bytes());
+    }
+    v
+}
+
+/// Assert that both the eager and the lazy parser reject `bytes` with the
+/// expected typed error — and that neither panics or balloon-allocates
+/// (the 1 TiB-claim cases below complete instantly because sizes are
+/// validated before any payload allocation).
+fn assert_both_reject(tag: &str, bytes: &[u8], check: fn(&TenzError) -> bool) {
+    let e = TensorFile::from_bytes(bytes).expect_err(&format!("{tag}: eager parsed corrupt input"));
+    assert!(check(&e), "{tag}: eager gave unexpected error {e:?}");
+
+    let dir = tmp_dir(tag);
+    let path = dir.join("c.tenz");
+    std::fs::write(&path, bytes).unwrap();
+    let e = TenzReader::open(&path).expect_err(&format!("{tag}: lazy parsed corrupt input"));
+    assert!(check(&e), "{tag}: lazy gave unexpected error {e:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_bad_magic() {
+    assert_both_reject("bad-magic", b"NOTMAGIC\x01\0\0\0", |e| {
+        matches!(e, TenzError::BadMagic)
+    });
+}
+
+#[test]
+fn corrupt_truncated_preamble() {
+    assert_both_reject("short-magic", b"TENZ", |e| matches!(e, TenzError::Truncated { .. }));
+    assert_both_reject("no-count", b"TENZ0001\x01\0", |e| {
+        matches!(e, TenzError::Truncated { .. })
+    });
+}
+
+#[test]
+fn corrupt_oversized_name_len() {
+    // Entry claims a 40000-byte name; only 4 bytes follow.
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&40_000u16.to_le_bytes());
+    b.extend_from_slice(b"abcd");
+    assert_both_reject("oversized-name", &b, |e| matches!(e, TenzError::Truncated { .. }));
+}
+
+#[test]
+fn corrupt_non_utf8_name() {
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(&[0xFF, 0xFE], 0, &[1]));
+    b.extend_from_slice(&[0u8; 4]);
+    assert_both_reject("non-utf8-name", &b, |e| matches!(e, TenzError::Corrupt(_)));
+}
+
+#[test]
+fn corrupt_bad_dtype_tag() {
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"x", 7, &[1]));
+    b.extend_from_slice(&[0u8; 4]);
+    assert_both_reject("bad-dtype", &b, |e| matches!(e, TenzError::Corrupt(_)));
+}
+
+#[test]
+fn corrupt_zero_ndim() {
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"scalar", 0, &[]));
+    assert_both_reject("ndim-0", &b, |e| matches!(e, TenzError::ZeroDims(_)));
+}
+
+#[test]
+fn corrupt_dim_product_overflows_u64() {
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"huge", 0, &[u64::MAX, 2]));
+    assert_both_reject("dim-overflow", &b, |e| matches!(e, TenzError::Overflow(_)));
+}
+
+#[test]
+fn corrupt_payload_bytes_overflow_u64() {
+    // numel fits u64 but numel × dtype.size() does not.
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"huge", 0, &[u64::MAX / 4 + 1]));
+    assert_both_reject("byte-overflow", &b, |e| matches!(e, TenzError::Overflow(_)));
+}
+
+#[test]
+fn corrupt_payload_shorter_than_dims_claim() {
+    // Declares 1000 f32s, ships 12 bytes. Must error before allocating
+    // the declared 4000.
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"w", 0, &[1000]));
+    b.extend_from_slice(&[0u8; 12]);
+    assert_both_reject("short-payload", &b, |e| matches!(e, TenzError::Truncated { .. }));
+}
+
+#[test]
+fn corrupt_terabyte_claim_rejected_without_allocation() {
+    // 2^38 f32s = 1 TiB declared in a ~50-byte file. If the parser
+    // allocated from the declared size this test would OOM; instead the
+    // size is checked against the remaining file length first.
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"tb", 0, &[1u64 << 38]));
+    b.extend_from_slice(&[0u8; 16]);
+    assert_both_reject("tb-claim", &b, |e| {
+        matches!(e, TenzError::Truncated { need, .. } if *need == (1u64 << 40))
+    });
+}
+
+#[test]
+fn corrupt_trailing_bytes() {
+    let mut tf = TensorFile::new();
+    tf.insert("x", TensorEntry::from_f32(vec![2], &[1.0, 2.0]));
+    let mut b = tf.to_bytes();
+    b.extend_from_slice(b"junk");
+    assert_both_reject("trailing", &b, |e| matches!(e, TenzError::Corrupt(_)));
+}
+
+#[test]
+fn corrupt_duplicate_names() {
+    let one = {
+        let mut v = entry_header(b"dup", 0, &[1]);
+        v.extend_from_slice(&1.0f32.to_le_bytes());
+        v
+    };
+    let mut b = magic_and_count(2);
+    b.extend_from_slice(&one);
+    b.extend_from_slice(&one);
+    assert_both_reject("duplicate", &b, |e| matches!(e, TenzError::DuplicateName(_)));
+}
+
+#[test]
+fn corrupt_count_larger_than_entries() {
+    // count says 3, file holds 1 entry: the scan runs off the end.
+    let mut b = magic_and_count(3);
+    b.extend_from_slice(&entry_header(b"only", 0, &[1]));
+    b.extend_from_slice(&[0u8; 4]);
+    assert_both_reject("count-overrun", &b, |e| matches!(e, TenzError::Truncated { .. }));
+}
+
+// ---------------------------------------------------------------------
+// Reader parity on valid input
+// ---------------------------------------------------------------------
+
+#[test]
+fn typed_accessors_agree_between_readers() {
+    let dir = tmp_dir("parity");
+    let path = dir.join("p.tenz");
+    let mut tf = TensorFile::new();
+    tf.insert("f", TensorEntry::from_f32(vec![3], &[1.0, -2.0, 3.5]));
+    tf.insert("i", TensorEntry::from_i32(vec![2], &[-7, 9]));
+    let mut f64_bytes = Vec::new();
+    for v in [0.25f64, -8.5] {
+        f64_bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    tf.insert("d", TensorEntry { dtype: DType::F64, dims: vec![2], bytes: f64_bytes });
+    tf.write(&path).unwrap();
+
+    let lazy = TenzReader::open(&path).unwrap();
+    assert_eq!(lazy.vec_f32("f").unwrap(), tf.vec_f32("f").unwrap());
+    assert_eq!(lazy.vec_i32("i").unwrap(), tf.vec_i32("i").unwrap());
+    // f64 downcasts to f32 identically through both readers.
+    assert_eq!(lazy.vec_f32("d").unwrap(), tf.vec_f32("d").unwrap());
+    // And the same typed errors come back.
+    assert!(matches!(lazy.vec_f32("i"), Err(TenzError::WrongDType { .. })));
+    assert!(matches!(tf.vec_f32("i"), Err(TenzError::WrongDType { .. })));
+    assert!(matches!(lazy.vec_i32("missing"), Err(TenzError::NotFound(_))));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
