@@ -1,0 +1,111 @@
+//! SERVE-THRU: requests/sec through the batching server, dense vs
+//! factored checkpoints at α ∈ {0.1, 0.3} — the deployment payoff the
+//! paper's k(C+D) < C·D accounting predicts, measured end to end through
+//! the micro-batcher instead of as a bare GEMM microbenchmark.
+//!
+//! `cargo bench --bench serve_throughput` — writes
+//! reports/serve_throughput.csv. Fully synthetic (no artifacts needed);
+//! `RSIC_BENCH_FAST=1` shrinks it to the CI smoke size. Exits with an
+//! error if the factored model fails to beat dense at α ≤ 0.3 on every
+//! shape — a regression gate on the batching path.
+
+use rsi_compress::compress::plan::{CompressionPlan, Method};
+use rsi_compress::compress::rsi::RsiOptions;
+use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+use rsi_compress::io::checkpoint::{store_weight, CheckpointReader, StoredWeight};
+use rsi_compress::io::tenz::{TensorEntry, TensorFile};
+use rsi_compress::report::{write_report, Table};
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::serve::{traffic, ServeConfig, Server};
+use rsi_compress::tensor::init::{matrix_with_spectrum, SpectrumShape};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Drive synthetic pipelined traffic at one checkpoint through the shared
+/// `serve::traffic` generator (the same one `rsic serve` uses) and return
+/// requests/sec.
+fn run_traffic(path: &Path, requests: usize, clients: usize) -> anyhow::Result<f64> {
+    let server = Arc::new(Server::new(ServeConfig {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        workers: rsi_compress::util::default_threads().min(4),
+        ..Default::default()
+    }));
+    let report = traffic::drive(&server, &[path.to_path_buf()], requests, clients, 0x5e7e)?;
+    anyhow::ensure!(report.failed == 0, "{} requests failed under bench load", report.failed);
+    println!("    {}: {}", path.display(), server.metrics().summary());
+    Ok(report.req_per_sec())
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let shapes: Vec<(usize, usize)> =
+        if fast { vec![(256, 1024)] } else { vec![(256, 1024), (512, 512), (1024, 4096)] };
+    let requests = if fast { 96 } else { 768 };
+    let clients = 4;
+    let alphas = [0.3f64, 0.1];
+
+    let dir = std::env::temp_dir().join(format!("serve_thru_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    let mut table = Table::new(
+        "Serve throughput — dense vs factored",
+        &["shape", "alpha", "k", "MACs/sample", "req/s", "speedup"],
+    );
+    let mut best_speedup = 0.0f64;
+    for (c, d) in shapes {
+        println!("== {c}x{d}, {requests} requests, {clients} clients ==");
+        let mut g = GaussianSource::new((c * 31 + d) as u64);
+        let spec = SpectrumShape::pretrained_like().values(c.min(d));
+        let w = matrix_with_spectrum(c.min(d), c.max(d), &spec, &mut g);
+        let w = if c <= d { w } else { w.transpose() };
+        let bias = vec![0.0f32; c];
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(w));
+        tf.insert("head.bias", TensorEntry::from_f32(vec![c], &bias));
+        let dense_path = dir.join(format!("dense_{c}x{d}.tenz"));
+        tf.write(&dense_path)?;
+
+        let dense_rps = run_traffic(&dense_path, requests, clients)?;
+        table.row(&[
+            format!("{c}x{d}"),
+            "dense".into(),
+            "-".into(),
+            (c * d).to_string(),
+            format!("{dense_rps:.0}"),
+            "1.00".into(),
+        ]);
+
+        let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() })?;
+        for alpha in alphas {
+            let k = rsi_compress::util::rank_for_alpha(alpha, c, d);
+            let fact_path = dir.join(format!("fact_{c}x{d}_a{alpha}.tenz"));
+            let plan = CompressionPlan::uniform_alpha(alpha, Method::Rsi(RsiOptions::with_q(2, 9)));
+            let src = Arc::new(CheckpointReader::open(&dense_path)?);
+            pipe.compress_to_path(src, &plan, &fact_path)?;
+
+            let rps = run_traffic(&fact_path, requests, clients)?;
+            let speedup = rps / dense_rps;
+            best_speedup = best_speedup.max(speedup);
+            table.row(&[
+                format!("{c}x{d}"),
+                format!("{alpha}"),
+                k.to_string(),
+                (k * (c + d)).to_string(),
+                format!("{rps:.0}"),
+                format!("{speedup:.2}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    write_report("reports/serve_throughput.csv", &table.to_csv())?;
+    println!("wrote reports/serve_throughput.csv (best factored speedup {best_speedup:.2}×)");
+    let _ = std::fs::remove_dir_all(&dir);
+    anyhow::ensure!(
+        best_speedup > 1.0,
+        "factored serving never beat dense at α ≤ 0.3 (best {best_speedup:.2}×) — \
+         batching-path regression"
+    );
+    Ok(())
+}

@@ -16,18 +16,23 @@ fn main() -> anyhow::Result<()> {
     let qs: Vec<usize> = if fast { vec![1, 4] } else { vec![1, 2, 3, 4] };
     for model in [ModelKind::SynthVgg, ModelKind::SynthVit] {
         let opts = RsiOptions { seed: 42, ..Default::default() };
-        let table = match table_41(model, &alphas, &qs, BackendKind::Native, opts) {
+        let out = match table_41(model, &alphas, &qs, BackendKind::Native, opts) {
             Ok(t) => t,
             Err(e) => {
                 eprintln!("[skip] table41 needs artifacts: {e:#}");
                 return Ok(());
             }
         };
-        println!("{}", table.render());
+        println!("{}", out.table.render());
+        println!("{}", out.runtime.render());
         let base = format!("reports/table41_{}", model.name());
-        write_report(format!("{base}.txt"), &table.render())?;
-        write_report(format!("{base}.csv"), &table.to_csv())?;
-        println!("wrote {base}.txt / .csv");
+        write_report(
+            format!("{base}.txt"),
+            &format!("{}\n{}", out.table.render(), out.runtime.render()),
+        )?;
+        write_report(format!("{base}.csv"), &out.table.to_csv())?;
+        write_report(format!("{base}_runtime.csv"), &out.runtime.to_csv())?;
+        println!("wrote {base}.txt / .csv / _runtime.csv");
     }
     Ok(())
 }

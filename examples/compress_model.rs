@@ -20,8 +20,9 @@ fn main() -> anyhow::Result<()> {
     for model in [ModelKind::SynthVgg, ModelKind::SynthVit] {
         println!("=== {} ===", model.name());
         let opts = RsiOptions { seed: 42, ..Default::default() };
-        let table = experiments::table_41(model, alphas, qs, BackendKind::Native, opts)?;
-        println!("{}", table.render());
+        let out = experiments::table_41(model, alphas, qs, BackendKind::Native, opts)?;
+        println!("{}", out.table.render());
+        println!("{}", out.runtime.render());
     }
 
     println!("=== Theorem 3.2 (softmax perturbation bound, synthvgg head) ===");

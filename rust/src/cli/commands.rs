@@ -4,6 +4,7 @@
 //! rsic compress --model synthvgg --alpha 0.4 --q 4 [--backend native|xla|fused]
 //!               [--out compressed.tenz] [--validate]
 //! rsic eval     --model synthvgg [--checkpoint path.tenz]
+//! rsic serve    --checkpoint path.tenz [--requests N] [--clients C] [--batch B]
 //! rsic table 4.1   [--model vgg|vit|both] [--backend ...] [--alphas 0.8,0.6]
 //! rsic figure 1.1|4.1|4.2 [--trials N] [--ranks 64,128,...]
 //! rsic theorem  [--alpha 0.2] [--q 1]
@@ -19,12 +20,13 @@ use crate::compress::rsi::RsiOptions;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::eval::ModelEvaluator;
 use crate::io::checkpoint::CheckpointReader;
-use crate::io::tenz::TensorFile;
 use crate::model::ModelKind;
 use crate::report::write_report;
 use crate::runtime::{ArtifactRegistry, ExecutableCache};
+use crate::serve::{ServeConfig, Server};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
+use std::time::Duration;
 
 const USAGE: &str = "\
 rsic — low-rank compression of pretrained models via randomized subspace iteration
@@ -34,6 +36,9 @@ USAGE:
                 [--method rsi|svd] [--ortho qr|cholqr2|ns[:N]] [--oversample P]
                 [--adaptive <budget-ratio>]   # section-5 adaptive layer-wise ranks
   rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
+  rsic serve    --checkpoint F [--checkpoint F2 ...] [--requests N] [--clients C]
+                [--batch B] [--wait-ms MS] [--workers W] [--queue-depth Q]
+                [--max-queue N] [--cache-cap K]
   rsic run <config.toml>                       # config-driven sweep (see configs/)
   rsic table 4.1  [--model vgg|vit|both] [--alphas L] [--qs L] [--backend B] [--out-dir D]
   rsic figure <1.1|4.1|4.2> [--ranks L] [--qs L] [--trials N] [--out-dir D]
@@ -50,6 +55,7 @@ pub fn run(args: Args) -> Result<()> {
     match cmd {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
@@ -85,13 +91,6 @@ fn checkpoint_path(args: &Args, model: ModelKind) -> Result<std::path::PathBuf> 
         .find_data(def.ckpt_file)
         .with_context(|| format!("{} not in manifest — run `make artifacts`", def.ckpt_file))?;
     Ok(registry.abs_path(entry))
-}
-
-/// Eagerly materialize the checkpoint (evaluation reconstructs every
-/// weight anyway). The compress path opens lazily instead — see
-/// [`cmd_compress`].
-fn load_checkpoint(args: &Args, model: ModelKind) -> Result<TensorFile> {
-    Ok(TensorFile::read(checkpoint_path(args, model)?)?)
 }
 
 /// Build the method from CLI options (`--method`, `--q`, `--ortho`,
@@ -203,7 +202,10 @@ fn spectra_of(src: &CheckpointReader) -> Result<Vec<crate::compress::LayerSpectr
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = model_of(args)?;
-    let ckpt = load_checkpoint(args, model)?;
+    // Lazy open: only the tensors the forward artifact actually feeds are
+    // materialized — shipped spectrum side-tensors (and anything else the
+    // evaluation never reads) stay on disk.
+    let ckpt = CheckpointReader::open(checkpoint_path(args, model)?)?;
     let registry = Arc::new(ArtifactRegistry::load_default()?);
     let cache = Arc::new(ExecutableCache::new());
     let evaluator = ModelEvaluator::load(&registry, &cache, model)?;
@@ -216,6 +218,66 @@ fn cmd_eval(args: &Args) -> Result<()> {
         acc.n,
         evaluator.eval_set.top1_uncompressed * 100.0,
         evaluator.eval_set.top5_uncompressed * 100.0,
+    );
+    println!(
+        "materialized {} of {} checkpoint tensors",
+        ckpt.tenz().payload_reads(),
+        ckpt.tenz().len()
+    );
+    Ok(())
+}
+
+/// `rsic serve`: load one or more checkpoints into a batching server and
+/// drive synthetic concurrent traffic against them, then report serving
+/// metrics (batch occupancy, latency quantiles, model-cache hit rate).
+/// Clients submit their whole request budget before waiting, so the
+/// micro-batcher sees genuine concurrency.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ckpts: Vec<String> = args.opt_all("checkpoint").iter().map(|s| s.to_string()).collect();
+    if ckpts.is_empty() {
+        bail!(
+            "usage: rsic serve --checkpoint model.tenz [--checkpoint more.tenz] \
+             [--requests N] [--clients C] [--batch B] [--wait-ms MS] [--workers W] \
+             [--queue-depth Q] [--max-queue N] [--cache-cap K]"
+        );
+    }
+    let requests = args.usize_or("requests", 256)?;
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let seed = args.u64_or("seed", 42)?;
+    let config = ServeConfig {
+        max_batch: args.usize_or("batch", 32)?.max(1),
+        max_wait: Duration::from_secs_f64(args.f64_or("wait-ms", 2.0)?.max(0.0) / 1e3),
+        workers: args.usize_or("workers", crate::util::default_threads())?,
+        queue_depth: args.usize_or("queue-depth", 16)?,
+        max_queue: args.usize_or("max-queue", 8192)?,
+        cache_capacity: args.usize_or("cache-cap", 4)?,
+    };
+    let server = Arc::new(Server::new(config));
+    let paths: Vec<std::path::PathBuf> = ckpts.into_iter().map(std::path::PathBuf::from).collect();
+    // Warm load: a bad checkpoint fails here, before traffic starts.
+    for p in &paths {
+        let model = server.model(p)?;
+        let factored = model.layers.iter().filter(|l| l.kernel.rank().is_some()).count();
+        println!(
+            "{}: {} layers ({factored} factored), {} params, {} MACs/sample, input dim {}",
+            p.display(),
+            model.layers.len(),
+            model.param_count(),
+            model.flops_per_sample(),
+            model.input_dim()
+        );
+    }
+    let report = crate::serve::traffic::drive(&server, &paths, requests, clients, seed)?;
+    println!("{}", server.metrics().render(Some(server.cache())).render());
+    if report.failed > 0 {
+        println!("{} requests failed (overload shedding or model errors)", report.failed);
+    }
+    println!(
+        "{} requests from {} clients in {:.3}s → {:.0} req/s",
+        report.requests,
+        report.clients,
+        report.seconds,
+        report.req_per_sec()
     );
     Ok(())
 }
@@ -239,18 +301,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         oversample: cfg.pipeline.oversample,
         ..Default::default()
     };
-    let table = experiments::table_41(
+    let out = experiments::table_41(
         model,
         &cfg.sweep.alphas,
         &cfg.sweep.qs,
         cfg.pipeline.backend,
         base,
     )?;
-    println!("{}", table.render());
+    println!("{}", out.table.render());
+    println!("{}", out.runtime.render());
     let base = format!("{}/{}", cfg.out_dir, cfg.name);
-    write_report(format!("{base}.txt"), &table.render())?;
-    write_report(format!("{base}.csv"), &table.to_csv())?;
-    println!("wrote {base}.txt / .csv");
+    let combined = format!("{}\n{}", out.table.render(), out.runtime.render());
+    write_report(format!("{base}.txt"), &combined)?;
+    write_report(format!("{base}.csv"), &out.table.to_csv())?;
+    write_report(format!("{base}_runtime.csv"), &out.runtime.to_csv())?;
+    println!("wrote {base}.txt / .csv / _runtime.csv");
     Ok(())
 }
 
@@ -269,12 +334,17 @@ fn cmd_table(args: &Args) -> Result<()> {
         m => vec![ModelKind::parse(m).context("bad --model")?],
     };
     for model in models {
-        let table = experiments::table_41(model, &alphas, &qs, backend, base)?;
-        println!("{}", table.render());
+        let out = experiments::table_41(model, &alphas, &qs, backend, base)?;
+        println!("{}", out.table.render());
+        println!("{}", out.runtime.render());
         let base = format!("{out_dir}/table41_{}", model.name());
-        write_report(format!("{base}.txt"), &table.render())?;
-        write_report(format!("{base}.csv"), &table.to_csv())?;
-        println!("wrote {base}.txt / .csv");
+        write_report(
+            format!("{base}.txt"),
+            &format!("{}\n{}", out.table.render(), out.runtime.render()),
+        )?;
+        write_report(format!("{base}.csv"), &out.table.to_csv())?;
+        write_report(format!("{base}_runtime.csv"), &out.runtime.to_csv())?;
+        println!("wrote {base}.txt / .csv / _runtime.csv");
     }
     Ok(())
 }

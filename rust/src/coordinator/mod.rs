@@ -24,5 +24,5 @@ pub mod queue;
 
 pub use metrics::PipelineMetrics;
 pub use pipeline::{LayerOutcome, Pipeline, PipelineConfig, PipelineReport};
-pub use pool::WorkerPool;
+pub use pool::{JobHandle, WorkerPool};
 pub use queue::BoundedQueue;

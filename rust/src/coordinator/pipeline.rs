@@ -59,6 +59,11 @@ pub struct PipelineConfig {
     /// Estimate ‖W − A·B‖₂ for each compressed layer (adds one power
     /// iteration per layer).
     pub validate: bool,
+    /// Chunk size (bytes) for streaming passthrough copies in
+    /// [`compress_to_path`](Pipeline::compress_to_path): unplanned and
+    /// failed tensors flow source → writer in chunks of at most this many
+    /// bytes, so their peak residency is the chunk, never the tensor.
+    pub passthrough_chunk: usize,
 }
 
 impl Default for PipelineConfig {
@@ -68,6 +73,7 @@ impl Default for PipelineConfig {
             queue_depth: 16,
             backend: BackendKind::Native,
             validate: false,
+            passthrough_chunk: 1 << 20,
         }
     }
 }
@@ -79,6 +85,7 @@ impl From<&crate::config::PipelineSettings> for PipelineConfig {
             queue_depth: s.queue_depth,
             backend: s.backend,
             validate: s.validate,
+            ..Default::default()
         }
     }
 }
@@ -539,8 +546,9 @@ impl Pipeline {
         for slot in &slots {
             let job_idx = match slot {
                 Slot::Pass(name) => {
-                    // Passthrough: copy one tensor at a time, source → writer.
-                    writer.append(name, &source.entry(name)?)?;
+                    // Passthrough: stream the tensor source → writer in
+                    // fixed-size chunks (never fully resident).
+                    self.copy_passthrough(&*source, &mut writer, name)?;
                     continue;
                 }
                 Slot::Job(job_idx) => *job_idx,
@@ -625,10 +633,33 @@ impl Pipeline {
     ) -> Result<(), TenzError> {
         for key in [weight_key(layer), factor_a_key(layer), factor_b_key(layer)] {
             if source.contains(&key) {
-                writer.append(&key, &source.entry(&key)?)?;
+                self.copy_passthrough(source, writer, &key)?;
             }
         }
         Ok(())
+    }
+
+    /// Stream one tensor source → writer in chunks of at most
+    /// `passthrough_chunk` bytes: the header is emitted from the source's
+    /// metadata, then payload chunks flow straight through, so a
+    /// passthrough tensor's peak residency is bounded by the chunk size
+    /// rather than the tensor size. Byte-identical to an eager
+    /// `append(name, entry)` of the same tensor.
+    fn copy_passthrough(
+        &self,
+        source: &dyn WeightSource,
+        writer: &mut TenzWriter,
+        name: &str,
+    ) -> Result<(), TenzError> {
+        let (dtype, dims) = match (source.dtype_of(name), source.dims_of(name)) {
+            (Some(dtype), Some(dims)) => (dtype, dims),
+            _ => return Err(TenzError::NotFound(name.into())),
+        };
+        let mut sink = writer.begin_entry(name, dtype, &dims)?;
+        source.copy_payload_chunked(name, self.config.passthrough_chunk, &mut |ch| {
+            sink.write(ch)
+        })?;
+        sink.finish()
     }
 }
 

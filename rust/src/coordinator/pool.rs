@@ -33,6 +33,23 @@ where
     })
 }
 
+/// One-shot handle to a single submitted job's result (see
+/// [`WorkerPool::submit_handle`]). Captured panics surface as `Err`
+/// messages, like every other pool path.
+pub struct JobHandle<T> {
+    rx: Receiver<(usize, Result<T, String>)>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<T, String> {
+        match self.rx.recv() {
+            Ok((_, r)) => r,
+            Err(_) => Err("job result lost".into()),
+        }
+    }
+}
+
 /// Fixed-size worker pool.
 pub struct WorkerPool {
     queue: Arc<BoundedQueue<Job>>,
@@ -106,6 +123,20 @@ impl WorkerPool {
             let _ = tx.send((idx, Err("pool shut down".into())));
             false
         }
+    }
+
+    /// Submit one independent task and get a [`JobHandle`] to its eventual
+    /// result — the entry point for non-factorization work (the serve
+    /// batcher runs batched forward passes this way). Blocks under queue
+    /// backpressure; a shut-down pool yields an error through the handle.
+    pub fn submit_handle<T, F>(&self, task: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.submit_indexed(0, task, &tx);
+        JobHandle { rx }
     }
 
     /// Submit a batch of independent tasks and return a receiver that
@@ -251,6 +282,21 @@ mod tests {
         results.sort_by_key(|(i, _)| *i);
         assert_eq!(*results[0].1.as_ref().unwrap(), 1);
         assert!(results[1].1.as_ref().unwrap_err().contains("stream boom"));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn submit_handle_returns_result_and_isolates_panics() {
+        let pool = WorkerPool::new(2, 2);
+        let h = pool.submit_handle(|| 6 * 7);
+        assert_eq!(h.wait().unwrap(), 42);
+        let h: JobHandle<usize> = pool.submit_handle(|| panic!("handle boom"));
+        assert!(h.wait().unwrap_err().contains("handle boom"));
+        // Handles interleave with batch submission on the same pool.
+        let h = pool.submit_handle(|| "serve".to_string());
+        let batch = pool.run_all((0..4).map(|i| move || i).collect::<Vec<_>>());
+        assert!(batch.iter().all(|r| r.is_ok()));
+        assert_eq!(h.wait().unwrap(), "serve");
         pool.shutdown();
     }
 

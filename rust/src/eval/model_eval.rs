@@ -4,9 +4,14 @@
 //! identical to applying the two small layers in sequence), feeds them as
 //! runtime parameters to the compiled forward graph, and scores Top-1/Top-5
 //! over the eval set — the measurement loop behind Table 4.1.
+//!
+//! Checkpoints arrive through [`WeightSource`], so the evaluator reads
+//! eagerly-held `TensorFile`s and lazy `CheckpointReader`s alike — and on
+//! a lazy source it materializes exactly the tensors `param_order` names,
+//! never side-tensors like the shipped per-layer spectra.
 
 use super::accuracy::{accuracy_report, AccuracyReport};
-use crate::io::checkpoint::load_weight;
+use crate::io::checkpoint::{load_weight_from, WeightSource};
 use crate::io::tenz::TensorFile;
 use crate::model::{EvalSet, ModelDef, ModelKind};
 use crate::runtime::exec::{mat_to_literal, vec_to_literal_shaped};
@@ -37,18 +42,19 @@ impl ModelEvaluator {
         Ok(ModelEvaluator { def, eval_set, forward })
     }
 
-    /// Build the forward artifact's parameter literals from a checkpoint
-    /// (dense or factored — factored weights are reconstructed).
-    pub fn params_from_checkpoint(&self, ckpt: &TensorFile) -> Result<Vec<xla::Literal>> {
+    /// Build the forward artifact's parameter literals from any checkpoint
+    /// source (dense or factored — factored weights are reconstructed).
+    /// Exactly the `param_order` tensors are materialized.
+    pub fn params_from_checkpoint(&self, ckpt: &dyn WeightSource) -> Result<Vec<xla::Literal>> {
         let mut out = Vec::with_capacity(self.def.param_order.len());
         for name in &self.def.param_order {
             if let Some(prefix) = name.strip_suffix(".weight") {
-                let w = load_weight(ckpt, prefix)
+                let w = load_weight_from(ckpt, prefix)
                     .with_context(|| format!("checkpoint missing layer {prefix}"))?;
                 out.push(mat_to_literal(&w.materialize())?);
             } else {
                 let entry = ckpt
-                    .get(name)
+                    .entry(name)
                     .with_context(|| format!("checkpoint missing tensor {name}"))?;
                 let vals = entry.to_f32().map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
                 let dims = self.def.param_feed_dims(name, &entry.dims);
@@ -59,13 +65,13 @@ impl ModelEvaluator {
     }
 
     /// Logits over the whole eval set.
-    pub fn logits(&self, ckpt: &TensorFile) -> Result<crate::tensor::Mat<f32>> {
+    pub fn logits(&self, ckpt: &dyn WeightSource) -> Result<crate::tensor::Mat<f32>> {
         let params = self.params_from_checkpoint(ckpt)?;
         self.forward.logits(&self.eval_set.data, &params)
     }
 
     /// Top-1/Top-5 over the eval set.
-    pub fn evaluate(&self, ckpt: &TensorFile) -> Result<AccuracyReport> {
+    pub fn evaluate(&self, ckpt: &dyn WeightSource) -> Result<AccuracyReport> {
         let logits = self.logits(ckpt)?;
         Ok(accuracy_report(&logits, &self.eval_set.labels))
     }

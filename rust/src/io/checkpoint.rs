@@ -18,7 +18,7 @@
 //!   checkpoints larger than RAM.
 
 use super::lazy::TenzReader;
-use super::tenz::{TensorEntry, TensorFile, TenzError};
+use super::tenz::{DType, TensorEntry, TensorFile, TenzError};
 use crate::tensor::Mat;
 use std::path::Path;
 
@@ -85,10 +85,30 @@ pub trait WeightSource: Send + Sync {
     fn tensor_names(&self) -> Vec<String>;
     /// Header-only shape of `name` (`None` when absent).
     fn dims_of(&self, name: &str) -> Option<Vec<usize>>;
+    /// Header-only dtype of `name` (`None` when absent).
+    fn dtype_of(&self, name: &str) -> Option<DType>;
     /// Materialize one raw tensor.
     fn entry(&self, name: &str) -> Result<TensorEntry, TenzError>;
     /// Materialize a 2-D f32 tensor.
     fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError>;
+
+    /// Stream `name`'s payload into `sink` in chunks of at most
+    /// `chunk_bytes` — the passthrough-copy primitive. Lazy sources
+    /// override this so peak residency is the chunk size, not the tensor
+    /// size; the default materializes the entry once and feeds it through
+    /// in slices (fine for sources that are already resident).
+    fn copy_payload_chunked(
+        &self,
+        name: &str,
+        chunk_bytes: usize,
+        sink: &mut dyn FnMut(&[u8]) -> Result<(), TenzError>,
+    ) -> Result<(), TenzError> {
+        let e = self.entry(name)?;
+        for ch in e.bytes.chunks(chunk_bytes.max(1)) {
+            sink(ch)?;
+        }
+        Ok(())
+    }
 
     fn contains(&self, name: &str) -> bool {
         self.dims_of(name).is_some()
@@ -101,6 +121,9 @@ impl WeightSource for TensorFile {
     }
     fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
         self.get(name).map(|e| e.dims.clone())
+    }
+    fn dtype_of(&self, name: &str) -> Option<DType> {
+        self.get(name).map(|e| e.dtype)
     }
     fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
         self.get(name).cloned().ok_or_else(|| TenzError::NotFound(name.into()))
@@ -120,11 +143,22 @@ impl WeightSource for TenzReader {
     fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
         self.meta(name).map(|m| m.dims.clone())
     }
+    fn dtype_of(&self, name: &str) -> Option<DType> {
+        self.meta(name).map(|m| m.dtype)
+    }
     fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
         TenzReader::entry(self, name)
     }
     fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
         TenzReader::mat(self, name)
+    }
+    fn copy_payload_chunked(
+        &self,
+        name: &str,
+        chunk_bytes: usize,
+        sink: &mut dyn FnMut(&[u8]) -> Result<(), TenzError>,
+    ) -> Result<(), TenzError> {
+        TenzReader::copy_payload_chunked(self, name, chunk_bytes, sink)
     }
     fn contains(&self, name: &str) -> bool {
         TenzReader::contains(self, name)
@@ -146,6 +180,11 @@ impl CheckpointReader {
     /// The underlying indexed reader (metadata, payload-read counters).
     pub fn tenz(&self) -> &TenzReader {
         &self.tenz
+    }
+
+    /// Modification-time snapshot of the container at open (cache keying).
+    pub fn modified(&self) -> Option<std::time::SystemTime> {
+        self.tenz.modified()
     }
 
     /// Layer prefixes present, in index order (headers only).
@@ -176,11 +215,22 @@ impl WeightSource for CheckpointReader {
     fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
         WeightSource::dims_of(&self.tenz, name)
     }
+    fn dtype_of(&self, name: &str) -> Option<DType> {
+        WeightSource::dtype_of(&self.tenz, name)
+    }
     fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
         WeightSource::entry(&self.tenz, name)
     }
     fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
         WeightSource::mat(&self.tenz, name)
+    }
+    fn copy_payload_chunked(
+        &self,
+        name: &str,
+        chunk_bytes: usize,
+        sink: &mut dyn FnMut(&[u8]) -> Result<(), TenzError>,
+    ) -> Result<(), TenzError> {
+        self.tenz.copy_payload_chunked(name, chunk_bytes, sink)
     }
     fn contains(&self, name: &str) -> bool {
         self.tenz.contains(name)

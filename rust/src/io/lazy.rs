@@ -29,6 +29,10 @@ pub struct TenzReader {
     file: File,
     index: BTreeMap<String, TensorMeta>,
     total_len: u64,
+    /// Modification time snapshot taken at open — the bytes this index
+    /// describes. Cache keys (serve's model cache) pair it with the path
+    /// so a rewritten checkpoint is a different model, not a stale hit.
+    modified: Option<std::time::SystemTime>,
     payload_reads: AtomicU64,
 }
 
@@ -45,13 +49,21 @@ impl TenzReader {
     pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
         let path = path.as_ref().to_path_buf();
         let file = File::open(&path)?;
-        let total_len = file.metadata()?.len();
+        let md = file.metadata()?;
+        let total_len = md.len();
+        let modified = md.modified().ok();
         let metas = {
             let mut r = &file;
             scan_index(&mut r, total_len)?
         };
         let index = metas.into_iter().map(|m| (m.name.clone(), m)).collect();
-        Ok(TenzReader { path, file, index, total_len, payload_reads: AtomicU64::new(0) })
+        Ok(TenzReader { path, file, index, total_len, modified, payload_reads: AtomicU64::new(0) })
+    }
+
+    /// Modification time of the container at open (`None` where the
+    /// filesystem doesn't report one).
+    pub fn modified(&self) -> Option<std::time::SystemTime> {
+        self.modified
     }
 
     pub fn path(&self) -> &Path {
@@ -158,6 +170,30 @@ impl TenzReader {
         Ok(TensorEntry { dtype: m.dtype, dims: m.dims.clone(), bytes })
     }
 
+    /// Stream one tensor's payload into `sink` via positional reads of at
+    /// most `chunk_bytes`, without ever materializing the whole payload —
+    /// peak residency is the chunk, not the tensor. Counts as a single
+    /// payload read (one materialization pass over the tensor).
+    pub fn copy_payload_chunked(
+        &self,
+        name: &str,
+        chunk_bytes: usize,
+        sink: &mut dyn FnMut(&[u8]) -> Result<(), TenzError>,
+    ) -> Result<(), TenzError> {
+        let m = self.index.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        let chunk = (chunk_bytes.max(1) as u64).min(m.nbytes.max(1)) as usize;
+        let mut buf = vec![0u8; chunk];
+        let mut off = 0u64;
+        while off < m.nbytes {
+            let n = ((m.nbytes - off) as usize).min(chunk);
+            self.read_at(&mut buf[..n], m.offset + off)?;
+            sink(&buf[..n])?;
+            off += n as u64;
+        }
+        self.payload_reads.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Fetch a 2-D f32 tensor as a `Mat` (same semantics as
     /// [`TensorFile::mat`]).
     pub fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
@@ -240,6 +276,34 @@ mod tests {
             Err(TenzError::NotAMatrix { name, .. }) => assert_eq!(name, "labels"),
             other => panic!("unexpected {other:?}"),
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chunked_copy_matches_entry_and_bounds_chunks() {
+        let dir = tmp_dir("chunked");
+        let path = dir.join("s.tenz");
+        let tf = sample();
+        tf.write(&path).unwrap();
+        let r = TenzReader::open(&path).unwrap();
+
+        let want = tf.get("layers.0.weight").unwrap().bytes.clone();
+        let mut got = Vec::new();
+        let mut max_chunk = 0usize;
+        r.copy_payload_chunked("layers.0.weight", 10, &mut |ch| {
+            max_chunk = max_chunk.max(ch.len());
+            got.extend_from_slice(ch);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, want, "chunked copy must reproduce the payload exactly");
+        assert!(max_chunk <= 10, "chunk {max_chunk} exceeds the 10-byte bound");
+        // One materialization pass, like entry().
+        assert_eq!(r.payload_reads(), 1);
+        assert!(matches!(
+            r.copy_payload_chunked("nope", 10, &mut |_| Ok(())),
+            Err(TenzError::NotFound(_))
+        ));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

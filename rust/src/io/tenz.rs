@@ -248,41 +248,55 @@ pub(crate) fn tmp_sibling(path: &Path) -> std::path::PathBuf {
 /// the single source of the wire layout, shared by the eager
 /// [`TensorFile::to_bytes`] and the streaming
 /// [`crate::io::writer::TenzWriter`] so the two writers cannot drift.
-pub(crate) fn encode_entry_header(name: &str, e: &TensorEntry) -> Vec<u8> {
-    let mut out = Vec::with_capacity(2 + name.len() + 2 + 8 * e.dims.len());
+/// Takes the header fields alone (no payload in hand) so the chunked
+/// passthrough path can emit a header before its payload streams.
+pub(crate) fn encode_header(name: &str, dtype: DType, dims: &[usize]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 + name.len() + 2 + 8 * dims.len());
     out.extend_from_slice(&(name.len() as u16).to_le_bytes());
     out.extend_from_slice(name.as_bytes());
-    out.push(e.dtype.tag());
-    out.push(e.dims.len() as u8);
-    for d in &e.dims {
+    out.push(dtype.tag());
+    out.push(dims.len() as u8);
+    for d in dims {
         out.extend_from_slice(&(*d as u64).to_le_bytes());
     }
     out
 }
 
-/// Check that an entry is representable on the wire and will round-trip
-/// through [`scan_index`]: name length fits u16, 1–255 dims, and the
-/// payload length matches the dims × dtype claim (overflow-checked).
-/// Shared by both writers so neither can emit a file the parser refuses.
-pub fn validate_entry(name: &str, e: &TensorEntry) -> Result<(), TenzError> {
+pub(crate) fn encode_entry_header(name: &str, e: &TensorEntry) -> Vec<u8> {
+    encode_header(name, e.dtype, &e.dims)
+}
+
+/// Check that a header claim alone is representable on the wire and will
+/// round-trip through [`scan_index`]: name length fits u16, 1–255 dims,
+/// overflow-checked sizes. Returns the payload byte length the claim
+/// implies — what the streaming writer's chunked path must then deliver.
+pub fn validate_meta(name: &str, dtype: DType, dims: &[usize]) -> Result<u64, TenzError> {
     if name.len() > u16::MAX as usize {
         return Err(TenzError::Corrupt(format!("name of {} bytes exceeds u16", name.len())));
     }
-    if e.dims.is_empty() {
+    if dims.is_empty() {
         return Err(TenzError::ZeroDims(name.into()));
     }
-    if e.dims.len() > u8::MAX as usize {
-        return Err(TenzError::Corrupt(format!("{name}: {} dims exceed u8", e.dims.len())));
+    if dims.len() > u8::MAX as usize {
+        return Err(TenzError::Corrupt(format!("{name}: {} dims exceed u8", dims.len())));
     }
     let mut numel: u64 = 1;
-    for d in &e.dims {
+    for d in dims {
         numel = numel
             .checked_mul(*d as u64)
             .ok_or_else(|| TenzError::Overflow(format!("dim product of {name} overflows u64")))?;
     }
-    let nbytes = numel
-        .checked_mul(e.dtype.size() as u64)
-        .ok_or_else(|| TenzError::Overflow(format!("payload bytes of {name} overflow u64")))?;
+    numel
+        .checked_mul(dtype.size() as u64)
+        .ok_or_else(|| TenzError::Overflow(format!("payload bytes of {name} overflow u64")))
+}
+
+/// Check that an entry is representable on the wire and will round-trip
+/// through [`scan_index`]: the [`validate_meta`] header checks plus the
+/// payload length matching the dims × dtype claim. Shared by both writers
+/// so neither can emit a file the parser refuses.
+pub fn validate_entry(name: &str, e: &TensorEntry) -> Result<(), TenzError> {
+    let nbytes = validate_meta(name, e.dtype, &e.dims)?;
     if nbytes != e.bytes.len() as u64 {
         return Err(TenzError::Corrupt(format!(
             "{name}: dims claim {nbytes} payload bytes, entry holds {}",

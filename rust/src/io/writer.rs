@@ -13,7 +13,10 @@
 //! bytes identical to [`TensorFile::to_bytes`] — the streaming pipeline
 //! relies on this for bit-identical eager/lazy outputs.
 
-use super::tenz::{encode_entry_header, tmp_sibling, validate_entry, TensorEntry, TenzError, MAGIC};
+use super::tenz::{
+    encode_header, tmp_sibling, validate_entry, validate_meta, DType, TensorEntry, TenzError,
+    MAGIC,
+};
 use crate::tensor::Mat;
 use std::collections::HashSet;
 use std::fs::File;
@@ -68,27 +71,43 @@ impl TenzWriter {
     /// write poisons the writer: the temp file tail is indeterminate, so
     /// all further appends and `finish` refuse.
     pub fn append(&mut self, name: &str, e: &TensorEntry) -> Result<(), TenzError> {
+        // Full validation (payload length included) before the header hits
+        // disk, so a malformed entry fails cleanly without poisoning.
+        validate_entry(name, e)?;
+        let mut sink = self.begin_entry(name, e.dtype, &e.dims)?;
+        sink.write(&e.bytes)?;
+        sink.finish()
+    }
+
+    /// Begin a *streamed* entry: the header is written now, and exactly
+    /// the declared payload size must then arrive through
+    /// [`EntrySink::write`] before [`EntrySink::finish`]. This is what the
+    /// pipeline's chunked passthrough copies use so a tensor's bytes can
+    /// flow source → writer in fixed-size chunks, never fully resident.
+    /// A sink abandoned before `finish` poisons the writer (the header is
+    /// already on disk with an incomplete payload).
+    pub fn begin_entry(
+        &mut self,
+        name: &str,
+        dtype: DType,
+        dims: &[usize],
+    ) -> Result<EntrySink<'_>, TenzError> {
         if self.poisoned {
             return Err(TenzError::Corrupt("writer poisoned by an earlier write failure".into()));
         }
-        validate_entry(name, e)?;
+        let nbytes = validate_meta(name, dtype, dims)?;
         if self.count == u32::MAX {
             return Err(TenzError::Overflow("entry count overflows u32".into()));
         }
         if !self.names.insert(name.to_string()) {
             return Err(TenzError::DuplicateName(name.into()));
         }
-
         let f = self.file.as_mut().expect("TenzWriter used after finish");
-        let wrote = f
-            .write_all(&encode_entry_header(name, e))
-            .and_then(|()| f.write_all(&e.bytes));
-        if let Err(io_err) = wrote {
+        if let Err(io_err) = f.write_all(&encode_header(name, dtype, dims)) {
             self.poisoned = true;
             return Err(io_err.into());
         }
-        self.count += 1;
-        Ok(())
+        Ok(EntrySink { writer: self, remaining: nbytes, done: false })
     }
 
     /// Append a matrix as f32.
@@ -122,6 +141,66 @@ impl TenzWriter {
             return Err(e.into());
         }
         Ok(self.final_path.clone())
+    }
+}
+
+/// An in-progress streamed entry (see [`TenzWriter::begin_entry`]): the
+/// header is on disk; payload bytes accumulate through [`write`](Self::write)
+/// until exactly the declared size has arrived, then [`finish`](Self::finish)
+/// commits the entry. While a sink is alive the writer is mutably
+/// borrowed, so entries cannot interleave.
+#[derive(Debug)]
+pub struct EntrySink<'a> {
+    writer: &'a mut TenzWriter,
+    /// Declared payload bytes not yet written.
+    remaining: u64,
+    done: bool,
+}
+
+impl EntrySink<'_> {
+    /// Append a payload chunk. Writing past the declared size is refused
+    /// (nothing is written; the sink stays open but the entry can no
+    /// longer complete, so dropping it poisons the writer).
+    pub fn write(&mut self, bytes: &[u8]) -> Result<(), TenzError> {
+        if bytes.len() as u64 > self.remaining {
+            return Err(TenzError::Corrupt(format!(
+                "entry payload overflows its declared size by {} bytes",
+                bytes.len() as u64 - self.remaining
+            )));
+        }
+        let f = self.writer.file.as_mut().expect("TenzWriter used after finish");
+        if let Err(io_err) = f.write_all(bytes) {
+            self.writer.poisoned = true;
+            return Err(io_err.into());
+        }
+        self.remaining -= bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Commit the entry. Errors — and poisons the writer — unless exactly
+    /// the declared payload size was written.
+    pub fn finish(mut self) -> Result<(), TenzError> {
+        self.done = true;
+        if self.remaining != 0 {
+            self.writer.poisoned = true;
+            return Err(TenzError::Corrupt(format!(
+                "entry finished {} bytes short of its declared size",
+                self.remaining
+            )));
+        }
+        self.writer.count += 1;
+        Ok(())
+    }
+}
+
+impl Drop for EntrySink<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            // Abandoned mid-entry: the header (and possibly part of the
+            // payload) is already on disk, so the container tail is
+            // indeterminate — refuse everything downstream.
+            self.writer.poisoned = true;
+        }
     }
 }
 
@@ -213,6 +292,54 @@ mod tests {
             ),
             Err(TenzError::Corrupt(_))
         ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn chunked_entry_matches_eager_bytes() {
+        let dir = tmp_dir("chunked");
+        let vals: Vec<f32> = (0..37).map(|i| i as f32 * 0.25).collect();
+        let entry = TensorEntry::from_f32(vec![37], &vals);
+        let mut tf = TensorFile::new();
+        tf.insert("x", entry.clone());
+        let eager_path = dir.join("eager.tenz");
+        tf.write(&eager_path).unwrap();
+
+        // Stream the same payload in deliberately odd-sized chunks.
+        let stream_path = dir.join("stream.tenz");
+        let mut w = TenzWriter::create(&stream_path).unwrap();
+        let mut sink = w.begin_entry("x", DType::F32, &[37]).unwrap();
+        for ch in entry.bytes.chunks(7) {
+            sink.write(ch).unwrap();
+        }
+        sink.finish().unwrap();
+        w.finish().unwrap();
+        assert_eq!(std::fs::read(&eager_path).unwrap(), std::fs::read(&stream_path).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn short_or_overflowing_streamed_entry_poisons() {
+        let dir = tmp_dir("short");
+        // Finished short: the writer must refuse to produce the file.
+        let mut w = TenzWriter::create(dir.join("s.tenz")).unwrap();
+        let sink = w.begin_entry("x", DType::F32, &[4]).unwrap();
+        assert!(matches!(sink.finish(), Err(TenzError::Corrupt(_))));
+        assert!(matches!(
+            w.append("y", &TensorEntry::from_f32(vec![1], &[1.0])),
+            Err(TenzError::Corrupt(_))
+        ));
+        assert!(w.finish().is_err());
+        assert!(!dir.join("s.tenz").exists());
+
+        // Overflowing write is refused; the abandoned sink poisons.
+        let mut w = TenzWriter::create(dir.join("o.tenz")).unwrap();
+        {
+            let mut sink = w.begin_entry("x", DType::F32, &[1]).unwrap();
+            assert!(matches!(sink.write(&[0u8; 8]), Err(TenzError::Corrupt(_))));
+        }
+        assert!(w.finish().is_err());
+        assert!(!dir.join("o.tenz").exists());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -14,7 +14,9 @@
 //!   `python/compile/aot.py` (`make artifacts`).
 //! * **L3** — this crate: checkpoint I/O, the compression planner, a
 //!   work-queue pipeline over layers, PJRT execution of the AOT artifacts,
-//!   the evaluation engine, and the paper's benchmark harness.
+//!   the evaluation engine, a batched serving engine for compressed
+//!   checkpoints (`serve`, behind `rsic serve`), and the paper's benchmark
+//!   harness.
 //!
 //! Python never runs on the request path; after `make artifacts` the `rsic`
 //! binary is self-contained.
@@ -62,6 +64,7 @@ pub mod model;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testutil;
 pub mod util;

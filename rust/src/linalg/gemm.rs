@@ -197,6 +197,14 @@ pub fn matmul_tn<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
     c
 }
 
+/// Batched mat-vec — the serving orientation. Each row of `x` (N×D) is
+/// one input vector pushed through the C×D weight `w`, giving N×C: a
+/// whole micro-batch runs as one threaded GEMM (`matmul_nt`) instead of N
+/// separate `matvec`s, which is the entire point of request coalescing.
+pub fn matvec_batch<T: Scalar>(x: &Mat<T>, w: &Mat<T>) -> Mat<T> {
+    matmul_nt(x, w)
+}
+
 /// Gram matrix G = Aᵀ·A accumulated in f64 (symmetrized), returned in T.
 /// Used by CholeskyQR and the Gram-based SVD where f32 accumulation error
 /// would square into the factorization.
@@ -340,6 +348,21 @@ mod tests {
         let i = Mat::<f32>::eye(10);
         assert_close(&matmul(&a, &i), &a, 1e-6);
         assert_close(&matmul(&i, &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn matvec_batch_rows_match_matvec() {
+        let mut g = GaussianSource::new(8);
+        let w = gaussian(9, 15, 1.0, &mut g); // C×D
+        let x = gaussian(5, 15, 1.0, &mut g); // N×D
+        let y = matvec_batch(&x, &w);
+        assert_eq!(y.shape(), (5, 9));
+        for r in 0..5 {
+            let want = w.matvec(x.row(r));
+            for (c, wv) in want.iter().enumerate() {
+                assert!((y.get(r, c) - wv).abs() < 1e-4);
+            }
+        }
     }
 
     #[test]

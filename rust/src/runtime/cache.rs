@@ -50,6 +50,17 @@ impl ExecutableCache {
         use std::sync::atomic::Ordering;
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
+
+    /// Fraction of `get`s served from cache (0 when never used) — what
+    /// sweep reports surface as the executable-cache hit rate.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,335 @@
+//! Micro-batching front end: coalesce concurrent requests into one GEMM.
+//!
+//! Requests enqueue on a channel; a dedicated batcher thread pulls the
+//! first request of a batch, then keeps collecting until either
+//! `max_batch` inputs are in hand or `max_wait` has elapsed since the
+//! batch opened — whichever comes first — and executes the whole batch as
+//! a single forward pass on the shared [`WorkerPool`]. A lone request is
+//! therefore answered after at most `max_wait` (flush-on-timeout), while
+//! a burst of N concurrent requests collapses into ⌈N/max_batch⌉ GEMM
+//! passes instead of N.
+
+use super::kernel::ModelKernels;
+use super::metrics::ServeMetrics;
+use crate::coordinator::pool::WorkerPool;
+use crate::tensor::Mat;
+use std::sync::atomic::AtomicUsize;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Coalescing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Largest batch one GEMM pass serves.
+    pub max_batch: usize,
+    /// Longest a batch stays open waiting for more requests.
+    pub max_wait: Duration,
+    /// Queued-request bound: submissions beyond this are rejected
+    /// immediately ("server overloaded") instead of buffering without
+    /// limit — sustained overload sheds load rather than growing memory
+    /// and tail latency forever.
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), max_queue: 8192 }
+    }
+}
+
+/// One queued inference request.
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    tx: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Handle to one in-flight request; [`wait`](Self::wait) blocks for the
+/// response.
+pub struct PendingResponse {
+    rx: Receiver<Result<Vec<f32>, String>>,
+}
+
+impl PendingResponse {
+    /// Block until the response (or the server's failure message) arrives.
+    pub fn wait(self) -> Result<Vec<f32>, String> {
+        self.rx.recv().unwrap_or_else(|_| Err("server shut down before responding".into()))
+    }
+}
+
+/// The micro-batching queue for one loaded model. Dropping the batcher
+/// closes the queue; the thread flushes whatever is pending and exits.
+pub struct Batcher {
+    tx: Option<Sender<Request>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    /// Requests accepted but not yet pulled into a batch (queue gauge;
+    /// shared with the batcher thread, which decrements on pull).
+    queued: Arc<AtomicUsize>,
+    max_queue: usize,
+    input_dim: usize,
+}
+
+impl Batcher {
+    /// Spawn the batcher thread for `model`, executing batches on `pool`.
+    pub fn spawn(
+        model: Arc<ModelKernels>,
+        pool: Arc<WorkerPool>,
+        metrics: Arc<ServeMetrics>,
+        config: BatcherConfig,
+    ) -> Batcher {
+        let input_dim = model.input_dim();
+        let (tx, rx) = channel::<Request>();
+        let loop_metrics = metrics.clone();
+        let queued = Arc::new(AtomicUsize::new(0));
+        let loop_queued = queued.clone();
+        let thread = std::thread::Builder::new()
+            .name("rsic-batcher".into())
+            .spawn(move || batch_loop(rx, model, pool, loop_metrics, loop_queued, config))
+            .expect("spawn batcher thread");
+        Batcher {
+            tx: Some(tx),
+            thread: Some(thread),
+            metrics,
+            queued,
+            max_queue: config.max_queue.max(1),
+            input_dim,
+        }
+    }
+
+    /// Input width this batcher's model expects.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Enqueue one input vector. Wrong-width inputs and submissions past
+    /// the `max_queue` bound are rejected immediately (no batch slot
+    /// wasted, no unbounded buffering); the error still arrives through
+    /// the returned handle so callers have one code path.
+    pub fn submit(&self, input: Vec<f32>) -> PendingResponse {
+        use std::sync::atomic::Ordering;
+        let (tx, rx) = channel();
+        if input.len() != self.input_dim {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(format!(
+                "input has {} features, model expects {}",
+                input.len(),
+                self.input_dim
+            )));
+            return PendingResponse { rx };
+        }
+        let depth = self.queued.fetch_add(1, Ordering::AcqRel);
+        if depth >= self.max_queue {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(format!("server overloaded: {depth} requests already queued")));
+            return PendingResponse { rx };
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let req = Request { input, enqueued: Instant::now(), tx };
+        let queue = self.tx.as_ref().expect("batcher queue alive until drop");
+        if let Err(send_err) = queue.send(req) {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = send_err.0.tx.send(Err("batcher thread is gone".into()));
+        }
+        PendingResponse { rx }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue: the thread drains and exits
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Collect-and-flush loop (one per batcher thread).
+fn batch_loop(
+    rx: Receiver<Request>,
+    model: Arc<ModelKernels>,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<ServeMetrics>,
+    queued: Arc<AtomicUsize>,
+    config: BatcherConfig,
+) {
+    use std::sync::atomic::Ordering;
+    let max_batch = config.max_batch.max(1);
+    loop {
+        // Block for the request that opens the next batch; queue closure
+        // (all senders dropped) ends the loop.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        queued.fetch_sub(1, Ordering::AcqRel);
+        let mut batch = vec![first];
+        let deadline = Instant::now() + config.max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => {
+                    queued.fetch_sub(1, Ordering::AcqRel);
+                    batch.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        flush(&model, &pool, &metrics, batch);
+    }
+}
+
+/// Execute one coalesced batch as a single forward pass on the pool and
+/// scatter the output rows back to their requesters.
+fn flush(
+    model: &Arc<ModelKernels>,
+    pool: &WorkerPool,
+    metrics: &ServeMetrics,
+    batch: Vec<Request>,
+) {
+    let rows: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
+    let inputs = Mat::from_rows(&rows);
+    drop(rows);
+    metrics.record_batch(batch.len());
+    let job_model = model.clone();
+    let handle = pool.submit_handle(move || {
+        let out = job_model.forward(&inputs);
+        (0..out.rows()).map(|r| out.row(r).to_vec()).collect::<Vec<Vec<f32>>>()
+    });
+    match handle.wait() {
+        Ok(outputs) => {
+            debug_assert_eq!(outputs.len(), batch.len());
+            for (req, out) in batch.into_iter().zip(outputs) {
+                metrics.record_latency(req.enqueued.elapsed().as_secs_f64());
+                let _ = req.tx.send(Ok(out));
+            }
+        }
+        Err(msg) => {
+            for req in batch {
+                let _ = req.tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::{store_weight, StoredWeight};
+    use crate::io::tenz::TensorFile;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    fn tiny_model(d: usize, c: usize) -> Arc<ModelKernels> {
+        let mut g = GaussianSource::new(7);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(c, d, 1.0, &mut g)));
+        Arc::new(ModelKernels::load(&tf).unwrap())
+    }
+
+    #[test]
+    fn single_request_flushes_on_max_wait() {
+        let pool = Arc::new(WorkerPool::new(1, 2));
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::spawn(
+            tiny_model(4, 2),
+            pool.clone(),
+            metrics.clone(),
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(10),
+                ..Default::default()
+            },
+        );
+        let y = batcher.submit(vec![1.0; 4]).wait().unwrap();
+        assert_eq!(y.len(), 2);
+        use std::sync::atomic::Ordering;
+        // One lone request ⇒ exactly one batch of occupancy 1, answered
+        // without waiting for 63 more inputs that never come.
+        assert_eq!(metrics.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.batched_inputs.load(Ordering::Relaxed), 1);
+        drop(batcher);
+    }
+
+    #[test]
+    fn wrong_width_rejected_immediately() {
+        let pool = Arc::new(WorkerPool::new(1, 2));
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher =
+            Batcher::spawn(tiny_model(4, 2), pool.clone(), metrics.clone(), Default::default());
+        let err = batcher.submit(vec![1.0; 3]).wait().unwrap_err();
+        assert!(err.contains("3 features"));
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.batches.load(Ordering::Relaxed), 0);
+        drop(batcher);
+    }
+
+    #[test]
+    fn overload_sheds_requests_once_queue_is_full() {
+        use std::sync::atomic::Ordering;
+        let pool = Arc::new(WorkerPool::new(1, 1));
+        let metrics = Arc::new(ServeMetrics::new());
+        // Saturate the single worker so the batcher's flush blocks behind
+        // it and the queue actually backs up.
+        let (block_tx, block_rx) = std::sync::mpsc::channel::<()>();
+        let blocker = pool.submit_handle(move || {
+            let _ = block_rx.recv();
+            0usize
+        });
+        let batcher = Batcher::spawn(
+            tiny_model(3, 2),
+            pool.clone(),
+            metrics.clone(),
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1), max_queue: 3 },
+        );
+        // First request: pulled into a batch whose flush is stuck behind
+        // the blocker. record_batch fires before the flush blocks, so
+        // batches==1 means the request has left the queue.
+        let first = batcher.submit(vec![0.0; 3]);
+        while metrics.batches.load(Ordering::Relaxed) == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Fill the queue to its bound, then watch the shed.
+        let queued: Vec<_> = (0..3).map(|_| batcher.submit(vec![0.0; 3])).collect();
+        let shed = batcher.submit(vec![0.0; 3]);
+        assert!(shed.wait().unwrap_err().contains("overloaded"));
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        // Unblock: everything accepted is still answered.
+        block_tx.send(()).unwrap();
+        assert_eq!(blocker.wait().unwrap(), 0);
+        assert_eq!(first.wait().unwrap().len(), 2);
+        for p in queued {
+            assert_eq!(p.wait().unwrap().len(), 2);
+        }
+        drop(batcher);
+    }
+
+    #[test]
+    fn drop_flushes_pending_requests() {
+        let pool = Arc::new(WorkerPool::new(1, 2));
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::spawn(
+            tiny_model(3, 2),
+            pool.clone(),
+            metrics.clone(),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(50),
+                ..Default::default()
+            },
+        );
+        let pending: Vec<PendingResponse> =
+            (0..5).map(|i| batcher.submit(vec![i as f32; 3])).collect();
+        drop(batcher); // closes the queue; pending work must still answer
+        for p in pending {
+            assert_eq!(p.wait().unwrap().len(), 2);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! LRU model cache: one server process, many checkpoints.
+//!
+//! Keys are checkpoint path + modification-time snapshot, so rewriting a
+//! checkpoint on disk (a new compression run finishing, say) invalidates
+//! the cached kernels instead of serving stale weights. Capacity-bounded
+//! with least-recently-used eviction; hit/miss/eviction counters feed the
+//! [`ServeMetrics`](super::metrics::ServeMetrics) table.
+
+use super::kernel::ModelKernels;
+use crate::io::checkpoint::CheckpointReader;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+/// Identity of one loaded model: where it came from and which bytes
+/// (mtime snapshot) were loaded.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    pub path: PathBuf,
+    pub mtime: Option<SystemTime>,
+}
+
+/// Thread-safe LRU cache of executable model kernels.
+pub struct ModelCache {
+    capacity: usize,
+    /// Most-recently-used first.
+    inner: Mutex<VecDeque<(ModelKey, Arc<ModelKernels>)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ModelCache {
+    pub fn new(capacity: usize) -> Self {
+        ModelCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(VecDeque::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether `key` is currently cached (no recency update).
+    pub fn contains(&self, key: &ModelKey) -> bool {
+        self.inner.lock().unwrap().iter().any(|(k, _)| k == key)
+    }
+
+    /// (hits, misses) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Fraction of lookups served from cache (0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Fetch (loading on miss) the kernels for the checkpoint at `path`.
+    /// The lookup key pairs the path with the file's current mtime, so a
+    /// rewritten checkpoint misses and reloads; its stale entry ages out
+    /// by LRU. Loading happens outside the lock — two threads racing on
+    /// the same cold model may both load it, but the cache stays
+    /// consistent (first insert wins).
+    pub fn get_or_load(&self, path: &Path) -> Result<(ModelKey, Arc<ModelKernels>)> {
+        let mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+        let probe = ModelKey { path: path.to_path_buf(), mtime };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(pos) = inner.iter().position(|(k, _)| *k == probe) {
+                let entry = inner.remove(pos).expect("position just found");
+                let model = entry.1.clone();
+                inner.push_front(entry);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((probe, model));
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let src = CheckpointReader::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        // Key on the reader's open-time snapshot: it describes the bytes
+        // actually indexed, even if the file was replaced since the stat.
+        let key = ModelKey { path: path.to_path_buf(), mtime: src.modified().or(mtime) };
+        let model = Arc::new(
+            ModelKernels::load(&src)
+                .with_context(|| format!("assembling kernels for {}", path.display()))?,
+        );
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) = inner.iter().position(|(k, _)| *k == key) {
+            // Lost a load race: keep the incumbent (recency-bumped).
+            let entry = inner.remove(pos).expect("position just found");
+            let model = entry.1.clone();
+            inner.push_front(entry);
+            return Ok((key, model));
+        }
+        inner.push_front((key.clone(), model.clone()));
+        while inner.len() > self.capacity {
+            inner.pop_back();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((key, model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::{store_weight, StoredWeight};
+    use crate::io::tenz::TensorFile;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("serve_cache_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_model(path: &Path, seed: u64, d: usize) {
+        let mut g = GaussianSource::new(seed);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, d, 1.0, &mut g)));
+        tf.write(path).unwrap();
+    }
+
+    #[test]
+    fn hits_misses_and_lru_eviction() {
+        let dir = tmp_dir("lru");
+        let paths: Vec<PathBuf> = (0..3).map(|i| dir.join(format!("m{i}.tenz"))).collect();
+        for (i, p) in paths.iter().enumerate() {
+            write_model(p, i as u64, 4 + i);
+        }
+        let cache = ModelCache::new(2);
+        let (k0, m0) = cache.get_or_load(&paths[0]).unwrap();
+        assert_eq!(m0.input_dim(), 4);
+        let _ = cache.get_or_load(&paths[1]).unwrap();
+        // Hit on 0 bumps its recency.
+        let (k0b, _) = cache.get_or_load(&paths[0]).unwrap();
+        assert_eq!(k0, k0b);
+        assert_eq!(cache.stats(), (1, 2));
+        // Loading a third evicts the least-recent (1).
+        let _ = cache.get_or_load(&paths[2]).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.contains(&k0));
+        // 1 was evicted: fetching it again is a miss.
+        let _ = cache.get_or_load(&paths[1]).unwrap();
+        assert_eq!(cache.stats(), (1, 4));
+        assert!((cache.hit_rate() - 0.2).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rewritten_checkpoint_invalidates() {
+        let dir = tmp_dir("mtime");
+        let path = dir.join("m.tenz");
+        write_model(&path, 1, 4);
+        let cache = ModelCache::new(4);
+        let (k1, m1) = cache.get_or_load(&path).unwrap();
+        assert_eq!(m1.input_dim(), 4);
+        // Rewrite with a different shape and a bumped mtime (filesystem
+        // mtime granularity can be coarse — set it explicitly via a
+        // sleep-free monotone touch: rewriting content is enough when the
+        // clock ticks, so nudge it with a short sleep only if needed).
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        write_model(&path, 2, 9);
+        let (k2, m2) = cache.get_or_load(&path).unwrap();
+        if k2 == k1 {
+            // mtime granularity too coarse to distinguish — nothing to
+            // assert beyond the cache staying consistent.
+            assert_eq!(m2.input_dim(), 4);
+        } else {
+            assert_eq!(m2.input_dim(), 9, "new bytes must be served after rewrite");
+            let (_, m3) = cache.get_or_load(&path).unwrap();
+            assert_eq!(m3.input_dim(), 9);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_error_not_poison() {
+        let cache = ModelCache::new(2);
+        assert!(cache.get_or_load(Path::new("/nonexistent/m.tenz")).is_err());
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.stats(), (0, 1));
+    }
+}

@@ -1,0 +1,324 @@
+//! Per-layer execution kernels: the inference-side payoff of compression.
+//!
+//! A dense layer computes `y = Wx` in one C×D GEMM; a factored layer
+//! computes `y = U(Vᵀx)` as two skinny GEMMs costing k(C+D) — the paper's
+//! two-small-linear-layers rewrite (§3), which is why a compressed
+//! checkpoint serves cheaper than the dense one at α below the k(C+D) <
+//! C·D break-even. Both kernels run whole micro-batches through
+//! [`gemm::matvec_batch`], so a coalesced batch of N requests is one (or
+//! two) threaded GEMMs, never N matvecs.
+
+use crate::io::checkpoint::{
+    bias_key, layer_infos_from, load_weight_from, StoredWeight, WeightSource,
+};
+use crate::linalg::gemm;
+use crate::tensor::Mat;
+use anyhow::{Context, Result};
+
+/// Dense kernel: `y = Wx` over the stored C×D weight.
+#[derive(Debug, Clone)]
+pub struct DenseLinear {
+    /// C×D weight.
+    pub w: Mat<f32>,
+}
+
+/// Factored kernel: `y = U(Vᵀx)` over the stored factors, never
+/// reconstructing U·Vᵀ. (`U` is the checkpoint's `weight.A`, `V`ᵀ its
+/// `weight.B`.)
+#[derive(Debug, Clone)]
+pub struct FactoredLinear {
+    /// C×k left factor.
+    pub u: Mat<f32>,
+    /// k×D right factor (already transposed: rows are the k basis vectors).
+    pub vt: Mat<f32>,
+}
+
+/// One layer's execution kernel, chosen by how the checkpoint stores it.
+#[derive(Debug, Clone)]
+pub enum LinearKernel {
+    Dense(DenseLinear),
+    Factored(FactoredLinear),
+}
+
+impl LinearKernel {
+    pub fn from_stored(w: StoredWeight) -> LinearKernel {
+        match w {
+            StoredWeight::Dense(w) => LinearKernel::Dense(DenseLinear { w }),
+            StoredWeight::Factored { a, b } => {
+                LinearKernel::Factored(FactoredLinear { u: a, vt: b })
+            }
+        }
+    }
+
+    /// Logical (C, D) shape: inputs are D-vectors, outputs C-vectors.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            LinearKernel::Dense(d) => d.w.shape(),
+            LinearKernel::Factored(f) => (f.u.rows(), f.vt.cols()),
+        }
+    }
+
+    /// Factorization rank (`None` for dense).
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            LinearKernel::Dense(_) => None,
+            LinearKernel::Factored(f) => Some(f.u.cols()),
+        }
+    }
+
+    /// Push a batch of row vectors (N×D) through the layer → N×C.
+    pub fn forward(&self, x: &Mat<f32>) -> Mat<f32> {
+        match self {
+            LinearKernel::Dense(d) => gemm::matvec_batch(x, &d.w),
+            LinearKernel::Factored(f) => {
+                // (N×D)·Vᵀ → N×k, then ·U → N×C: k(C+D) MACs per sample.
+                let xk = gemm::matvec_batch(x, &f.vt);
+                gemm::matvec_batch(&xk, &f.u)
+            }
+        }
+    }
+
+    /// Fused multiply-adds per served sample: C·D dense, k(C+D) factored —
+    /// the quantity the throughput bench compares.
+    pub fn flops_per_sample(&self) -> usize {
+        let (c, d) = self.shape();
+        match self.rank() {
+            None => c * d,
+            Some(k) => k * (c + d),
+        }
+    }
+
+    /// Stored parameter count (dense C·D, factored (C+D)·k).
+    pub fn param_count(&self) -> usize {
+        match self {
+            LinearKernel::Dense(d) => d.w.len(),
+            LinearKernel::Factored(f) => f.u.len() + f.vt.len(),
+        }
+    }
+}
+
+/// One servable layer: kernel + optional bias + activation.
+#[derive(Debug, Clone)]
+pub struct ServeLayer {
+    pub name: String,
+    pub kernel: LinearKernel,
+    /// Added per output feature when present (length C).
+    pub bias: Option<Vec<f32>>,
+    /// ReLU after the affine map (every layer except the head).
+    pub relu: bool,
+}
+
+impl ServeLayer {
+    /// Forward one batch (N×D → N×C) through kernel, bias, activation.
+    pub fn forward(&self, x: &Mat<f32>) -> Mat<f32> {
+        let mut y = self.kernel.forward(x);
+        if self.bias.is_none() && !self.relu {
+            return y;
+        }
+        for r in 0..y.rows() {
+            let row = y.row_mut(r);
+            if let Some(b) = &self.bias {
+                for (v, bb) in row.iter_mut().zip(b.iter()) {
+                    *v += *bb;
+                }
+            }
+            if self.relu {
+                for v in row.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        y
+    }
+}
+
+/// The executable form of a checkpoint: one kernel per linear layer, in
+/// forward order, with ReLU between hidden layers and a bare affine head —
+/// the same MLP-chain semantics the evaluator's forward artifact encodes
+/// for the synth models. Built once per checkpoint and shared (behind an
+/// `Arc`) by every batch the server runs against it.
+#[derive(Debug, Clone)]
+pub struct ModelKernels {
+    pub layers: Vec<ServeLayer>,
+}
+
+impl ModelKernels {
+    /// Assemble kernels from any checkpoint source (eager or lazy): layer
+    /// metadata comes from one header pass, then each layer's stored
+    /// representation is materialized exactly once — factored layers stay
+    /// factored (U·Vᵀ is never formed). Fails on checkpoints whose layers
+    /// don't chain (D of layer i+1 must equal C of layer i): serving
+    /// supports MLP-chain checkpoints, which is what the pipeline emits.
+    pub fn load(src: &dyn WeightSource) -> Result<ModelKernels> {
+        let infos = layer_infos_from(src);
+        anyhow::ensure!(!infos.is_empty(), "checkpoint has no 2-D linear layers to serve");
+        let n = infos.len();
+        let mut layers = Vec::with_capacity(n);
+        for (i, info) in infos.iter().enumerate() {
+            let stored = load_weight_from(src, &info.layer)
+                .with_context(|| format!("loading layer {}", info.layer))?;
+            let kernel = LinearKernel::from_stored(stored);
+            let (c, _) = kernel.shape();
+            let key = bias_key(&info.layer);
+            let bias = if src.contains(&key) {
+                let b = src
+                    .entry(&key)
+                    .and_then(|e| e.to_f32())
+                    .with_context(|| format!("loading bias {key}"))?;
+                anyhow::ensure!(
+                    b.len() == c,
+                    "{key}: {} values for a {c}-output layer",
+                    b.len()
+                );
+                Some(b)
+            } else {
+                None
+            };
+            layers.push(ServeLayer { name: info.layer.clone(), kernel, bias, relu: i + 1 < n });
+        }
+        for pair in layers.windows(2) {
+            let (c_prev, _) = pair[0].kernel.shape();
+            let (_, d_next) = pair[1].kernel.shape();
+            anyhow::ensure!(
+                c_prev == d_next,
+                "layers {} → {} don't chain: {} outputs vs {} inputs",
+                pair[0].name,
+                pair[1].name,
+                c_prev,
+                d_next
+            );
+        }
+        Ok(ModelKernels { layers })
+    }
+
+    /// Input feature width (D of the first layer).
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].kernel.shape().1
+    }
+
+    /// Output width (C of the last layer).
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().expect("load guarantees ≥1 layer").kernel.shape().0
+    }
+
+    /// Forward a batch of row vectors (N×input_dim → N×output_dim).
+    pub fn forward(&self, x: &Mat<f32>) -> Mat<f32> {
+        assert_eq!(x.cols(), self.input_dim(), "batch width vs model input dim");
+        let mut h = self.layers[0].forward(x);
+        for layer in &self.layers[1..] {
+            h = layer.forward(&h);
+        }
+        h
+    }
+
+    /// Total stored parameters across layers.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.kernel.param_count()).sum()
+    }
+
+    /// Fused multiply-adds per served sample across layers.
+    pub fn flops_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.kernel.flops_per_sample()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::store_weight;
+    use crate::io::tenz::{TensorEntry, TensorFile};
+    use crate::linalg::gemm::matmul;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    #[test]
+    fn factored_forward_matches_dense_reconstruction() {
+        let mut g = GaussianSource::new(1);
+        let u = gaussian(7, 3, 1.0, &mut g);
+        let vt = gaussian(3, 11, 1.0, &mut g);
+        let w = matmul(&u, &vt);
+        let x = gaussian(5, 11, 1.0, &mut g);
+        let dense = LinearKernel::Dense(DenseLinear { w });
+        let fact = LinearKernel::Factored(FactoredLinear { u, vt });
+        let yd = dense.forward(&x);
+        let yf = fact.forward(&x);
+        assert_eq!(yd.shape(), (5, 7));
+        assert!(yd.sub(&yf).max_abs() < 1e-4, "diff {}", yd.sub(&yf).max_abs());
+        assert_eq!(dense.flops_per_sample(), 7 * 11);
+        assert_eq!(fact.flops_per_sample(), 3 * (7 + 11));
+        assert_eq!(fact.rank(), Some(3));
+    }
+
+    #[test]
+    fn model_load_and_forward_chain() {
+        let mut g = GaussianSource::new(2);
+        let mut tf = TensorFile::new();
+        // 6 → 4 (relu) → 3 head, with biases; layer 0 factored.
+        let (a, b) = (gaussian(4, 2, 1.0, &mut g), gaussian(2, 6, 1.0, &mut g));
+        store_weight(&mut tf, "layers.0", &StoredWeight::Factored { a, b });
+        tf.insert("layers.0.bias", TensorEntry::from_f32(vec![4], &[0.1; 4]));
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 4, 1.0, &mut g)));
+        tf.insert("head.bias", TensorEntry::from_f32(vec![3], &[-0.2; 3]));
+
+        let model = ModelKernels::load(&tf).unwrap();
+        assert_eq!(model.layers.len(), 2);
+        assert_eq!(model.input_dim(), 6);
+        assert_eq!(model.output_dim(), 3);
+        assert!(model.layers[0].relu && !model.layers[1].relu);
+        assert_eq!(model.param_count(), (4 + 6) * 2 + 3 * 4);
+
+        let x = gaussian(3, 6, 1.0, &mut g);
+        let y = model.forward(&x);
+        assert_eq!(y.shape(), (3, 3));
+        // Reference: reconstruct layer 0 densely, apply relu chain by hand.
+        let w0 = match &model.layers[0].kernel {
+            LinearKernel::Factored(f) => matmul(&f.u, &f.vt),
+            _ => unreachable!(),
+        };
+        let mut h = gemm::matvec_batch(&x, &w0);
+        for r in 0..h.rows() {
+            for v in h.row_mut(r).iter_mut() {
+                *v += 0.1;
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let whead = match &model.layers[1].kernel {
+            LinearKernel::Dense(d) => d.w.clone(),
+            _ => unreachable!(),
+        };
+        let mut want = gemm::matvec_batch(&h, &whead);
+        for r in 0..want.rows() {
+            for v in want.row_mut(r).iter_mut() {
+                *v += -0.2;
+            }
+        }
+        assert!(y.sub(&want).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn unchained_layers_rejected() {
+        let mut g = GaussianSource::new(3);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "layers.0", &StoredWeight::Dense(gaussian(4, 6, 1.0, &mut g)));
+        // Next layer consumes 5 features, but the previous emits 4.
+        store_weight(&mut tf, "layers.1", &StoredWeight::Dense(gaussian(3, 5, 1.0, &mut g)));
+        let err = ModelKernels::load(&tf).unwrap_err();
+        assert!(format!("{err:#}").contains("don't chain"));
+    }
+
+    #[test]
+    fn empty_and_bad_bias_rejected() {
+        let tf = TensorFile::new();
+        assert!(ModelKernels::load(&tf).is_err());
+        let mut g = GaussianSource::new(4);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 4, 1.0, &mut g)));
+        tf.insert("head.bias", TensorEntry::from_f32(vec![5], &[0.0; 5]));
+        let err = ModelKernels::load(&tf).unwrap_err();
+        assert!(format!("{err:#}").contains("5 values"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Serving metrics: request/batch counters, latency quantiles, cache hit
+//! rate — rendered through [`report::table`](crate::report::table) so
+//! `rsic serve` prints the same aligned tables as the paper reports.
+
+use super::cache::ModelCache;
+use crate::bench::stats::percentile;
+use crate::report::Table;
+use crate::rng::Pcg64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Latency quantiles over recorded requests (seconds). Computed from a
+/// bounded reservoir sample, so `p50`/`p99` are estimates once more than
+/// [`LATENCY_RESERVOIR`] requests have been recorded; `n` counts every
+/// request ever recorded.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyQuantiles {
+    pub n: usize,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Latency samples kept for quantiles. A long-lived server records one
+/// latency per answered request forever; a fixed-size uniform reservoir
+/// (Vitter's Algorithm R) keeps memory and render cost O(1) instead of
+/// growing per request.
+const LATENCY_RESERVOIR: usize = 4096;
+
+#[derive(Debug)]
+struct LatencyReservoir {
+    samples: Vec<f64>,
+    /// Total latencies ever recorded (the reservoir's denominator).
+    seen: u64,
+    rng: Pcg64,
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        LatencyReservoir { samples: Vec::new(), seen: 0, rng: Pcg64::new(0x5e7e_1a7e) }
+    }
+}
+
+/// Counters shared by the batchers of one server process.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Requests accepted into a batcher queue.
+    pub requests: AtomicU64,
+    /// Requests answered with an output vector.
+    pub responses: AtomicU64,
+    /// Requests refused up front (wrong input width, shutdown).
+    pub rejected: AtomicU64,
+    /// Batched GEMM passes executed.
+    pub batches: AtomicU64,
+    /// Total inputs across executed batches (occupancy numerator).
+    pub batched_inputs: AtomicU64,
+    /// Bounded reservoir of per-request latencies (enqueue → response).
+    latencies: Mutex<LatencyReservoir>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One batch of `n` coalesced inputs was executed.
+    pub fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_inputs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// One request completed, `secs` after it was enqueued. The sample
+    /// lands in the latency reservoir (always, while it has room; with
+    /// probability reservoir/seen after — Algorithm R, so the reservoir
+    /// stays a uniform sample of the whole history).
+    pub fn record_latency(&self, secs: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        let mut r = self.latencies.lock().unwrap();
+        r.seen += 1;
+        if r.samples.len() < LATENCY_RESERVOIR {
+            r.samples.push(secs);
+        } else {
+            let seen = r.seen;
+            let j = r.rng.next_below(seen) as usize;
+            if j < LATENCY_RESERVOIR {
+                r.samples[j] = secs;
+            }
+        }
+    }
+
+    /// Mean inputs per executed batch (1.0 = no coalescing happened).
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_inputs.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// p50/p99/max request latency (reservoir estimates; `n` is the total
+    /// number of requests ever recorded).
+    pub fn latency_quantiles(&self) -> LatencyQuantiles {
+        let (mut samples, seen) = {
+            let r = self.latencies.lock().unwrap();
+            (r.samples.clone(), r.seen)
+        };
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencyQuantiles {
+            n: seen as usize,
+            p50: percentile(&samples, 0.50),
+            p99: percentile(&samples, 0.99),
+            max: samples.last().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Render the serving counters (and, when given, the model cache's
+    /// hit statistics) as an aligned metric/value table.
+    pub fn render(&self, cache: Option<&ModelCache>) -> Table {
+        let lq = self.latency_quantiles();
+        let mut t = Table::new("Serve metrics", &["metric", "value"]);
+        let row = |t: &mut Table, k: &str, v: String| {
+            t.row(&[k.to_string(), v]);
+        };
+        row(&mut t, "requests", self.requests.load(Ordering::Relaxed).to_string());
+        row(&mut t, "responses", self.responses.load(Ordering::Relaxed).to_string());
+        row(&mut t, "rejected", self.rejected.load(Ordering::Relaxed).to_string());
+        row(&mut t, "batches", self.batches.load(Ordering::Relaxed).to_string());
+        row(&mut t, "mean batch occupancy", format!("{:.2}", self.mean_occupancy()));
+        row(&mut t, "p50 latency", format!("{:.3} ms", lq.p50 * 1e3));
+        row(&mut t, "p99 latency", format!("{:.3} ms", lq.p99 * 1e3));
+        if let Some(cache) = cache {
+            let (h, m) = cache.stats();
+            row(&mut t, "model-cache hits", h.to_string());
+            row(&mut t, "model-cache misses", m.to_string());
+            row(&mut t, "model-cache hit rate", format!("{:.1}%", cache.hit_rate() * 100.0));
+            row(&mut t, "model-cache evictions", cache.evictions().to_string());
+        }
+        t
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let lq = self.latency_quantiles();
+        format!(
+            "{} requests in {} batches (occupancy {:.2}); p50 {:.3} ms, p99 {:.3} ms, {} rejected",
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_occupancy(),
+            lq.p50 * 1e3,
+            lq.p99 * 1e3,
+            self.rejected.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_and_quantiles() {
+        let m = ServeMetrics::new();
+        m.record_batch(4);
+        m.record_batch(2);
+        for secs in [0.001, 0.002, 0.003, 0.004, 0.005, 0.006] {
+            m.record_latency(secs);
+        }
+        assert!((m.mean_occupancy() - 3.0).abs() < 1e-12);
+        let lq = m.latency_quantiles();
+        assert_eq!(lq.n, 6);
+        assert!((lq.p50 - 0.0035).abs() < 1e-9);
+        assert!(lq.p99 <= lq.max && lq.max == 0.006);
+        let rendered = m.render(None).render();
+        assert!(rendered.contains("mean batch occupancy"));
+        assert!(rendered.contains("3.00"));
+    }
+
+    #[test]
+    fn latency_reservoir_stays_bounded() {
+        let m = ServeMetrics::new();
+        let total = LATENCY_RESERVOIR + 500;
+        for i in 0..total {
+            m.record_latency(i as f64 * 1e-6);
+        }
+        let lq = m.latency_quantiles();
+        // n counts every request; the stored samples stay capped.
+        assert_eq!(lq.n, total);
+        assert_eq!(m.latencies.lock().unwrap().samples.len(), LATENCY_RESERVOIR);
+        assert!(lq.p50 > 0.0 && lq.p99 >= lq.p50 && lq.max >= lq.p99);
+    }
+
+    #[test]
+    fn empty_metrics_render() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.mean_occupancy(), 0.0);
+        assert_eq!(m.latency_quantiles().n, 0);
+        assert!(m.summary().contains("0 requests"));
+    }
+}

@@ -1,0 +1,46 @@
+//! `serve` — batched low-rank inference over compressed checkpoints.
+//!
+//! The deployment half of the compression story (and of the ROADMAP's
+//! serve-heavy-traffic north star): everything upstream of this module
+//! *produces* factored checkpoints; this module *runs* them. A factored
+//! layer answers `y = U(Vᵀx)` in k(C+D) MACs against the dense C·D, so at
+//! the paper's α ≤ 0.3 operating points a served model is both smaller
+//! and faster — provided requests are batched well enough that GEMM, not
+//! per-request overhead, dominates. The pieces:
+//!
+//! * [`kernel`]  — per-layer execution kernels ([`DenseLinear`] `Wx`,
+//!   [`FactoredLinear`] `U(Vᵀx)`) and the [`ModelKernels`] chain loaded
+//!   from any [`WeightSource`](crate::io::checkpoint::WeightSource).
+//! * [`batcher`] — the micro-batching queue: coalesce up to `max_batch`
+//!   requests or `max_wait` of arrivals into one batched GEMM pass.
+//! * [`server`]  — the engine: one persistent
+//!   [`WorkerPool`](crate::coordinator::WorkerPool), an LRU model cache,
+//!   one batcher per cached model.
+//! * [`cache`]   — LRU model cache keyed by checkpoint path+mtime.
+//! * [`metrics`] — request/batch/latency/cache counters rendered through
+//!   [`report::table`](crate::report::table); latencies live in a bounded
+//!   reservoir so a long-lived server's memory stays O(1).
+//! * [`traffic`] — the synthetic load generator shared by `rsic serve`
+//!   and the throughput bench.
+//!
+//! Invariants (tested in `tests/serve.rs`):
+//!
+//! * A factored forward pass equals the dense pass exactly (up to fp
+//!   roundoff) at full rank, and within ‖W − UVᵀ‖₂·‖x‖₂ below it.
+//! * N concurrent requests produce ≪ N batches; a lone request still
+//!   flushes after `max_wait`.
+//! * Every accepted request is answered, even across server shutdown.
+
+pub mod batcher;
+pub mod cache;
+pub mod kernel;
+pub mod metrics;
+pub mod server;
+pub mod traffic;
+
+pub use batcher::{Batcher, BatcherConfig, PendingResponse};
+pub use cache::{ModelCache, ModelKey};
+pub use kernel::{DenseLinear, FactoredLinear, LinearKernel, ModelKernels, ServeLayer};
+pub use metrics::{LatencyQuantiles, ServeMetrics};
+pub use server::{ServeConfig, Server};
+pub use traffic::{drive, TrafficReport};

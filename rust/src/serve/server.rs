@@ -1,0 +1,206 @@
+//! The serving engine: model cache + per-model batchers over one pool.
+//!
+//! One [`Server`] owns one persistent [`WorkerPool`] (the same pool type
+//! the compression pipeline runs on), an LRU [`ModelCache`] keyed by
+//! checkpoint path+mtime, and one [`Batcher`] per cached model. Requests
+//! against any number of checkpoints share the process: the first request
+//! for a checkpoint loads and caches its kernels and spawns its batcher;
+//! subsequent requests coalesce into batched GEMM passes.
+
+use super::batcher::{Batcher, BatcherConfig, PendingResponse};
+use super::cache::{ModelCache, ModelKey};
+use super::kernel::ModelKernels;
+use super::metrics::ServeMetrics;
+use crate::coordinator::pool::WorkerPool;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Server construction options (the `rsic serve` CLI flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Largest coalesced batch per GEMM pass.
+    pub max_batch: usize,
+    /// Longest a batch waits for more requests before flushing.
+    pub max_wait: Duration,
+    /// Worker threads executing batched forward passes.
+    pub workers: usize,
+    /// Bounded job-queue depth of the pool.
+    pub queue_depth: usize,
+    /// Per-model queued-request bound: submissions beyond it are shed
+    /// ("server overloaded") instead of buffering without limit.
+    pub max_queue: usize,
+    /// Models kept resident in the LRU cache.
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: crate::util::default_threads(),
+            queue_depth: 16,
+            max_queue: 8192,
+            cache_capacity: 4,
+        }
+    }
+}
+
+/// A traffic-serving engine over compressed (or dense) checkpoints.
+pub struct Server {
+    // Declared before `pool`: batchers join their threads on drop while
+    // the pool is still accepting the final flush jobs.
+    batchers: Mutex<HashMap<ModelKey, Arc<Batcher>>>,
+    pool: Arc<WorkerPool>,
+    cache: Arc<ModelCache>,
+    metrics: Arc<ServeMetrics>,
+    config: ServeConfig,
+}
+
+impl Server {
+    pub fn new(config: ServeConfig) -> Server {
+        Server {
+            batchers: Mutex::new(HashMap::new()),
+            pool: Arc::new(WorkerPool::new(config.workers, config.queue_depth)),
+            cache: Arc::new(ModelCache::new(config.cache_capacity)),
+            metrics: Arc::new(ServeMetrics::new()),
+            config,
+        }
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    pub fn cache(&self) -> &ModelCache {
+        &self.cache
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Load (or fetch from cache) the kernels for a checkpoint — also the
+    /// warm-up/validation entry point: a bad checkpoint fails here, before
+    /// any traffic is pointed at it.
+    pub fn model(&self, path: &Path) -> Result<Arc<ModelKernels>> {
+        Ok(self.cache.get_or_load(path)?.1)
+    }
+
+    /// Submit one request against the checkpoint at `path`. Returns a
+    /// handle immediately; the response is computed as part of a
+    /// coalesced micro-batch. Errors only when the checkpoint itself
+    /// cannot be loaded — per-request failures arrive through the handle.
+    pub fn submit(&self, path: &Path, input: Vec<f32>) -> Result<PendingResponse> {
+        let (key, model) = self.cache.get_or_load(path)?;
+        // Batchers whose model aged out of the cache are retired once
+        // enough new keys accumulate, so the map tracks the cache instead
+        // of growing with every checkpoint rewrite. Retired entries are
+        // moved out under the lock but *dropped after releasing it*:
+        // dropping a batcher joins its thread (which may be mid-flush or
+        // waiting out `max_wait`), and that join must not stall every
+        // other model's submissions on the map mutex.
+        let mut retired: Vec<Arc<Batcher>> = Vec::new();
+        let batcher = {
+            let mut map = self.batchers.lock().unwrap();
+            let batcher = map
+                .entry(key)
+                .or_insert_with(|| {
+                    Arc::new(Batcher::spawn(
+                        model,
+                        self.pool.clone(),
+                        self.metrics.clone(),
+                        BatcherConfig {
+                            max_batch: self.config.max_batch,
+                            max_wait: self.config.max_wait,
+                            max_queue: self.config.max_queue,
+                        },
+                    ))
+                })
+                .clone();
+            if map.len() > self.cache.capacity() * 2 {
+                let cache = &self.cache;
+                map.retain(|k, b| {
+                    if cache.contains(k) {
+                        true
+                    } else {
+                        retired.push(b.clone());
+                        false
+                    }
+                });
+            }
+            batcher
+        };
+        drop(retired); // joins retired batcher threads outside the lock
+        Ok(batcher.submit(input))
+    }
+
+    /// Convenience: submit one request and block for its output.
+    pub fn infer(&self, path: &Path, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(path, input)?.wait().map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::{store_weight, StoredWeight};
+    use crate::io::tenz::TensorFile;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("serve_srv_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_model(path: &Path, seed: u64, c: usize, d: usize) {
+        let mut g = GaussianSource::new(seed);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(c, d, 1.0, &mut g)));
+        tf.write(path).unwrap();
+    }
+
+    #[test]
+    fn serves_two_models_from_one_process() {
+        let dir = tmp_dir("two");
+        let p1 = dir.join("a.tenz");
+        let p2 = dir.join("b.tenz");
+        write_model(&p1, 1, 2, 4);
+        write_model(&p2, 2, 3, 5);
+        let server = Server::new(ServeConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let y1 = server.infer(&p1, vec![1.0; 4]).unwrap();
+        let y2 = server.infer(&p2, vec![1.0; 5]).unwrap();
+        let y1b = server.infer(&p1, vec![2.0; 4]).unwrap();
+        assert_eq!(y1.len(), 2);
+        assert_eq!(y2.len(), 3);
+        assert_eq!(y1b.len(), 2);
+        // Linearity check: same model, doubled input ⇒ doubled output.
+        for (a, b) in y1.iter().zip(y1b.iter()) {
+            assert!((2.0 * a - b).abs() < 1e-4);
+        }
+        // Second request to model 1 hit the cache.
+        let (hits, misses) = server.cache().stats();
+        assert_eq!(misses, 2);
+        assert_eq!(hits, 1);
+        use std::sync::atomic::Ordering;
+        assert_eq!(server.metrics().responses.load(Ordering::Relaxed), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_error_surfaces_before_traffic() {
+        let server = Server::new(ServeConfig::default());
+        assert!(server.model(Path::new("/nonexistent/m.tenz")).is_err());
+        assert!(server.submit(Path::new("/nonexistent/m.tenz"), vec![0.0]).is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Synthetic traffic driver — the one load generator behind both
+//! `rsic serve` and `benches/serve_throughput.rs`, so the CLI and the CI
+//! throughput gate measure exactly the same traffic shape.
+
+use super::server::Server;
+use crate::rng::GaussianSource;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// What one traffic run did.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficReport {
+    /// Requests submitted.
+    pub requests: usize,
+    /// Client threads that drove them.
+    pub clients: usize,
+    /// Wall time from first submission to last response.
+    pub seconds: f64,
+    /// Requests answered with an error (overload shedding, model
+    /// failures) — the submissions themselves all succeeded.
+    pub failed: usize,
+}
+
+impl TrafficReport {
+    pub fn req_per_sec(&self) -> f64 {
+        self.requests as f64 / self.seconds.max(1e-9)
+    }
+}
+
+/// Drive `requests` Gaussian-vector requests round-robin across `paths`
+/// from `clients` concurrent client threads. Each client submits its
+/// whole share before waiting on any response — pipelined traffic, so
+/// the micro-batcher sees genuine concurrency. Models are warm-loaded
+/// first (a bad checkpoint fails here, before the clock starts).
+pub fn drive(
+    server: &Arc<Server>,
+    paths: &[PathBuf],
+    requests: usize,
+    clients: usize,
+    seed: u64,
+) -> Result<TrafficReport> {
+    anyhow::ensure!(!paths.is_empty(), "no checkpoints to drive traffic at");
+    let clients = clients.max(1);
+    let mut dims = Vec::with_capacity(paths.len());
+    for p in paths {
+        dims.push(server.model(p)?.input_dim());
+    }
+    let sw = Stopwatch::start();
+    let mut handles = Vec::with_capacity(clients);
+    for client in 0..clients {
+        let server = server.clone();
+        let paths = paths.to_vec();
+        let dims = dims.clone();
+        let n = requests / clients + usize::from(client < requests % clients);
+        handles.push(std::thread::spawn(move || -> Result<usize, String> {
+            let mut g = GaussianSource::new(seed ^ (client as u64 + 1));
+            let mut pending = Vec::with_capacity(n);
+            for i in 0..n {
+                let which = (client + i) % paths.len();
+                let mut x = vec![0f32; dims[which]];
+                g.fill_f32(&mut x);
+                pending.push(server.submit(&paths[which], x).map_err(|e| e.to_string())?);
+            }
+            Ok(pending.into_iter().map(|p| usize::from(p.wait().is_err())).sum())
+        }));
+    }
+    let mut failed = 0usize;
+    for h in handles {
+        failed += h
+            .join()
+            .map_err(|_| anyhow::anyhow!("traffic client thread panicked"))?
+            .map_err(anyhow::Error::msg)?;
+    }
+    Ok(TrafficReport { requests, clients, seconds: sw.secs(), failed })
+}

@@ -51,6 +51,20 @@ impl<T: Scalar> Mat<T> {
         Mat { rows, cols, data }
     }
 
+    /// Stack equal-length row slices into a matrix (the micro-batcher's
+    /// assembly step: N request vectors → one N×D operand). Panics on
+    /// ragged rows; an empty input yields a 0×0 matrix.
+    pub fn from_rows<R: AsRef<[T]>>(rows: &[R]) -> Self {
+        let cols = rows.first().map(|r| r.as_ref().len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            let r = r.as_ref();
+            assert_eq!(r.len(), cols, "from_rows: ragged row ({} vs {cols})", r.len());
+            data.extend_from_slice(r);
+        }
+        Mat { rows: rows.len(), cols, data }
+    }
+
     /// Diagonal matrix from a slice.
     pub fn diag(d: &[T]) -> Self {
         let n = d.len();
@@ -266,6 +280,21 @@ mod tests {
         assert_eq!(m.get(2, 3), 23.0);
         assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
         assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn from_rows_stacks() {
+        let m = Mat::<f32>::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        let e = Mat::<f32>::from_rows(&Vec::<Vec<f32>>::new());
+        assert_eq!(e.shape(), (0, 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_rows_rejects_ragged() {
+        let _ = Mat::<f32>::from_rows(&[vec![1.0, 2.0], vec![3.0]]);
     }
 
     #[test]

@@ -198,6 +198,42 @@ fn failed_layer_passes_through_identically_in_both_modes() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+#[test]
+fn chunked_passthrough_is_bit_identical() {
+    // Force a chunk far smaller than every passthrough tensor (and odd,
+    // so chunk boundaries never align with element boundaries): the
+    // streamed output must still be byte-identical to the eager path.
+    let dir = tmp_dir("chunked");
+    let src_path = dir.join("in.tenz");
+    let eager_path = dir.join("eager.tenz");
+    let stream_path = dir.join("stream.tenz");
+
+    let ckpt = checkpoint(3, 10, 14, 9);
+    ckpt.write(&src_path).unwrap();
+    let plan = plan();
+
+    let pipe = Pipeline::new(PipelineConfig {
+        workers: 2,
+        passthrough_chunk: 7,
+        ..Default::default()
+    })
+    .unwrap();
+    let eager = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+    eager.compressed.write(&eager_path).unwrap();
+    let src = Arc::new(CheckpointReader::open(&src_path).unwrap());
+    let stream = pipe.compress_to_path(src.clone(), &plan, &stream_path).unwrap();
+    assert!(stream.outcomes.iter().all(|o| o.error.is_none()), "{:?}", stream.outcomes);
+    assert_eq!(
+        std::fs::read(&eager_path).unwrap(),
+        std::fs::read(&stream_path).unwrap(),
+        "7-byte-chunked passthrough must byte-match the eager output"
+    );
+    // Chunked copies still count one materialization pass per tensor:
+    // 3 planned weights + 6 passthrough (bias + spectrum per layer).
+    assert_eq!(src.tenz().payload_reads(), 9);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 /// CI gate (see .github/workflows/ci.yml): a synthetic multi-layer
 /// checkpoint flows through the streaming compress path under a debug
 /// peak-allocation assertion — worker-resident weight bytes never exceed

@@ -1,0 +1,257 @@
+//! Serve subsystem integration: kernel equivalence properties, batcher
+//! coalescing, and the full compression → deployment loop — a compressed
+//! checkpoint answering batched traffic within the spectral-error bound
+//! its own validation predicted.
+
+use rsi_compress::compress::plan::{CompressionPlan, Method};
+use rsi_compress::compress::rsi::{rsi_factorize, RsiOptions};
+use rsi_compress::compress::NativeEngine;
+use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+use rsi_compress::coordinator::pool::WorkerPool;
+use rsi_compress::io::checkpoint::{store_weight, CheckpointReader, StoredWeight};
+use rsi_compress::io::tenz::{TensorEntry, TensorFile};
+use rsi_compress::linalg::gemm::matmul;
+use rsi_compress::linalg::norms::residual_spectral_norm;
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::serve::{
+    Batcher, BatcherConfig, DenseLinear, FactoredLinear, LinearKernel, ModelKernels, ServeConfig,
+    ServeMetrics, Server,
+};
+use rsi_compress::tensor::init::{gaussian, matrix_with_spectrum, SpectrumShape};
+use rsi_compress::tensor::Mat;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("serve_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn row_norm(row: &[f32]) -> f64 {
+    row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+/// Property: at full rank (k = min(C, D)) the factored kernel computes
+/// exactly what the dense kernel computes (up to fp reassociation), over
+/// random shapes and batch sizes.
+#[test]
+fn factored_equals_dense_at_full_rank() {
+    let mut g = GaussianSource::new(1);
+    for (c, d) in [(5usize, 9usize), (8, 8), (12, 4)] {
+        let k = c.min(d);
+        let u = gaussian(c, k, 1.0, &mut g);
+        let vt = gaussian(k, d, 1.0, &mut g);
+        let w = matmul(&u, &vt);
+        let dense = LinearKernel::Dense(DenseLinear { w });
+        let fact = LinearKernel::Factored(FactoredLinear { u, vt });
+        for n in [1usize, 3, 17] {
+            let x = gaussian(n, d, 1.0, &mut g);
+            let yd = dense.forward(&x);
+            let yf = fact.forward(&x);
+            assert_eq!(yd.shape(), (n, c));
+            let diff = yd.sub(&yf).max_abs();
+            assert!(diff < 1e-3, "(c={c}, d={d}, n={n}): max diff {diff}");
+        }
+    }
+}
+
+/// Property: below full rank, per-sample output error is bounded by
+/// ‖W − UVᵀ‖₂ · ‖x‖₂ — the operator-norm inequality the softmax
+/// perturbation analysis (§3) builds on.
+#[test]
+fn factored_error_within_spectral_bound() {
+    let mut g = GaussianSource::new(2);
+    let (c, d) = (24usize, 36usize);
+    let spec = SpectrumShape::pretrained_like().values(c);
+    let w = matrix_with_spectrum(c, d, &spec, &mut g);
+    for k in [2usize, 6, 12] {
+        let f = rsi_factorize(&w, k, &RsiOptions::with_q(2, 3), &NativeEngine);
+        let err = residual_spectral_norm(&w, &f.a, &f.b, 300, 1e-9, 5);
+        assert!(err > 0.0, "rank {k} should be inexact on this spectrum");
+        let dense = LinearKernel::Dense(DenseLinear { w: w.clone() });
+        let fact = LinearKernel::Factored(FactoredLinear { u: f.a.clone(), vt: f.b.clone() });
+        let x = gaussian(16, d, 1.0, &mut g);
+        let yd = dense.forward(&x);
+        let yf = fact.forward(&x);
+        let diff = yd.sub(&yf);
+        for r in 0..x.rows() {
+            let lhs = row_norm(diff.row(r));
+            let bound = err * row_norm(x.row(r));
+            assert!(
+                lhs <= bound * 1.05 + 1e-6,
+                "k={k} sample {r}: ‖Δy‖ {lhs} > ‖W−UVᵀ‖₂·‖x‖₂ {bound}"
+            );
+        }
+    }
+}
+
+/// The tentpole equivalence proof, end to end: compress a checkpoint
+/// through the streaming pipeline (validation on), serve BOTH checkpoints
+/// from one server process, and check the served outputs agree within the
+/// spectral-error bound the pipeline itself reported.
+#[test]
+fn served_compressed_checkpoint_matches_dense_within_bound() {
+    let dir = tmp_dir("e2e");
+    let dense_path = dir.join("dense.tenz");
+    let fact_path = dir.join("fact.tenz");
+
+    let mut g = GaussianSource::new(3);
+    let (c, d) = (20usize, 30usize);
+    let spec = SpectrumShape::pretrained_like().values(c);
+    let w = matrix_with_spectrum(c, d, &spec, &mut g);
+    let bias: Vec<f32> = (0..c).map(|i| 0.01 * i as f32).collect();
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "head", &StoredWeight::Dense(w));
+    tf.insert("head.bias", TensorEntry::from_f32(vec![c], &bias));
+    tf.write(&dense_path).unwrap();
+
+    // Compress at α = 0.3 with validation so the report carries the
+    // measured ‖W − AB‖₂.
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, validate: true, ..Default::default() })
+        .unwrap();
+    let plan = CompressionPlan::uniform_alpha(0.3, Method::Rsi(RsiOptions::with_q(2, 7)));
+    let src = Arc::new(CheckpointReader::open(&dense_path).unwrap());
+    let report = pipe.compress_to_path(src, &plan, &fact_path).unwrap();
+    assert_eq!(report.outcomes.len(), 1);
+    let err = report.outcomes[0].spectral_error.expect("validation on");
+    assert!(err > 0.0);
+
+    // One server process, both models.
+    let server = Server::new(ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let dense_model = server.model(&dense_path).unwrap();
+    let fact_model = server.model(&fact_path).unwrap();
+    assert_eq!(dense_model.layers[0].kernel.rank(), None);
+    assert_eq!(fact_model.layers[0].kernel.rank(), Some(6)); // ceil(0.3·20)
+    assert!(fact_model.flops_per_sample() < dense_model.flops_per_sample());
+
+    for trial in 0..8 {
+        let mut x = vec![0f32; d];
+        g.fill_f32(&mut x);
+        let yd = server.infer(&dense_path, x.clone()).unwrap();
+        let yf = server.infer(&fact_path, x.clone()).unwrap();
+        assert_eq!(yd.len(), c);
+        assert_eq!(yf.len(), c);
+        let diff: Vec<f32> = yd.iter().zip(&yf).map(|(a, b)| a - b).collect();
+        let lhs = row_norm(&diff);
+        let bound = err * row_norm(&x);
+        assert!(
+            lhs <= bound * 1.05 + 1e-6,
+            "trial {trial}: served outputs differ by {lhs} > predicted bound {bound}"
+        );
+    }
+
+    // Both models stayed cached across the trial loop.
+    let (hits, misses) = server.cache().stats();
+    assert_eq!(misses, 2);
+    assert_eq!(hits, 16);
+    assert!(server.cache().hit_rate() > 0.8);
+    assert_eq!(server.metrics().responses.load(Ordering::Relaxed), 16);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn tiny_model(c: usize, d: usize, seed: u64) -> Arc<ModelKernels> {
+    let mut g = GaussianSource::new(seed);
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(c, d, 1.0, &mut g)));
+    Arc::new(ModelKernels::load(&tf).unwrap())
+}
+
+/// Coalescing: 32 concurrent requests must collapse into far fewer
+/// batches (≤ 8 with max_batch = 8 — i.e. ≥ 4× coalescing), and every
+/// request still gets its own correct answer.
+#[test]
+fn concurrent_requests_coalesce_into_few_batches() {
+    let (c, d, n_req) = (16usize, 32usize, 32usize);
+    let model = tiny_model(c, d, 11);
+    let pool = Arc::new(WorkerPool::new(2, 8));
+    let metrics = Arc::new(ServeMetrics::new());
+    let batcher = Batcher::spawn(
+        model.clone(),
+        pool.clone(),
+        metrics.clone(),
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(100), ..Default::default() },
+    );
+    let inputs: Vec<Vec<f32>> = (0..n_req)
+        .map(|i| (0..d).map(|j| ((i * d + j) % 13) as f32 * 0.1).collect())
+        .collect();
+    let pending: Vec<_> = inputs.iter().map(|x| batcher.submit(x.clone())).collect();
+    for (x, p) in inputs.iter().zip(pending) {
+        let y = p.wait().unwrap();
+        // Each response is that request's own forward pass.
+        let want = model.forward(&Mat::from_rows(&[x.clone()]));
+        for (a, b) in y.iter().zip(want.row(0)) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+    let batches = metrics.batches.load(Ordering::Relaxed);
+    assert!(batches >= (n_req / 8) as u64, "max_batch must cap batches");
+    assert!(
+        batches <= (n_req / 4) as u64,
+        "{n_req} concurrent requests produced {batches} batches — coalescing failed"
+    );
+    assert!(metrics.mean_occupancy() >= 4.0, "occupancy {}", metrics.mean_occupancy());
+    drop(batcher);
+}
+
+/// Flush-on-`max_wait`: a single pending request is answered after the
+/// wait window even though the batch never fills.
+#[test]
+fn lone_request_flushes_after_max_wait() {
+    let model = tiny_model(4, 6, 12);
+    let pool = Arc::new(WorkerPool::new(1, 2));
+    let metrics = Arc::new(ServeMetrics::new());
+    let batcher = Batcher::spawn(
+        model,
+        pool.clone(),
+        metrics.clone(),
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(25), ..Default::default() },
+    );
+    let t0 = Instant::now();
+    let y = batcher.submit(vec![0.5; 6]).wait().unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(y.len(), 4);
+    // The batch cannot flush before its wait window closes (nothing else
+    // is coming), and must not hang waiting for 63 requests that never
+    // arrive.
+    assert!(elapsed >= Duration::from_millis(20), "flushed after {elapsed:?} — too early");
+    assert!(elapsed < Duration::from_secs(5), "flush-on-max_wait did not fire");
+    assert_eq!(metrics.batches.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.batched_inputs.load(Ordering::Relaxed), 1);
+    drop(batcher);
+}
+
+/// The serve metrics table carries the model-cache counters (the
+/// "rendered through report::table" contract).
+#[test]
+fn metrics_table_includes_cache_hit_rate() {
+    let dir = tmp_dir("metrics");
+    let path = dir.join("m.tenz");
+    let mut g = GaussianSource::new(13);
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 5, 1.0, &mut g)));
+    tf.write(&path).unwrap();
+
+    let server = Server::new(ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    for _ in 0..4 {
+        server.infer(&path, vec![1.0; 5]).unwrap();
+    }
+    let rendered = server.metrics().render(Some(server.cache())).render();
+    assert!(rendered.contains("model-cache hit rate"));
+    assert!(rendered.contains("75.0%"), "1 miss + 3 hits ⇒ 75%:\n{rendered}");
+    assert!(rendered.contains("p99 latency"));
+    let csv = server.metrics().render(Some(server.cache())).to_csv();
+    assert!(csv.contains("model-cache hits,3"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
