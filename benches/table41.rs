@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let qs: Vec<usize> = if fast { vec![1, 4] } else { vec![1, 2, 3, 4] };
     for model in [ModelKind::SynthVgg, ModelKind::SynthVit] {
         let opts = RsiOptions { seed: 42, ..Default::default() };
-        let out = match table_41(model, &alphas, &qs, BackendKind::Native, opts) {
+        let out = match table_41(model, &alphas, &qs, BackendKind::Native, opts, None) {
             Ok(t) => t,
             Err(e) => {
                 eprintln!("[skip] table41 needs artifacts: {e:#}");

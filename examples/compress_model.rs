@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     for model in [ModelKind::SynthVgg, ModelKind::SynthVit] {
         println!("=== {} ===", model.name());
         let opts = RsiOptions { seed: 42, ..Default::default() };
-        let out = experiments::table_41(model, alphas, qs, BackendKind::Native, opts)?;
+        let out = experiments::table_41(model, alphas, qs, BackendKind::Native, opts, None)?;
         println!("{}", out.table.render());
         println!("{}", out.runtime.render());
     }

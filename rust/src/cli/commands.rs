@@ -19,7 +19,7 @@ use crate::compress::plan::{CompressionPlan, Method};
 use crate::compress::rsi::RsiOptions;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::eval::ModelEvaluator;
-use crate::io::checkpoint::CheckpointReader;
+use crate::io::checkpoint::{CheckpointSource, WeightSource};
 use crate::model::ModelKind;
 use crate::report::write_report;
 use crate::runtime::{ArtifactRegistry, ExecutableCache};
@@ -34,6 +34,7 @@ rsic — low-rank compression of pretrained models via randomized subspace itera
 USAGE:
   rsic compress --model <synthvgg|synthvit> --alpha <a> [--q N] [--backend B] [--out F] [--validate]
                 [--method rsi|svd] [--ortho qr|cholqr2|ns[:N]] [--oversample P]
+                [--shard-size N[k|m|g]]       # write a sharded checkpoint (--out is a .toml manifest)
                 [--adaptive <budget-ratio>]   # section-5 adaptive layer-wise ranks
   rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
   rsic serve    --checkpoint F [--checkpoint F2 ...] [--requests N] [--clients C]
@@ -41,11 +42,14 @@ USAGE:
                 [--max-queue N] [--cache-cap K]
   rsic run <config.toml>                       # config-driven sweep (see configs/)
   rsic table 4.1  [--model vgg|vit|both] [--alphas L] [--qs L] [--backend B] [--out-dir D]
+                  [--checkpoint F]
   rsic figure <1.1|4.1|4.2> [--ranks L] [--qs L] [--trials N] [--out-dir D]
   rsic theorem  [--alpha a] [--q N]
   rsic spectrum --model M --layer L [--top N]
   rsic info
 Backends: native (default), xla (stepped Pallas artifacts), fused.
+Checkpoint paths (--checkpoint / --out) take either a single .tenz file or a
+sharded checkpoint's .toml manifest, transparently.
 Run `make artifacts` before any command that touches models or XLA.";
 
 /// Entry point used by main.rs. Returns the process exit code.
@@ -117,13 +121,30 @@ fn method_of(args: &Args) -> Result<Method> {
     }
 }
 
+/// Parse a human byte size: plain bytes, or `k`/`m`/`g` (also `kb`/`kib`
+/// etc., case-insensitive) binary suffixes — `--shard-size 64m`.
+fn parse_size(s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let digits = t.trim_end_matches(|c: char| !c.is_ascii_digit());
+    let mult: u64 = match &t[digits.len()..] {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        other => bail!("bad size suffix {other:?} in {s:?} (use k, m or g)"),
+    };
+    let n: u64 = digits.parse().with_context(|| format!("bad size {s:?}"))?;
+    n.checked_mul(mult).with_context(|| format!("size {s:?} overflows u64"))
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let model = model_of(args)?;
     let alpha = args.f64_or("alpha", 0.4)?;
-    // Lazy open: planning runs on the header index; weights materialize
-    // one per in-flight worker job, and the output streams to disk — the
-    // checkpoint is never fully resident in either direction.
-    let src = Arc::new(CheckpointReader::open(checkpoint_path(args, model)?)?);
+    // Lazy open (single .tenz or sharded manifest): planning runs on the
+    // header index; weights materialize one per in-flight worker job, and
+    // the output streams to disk — the checkpoint is never fully resident
+    // in either direction.
+    let src = Arc::new(CheckpointSource::open(checkpoint_path(args, model)?)?);
     let method = method_of(args)?;
     let plan = if let Some(budget) = args.opt("adaptive") {
         // Paper section 5 future work: adaptive layer-wise ranks from the
@@ -139,13 +160,26 @@ fn cmd_compress(args: &Args) -> Result<()> {
     } else {
         CompressionPlan::uniform_alpha(alpha, method)
     };
+    // --shard-size makes the output a sharded checkpoint: --out names the
+    // .toml manifest and shards roll next to it at the byte budget. A
+    // manifest --out without --shard-size still shards (one unbounded
+    // shard) — the path alone decides the format.
+    let shard_size = match args.opt("shard-size") {
+        Some(s) => Some(parse_size(s)?),
+        None => None,
+    };
+    let out = args
+        .str_or("out", if shard_size.is_some() { "compressed.toml" } else { "compressed.tenz" });
+    if shard_size.is_some() && !crate::io::shard::is_manifest_path(std::path::Path::new(out)) {
+        bail!("--shard-size writes a sharded checkpoint: --out must be a .toml manifest path, got {out:?}");
+    }
     let pipe = Pipeline::new(PipelineConfig {
         backend: backend_of(args)?,
         validate: args.flag("validate"),
         workers: args.usize_or("workers", crate::util::default_threads())?,
+        shard_size,
         ..Default::default()
     })?;
-    let out = args.str_or("out", "compressed.tenz");
     let report = pipe.compress_to_path(src.clone(), &plan, out)?;
     println!("{}", report.summary());
     for o in &report.outcomes {
@@ -168,32 +202,35 @@ fn cmd_compress(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "wrote {out} ({} tensors; {} payload reads from source)",
+        "wrote {out} ({} tensors across {} shard file{}; {} payload reads from source)",
         report.tensors_written,
-        src.tenz().payload_reads()
+        report.shards,
+        if report.shards == 1 { "" } else { "s" },
+        src.payload_reads()
     );
     Ok(())
 }
 
 
-/// Collect per-layer spectra from a checkpoint (shipped by aot.py as
-/// `<layer>.spectrum` f64 tensors), reading lazily: only spectrum entries
-/// are materialized unless a layer is missing one (then its weight is
-/// loaded for a local SVD fallback).
-fn spectra_of(src: &CheckpointReader) -> Result<Vec<crate::compress::LayerSpectrum>> {
+/// Collect per-layer spectra from any checkpoint source (shipped by
+/// aot.py as `<layer>.spectrum` f64 tensors), reading lazily: only
+/// spectrum entries are materialized unless a layer is missing one (then
+/// its weight is loaded for a local SVD fallback).
+fn spectra_of(src: &dyn WeightSource) -> Result<Vec<crate::compress::LayerSpectrum>> {
+    use crate::io::checkpoint::{layer_infos_from, load_weight_from};
     let mut out = Vec::new();
-    for info in src.layer_infos() {
+    for info in layer_infos_from(src) {
         let (c, d) = info.shape;
         let spec_key = format!("{}.spectrum", info.layer);
-        let spectrum: Vec<f64> = if src.tenz().contains(&spec_key) {
-            src.tenz()
-                .entry(&spec_key)?
+        let spectrum: Vec<f64> = if src.contains(&spec_key) {
+            src.entry(&spec_key)?
                 .bytes
                 .chunks_exact(8)
                 .map(|ch| f64::from_le_bytes(ch.try_into().unwrap()))
                 .collect()
         } else {
-            crate::linalg::svd::svd_via_gram(&src.load_weight(&info.layer)?.materialize()).s
+            crate::linalg::svd::svd_via_gram(&load_weight_from(src, &info.layer)?.materialize())
+                .s
         };
         out.push(crate::compress::LayerSpectrum { layer: info.layer, c, d, spectrum });
     }
@@ -202,10 +239,11 @@ fn spectra_of(src: &CheckpointReader) -> Result<Vec<crate::compress::LayerSpectr
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = model_of(args)?;
-    // Lazy open: only the tensors the forward artifact actually feeds are
-    // materialized — shipped spectrum side-tensors (and anything else the
-    // evaluation never reads) stay on disk.
-    let ckpt = CheckpointReader::open(checkpoint_path(args, model)?)?;
+    // Lazy open (single .tenz or sharded manifest): only the tensors the
+    // forward artifact actually feeds are materialized — shipped spectrum
+    // side-tensors (and anything else the evaluation never reads) stay on
+    // disk, and untouched shards are never even opened.
+    let ckpt = CheckpointSource::open(checkpoint_path(args, model)?)?;
     let registry = Arc::new(ArtifactRegistry::load_default()?);
     let cache = Arc::new(ExecutableCache::new());
     let evaluator = ModelEvaluator::load(&registry, &cache, model)?;
@@ -221,8 +259,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     );
     println!(
         "materialized {} of {} checkpoint tensors",
-        ckpt.tenz().payload_reads(),
-        ckpt.tenz().len()
+        ckpt.payload_reads(),
+        ckpt.tensor_count()
     );
     Ok(())
 }
@@ -307,6 +345,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         &cfg.sweep.qs,
         cfg.pipeline.backend,
         base,
+        None,
     )?;
     println!("{}", out.table.render());
     println!("{}", out.runtime.render());
@@ -333,8 +372,11 @@ fn cmd_table(args: &Args) -> Result<()> {
         "both" => vec![ModelKind::SynthVgg, ModelKind::SynthVit],
         m => vec![ModelKind::parse(m).context("bad --model")?],
     };
+    // An explicit checkpoint (single .tenz or sharded manifest) overrides
+    // the model's artifact-manifest entry.
+    let ckpt_override = args.opt("checkpoint").map(std::path::Path::new);
     for model in models {
-        let out = experiments::table_41(model, &alphas, &qs, backend, base)?;
+        let out = experiments::table_41(model, &alphas, &qs, backend, base, ckpt_override)?;
         println!("{}", out.table.render());
         println!("{}", out.runtime.render());
         let base = format!("{out_dir}/table41_{}", model.name());
@@ -441,6 +483,17 @@ mod tests {
     fn help_is_ok() {
         let args = Args::parse(["help".to_string()]);
         run(args).unwrap();
+    }
+
+    #[test]
+    fn size_parsing() {
+        assert_eq!(parse_size("4096").unwrap(), 4096);
+        assert_eq!(parse_size("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_size("2MiB").unwrap(), 2 << 20);
+        assert_eq!(parse_size("1g").unwrap(), 1 << 30);
+        assert!(parse_size("").is_err());
+        assert!(parse_size("x").is_err());
+        assert!(parse_size("64q").is_err());
     }
 
     #[test]

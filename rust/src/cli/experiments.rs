@@ -212,22 +212,31 @@ fn materialize_params(
 /// oversampling); each cell overrides `q` and derives its own seed. One
 /// pipeline (and therefore one worker pool) serves the whole grid. The
 /// checkpoint opens lazily; only the tensors the evaluation actually
-/// feeds are materialized.
+/// feeds are materialized. `checkpoint` overrides the model's
+/// artifact-manifest entry with an explicit path — a single `.tenz` or a
+/// sharded checkpoint's `.toml` manifest, transparently.
 pub fn table_41(
     model: ModelKind,
     alphas: &[f64],
     qs: &[usize],
     backend: BackendKind,
     base: RsiOptions,
+    checkpoint: Option<&std::path::Path>,
 ) -> Result<Table41Output> {
     let registry = Arc::new(ArtifactRegistry::load_default()?);
     let cache = Arc::new(ExecutableCache::new());
     let evaluator = ModelEvaluator::load(&registry, &cache, model)?;
     let def = crate::model::ModelDef::get(model);
-    let ckpt_entry = registry
-        .find_data(def.ckpt_file)
-        .with_context(|| format!("{} not in manifest", def.ckpt_file))?;
-    let src = crate::io::checkpoint::CheckpointReader::open(registry.abs_path(ckpt_entry))?;
+    let ckpt_path = match checkpoint {
+        Some(p) => p.to_path_buf(),
+        None => {
+            let ckpt_entry = registry
+                .find_data(def.ckpt_file)
+                .with_context(|| format!("{} not in manifest", def.ckpt_file))?;
+            registry.abs_path(ckpt_entry)
+        }
+    };
+    let src = crate::io::checkpoint::CheckpointSource::open(&ckpt_path)?;
     let ckpt = materialize_params(&src, &def)?;
 
     let baseline = evaluator.evaluate(&ckpt)?;
@@ -285,7 +294,7 @@ pub fn table_41(
         .row(&["executable-cache hit rate".into(), format!("{:.1}%", cache.hit_rate() * 100.0)]);
     runtime.row(&[
         "checkpoint tensors materialized".into(),
-        format!("{} of {}", src.tenz().payload_reads(), src.tenz().len()),
+        format!("{} of {}", src.payload_reads(), src.tensor_count()),
     ]);
     {
         use std::sync::atomic::Ordering;

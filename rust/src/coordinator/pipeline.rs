@@ -41,8 +41,9 @@ use crate::io::checkpoint::{
     factor_a_key, factor_b_key, layer_infos, layer_infos_for_names, load_weight_from,
     store_weight, weight_key, StoredWeight, WeightSource,
 };
-use crate::io::tenz::{TensorFile, TenzError};
-use crate::io::writer::TenzWriter;
+use crate::io::shard::{is_manifest_path, ShardedWriter};
+use crate::io::tenz::{DType, TensorFile, TenzError};
+use crate::io::writer::{EntrySink, TenzWriter};
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -64,6 +65,11 @@ pub struct PipelineConfig {
     /// failed tensors flow source → writer in chunks of at most this many
     /// bytes, so their peak residency is the chunk, never the tensor.
     pub passthrough_chunk: usize,
+    /// Per-shard byte budget when `compress_to_path` writes a sharded
+    /// checkpoint (the output path is a `.toml` manifest). `None` means
+    /// unbounded — a manifest output still gets a manifest, with one
+    /// shard. Ignored for single-file `.tenz` outputs.
+    pub shard_size: Option<u64>,
 }
 
 impl Default for PipelineConfig {
@@ -74,6 +80,7 @@ impl Default for PipelineConfig {
             backend: BackendKind::Native,
             validate: false,
             passthrough_chunk: 1 << 20,
+            shard_size: None,
         }
     }
 }
@@ -148,6 +155,9 @@ pub struct StreamReport {
     pub backend: &'static str,
     /// Entries written to the output container (passthrough + factors).
     pub tensors_written: usize,
+    /// Output shard count: 1 for a single `.tenz`, the number of shard
+    /// files behind the manifest for a sharded output.
+    pub shards: usize,
 }
 
 impl StreamReport {
@@ -169,6 +179,67 @@ impl StreamReport {
 
 /// What a worker returns for one layer job.
 type JobOutput = (LayerPlan, Result<(Factorization, f64, Option<f64>), String>);
+
+/// The streaming mode's output: one `.tenz` container, or a set of
+/// shards behind a manifest — chosen by the output path (`.toml` ⇒
+/// sharded). Both expose the same append/streamed-entry surface, so the
+/// write loop is oblivious; entries arrive in sorted order either way,
+/// which a [`ShardedWriter`] partitions into contiguous sorted runs (the
+/// write frontier is preserved *per shard*).
+enum CheckpointSink {
+    Single(TenzWriter),
+    Sharded(ShardedWriter),
+}
+
+impl CheckpointSink {
+    fn create(out: &Path, shard_size: Option<u64>) -> Result<Self, TenzError> {
+        if is_manifest_path(out) {
+            Ok(CheckpointSink::Sharded(ShardedWriter::create(
+                out,
+                shard_size.unwrap_or(u64::MAX),
+            )?))
+        } else {
+            Ok(CheckpointSink::Single(TenzWriter::create(out)?))
+        }
+    }
+
+    fn begin_entry(
+        &mut self,
+        name: &str,
+        dtype: DType,
+        dims: &[usize],
+    ) -> Result<EntrySink<'_>, TenzError> {
+        match self {
+            CheckpointSink::Single(w) => w.begin_entry(name, dtype, dims),
+            CheckpointSink::Sharded(w) => w.begin_entry(name, dtype, dims),
+        }
+    }
+
+    fn append_mat(&mut self, name: &str, m: &crate::tensor::Mat<f32>) -> Result<(), TenzError> {
+        match self {
+            CheckpointSink::Single(w) => w.append_mat(name, m),
+            CheckpointSink::Sharded(w) => w.append_mat(name, m),
+        }
+    }
+
+    fn tensors_written(&self) -> usize {
+        match self {
+            CheckpointSink::Single(w) => w.tensors_written(),
+            CheckpointSink::Sharded(w) => w.tensors_written(),
+        }
+    }
+
+    /// Commit the output; returns how many shard files back it.
+    fn finish(self) -> Result<usize, TenzError> {
+        match self {
+            CheckpointSink::Single(w) => {
+                w.finish()?;
+                Ok(1)
+            }
+            CheckpointSink::Sharded(w) => Ok(w.finish()?.shards.len()),
+        }
+    }
+}
 
 /// Decrements the resident-weight gauges even if factorization panics
 /// (the pool catches the panic; this guard runs during unwind).
@@ -434,7 +505,12 @@ impl Pipeline {
     ///
     /// Pass an `Arc<CheckpointReader>` (coerced to `Arc<dyn WeightSource>`)
     /// to stream from disk; an `Arc<TensorFile>` also works when the input
-    /// is already resident but the output should not be.
+    /// is already resident but the output should not be. Sharded
+    /// checkpoints work on both sides: an `Arc<CheckpointSource>` (or
+    /// `Arc<ShardedReader>`) streams from a manifest, and a `.toml`
+    /// output path writes one — shards roll at
+    /// [`PipelineConfig::shard_size`], passthrough stays chunk-streamed,
+    /// and failed layers still pass through.
     pub fn compress_to_path(
         &self,
         source: Arc<dyn WeightSource>,
@@ -511,8 +587,9 @@ impl Pipeline {
 
         // The writer is created before any job is submitted: an
         // immediately-detectable output-path failure costs zero
-        // factorization work.
-        let mut writer = TenzWriter::create(out.as_ref())?;
+        // factorization work. A `.toml` output path makes it a sharded
+        // checkpoint (manifest + shards); anything else a single `.tenz`.
+        let mut writer = CheckpointSink::create(out.as_ref(), self.config.shard_size)?;
 
         // Jobs are submitted in write order, never more than `window`
         // ahead of the write frontier: completed-but-unwritten results
@@ -594,7 +671,7 @@ impl Pipeline {
             outcomes_by_job[job_idx] = Some(outcome);
         }
         let tensors_written = writer.tensors_written();
-        writer.finish()?;
+        let shards = writer.finish()?;
         abort_guard.armed = false;
         drop(rx);
 
@@ -617,6 +694,7 @@ impl Pipeline {
             factorizer: factorizer.name(),
             backend: self.config.backend.name(),
             tensors_written,
+            shards,
         })
     }
 
@@ -628,7 +706,7 @@ impl Pipeline {
     fn copy_representation(
         &self,
         source: &dyn WeightSource,
-        writer: &mut TenzWriter,
+        writer: &mut CheckpointSink,
         layer: &str,
     ) -> Result<(), TenzError> {
         for key in [weight_key(layer), factor_a_key(layer), factor_b_key(layer)] {
@@ -648,11 +726,21 @@ impl Pipeline {
     fn copy_passthrough(
         &self,
         source: &dyn WeightSource,
-        writer: &mut TenzWriter,
+        writer: &mut CheckpointSink,
         name: &str,
     ) -> Result<(), TenzError> {
         let (dtype, dims) = match (source.dtype_of(name), source.dims_of(name)) {
             (Some(dtype), Some(dims)) => (dtype, dims),
+            _ if source.contains(name) => {
+                // The source *claims* the tensor but cannot describe it —
+                // on a sharded source that means a misrouted or unreadable
+                // shard. Materializing surfaces the real typed error
+                // (MisroutedTensor / Manifest / Io) instead of a
+                // misleading NotFound; the fallback covers a source whose
+                // metadata merely raced away.
+                source.entry(name)?;
+                return Err(TenzError::NotFound(name.into()));
+            }
             _ => return Err(TenzError::NotFound(name.into())),
         };
         let mut sink = writer.begin_entry(name, dtype, &dims)?;

@@ -18,9 +18,11 @@
 //!   checkpoints larger than RAM.
 
 use super::lazy::TenzReader;
+use super::shard::ShardedReader;
 use super::tenz::{DType, TensorEntry, TensorFile, TenzError};
 use crate::tensor::Mat;
 use std::path::Path;
+use std::time::SystemTime;
 
 /// Key helpers.
 pub fn weight_key(layer: &str) -> String {
@@ -234,6 +236,117 @@ impl WeightSource for CheckpointReader {
     }
     fn contains(&self, name: &str) -> bool {
         self.tenz.contains(name)
+    }
+}
+
+/// Any checkpoint on disk, single-file or sharded, behind one opener:
+/// `.toml` paths are shard manifests ([`ShardedReader`]), everything else
+/// a single `.tenz` container ([`CheckpointReader`]). This is what lets
+/// `rsic compress/eval/serve/table_41` take either form transparently.
+#[derive(Debug)]
+pub enum CheckpointSource {
+    Single(CheckpointReader),
+    Sharded(ShardedReader),
+}
+
+impl CheckpointSource {
+    /// Open a checkpoint, routing by path (see [`super::shard::is_manifest_path`]).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        let path = path.as_ref();
+        if super::shard::is_manifest_path(path) {
+            Ok(CheckpointSource::Sharded(ShardedReader::open(path)?))
+        } else {
+            Ok(CheckpointSource::Single(CheckpointReader::open(path)?))
+        }
+    }
+
+    /// Modification-time snapshot of every file backing the checkpoint at
+    /// open: one entry for a single container; the manifest followed by
+    /// every shard for a sharded one. Serve's model cache keys on this —
+    /// a touched *shard* must invalidate, not just the manifest.
+    pub fn modified_snapshot(&self) -> Vec<Option<SystemTime>> {
+        match self {
+            CheckpointSource::Single(r) => vec![r.modified()],
+            CheckpointSource::Sharded(s) => s.modified_snapshot(),
+        }
+    }
+
+    /// Tensors in the checkpoint (header/manifest metadata only).
+    pub fn tensor_count(&self) -> usize {
+        match self {
+            CheckpointSource::Single(r) => r.tenz().len(),
+            CheckpointSource::Sharded(s) => s.len(),
+        }
+    }
+
+    /// Payload materializations so far, summed across backing containers.
+    pub fn payload_reads(&self) -> u64 {
+        match self {
+            CheckpointSource::Single(r) => r.tenz().payload_reads(),
+            CheckpointSource::Sharded(s) => s.payload_reads(),
+        }
+    }
+
+    /// One header-only metadata pass (see [`layer_infos_from`]).
+    pub fn layer_infos(&self) -> Vec<LayerInfo> {
+        layer_infos_from(self)
+    }
+
+    /// Materialize the weight for one layer, preferring factored form.
+    pub fn load_weight(&self, layer: &str) -> Result<StoredWeight, TenzError> {
+        load_weight_from(self, layer)
+    }
+}
+
+impl WeightSource for CheckpointSource {
+    fn tensor_names(&self) -> Vec<String> {
+        match self {
+            CheckpointSource::Single(r) => WeightSource::tensor_names(r),
+            CheckpointSource::Sharded(s) => WeightSource::tensor_names(s),
+        }
+    }
+    fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
+        match self {
+            CheckpointSource::Single(r) => WeightSource::dims_of(r, name),
+            CheckpointSource::Sharded(s) => WeightSource::dims_of(s, name),
+        }
+    }
+    fn dtype_of(&self, name: &str) -> Option<DType> {
+        match self {
+            CheckpointSource::Single(r) => WeightSource::dtype_of(r, name),
+            CheckpointSource::Sharded(s) => WeightSource::dtype_of(s, name),
+        }
+    }
+    fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
+        match self {
+            CheckpointSource::Single(r) => WeightSource::entry(r, name),
+            CheckpointSource::Sharded(s) => WeightSource::entry(s, name),
+        }
+    }
+    fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
+        match self {
+            CheckpointSource::Single(r) => WeightSource::mat(r, name),
+            CheckpointSource::Sharded(s) => WeightSource::mat(s, name),
+        }
+    }
+    fn copy_payload_chunked(
+        &self,
+        name: &str,
+        chunk_bytes: usize,
+        sink: &mut dyn FnMut(&[u8]) -> Result<(), TenzError>,
+    ) -> Result<(), TenzError> {
+        match self {
+            CheckpointSource::Single(r) => r.copy_payload_chunked(name, chunk_bytes, sink),
+            CheckpointSource::Sharded(s) => {
+                WeightSource::copy_payload_chunked(s, name, chunk_bytes, sink)
+            }
+        }
+    }
+    fn contains(&self, name: &str) -> bool {
+        match self {
+            CheckpointSource::Single(r) => WeightSource::contains(r, name),
+            CheckpointSource::Sharded(s) => WeightSource::contains(s, name),
+        }
     }
 }
 

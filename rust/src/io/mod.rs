@@ -7,13 +7,21 @@
 //! [`TenzReader`] for checkpoints that should stream from disk, and
 //! append-mode [`TenzWriter`] for outputs produced layer-by-layer. See
 //! `io::tenz` module docs for the eager-vs-lazy decision rule.
+//!
+//! Above the single-container layer, [`shard`] scales a checkpoint to a
+//! *set* of `.tenz` shards behind one TOML manifest ([`ShardManifest`]):
+//! [`ShardedReader`]/[`ShardedWriter`] mirror the lazy reader / streaming
+//! writer contracts per shard, and [`CheckpointSource`] routes any
+//! checkpoint path (single file or manifest) to the right reader.
 
 pub mod checkpoint;
 pub mod lazy;
+pub mod shard;
 pub mod tenz;
 pub mod writer;
 
-pub use checkpoint::{CheckpointReader, WeightSource};
+pub use checkpoint::{CheckpointReader, CheckpointSource, WeightSource};
 pub use lazy::TenzReader;
+pub use shard::{ShardManifest, ShardedReader, ShardedWriter};
 pub use tenz::{DType, TensorEntry, TensorFile, TensorMeta};
 pub use writer::TenzWriter;

@@ -1,0 +1,850 @@
+//! Sharded multi-file checkpoints: N `.tenz` shards behind one manifest.
+//!
+//! A single `.tenz` container streams (PR 2) but is still one file — one
+//! filesystem object, one size ceiling, one unit of transfer. A *sharded*
+//! checkpoint is a set of `.tenz` shard files plus a TOML manifest
+//! sidecar (parsed with the same `config::toml` subset parser the
+//! experiment configs use) that records, per shard: the file name, its
+//! exact byte size, an FNV-1a content hash of its entry region, and the
+//! tensors it holds. The manifest is the unit a caller names; everything
+//! else routes through it.
+//!
+//! * [`ShardManifest`] — the sidecar: parse/render/load/write (atomic via
+//!   a temp sibling, like every `.tenz` write).
+//! * [`ShardedReader`] — implements
+//!   [`WeightSource`](super::checkpoint::WeightSource) by routing each
+//!   tensor to its shard's [`TenzReader`], opened lazily on first touch,
+//!   so opening a 100-shard checkpoint to read one tensor costs one
+//!   manifest parse + N stats + one O(header) shard open.
+//! * [`ShardedWriter`] — mirrors [`TenzWriter`]'s append/streamed-entry
+//!   API, rolling to a new shard when the size budget would be exceeded,
+//!   and emitting the manifest on `finish`.
+//!
+//! Invariants:
+//!
+//! * Tensor names are unique across the whole checkpoint; shards
+//!   partition the sorted name order into contiguous runs, so each shard
+//!   is itself a sorted-append `.tenz` (byte-identical to an eager write
+//!   of its subset) and the manifest's global order is the sorted order.
+//! * An entry never spans shards; a tensor larger than the budget gets a
+//!   shard to itself.
+//! * The manifest is written last, atomically, after every shard it
+//!   names is fully in place — a reader never sees a manifest pointing
+//!   at a half-written shard. Torn states from an interrupted `finish`
+//!   (or a stale manifest next to rewritten shards) are caught at open
+//!   by the per-shard byte-size check, and by [`verify_hashes`]
+//!   (`ShardedReader::verify_hashes`) for content-level rot.
+//! * Corruption surfaces as typed [`TenzError`]s — `Manifest`,
+//!   `MissingShard`, `ShardHashMismatch`, `MisroutedTensor`,
+//!   `DuplicateAcrossShards` — never as a panic.
+
+use super::lazy::TenzReader;
+use super::tenz::{
+    tmp_sibling, validate_entry, validate_meta, DType, Fnv1a, TensorEntry, TensorFile, TenzError,
+    MAGIC,
+};
+use super::writer::{EntrySink, TenzWriter};
+use crate::config::toml::TomlDoc;
+use crate::tensor::Mat;
+use std::collections::{BTreeMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+use std::time::SystemTime;
+
+/// Manifest schema version this build reads and writes.
+pub const MANIFEST_VERSION: i64 = 1;
+
+/// Checkpoint paths route by extension: a `.toml` path is a shard
+/// manifest, anything else is a single `.tenz` container. This is the
+/// one rule `rsic compress/eval/serve/table_41` all share.
+pub fn is_manifest_path(path: &Path) -> bool {
+    path.extension().is_some_and(|e| e.eq_ignore_ascii_case("toml"))
+}
+
+/// One shard as the manifest records it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Shard file name, relative to the manifest's directory.
+    pub file: String,
+    /// Exact on-disk size of the shard file.
+    pub bytes: u64,
+    /// FNV-1a 64 of the shard's entry region (every byte after the
+    /// 12-byte magic+count preamble). The preamble is excluded so the
+    /// writer can hash incrementally while streaming — the leading count
+    /// is patched only at shard close. `finish`-time size + open-time
+    /// structural validation cover the preamble.
+    pub hash: u64,
+    /// Tensor names stored in this shard, in sorted order.
+    pub tensors: Vec<String>,
+}
+
+/// The manifest sidecar: an ordered list of shards. Tensor → shard
+/// routing is derived (and duplicate-checked) by [`route`](Self::route).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ShardManifest {
+    pub shards: Vec<ShardEntry>,
+}
+
+fn toml_quote(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+/// Names the TOML subset can round-trip inside quotes. Control
+/// characters would span lines; the quote/backslash escapes are the only
+/// ones the parser understands, and `#` inside strings is already safe.
+fn manifest_representable(name: &str) -> bool {
+    !name.chars().any(|c| c.is_control())
+}
+
+impl ShardManifest {
+    /// Render as TOML (the exact text [`write`](Self::write) emits).
+    pub fn to_toml_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# rsic sharded-checkpoint manifest (DESIGN.md §Sharded-Checkpoints)\n");
+        out.push_str(&format!("version = {MANIFEST_VERSION}\n"));
+        out.push_str(&format!("shards = {}\n", self.shards.len()));
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!("\n[shard.{i}]\n"));
+            out.push_str(&format!("file = {}\n", toml_quote(&s.file)));
+            out.push_str(&format!("bytes = {}\n", s.bytes));
+            out.push_str(&format!("hash = \"{:016x}\"\n", s.hash));
+            let tensors: Vec<String> = s.tensors.iter().map(|t| toml_quote(t)).collect();
+            out.push_str(&format!("tensors = [{}]\n", tensors.join(", ")));
+        }
+        out
+    }
+
+    /// Parse manifest text. Structural problems (bad TOML, unsupported
+    /// version, missing keys, malformed hashes, negative sizes) are all
+    /// `TenzError::Manifest` — typed, never a panic.
+    pub fn parse(text: &str) -> Result<Self, TenzError> {
+        let doc = TomlDoc::parse(text).map_err(|e| TenzError::Manifest(e.to_string()))?;
+        let version = doc.int("version").map_err(|e| TenzError::Manifest(e.to_string()))?;
+        if version != MANIFEST_VERSION {
+            return Err(TenzError::Manifest(format!(
+                "unsupported manifest version {version} (this build reads {MANIFEST_VERSION})"
+            )));
+        }
+        let count = doc.int("shards").map_err(|e| TenzError::Manifest(e.to_string()))?;
+        let count = usize::try_from(count)
+            .map_err(|_| TenzError::Manifest(format!("negative shard count {count}")))?;
+        let mut shards = Vec::with_capacity(count.min(4096));
+        for i in 0..count {
+            let file = doc
+                .str(&format!("shard.{i}.file"))
+                .map_err(|e| TenzError::Manifest(e.to_string()))?
+                .to_string();
+            let bytes = doc
+                .int(&format!("shard.{i}.bytes"))
+                .map_err(|e| TenzError::Manifest(e.to_string()))?;
+            let bytes = u64::try_from(bytes).map_err(|_| {
+                TenzError::Manifest(format!("shard {file:?}: negative byte size {bytes}"))
+            })?;
+            let hash_hex = doc
+                .str(&format!("shard.{i}.hash"))
+                .map_err(|e| TenzError::Manifest(e.to_string()))?;
+            let hash = u64::from_str_radix(hash_hex, 16).map_err(|_| {
+                TenzError::Manifest(format!("shard {file:?}: bad hash {hash_hex:?}"))
+            })?;
+            let tensors_val = doc
+                .get(&format!("shard.{i}.tensors"))
+                .ok_or_else(|| TenzError::Manifest(format!("shard {file:?}: missing tensors")))?;
+            let arr = tensors_val.as_array().ok_or_else(|| {
+                TenzError::Manifest(format!("shard {file:?}: tensors is not an array"))
+            })?;
+            let tensors = arr
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        TenzError::Manifest(format!("shard {file:?}: non-string tensor name"))
+                    })
+                })
+                .collect::<Result<Vec<String>, TenzError>>()?;
+            shards.push(ShardEntry { file, bytes, hash, tensors });
+        }
+        Ok(ShardManifest { shards })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    /// Write atomically via a temp sibling, like every `.tenz` write.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<(), TenzError> {
+        let path = path.as_ref();
+        let tmp = tmp_sibling(path);
+        let written: std::io::Result<()> = (|| {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(self.to_toml_string().as_bytes())?;
+            f.sync_all()
+        })();
+        if let Err(e) = written {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Total tensors across shards.
+    pub fn tensor_count(&self) -> usize {
+        self.shards.iter().map(|s| s.tensors.len()).sum()
+    }
+
+    /// Build the tensor → shard-index routing table, refusing manifests
+    /// that list one tensor in two shards (or twice in one).
+    pub fn route(&self) -> Result<BTreeMap<String, usize>, TenzError> {
+        let mut map: BTreeMap<String, usize> = BTreeMap::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            for t in &s.tensors {
+                if let Some(prev) = map.insert(t.clone(), i) {
+                    return Err(TenzError::DuplicateAcrossShards {
+                        name: t.clone(),
+                        first: self.shards[prev].file.clone(),
+                        second: s.file.clone(),
+                    });
+                }
+            }
+        }
+        Ok(map)
+    }
+}
+
+/// Deterministic shard file name for slot `idx` of a checkpoint whose
+/// manifest stem is `stem` (e.g. `model-00003.tenz` for `model.toml`).
+pub fn shard_file_name(stem: &str, idx: usize) -> String {
+    format!("{stem}-{idx:05}.tenz")
+}
+
+/// Lazy reader over a sharded checkpoint: one manifest, per-shard
+/// [`TenzReader`]s opened on first touch. Implements `WeightSource`, so
+/// the streaming pipeline, the evaluator and the serve loader consume
+/// sharded checkpoints exactly like single files.
+///
+/// `open` costs the manifest parse plus one `stat` per shard (existence
+/// and declared-size check — this is what catches a truncated final
+/// shard or a stale-manifest/new-shards torn state immediately); no
+/// shard file is read until a tensor routed to it is touched. Content
+/// hashes are *not* checked at open — that is O(checkpoint) I/O — call
+/// [`verify_hashes`](Self::verify_hashes) when end-to-end integrity is
+/// worth a full read pass.
+#[derive(Debug)]
+pub struct ShardedReader {
+    manifest_path: PathBuf,
+    dir: PathBuf,
+    manifest: ShardManifest,
+    route: BTreeMap<String, usize>,
+    readers: Vec<OnceLock<TenzReader>>,
+    manifest_mtime: Option<SystemTime>,
+    shard_mtimes: Vec<Option<SystemTime>>,
+}
+
+impl ShardedReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        let manifest_path = path.as_ref().to_path_buf();
+        let manifest_mtime =
+            std::fs::metadata(&manifest_path).ok().and_then(|m| m.modified().ok());
+        let manifest = ShardManifest::load(&manifest_path)?;
+        let dir = manifest_path
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let route = manifest.route()?;
+        let mut shard_mtimes = Vec::with_capacity(manifest.shards.len());
+        for s in &manifest.shards {
+            let p = dir.join(&s.file);
+            let md = std::fs::metadata(&p).map_err(|e| TenzError::MissingShard {
+                file: s.file.clone(),
+                detail: e.to_string(),
+            })?;
+            if md.len() != s.bytes {
+                return Err(TenzError::Manifest(format!(
+                    "shard {:?}: {} bytes on disk, manifest declares {} (truncated or stale shard)",
+                    s.file,
+                    md.len(),
+                    s.bytes
+                )));
+            }
+            shard_mtimes.push(md.modified().ok());
+        }
+        let readers = (0..manifest.shards.len()).map(|_| OnceLock::new()).collect();
+        Ok(ShardedReader {
+            manifest_path,
+            dir,
+            manifest,
+            route,
+            readers,
+            manifest_mtime,
+            shard_mtimes,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.manifest_path
+    }
+
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.manifest.shards.len()
+    }
+
+    /// Total tensors across all shards (from the manifest — no shard I/O).
+    pub fn len(&self) -> usize {
+        self.route.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.route.is_empty()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.route.contains_key(name)
+    }
+
+    /// Sorted tensor names (manifest only — no shard I/O).
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.route.keys().map(|s| s.as_str())
+    }
+
+    /// Open-time modification snapshot of every backing file: the
+    /// manifest first, then each shard in manifest order. Serve's model
+    /// cache keys on this, so touching *any* shard invalidates, not just
+    /// the manifest.
+    pub fn modified_snapshot(&self) -> Vec<Option<SystemTime>> {
+        let mut v = Vec::with_capacity(1 + self.shard_mtimes.len());
+        v.push(self.manifest_mtime);
+        v.extend(self.shard_mtimes.iter().copied());
+        v
+    }
+
+    /// How many shards have actually been opened so far — the laziness
+    /// gauge tests assert against.
+    pub fn shards_opened(&self) -> usize {
+        self.readers.iter().filter(|r| r.get().is_some()).count()
+    }
+
+    /// Payload materializations summed across the shards opened so far.
+    pub fn payload_reads(&self) -> u64 {
+        self.readers.iter().filter_map(|r| r.get()).map(|r| r.payload_reads()).sum()
+    }
+
+    /// The shard reader for `idx`, opening it on first touch. Opening
+    /// cross-checks the manifest's routing against the shard's own
+    /// header index: a tensor the manifest routes here but the shard
+    /// lacks is `MisroutedTensor`; a shard holding tensors the manifest
+    /// doesn't list is a `Manifest` count mismatch.
+    fn reader(&self, idx: usize) -> Result<&TenzReader, TenzError> {
+        if let Some(r) = self.readers[idx].get() {
+            return Ok(r);
+        }
+        let entry = &self.manifest.shards[idx];
+        let r = TenzReader::open(self.dir.join(&entry.file))?;
+        for t in &entry.tensors {
+            if !r.contains(t) {
+                return Err(TenzError::MisroutedTensor {
+                    name: t.clone(),
+                    file: entry.file.clone(),
+                });
+            }
+        }
+        if r.len() != entry.tensors.len() {
+            return Err(TenzError::Manifest(format!(
+                "shard {:?} holds {} tensors, manifest lists {}",
+                entry.file,
+                r.len(),
+                entry.tensors.len()
+            )));
+        }
+        // Two threads may race the open; the first insert wins and the
+        // loser's reader is dropped — same first-wins rule as the model
+        // cache.
+        Ok(self.readers[idx].get_or_init(|| r))
+    }
+
+    /// Full integrity pass: re-read every shard and compare its entry
+    /// region's FNV-1a against the manifest. O(checkpoint) I/O — this is
+    /// the deliberate, explicit check; `open` stays O(stat).
+    pub fn verify_hashes(&self) -> Result<(), TenzError> {
+        use std::io::Read;
+        for s in &self.manifest.shards {
+            let p = self.dir.join(&s.file);
+            let mut f = std::fs::File::open(&p).map_err(|e| TenzError::MissingShard {
+                file: s.file.clone(),
+                detail: e.to_string(),
+            })?;
+            let mut preamble = [0u8; 12];
+            f.read_exact(&mut preamble).map_err(|_| {
+                TenzError::Manifest(format!("shard {:?} shorter than its preamble", s.file))
+            })?;
+            if preamble[..MAGIC.len()] != MAGIC[..] {
+                return Err(TenzError::BadMagic);
+            }
+            let mut hasher = Fnv1a::new();
+            let mut total = preamble.len() as u64;
+            let mut buf = vec![0u8; 1 << 16];
+            loop {
+                let n = f.read(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                hasher.update(&buf[..n]);
+                total += n as u64;
+            }
+            if total != s.bytes {
+                return Err(TenzError::Manifest(format!(
+                    "shard {:?}: {} bytes on disk, manifest declares {}",
+                    s.file, total, s.bytes
+                )));
+            }
+            let got = hasher.finish();
+            if got != s.hash {
+                return Err(TenzError::ShardHashMismatch {
+                    file: s.file.clone(),
+                    want: s.hash,
+                    got,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the whole sharded checkpoint as one eager
+    /// [`TensorFile`] — the escape hatch, mirroring `TenzReader::read_all`.
+    pub fn read_all(&self) -> Result<TensorFile, TenzError> {
+        let mut tf = TensorFile::new();
+        for (name, &idx) in &self.route {
+            tf.insert(name.clone(), self.reader(idx)?.entry(name)?);
+        }
+        Ok(tf)
+    }
+
+    fn entry_impl(&self, name: &str) -> Result<TensorEntry, TenzError> {
+        let idx =
+            *self.route.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        self.reader(idx)?.entry(name)
+    }
+}
+
+impl super::checkpoint::WeightSource for ShardedReader {
+    // Contract caveat: `dims_of`/`dtype_of` return Option, so a shard
+    // that fails to open (misrouted, corrupt) reads as `None` here even
+    // though `contains` is true — metadata callers cannot distinguish
+    // "absent" from "broken". Materializing paths (`entry`/`mat`/
+    // `copy_payload_chunked`) surface the real typed error, and the
+    // pipeline's passthrough copy deliberately probes `entry` when a
+    // contained tensor has no metadata, so corruption is never reduced
+    // to a silent skip end to end.
+    fn tensor_names(&self) -> Vec<String> {
+        self.route.keys().cloned().collect()
+    }
+    fn dims_of(&self, name: &str) -> Option<Vec<usize>> {
+        let idx = *self.route.get(name)?;
+        self.reader(idx).ok()?.meta(name).map(|m| m.dims.clone())
+    }
+    fn dtype_of(&self, name: &str) -> Option<DType> {
+        let idx = *self.route.get(name)?;
+        self.reader(idx).ok()?.meta(name).map(|m| m.dtype)
+    }
+    fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
+        self.entry_impl(name)
+    }
+    fn mat(&self, name: &str) -> Result<Mat<f32>, TenzError> {
+        let idx =
+            *self.route.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        self.reader(idx)?.mat(name)
+    }
+    fn copy_payload_chunked(
+        &self,
+        name: &str,
+        chunk_bytes: usize,
+        sink: &mut dyn FnMut(&[u8]) -> Result<(), TenzError>,
+    ) -> Result<(), TenzError> {
+        let idx =
+            *self.route.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
+        self.reader(idx)?.copy_payload_chunked(name, chunk_bytes, sink)
+    }
+    fn contains(&self, name: &str) -> bool {
+        self.route.contains_key(name)
+    }
+}
+
+/// Streaming writer for sharded checkpoints: the same append/streamed-
+/// entry surface as [`TenzWriter`], plus a byte budget. When appending
+/// an entry would push the current shard past `budget` (and the shard
+/// already holds at least one entry), the shard is closed and a new one
+/// begun — so every shard except possibly the last is ≤ budget, unless a
+/// single entry alone exceeds it (that entry gets its own shard).
+///
+/// Shards are written next to the manifest as `<stem>-NNNNN.tenz`, via
+/// `.part` staging names; `finish` renames them into place and then
+/// writes the manifest last, atomically. A writer dropped without
+/// `finish` removes its staged parts and never touches the manifest.
+///
+/// Bookkeeping (names, tensor lists, counters) is updated optimistically
+/// before the inner writer acts: any path on which an entry does not
+/// complete leaves the underlying `TenzWriter` poisoned, so `finish`
+/// refuses and the stale bookkeeping is never observable in a manifest.
+#[derive(Debug)]
+pub struct ShardedWriter {
+    manifest_path: PathBuf,
+    dir: PathBuf,
+    stem: String,
+    budget: u64,
+    current: Option<TenzWriter>,
+    current_file: String,
+    current_part: PathBuf,
+    current_tensors: Vec<String>,
+    done: Vec<ShardEntry>,
+    part_paths: Vec<PathBuf>,
+    names: HashSet<String>,
+    total: usize,
+}
+
+impl ShardedWriter {
+    /// Start a sharded checkpoint at `manifest_path` with `shard_budget`
+    /// bytes per shard (`u64::MAX` for a single unbounded shard). The
+    /// first shard's writer opens eagerly, so an unwritable destination
+    /// fails before any upstream work is spent — same contract as
+    /// `TenzWriter::create`.
+    pub fn create(
+        manifest_path: impl AsRef<Path>,
+        shard_budget: u64,
+    ) -> Result<Self, TenzError> {
+        let manifest_path = manifest_path.as_ref().to_path_buf();
+        let dir = manifest_path
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let stem = manifest_path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("checkpoint")
+            .to_string();
+        let mut w = ShardedWriter {
+            manifest_path,
+            dir,
+            stem,
+            budget: shard_budget.max(1),
+            current: None,
+            current_file: String::new(),
+            current_part: PathBuf::new(),
+            current_tensors: Vec::new(),
+            done: Vec::new(),
+            part_paths: Vec::new(),
+            names: HashSet::new(),
+            total: 0,
+        };
+        w.roll()?;
+        Ok(w)
+    }
+
+    /// Tensors appended so far, across all shards.
+    pub fn tensors_written(&self) -> usize {
+        self.total
+    }
+
+    /// Shards started so far (closed + the one being written).
+    pub fn shards_started(&self) -> usize {
+        self.done.len() + usize::from(self.current.is_some())
+    }
+
+    /// Close the current shard (if any) and record its manifest entry.
+    fn close_current(&mut self) -> Result<(), TenzError> {
+        if let Some(w) = self.current.take() {
+            let entry = ShardEntry {
+                file: std::mem::take(&mut self.current_file),
+                bytes: w.bytes_written(),
+                hash: w.entry_hash(),
+                tensors: std::mem::take(&mut self.current_tensors),
+            };
+            w.finish()?;
+            self.done.push(entry);
+            self.part_paths.push(std::mem::take(&mut self.current_part));
+        }
+        Ok(())
+    }
+
+    /// Close the current shard and open the next one's staged writer.
+    fn roll(&mut self) -> Result<(), TenzError> {
+        self.close_current()?;
+        let file = shard_file_name(&self.stem, self.done.len());
+        let part = self.dir.join(format!("{file}.part"));
+        self.current = Some(TenzWriter::create(&part)?);
+        self.current_file = file;
+        self.current_part = part;
+        Ok(())
+    }
+
+    /// Begin a streamed entry (see [`TenzWriter::begin_entry`]), rolling
+    /// to a new shard first if this entry would exceed the budget.
+    pub fn begin_entry(
+        &mut self,
+        name: &str,
+        dtype: DType,
+        dims: &[usize],
+    ) -> Result<EntrySink<'_>, TenzError> {
+        if !manifest_representable(name) {
+            return Err(TenzError::Manifest(format!(
+                "tensor name {name:?} contains control characters and cannot be \
+                 recorded in a shard manifest"
+            )));
+        }
+        let nbytes = validate_meta(name, dtype, dims)?;
+        if !self.names.insert(name.to_string()) {
+            return Err(TenzError::DuplicateName(name.into()));
+        }
+        // name_len u16 | name | dtype u8 | ndim u8 | dims u64×ndim
+        let header_len = (2 + name.len() + 2 + 8 * dims.len()) as u64;
+        let entry_total = header_len.saturating_add(nbytes);
+        let cur = self.current.as_ref().expect("ShardedWriter always holds a shard writer");
+        if cur.tensors_written() > 0
+            && cur.bytes_written().saturating_add(entry_total) > self.budget
+        {
+            self.roll()?;
+        }
+        self.current_tensors.push(name.to_string());
+        self.total += 1;
+        self.current
+            .as_mut()
+            .expect("roll leaves a shard writer in place")
+            .begin_entry(name, dtype, dims)
+    }
+
+    /// Append one complete entry (validated fully before any byte hits
+    /// disk, like `TenzWriter::append`).
+    pub fn append(&mut self, name: &str, e: &TensorEntry) -> Result<(), TenzError> {
+        validate_entry(name, e)?;
+        let mut sink = self.begin_entry(name, e.dtype, &e.dims)?;
+        sink.write(&e.bytes)?;
+        sink.finish()
+    }
+
+    /// Append a matrix as f32.
+    pub fn append_mat(&mut self, name: &str, m: &Mat<f32>) -> Result<(), TenzError> {
+        self.append(name, &TensorEntry::from_f32(vec![m.rows(), m.cols()], m.data()))
+    }
+
+    /// Close the last shard, rename every staged shard into place, then
+    /// write the manifest — last and atomically, so the manifest never
+    /// names a shard that is not fully on disk. Returns the manifest.
+    pub fn finish(mut self) -> Result<ShardManifest, TenzError> {
+        self.close_current()?;
+        for (entry, part) in self.done.iter().zip(&self.part_paths) {
+            std::fs::rename(part, self.dir.join(&entry.file))?;
+        }
+        // Renames all landed: nothing staged remains for Drop to remove.
+        self.part_paths.clear();
+        let manifest = ShardManifest { shards: std::mem::take(&mut self.done) };
+        manifest.write(&self.manifest_path)?;
+        Ok(manifest)
+    }
+}
+
+impl Drop for ShardedWriter {
+    fn drop(&mut self) {
+        // The in-progress TenzWriter cleans its own `.part.tmp`; staged
+        // `.part` files are ours to remove. Already-renamed shards (an
+        // interrupted `finish`) stay — the manifest was never written, so
+        // nothing points at them, and a later `finish` of the same stem
+        // overwrites them.
+        for p in &self.part_paths {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::WeightSource;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tenz_shard_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample() -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.insert_mat("layers.0.weight", &Mat::from_fn(4, 6, |r, c| (r * 6 + c) as f32));
+        tf.insert("layers.0.bias", TensorEntry::from_f32(vec![4], &[0.5; 4]));
+        tf.insert("labels", TensorEntry::from_i32(vec![3], &[7, -1, 2]));
+        tf
+    }
+
+    fn write_sharded(dir: &Path, name: &str, tf: &TensorFile, budget: u64) -> PathBuf {
+        let manifest = dir.join(name);
+        let mut w = ShardedWriter::create(&manifest, budget).unwrap();
+        for n in tf.names().map(str::to_string).collect::<Vec<_>>() {
+            w.append(&n, tf.get(&n).unwrap()).unwrap();
+        }
+        w.finish().unwrap();
+        manifest
+    }
+
+    #[test]
+    fn manifest_text_roundtrip() {
+        let m = ShardManifest {
+            shards: vec![
+                ShardEntry {
+                    file: "m-00000.tenz".into(),
+                    bytes: 1234,
+                    hash: 0xdead_beef_0102_0304,
+                    tensors: vec!["a.weight".into(), "b \"q\" \\ #x".into()],
+                },
+                ShardEntry {
+                    file: "m-00001.tenz".into(),
+                    bytes: 9,
+                    hash: 7,
+                    tensors: vec![],
+                },
+            ],
+        };
+        let back = ShardManifest::parse(&m.to_toml_string()).unwrap();
+        assert_eq!(back, m);
+        let route = back.route().unwrap();
+        assert_eq!(route.get("a.weight"), Some(&0));
+        assert_eq!(back.tensor_count(), 2);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_documents() {
+        assert!(matches!(ShardManifest::parse("not toml ["), Err(TenzError::Manifest(_))));
+        assert!(matches!(
+            ShardManifest::parse("version = 99\nshards = 0\n"),
+            Err(TenzError::Manifest(_))
+        ));
+        assert!(matches!(
+            ShardManifest::parse("version = 1\nshards = 1\n"),
+            Err(TenzError::Manifest(_))
+        ));
+        let bad_hash = "version = 1\nshards = 1\n[shard.0]\nfile = \"x.tenz\"\nbytes = 1\nhash = \"zzz\"\ntensors = []\n";
+        assert!(matches!(ShardManifest::parse(bad_hash), Err(TenzError::Manifest(_))));
+        let dup = ShardManifest {
+            shards: vec![
+                ShardEntry { file: "a".into(), bytes: 0, hash: 0, tensors: vec!["t".into()] },
+                ShardEntry { file: "b".into(), bytes: 0, hash: 0, tensors: vec!["t".into()] },
+            ],
+        };
+        assert!(matches!(dup.route(), Err(TenzError::DuplicateAcrossShards { .. })));
+    }
+
+    #[test]
+    fn roundtrip_across_budgets() {
+        let dir = tmp_dir("budgets");
+        let tf = sample();
+        // Entry sizes (header+payload): labels 30 B, layers.0.bias 41 B,
+        // layers.0.weight 131 B, plus a 12 B preamble per shard — so a
+        // 96 B budget packs the first two together and rolls for the
+        // weight.
+        for (tag, budget, want_shards) in
+            [("one", 1u64, 3usize), ("tiny", 96, 2), ("inf", u64::MAX, 1)]
+        {
+            let manifest = write_sharded(&dir, &format!("m_{tag}.toml"), &tf, budget);
+            let r = ShardedReader::open(&manifest).unwrap();
+            assert_eq!(r.shard_count(), want_shards, "budget {budget}");
+            assert_eq!(r.len(), 3);
+            r.verify_hashes().unwrap();
+            assert_eq!(r.read_all().unwrap().to_bytes(), tf.to_bytes(), "budget {budget}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unbounded_shard_bit_identical_to_single_file() {
+        let dir = tmp_dir("bitident");
+        let tf = sample();
+        let single = dir.join("single.tenz");
+        tf.write(&single).unwrap();
+        let manifest = write_sharded(&dir, "m.toml", &tf, u64::MAX);
+        let m = ShardManifest::load(&manifest).unwrap();
+        assert_eq!(m.shards.len(), 1);
+        let shard = dir.join(&m.shards[0].file);
+        assert_eq!(
+            std::fs::read(&shard).unwrap(),
+            std::fs::read(&single).unwrap(),
+            "a one-shard checkpoint must be byte-identical to the single-file container"
+        );
+        assert_eq!(m.shards[0].bytes, std::fs::metadata(&shard).unwrap().len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reader_is_lazy_per_shard() {
+        let dir = tmp_dir("lazy");
+        let tf = sample();
+        let manifest = write_sharded(&dir, "m.toml", &tf, 1); // one tensor per shard
+        let r = ShardedReader::open(&manifest).unwrap();
+        assert_eq!(r.shard_count(), 3);
+        assert_eq!(r.shards_opened(), 0, "open must not touch shard files beyond stat");
+        assert!(r.contains("labels"));
+        let _ = WeightSource::entry(&r, "labels").unwrap();
+        assert_eq!(r.shards_opened(), 1, "one tensor read opens exactly its shard");
+        assert_eq!(r.payload_reads(), 1);
+        // Header-only queries open the shard but read no payload.
+        assert_eq!(WeightSource::dims_of(&r, "layers.0.weight").unwrap(), vec![4, 6]);
+        assert_eq!(r.shards_opened(), 2);
+        assert_eq!(r.payload_reads(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn writer_rejects_duplicates_and_bad_names() {
+        let dir = tmp_dir("dup");
+        let mut w = ShardedWriter::create(dir.join("m.toml"), 1).unwrap();
+        w.append("x", &TensorEntry::from_f32(vec![1], &[1.0])).unwrap();
+        // Duplicate across shard boundaries (budget 1 ⇒ x already rolled).
+        assert!(matches!(
+            w.append("x", &TensorEntry::from_f32(vec![1], &[2.0])),
+            Err(TenzError::DuplicateName(_))
+        ));
+        assert!(matches!(
+            w.append("bad\nname", &TensorEntry::from_f32(vec![1], &[2.0])),
+            Err(TenzError::Manifest(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drop_without_finish_leaves_no_manifest_or_parts() {
+        let dir = tmp_dir("drop");
+        let manifest = dir.join("m.toml");
+        {
+            let mut w = ShardedWriter::create(&manifest, 1).unwrap();
+            w.append("a", &TensorEntry::from_f32(vec![1], &[1.0])).unwrap();
+            w.append("b", &TensorEntry::from_f32(vec![1], &[2.0])).unwrap();
+            // dropped without finish()
+        }
+        assert!(!manifest.exists());
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".part") || n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "staged files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn oversized_tensor_gets_its_own_shard() {
+        let dir = tmp_dir("oversize");
+        let mut tf = TensorFile::new();
+        tf.insert("big", TensorEntry::from_f32(vec![64], &[1.0; 64])); // 256 B payload
+        tf.insert("tiny.a", TensorEntry::from_f32(vec![1], &[2.0]));
+        tf.insert("tiny.b", TensorEntry::from_f32(vec![1], &[3.0]));
+        let manifest = write_sharded(&dir, "m.toml", &tf, 96);
+        let r = ShardedReader::open(&manifest).unwrap();
+        // "big" (sorted first) exceeds the budget alone but still lands in
+        // exactly one shard; the two tiny tensors share the next one.
+        assert_eq!(r.shard_count(), 2);
+        assert_eq!(r.manifest().shards[0].tensors, vec!["big".to_string()]);
+        assert_eq!(r.read_all().unwrap().to_bytes(), tf.to_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

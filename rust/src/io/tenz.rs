@@ -74,6 +74,16 @@ pub enum TenzError {
     Corrupt(String),
     #[error("tensor {0:?} not found")]
     NotFound(String),
+    #[error("shard manifest: {0}")]
+    Manifest(String),
+    #[error("shard {file:?} missing or unreadable: {detail}")]
+    MissingShard { file: String, detail: String },
+    #[error("shard {file:?}: content hash mismatch (manifest {want:016x}, file {got:016x})")]
+    ShardHashMismatch { file: String, want: u64, got: u64 },
+    #[error("tensor {name:?} routed to shard {file:?}, which does not contain it")]
+    MisroutedTensor { name: String, file: String },
+    #[error("duplicate tensor {name:?} across shards {first:?} and {second:?}")]
+    DuplicateAcrossShards { name: String, first: String, second: String },
     #[error("tensor {name:?} has dtype {got:?}, wanted {want:?}")]
     WrongDType { name: String, got: DType, want: DType },
     #[error("tensor {name:?} has {ndim} dims, wanted a matrix")]
@@ -233,6 +243,38 @@ pub fn scan_index<R: Read + Seek>(r: &mut R, total_len: u64) -> Result<Vec<Tenso
         )));
     }
     Ok(metas)
+}
+
+/// Incremental FNV-1a 64-bit hash — the content fingerprint sharded
+/// checkpoints record per shard. Not cryptographic: it detects bit rot,
+/// truncation and stale-shard mixups, not adversaries. Chosen because it
+/// is a dozen lines, streams byte-at-a-time (so writers hash what they
+/// write with no second read pass), and the offline crate universe has no
+/// hashing dependency to lean on.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Temp sibling for atomic writes: `<path>.tmp` appended to the full

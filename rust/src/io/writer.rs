@@ -14,8 +14,8 @@
 //! relies on this for bit-identical eager/lazy outputs.
 
 use super::tenz::{
-    encode_header, tmp_sibling, validate_entry, validate_meta, DType, TensorEntry, TenzError,
-    MAGIC,
+    encode_header, tmp_sibling, validate_entry, validate_meta, DType, Fnv1a, TensorEntry,
+    TenzError, MAGIC,
 };
 use crate::tensor::Mat;
 use std::collections::HashSet;
@@ -33,6 +33,14 @@ pub struct TenzWriter {
     file: Option<File>,
     names: HashSet<String>,
     count: u32,
+    /// Bytes written past the magic+count preamble (entry headers and
+    /// payloads) — what a sharding layer budgets against.
+    entry_bytes: u64,
+    /// Running FNV-1a over those same entry-region bytes, so a shard's
+    /// content hash is computed as it streams — no second read pass. The
+    /// preamble is excluded deliberately: the count is patched at
+    /// `finish`, after every hashed byte is already on disk.
+    hasher: Fnv1a,
     /// Set when a write failed mid-entry: the temp file tail is garbage,
     /// so further appends and `finish` refuse rather than rename a
     /// corrupt container over the destination.
@@ -59,12 +67,28 @@ impl TenzWriter {
             file: Some(file),
             names: HashSet::new(),
             count: 0,
+            entry_bytes: 0,
+            hasher: Fnv1a::new(),
             poisoned: false,
         })
     }
 
     pub fn tensors_written(&self) -> usize {
         self.count as usize
+    }
+
+    /// Total container size so far: the 12-byte preamble plus every entry
+    /// header/payload byte written (including an in-progress streamed
+    /// entry). This is the rolling-budget gauge for `ShardedWriter`.
+    pub fn bytes_written(&self) -> u64 {
+        (MAGIC.len() + 4) as u64 + self.entry_bytes
+    }
+
+    /// FNV-1a 64 over the entry region written so far (everything after
+    /// the magic+count preamble) — the per-shard content hash recorded in
+    /// sharded-checkpoint manifests.
+    pub fn entry_hash(&self) -> u64 {
+        self.hasher.finish()
     }
 
     /// Append one entry (header + payload straight to disk). A failed
@@ -102,11 +126,14 @@ impl TenzWriter {
         if !self.names.insert(name.to_string()) {
             return Err(TenzError::DuplicateName(name.into()));
         }
+        let header = encode_header(name, dtype, dims);
         let f = self.file.as_mut().expect("TenzWriter used after finish");
-        if let Err(io_err) = f.write_all(&encode_header(name, dtype, dims)) {
+        if let Err(io_err) = f.write_all(&header) {
             self.poisoned = true;
             return Err(io_err.into());
         }
+        self.hasher.update(&header);
+        self.entry_bytes += header.len() as u64;
         Ok(EntrySink { writer: self, remaining: nbytes, done: false })
     }
 
@@ -173,6 +200,8 @@ impl EntrySink<'_> {
             self.writer.poisoned = true;
             return Err(io_err.into());
         }
+        self.writer.hasher.update(bytes);
+        self.writer.entry_bytes += bytes.len() as u64;
         self.remaining -= bytes.len() as u64;
         Ok(())
     }

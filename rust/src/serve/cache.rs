@@ -1,13 +1,16 @@
 //! LRU model cache: one server process, many checkpoints.
 //!
-//! Keys are checkpoint path + modification-time snapshot, so rewriting a
-//! checkpoint on disk (a new compression run finishing, say) invalidates
-//! the cached kernels instead of serving stale weights. Capacity-bounded
-//! with least-recently-used eviction; hit/miss/eviction counters feed the
+//! Keys are checkpoint path + modification-time snapshot of *every file
+//! backing the checkpoint* — the container itself for a single `.tenz`,
+//! the manifest plus each shard for a sharded checkpoint — so rewriting
+//! any of them on disk (a new compression run finishing, one shard
+//! re-rolled, say) invalidates the cached kernels instead of serving
+//! stale weights. Capacity-bounded with least-recently-used eviction;
+//! hit/miss/eviction counters feed the
 //! [`ServeMetrics`](super::metrics::ServeMetrics) table.
 
 use super::kernel::ModelKernels;
-use crate::io::checkpoint::CheckpointReader;
+use crate::io::checkpoint::CheckpointSource;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
@@ -16,11 +19,75 @@ use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
 /// Identity of one loaded model: where it came from and which bytes
-/// (mtime snapshot) were loaded.
+/// (mtime snapshots) were loaded.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ModelKey {
     pub path: PathBuf,
-    pub mtime: Option<SystemTime>,
+    /// One snapshot per backing file: `[container]` for a single-file
+    /// checkpoint, `[manifest, shard…]` (manifest order) for a sharded
+    /// one. Any element changing makes a different key.
+    pub mtimes: Vec<Option<SystemTime>>,
+}
+
+impl ModelKey {
+    /// Stat-based key snapshot for the checkpoint at `path` — the single
+    /// helper both the cache probe and the sharded load path use, so a
+    /// touched shard can never produce a key the probe would still match.
+    pub fn snapshot(path: &Path) -> ModelKey {
+        ModelKey { path: path.to_path_buf(), mtimes: snapshot_mtimes(path) }
+    }
+}
+
+fn mtime_of(path: &Path) -> Option<SystemTime> {
+    std::fs::metadata(path).and_then(|m| m.modified()).ok()
+}
+
+/// Process-wide memo of each manifest's shard-file list, keyed by the
+/// manifest's `(len, mtime)` stat. `get_or_load` runs on every request,
+/// so the probe must stay at stat cost: the manifest is read and parsed
+/// only when its stat changes (or the filesystem reports no mtime, where
+/// staleness cannot be detected and correctness wins). The memo stores
+/// only file *names* — key freshness still comes from live stats.
+type ShardListMemo =
+    Mutex<std::collections::HashMap<PathBuf, (u64, Option<SystemTime>, Vec<PathBuf>)>>;
+static SHARD_LISTS: std::sync::OnceLock<ShardListMemo> = std::sync::OnceLock::new();
+
+fn shard_paths_of(path: &Path, len: u64, mtime: Option<SystemTime>) -> Vec<PathBuf> {
+    let memo = SHARD_LISTS.get_or_init(Default::default);
+    if mtime.is_some() {
+        if let Some((l, t, files)) = memo.lock().unwrap().get(path) {
+            if *l == len && *t == mtime {
+                return files.clone();
+            }
+        }
+    }
+    let dir = path.parent().unwrap_or(Path::new("."));
+    // An unreadable manifest yields no shard entries — the subsequent
+    // open reports the real error.
+    let files: Vec<PathBuf> = crate::io::shard::ShardManifest::load(path)
+        .map(|m| m.shards.iter().map(|s| dir.join(&s.file)).collect())
+        .unwrap_or_default();
+    if mtime.is_some() {
+        memo.lock().unwrap().insert(path.to_path_buf(), (len, mtime, files.clone()));
+    }
+    files
+}
+
+/// Modification times of every file backing the checkpoint at `path`,
+/// by `stat` alone on the warm path: `[container]` for a `.tenz`,
+/// `[manifest, shard…]` for a manifest (shard list memoized against the
+/// manifest's stat, so cache hits never re-parse it).
+fn snapshot_mtimes(path: &Path) -> Vec<Option<SystemTime>> {
+    if !crate::io::shard::is_manifest_path(path) {
+        return vec![mtime_of(path)];
+    }
+    let (len, mtime) = match std::fs::metadata(path) {
+        Ok(md) => (md.len(), md.modified().ok()),
+        Err(_) => (0, None),
+    };
+    let mut v = vec![mtime];
+    v.extend(shard_paths_of(path, len, mtime).iter().map(|p| mtime_of(p)));
+    v
 }
 
 /// Thread-safe LRU cache of executable model kernels.
@@ -80,15 +147,16 @@ impl ModelCache {
         self.evictions.load(Ordering::Relaxed)
     }
 
-    /// Fetch (loading on miss) the kernels for the checkpoint at `path`.
-    /// The lookup key pairs the path with the file's current mtime, so a
-    /// rewritten checkpoint misses and reloads; its stale entry ages out
-    /// by LRU. Loading happens outside the lock — two threads racing on
-    /// the same cold model may both load it, but the cache stays
-    /// consistent (first insert wins).
+    /// Fetch (loading on miss) the kernels for the checkpoint at `path`
+    /// — single `.tenz` or shard manifest alike. The lookup key pairs the
+    /// path with the current mtimes of every backing file
+    /// ([`ModelKey::snapshot`]), so a rewritten container *or any touched
+    /// shard* misses and reloads; the stale entry ages out by LRU.
+    /// Loading happens outside the lock — two threads racing on the same
+    /// cold model may both load it, but the cache stays consistent
+    /// (first insert wins).
     pub fn get_or_load(&self, path: &Path) -> Result<(ModelKey, Arc<ModelKernels>)> {
-        let mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
-        let probe = ModelKey { path: path.to_path_buf(), mtime };
+        let probe = ModelKey::snapshot(path);
         {
             let mut inner = self.inner.lock().unwrap();
             if let Some(pos) = inner.iter().position(|(k, _)| *k == probe) {
@@ -100,11 +168,15 @@ impl ModelCache {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let src = CheckpointReader::open(path)
+        let src = CheckpointSource::open(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?;
-        // Key on the reader's open-time snapshot: it describes the bytes
-        // actually indexed, even if the file was replaced since the stat.
-        let key = ModelKey { path: path.to_path_buf(), mtime: src.modified().or(mtime) };
+        // Key on the source's open-time snapshot: it describes the bytes
+        // actually indexed, even if files were replaced since the stat.
+        // Fall back to the probe where the filesystem reported nothing.
+        let snap = src.modified_snapshot();
+        let mtimes =
+            if snap.iter().all(Option::is_none) { probe.mtimes.clone() } else { snap };
+        let key = ModelKey { path: path.to_path_buf(), mtimes };
         let model = Arc::new(
             ModelKernels::load(&src)
                 .with_context(|| format!("assembling kernels for {}", path.display()))?,

@@ -16,7 +16,9 @@
 //! * [`server`]  — the engine: one persistent
 //!   [`WorkerPool`](crate::coordinator::WorkerPool), an LRU model cache,
 //!   one batcher per cached model.
-//! * [`cache`]   — LRU model cache keyed by checkpoint path+mtime.
+//! * [`cache`]   — LRU model cache keyed by checkpoint path + the mtime
+//!   snapshot of every backing file (container, or manifest + shards), so
+//!   touching any shard of a sharded checkpoint invalidates its kernels.
 //! * [`metrics`] — request/batch/latency/cache counters rendered through
 //!   [`report::table`](crate::report::table); latencies live in a bounded
 //!   reservoir so a long-lived server's memory stays O(1).

@@ -2,7 +2,9 @@
 //!
 //! One [`Server`] owns one persistent [`WorkerPool`] (the same pool type
 //! the compression pipeline runs on), an LRU [`ModelCache`] keyed by
-//! checkpoint path+mtime, and one [`Batcher`] per cached model. Requests
+//! checkpoint path + per-file mtime snapshot (single `.tenz` containers
+//! and sharded `.toml` manifests alike), and one [`Batcher`] per cached
+//! model. Requests
 //! against any number of checkpoints share the process: the first request
 //! for a checkpoint loads and caches its kernels and spawns its batcher;
 //! subsequent requests coalesce into batched GEMM passes.

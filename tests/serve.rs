@@ -13,9 +13,10 @@ use rsi_compress::io::tenz::{TensorEntry, TensorFile};
 use rsi_compress::linalg::gemm::matmul;
 use rsi_compress::linalg::norms::residual_spectral_norm;
 use rsi_compress::rng::GaussianSource;
+use rsi_compress::io::shard::ShardedWriter;
 use rsi_compress::serve::{
-    Batcher, BatcherConfig, DenseLinear, FactoredLinear, LinearKernel, ModelKernels, ServeConfig,
-    ServeMetrics, Server,
+    Batcher, BatcherConfig, DenseLinear, FactoredLinear, LinearKernel, ModelCache, ModelKernels,
+    ModelKey, ServeConfig, ServeMetrics, Server,
 };
 use rsi_compress::tensor::init::{gaussian, matrix_with_spectrum, SpectrumShape};
 use rsi_compress::tensor::Mat;
@@ -226,6 +227,99 @@ fn lone_request_flushes_after_max_wait() {
     assert_eq!(metrics.batches.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.batched_inputs.load(Ordering::Relaxed), 1);
     drop(batcher);
+}
+
+/// A sharded checkpoint and its single-file twin — same tensors, split
+/// across shard files — must load into identical kernels and answer
+/// bit-identically from one server process.
+#[test]
+fn sharded_checkpoint_serves_bit_identically_to_single_file_twin() {
+    let dir = tmp_dir("sharded");
+    let dense_path = dir.join("model.tenz");
+
+    // A 12 → 8 (relu) → 4 chain with biases, compressed so both layers
+    // carry factored kernels.
+    let mut g = GaussianSource::new(21);
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "layers.0", &StoredWeight::Dense(gaussian(8, 12, 1.0, &mut g)));
+    tf.insert("layers.0.bias", TensorEntry::from_f32(vec![8], &[0.05; 8]));
+    store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(4, 8, 1.0, &mut g)));
+    tf.insert("head.bias", TensorEntry::from_f32(vec![4], &[-0.1; 4]));
+    tf.write(&dense_path).unwrap();
+
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+    let plan = CompressionPlan::uniform_alpha(0.5, Method::Rsi(RsiOptions::with_q(2, 9)));
+
+    // Same plan, same seed ⇒ the two outputs hold identical tensors; only
+    // the container layout differs.
+    let single_path = dir.join("fact.tenz");
+    let src = Arc::new(CheckpointReader::open(&dense_path).unwrap());
+    pipe.compress_to_path(src.clone(), &plan, &single_path).unwrap();
+    let sharded_pipe = Pipeline::new(PipelineConfig {
+        workers: 2,
+        shard_size: Some(256),
+        ..Default::default()
+    })
+    .unwrap();
+    let manifest_path = dir.join("fact.toml");
+    let report = sharded_pipe.compress_to_path(src, &plan, &manifest_path).unwrap();
+    assert!(report.shards > 1, "a 256-byte budget must split shards, got {}", report.shards);
+
+    let server = Server::new(ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let single_model = server.model(&single_path).unwrap();
+    let sharded_model = server.model(&manifest_path).unwrap();
+    assert_eq!(single_model.layers.len(), sharded_model.layers.len());
+    assert_eq!(single_model.param_count(), sharded_model.param_count());
+    assert_eq!(sharded_model.layers[0].kernel.rank(), Some(4)); // ceil(0.5·8)
+
+    for trial in 0..6 {
+        let mut x = vec![0f32; 12];
+        g.fill_f32(&mut x);
+        let ys = server.infer(&single_path, x.clone()).unwrap();
+        let yf = server.infer(&manifest_path, x).unwrap();
+        assert_eq!(ys, yf, "trial {trial}: sharded serving must be bit-identical");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Touching *any* shard's mtime — not the manifest's — must change the
+/// cache key and invalidate the cached kernels.
+#[test]
+fn model_cache_invalidates_when_any_shard_mtime_changes() {
+    let dir = tmp_dir("shard_mtime");
+    let manifest = dir.join("m.toml");
+    let mut g = GaussianSource::new(22);
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 40, 1.0, &mut g)));
+    let mut w = ShardedWriter::create(&manifest, 200).unwrap();
+    for name in tf.names().map(str::to_string).collect::<Vec<_>>() {
+        w.append(&name, tf.get(&name).unwrap()).unwrap();
+    }
+    let m = w.finish().unwrap();
+    assert!(!m.shards.is_empty());
+
+    let cache = ModelCache::new(4);
+    let (k1, _) = cache.get_or_load(&manifest).unwrap();
+    let (k2, _) = cache.get_or_load(&manifest).unwrap();
+    assert_eq!(k1, k2);
+    assert_eq!(cache.stats(), (1, 1), "second lookup hits");
+
+    // Bump one shard's mtime without touching the manifest or content.
+    let shard_path = dir.join(&m.shards[0].file);
+    let f = std::fs::OpenOptions::new().append(true).open(&shard_path).unwrap();
+    f.set_modified(std::time::SystemTime::now() + Duration::from_secs(3)).unwrap();
+    drop(f);
+
+    assert_ne!(ModelKey::snapshot(&manifest), k1, "shard touch must change the key");
+    let (k3, m3) = cache.get_or_load(&manifest).unwrap();
+    assert_ne!(k3, k1);
+    assert_eq!(cache.stats(), (1, 2), "touched shard ⇒ miss and reload");
+    assert_eq!(m3.input_dim(), 40);
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 /// The serve metrics table carries the model-cache counters (the
