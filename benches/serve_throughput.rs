@@ -1,40 +1,95 @@
 //! SERVE-THRU: requests/sec through the batching server, dense vs
 //! factored checkpoints at α ∈ {0.1, 0.3} — the deployment payoff the
 //! paper's k(C+D) < C·D accounting predicts, measured end to end through
-//! the micro-batcher instead of as a bare GEMM microbenchmark.
+//! the micro-batcher instead of as a bare GEMM microbenchmark. Every
+//! checkpoint is also driven through a 2-worker loopback cluster
+//! (replica mode), so the wire hop's cost is tracked from day one in a
+//! routed-vs-local column.
 //!
 //! `cargo bench --bench serve_throughput` — writes
 //! reports/serve_throughput.csv. Fully synthetic (no artifacts needed);
 //! `RSIC_BENCH_FAST=1` shrinks it to the CI smoke size. Exits with an
 //! error if the factored model fails to beat dense at α ≤ 0.3 on every
-//! shape — a regression gate on the batching path.
+//! shape — a regression gate on the batching path. The routed column is
+//! informational (loopback TCP adds serialization + syscalls; the gate
+//! is that routing stays correct under load, asserted via zero failures
+//! and zero failovers), and it holds `clients` fixed because the traffic
+//! generator's determinism is per-client (see `serve::traffic::drive`).
 
 use rsi_compress::compress::plan::{CompressionPlan, Method};
 use rsi_compress::compress::rsi::RsiOptions;
 use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
-use rsi_compress::io::checkpoint::{store_weight, CheckpointReader, StoredWeight};
+use rsi_compress::io::checkpoint::{store_weight, CheckpointReader, CheckpointSource, StoredWeight};
 use rsi_compress::io::tenz::{TensorEntry, TensorFile};
 use rsi_compress::report::{write_report, Table};
 use rsi_compress::rng::GaussianSource;
+use rsi_compress::serve::cluster::{
+    checkpoint_identity_hash_of, PlacementMode, PlacementPlan, Router, RouterConfig, Worker,
+    WorkerConfig,
+};
 use rsi_compress::serve::{traffic, ServeConfig, Server};
 use rsi_compress::tensor::init::{matrix_with_spectrum, SpectrumShape};
 use std::path::Path;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
+
+fn bench_serve_config() -> ServeConfig {
+    ServeConfig {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        workers: rsi_compress::util::default_threads().min(4),
+        ..Default::default()
+    }
+}
 
 /// Drive synthetic pipelined traffic at one checkpoint through the shared
 /// `serve::traffic` generator (the same one `rsic serve` uses) and return
 /// requests/sec.
 fn run_traffic(path: &Path, requests: usize, clients: usize) -> anyhow::Result<f64> {
-    let server = Arc::new(Server::new(ServeConfig {
-        max_batch: 32,
-        max_wait: Duration::from_millis(2),
-        workers: rsi_compress::util::default_threads().min(4),
-        ..Default::default()
-    }));
+    let server = Arc::new(Server::new(bench_serve_config()));
     let report = traffic::drive(&server, &[path.to_path_buf()], requests, clients, 0x5e7e)?;
     anyhow::ensure!(report.failed == 0, "{} requests failed under bench load", report.failed);
     println!("    {}: {}", path.display(), server.metrics().summary());
+    Ok(report.req_per_sec())
+}
+
+/// The same traffic, but routed: 2 in-process replica workers over
+/// loopback, the router in front, identical batching parameters. Fails
+/// if any request errors or any batch silently fell back to local — the
+/// routed number must measure the routed path.
+fn run_traffic_routed(path: &Path, requests: usize, clients: usize) -> anyhow::Result<f64> {
+    let src = CheckpointSource::open(path)?;
+    let hash = checkpoint_identity_hash_of(&src);
+    let mut plan = PlacementPlan::build(
+        &src,
+        path.to_str().expect("bench paths are utf-8"),
+        hash,
+        PlacementMode::Replica,
+        &[String::new(), String::new()],
+    )?;
+    let mut fleet = Vec::new();
+    for i in 0..plan.workers.len() {
+        let mut cfg = WorkerConfig::new("127.0.0.1:0", plan.clone(), i);
+        cfg.threads = 2;
+        let h = Worker::spawn(cfg)?;
+        plan.workers[i].addr = h.addr().to_string();
+        fleet.push(h);
+    }
+    let router = Arc::new(Router::new(plan, RouterConfig::default()));
+    let server = Arc::new(Server::with_router(bench_serve_config(), Some(router)));
+    let report = traffic::drive(&server, &[path.to_path_buf()], requests, clients, 0x5e7e)?;
+    anyhow::ensure!(
+        report.failed == 0,
+        "{} routed requests failed under bench load",
+        report.failed
+    );
+    let failovers = server.metrics().failovers.load(Ordering::Relaxed);
+    anyhow::ensure!(
+        failovers == 0,
+        "routed bench fell back to local {failovers} times — the routed column would lie"
+    );
+    println!("    {} [routed]: {}", path.display(), server.metrics().summary());
     Ok(report.req_per_sec())
 }
 
@@ -50,8 +105,8 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all(&dir)?;
 
     let mut table = Table::new(
-        "Serve throughput — dense vs factored",
-        &["shape", "alpha", "k", "MACs/sample", "req/s", "speedup"],
+        "Serve throughput — dense vs factored, local vs routed",
+        &["shape", "alpha", "k", "MACs/sample", "req/s", "speedup", "routed req/s", "routed/local"],
     );
     let mut best_speedup = 0.0f64;
     for (c, d) in shapes {
@@ -68,6 +123,7 @@ fn main() -> anyhow::Result<()> {
         tf.write(&dense_path)?;
 
         let dense_rps = run_traffic(&dense_path, requests, clients)?;
+        let dense_routed = run_traffic_routed(&dense_path, requests, clients)?;
         table.row(&[
             format!("{c}x{d}"),
             "dense".into(),
@@ -75,6 +131,8 @@ fn main() -> anyhow::Result<()> {
             (c * d).to_string(),
             format!("{dense_rps:.0}"),
             "1.00".into(),
+            format!("{dense_routed:.0}"),
+            format!("{:.2}", dense_routed / dense_rps),
         ]);
 
         let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() })?;
@@ -86,6 +144,7 @@ fn main() -> anyhow::Result<()> {
             pipe.compress_to_path(src, &plan, &fact_path)?;
 
             let rps = run_traffic(&fact_path, requests, clients)?;
+            let routed_rps = run_traffic_routed(&fact_path, requests, clients)?;
             let speedup = rps / dense_rps;
             best_speedup = best_speedup.max(speedup);
             table.row(&[
@@ -95,6 +154,8 @@ fn main() -> anyhow::Result<()> {
                 (k * (c + d)).to_string(),
                 format!("{rps:.0}"),
                 format!("{speedup:.2}"),
+                format!("{routed_rps:.0}"),
+                format!("{:.2}", routed_rps / rps),
             ]);
         }
     }

@@ -112,6 +112,18 @@ impl Args {
         }
     }
 
+    /// All values of a repeatable option, with comma-separated values
+    /// split: `--worker a:1 --worker b:2,c:3` → `[a:1, b:2, c:3]`.
+    pub fn str_list(&self, name: &str) -> Vec<String> {
+        self.opt_all(name)
+            .iter()
+            .flat_map(|v| v.split(','))
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
     pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, ArgsError> {
         match self.opt(name) {
             None => Ok(default.to_vec()),
@@ -160,6 +172,13 @@ mod tests {
         assert_eq!(a.usize_list_or("qs", &[9]).unwrap(), vec![1, 2, 4]);
         assert_eq!(a.f64_list_or("alphas", &[]).unwrap(), vec![0.8, 0.2]);
         assert_eq!(a.usize_list_or("missing", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn string_lists_merge_repeats_and_commas() {
+        let a = parse("--worker a:1 --worker b:2,c:3");
+        assert_eq!(a.str_list("worker"), vec!["a:1", "b:2", "c:3"]);
+        assert!(a.str_list("absent").is_empty());
     }
 
     #[test]

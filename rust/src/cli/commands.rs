@@ -39,7 +39,13 @@ USAGE:
   rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
   rsic serve    --checkpoint F [--checkpoint F2 ...] [--requests N] [--clients C]
                 [--batch B] [--wait-ms MS] [--workers W] [--queue-depth Q]
-                [--max-queue N] [--cache-cap K]
+                [--max-queue N] [--cache-cap K] [--verify]
+                [--plan plan.toml]            # route batches to cluster workers
+  rsic verify   <checkpoint>                   # full integrity pass (.tenz or manifest)
+  rsic plan     --checkpoint F --worker ADDR [--worker ADDR ...]
+                [--mode replica|partition] [--out cluster.toml]
+  rsic worker   --plan cluster.toml [--index N] [--listen ADDR]
+                [--threads W] [--queue-depth Q] [--verify]
   rsic run <config.toml>                       # config-driven sweep (see configs/)
   rsic table 4.1  [--model vgg|vit|both] [--alphas L] [--qs L] [--backend B] [--out-dir D]
                   [--checkpoint F]
@@ -60,6 +66,9 @@ pub fn run(args: Args) -> Result<()> {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "verify" => cmd_verify(&args),
+        "plan" => cmd_plan(&args),
+        "worker" => cmd_worker(&args),
         "run" => cmd_run(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
@@ -267,16 +276,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 /// `rsic serve`: load one or more checkpoints into a batching server and
 /// drive synthetic concurrent traffic against them, then report serving
-/// metrics (batch occupancy, latency quantiles, model-cache hit rate).
-/// Clients submit their whole request budget before waiting, so the
-/// micro-batcher sees genuine concurrency.
+/// metrics (batch occupancy, per-model latency quantiles, model-cache
+/// hit rate). Clients submit their whole request budget before waiting,
+/// so the micro-batcher sees genuine concurrency. With `--plan`, batches
+/// for the plan's checkpoint route to cluster workers (failing over to
+/// local execution when the fleet cannot answer); with `--verify`, every
+/// model load runs the full checkpoint integrity pass first.
 fn cmd_serve(args: &Args) -> Result<()> {
     let ckpts: Vec<String> = args.opt_all("checkpoint").iter().map(|s| s.to_string()).collect();
     if ckpts.is_empty() {
         bail!(
             "usage: rsic serve --checkpoint model.tenz [--checkpoint more.tenz] \
              [--requests N] [--clients C] [--batch B] [--wait-ms MS] [--workers W] \
-             [--queue-depth Q] [--max-queue N] [--cache-cap K]"
+             [--queue-depth Q] [--max-queue N] [--cache-cap K] [--verify] [--plan plan.toml]"
         );
     }
     let requests = args.usize_or("requests", 256)?;
@@ -289,9 +301,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.usize_or("queue-depth", 16)?,
         max_queue: args.usize_or("max-queue", 8192)?,
         cache_capacity: args.usize_or("cache-cap", 4)?,
+        verify: args.flag("verify"),
     };
-    let server = Arc::new(Server::new(config));
+    let router = match args.opt("plan") {
+        Some(plan_path) => {
+            let plan = crate::serve::cluster::PlacementPlan::load(plan_path)?;
+            // Catch a stale/hand-mangled partition plan before any
+            // traffic: its stages must tile the checkpoint's layer chain.
+            let plan_src = CheckpointSource::open(&plan.checkpoint)
+                .with_context(|| format!("opening plan checkpoint {}", plan.checkpoint))?;
+            plan.validate_layers(&plan_src)?;
+            let router =
+                Arc::new(crate::serve::cluster::Router::new(plan, Default::default()));
+            let healthy = router.health_check();
+            println!(
+                "cluster plan {plan_path}: {} mode, {}/{} workers healthy (checkpoint {})",
+                router.plan().mode.name(),
+                healthy,
+                router.plan().workers.len(),
+                router.plan().checkpoint
+            );
+            Some(router)
+        }
+        None => None,
+    };
+    let server = Arc::new(Server::with_router(config, router.clone()));
     let paths: Vec<std::path::PathBuf> = ckpts.into_iter().map(std::path::PathBuf::from).collect();
+    // Routing matches checkpoint paths *as given*: if the plan names the
+    // checkpoint differently (./m.tenz vs m.tenz), every batch would
+    // quietly execute locally — warn instead of letting the healthy-
+    // workers banner suggest the fleet is serving.
+    if let Some(router) = &router {
+        if !paths.iter().any(|p| router.covers(p)) {
+            println!(
+                "warning: plan checkpoint {:?} matches none of the --checkpoint paths \
+                 (paths are compared as given); all traffic will execute locally",
+                router.plan().checkpoint
+            );
+        }
+    }
     // Warm load: a bad checkpoint fails here, before traffic starts.
     for p in &paths {
         let model = server.model(p)?;
@@ -307,6 +355,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let report = crate::serve::traffic::drive(&server, &paths, requests, clients, seed)?;
     println!("{}", server.metrics().render(Some(server.cache())).render());
+    if let Some(router) = &router {
+        for (i, w) in router.plan().workers.iter().enumerate() {
+            match router.worker_stats(i) {
+                Ok(stats) => {
+                    for s in stats {
+                        println!(
+                            "worker {i} ({}): {} [{}] p50 {:.3} ms p99 {:.3} ms over {} requests",
+                            w.addr,
+                            router.plan().mode.name(),
+                            s.model,
+                            s.p50 * 1e3,
+                            s.p99 * 1e3,
+                            s.n
+                        );
+                    }
+                }
+                Err(e) => println!("worker {i} ({}): stats unavailable — {e}", w.addr),
+            }
+        }
+    }
     if report.failed > 0 {
         println!("{} requests failed (overload shedding or model errors)", report.failed);
     }
@@ -318,6 +386,112 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.req_per_sec()
     );
     Ok(())
+}
+
+/// `rsic verify`: the explicit O(checkpoint) integrity pass. Sharded
+/// checkpoints re-read every shard and compare content hashes against
+/// the manifest; single `.tenz` files take a full structural read. This
+/// is the production surface of `ShardedReader::verify_hashes`.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: rsic verify <checkpoint (.tenz or manifest .toml)>")?;
+    let src = CheckpointSource::open(path)
+        .with_context(|| format!("opening checkpoint {path}"))?;
+    src.verify().with_context(|| format!("checkpoint {path} failed verification"))?;
+    match &src {
+        CheckpointSource::Sharded(s) => println!(
+            "{path}: OK — {} tensors across {} shards, all content hashes match",
+            s.len(),
+            s.shard_count()
+        ),
+        CheckpointSource::Single(r) => println!(
+            "{path}: OK — {} tensors, full structural read clean \
+             (single .tenz carries no content hash; shard for hash-backed verification)",
+            r.tenz().len()
+        ),
+    }
+    Ok(())
+}
+
+/// `rsic plan`: partition a checkpoint across cluster workers by the
+/// stored-bytes + MACs cost model and write the TOML placement plan that
+/// `rsic worker` and `rsic serve --plan` share.
+fn cmd_plan(args: &Args) -> Result<()> {
+    use crate::serve::cluster::{checkpoint_identity_hash_of, PlacementMode, PlacementPlan};
+    let ckpt = args.require("checkpoint")?;
+    let addrs = args.str_list("worker");
+    if addrs.is_empty() {
+        bail!(
+            "usage: rsic plan --checkpoint F --worker host:port [--worker host:port ...] \
+             [--mode replica|partition] [--out cluster.toml]"
+        );
+    }
+    let mode = PlacementMode::parse(args.str_or(
+        "mode",
+        if addrs.len() > 1 { "partition" } else { "replica" },
+    ))?;
+    let src = CheckpointSource::open(ckpt).with_context(|| format!("opening {ckpt}"))?;
+    // Hash the source we just opened, not the path again: the plan's
+    // hash must describe the same bytes its layer list came from.
+    let hash = checkpoint_identity_hash_of(&src);
+    let plan = PlacementPlan::build(&src, ckpt, hash, mode, &addrs)?;
+    let mut table = crate::report::Table::new(
+        format!("Placement — {} mode, checkpoint {:016x}", mode.name(), hash),
+        &["worker", "addr", "layers", "stored bytes", "MACs/sample", "load"],
+    );
+    for (i, w) in plan.workers.iter().enumerate() {
+        table.row(&[
+            i.to_string(),
+            w.addr.clone(),
+            if w.layers.is_empty() { "<all>".into() } else { w.layers.len().to_string() },
+            w.bytes.to_string(),
+            w.macs.to_string(),
+            format!("{:.3}", plan.load_of(w)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("balance: max/mean load = {:.3}", plan.max_over_mean_load());
+    let out = args.str_or("out", "cluster.toml");
+    plan.write(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// `rsic worker`: serve one placement-plan assignment over TCP until the
+/// process is killed (see `serve::cluster::worker`).
+fn cmd_worker(args: &Args) -> Result<()> {
+    use crate::serve::cluster::{PlacementPlan, Worker, WorkerConfig};
+    let plan_path = args.require("plan").map_err(|_| {
+        anyhow::anyhow!(
+            "usage: rsic worker --plan cluster.toml [--index N] [--listen ADDR] \
+             [--threads W] [--queue-depth Q] [--verify]"
+        )
+    })?;
+    let plan = PlacementPlan::load(plan_path)?;
+    let index = args.usize_or("index", 0)?;
+    anyhow::ensure!(
+        index < plan.workers.len(),
+        "--index {index} out of range: plan has {} workers",
+        plan.workers.len()
+    );
+    let listen = match args.opt("listen") {
+        Some(l) => l.to_string(),
+        None => {
+            let addr = plan.workers[index].addr.clone();
+            anyhow::ensure!(
+                !addr.is_empty(),
+                "plan assigns no address to worker {index}; pass --listen host:port"
+            );
+            addr
+        }
+    };
+    let mut config = WorkerConfig::new(listen, plan, index);
+    config.threads = args.usize_or("threads", crate::util::default_threads())?;
+    config.queue_depth = args.usize_or("queue-depth", 16)?;
+    config.verify = args.flag("verify");
+    Worker::run(config)
 }
 
 

@@ -16,6 +16,14 @@ pub enum TomlError {
     Type(String, &'static str),
 }
 
+/// Quote a string for this TOML subset: backslash and double-quote are
+/// the only escapes the parser understands, so they are the only ones a
+/// writer may emit. Shared by every manifest/plan writer in the crate so
+/// the escaping can never drift from what [`TomlDoc::parse`] reads back.
+pub fn toml_quote(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
     Str(String),

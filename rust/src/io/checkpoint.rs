@@ -296,6 +296,29 @@ impl CheckpointSource {
     pub fn load_weight(&self, layer: &str) -> Result<StoredWeight, TenzError> {
         load_weight_from(self, layer)
     }
+
+    /// Explicit integrity pass — deliberately O(checkpoint) I/O, the
+    /// check `open` skips to stay O(stat). Sharded checkpoints re-read
+    /// every shard and compare its FNV-1a content hash against the
+    /// manifest ([`ShardedReader::verify_hashes`] — catches bit rot).
+    /// Single `.tenz` containers have no stored hash, so verification is
+    /// a full structural read: every payload streams through in bounded
+    /// chunks, surfacing truncation and I/O errors (but not silent bit
+    /// flips — the hashed sharded form is the durable one). This is what
+    /// `rsic verify` and serving's `--verify` mode run.
+    pub fn verify(&self) -> Result<(), TenzError> {
+        match self {
+            CheckpointSource::Sharded(s) => s.verify_hashes(),
+            CheckpointSource::Single(r) => {
+                let names: Vec<String> =
+                    r.tenz().names().map(str::to_string).collect();
+                for name in names {
+                    r.copy_payload_chunked(&name, 1 << 16, &mut |_| Ok(()))?;
+                }
+                Ok(())
+            }
+        }
+    }
 }
 
 impl WeightSource for CheckpointSource {

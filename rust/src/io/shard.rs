@@ -44,7 +44,7 @@ use super::tenz::{
     MAGIC,
 };
 use super::writer::{EntrySink, TenzWriter};
-use crate::config::toml::TomlDoc;
+use crate::config::toml::{toml_quote, TomlDoc};
 use crate::tensor::Mat;
 use std::collections::{BTreeMap, HashSet};
 use std::path::{Path, PathBuf};
@@ -83,10 +83,6 @@ pub struct ShardEntry {
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct ShardManifest {
     pub shards: Vec<ShardEntry>,
-}
-
-fn toml_quote(s: &str) -> String {
-    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
 }
 
 /// Names the TOML subset can round-trip inside quotes. Control
@@ -191,6 +187,27 @@ impl ShardManifest {
     /// Total tensors across shards.
     pub fn tensor_count(&self) -> usize {
         self.shards.iter().map(|s| s.tensors.len()).sum()
+    }
+
+    /// Order-sensitive FNV-1a over every shard's identity record (file
+    /// name, byte size, content hash, tensor list) — a cheap O(manifest)
+    /// fingerprint of the checkpoint's bytes. The cluster handshake
+    /// compares this value so a router never routes traffic at a worker
+    /// whose manifest describes different content; the per-shard hashes
+    /// already cover the payload, so no shard I/O happens here.
+    pub fn identity_hash(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        for s in &self.shards {
+            h.update(s.file.as_bytes());
+            h.update(&[0]);
+            h.update(&s.bytes.to_le_bytes());
+            h.update(&s.hash.to_le_bytes());
+            for t in &s.tensors {
+                h.update(t.as_bytes());
+                h.update(&[0]);
+            }
+        }
+        h.finish()
     }
 
     /// Build the tensor → shard-index routing table, refusing manifests

@@ -3,11 +3,17 @@
 //! Requests enqueue on a channel; a dedicated batcher thread pulls the
 //! first request of a batch, then keeps collecting until either
 //! `max_batch` inputs are in hand or `max_wait` has elapsed since the
-//! batch opened — whichever comes first — and executes the whole batch as
-//! a single forward pass on the shared [`WorkerPool`]. A lone request is
-//! therefore answered after at most `max_wait` (flush-on-timeout), while
-//! a burst of N concurrent requests collapses into ⌈N/max_batch⌉ GEMM
-//! passes instead of N.
+//! batch opened — whichever comes first — and hands the whole batch to a
+//! [`BatchExecutor`]. A lone request is therefore answered after at most
+//! `max_wait` (flush-on-timeout), while a burst of N concurrent requests
+//! collapses into ⌈N/max_batch⌉ executor calls instead of N.
+//!
+//! The executor is what makes the same batcher serve both deployment
+//! shapes: [`LocalExecutor`] runs the batch as one forward pass on the
+//! in-process [`WorkerPool`];
+//! [`RoutedExecutor`](super::cluster::RoutedExecutor) ships it to a
+//! cluster worker over the wire, falling back to local execution when
+//! the fleet fails. The batcher never knows the difference.
 
 use super::kernel::ModelKernels;
 use super::metrics::ServeMetrics;
@@ -18,10 +24,59 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Executes one coalesced batch. Implementations must answer every input
+/// row (one output row per input row, in order) or fail the whole batch.
+pub trait BatchExecutor: Send + Sync {
+    /// Checkpoint label for per-model metrics (the path as submitted).
+    fn label(&self) -> &str;
+    /// Input feature width the underlying model expects.
+    fn input_dim(&self) -> usize;
+    /// Run one batch (N×input_dim) to N output rows.
+    fn execute(&self, inputs: Mat<f32>) -> Result<Vec<Vec<f32>>, String>;
+}
+
+/// In-process execution: one batched forward pass on the shared pool —
+/// the single-host path, and the failover target of routed serving.
+pub struct LocalExecutor {
+    label: String,
+    model: Arc<ModelKernels>,
+    pool: Arc<WorkerPool>,
+}
+
+impl LocalExecutor {
+    pub fn new(label: impl Into<String>, model: Arc<ModelKernels>, pool: Arc<WorkerPool>) -> Self {
+        LocalExecutor { label: label.into(), model, pool }
+    }
+
+    pub fn model(&self) -> &Arc<ModelKernels> {
+        &self.model
+    }
+}
+
+impl BatchExecutor for LocalExecutor {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn input_dim(&self) -> usize {
+        self.model.input_dim()
+    }
+
+    fn execute(&self, inputs: Mat<f32>) -> Result<Vec<Vec<f32>>, String> {
+        let model = self.model.clone();
+        self.pool
+            .submit_handle(move || {
+                let out = model.forward(&inputs);
+                (0..out.rows()).map(|r| out.row(r).to_vec()).collect::<Vec<Vec<f32>>>()
+            })
+            .wait()
+    }
+}
+
 /// Coalescing knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
-    /// Largest batch one GEMM pass serves.
+    /// Largest batch one executor call serves.
     pub max_batch: usize,
     /// Longest a batch stays open waiting for more requests.
     pub max_wait: Duration,
@@ -72,21 +127,20 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn the batcher thread for `model`, executing batches on `pool`.
+    /// Spawn the batcher thread, flushing batches into `executor`.
     pub fn spawn(
-        model: Arc<ModelKernels>,
-        pool: Arc<WorkerPool>,
+        executor: Arc<dyn BatchExecutor>,
         metrics: Arc<ServeMetrics>,
         config: BatcherConfig,
     ) -> Batcher {
-        let input_dim = model.input_dim();
+        let input_dim = executor.input_dim();
         let (tx, rx) = channel::<Request>();
         let loop_metrics = metrics.clone();
         let queued = Arc::new(AtomicUsize::new(0));
         let loop_queued = queued.clone();
         let thread = std::thread::Builder::new()
             .name("rsic-batcher".into())
-            .spawn(move || batch_loop(rx, model, pool, loop_metrics, loop_queued, config))
+            .spawn(move || batch_loop(rx, executor, loop_metrics, loop_queued, config))
             .expect("spawn batcher thread");
         Batcher {
             tx: Some(tx),
@@ -96,6 +150,16 @@ impl Batcher {
             max_queue: config.max_queue.max(1),
             input_dim,
         }
+    }
+
+    /// Convenience for in-process serving: spawn over a [`LocalExecutor`].
+    pub fn spawn_local(
+        model: Arc<ModelKernels>,
+        pool: Arc<WorkerPool>,
+        metrics: Arc<ServeMetrics>,
+        config: BatcherConfig,
+    ) -> Batcher {
+        Self::spawn(Arc::new(LocalExecutor::new("local", model, pool)), metrics, config)
     }
 
     /// Input width this batcher's model expects.
@@ -150,8 +214,7 @@ impl Drop for Batcher {
 /// Collect-and-flush loop (one per batcher thread).
 fn batch_loop(
     rx: Receiver<Request>,
-    model: Arc<ModelKernels>,
-    pool: Arc<WorkerPool>,
+    executor: Arc<dyn BatchExecutor>,
     metrics: Arc<ServeMetrics>,
     queued: Arc<AtomicUsize>,
     config: BatcherConfig,
@@ -181,33 +244,32 @@ fn batch_loop(
                 Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        flush(&model, &pool, &metrics, batch);
+        flush(&executor, &metrics, batch);
     }
 }
 
-/// Execute one coalesced batch as a single forward pass on the pool and
-/// scatter the output rows back to their requesters.
-fn flush(
-    model: &Arc<ModelKernels>,
-    pool: &WorkerPool,
-    metrics: &ServeMetrics,
-    batch: Vec<Request>,
-) {
+/// Hand one coalesced batch to the executor and scatter the output rows
+/// back to their requesters.
+fn flush(executor: &Arc<dyn BatchExecutor>, metrics: &ServeMetrics, batch: Vec<Request>) {
     let rows: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
     let inputs = Mat::from_rows(&rows);
     drop(rows);
     metrics.record_batch(batch.len());
-    let job_model = model.clone();
-    let handle = pool.submit_handle(move || {
-        let out = job_model.forward(&inputs);
-        (0..out.rows()).map(|r| out.row(r).to_vec()).collect::<Vec<Vec<f32>>>()
-    });
-    match handle.wait() {
-        Ok(outputs) => {
-            debug_assert_eq!(outputs.len(), batch.len());
+    match executor.execute(inputs) {
+        Ok(outputs) if outputs.len() == batch.len() => {
             for (req, out) in batch.into_iter().zip(outputs) {
-                metrics.record_latency(req.enqueued.elapsed().as_secs_f64());
+                metrics.record_latency(executor.label(), req.enqueued.elapsed().as_secs_f64());
                 let _ = req.tx.send(Ok(out));
+            }
+        }
+        Ok(outputs) => {
+            let msg = format!(
+                "executor answered {} rows for a {}-request batch",
+                outputs.len(),
+                batch.len()
+            );
+            for req in batch {
+                let _ = req.tx.send(Err(msg.clone()));
             }
         }
         Err(msg) => {
@@ -237,7 +299,7 @@ mod tests {
     fn single_request_flushes_on_max_wait() {
         let pool = Arc::new(WorkerPool::new(1, 2));
         let metrics = Arc::new(ServeMetrics::new());
-        let batcher = Batcher::spawn(
+        let batcher = Batcher::spawn_local(
             tiny_model(4, 2),
             pool.clone(),
             metrics.clone(),
@@ -262,7 +324,7 @@ mod tests {
         let pool = Arc::new(WorkerPool::new(1, 2));
         let metrics = Arc::new(ServeMetrics::new());
         let batcher =
-            Batcher::spawn(tiny_model(4, 2), pool.clone(), metrics.clone(), Default::default());
+            Batcher::spawn_local(tiny_model(4, 2), pool.clone(), metrics.clone(), Default::default());
         let err = batcher.submit(vec![1.0; 3]).wait().unwrap_err();
         assert!(err.contains("3 features"));
         use std::sync::atomic::Ordering;
@@ -283,7 +345,7 @@ mod tests {
             let _ = block_rx.recv();
             0usize
         });
-        let batcher = Batcher::spawn(
+        let batcher = Batcher::spawn_local(
             tiny_model(3, 2),
             pool.clone(),
             metrics.clone(),
@@ -315,7 +377,7 @@ mod tests {
     fn drop_flushes_pending_requests() {
         let pool = Arc::new(WorkerPool::new(1, 2));
         let metrics = Arc::new(ServeMetrics::new());
-        let batcher = Batcher::spawn(
+        let batcher = Batcher::spawn_local(
             tiny_model(3, 2),
             pool.clone(),
             metrics.clone(),
@@ -331,5 +393,28 @@ mod tests {
         for p in pending {
             assert_eq!(p.wait().unwrap().len(), 2);
         }
+    }
+
+    /// An executor that answers the wrong number of rows fails the whole
+    /// batch with a diagnostic instead of scattering misaligned outputs.
+    #[test]
+    fn row_count_mismatch_fails_the_batch() {
+        struct Short;
+        impl BatchExecutor for Short {
+            fn label(&self) -> &str {
+                "short"
+            }
+            fn input_dim(&self) -> usize {
+                2
+            }
+            fn execute(&self, _inputs: Mat<f32>) -> Result<Vec<Vec<f32>>, String> {
+                Ok(vec![])
+            }
+        }
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::spawn(Arc::new(Short), metrics, Default::default());
+        let err = batcher.submit(vec![0.0; 2]).wait().unwrap_err();
+        assert!(err.contains("0 rows"), "{err}");
+        drop(batcher);
     }
 }

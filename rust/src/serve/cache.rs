@@ -93,6 +93,11 @@ fn snapshot_mtimes(path: &Path) -> Vec<Option<SystemTime>> {
 /// Thread-safe LRU cache of executable model kernels.
 pub struct ModelCache {
     capacity: usize,
+    /// Run the checkpoint integrity pass on every load (the `--verify`
+    /// serving mode): sharded checkpoints re-hash every shard, single
+    /// files take a full structural read. O(checkpoint) I/O per *miss*
+    /// only — cache hits stay stat-cost.
+    verify: bool,
     /// Most-recently-used first.
     inner: Mutex<VecDeque<(ModelKey, Arc<ModelKernels>)>>,
     hits: AtomicU64,
@@ -102,8 +107,15 @@ pub struct ModelCache {
 
 impl ModelCache {
     pub fn new(capacity: usize) -> Self {
+        Self::with_verify(capacity, false)
+    }
+
+    /// A cache that verifies checkpoint integrity at load when `verify`
+    /// is set (see [`CheckpointSource::verify`]).
+    pub fn with_verify(capacity: usize, verify: bool) -> Self {
         ModelCache {
             capacity: capacity.max(1),
+            verify,
             inner: Mutex::new(VecDeque::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -170,6 +182,10 @@ impl ModelCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let src = CheckpointSource::open(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        if self.verify {
+            src.verify()
+                .with_context(|| format!("verifying checkpoint {}", path.display()))?;
+        }
         // Key on the source's open-time snapshot: it describes the bytes
         // actually indexed, even if files were replaced since the stat.
         // Fall back to the probe where the filesystem reported nothing.

@@ -1,0 +1,48 @@
+//! `cluster` — multi-host serving of sharded checkpoints.
+//!
+//! PR 4's sharded checkpoints removed the single-file ceiling, but every
+//! byte still flowed through one process. This subsystem turns `rsic`
+//! from a process into a fleet over plain `std::net` TCP (loopback-
+//! testable, no new dependencies):
+//!
+//! * [`wire`] — the length-prefixed binary protocol: version+hash
+//!   handshake, `Forward`/`Health`/`Stats` requests, typed error frames,
+//!   with a corruption-hardened codec (every declared size validated
+//!   before allocation).
+//! * [`placement`] — the planner: reads a checkpoint's shard manifest +
+//!   per-layer metadata and partitions layers across N workers by a cost
+//!   model over stored bytes *and* MACs (dense `C·D` vs factored
+//!   `k(C+D)` — the paper's accounting tells the planner which layers
+//!   are compute-cheap), emitting a TOML placement plan.
+//! * [`worker`] — `rsic worker --listen ADDR --plan P`: a process that
+//!   lazily opens only its assigned shards and runs the existing
+//!   `serve::kernel`s on its own `WorkerPool`.
+//! * [`router`] — the front end the micro-batcher drains into: whole
+//!   batches replica-style, or stage-to-stage for partitioned models,
+//!   with health-checked connections, bounded retry, and failover to
+//!   local in-process execution when a worker dies mid-request.
+//!
+//! Invariants (tested in `tests/cluster.rs`):
+//!
+//! * Routed outputs are **bit-identical** to single-process serving —
+//!   the distributed pass preserves the exact numerics the paper's
+//!   softmax-perturbation theorem bounds, so every served-equivalence
+//!   guarantee carries over unchanged.
+//! * A worker dying mid-traffic degrades to local execution with zero
+//!   client-visible errors.
+//! * Corrupt frames yield typed errors, never panics or unbounded
+//!   allocations.
+//! * The planner's heaviest worker stays within 1.5× of the mean load.
+
+pub mod placement;
+pub mod router;
+pub mod wire;
+pub mod worker;
+
+pub use placement::{
+    checkpoint_identity_hash, checkpoint_identity_hash_of, layer_costs, LayerCost,
+    PlacementMode, PlacementPlan, WorkerAssignment,
+};
+pub use router::{RoutedExecutor, Router, RouterConfig};
+pub use wire::{ErrorCode, Frame, ModelStats, WireError, MAX_FRAME_BYTES, PROTOCOL_VERSION};
+pub use worker::{Worker, WorkerConfig, WorkerHandle};

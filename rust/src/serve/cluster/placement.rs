@@ -1,0 +1,528 @@
+//! Shard-placement planning: which worker serves which layers.
+//!
+//! The planner reads a checkpoint's per-layer metadata (one header pass —
+//! no payload I/O) and partitions the layer chain across N workers by a
+//! cost model with two axes:
+//!
+//! * **stored bytes** — what a worker must hold resident (and read from
+//!   its shards): `4·(C·D + bias)` dense, `4·(k(C+D) + bias)` factored;
+//! * **MACs per sample** — what a worker must compute per request:
+//!   `C·D` dense vs `k(C+D)` factored (§3's two-small-GEMMs rewrite),
+//!   plus the bias add.
+//!
+//! The same layer-wise accounting that gives SVD-NAS its per-layer
+//! budgets tells the planner which layers are cheap (factored) vs
+//! expensive (dense passthrough), so placement balances *compute*, not
+//! just bytes: each layer's load is its normalized share of both axes,
+//! and the partitioner minimizes the maximum per-worker load over all
+//! contiguous splits (layers must stay contiguous — a stage hands its
+//! activations to the next stage over the wire).
+//!
+//! Two modes:
+//!
+//! * [`PlacementMode::Replica`] — every worker serves the whole model;
+//!   the router spreads whole batches across replicas.
+//! * [`PlacementMode::Partition`] — the chain is split into contiguous
+//!   stages; the router pipes each batch stage-to-stage.
+//!
+//! The plan is a TOML document (same `config::toml` subset as experiment
+//! configs and shard manifests) shared by `rsic plan`, `rsic worker` and
+//! `rsic serve --plan`, and it embeds a checkpoint identity hash
+//! ([`checkpoint_identity_hash`]) that the wire handshake cross-checks so
+//! a router never routes at a worker serving different bytes.
+
+use crate::config::toml::{toml_quote, TomlDoc};
+use crate::io::checkpoint::{bias_key, layer_infos_from, CheckpointSource, WeightSource};
+use crate::io::tenz::Fnv1a;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Plan schema version this build reads and writes.
+pub const PLAN_VERSION: i64 = 1;
+
+/// How the model is spread across workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Whole model on every worker; batches route to one replica each.
+    Replica,
+    /// Contiguous layer stages; batches flow worker-to-worker.
+    Partition,
+}
+
+impl PlacementMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementMode::Replica => "replica",
+            PlacementMode::Partition => "partition",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "replica" => Ok(PlacementMode::Replica),
+            "partition" => Ok(PlacementMode::Partition),
+            other => bail!("unknown placement mode {other:?} (replica|partition)"),
+        }
+    }
+}
+
+/// One layer's placement cost (both axes of the cost model).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerCost {
+    pub layer: String,
+    /// Stored bytes: 4 bytes per parameter (weights + bias) as served.
+    pub bytes: u64,
+    /// Fused multiply-adds per served sample (dense `C·D`, factored
+    /// `k(C+D)`, plus the bias add).
+    pub macs: u64,
+}
+
+/// Per-layer costs from one header-only metadata pass, in forward order.
+pub fn layer_costs(src: &dyn WeightSource) -> Vec<LayerCost> {
+    layer_infos_from(src)
+        .into_iter()
+        .map(|info| {
+            let bias = src
+                .dims_of(&bias_key(&info.layer))
+                .map(|d| d.iter().product::<usize>())
+                .unwrap_or(0);
+            let params = info.stored_params as u64 + bias as u64;
+            LayerCost { layer: info.layer, bytes: params * 4, macs: params }
+        })
+        .collect()
+}
+
+/// One worker's slice of the plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerAssignment {
+    /// Where the router reaches this worker (`host:port`). May be empty
+    /// while a plan is under construction (tests bind ephemeral ports and
+    /// fill addresses in after spawn).
+    pub addr: String,
+    /// Layers this worker serves, in forward order. Empty means the
+    /// whole model (replica mode).
+    pub layers: Vec<String>,
+    /// Stored bytes across the assignment (cost-model bookkeeping).
+    pub bytes: u64,
+    /// MACs per sample across the assignment.
+    pub macs: u64,
+}
+
+/// A complete placement: checkpoint identity + per-worker assignments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementPlan {
+    /// Checkpoint path as the cluster's nodes resolve it.
+    pub checkpoint: String,
+    /// Identity hash of the checkpoint bytes (see
+    /// [`checkpoint_identity_hash`]); carried by the wire handshake.
+    pub checkpoint_hash: u64,
+    pub mode: PlacementMode,
+    pub workers: Vec<WorkerAssignment>,
+}
+
+impl PlacementPlan {
+    /// Plan `checkpoint` across `addrs.len()` workers. Partition mode
+    /// splits the layer chain by the cost model; replica mode assigns the
+    /// whole model everywhere. Metadata comes from one header pass over
+    /// `src` — no payload I/O.
+    pub fn build(
+        src: &dyn WeightSource,
+        checkpoint: &str,
+        checkpoint_hash: u64,
+        mode: PlacementMode,
+        addrs: &[String],
+    ) -> Result<PlacementPlan> {
+        anyhow::ensure!(!addrs.is_empty(), "a placement plan needs at least one worker");
+        let costs = layer_costs(src);
+        anyhow::ensure!(
+            !costs.is_empty(),
+            "checkpoint {checkpoint} has no 2-D linear layers to place"
+        );
+        let total_bytes: u64 = costs.iter().map(|c| c.bytes).sum();
+        let total_macs: u64 = costs.iter().map(|c| c.macs).sum();
+        let workers = match mode {
+            PlacementMode::Replica => addrs
+                .iter()
+                .map(|addr| WorkerAssignment {
+                    addr: addr.clone(),
+                    layers: Vec::new(),
+                    bytes: total_bytes,
+                    macs: total_macs,
+                })
+                .collect(),
+            PlacementMode::Partition => {
+                anyhow::ensure!(
+                    addrs.len() <= costs.len(),
+                    "cannot partition {} layers across {} workers",
+                    costs.len(),
+                    addrs.len()
+                );
+                let loads: Vec<f64> = costs
+                    .iter()
+                    .map(|c| {
+                        c.bytes as f64 / total_bytes.max(1) as f64
+                            + c.macs as f64 / total_macs.max(1) as f64
+                    })
+                    .collect();
+                let bounds = partition_contiguous(&loads, addrs.len());
+                let mut out = Vec::with_capacity(addrs.len());
+                let mut start = 0usize;
+                for (addr, end) in addrs.iter().zip(bounds) {
+                    let slice = &costs[start..end];
+                    out.push(WorkerAssignment {
+                        addr: addr.clone(),
+                        layers: slice.iter().map(|c| c.layer.clone()).collect(),
+                        bytes: slice.iter().map(|c| c.bytes).sum(),
+                        macs: slice.iter().map(|c| c.macs).sum(),
+                    });
+                    start = end;
+                }
+                out
+            }
+        };
+        Ok(PlacementPlan {
+            checkpoint: checkpoint.to_string(),
+            checkpoint_hash,
+            mode,
+            workers,
+        })
+    }
+
+    /// Partition plans must tile the checkpoint's layer chain exactly —
+    /// every layer once, in forward order, no skips. A plan that doesn't
+    /// (hand-edited, or stale after a recompression changed the layer
+    /// set) could serve silently wrong outputs whenever stage widths
+    /// happen to line up, so workers refuse it at model load rather than
+    /// trust it. Replica plans always pass (empty assignment = whole
+    /// model, resolved at load).
+    pub fn validate_layers(&self, src: &dyn WeightSource) -> Result<()> {
+        if self.mode != PlacementMode::Partition {
+            return Ok(());
+        }
+        let expected: Vec<String> =
+            layer_infos_from(src).into_iter().map(|i| i.layer).collect();
+        let got: Vec<&String> = self.workers.iter().flat_map(|w| w.layers.iter()).collect();
+        let tiles =
+            got.len() == expected.len() && got.iter().zip(&expected).all(|(a, b)| **a == *b);
+        anyhow::ensure!(
+            tiles,
+            "partition plan does not tile the checkpoint's layer chain: plan stages hold \
+             [{}], checkpoint has [{}]",
+            got.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", "),
+            expected.join(", ")
+        );
+        Ok(())
+    }
+
+    /// Combined normalized load of one assignment: its share of total
+    /// stored bytes plus its share of total MACs (so a perfectly balanced
+    /// partition across W workers gives every worker 2/W).
+    pub fn load_of(&self, w: &WorkerAssignment) -> f64 {
+        let total_bytes: u64 = self.workers.iter().map(|a| a.bytes).sum();
+        let total_macs: u64 = self.workers.iter().map(|a| a.macs).sum();
+        w.bytes as f64 / total_bytes.max(1) as f64 + w.macs as f64 / total_macs.max(1) as f64
+    }
+
+    /// Balance metric the acceptance gate checks: the heaviest worker's
+    /// load over the mean load (1.0 = perfectly balanced).
+    pub fn max_over_mean_load(&self) -> f64 {
+        if self.workers.is_empty() {
+            return 1.0;
+        }
+        let loads: Vec<f64> = self.workers.iter().map(|w| self.load_of(w)).collect();
+        let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        loads.into_iter().fold(0.0f64, f64::max) / mean
+    }
+
+    /// Render as TOML (the exact text [`write`](Self::write) emits).
+    pub fn to_toml_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# rsic cluster placement plan (DESIGN.md §Cluster)\n");
+        out.push_str(&format!("version = {PLAN_VERSION}\n"));
+        out.push_str(&format!("checkpoint = {}\n", toml_quote(&self.checkpoint)));
+        out.push_str(&format!("checkpoint_hash = \"{:016x}\"\n", self.checkpoint_hash));
+        out.push_str(&format!("mode = \"{}\"\n", self.mode.name()));
+        out.push_str(&format!("workers = {}\n", self.workers.len()));
+        for (i, w) in self.workers.iter().enumerate() {
+            out.push_str(&format!("\n[worker.{i}]\n"));
+            out.push_str(&format!("addr = {}\n", toml_quote(&w.addr)));
+            let layers: Vec<String> = w.layers.iter().map(|l| toml_quote(l)).collect();
+            out.push_str(&format!("layers = [{}]\n", layers.join(", ")));
+            out.push_str(&format!("bytes = {}\n", w.bytes));
+            out.push_str(&format!("macs = {}\n", w.macs));
+        }
+        out
+    }
+
+    /// Parse plan text. Structural problems surface as errors, never
+    /// panics — same contract as the shard-manifest parser.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text).context("placement plan is not valid TOML")?;
+        let version = doc.int("version").context("placement plan: version")?;
+        anyhow::ensure!(
+            version == PLAN_VERSION,
+            "unsupported plan version {version} (this build reads {PLAN_VERSION})"
+        );
+        let checkpoint = doc.str("checkpoint").context("placement plan: checkpoint")?.to_string();
+        let hash_hex = doc.str("checkpoint_hash").context("placement plan: checkpoint_hash")?;
+        let checkpoint_hash = u64::from_str_radix(hash_hex, 16)
+            .with_context(|| format!("placement plan: bad checkpoint_hash {hash_hex:?}"))?;
+        let mode = PlacementMode::parse(doc.str("mode").context("placement plan: mode")?)?;
+        let count = doc.int("workers").context("placement plan: workers")?;
+        let count = usize::try_from(count)
+            .map_err(|_| anyhow::anyhow!("placement plan: negative worker count {count}"))?;
+        let mut workers = Vec::with_capacity(count.min(4096));
+        for i in 0..count {
+            let addr = doc
+                .str(&format!("worker.{i}.addr"))
+                .with_context(|| format!("placement plan: worker {i} addr"))?
+                .to_string();
+            let layers_val = doc
+                .get(&format!("worker.{i}.layers"))
+                .with_context(|| format!("placement plan: worker {i} layers"))?;
+            let arr = layers_val
+                .as_array()
+                .with_context(|| format!("placement plan: worker {i} layers is not an array"))?;
+            let layers = arr
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).with_context(|| {
+                        format!("placement plan: worker {i} has a non-string layer name")
+                    })
+                })
+                .collect::<Result<Vec<String>>>()?;
+            let bytes = doc.int(&format!("worker.{i}.bytes")).unwrap_or(0).max(0) as u64;
+            let macs = doc.int(&format!("worker.{i}.macs")).unwrap_or(0).max(0) as u64;
+            workers.push(WorkerAssignment { addr, layers, bytes, macs });
+        }
+        anyhow::ensure!(!workers.is_empty(), "placement plan has no workers");
+        if mode == PlacementMode::Partition {
+            anyhow::ensure!(
+                workers.iter().all(|w| !w.layers.is_empty()),
+                "partition plan has a worker with no layers"
+            );
+        }
+        Ok(PlacementPlan { checkpoint, checkpoint_hash, mode, workers })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading placement plan {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing placement plan {}", path.display()))
+    }
+
+    /// Write atomically via a temp sibling, like every manifest write.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = crate::io::tenz::tmp_sibling(path);
+        std::fs::write(&tmp, self.to_toml_string())
+            .and_then(|()| std::fs::rename(&tmp, path))
+            .map_err(|e| {
+                let _ = std::fs::remove_file(&tmp);
+                anyhow::anyhow!("writing placement plan {}: {e}", path.display())
+            })
+    }
+}
+
+/// Split `loads` into `groups` non-empty contiguous runs minimizing the
+/// maximum per-group sum (the classic linear-partition DP — O(n²·g),
+/// which is nothing at checkpoint scale). Returns the exclusive end
+/// index of each group.
+fn partition_contiguous(loads: &[f64], groups: usize) -> Vec<usize> {
+    let n = loads.len();
+    debug_assert!(groups >= 1 && groups <= n);
+    let mut prefix = vec![0.0f64; n + 1];
+    for (i, l) in loads.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + l;
+    }
+    let sum = |a: usize, b: usize| prefix[b] - prefix[a]; // [a, b)
+    // dp[g][i]: minimal max-group-sum splitting the first i items into g
+    // groups; cut[g][i]: where the last group starts in that optimum.
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; groups + 1];
+    let mut cut = vec![vec![0usize; n + 1]; groups + 1];
+    dp[0][0] = 0.0;
+    for g in 1..=groups {
+        for i in g..=n {
+            for j in (g - 1)..i {
+                let candidate = dp[g - 1][j].max(sum(j, i));
+                if candidate < dp[g][i] {
+                    dp[g][i] = candidate;
+                    cut[g][i] = j;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![0usize; groups];
+    let mut i = n;
+    for g in (1..=groups).rev() {
+        bounds[g - 1] = i;
+        i = cut[g][i];
+    }
+    bounds
+}
+
+/// Cheap identity hash of an **already-open** checkpoint — the value
+/// the wire handshake compares so router and workers agree on *which
+/// bytes* they serve. Sharded checkpoints hash the manifest's per-shard
+/// content records
+/// ([`identity_hash`](crate::io::shard::ShardManifest::identity_hash) —
+/// O(manifest), and the shard hashes already cover the payload). Single `.tenz`
+/// containers hash the indexed header (names, dtypes, dims, offsets,
+/// sizes) — no further I/O; content-level rot there is `rsic verify`'s
+/// job, not the handshake's. Taking the open source (rather than a
+/// path) means the hash describes the same bytes the caller's cost
+/// model and layer list were computed from — no second open, no
+/// replaced-between-opens window.
+pub fn checkpoint_identity_hash_of(src: &CheckpointSource) -> u64 {
+    match src {
+        CheckpointSource::Sharded(s) => s.manifest().identity_hash(),
+        CheckpointSource::Single(r) => {
+            let mut h = Fnv1a::new();
+            for meta in r.tenz().metas() {
+                h.update(meta.name.as_bytes());
+                h.update(&[0, meta.dtype.size() as u8]);
+                h.update(&(meta.dims.len() as u64).to_le_bytes());
+                for d in &meta.dims {
+                    h.update(&(*d as u64).to_le_bytes());
+                }
+                h.update(&meta.offset.to_le_bytes());
+                h.update(&meta.nbytes.to_le_bytes());
+            }
+            h.finish()
+        }
+    }
+}
+
+/// Path convenience over [`checkpoint_identity_hash_of`] for callers
+/// that hold no open source (the worker-side tests, say). Callers that
+/// already opened the checkpoint should hash that source instead.
+pub fn checkpoint_identity_hash(path: impl AsRef<Path>) -> Result<u64> {
+    let path = path.as_ref();
+    let src = CheckpointSource::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    Ok(checkpoint_identity_hash_of(&src))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::{store_weight, StoredWeight};
+    use crate::io::tenz::{TensorEntry, TensorFile};
+    use crate::tensor::Mat;
+
+    /// A chain checkpoint with per-layer output widths `dims[i+1]` and a
+    /// factored layer wherever `ranks[i]` is Some.
+    fn chain(dims: &[usize], ranks: &[Option<usize>]) -> TensorFile {
+        let mut tf = TensorFile::new();
+        for i in 0..dims.len() - 1 {
+            let (d, c) = (dims[i], dims[i + 1]);
+            let w = match ranks[i] {
+                None => StoredWeight::Dense(Mat::zeros(c, d)),
+                Some(k) => {
+                    StoredWeight::Factored { a: Mat::zeros(c, k), b: Mat::zeros(k, d) }
+                }
+            };
+            store_weight(&mut tf, &format!("layers.{i}"), &w);
+            tf.insert(format!("layers.{i}.bias"), TensorEntry::from_f32(vec![c], &vec![0.0; c]));
+        }
+        tf
+    }
+
+    #[test]
+    fn layer_costs_cover_both_representations() {
+        let tf = chain(&[10, 20, 6], &[None, Some(2)]);
+        let costs = layer_costs(&tf);
+        assert_eq!(costs.len(), 2);
+        // Dense 20×10 + bias 20 → 220 params; factored 2·(6+20) + bias 6 → 58.
+        assert_eq!(costs[0].macs, 220);
+        assert_eq!(costs[0].bytes, 220 * 4);
+        assert_eq!(costs[1].macs, 58);
+        assert_eq!(costs[1].layer, "layers.1");
+    }
+
+    #[test]
+    fn partition_dp_is_balanced_and_contiguous() {
+        let loads = [5.0, 1.0, 1.0, 1.0, 1.0, 5.0];
+        let bounds = partition_contiguous(&loads, 3);
+        assert_eq!(bounds.len(), 3);
+        assert_eq!(*bounds.last().unwrap(), loads.len());
+        // Optimal split is [5], [1,1,1,1], [5] — max group sum 5.
+        assert_eq!(bounds, vec![1, 5, 6]);
+    }
+
+    #[test]
+    fn plan_roundtrips_through_toml() {
+        let tf = chain(&[8, 16, 12, 4], &[None, Some(3), None]);
+        let addrs = vec!["127.0.0.1:7101".to_string(), "127.0.0.1:7102".to_string()];
+        let plan = PlacementPlan::build(&tf, "m.toml", 0xabc, PlacementMode::Partition, &addrs)
+            .unwrap();
+        assert_eq!(plan.workers.len(), 2);
+        let all: Vec<String> =
+            plan.workers.iter().flat_map(|w| w.layers.iter().cloned()).collect();
+        assert_eq!(all, vec!["layers.0", "layers.1", "layers.2"], "stages stay contiguous");
+        let back = PlacementPlan::parse(&plan.to_toml_string()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn replica_plan_assigns_whole_model() {
+        let tf = chain(&[8, 4], &[None]);
+        let addrs = vec!["a:1".to_string(), "b:2".to_string(), "c:3".to_string()];
+        let plan =
+            PlacementPlan::build(&tf, "m.tenz", 7, PlacementMode::Replica, &addrs).unwrap();
+        assert_eq!(plan.workers.len(), 3);
+        assert!(plan.workers.iter().all(|w| w.layers.is_empty()));
+        assert!((plan.max_over_mean_load() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_plan_must_tile_the_layer_chain() {
+        // Equal widths everywhere: the dangerous case, where a skipped
+        // layer still chains and would serve silently wrong outputs.
+        let tf = chain(&[8, 8, 8, 8], &[None, None, None]);
+        let addrs = vec!["a:1".to_string(), "b:2".to_string()];
+        let plan =
+            PlacementPlan::build(&tf, "m", 0, PlacementMode::Partition, &addrs).unwrap();
+        plan.validate_layers(&tf).unwrap();
+        // Drop a mid-chain layer from its stage: refused.
+        let mut skipped = plan.clone();
+        for w in skipped.workers.iter_mut() {
+            w.layers.retain(|l| l != "layers.1");
+        }
+        assert!(skipped.validate_layers(&tf).is_err());
+        // Reorder two layers: refused.
+        let mut swapped = plan.clone();
+        let flat: Vec<String> =
+            swapped.workers.iter().flat_map(|w| w.layers.iter().cloned()).collect();
+        assert_eq!(flat.len(), 3);
+        swapped.workers[0].layers = vec![flat[1].clone(), flat[0].clone()];
+        swapped.workers[1].layers = flat[2..].to_vec();
+        assert!(swapped.validate_layers(&tf).is_err());
+        // Replica plans (empty assignments) always pass.
+        let replica =
+            PlacementPlan::build(&tf, "m", 0, PlacementMode::Replica, &addrs).unwrap();
+        replica.validate_layers(&tf).unwrap();
+    }
+
+    #[test]
+    fn bad_plans_are_rejected() {
+        assert!(PlacementPlan::parse("not toml [").is_err());
+        assert!(PlacementPlan::parse("version = 99\n").is_err());
+        let missing_workers =
+            "version = 1\ncheckpoint = \"m\"\ncheckpoint_hash = \"0\"\nmode = \"replica\"\nworkers = 0\n";
+        assert!(PlacementPlan::parse(missing_workers).is_err());
+        let empty_stage = "version = 1\ncheckpoint = \"m\"\ncheckpoint_hash = \"0\"\n\
+                           mode = \"partition\"\nworkers = 1\n[worker.0]\naddr = \"a\"\nlayers = []\n";
+        assert!(PlacementPlan::parse(empty_stage).is_err());
+        let tf = chain(&[4, 4], &[None]);
+        let too_many: Vec<String> = (0..3).map(|i| format!("w{i}")).collect();
+        assert!(
+            PlacementPlan::build(&tf, "m", 0, PlacementMode::Partition, &too_many).is_err(),
+            "1 layer cannot partition across 3 workers"
+        );
+    }
+}

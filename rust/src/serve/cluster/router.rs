@@ -1,0 +1,352 @@
+//! The routing front end: where micro-batches leave the process.
+//!
+//! A [`Router`] owns one health-tracked connection per placement-plan
+//! worker and moves whole coalesced batches over the wire:
+//!
+//! * **replica** plans — each batch goes to one worker, chosen
+//!   round-robin; a failed worker is skipped (bounded retry across the
+//!   remaining replicas) and marked down until a later call revives it.
+//! * **partition** plans — the batch flows stage-to-stage: worker 0's
+//!   outputs become worker 1's inputs, exactly the layer chain the
+//!   single-process pass runs, so the routed result is bit-identical.
+//!
+//! The [`RoutedExecutor`] is the glue into the existing serving path:
+//! the micro-batcher drains into it like any [`BatchExecutor`], and when
+//! the fleet cannot answer (workers dead mid-request, wire corruption,
+//! handshake refusal) it **fails over to local in-process execution** —
+//! the kernels are already resident from the model cache — so a worker
+//! dying mid-traffic degrades to single-host serving with zero
+//! client-visible errors.
+
+use super::placement::{PlacementMode, PlacementPlan};
+use super::wire::{self, Frame, WireError, PROTOCOL_VERSION};
+use crate::serve::batcher::{BatchExecutor, LocalExecutor};
+use crate::serve::metrics::ServeMetrics;
+use crate::tensor::Mat;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Router tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// TCP connect timeout per worker.
+    pub connect_timeout: Duration,
+    /// Read/write timeout on established connections.
+    pub io_timeout: Duration,
+    /// How long a replica marked down is skipped before the scheduler
+    /// risks a batch on it again. Small enough that a restarted worker
+    /// rejoins within a second of traffic; large enough that a dead one
+    /// costs at most one connect timeout per interval, not per batch.
+    pub reprobe_after: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(10),
+            reprobe_after: Duration::from_secs(1),
+        }
+    }
+}
+
+/// One worker connection: lazily dialed, re-dialed once per call on a
+/// stale socket, dropped on transport failure.
+struct Link {
+    addr: String,
+    conn: Mutex<Option<TcpStream>>,
+    /// Advisory health bit (last call's outcome) — the replica scheduler
+    /// prefers live links but still probes down ones, so a restarted
+    /// worker rejoins without operator action.
+    healthy: AtomicBool,
+    /// When the link last failed — a down link becomes eligible again
+    /// once `reprobe_after` has elapsed, so rejoin does not depend on
+    /// every live replica failing in the same call.
+    last_failure: Mutex<Option<std::time::Instant>>,
+}
+
+impl Link {
+    fn mark_down(&self) {
+        self.healthy.store(false, Ordering::Relaxed);
+        *self.last_failure.lock().unwrap() = Some(std::time::Instant::now());
+    }
+
+    /// Live, or down long enough that it is worth a probe.
+    fn eligible(&self, reprobe_after: Duration) -> bool {
+        if self.healthy.load(Ordering::Relaxed) {
+            return true;
+        }
+        self.last_failure
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed() >= reprobe_after)
+            .unwrap_or(true)
+    }
+}
+
+/// Routing front end over one placement plan.
+pub struct Router {
+    plan: PlacementPlan,
+    links: Vec<Link>,
+    config: RouterConfig,
+    rr: AtomicUsize,
+}
+
+impl Router {
+    /// Build a router over `plan`. No I/O happens here — connections are
+    /// dialed (and handshaken) on first use, so a router can outlive
+    /// workers that come and go.
+    pub fn new(plan: PlacementPlan, config: RouterConfig) -> Router {
+        let links = plan
+            .workers
+            .iter()
+            .map(|w| Link {
+                addr: w.addr.clone(),
+                conn: Mutex::new(None),
+                healthy: AtomicBool::new(true),
+                last_failure: Mutex::new(None),
+            })
+            .collect();
+        Router { plan, links, config, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn plan(&self) -> &PlacementPlan {
+        &self.plan
+    }
+
+    /// Does this router's plan cover the checkpoint at `path`? Paths are
+    /// compared as given — the plan must name the checkpoint the way
+    /// clients submit it.
+    pub fn covers(&self, path: &Path) -> bool {
+        Path::new(&self.plan.checkpoint) == path
+    }
+
+    /// Workers whose last interaction succeeded.
+    pub fn healthy_workers(&self) -> usize {
+        self.links.iter().filter(|l| l.healthy.load(Ordering::Relaxed)).count()
+    }
+
+    /// Probe every worker with a `Health` frame; returns how many
+    /// answered. Updates the advisory health bits as a side effect.
+    pub fn health_check(&self) -> usize {
+        (0..self.links.len())
+            .filter(|&i| matches!(self.call_link(i, &Frame::Health), Ok(Frame::HealthOk { .. })))
+            .count()
+    }
+
+    /// Fetch per-model latency statistics from worker `idx`.
+    pub fn worker_stats(&self, idx: usize) -> Result<Vec<wire::ModelStats>, String> {
+        match self.call_link(idx, &Frame::Stats) {
+            Ok(Frame::StatsOk { models }) => Ok(models),
+            Ok(other) => Err(format!("unexpected {} frame", other.name())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    /// Dial and handshake one worker.
+    fn connect(&self, link: &Link) -> Result<TcpStream, WireError> {
+        let addr = link
+            .addr
+            .to_socket_addrs()
+            .map_err(WireError::Io)?
+            .next()
+            .ok_or_else(|| WireError::Malformed(format!("unresolvable address {:?}", link.addr)))?;
+        let mut stream = TcpStream::connect_timeout(&addr, self.config.connect_timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.config.io_timeout))?;
+        stream.set_write_timeout(Some(self.config.io_timeout))?;
+        let hello = Frame::Hello {
+            version: PROTOCOL_VERSION,
+            checkpoint_hash: self.plan.checkpoint_hash,
+        };
+        match wire::call(&mut stream, &hello)? {
+            Frame::HelloAck { version, checkpoint_hash } => {
+                if version != PROTOCOL_VERSION {
+                    return Err(WireError::VersionMismatch {
+                        got: version,
+                        want: PROTOCOL_VERSION,
+                    });
+                }
+                if checkpoint_hash != self.plan.checkpoint_hash {
+                    return Err(WireError::HashMismatch {
+                        got: checkpoint_hash,
+                        want: self.plan.checkpoint_hash,
+                    });
+                }
+                Ok(stream)
+            }
+            Frame::Error { code, message } => Err(WireError::Remote { code, message }),
+            other => Err(WireError::Unexpected(other.name())),
+        }
+    }
+
+    /// One request/response against worker `idx`. A stale cached
+    /// connection (worker restarted since the last call) gets exactly one
+    /// reconnect-and-retry; transport failures drop the connection and
+    /// mark the link down, protocol-level `Error` answers keep it up
+    /// (the worker is alive — it just refused this request).
+    fn call_link(&self, idx: usize, request: &Frame) -> Result<Frame, WireError> {
+        let link = &self.links[idx];
+        let mut guard = link.conn.lock().unwrap();
+        for attempt in 0..2 {
+            let had_cached = guard.is_some();
+            let mut stream = match guard.take() {
+                Some(s) => s,
+                None => match self.connect(link) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        link.mark_down();
+                        return Err(e);
+                    }
+                },
+            };
+            match wire::call(&mut stream, request) {
+                Ok(Frame::Error { code, message }) => {
+                    *guard = Some(stream);
+                    link.healthy.store(true, Ordering::Relaxed);
+                    return Err(WireError::Remote { code, message });
+                }
+                Ok(frame) => {
+                    *guard = Some(stream);
+                    link.healthy.store(true, Ordering::Relaxed);
+                    return Ok(frame);
+                }
+                Err(e) => {
+                    // Dead socket: retry once on a fresh dial if this one
+                    // came from the cache, otherwise give up.
+                    drop(stream);
+                    if attempt == 0 && had_cached {
+                        continue;
+                    }
+                    link.mark_down();
+                    return Err(e);
+                }
+            }
+        }
+        unreachable!("loop always returns within two attempts")
+    }
+
+    /// Route one batch through the fleet. Replica: round-robin with
+    /// failover across every worker. Partition: stage-to-stage through
+    /// all of them. Any unrecoverable failure returns `Err` — the caller
+    /// (normally [`RoutedExecutor`]) decides whether to fall back local.
+    pub fn forward(&self, batch: &Mat<f32>) -> Result<Mat<f32>, String> {
+        let model = self.plan.checkpoint.clone();
+        match self.plan.mode {
+            PlacementMode::Replica => {
+                let n = self.links.len();
+                let start = self.rr.fetch_add(1, Ordering::Relaxed);
+                // One frame for every attempt: the request is identical
+                // across replicas, and the batch clone is the expensive
+                // part of a retry.
+                let req = Frame::Forward { model, batch: batch.clone() };
+                // Snapshot eligibility once, then try each eligible link
+                // at most once: live links, plus down links whose
+                // `reprobe_after` has elapsed — so a restarted replica
+                // rejoins within the interval even while others keep
+                // answering. Links inside their throttle window are
+                // never dialed (a dead fleet costs the caller an
+                // immediate local failover, not a connect timeout per
+                // link per batch), and a link that fails *during* this
+                // sweep is not retried — the snapshot was taken before.
+                let eligible: Vec<usize> = (0..n)
+                    .map(|off| (start + off) % n)
+                    .filter(|&idx| self.links[idx].eligible(self.config.reprobe_after))
+                    .collect();
+                let mut last_err =
+                    String::from("no eligible workers (all replicas recently failed)");
+                for idx in eligible {
+                    match self.call_link(idx, &req) {
+                        Ok(Frame::ForwardOk { outputs }) => return Ok(outputs),
+                        Ok(other) => {
+                            last_err = format!(
+                                "worker {}: unexpected {} frame",
+                                self.links[idx].addr,
+                                other.name()
+                            );
+                        }
+                        Err(e) => {
+                            last_err = format!("worker {}: {e}", self.links[idx].addr);
+                        }
+                    }
+                }
+                Err(last_err)
+            }
+            PlacementMode::Partition => {
+                let mut h = batch.clone();
+                for idx in 0..self.links.len() {
+                    let req = Frame::Forward { model: model.clone(), batch: h };
+                    match self.call_link(idx, &req) {
+                        Ok(Frame::ForwardOk { outputs }) => h = outputs,
+                        Ok(other) => {
+                            return Err(format!(
+                                "stage {idx} ({}): unexpected {} frame",
+                                self.links[idx].addr,
+                                other.name()
+                            ))
+                        }
+                        Err(e) => {
+                            return Err(format!(
+                                "stage {idx} ({}): {e}",
+                                self.links[idx].addr
+                            ))
+                        }
+                    }
+                }
+                Ok(h)
+            }
+        }
+    }
+}
+
+/// [`BatchExecutor`] over a [`Router`], with local failover: batches go
+/// to the fleet; if the fleet cannot answer, the batch runs on the local
+/// kernels (already resident via the model cache) and the failover is
+/// counted in [`ServeMetrics`]. Clients never see fleet failures.
+pub struct RoutedExecutor {
+    router: Arc<Router>,
+    local: LocalExecutor,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl RoutedExecutor {
+    pub fn new(router: Arc<Router>, local: LocalExecutor, metrics: Arc<ServeMetrics>) -> Self {
+        RoutedExecutor { router, local, metrics }
+    }
+}
+
+impl BatchExecutor for RoutedExecutor {
+    fn label(&self) -> &str {
+        self.local.label()
+    }
+
+    fn input_dim(&self) -> usize {
+        self.local.input_dim()
+    }
+
+    fn execute(&self, inputs: Mat<f32>) -> Result<Vec<Vec<f32>>, String> {
+        match self.router.forward(&inputs) {
+            Ok(out) if out.rows() == inputs.rows() => {
+                self.metrics.routed_batches.fetch_add(1, Ordering::Relaxed);
+                Ok((0..out.rows()).map(|r| out.row(r).to_vec()).collect())
+            }
+            Ok(out) => {
+                log::warn!(
+                    "routed batch answered {} rows for {} inputs — failing over to local",
+                    out.rows(),
+                    inputs.rows()
+                );
+                self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                self.local.execute(inputs)
+            }
+            Err(e) => {
+                log::warn!("routed batch failed ({e}) — failing over to local");
+                self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                self.local.execute(inputs)
+            }
+        }
+    }
+}

@@ -1,0 +1,516 @@
+//! Length-prefixed binary wire protocol for multi-host serving.
+//!
+//! Every message on a cluster connection is one *frame*: a little-endian
+//! `u32` byte length followed by a one-byte tag and the tag's body. The
+//! conversation is strictly request/response — the router writes one
+//! frame, the worker answers with exactly one — so the codec never needs
+//! message IDs or reordering. Connections open with a handshake
+//! ([`Frame::Hello`] ↔ [`Frame::HelloAck`]) carrying the protocol version
+//! and the checkpoint identity hash from the placement plan, so a router
+//! can never route traffic at a worker serving different bytes.
+//!
+//! Decoding follows the same discipline as the `.tenz` parser
+//! (`io::tenz::scan_index`): every declared size is validated against the
+//! bytes actually present *before* any allocation, truncation and bad
+//! tags surface as typed [`WireError`]s (never panics), and the outer
+//! length prefix is capped at [`MAX_FRAME_BYTES`] so a corrupt or hostile
+//! peer cannot make the receiver allocate unboundedly.
+
+use crate::tensor::Mat;
+use std::io::{Read, Write};
+use thiserror::Error;
+
+/// Protocol version this build speaks. Bumped on any frame-layout change;
+/// the handshake refuses mismatched peers up front.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on one frame's payload (tag + body). A `Forward` carrying a
+/// 4096-wide batch of 4096 f32 features is ~64 MiB; anything larger is a
+/// corrupt length prefix, not traffic.
+pub const MAX_FRAME_BYTES: usize = 1 << 26;
+
+/// Typed wire failures. `Io` covers transport errors; everything else is
+/// a protocol-level defect the corruption suite exercises.
+#[derive(Debug, Error)]
+pub enum WireError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("frame of {got} bytes exceeds the {max}-byte cap")]
+    Oversized { got: u64, max: u64 },
+    #[error("frame truncated at byte {at}: need {need} more, have {have}")]
+    Truncated { at: usize, need: u64, have: u64 },
+    #[error("unknown frame tag {0}")]
+    BadTag(u8),
+    #[error("frame string is not utf-8")]
+    BadUtf8,
+    #[error("malformed frame: {0}")]
+    Malformed(String),
+    #[error("peer speaks protocol {got}, this build speaks {want}")]
+    VersionMismatch { got: u32, want: u32 },
+    #[error("checkpoint hash mismatch: peer serves {got:016x}, plan says {want:016x}")]
+    HashMismatch { got: u64, want: u64 },
+    #[error("remote {code:?}: {message}")]
+    Remote { code: ErrorCode, message: String },
+    #[error("unexpected {0} frame in this protocol state")]
+    Unexpected(&'static str),
+}
+
+/// Error categories a peer can answer with (the body of [`Frame::Error`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Handshake protocol-version disagreement.
+    VersionMismatch,
+    /// Handshake checkpoint-hash disagreement.
+    HashMismatch,
+    /// Request the worker refuses (wrong model, bad batch width, frame
+    /// out of protocol order).
+    BadRequest,
+    /// The worker could not load its model assignment.
+    ModelLoad,
+    /// Execution failure inside the worker.
+    Internal,
+}
+
+impl ErrorCode {
+    fn tag(self) -> u16 {
+        match self {
+            ErrorCode::VersionMismatch => 1,
+            ErrorCode::HashMismatch => 2,
+            ErrorCode::BadRequest => 3,
+            ErrorCode::ModelLoad => 4,
+            ErrorCode::Internal => 5,
+        }
+    }
+
+    fn from_tag(tag: u16) -> Result<Self, WireError> {
+        Ok(match tag {
+            1 => ErrorCode::VersionMismatch,
+            2 => ErrorCode::HashMismatch,
+            3 => ErrorCode::BadRequest,
+            4 => ErrorCode::ModelLoad,
+            5 => ErrorCode::Internal,
+            other => return Err(WireError::Malformed(format!("unknown error code {other}"))),
+        })
+    }
+}
+
+/// Per-model latency statistics carried by [`Frame::StatsOk`] — the wire
+/// form of [`LatencyQuantiles`](crate::serve::metrics::LatencyQuantiles),
+/// keyed by checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelStats {
+    pub model: String,
+    /// Requests ever recorded for this model.
+    pub n: u64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// One protocol message. Request frames flow router → worker; `*Ok`,
+/// `HelloAck` and `Error` flow back.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Connection opener: protocol version + checkpoint identity hash.
+    Hello { version: u32, checkpoint_hash: u64 },
+    /// Handshake acceptance, echoing the worker's own version and hash.
+    HelloAck { version: u32, checkpoint_hash: u64 },
+    /// Run one coalesced batch (N×D row-major) through the worker's
+    /// layer assignment for `model`.
+    Forward { model: String, batch: Mat<f32> },
+    /// The batch's outputs, one row per input row, in order.
+    ForwardOk { outputs: Mat<f32> },
+    /// Liveness probe.
+    Health,
+    /// Liveness answer: models currently loaded, requests served.
+    HealthOk { models: u32, requests: u64 },
+    /// Ask for per-model latency statistics.
+    Stats,
+    /// Per-model latency statistics (sorted by model name).
+    StatsOk { models: Vec<ModelStats> },
+    /// Typed failure answer to any request.
+    Error { code: ErrorCode, message: String },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_FORWARD: u8 = 3;
+const TAG_FORWARD_OK: u8 = 4;
+const TAG_HEALTH: u8 = 5;
+const TAG_HEALTH_OK: u8 = 6;
+const TAG_STATS: u8 = 7;
+const TAG_STATS_OK: u8 = 8;
+const TAG_ERROR: u8 = 9;
+
+/// Bounds-checked little-endian reader over one frame's bytes.
+struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        FrameReader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated {
+                at: self.pos,
+                need: n as u64,
+                have: self.remaining() as u64,
+            });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// u16-length-prefixed UTF-8 string.
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    /// `rows × cols` f32 matrix. The element count is validated against
+    /// the bytes actually present before any allocation — a corrupt
+    /// header cannot trigger an unbounded (or even oversized) `Vec`.
+    fn mat(&mut self) -> Result<Mat<f32>, WireError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let elems = (rows as u64)
+            .checked_mul(cols as u64)
+            .ok_or_else(|| WireError::Malformed("matrix element count overflows".into()))?;
+        let nbytes = elems
+            .checked_mul(4)
+            .ok_or_else(|| WireError::Malformed("matrix byte count overflows".into()))?;
+        if (self.remaining() as u64) < nbytes {
+            return Err(WireError::Truncated {
+                at: self.pos,
+                need: nbytes,
+                have: self.remaining() as u64,
+            });
+        }
+        let raw = self.take(nbytes as usize)?;
+        let data: Vec<f32> =
+            raw.chunks_exact(4).map(|ch| f32::from_le_bytes(ch.try_into().unwrap())).collect();
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    /// Every body must consume its frame exactly; trailing bytes mean a
+    /// mangled length prefix or a mis-encoded frame.
+    fn finish(self, what: &str) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{what} frame has {} trailing bytes",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) -> Result<(), WireError> {
+    let len = u16::try_from(s.len())
+        .map_err(|_| WireError::Malformed(format!("string of {} bytes exceeds u16", s.len())))?;
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn put_mat(out: &mut Vec<u8>, m: &Mat<f32>) -> Result<(), WireError> {
+    let rows = u32::try_from(m.rows())
+        .map_err(|_| WireError::Malformed("matrix rows exceed u32".into()))?;
+    let cols = u32::try_from(m.cols())
+        .map_err(|_| WireError::Malformed("matrix cols exceed u32".into()))?;
+    out.extend_from_slice(&rows.to_le_bytes());
+    out.extend_from_slice(&cols.to_le_bytes());
+    out.reserve(m.len() * 4);
+    for v in m.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+impl Frame {
+    /// Short name for diagnostics ([`WireError::Unexpected`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::HelloAck { .. } => "HelloAck",
+            Frame::Forward { .. } => "Forward",
+            Frame::ForwardOk { .. } => "ForwardOk",
+            Frame::Health => "Health",
+            Frame::HealthOk { .. } => "HealthOk",
+            Frame::Stats => "Stats",
+            Frame::StatsOk { .. } => "StatsOk",
+            Frame::Error { .. } => "Error",
+        }
+    }
+
+    /// Encode tag + body (everything after the length prefix).
+    pub fn encode_body(&self) -> Result<Vec<u8>, WireError> {
+        let mut out = Vec::new();
+        match self {
+            Frame::Hello { version, checkpoint_hash } => {
+                out.push(TAG_HELLO);
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&checkpoint_hash.to_le_bytes());
+            }
+            Frame::HelloAck { version, checkpoint_hash } => {
+                out.push(TAG_HELLO_ACK);
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&checkpoint_hash.to_le_bytes());
+            }
+            Frame::Forward { model, batch } => {
+                out.push(TAG_FORWARD);
+                put_string(&mut out, model)?;
+                put_mat(&mut out, batch)?;
+            }
+            Frame::ForwardOk { outputs } => {
+                out.push(TAG_FORWARD_OK);
+                put_mat(&mut out, outputs)?;
+            }
+            Frame::Health => out.push(TAG_HEALTH),
+            Frame::HealthOk { models, requests } => {
+                out.push(TAG_HEALTH_OK);
+                out.extend_from_slice(&models.to_le_bytes());
+                out.extend_from_slice(&requests.to_le_bytes());
+            }
+            Frame::Stats => out.push(TAG_STATS),
+            Frame::StatsOk { models } => {
+                out.push(TAG_STATS_OK);
+                let count = u32::try_from(models.len())
+                    .map_err(|_| WireError::Malformed("too many stats entries".into()))?;
+                out.extend_from_slice(&count.to_le_bytes());
+                for m in models {
+                    put_string(&mut out, &m.model)?;
+                    out.extend_from_slice(&m.n.to_le_bytes());
+                    out.extend_from_slice(&m.p50.to_le_bytes());
+                    out.extend_from_slice(&m.p99.to_le_bytes());
+                    out.extend_from_slice(&m.max.to_le_bytes());
+                }
+            }
+            Frame::Error { code, message } => {
+                out.push(TAG_ERROR);
+                out.extend_from_slice(&code.tag().to_le_bytes());
+                put_string(&mut out, message)?;
+            }
+        }
+        if out.len() > MAX_FRAME_BYTES {
+            return Err(WireError::Oversized {
+                got: out.len() as u64,
+                max: MAX_FRAME_BYTES as u64,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Decode tag + body. Never panics and never allocates more than the
+    /// buffer it is handed; all failures are typed [`WireError`]s.
+    pub fn decode_body(buf: &[u8]) -> Result<Frame, WireError> {
+        let mut r = FrameReader::new(buf);
+        let tag = r.u8()?;
+        let frame = match tag {
+            TAG_HELLO => {
+                Frame::Hello { version: r.u32()?, checkpoint_hash: r.u64()? }
+            }
+            TAG_HELLO_ACK => {
+                Frame::HelloAck { version: r.u32()?, checkpoint_hash: r.u64()? }
+            }
+            TAG_FORWARD => {
+                let model = r.string()?;
+                let batch = r.mat()?;
+                Frame::Forward { model, batch }
+            }
+            TAG_FORWARD_OK => Frame::ForwardOk { outputs: r.mat()? },
+            TAG_HEALTH => Frame::Health,
+            TAG_HEALTH_OK => Frame::HealthOk { models: r.u32()?, requests: r.u64()? },
+            TAG_STATS => Frame::Stats,
+            TAG_STATS_OK => {
+                let count = r.u32()? as usize;
+                // Each entry is ≥ 34 bytes; refuse counts the remaining
+                // bytes cannot possibly hold before reserving anything.
+                if count > r.remaining() / 34 {
+                    return Err(WireError::Malformed(format!(
+                        "stats count {count} exceeds frame capacity"
+                    )));
+                }
+                let mut models = Vec::with_capacity(count);
+                for _ in 0..count {
+                    models.push(ModelStats {
+                        model: r.string()?,
+                        n: r.u64()?,
+                        p50: r.f64()?,
+                        p99: r.f64()?,
+                        max: r.f64()?,
+                    });
+                }
+                Frame::StatsOk { models }
+            }
+            TAG_ERROR => {
+                let code = ErrorCode::from_tag(r.u16()?)?;
+                Frame::Error { code, message: r.string()? }
+            }
+            other => return Err(WireError::BadTag(other)),
+        };
+        r.finish(frame.name())?;
+        Ok(frame)
+    }
+}
+
+/// Write one frame: u32 length prefix, then tag + body.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), WireError> {
+    let body = frame.encode_body()?;
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. The length prefix is validated against
+/// [`MAX_FRAME_BYTES`] *before* the body buffer is allocated.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { got: len as u64, max: MAX_FRAME_BYTES as u64 });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Frame::decode_body(&body)
+}
+
+/// One request/response exchange on an established connection.
+pub fn call(stream: &mut (impl Read + Write), request: &Frame) -> Result<Frame, WireError> {
+    write_frame(stream, request)?;
+    read_frame(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { version: 1, checkpoint_hash: 0xdead_beef },
+            Frame::HelloAck { version: 7, checkpoint_hash: u64::MAX },
+            Frame::Forward {
+                model: "ckpt/model.toml".into(),
+                batch: Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32 * 0.5 - 3.0),
+            },
+            Frame::ForwardOk { outputs: Mat::from_fn(3, 2, |r, c| (r + c) as f32) },
+            Frame::Health,
+            Frame::HealthOk { models: 2, requests: 12345 },
+            Frame::Stats,
+            Frame::StatsOk {
+                models: vec![
+                    ModelStats { model: "a.tenz".into(), n: 9, p50: 0.001, p99: 0.005, max: 0.9 },
+                    ModelStats { model: "b.toml".into(), n: 0, p50: 0.0, p99: 0.0, max: 0.0 },
+                ],
+            },
+            Frame::Error { code: ErrorCode::ModelLoad, message: "no such shard".into() },
+        ]
+    }
+
+    #[test]
+    fn every_frame_roundtrips() {
+        for f in sample_frames() {
+            let body = f.encode_body().unwrap();
+            let back = Frame::decode_body(&body).unwrap();
+            assert_eq!(back, f, "frame {:?}", f.name());
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip_back_to_back() {
+        let mut buf = Vec::new();
+        for f in sample_frames() {
+            write_frame(&mut buf, &f).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for f in sample_frames() {
+            assert_eq!(read_frame(&mut cursor).unwrap(), f);
+        }
+        // The stream is exactly consumed.
+        assert!(matches!(read_frame(&mut cursor), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&[0; 16]);
+        let err = read_frame(&mut std::io::Cursor::new(buf)).unwrap_err();
+        assert!(matches!(err, WireError::Oversized { .. }), "{err}");
+    }
+
+    #[test]
+    fn huge_declared_matrix_is_truncation_not_allocation() {
+        // Forward frame declaring u32::MAX × u32::MAX rows/cols with a
+        // tiny actual payload must fail cleanly before any reserve.
+        let mut body = vec![TAG_FORWARD];
+        put_string(&mut body, "m").unwrap();
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        body.extend_from_slice(&[0u8; 8]);
+        let err = Frame::decode_body(&body).unwrap_err();
+        assert!(
+            matches!(err, WireError::Truncated { .. } | WireError::Malformed(_)),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut body = Frame::Health.encode_body().unwrap();
+        body.push(0);
+        assert!(matches!(Frame::decode_body(&body), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn bad_tag_and_bad_code_rejected() {
+        assert!(matches!(Frame::decode_body(&[200]), Err(WireError::BadTag(200))));
+        assert!(matches!(Frame::decode_body(&[]), Err(WireError::Truncated { .. })));
+        let mut body = vec![TAG_ERROR];
+        body.extend_from_slice(&99u16.to_le_bytes());
+        body.extend_from_slice(&0u16.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&body), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn non_utf8_string_rejected() {
+        let mut body = vec![TAG_FORWARD];
+        body.extend_from_slice(&2u16.to_le_bytes());
+        body.extend_from_slice(&[0xff, 0xfe]);
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&body), Err(WireError::BadUtf8)));
+    }
+}

@@ -1,0 +1,557 @@
+//! A cluster worker: one process serving its placement-plan assignment
+//! over TCP.
+//!
+//! `rsic worker --listen ADDR --plan P` runs one of these. The worker
+//! reads the shared placement plan, takes assignment `--index`, and
+//! serves [`Forward`](Frame::Forward) requests over the wire protocol:
+//!
+//! * The model loads **lazily on first traffic**, through
+//!   [`CheckpointSource`] — on a sharded checkpoint a partitioned worker
+//!   materializes only its assigned layers, so only their shards are
+//!   ever opened (the `ShardedReader` laziness the placement planner
+//!   counts on).
+//! * Batches execute on the worker's own [`WorkerPool`] — the same
+//!   engine single-process serving uses, which is what makes routed
+//!   outputs bit-identical to local ones.
+//! * Every connection starts with a handshake checking the protocol
+//!   version and the plan's checkpoint identity hash; a router pointed
+//!   at a worker serving different bytes is refused with a typed error
+//!   frame before any traffic flows.
+//!
+//! [`Worker::spawn`] runs the same accept loop on a background thread
+//! with an ephemeral port — the loopback form the cluster tests and the
+//! CI smoke step drive.
+
+use super::placement::PlacementPlan;
+use super::wire::{read_frame, write_frame, ErrorCode, Frame, ModelStats, PROTOCOL_VERSION};
+use crate::coordinator::pool::WorkerPool;
+use crate::io::checkpoint::CheckpointSource;
+use crate::serve::kernel::ModelKernels;
+use crate::serve::metrics::ServeMetrics;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker construction options (the `rsic worker` CLI flags).
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Address to bind (`host:port`; port 0 binds ephemerally).
+    pub listen: String,
+    /// The shared placement plan.
+    pub plan: PlacementPlan,
+    /// Which of the plan's assignments this worker serves.
+    pub index: usize,
+    /// Threads in the worker's forward-pass pool.
+    pub threads: usize,
+    /// Bounded job-queue depth of the pool.
+    pub queue_depth: usize,
+    /// Run the checkpoint integrity pass (`verify_hashes` on sharded
+    /// checkpoints, a full structural read on single files) at model
+    /// load, before answering any traffic with it.
+    pub verify: bool,
+}
+
+impl WorkerConfig {
+    pub fn new(listen: impl Into<String>, plan: PlacementPlan, index: usize) -> Self {
+        WorkerConfig {
+            listen: listen.into(),
+            plan,
+            index,
+            threads: crate::util::default_threads(),
+            queue_depth: 16,
+            verify: false,
+        }
+    }
+}
+
+/// Shared state of one worker process.
+struct WorkerState {
+    plan: PlacementPlan,
+    index: usize,
+    verify: bool,
+    pool: WorkerPool,
+    metrics: ServeMetrics,
+    /// Kernels for the plan's checkpoint, loaded on first Forward. The
+    /// load error (if any) is not cached: a worker started before its
+    /// checkpoint finished writing recovers on a later request.
+    model: Mutex<Option<Arc<ModelKernels>>>,
+}
+
+impl WorkerState {
+    /// This worker's layer assignment slice of the plan.
+    fn assignment(&self) -> &super::placement::WorkerAssignment {
+        &self.plan.workers[self.index]
+    }
+
+    /// Load (or fetch) the kernels for this worker's assignment.
+    fn model(&self) -> Result<Arc<ModelKernels>, String> {
+        let mut guard = self.model.lock().unwrap();
+        if let Some(m) = &*guard {
+            return Ok(m.clone());
+        }
+        let src = CheckpointSource::open(&self.plan.checkpoint)
+            .map_err(|e| format!("opening {}: {e}", self.plan.checkpoint))?;
+        if self.verify {
+            src.verify().map_err(|e| format!("verifying {}: {e}", self.plan.checkpoint))?;
+        }
+        // A partition plan that skips, duplicates or reorders layers
+        // would serve wrong outputs whenever stage widths line up —
+        // refuse it here (typed ModelLoad error over the wire) instead.
+        self.plan.validate_layers(&src).map_err(|e| format!("{e:#}"))?;
+        let assignment = self.assignment();
+        let loaded = if assignment.layers.is_empty() {
+            ModelKernels::load(&src)
+        } else {
+            let final_stage = self.index + 1 == self.plan.workers.len();
+            ModelKernels::load_subset(&src, &assignment.layers, final_stage)
+        }
+        .map_err(|e| format!("loading {}: {e:#}", self.plan.checkpoint))?;
+        let m = Arc::new(loaded);
+        *guard = Some(m.clone());
+        Ok(m)
+    }
+
+    fn models_loaded(&self) -> u32 {
+        u32::from(self.model.lock().unwrap().is_some())
+    }
+}
+
+/// Handle to an in-process worker (loopback testing, the routed bench).
+/// Dropping it shuts the worker down and joins every thread.
+pub struct WorkerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    state: Arc<WorkerState>,
+}
+
+impl WorkerHandle {
+    /// The address the worker actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The worker's serving metrics (assertion surface for tests).
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.state.metrics
+    }
+
+    /// Stop accepting, close connections, join threads. Idempotent;
+    /// also runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The worker entry points.
+pub struct Worker;
+
+impl Worker {
+    /// Bind `config.listen` and serve on a background thread. Returns
+    /// once the socket is listening, so the caller can hand the real
+    /// address (ephemeral ports resolved) to a router.
+    pub fn spawn(config: WorkerConfig) -> Result<WorkerHandle> {
+        anyhow::ensure!(
+            config.index < config.plan.workers.len(),
+            "worker index {} out of range for a {}-worker plan",
+            config.index,
+            config.plan.workers.len()
+        );
+        let listener = TcpListener::bind(&config.listen)
+            .with_context(|| format!("binding worker listener on {}", config.listen))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(WorkerState {
+            index: config.index,
+            verify: config.verify,
+            pool: WorkerPool::new(config.threads, config.queue_depth.max(1)),
+            metrics: ServeMetrics::new(),
+            model: Mutex::new(None),
+            plan: config.plan,
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let loop_state = state.clone();
+        let loop_shutdown = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("rsic-cluster-worker-{}", config.index))
+            .spawn(move || accept_loop(listener, loop_state, loop_shutdown))
+            .context("spawning worker accept thread")?;
+        Ok(WorkerHandle { addr, shutdown, accept_thread: Some(accept_thread), state })
+    }
+
+    /// Blocking form for the `rsic worker` CLI: serve until the process
+    /// is killed.
+    pub fn run(config: WorkerConfig) -> Result<()> {
+        let handle = Self::spawn(config)?;
+        log::info!("worker listening on {}", handle.addr());
+        println!("worker listening on {}", handle.addr());
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<WorkerState>, shutdown: Arc<AtomicBool>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                // Persistent accept errors (fd exhaustion, say) must not
+                // busy-spin a core on a long-lived worker.
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connection from WorkerHandle::shutdown
+        }
+        let conn_state = state.clone();
+        let conn_shutdown = shutdown.clone();
+        if let Ok(t) = std::thread::Builder::new()
+            .name("rsic-cluster-conn".into())
+            .spawn(move || serve_conn(stream, conn_state, conn_shutdown))
+        {
+            conns.push(t);
+        }
+        // Reap finished connection threads so a long-lived worker does
+        // not accumulate handles.
+        conns.retain(|t| !t.is_finished());
+    }
+    for t in conns {
+        let _ = t.join();
+    }
+}
+
+/// How often an idle connection re-checks the shutdown flag.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+/// Full I/O budget for one frame once its first byte has arrived (and
+/// for writes). A peer stalling longer mid-frame is treated as dead.
+const FRAME_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One connection: handshake, then a request/response loop until EOF,
+/// shutdown, or an unrecoverable protocol error.
+fn serve_conn(mut stream: TcpStream, state: Arc<WorkerState>, shutdown: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(FRAME_TIMEOUT));
+    let mut greeted = false;
+    while !shutdown.load(Ordering::SeqCst) {
+        // Idle-wait for the next frame's first byte with a short poll so
+        // shutdown is noticed promptly. `peek` consumes nothing, so a
+        // timeout here can never desynchronize the stream — unlike a
+        // timeout inside `read_frame`, whose `read_exact` may already
+        // have consumed part of a frame.
+        let _ = stream.set_read_timeout(Some(IDLE_POLL));
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return, // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return,
+        }
+        // A frame has started: give it the full I/O budget. A mid-frame
+        // stall past it closes the connection (the stream position would
+        // be unrecoverable anyway) — never a silent resync.
+        let _ = stream.set_read_timeout(Some(FRAME_TIMEOUT));
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(super::wire::WireError::Io(_)) => return, // peer gone or stalled
+            Err(e) => {
+                // Protocol corruption: answer with a typed error and
+                // close — the stream position is no longer trustworthy.
+                let _ = write_frame(
+                    &mut stream,
+                    &Frame::Error { code: ErrorCode::BadRequest, message: e.to_string() },
+                );
+                return;
+            }
+        };
+        let reply = match frame {
+            Frame::Hello { version, checkpoint_hash } => {
+                if version != PROTOCOL_VERSION {
+                    let _ = write_frame(
+                        &mut stream,
+                        &Frame::Error {
+                            code: ErrorCode::VersionMismatch,
+                            message: format!(
+                                "peer speaks protocol {version}, worker speaks {PROTOCOL_VERSION}"
+                            ),
+                        },
+                    );
+                    return;
+                }
+                if checkpoint_hash != state.plan.checkpoint_hash {
+                    let _ = write_frame(
+                        &mut stream,
+                        &Frame::Error {
+                            code: ErrorCode::HashMismatch,
+                            message: format!(
+                                "peer expects checkpoint {checkpoint_hash:016x}, worker serves {:016x}",
+                                state.plan.checkpoint_hash
+                            ),
+                        },
+                    );
+                    return;
+                }
+                greeted = true;
+                Frame::HelloAck {
+                    version: PROTOCOL_VERSION,
+                    checkpoint_hash: state.plan.checkpoint_hash,
+                }
+            }
+            _ if !greeted => Frame::Error {
+                code: ErrorCode::BadRequest,
+                message: "connection must open with Hello".into(),
+            },
+            Frame::Forward { model, batch } => handle_forward(&state, &model, batch),
+            Frame::Health => Frame::HealthOk {
+                models: state.models_loaded(),
+                requests: state.metrics.responses.load(Ordering::Relaxed),
+            },
+            Frame::Stats => Frame::StatsOk {
+                models: state
+                    .metrics
+                    .model_quantiles()
+                    .into_iter()
+                    .map(|(model, lq)| ModelStats {
+                        model,
+                        n: lq.n as u64,
+                        p50: lq.p50,
+                        p99: lq.p99,
+                        max: lq.max,
+                    })
+                    .collect(),
+            },
+            other => Frame::Error {
+                code: ErrorCode::BadRequest,
+                message: format!("unexpected {} frame on a worker", other.name()),
+            },
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Execute one routed batch on the worker's pool.
+fn handle_forward(state: &Arc<WorkerState>, model: &str, batch: crate::tensor::Mat<f32>) -> Frame {
+    if model != state.plan.checkpoint {
+        return Frame::Error {
+            code: ErrorCode::BadRequest,
+            message: format!(
+                "worker serves {:?}, request names {model:?}",
+                state.plan.checkpoint
+            ),
+        };
+    }
+    let kernels = match state.model() {
+        Ok(k) => k,
+        Err(e) => return Frame::Error { code: ErrorCode::ModelLoad, message: e },
+    };
+    if batch.cols() != kernels.input_dim() {
+        return Frame::Error {
+            code: ErrorCode::BadRequest,
+            message: format!(
+                "batch is {} features wide, stage expects {}",
+                batch.cols(),
+                kernels.input_dim()
+            ),
+        };
+    }
+    let started = Instant::now();
+    let rows = batch.rows();
+    let job_kernels = kernels.clone();
+    let result = state.pool.submit_handle(move || job_kernels.forward(&batch)).wait();
+    match result {
+        Ok(outputs) => {
+            state.metrics.record_batch(rows);
+            // One latency sample per row, recorded in one lock pass —
+            // every request in the batch waited the same wall time.
+            state.metrics.record_latency_n(model, started.elapsed().as_secs_f64(), rows);
+            Frame::ForwardOk { outputs }
+        }
+        Err(e) => Frame::Error { code: ErrorCode::Internal, message: e },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::{store_weight, StoredWeight};
+    use crate::io::tenz::TensorFile;
+    use crate::rng::GaussianSource;
+    use crate::serve::cluster::placement::{
+        checkpoint_identity_hash, PlacementMode, PlacementPlan,
+    };
+    use crate::serve::cluster::wire::call;
+    use crate::tensor::init::gaussian;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("cluster_worker_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spawn_replica_worker(tag: &str) -> (WorkerHandle, PlacementPlan, PathBuf) {
+        let dir = tmp_dir(tag);
+        let path = dir.join("m.tenz");
+        let mut g = GaussianSource::new(5);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 4, 1.0, &mut g)));
+        tf.write(&path).unwrap();
+        let hash = checkpoint_identity_hash(&path).unwrap();
+        let plan = PlacementPlan::build(
+            &TensorFile::read(&path).unwrap(),
+            path.to_str().unwrap(),
+            hash,
+            PlacementMode::Replica,
+            &["".to_string()],
+        )
+        .unwrap();
+        let handle = Worker::spawn(WorkerConfig::new("127.0.0.1:0", plan.clone(), 0)).unwrap();
+        (handle, plan, dir)
+    }
+
+    fn handshake(stream: &mut TcpStream, plan: &PlacementPlan) {
+        let hello =
+            Frame::Hello { version: PROTOCOL_VERSION, checkpoint_hash: plan.checkpoint_hash };
+        match call(stream, &hello).unwrap() {
+            Frame::HelloAck { version, checkpoint_hash } => {
+                assert_eq!(version, PROTOCOL_VERSION);
+                assert_eq!(checkpoint_hash, plan.checkpoint_hash);
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worker_answers_health_and_forward() {
+        let (handle, plan, dir) = spawn_replica_worker("basic");
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        handshake(&mut stream, &plan);
+        // Model loads lazily: nothing is resident before the first Forward.
+        match call(&mut stream, &Frame::Health).unwrap() {
+            Frame::HealthOk { models, requests } => {
+                assert_eq!(models, 0);
+                assert_eq!(requests, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        let batch = crate::tensor::Mat::from_fn(2, 4, |r, c| (r * 4 + c) as f32);
+        let outputs = match call(
+            &mut stream,
+            &Frame::Forward { model: plan.checkpoint.clone(), batch },
+        )
+        .unwrap()
+        {
+            Frame::ForwardOk { outputs } => outputs,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(outputs.shape(), (2, 3));
+        match call(&mut stream, &Frame::Health).unwrap() {
+            Frame::HealthOk { models, requests } => {
+                assert_eq!(models, 1);
+                assert_eq!(requests, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        match call(&mut stream, &Frame::Stats).unwrap() {
+            Frame::StatsOk { models } => {
+                assert_eq!(models.len(), 1);
+                assert_eq!(models[0].model, plan.checkpoint);
+                assert_eq!(models[0].n, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        drop(handle);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn handshake_rejects_version_and_hash_mismatch() {
+        let (handle, plan, dir) = spawn_replica_worker("mismatch");
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        let bad_version =
+            Frame::Hello { version: 99, checkpoint_hash: plan.checkpoint_hash };
+        match call(&mut stream, &bad_version).unwrap() {
+            Frame::Error { code, .. } => assert_eq!(code, ErrorCode::VersionMismatch),
+            other => panic!("{other:?}"),
+        }
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        let bad_hash = Frame::Hello {
+            version: PROTOCOL_VERSION,
+            checkpoint_hash: plan.checkpoint_hash ^ 1,
+        };
+        match call(&mut stream, &bad_hash).unwrap() {
+            Frame::Error { code, .. } => assert_eq!(code, ErrorCode::HashMismatch),
+            other => panic!("{other:?}"),
+        }
+        // Skipping the handshake entirely is refused too.
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        match call(&mut stream, &Frame::Health).unwrap() {
+            Frame::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("Hello"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
+        drop(handle);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_requests_get_typed_errors_not_disconnects() {
+        let (handle, plan, dir) = spawn_replica_worker("badreq");
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        handshake(&mut stream, &plan);
+        // Wrong model name.
+        let batch = crate::tensor::Mat::zeros(1, 4);
+        match call(&mut stream, &Frame::Forward { model: "other".into(), batch }).unwrap() {
+            Frame::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+            other => panic!("{other:?}"),
+        }
+        // Wrong batch width — and the connection survives both errors.
+        let batch = crate::tensor::Mat::zeros(1, 9);
+        match call(
+            &mut stream,
+            &Frame::Forward { model: plan.checkpoint.clone(), batch },
+        )
+        .unwrap()
+        {
+            Frame::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("9 features"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
+        let good = crate::tensor::Mat::zeros(1, 4);
+        assert!(matches!(
+            call(&mut stream, &Frame::Forward { model: plan.checkpoint.clone(), batch: good })
+                .unwrap(),
+            Frame::ForwardOk { .. }
+        ));
+        drop(handle);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

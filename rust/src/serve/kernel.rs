@@ -154,14 +154,32 @@ impl ModelKernels {
     pub fn load(src: &dyn WeightSource) -> Result<ModelKernels> {
         let infos = layer_infos_from(src);
         anyhow::ensure!(!infos.is_empty(), "checkpoint has no 2-D linear layers to serve");
-        let n = infos.len();
+        let names: Vec<String> = infos.into_iter().map(|i| i.layer).collect();
+        Self::load_subset(src, &names, true)
+    }
+
+    /// Assemble kernels for a contiguous slice of a checkpoint's layer
+    /// chain — the partitioned-serving loader: a cluster worker serving a
+    /// middle stage loads only its assigned layers (on a sharded
+    /// checkpoint, only their shards are ever opened). `final_stage`
+    /// says whether this slice ends the model: the last loaded layer is a
+    /// bare affine head only then — a stage boundary cut mid-chain keeps
+    /// its ReLU, so stage-to-stage execution is bit-identical to the
+    /// single-process pass. Layers must still chain within the slice.
+    pub fn load_subset(
+        src: &dyn WeightSource,
+        names: &[String],
+        final_stage: bool,
+    ) -> Result<ModelKernels> {
+        anyhow::ensure!(!names.is_empty(), "no layers to serve in this assignment");
+        let n = names.len();
         let mut layers = Vec::with_capacity(n);
-        for (i, info) in infos.iter().enumerate() {
-            let stored = load_weight_from(src, &info.layer)
-                .with_context(|| format!("loading layer {}", info.layer))?;
+        for (i, name) in names.iter().enumerate() {
+            let stored = load_weight_from(src, name)
+                .with_context(|| format!("loading layer {name}"))?;
             let kernel = LinearKernel::from_stored(stored);
             let (c, _) = kernel.shape();
-            let key = bias_key(&info.layer);
+            let key = bias_key(name);
             let bias = if src.contains(&key) {
                 let b = src
                     .entry(&key)
@@ -176,7 +194,8 @@ impl ModelKernels {
             } else {
                 None
             };
-            layers.push(ServeLayer { name: info.layer.clone(), kernel, bias, relu: i + 1 < n });
+            let relu = i + 1 < n || !final_stage;
+            layers.push(ServeLayer { name: name.clone(), kernel, bias, relu });
         }
         for pair in layers.windows(2) {
             let (c_prev, _) = pair[0].kernel.shape();
@@ -297,6 +316,36 @@ mod tests {
             }
         }
         assert!(y.sub(&want).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn subset_stages_compose_to_the_full_forward() {
+        let mut g = GaussianSource::new(9);
+        let mut tf = TensorFile::new();
+        // 6 → 5 → 4 → 3 chain with biases on the middle layers.
+        store_weight(&mut tf, "layers.0", &StoredWeight::Dense(gaussian(5, 6, 1.0, &mut g)));
+        tf.insert("layers.0.bias", TensorEntry::from_f32(vec![5], &[0.2; 5]));
+        store_weight(&mut tf, "layers.1", &StoredWeight::Dense(gaussian(4, 5, 1.0, &mut g)));
+        tf.insert("layers.1.bias", TensorEntry::from_f32(vec![4], &[-0.1; 4]));
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 4, 1.0, &mut g)));
+
+        let full = ModelKernels::load(&tf).unwrap();
+        let stage0 =
+            ModelKernels::load_subset(&tf, &["layers.0".into(), "layers.1".into()], false)
+                .unwrap();
+        let stage1 = ModelKernels::load_subset(&tf, &["head".into()], true).unwrap();
+        // A mid-chain stage keeps its trailing ReLU; the final stage's
+        // head stays a bare affine map.
+        assert!(stage0.layers.last().unwrap().relu);
+        assert!(!stage1.layers.last().unwrap().relu);
+
+        let x = gaussian(4, 6, 1.0, &mut g);
+        let want = full.forward(&x);
+        let got = stage1.forward(&stage0.forward(&x));
+        assert_eq!(want.shape(), got.shape());
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "staged forward must be bit-identical");
+        }
     }
 
     #[test]

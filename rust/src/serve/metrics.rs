@@ -1,11 +1,17 @@
 //! Serving metrics: request/batch counters, latency quantiles, cache hit
 //! rate — rendered through [`report::table`](crate::report::table) so
 //! `rsic serve` prints the same aligned tables as the paper reports.
+//!
+//! Latencies are tracked **per model** (one bounded Algorithm-R
+//! reservoir per checkpoint), so a process serving many checkpoints
+//! reports p50/p99 per checkpoint, not one blended distribution — the
+//! same per-model numbers the cluster `Stats` wire frame exports.
 
 use super::cache::ModelCache;
 use crate::bench::stats::percentile;
 use crate::report::Table;
 use crate::rng::Pcg64;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -21,11 +27,20 @@ pub struct LatencyQuantiles {
     pub max: f64,
 }
 
-/// Latency samples kept for quantiles. A long-lived server records one
-/// latency per answered request forever; a fixed-size uniform reservoir
-/// (Vitter's Algorithm R) keeps memory and render cost O(1) instead of
-/// growing per request.
+/// Latency samples kept for quantiles, per model. A long-lived server
+/// records one latency per answered request forever; a fixed-size
+/// uniform reservoir (Vitter's Algorithm R) keeps memory and render cost
+/// O(1) per model instead of growing per request, and the number of
+/// per-model reservoirs is itself capped at [`MAX_MODEL_RESERVOIRS`].
 const LATENCY_RESERVOIR: usize = 4096;
+
+/// Per-model reservoirs kept at most. The map tracks models actually
+/// serving traffic: past this bound the least-recently-updated entry is
+/// evicted (the process-wide reservoir keeps the full history
+/// regardless), so a server cycling through many distinct checkpoint
+/// paths over months stays O(1) in metric memory like the pre-cluster
+/// code was.
+const MAX_MODEL_RESERVOIRS: usize = 64;
 
 #[derive(Debug)]
 struct LatencyReservoir {
@@ -33,11 +48,52 @@ struct LatencyReservoir {
     /// Total latencies ever recorded (the reservoir's denominator).
     seen: u64,
     rng: Pcg64,
+    /// Recency stamp (from `ServeMetrics::touch_counter`) driving the
+    /// least-recently-updated eviction above.
+    touched: u64,
 }
 
 impl Default for LatencyReservoir {
     fn default() -> Self {
-        LatencyReservoir { samples: Vec::new(), seen: 0, rng: Pcg64::new(0x5e7e_1a7e) }
+        LatencyReservoir { samples: Vec::new(), seen: 0, rng: Pcg64::new(0x5e7e_1a7e), touched: 0 }
+    }
+}
+
+impl LatencyReservoir {
+    /// Seed derived from the model name so a multi-model process keeps
+    /// per-model reservoirs deterministic and independent.
+    fn for_model(model: &str) -> Self {
+        let mut h = crate::io::tenz::Fnv1a::new();
+        h.update(model.as_bytes());
+        LatencyReservoir {
+            samples: Vec::new(),
+            seen: 0,
+            rng: Pcg64::new(h.finish() ^ 0x5e7e_1a7e),
+            touched: 0,
+        }
+    }
+
+    fn record(&mut self, secs: f64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR {
+            self.samples.push(secs);
+        } else {
+            let j = self.rng.next_below(self.seen) as usize;
+            if j < LATENCY_RESERVOIR {
+                self.samples[j] = secs;
+            }
+        }
+    }
+
+    fn quantiles(&self) -> LatencyQuantiles {
+        let mut samples = self.samples.clone();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencyQuantiles {
+            n: self.seen as usize,
+            p50: percentile(&samples, 0.50),
+            p99: percentile(&samples, 0.99),
+            max: samples.last().copied().unwrap_or(0.0),
+        }
     }
 }
 
@@ -54,8 +110,22 @@ pub struct ServeMetrics {
     pub batches: AtomicU64,
     /// Total inputs across executed batches (occupancy numerator).
     pub batched_inputs: AtomicU64,
-    /// Bounded reservoir of per-request latencies (enqueue → response).
-    latencies: Mutex<LatencyReservoir>,
+    /// Batches answered by a remote cluster worker (routed serving).
+    pub routed_batches: AtomicU64,
+    /// Batches that fell back to local in-process execution after the
+    /// routed path failed (worker death, wire corruption).
+    pub failovers: AtomicU64,
+    /// Bounded per-model reservoirs of request latencies
+    /// (enqueue → response), keyed by checkpoint label.
+    models: Mutex<BTreeMap<String, LatencyReservoir>>,
+    /// One process-wide reservoir fed by every request regardless of
+    /// model. The per-model reservoirs cannot stand in for it: once a
+    /// busy model's reservoir saturates, a union of per-model samples
+    /// over-weights quiet models, so the aggregate quantiles come from
+    /// this genuinely uniform sample of the whole request history.
+    global: Mutex<LatencyReservoir>,
+    /// Monotone stamp for reservoir recency (eviction order).
+    touch_counter: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -69,22 +139,45 @@ impl ServeMetrics {
         self.batched_inputs.fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    /// One request completed, `secs` after it was enqueued. The sample
-    /// lands in the latency reservoir (always, while it has room; with
-    /// probability reservoir/seen after — Algorithm R, so the reservoir
-    /// stays a uniform sample of the whole history).
-    pub fn record_latency(&self, secs: f64) {
-        self.responses.fetch_add(1, Ordering::Relaxed);
-        let mut r = self.latencies.lock().unwrap();
-        r.seen += 1;
-        if r.samples.len() < LATENCY_RESERVOIR {
-            r.samples.push(secs);
-        } else {
-            let seen = r.seen;
-            let j = r.rng.next_below(seen) as usize;
-            if j < LATENCY_RESERVOIR {
-                r.samples[j] = secs;
+    /// One request against `model` completed, `secs` after it was
+    /// enqueued. The sample lands in that model's latency reservoir
+    /// (always, while it has room; with probability reservoir/seen after
+    /// — Algorithm R, so each reservoir stays a uniform sample of its
+    /// model's whole history).
+    pub fn record_latency(&self, model: &str, secs: f64) {
+        self.record_latency_n(model, secs, 1)
+    }
+
+    /// Record `n` requests against `model` that shared one latency (a
+    /// whole routed batch, say) in a single lock pass — the worker's
+    /// per-batch entry point, so a 4096-row batch costs two lock
+    /// acquisitions, not 8192.
+    pub fn record_latency_n(&self, model: &str, secs: f64, n: usize) {
+        if n == 0 {
+            return;
+        }
+        self.responses.fetch_add(n as u64, Ordering::Relaxed);
+        let stamp = self.touch_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        {
+            let mut map = self.models.lock().unwrap();
+            if !map.contains_key(model) && map.len() >= MAX_MODEL_RESERVOIRS {
+                if let Some(evict) =
+                    map.iter().min_by_key(|(_, r)| r.touched).map(|(k, _)| k.clone())
+                {
+                    map.remove(&evict);
+                }
             }
+            let r = map
+                .entry(model.to_string())
+                .or_insert_with(|| LatencyReservoir::for_model(model));
+            r.touched = stamp;
+            for _ in 0..n {
+                r.record(secs);
+            }
+        }
+        let mut global = self.global.lock().unwrap();
+        for _ in 0..n {
+            global.record(secs);
         }
     }
 
@@ -98,26 +191,30 @@ impl ServeMetrics {
         }
     }
 
-    /// p50/p99/max request latency (reservoir estimates; `n` is the total
-    /// number of requests ever recorded).
+    /// Process-wide p50/p99/max request latency from the global
+    /// reservoir — a uniform sample over every request regardless of
+    /// which model served it (`n` counts all requests ever recorded).
     pub fn latency_quantiles(&self) -> LatencyQuantiles {
-        let (mut samples, seen) = {
-            let r = self.latencies.lock().unwrap();
-            (r.samples.clone(), r.seen)
-        };
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        LatencyQuantiles {
-            n: seen as usize,
-            p50: percentile(&samples, 0.50),
-            p99: percentile(&samples, 0.99),
-            max: samples.last().copied().unwrap_or(0.0),
-        }
+        self.global.lock().unwrap().quantiles()
+    }
+
+    /// Per-model latency quantiles, sorted by model label — what
+    /// `rsic serve` prints and the cluster `Stats` frame carries.
+    pub fn model_quantiles(&self) -> Vec<(String, LatencyQuantiles)> {
+        let map = self.models.lock().unwrap();
+        map.iter().map(|(name, r)| (name.clone(), r.quantiles())).collect()
+    }
+
+    /// Models with at least one recorded latency.
+    pub fn models_seen(&self) -> usize {
+        self.models.lock().unwrap().len()
     }
 
     /// Render the serving counters (and, when given, the model cache's
-    /// hit statistics) as an aligned metric/value table.
+    /// hit statistics) as an aligned metric/value table. Latency rows
+    /// appear per model, plus a process-wide aggregate when more than one
+    /// model has traffic.
     pub fn render(&self, cache: Option<&ModelCache>) -> Table {
-        let lq = self.latency_quantiles();
         let mut t = Table::new("Serve metrics", &["metric", "value"]);
         let row = |t: &mut Table, k: &str, v: String| {
             t.row(&[k.to_string(), v]);
@@ -127,8 +224,22 @@ impl ServeMetrics {
         row(&mut t, "rejected", self.rejected.load(Ordering::Relaxed).to_string());
         row(&mut t, "batches", self.batches.load(Ordering::Relaxed).to_string());
         row(&mut t, "mean batch occupancy", format!("{:.2}", self.mean_occupancy()));
-        row(&mut t, "p50 latency", format!("{:.3} ms", lq.p50 * 1e3));
-        row(&mut t, "p99 latency", format!("{:.3} ms", lq.p99 * 1e3));
+        let routed = self.routed_batches.load(Ordering::Relaxed);
+        let failovers = self.failovers.load(Ordering::Relaxed);
+        if routed > 0 || failovers > 0 {
+            row(&mut t, "routed batches", routed.to_string());
+            row(&mut t, "failovers to local", failovers.to_string());
+        }
+        let per_model = self.model_quantiles();
+        for (model, lq) in &per_model {
+            row(&mut t, &format!("p50 latency [{model}]"), format!("{:.3} ms", lq.p50 * 1e3));
+            row(&mut t, &format!("p99 latency [{model}]"), format!("{:.3} ms", lq.p99 * 1e3));
+        }
+        if per_model.len() != 1 {
+            let lq = self.latency_quantiles();
+            row(&mut t, "p50 latency", format!("{:.3} ms", lq.p50 * 1e3));
+            row(&mut t, "p99 latency", format!("{:.3} ms", lq.p99 * 1e3));
+        }
         if let Some(cache) = cache {
             let (h, m) = cache.stats();
             row(&mut t, "model-cache hits", h.to_string());
@@ -164,7 +275,7 @@ mod tests {
         m.record_batch(4);
         m.record_batch(2);
         for secs in [0.001, 0.002, 0.003, 0.004, 0.005, 0.006] {
-            m.record_latency(secs);
+            m.record_latency("m.tenz", secs);
         }
         assert!((m.mean_occupancy() - 3.0).abs() < 1e-12);
         let lq = m.latency_quantiles();
@@ -177,16 +288,72 @@ mod tests {
     }
 
     #[test]
+    fn latencies_are_tracked_per_model() {
+        let m = ServeMetrics::new();
+        for _ in 0..10 {
+            m.record_latency("fast.tenz", 0.001);
+            m.record_latency("slow.toml", 0.1);
+        }
+        let per_model = m.model_quantiles();
+        assert_eq!(per_model.len(), 2);
+        assert_eq!(m.models_seen(), 2);
+        let fast = &per_model.iter().find(|(n, _)| n == "fast.tenz").unwrap().1;
+        let slow = &per_model.iter().find(|(n, _)| n == "slow.toml").unwrap().1;
+        assert_eq!(fast.n, 10);
+        assert!((fast.p50 - 0.001).abs() < 1e-9, "fast model p50 {}", fast.p50);
+        assert!((slow.p50 - 0.1).abs() < 1e-9, "slow model p50 {}", slow.p50);
+        // The blended process aggregate sits between the two models.
+        let all = m.latency_quantiles();
+        assert_eq!(all.n, 20);
+        assert!(all.p50 > fast.p50 && all.p50 <= slow.p50);
+        // Both models render their own quantile rows.
+        let rendered = m.render(None).render();
+        assert!(rendered.contains("p50 latency [fast.tenz]"));
+        assert!(rendered.contains("p99 latency [slow.toml]"));
+    }
+
+    #[test]
+    fn model_reservoir_map_is_bounded() {
+        let m = ServeMetrics::new();
+        let total = MAX_MODEL_RESERVOIRS + 10;
+        for i in 0..total {
+            m.record_latency(&format!("m{i}.tenz"), 0.001);
+        }
+        // Oldest entries evicted; the most recent model survives; the
+        // process-wide aggregate keeps the full request history.
+        assert_eq!(m.models_seen(), MAX_MODEL_RESERVOIRS);
+        let latest = format!("m{}.tenz", total - 1);
+        assert!(m.model_quantiles().iter().any(|(n, _)| *n == latest));
+        assert_eq!(m.latency_quantiles().n, total);
+    }
+
+    #[test]
+    fn bulk_record_counts_every_row() {
+        let m = ServeMetrics::new();
+        m.record_latency_n("m.tenz", 0.002, 5);
+        m.record_latency_n("m.tenz", 0.002, 0); // no-op
+        let per = m.model_quantiles();
+        assert_eq!(per.len(), 1);
+        assert_eq!(per[0].1.n, 5);
+        assert!((per[0].1.p50 - 0.002).abs() < 1e-12);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 5);
+        assert_eq!(m.latency_quantiles().n, 5);
+    }
+
+    #[test]
     fn latency_reservoir_stays_bounded() {
         let m = ServeMetrics::new();
         let total = LATENCY_RESERVOIR + 500;
         for i in 0..total {
-            m.record_latency(i as f64 * 1e-6);
+            m.record_latency("one.tenz", i as f64 * 1e-6);
         }
         let lq = m.latency_quantiles();
         // n counts every request; the stored samples stay capped.
         assert_eq!(lq.n, total);
-        assert_eq!(m.latencies.lock().unwrap().samples.len(), LATENCY_RESERVOIR);
+        assert_eq!(
+            m.models.lock().unwrap().get("one.tenz").unwrap().samples.len(),
+            LATENCY_RESERVOIR
+        );
         assert!(lq.p50 > 0.0 && lq.p99 >= lq.p50 && lq.max >= lq.p99);
     }
 
@@ -195,6 +362,7 @@ mod tests {
         let m = ServeMetrics::new();
         assert_eq!(m.mean_occupancy(), 0.0);
         assert_eq!(m.latency_quantiles().n, 0);
+        assert!(m.model_quantiles().is_empty());
         assert!(m.summary().contains("0 requests"));
     }
 }

@@ -20,28 +20,36 @@
 //!   snapshot of every backing file (container, or manifest + shards), so
 //!   touching any shard of a sharded checkpoint invalidates its kernels.
 //! * [`metrics`] — request/batch/latency/cache counters rendered through
-//!   [`report::table`](crate::report::table); latencies live in a bounded
-//!   reservoir so a long-lived server's memory stays O(1).
+//!   [`report::table`](crate::report::table); latencies live in bounded
+//!   per-model reservoirs so a long-lived server's memory stays O(1) and
+//!   p50/p99 report per checkpoint, not per process.
 //! * [`traffic`] — the synthetic load generator shared by `rsic serve`
 //!   and the throughput bench.
+//! * [`cluster`] — multi-host serving: placement planner, wire protocol,
+//!   worker processes, and the routing front end the micro-batcher
+//!   drains into (with failover back to local execution).
 //!
-//! Invariants (tested in `tests/serve.rs`):
+//! Invariants (tested in `tests/serve.rs` and `tests/cluster.rs`):
 //!
 //! * A factored forward pass equals the dense pass exactly (up to fp
 //!   roundoff) at full rank, and within ‖W − UVᵀ‖₂·‖x‖₂ below it.
 //! * N concurrent requests produce ≪ N batches; a lone request still
 //!   flushes after `max_wait`.
-//! * Every accepted request is answered, even across server shutdown.
+//! * Every accepted request is answered, even across server shutdown —
+//!   and, under routed serving, even across worker death (failover).
+//! * Routed outputs are bit-identical to single-process serving.
 
 pub mod batcher;
 pub mod cache;
+pub mod cluster;
 pub mod kernel;
 pub mod metrics;
 pub mod server;
 pub mod traffic;
 
-pub use batcher::{Batcher, BatcherConfig, PendingResponse};
+pub use batcher::{BatchExecutor, Batcher, BatcherConfig, LocalExecutor, PendingResponse};
 pub use cache::{ModelCache, ModelKey};
+pub use cluster::{PlacementMode, PlacementPlan, RoutedExecutor, Router, RouterConfig};
 pub use kernel::{DenseLinear, FactoredLinear, LinearKernel, ModelKernels, ServeLayer};
 pub use metrics::{LatencyQuantiles, ServeMetrics};
 pub use server::{ServeConfig, Server};

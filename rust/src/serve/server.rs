@@ -9,8 +9,9 @@
 //! for a checkpoint loads and caches its kernels and spawns its batcher;
 //! subsequent requests coalesce into batched GEMM passes.
 
-use super::batcher::{Batcher, BatcherConfig, PendingResponse};
+use super::batcher::{BatchExecutor, Batcher, BatcherConfig, LocalExecutor, PendingResponse};
 use super::cache::{ModelCache, ModelKey};
+use super::cluster::{RoutedExecutor, Router};
 use super::kernel::ModelKernels;
 use super::metrics::ServeMetrics;
 use crate::coordinator::pool::WorkerPool;
@@ -36,6 +37,10 @@ pub struct ServeConfig {
     pub max_queue: usize,
     /// Models kept resident in the LRU cache.
     pub cache_capacity: usize,
+    /// Run the checkpoint integrity pass (`verify_hashes` on sharded
+    /// checkpoints, a full structural read on single `.tenz`) at every
+    /// model load, before any traffic is answered from it.
+    pub verify: bool,
 }
 
 impl Default for ServeConfig {
@@ -47,6 +52,7 @@ impl Default for ServeConfig {
             queue_depth: 16,
             max_queue: 8192,
             cache_capacity: 4,
+            verify: false,
         }
     }
 }
@@ -60,16 +66,28 @@ pub struct Server {
     cache: Arc<ModelCache>,
     metrics: Arc<ServeMetrics>,
     config: ServeConfig,
+    /// When set, batches for checkpoints the router's plan covers are
+    /// shipped to cluster workers (with local failover); everything else
+    /// executes in-process as before.
+    router: Option<Arc<Router>>,
 }
 
 impl Server {
     pub fn new(config: ServeConfig) -> Server {
+        Self::with_router(config, None)
+    }
+
+    /// A server whose micro-batcher drains into a cluster [`Router`] for
+    /// the checkpoint the router's plan covers. Models are still loaded
+    /// (and cached) locally — that is the failover target.
+    pub fn with_router(config: ServeConfig, router: Option<Arc<Router>>) -> Server {
         Server {
             batchers: Mutex::new(HashMap::new()),
             pool: Arc::new(WorkerPool::new(config.workers, config.queue_depth)),
-            cache: Arc::new(ModelCache::new(config.cache_capacity)),
+            cache: Arc::new(ModelCache::with_verify(config.cache_capacity, config.verify)),
             metrics: Arc::new(ServeMetrics::new()),
             config,
+            router,
         }
     }
 
@@ -111,9 +129,23 @@ impl Server {
             let batcher = map
                 .entry(key)
                 .or_insert_with(|| {
-                    Arc::new(Batcher::spawn(
+                    // The label keys per-model latency metrics: the path
+                    // as clients submit it.
+                    let local = LocalExecutor::new(
+                        path.display().to_string(),
                         model,
                         self.pool.clone(),
+                    );
+                    let executor: Arc<dyn BatchExecutor> = match &self.router {
+                        Some(router) if router.covers(path) => Arc::new(RoutedExecutor::new(
+                            router.clone(),
+                            local,
+                            self.metrics.clone(),
+                        )),
+                        _ => Arc::new(local),
+                    };
+                    Arc::new(Batcher::spawn(
+                        executor,
                         self.metrics.clone(),
                         BatcherConfig {
                             max_batch: self.config.max_batch,

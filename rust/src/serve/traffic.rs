@@ -34,6 +34,16 @@ impl TrafficReport {
 /// whole share before waiting on any response — pipelined traffic, so
 /// the micro-batcher sees genuine concurrency. Models are warm-loaded
 /// first (a bad checkpoint fails here, before the clock starts).
+///
+/// Determinism is **`--clients`-aware**: client `i` draws from its own
+/// `GaussianSource` seeded `seed ^ (i + 1)` and targets checkpoint
+/// `(i + request) % paths.len()`, so the exact multiset of request
+/// vectors (and their model routing) is a pure function of
+/// `(requests, clients, seed, paths)` — independent of thread
+/// scheduling. Comparing two runs (dense vs factored, local vs routed)
+/// is only meaningful at the *same* client count: changing `clients`
+/// re-partitions the per-client streams and produces different vectors,
+/// which is why the routed-vs-local bench column holds `clients` fixed.
 pub fn drive(
     server: &Arc<Server>,
     paths: &[PathBuf],

@@ -1,0 +1,533 @@
+//! Cluster subsystem integration: wire-codec properties and corruption,
+//! placement balance, and the tentpole distributed-serving proofs — a
+//! routed forward pass bit-identical to the single-process one (dense
+//! and factored, single-file and sharded), and worker death degrading to
+//! local failover with zero client-visible errors.
+
+use rsi_compress::compress::plan::{CompressionPlan, Method};
+use rsi_compress::compress::rsi::RsiOptions;
+use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+use rsi_compress::io::checkpoint::{store_weight, CheckpointReader, StoredWeight};
+use rsi_compress::io::shard::{ShardedReader, ShardedWriter};
+use rsi_compress::io::tenz::{TensorEntry, TensorFile};
+use rsi_compress::rng::{GaussianSource, Pcg64};
+use rsi_compress::serve::cluster::{
+    checkpoint_identity_hash_of, layer_costs, wire, Frame, PlacementMode, PlacementPlan, Router,
+    RouterConfig, Worker, WorkerConfig, WorkerHandle,
+};
+use rsi_compress::serve::{ModelKernels, ServeConfig, Server};
+use rsi_compress::tensor::Mat;
+use rsi_compress::testutil::prop::{Gen, PropRunner};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cluster_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------
+// Wire codec: property round-trip + corruption matrix
+// ---------------------------------------------------------------------
+
+fn random_string(g: &mut Gen) -> String {
+    let len = g.usize_in(0, 40);
+    (0..len).map(|_| char::from(g.usize_in(32, 126) as u8)).collect()
+}
+
+fn random_mat(g: &mut Gen) -> Mat<f32> {
+    let rows = g.usize_in(0, 6);
+    let cols = g.usize_in(0, 9);
+    g.mat(rows, cols, 1.0)
+}
+
+fn random_u64(g: &mut Gen) -> u64 {
+    let hi = g.usize_in(0, u32::MAX as usize) as u64;
+    let lo = g.usize_in(0, u32::MAX as usize) as u64;
+    (hi << 32) | lo
+}
+
+fn random_frame(g: &mut Gen) -> Frame {
+    match g.usize_in(0, 8) {
+        0 => Frame::Hello {
+            version: g.usize_in(0, u32::MAX as usize) as u32,
+            checkpoint_hash: random_u64(g).rotate_left(17),
+        },
+        1 => Frame::HelloAck {
+            version: g.usize_in(0, 9) as u32,
+            checkpoint_hash: random_u64(g),
+        },
+        2 => Frame::Forward { model: random_string(g), batch: random_mat(g) },
+        3 => Frame::ForwardOk { outputs: random_mat(g) },
+        4 => Frame::Health,
+        5 => Frame::HealthOk {
+            models: g.usize_in(0, 1000) as u32,
+            requests: random_u64(g),
+        },
+        6 => Frame::Stats,
+        7 => {
+            let n = g.usize_in(0, 5);
+            Frame::StatsOk {
+                models: (0..n)
+                    .map(|_| wire::ModelStats {
+                        model: random_string(g),
+                        n: g.usize_in(0, 1 << 40) as u64,
+                        p50: g.f64_in(0.0, 1.0),
+                        p99: g.f64_in(0.0, 10.0),
+                        max: g.f64_in(0.0, 100.0),
+                    })
+                    .collect(),
+            }
+        }
+        _ => Frame::Error {
+            code: *g.choice(&[
+                wire::ErrorCode::VersionMismatch,
+                wire::ErrorCode::HashMismatch,
+                wire::ErrorCode::BadRequest,
+                wire::ErrorCode::ModelLoad,
+                wire::ErrorCode::Internal,
+            ]),
+            message: random_string(g),
+        },
+    }
+}
+
+/// Property: every frame type round-trips through encode/decode exactly
+/// (f32/f64 payloads bit-preserved via the LE byte form).
+#[test]
+fn wire_frames_roundtrip_property() {
+    PropRunner::new(128).with_seed(0xc1a5).run("wire roundtrip", |g| {
+        let frame = random_frame(g);
+        let body = frame.encode_body().unwrap();
+        let back = Frame::decode_body(&body).unwrap();
+        assert_eq!(back, frame);
+    });
+}
+
+/// Corruption matrix, mirroring the `tenz_format.rs` discipline: every
+/// truncation of a valid frame is a typed error; every single-byte flip
+/// decodes to a typed error or a (different) valid frame — never a panic
+/// and never an allocation beyond the buffer handed in; an oversized
+/// length prefix is refused before the body would be allocated.
+#[test]
+fn wire_corruption_matrix_never_panics() {
+    let mut g = Gen::new(0xdead);
+    let mut frames: Vec<Frame> = (0..24).map(|_| random_frame(&mut g)).collect();
+    frames.push(Frame::Health);
+    frames.push(Frame::Forward {
+        model: "m".into(),
+        batch: Mat::from_fn(2, 3, |r, c| (r + c) as f32),
+    });
+    for frame in &frames {
+        let body = frame.encode_body().unwrap();
+        // Truncation at every boundary.
+        for cut in 0..body.len() {
+            assert!(
+                Frame::decode_body(&body[..cut]).is_err(),
+                "{}: prefix of {cut}/{} bytes must not decode",
+                frame.name(),
+                body.len()
+            );
+        }
+        // Trailing garbage.
+        let mut long = body.clone();
+        long.push(0x5a);
+        assert!(Frame::decode_body(&long).is_err(), "{}: trailing byte accepted", frame.name());
+        // Single-byte flips: typed error or valid (different) decode.
+        for i in 0..body.len() {
+            for flip in [0x01u8, 0x80, 0xff] {
+                let mut bad = body.clone();
+                bad[i] ^= flip;
+                let _ = Frame::decode_body(&bad); // must not panic
+            }
+        }
+    }
+    // Oversized length prefix on the stream layer.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&u32::MAX.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 64]);
+    assert!(matches!(
+        wire::read_frame(&mut std::io::Cursor::new(buf)),
+        Err(wire::WireError::Oversized { .. })
+    ));
+    // A length prefix larger than the bytes that follow is typed I/O.
+    let mut short = Vec::new();
+    wire::write_frame(&mut short, &Frame::Health).unwrap();
+    short.truncate(short.len() - 1);
+    assert!(wire::read_frame(&mut std::io::Cursor::new(short)).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Placement: balance on a synthetic 50-layer checkpoint
+// ---------------------------------------------------------------------
+
+/// A 50-layer chain with varied widths and a mix of dense and factored
+/// layers — the acceptance-gate shape: the planner's heaviest worker
+/// must stay within 1.5× of the mean load.
+#[test]
+fn placement_balances_synthetic_50_layer_checkpoint() {
+    let mut rng = Pcg64::new(0x9a11);
+    let n_layers = 50usize;
+    let dims: Vec<usize> = (0..=n_layers).map(|_| 16 + rng.next_below(33) as usize).collect();
+    let mut tf = TensorFile::new();
+    for i in 0..n_layers {
+        let (d, c) = (dims[i], dims[i + 1]);
+        let w = if rng.next_below(2) == 0 {
+            StoredWeight::Dense(Mat::zeros(c, d))
+        } else {
+            let k = 1 + rng.next_below(c.min(d) as u64) as usize;
+            StoredWeight::Factored { a: Mat::zeros(c, k), b: Mat::zeros(k, d) }
+        };
+        store_weight(&mut tf, &format!("layers.{i}"), &w);
+        tf.insert(format!("layers.{i}.bias"), TensorEntry::from_f32(vec![c], &vec![0.0; c]));
+    }
+    let costs = layer_costs(&tf);
+    assert_eq!(costs.len(), n_layers);
+    let expected: Vec<String> = costs.iter().map(|c| c.layer.clone()).collect();
+    for workers in [2usize, 3, 4, 6] {
+        let addrs: Vec<String> =
+            (0..workers).map(|i| format!("127.0.0.1:{}", 7100 + i)).collect();
+        let plan =
+            PlacementPlan::build(&tf, "synthetic.toml", 0, PlacementMode::Partition, &addrs)
+                .unwrap();
+        let balance = plan.max_over_mean_load();
+        assert!(
+            balance <= 1.5,
+            "{workers} workers: max/mean load {balance:.3} exceeds the 1.5× gate"
+        );
+        // Stages cover every layer exactly once, contiguously, in order.
+        let flat: Vec<String> =
+            plan.workers.iter().flat_map(|w| w.layers.iter().cloned()).collect();
+        assert_eq!(flat, expected, "{workers} workers: stages must tile the chain");
+        assert!(plan.workers.iter().all(|w| !w.layers.is_empty()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Routed serving: fleet helpers
+// ---------------------------------------------------------------------
+
+/// Spawn one in-process worker per plan slot on an ephemeral loopback
+/// port, filling the real addresses back into the plan (workers never
+/// read their own addr; the router does).
+fn spawn_fleet(plan: &mut PlacementPlan) -> Vec<WorkerHandle> {
+    let mut handles = Vec::new();
+    for i in 0..plan.workers.len() {
+        let mut cfg = WorkerConfig::new("127.0.0.1:0", plan.clone(), i);
+        cfg.threads = 2;
+        let h = Worker::spawn(cfg).unwrap();
+        plan.workers[i].addr = h.addr().to_string();
+        handles.push(h);
+    }
+    handles
+}
+
+fn fast_router_config() -> RouterConfig {
+    RouterConfig {
+        connect_timeout: Duration::from_millis(300),
+        io_timeout: Duration::from_secs(5),
+        // Short re-probe so the failover test's dead workers are
+        // re-dialed (and re-refused) within the test's own timescale.
+        reprobe_after: Duration::from_millis(100),
+    }
+}
+
+fn make_plan(ckpt: &Path, mode: PlacementMode, workers: usize) -> PlacementPlan {
+    let src = rsi_compress::io::checkpoint::CheckpointSource::open(ckpt).unwrap();
+    let hash = checkpoint_identity_hash_of(&src);
+    let addrs = vec![String::new(); workers];
+    PlacementPlan::build(&src, ckpt.to_str().unwrap(), hash, mode, &addrs).unwrap()
+}
+
+fn routed_server(plan: PlacementPlan) -> (Arc<Server>, Arc<Router>) {
+    let router = Arc::new(Router::new(plan, fast_router_config()));
+    let server = Arc::new(Server::with_router(
+        ServeConfig { workers: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+        Some(router.clone()),
+    ));
+    (server, router)
+}
+
+fn local_server() -> Arc<Server> {
+    Arc::new(Server::new(ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    }))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Write the test model: a 12 → 8 (relu) → 4 chain with biases, then its
+/// compressed twins — single-file and sharded (identical tensors, same
+/// plan and seed; only the container differs).
+fn build_checkpoints(dir: &Path) -> (PathBuf, PathBuf, PathBuf) {
+    let dense_path = dir.join("dense.tenz");
+    let mut g = GaussianSource::new(31);
+    let mut tf = TensorFile::new();
+    store_weight(
+        &mut tf,
+        "layers.0",
+        &StoredWeight::Dense(rsi_compress::tensor::init::gaussian(8, 12, 1.0, &mut g)),
+    );
+    tf.insert("layers.0.bias", TensorEntry::from_f32(vec![8], &[0.05; 8]));
+    store_weight(
+        &mut tf,
+        "head",
+        &StoredWeight::Dense(rsi_compress::tensor::init::gaussian(4, 8, 1.0, &mut g)),
+    );
+    tf.insert("head.bias", TensorEntry::from_f32(vec![4], &[-0.1; 4]));
+    tf.write(&dense_path).unwrap();
+
+    let plan = CompressionPlan::uniform_alpha(0.5, Method::Rsi(RsiOptions::with_q(2, 9)));
+    let src = Arc::new(CheckpointReader::open(&dense_path).unwrap());
+    let single_path = dir.join("fact.tenz");
+    Pipeline::new(PipelineConfig { workers: 2, ..Default::default() })
+        .unwrap()
+        .compress_to_path(src.clone(), &plan, &single_path)
+        .unwrap();
+    let manifest_path = dir.join("fact.toml");
+    let report = Pipeline::new(PipelineConfig {
+        workers: 2,
+        shard_size: Some(256),
+        ..Default::default()
+    })
+    .unwrap()
+    .compress_to_path(src, &plan, &manifest_path)
+    .unwrap();
+    assert!(report.shards > 1, "256-byte budget must split shards");
+    (dense_path, single_path, manifest_path)
+}
+
+/// The tentpole equivalence proof: for a dense single-file checkpoint, a
+/// factored single-file one and a factored *sharded* one, outputs served
+/// through a replica fleet over loopback are bit-identical to the
+/// single-process server — and the batches really were routed, not
+/// quietly failed over.
+#[test]
+fn routed_replica_serving_is_bit_identical_to_local() {
+    let dir = tmp_dir("replica_ident");
+    let (dense_path, single_path, manifest_path) = build_checkpoints(&dir);
+    let local = local_server();
+    for ckpt in [&dense_path, &single_path, &manifest_path] {
+        let mut plan = make_plan(ckpt, PlacementMode::Replica, 2);
+        let _fleet = spawn_fleet(&mut plan);
+        let (routed, router) = routed_server(plan);
+        assert_eq!(router.health_check(), 2, "both workers must answer Health");
+        let mut g = GaussianSource::new(77);
+        for trial in 0..6 {
+            let mut x = vec![0f32; 12];
+            g.fill_f32(&mut x);
+            let y_local = local.infer(ckpt, x.clone()).unwrap();
+            let y_routed = routed.infer(ckpt, x).unwrap();
+            assert_eq!(
+                bits(&y_local),
+                bits(&y_routed),
+                "{}: trial {trial} diverged from single-process serving",
+                ckpt.display()
+            );
+        }
+        let m = routed.metrics();
+        assert!(m.routed_batches.load(Ordering::Relaxed) > 0, "batches must actually route");
+        assert_eq!(m.failovers.load(Ordering::Relaxed), 0, "no silent failovers allowed");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Partitioned serving: the factored checkpoint split stage-to-stage
+/// across two workers answers bit-identically to the local pass — the
+/// wire hop moves f32 activations losslessly and the mid-chain stage
+/// keeps its ReLU.
+#[test]
+fn routed_partition_serving_is_bit_identical_to_local() {
+    let dir = tmp_dir("partition_ident");
+    let (_dense, single_path, manifest_path) = build_checkpoints(&dir);
+    let local = local_server();
+    for ckpt in [&single_path, &manifest_path] {
+        let mut plan = make_plan(ckpt, PlacementMode::Partition, 2);
+        assert!(plan.workers.iter().all(|w| !w.layers.is_empty()));
+        let _fleet = spawn_fleet(&mut plan);
+        let (routed, _router) = routed_server(plan);
+        let mut g = GaussianSource::new(78);
+        for trial in 0..6 {
+            let mut x = vec![0f32; 12];
+            g.fill_f32(&mut x);
+            let y_local = local.infer(ckpt, x.clone()).unwrap();
+            let y_routed = routed.infer(ckpt, x).unwrap();
+            assert_eq!(y_routed.len(), 4);
+            assert_eq!(
+                bits(&y_local),
+                bits(&y_routed),
+                "{}: trial {trial} diverged under partitioned serving",
+                ckpt.display()
+            );
+        }
+        let m = routed.metrics();
+        assert!(m.routed_batches.load(Ordering::Relaxed) > 0);
+        assert_eq!(m.failovers.load(Ordering::Relaxed), 0);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A partitioned worker's stage assignment touches only its own shards:
+/// the `ShardedReader` laziness the placement planner counts on.
+#[test]
+fn partition_stage_opens_only_its_shards() {
+    let dir = tmp_dir("stage_lazy");
+    let manifest = dir.join("m.toml");
+    let mut g = GaussianSource::new(41);
+    let mut tf = TensorFile::new();
+    for i in 0..3 {
+        store_weight(
+            &mut tf,
+            &format!("layers.{i}"),
+            &StoredWeight::Dense(rsi_compress::tensor::init::gaussian(6, 6, 1.0, &mut g)),
+        );
+    }
+    let mut w = ShardedWriter::create(&manifest, 1).unwrap(); // 1 tensor per shard
+    for name in tf.names().map(str::to_string).collect::<Vec<_>>() {
+        w.append(&name, tf.get(&name).unwrap()).unwrap();
+    }
+    w.finish().unwrap();
+
+    let r = ShardedReader::open(&manifest).unwrap();
+    assert_eq!(r.shard_count(), 3);
+    assert_eq!(r.shards_opened(), 0);
+    let stage = ModelKernels::load_subset(&r, &["layers.0".to_string()], false).unwrap();
+    assert!(stage.layers[0].relu, "mid-chain stage keeps its ReLU");
+    assert_eq!(
+        r.shards_opened(),
+        1,
+        "a one-layer stage must open exactly that layer's shard"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The failover guarantee: kill one replica mid-traffic and the router
+/// shifts to the survivor; kill the whole fleet and batches fall back to
+/// local in-process execution. Zero client-visible errors throughout,
+/// and the failed-over outputs still match the local reference.
+#[test]
+fn worker_death_fails_over_with_zero_client_errors() {
+    let dir = tmp_dir("failover");
+    let (dense_path, _single, _manifest) = build_checkpoints(&dir);
+    let mut plan = make_plan(&dense_path, PlacementMode::Replica, 2);
+    let mut fleet = spawn_fleet(&mut plan);
+    let (server, router) = routed_server(plan);
+
+    // Phase 1: both workers alive.
+    let r1 =
+        rsi_compress::serve::traffic::drive(&server, &[dense_path.clone()], 32, 4, 0xA).unwrap();
+    assert_eq!(r1.failed, 0, "healthy fleet must answer everything");
+    assert!(server.metrics().routed_batches.load(Ordering::Relaxed) > 0);
+
+    // Phase 2: kill one worker mid-traffic; the survivor absorbs.
+    fleet[0].shutdown();
+    let r2 =
+        rsi_compress::serve::traffic::drive(&server, &[dense_path.clone()], 32, 4, 0xB).unwrap();
+    assert_eq!(r2.failed, 0, "one dead replica must be invisible to clients");
+
+    // Phase 3: kill the whole fleet; local failover serves.
+    fleet[1].shutdown();
+    let r3 =
+        rsi_compress::serve::traffic::drive(&server, &[dense_path.clone()], 32, 4, 0xC).unwrap();
+    assert_eq!(r3.failed, 0, "a dead fleet must degrade to local, not error");
+    assert!(
+        server.metrics().failovers.load(Ordering::Relaxed) > 0,
+        "phase 3 must have exercised the local fallback"
+    );
+
+    // Failed-over outputs are still the correct outputs.
+    let local = local_server();
+    let mut g = GaussianSource::new(99);
+    let mut x = vec![0f32; 12];
+    g.fill_f32(&mut x);
+    assert_eq!(
+        bits(&local.infer(&dense_path, x.clone()).unwrap()),
+        bits(&server.infer(&dense_path, x).unwrap()),
+    );
+    assert_eq!(router.healthy_workers(), 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A router whose plan hash disagrees with the fleet is refused at
+/// handshake — `forward` fails (and routed serving would fail over)
+/// rather than silently serving different bytes.
+#[test]
+fn checkpoint_hash_mismatch_refuses_routing() {
+    let dir = tmp_dir("hash_mismatch");
+    let (dense_path, _single, _manifest) = build_checkpoints(&dir);
+    let mut plan = make_plan(&dense_path, PlacementMode::Replica, 1);
+    let _fleet = spawn_fleet(&mut plan);
+    let mut bad_plan = plan.clone();
+    bad_plan.checkpoint_hash ^= 1;
+    let router = Router::new(bad_plan, fast_router_config());
+    let err = router.forward(&Mat::zeros(1, 12)).unwrap_err();
+    assert!(
+        err.to_lowercase().contains("hash"),
+        "expected a hash-mismatch refusal, got: {err}"
+    );
+    // The correctly-hashed router on the same fleet works.
+    let good = Router::new(plan, fast_router_config());
+    assert_eq!(good.forward(&Mat::zeros(1, 12)).unwrap().shape(), (1, 4));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Per-model latency statistics flow over the wire: after routed
+/// traffic, each worker's `Stats` frame reports quantiles keyed by the
+/// checkpoint — and the `--verify` serving mode accepts an intact
+/// checkpoint while refusing a bit-rotted shard at load.
+#[test]
+fn stats_frame_and_verified_loading() {
+    let dir = tmp_dir("stats_verify");
+    let (_dense, _single, manifest_path) = build_checkpoints(&dir);
+    let mut plan = make_plan(&manifest_path, PlacementMode::Replica, 1);
+    let fleet = spawn_fleet(&mut plan);
+    let (server, router) = routed_server(plan);
+    for _ in 0..5 {
+        let y = server.infer(&manifest_path, vec![0.5; 12]).unwrap();
+        assert_eq!(y.len(), 4);
+    }
+    let stats = router.worker_stats(0).unwrap();
+    assert_eq!(stats.len(), 1, "one model served ⇒ one stats entry");
+    assert_eq!(stats[0].model, manifest_path.to_str().unwrap());
+    assert!(stats[0].n >= 5);
+    assert!(stats[0].p50 >= 0.0 && stats[0].p99 >= stats[0].p50);
+    drop(server);
+    drop(fleet);
+
+    // --verify mode: an intact sharded checkpoint loads…
+    let verifying = Arc::new(Server::new(ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        verify: true,
+        ..Default::default()
+    }));
+    assert_eq!(verifying.infer(&manifest_path, vec![0.5; 12]).unwrap().len(), 4);
+
+    // …then flip one payload byte in one shard: the next (cache-missing)
+    // verified load must refuse with a hash mismatch.
+    let m = rsi_compress::io::shard::ShardManifest::load(&manifest_path).unwrap();
+    let shard_path = dir.join(&m.shards[0].file);
+    let mut bytes = std::fs::read(&shard_path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&shard_path, &bytes).unwrap();
+    let fresh = Arc::new(Server::new(ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        verify: true,
+        ..Default::default()
+    }));
+    let err = format!("{:#}", fresh.model(&manifest_path).unwrap_err());
+    assert!(
+        err.contains("hash") || err.contains("verif"),
+        "bit rot must fail verified load, got: {err}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

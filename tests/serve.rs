@@ -174,7 +174,7 @@ fn concurrent_requests_coalesce_into_few_batches() {
     let model = tiny_model(c, d, 11);
     let pool = Arc::new(WorkerPool::new(2, 8));
     let metrics = Arc::new(ServeMetrics::new());
-    let batcher = Batcher::spawn(
+    let batcher = Batcher::spawn_local(
         model.clone(),
         pool.clone(),
         metrics.clone(),
@@ -209,7 +209,7 @@ fn lone_request_flushes_after_max_wait() {
     let model = tiny_model(4, 6, 12);
     let pool = Arc::new(WorkerPool::new(1, 2));
     let metrics = Arc::new(ServeMetrics::new());
-    let batcher = Batcher::spawn(
+    let batcher = Batcher::spawn_local(
         model,
         pool.clone(),
         metrics.clone(),
