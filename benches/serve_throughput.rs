@@ -15,11 +15,20 @@
 //! is that routing stays correct under load, asserted via zero failures
 //! and zero failovers), and it holds `clients` fixed because the traffic
 //! generator's determinism is per-client (see `serve::traffic::drive`).
+//!
+//! Each shape also serves its `--store-dtype i8` form (`factored-i8`,
+//! local only), and every run records a `BENCH_<date>.json` snapshot of
+//! the perf trajectory via `bench::record` — with `RSIC_BENCH_ENFORCE=1`,
+//! a >10% req/s drop against the previous matching snapshot fails the
+//! run.
 
+use rsi_compress::bench::record::{self, BenchRecord, BenchRow};
 use rsi_compress::compress::plan::{CompressionPlan, Method};
 use rsi_compress::compress::rsi::RsiOptions;
 use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
-use rsi_compress::io::checkpoint::{store_weight, CheckpointReader, CheckpointSource, StoredWeight};
+use rsi_compress::io::checkpoint::{
+    store_weight, CheckpointReader, CheckpointSource, StoreDType, StoredWeight,
+};
 use rsi_compress::io::tenz::{TensorEntry, TensorFile};
 use rsi_compress::report::{write_report, Table};
 use rsi_compress::rng::GaussianSource;
@@ -104,11 +113,26 @@ fn main() -> anyhow::Result<()> {
     let dir = std::env::temp_dir().join(format!("serve_thru_{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
 
+    // Useful arithmetic rate: 2 FLOPs per MAC, per served sample.
+    let gflops = |macs: usize, rps: f64| 2.0 * macs as f64 * rps / 1e9;
+
     let mut table = Table::new(
-        "Serve throughput — dense vs factored, local vs routed",
-        &["shape", "alpha", "k", "MACs/sample", "req/s", "speedup", "routed req/s", "routed/local"],
+        "Serve throughput — dense vs factored vs quantized, local vs routed",
+        &[
+            "shape",
+            "kernel",
+            "alpha",
+            "k",
+            "MACs/sample",
+            "req/s",
+            "GFLOP/s",
+            "speedup",
+            "routed req/s",
+            "routed/local",
+        ],
     );
     let mut best_speedup = 0.0f64;
+    let mut recorded: Vec<BenchRow> = Vec::new();
     for (c, d) in shapes {
         println!("== {c}x{d}, {requests} requests, {clients} clients ==");
         let mut g = GaussianSource::new((c * 31 + d) as u64);
@@ -128,18 +152,34 @@ fn main() -> anyhow::Result<()> {
             format!("{c}x{d}"),
             "dense".into(),
             "-".into(),
+            "-".into(),
             (c * d).to_string(),
             format!("{dense_rps:.0}"),
+            format!("{:.2}", gflops(c * d, dense_rps)),
             "1.00".into(),
             format!("{dense_routed:.0}"),
             format!("{:.2}", dense_routed / dense_rps),
         ]);
+        recorded.push(BenchRow {
+            shape: format!("{c}x{d}"),
+            kernel: "dense".into(),
+            alpha: 0.0,
+            req_per_s: dense_rps,
+            gflops: gflops(c * d, dense_rps),
+            speedup_vs_dense: 1.0,
+        });
 
         let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() })?;
+        let pipe_q = Pipeline::new(PipelineConfig {
+            workers: 2,
+            store_dtype: StoreDType::I8,
+            ..Default::default()
+        })?;
         for alpha in alphas {
             let k = rsi_compress::util::rank_for_alpha(alpha, c, d);
-            let fact_path = dir.join(format!("fact_{c}x{d}_a{alpha}.tenz"));
+            let macs = k * (c + d);
             let plan = CompressionPlan::uniform_alpha(alpha, Method::Rsi(RsiOptions::with_q(2, 9)));
+            let fact_path = dir.join(format!("fact_{c}x{d}_a{alpha}.tenz"));
             let src = Arc::new(CheckpointReader::open(&dense_path)?);
             pipe.compress_to_path(src, &plan, &fact_path)?;
 
@@ -149,20 +189,88 @@ fn main() -> anyhow::Result<()> {
             best_speedup = best_speedup.max(speedup);
             table.row(&[
                 format!("{c}x{d}"),
+                "factored-f32".into(),
                 format!("{alpha}"),
                 k.to_string(),
-                (k * (c + d)).to_string(),
+                macs.to_string(),
                 format!("{rps:.0}"),
+                format!("{:.2}", gflops(macs, rps)),
                 format!("{speedup:.2}"),
                 format!("{routed_rps:.0}"),
                 format!("{:.2}", routed_rps / rps),
             ]);
+            recorded.push(BenchRow {
+                shape: format!("{c}x{d}"),
+                kernel: "factored-f32".into(),
+                alpha,
+                req_per_s: rps,
+                gflops: gflops(macs, rps),
+                speedup_vs_dense: speedup,
+            });
+
+            // The i8 quantized form of the same layer, served locally
+            // (the routed column tracks the f32 wire path only).
+            let quant_path = dir.join(format!("quant_{c}x{d}_a{alpha}.tenz"));
+            let src = Arc::new(CheckpointReader::open(&dense_path)?);
+            pipe_q.compress_to_path(src, &plan, &quant_path)?;
+            let qrps = run_traffic(&quant_path, requests, clients)?;
+            table.row(&[
+                format!("{c}x{d}"),
+                "factored-i8".into(),
+                format!("{alpha}"),
+                k.to_string(),
+                macs.to_string(),
+                format!("{qrps:.0}"),
+                format!("{:.2}", gflops(macs, qrps)),
+                format!("{:.2}", qrps / dense_rps),
+                "-".into(),
+                "-".into(),
+            ]);
+            recorded.push(BenchRow {
+                shape: format!("{c}x{d}"),
+                kernel: "factored-i8".into(),
+                alpha,
+                req_per_s: qrps,
+                gflops: gflops(macs, qrps),
+                speedup_vs_dense: qrps / dense_rps,
+            });
         }
     }
     println!("{}", table.render());
     write_report("reports/serve_throughput.csv", &table.to_csv())?;
     println!("wrote reports/serve_throughput.csv (best factored speedup {best_speedup:.2}×)");
     let _ = std::fs::remove_dir_all(&dir);
+
+    // Perf trajectory: compare against the last matching snapshot, then
+    // record this run as the new one.
+    let snapshot = BenchRecord {
+        date: record::today_utc(),
+        git_rev: record::git_rev(),
+        fast,
+        rows: recorded,
+    };
+    let bench_dir = record::bench_dir();
+    let baseline = BenchRecord::latest_in(&bench_dir, fast);
+    let snap_path = snapshot.write_to(&bench_dir)?;
+    println!("recorded perf snapshot → {}", snap_path.display());
+    if let Some((base_path, base)) = baseline {
+        let regressions = snapshot.regressions_vs(&base);
+        if regressions.is_empty() {
+            println!("no >10% req/s regressions vs {}", base_path.display());
+        } else {
+            for r in &regressions {
+                println!("REGRESSION: {r}");
+            }
+            if record::enforce() {
+                anyhow::bail!(
+                    "{} perf regression(s) vs {}",
+                    regressions.len(),
+                    base_path.display()
+                );
+            }
+        }
+    }
+
     anyhow::ensure!(
         best_speedup > 1.0,
         "factored serving never beat dense at α ≤ 0.3 (best {best_speedup:.2}×) — \

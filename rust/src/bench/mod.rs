@@ -2,10 +2,14 @@
 //!
 //! `benches/*.rs` binaries use [`Harness`] for warmup → timed iterations →
 //! robust statistics, and the [`stats`] module for the mean/stddev/
-//! percentile summaries printed in the paper-style tables.
+//! percentile summaries printed in the paper-style tables. The [`record`]
+//! module persists each serve-throughput run as a `BENCH_<date>.json`
+//! snapshot and compares against the previous one (the perf trajectory).
 
 pub mod harness;
+pub mod record;
 pub mod stats;
 
 pub use harness::{BenchResult, Harness};
+pub use record::{BenchRecord, BenchRow};
 pub use stats::Summary;

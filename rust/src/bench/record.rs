@@ -1,0 +1,526 @@
+//! Recorded perf trajectory: each `serve_throughput` run writes a
+//! `BENCH_<iso-date>.json` snapshot (shapes, kernels, req/s, GFLOP/s,
+//! speedup vs dense, git rev) into the repo root, and can compare itself
+//! against the latest previous snapshot — with `RSIC_BENCH_ENFORCE=1` a
+//! >10% req/s regression fails the run. serde is not in the offline crate
+//! universe, so the JSON emitter and the (minimal, strict) parser live
+//! here.
+
+use std::path::{Path, PathBuf};
+
+/// One measured bench configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    /// Layer shape, e.g. `"1024x4096"`.
+    pub shape: String,
+    /// Kernel under test: `dense`, `factored-f32`, `factored-i8`, …
+    pub kernel: String,
+    /// Compression ratio α (0 for dense).
+    pub alpha: f64,
+    pub req_per_s: f64,
+    /// Useful arithmetic rate: 2·MACs·req/s / 1e9.
+    pub gflops: f64,
+    /// req/s relative to the dense kernel on the same shape.
+    pub speedup_vs_dense: f64,
+}
+
+/// One run's snapshot — what a `BENCH_<date>.json` file holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// UTC date the run finished (also the filename key).
+    pub date: String,
+    /// `git rev-parse --short HEAD`, or `"unknown"` outside a work tree.
+    pub git_rev: String,
+    /// Whether the run used the `RSIC_BENCH_FAST=1` smoke settings —
+    /// fast and full runs are only ever compared like-for-like.
+    pub fast: bool,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"date\": \"{}\",\n", esc(&self.date)));
+        out.push_str(&format!("  \"git_rev\": \"{}\",\n", esc(&self.git_rev)));
+        out.push_str(&format!("  \"fast\": {},\n", self.fast));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"shape\": \"{}\", \"kernel\": \"{}\", \"alpha\": {}, \
+                 \"req_per_s\": {}, \"gflops\": {}, \"speedup_vs_dense\": {}}}{}\n",
+                esc(&r.shape),
+                esc(&r.kernel),
+                num(r.alpha),
+                num(r.req_per_s),
+                num(r.gflops),
+                num(r.speedup_vs_dense),
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn from_json(text: &str) -> Result<BenchRecord, String> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        let date = v.get("date").and_then(Json::as_str).ok_or("missing \"date\"")?.to_string();
+        let git_rev =
+            v.get("git_rev").and_then(Json::as_str).ok_or("missing \"git_rev\"")?.to_string();
+        let fast = v.get("fast").and_then(Json::as_bool).ok_or("missing \"fast\"")?;
+        let mut rows = Vec::new();
+        for r in v.get("rows").and_then(Json::as_arr).ok_or("missing \"rows\"")? {
+            let field = |k: &str| {
+                r.get(k).and_then(Json::as_f64).ok_or_else(|| format!("row missing {k:?}"))
+            };
+            rows.push(BenchRow {
+                shape: r.get("shape").and_then(Json::as_str).ok_or("row missing \"shape\"")?.into(),
+                kernel: r
+                    .get("kernel")
+                    .and_then(Json::as_str)
+                    .ok_or("row missing \"kernel\"")?
+                    .into(),
+                alpha: field("alpha")?,
+                req_per_s: field("req_per_s")?,
+                gflops: field("gflops")?,
+                speedup_vs_dense: field("speedup_vs_dense")?,
+            });
+        }
+        Ok(BenchRecord { date, git_rev, fast, rows })
+    }
+
+    /// Write `BENCH_<date>.json` into `dir` (same-day reruns overwrite).
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.date));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Latest readable `BENCH_*.json` in `dir` whose `fast` flag matches —
+    /// the comparison baseline. ISO dates in the filename sort
+    /// chronologically, so lexicographic order is time order.
+    pub fn latest_in(dir: &Path, fast: bool) -> Option<(PathBuf, BenchRecord)> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .ok()?
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        while let Some(path) = paths.pop() {
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            let Ok(rec) = BenchRecord::from_json(&text) else { continue };
+            if rec.fast == fast {
+                return Some((path, rec));
+            }
+        }
+        None
+    }
+
+    /// Regression messages: rows whose req/s dropped more than 10% below
+    /// the same (shape, kernel, α) row of `baseline`. Rows present on only
+    /// one side are not regressions.
+    pub fn regressions_vs(&self, baseline: &BenchRecord) -> Vec<String> {
+        let mut out = Vec::new();
+        for row in &self.rows {
+            let base = baseline.rows.iter().find(|b| {
+                b.shape == row.shape
+                    && b.kernel == row.kernel
+                    && (b.alpha - row.alpha).abs() < 1e-12
+            });
+            let Some(base) = base else { continue };
+            if base.req_per_s > 0.0 && row.req_per_s < 0.90 * base.req_per_s {
+                out.push(format!(
+                    "{} {} α={}: {:.1} req/s vs baseline {:.1} ({:+.1}%)",
+                    row.shape,
+                    row.kernel,
+                    row.alpha,
+                    row.req_per_s,
+                    base.req_per_s,
+                    (row.req_per_s / base.req_per_s - 1.0) * 100.0
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Directory BENCH files live in: `$RSIC_BENCH_DIR` when set, else the
+/// repo root (benches run with `rust/` as the working directory), else
+/// the working directory itself.
+pub fn bench_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("RSIC_BENCH_DIR") {
+        return PathBuf::from(d);
+    }
+    let parent = Path::new("..");
+    if parent.join("ROADMAP.md").is_file() {
+        return parent.to_path_buf();
+    }
+    PathBuf::from(".")
+}
+
+/// `RSIC_BENCH_ENFORCE=1`: regressions fail the bench run instead of
+/// merely printing.
+pub fn enforce() -> bool {
+    std::env::var("RSIC_BENCH_ENFORCE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Short git revision of the working tree, `"unknown"` when unavailable.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Today's UTC date, `YYYY-MM-DD`.
+pub fn today_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-epoch → (year, month, day), proleptic Gregorian
+/// (Howard Hinnant's `civil_from_days` algorithm).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    (y, m as u32, d)
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON-safe float text (`Display` for f64 is shortest-round-trip).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".into()
+    }
+}
+
+/// Minimal strict JSON value + recursive-descent parser — just enough to
+/// read back the snapshots this module writes.
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+    fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek().ok_or("unexpected end of input")? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at offset {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            out.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = *self.s.get(self.i).ok_or("unterminated string")?;
+            self.i += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(out)
+                        .map_err(|_| String::from("invalid utf-8 in string"))
+                }
+                b'\\' => {
+                    let e = *self.s.get(self.i).ok_or("unterminated escape")?;
+                    self.i += 1;
+                    let ch = match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'u' => {
+                            let hex = self.s.get(self.i..self.i + 4).ok_or("bad \\u escape")?;
+                            let txt =
+                                std::str::from_utf8(hex).map_err(|_| String::from("bad \\u"))?;
+                            let code = u32::from_str_radix(txt, 16)
+                                .map_err(|_| String::from("bad \\u escape"))?;
+                            self.i += 4;
+                            char::from_u32(code).unwrap_or('\u{fffd}')
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    };
+                    let mut buf = [0u8; 4];
+                    out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                }
+                other => out.push(other),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let txt = std::str::from_utf8(&self.s[start..self.i])
+            .map_err(|_| String::from("bad number"))?;
+        txt.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number {txt:?}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchRecord {
+        BenchRecord {
+            date: "2026-08-08".into(),
+            git_rev: "abc123\"\\".into(),
+            fast: true,
+            rows: vec![
+                BenchRow {
+                    shape: "1024x4096".into(),
+                    kernel: "dense".into(),
+                    alpha: 0.0,
+                    req_per_s: 100.5,
+                    gflops: 12.25,
+                    speedup_vs_dense: 1.0,
+                },
+                BenchRow {
+                    shape: "1024x4096".into(),
+                    kernel: "factored-f32".into(),
+                    alpha: 0.1,
+                    req_per_s: 321.0,
+                    gflops: 7.5,
+                    speedup_vs_dense: 3.194,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let rec = sample();
+        let back = BenchRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_input() {
+        assert!(BenchRecord::from_json("{").is_err());
+        assert!(BenchRecord::from_json("[]").is_err());
+        assert!(BenchRecord::from_json("{\"date\": \"x\"}").is_err());
+        let mut text = sample().to_json();
+        text.push('x');
+        assert!(BenchRecord::from_json(&text).is_err(), "trailing bytes must be rejected");
+    }
+
+    #[test]
+    fn regression_detection_is_keyed_and_thresholded() {
+        let base = sample();
+        let mut run = sample();
+        // 5% slower: within tolerance.
+        run.rows[1].req_per_s = 0.95 * base.rows[1].req_per_s;
+        assert!(run.regressions_vs(&base).is_empty());
+        // 15% slower: flagged, keyed to the factored row only.
+        run.rows[1].req_per_s = 0.85 * base.rows[1].req_per_s;
+        let regs = run.regressions_vs(&base);
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].contains("factored-f32"), "{}", regs[0]);
+        // A row with no baseline counterpart is not a regression.
+        run.rows[1].kernel = "factored-i8".into();
+        assert!(run.regressions_vs(&base).is_empty());
+    }
+
+    #[test]
+    fn civil_date_math() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        assert_eq!(civil_from_days(19_782), (2024, 2, 29)); // leap day
+        assert_eq!(civil_from_days(-1), (1969, 12, 31));
+    }
+
+    #[test]
+    fn write_and_latest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bench_rec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut old = sample();
+        old.date = "2026-08-01".into();
+        old.write_to(&dir).unwrap();
+        let new = sample();
+        new.write_to(&dir).unwrap();
+        // Latest matching the fast flag wins; a mismatched flag is skipped.
+        let (path, rec) = BenchRecord::latest_in(&dir, true).unwrap();
+        assert!(path.ends_with("BENCH_2026-08-08.json"));
+        assert_eq!(rec, new);
+        assert!(BenchRecord::latest_in(&dir, false).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

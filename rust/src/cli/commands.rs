@@ -36,6 +36,7 @@ USAGE:
                 [--method rsi|svd] [--ortho qr|cholqr2|ns[:N]] [--oversample P]
                 [--shard-size N[k|m|g]]       # write a sharded checkpoint (--out is a .toml manifest)
                 [--adaptive <budget-ratio>]   # section-5 adaptive layer-wise ranks
+                [--store-dtype f32|f16|i8]    # on-disk factor dtype (i8 adds per-row .scale tensors)
   rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
   rsic serve    --checkpoint F [--checkpoint F2 ...] [--requests N] [--clients C]
                 [--batch B] [--wait-ms MS] [--workers W] [--queue-depth Q]
@@ -182,11 +183,17 @@ fn cmd_compress(args: &Args) -> Result<()> {
     if shard_size.is_some() && !crate::io::shard::is_manifest_path(std::path::Path::new(out)) {
         bail!("--shard-size writes a sharded checkpoint: --out must be a .toml manifest path, got {out:?}");
     }
+    let store_dtype = match args.opt("store-dtype") {
+        Some(s) => crate::io::checkpoint::StoreDType::parse(s)
+            .with_context(|| format!("bad --store-dtype {s:?} (f32|f16|i8)"))?,
+        None => Default::default(),
+    };
     let pipe = Pipeline::new(PipelineConfig {
         backend: backend_of(args)?,
         validate: args.flag("validate"),
         workers: args.usize_or("workers", crate::util::default_threads())?,
         shard_size,
+        store_dtype,
         ..Default::default()
     })?;
     let report = pipe.compress_to_path(src.clone(), &plan, out)?;

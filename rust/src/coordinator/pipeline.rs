@@ -38,11 +38,12 @@ use crate::compress::factorizer::{BackendResources, Factorizer, FactorizerRegist
 use crate::compress::plan::{CompressionPlan, LayerPlan};
 use crate::compress::Factorization;
 use crate::io::checkpoint::{
-    factor_a_key, factor_b_key, layer_infos, layer_infos_for_names, load_weight_from,
-    store_weight, weight_key, StoredWeight, WeightSource,
+    encode_factor, factor_a_key, factor_a_scale_key, factor_b_key, factor_b_scale_key,
+    layer_infos, layer_infos_for_names, load_weight_from, store_factors, weight_key, StoreDType,
+    StoredWeight, WeightSource,
 };
 use crate::io::shard::{is_manifest_path, ShardedWriter};
-use crate::io::tenz::{DType, TensorFile, TenzError};
+use crate::io::tenz::{DType, TensorEntry, TensorFile, TenzError};
 use crate::io::writer::{EntrySink, TenzWriter};
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -70,6 +71,11 @@ pub struct PipelineConfig {
     /// unbounded — a manifest output still gets a manifest, with one
     /// shard. Ignored for single-file `.tenz` outputs.
     pub shard_size: Option<u64>,
+    /// On-disk dtype for the factor tensors this run writes (`rsic
+    /// compress --store-dtype`): f32 (default), f16, or per-row i8 with
+    /// `.scale` siblings. Affects only newly written factors; passthrough
+    /// tensors keep their source dtype.
+    pub store_dtype: StoreDType,
 }
 
 impl Default for PipelineConfig {
@@ -81,6 +87,7 @@ impl Default for PipelineConfig {
             validate: false,
             passthrough_chunk: 1 << 20,
             shard_size: None,
+            store_dtype: StoreDType::F32,
         }
     }
 }
@@ -215,11 +222,12 @@ impl CheckpointSink {
         }
     }
 
-    fn append_mat(&mut self, name: &str, m: &crate::tensor::Mat<f32>) -> Result<(), TenzError> {
-        match self {
-            CheckpointSink::Single(w) => w.append_mat(name, m),
-            CheckpointSink::Sharded(w) => w.append_mat(name, m),
-        }
+    /// Append an already-encoded entry (any dtype) through the streamed
+    /// surface — what the write loop uses for freshly computed factors.
+    fn append_entry(&mut self, name: &str, e: &TensorEntry) -> Result<(), TenzError> {
+        let mut sink = self.begin_entry(name, e.dtype, &e.dims)?;
+        sink.write(&e.bytes)?;
+        sink.finish()
     }
 
     fn tensors_written(&self) -> usize {
@@ -439,10 +447,12 @@ impl Pipeline {
         for (idx, r) in results.into_iter().enumerate() {
             match r {
                 Ok((job, Ok((f, secs, err)))) => {
-                    store_weight(
+                    store_factors(
                         &mut compressed,
                         &job.layer,
-                        &StoredWeight::Factored { a: f.a, b: f.b },
+                        &f.a,
+                        &f.b,
+                        self.config.store_dtype,
                     );
                     self.metrics.layers_completed.fetch_add(1, Ordering::Relaxed);
                     outcomes.push(LayerOutcome {
@@ -538,7 +548,13 @@ impl Pipeline {
             jobs.iter().enumerate().map(|(i, j)| (j.layer.clone(), i)).collect();
         let mut rep_key_layer: HashMap<String, String> = HashMap::new();
         for j in &jobs {
-            for key in [weight_key(&j.layer), factor_a_key(&j.layer), factor_b_key(&j.layer)] {
+            for key in [
+                weight_key(&j.layer),
+                factor_a_key(&j.layer),
+                factor_a_scale_key(&j.layer),
+                factor_b_key(&j.layer),
+                factor_b_scale_key(&j.layer),
+            ] {
                 rep_key_layer.insert(key, j.layer.clone());
             }
         }
@@ -646,8 +662,19 @@ impl Pipeline {
             submit_window(written_jobs, &mut submitted);
             let outcome = match result {
                 Ok((job, Ok((f, secs, err)))) => {
-                    writer.append_mat(&factor_a_key(&job.layer), &f.a)?;
-                    writer.append_mat(&factor_b_key(&job.layer), &f.b)?;
+                    // Factor entries land in sorted key order even with
+                    // scales: "…A" < "…A.scale" < "…B" < "…B.scale".
+                    let dtype = self.config.store_dtype;
+                    let (ea, sa) = encode_factor(&f.a, dtype);
+                    writer.append_entry(&factor_a_key(&job.layer), &ea)?;
+                    if let Some(s) = sa {
+                        writer.append_entry(&factor_a_scale_key(&job.layer), &s)?;
+                    }
+                    let (eb, sb) = encode_factor(&f.b, dtype);
+                    writer.append_entry(&factor_b_key(&job.layer), &eb)?;
+                    if let Some(s) = sb {
+                        writer.append_entry(&factor_b_scale_key(&job.layer), &s)?;
+                    }
                     self.metrics.layers_completed.fetch_add(1, Ordering::Relaxed);
                     LayerOutcome { plan: job, seconds: secs, spectral_error: err, error: None }
                 }
@@ -709,7 +736,13 @@ impl Pipeline {
         writer: &mut CheckpointSink,
         layer: &str,
     ) -> Result<(), TenzError> {
-        for key in [weight_key(layer), factor_a_key(layer), factor_b_key(layer)] {
+        for key in [
+            weight_key(layer),
+            factor_a_key(layer),
+            factor_a_scale_key(layer),
+            factor_b_key(layer),
+            factor_b_scale_key(layer),
+        ] {
             if source.contains(&key) {
                 self.copy_passthrough(source, writer, &key)?;
             }
@@ -756,6 +789,7 @@ mod tests {
     use super::*;
     use crate::compress::plan::Method;
     use crate::compress::rsi::RsiOptions;
+    use crate::io::checkpoint::store_weight;
     use crate::rng::GaussianSource;
     use crate::tensor::init::{matrix_with_spectrum, SpectrumShape};
 
@@ -945,6 +979,42 @@ mod tests {
         let back = TensorFile::read(&out).unwrap();
         assert_eq!(back.to_bytes(), eager.compressed.to_bytes());
         assert_eq!(stream.tensors_written, back.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_dtype_i8_writes_quantized_factors_in_both_modes() {
+        let dir = std::env::temp_dir().join(format!("pipe_quant_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("out.tenz");
+
+        let ckpt = test_ckpt();
+        let plan = CompressionPlan::uniform_alpha(0.3, Method::Rsi(RsiOptions::with_q(2, 17)));
+        let pipe = Pipeline::new(PipelineConfig {
+            workers: 2,
+            store_dtype: StoreDType::I8,
+            ..Default::default()
+        })
+        .unwrap();
+        let eager = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+        assert!(eager.outcomes.iter().all(|o| o.error.is_none()), "{:?}", eager.outcomes);
+        // Every compressed layer now loads as the quantized representation
+        // and carries its scale siblings.
+        for i in 0..3 {
+            let layer = format!("layers.{i}");
+            assert!(eager.compressed.contains(&format!("{layer}.weight.A.scale")));
+            let w = crate::io::checkpoint::load_weight(&eager.compressed, &layer).unwrap();
+            assert!(matches!(w, StoredWeight::QuantizedFactored { .. }), "{layer}: {w:?}");
+        }
+        // Ratio accounting is unchanged: it counts stored values, and an
+        // i8 factor stores the same value count as its f32 form.
+        assert!(eager.ratio < 1.0);
+
+        // Streaming mode writes byte-identical output.
+        let stream = pipe.compress_to_path(Arc::new(ckpt), &plan, &out).unwrap();
+        assert!(stream.outcomes.iter().all(|o| o.error.is_none()), "{:?}", stream.outcomes);
+        let back = TensorFile::read(&out).unwrap();
+        assert_eq!(back.to_bytes(), eager.compressed.to_bytes());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -4,7 +4,10 @@
 //! `layers.<i>.weight` / `layers.<i>.bias` plus a few metadata scalars.
 //! A *compressed* checkpoint replaces `weight` with `weight.A` (C×k) and
 //! `weight.B` (k×D) — exactly the two-smaller-linear-layers rewrite of
-//! Section 3.
+//! Section 3. Under `--store-dtype` the factors may be stored narrower:
+//! f16 entries load back as plain f32 factors, while i8 entries carry
+//! per-row quantization scales in `weight.A.scale` / `weight.B.scale`
+//! siblings and load as [`StoredWeight::QuantizedFactored`].
 //!
 //! Checkpoints are accessed through the [`WeightSource`] trait, which has
 //! two implementations with identical semantics:
@@ -20,7 +23,7 @@
 use super::lazy::TenzReader;
 use super::shard::ShardedReader;
 use super::tenz::{DType, TensorEntry, TensorFile, TenzError};
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QuantMat};
 use std::path::Path;
 use std::time::SystemTime;
 
@@ -37,12 +40,23 @@ pub fn factor_a_key(layer: &str) -> String {
 pub fn factor_b_key(layer: &str) -> String {
     format!("{layer}.weight.B")
 }
+/// Per-row quantization scales of an i8 `weight.A` (length C).
+pub fn factor_a_scale_key(layer: &str) -> String {
+    format!("{layer}.weight.A.scale")
+}
+/// Per-row quantization scales of an i8 `weight.B` (length k).
+pub fn factor_b_scale_key(layer: &str) -> String {
+    format!("{layer}.weight.B.scale")
+}
 
-/// A layer as stored: either dense or factored.
+/// A layer as stored: dense, factored, or quantized-factored.
 #[derive(Debug, Clone)]
 pub enum StoredWeight {
     Dense(Mat<f32>),
     Factored { a: Mat<f32>, b: Mat<f32> },
+    /// i8 factors with per-row f32 scales — served by the dequantize-free
+    /// quantized kernel; `materialize` expands to f32 on demand.
+    QuantizedFactored { a: QuantMat, b: QuantMat },
 }
 
 impl StoredWeight {
@@ -51,6 +65,7 @@ impl StoredWeight {
         match self {
             StoredWeight::Dense(w) => w.shape(),
             StoredWeight::Factored { a, b } => (a.rows(), b.cols()),
+            StoredWeight::QuantizedFactored { a, b } => (a.rows(), b.cols()),
         }
     }
 
@@ -59,6 +74,7 @@ impl StoredWeight {
         match self {
             StoredWeight::Dense(w) => w.rows() * w.cols(),
             StoredWeight::Factored { a, b } => a.rows() * a.cols() + b.rows() * b.cols(),
+            StoredWeight::QuantizedFactored { a, b } => a.len() + b.len(),
         }
     }
 
@@ -67,6 +83,9 @@ impl StoredWeight {
         match self {
             StoredWeight::Dense(w) => w.clone(),
             StoredWeight::Factored { a, b } => crate::linalg::gemm::matmul(a, b),
+            StoredWeight::QuantizedFactored { a, b } => {
+                crate::linalg::gemm::matmul(&a.dequantize(), &b.dequantize())
+            }
         }
     }
 
@@ -74,6 +93,59 @@ impl StoredWeight {
         match self {
             StoredWeight::Dense(_) => None,
             StoredWeight::Factored { a, .. } => Some(a.cols()),
+            StoredWeight::QuantizedFactored { a, .. } => Some(a.cols()),
+        }
+    }
+}
+
+/// On-disk dtype for factor tensors written by compression runs
+/// (`rsic compress --store-dtype`). f16 halves factor bytes and loads
+/// back as a plain [`StoredWeight::Factored`]; i8 quarters them, pairing
+/// every factor with a per-row `.scale` tensor and loading as
+/// [`StoredWeight::QuantizedFactored`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StoreDType {
+    /// Full-precision f32 factors (the default).
+    #[default]
+    F32,
+    /// Per-row symmetric i8 codes plus an f32 `.scale` sibling per factor.
+    I8,
+    /// IEEE binary16 factors; decoded exactly back to f32 at load.
+    F16,
+}
+
+impl StoreDType {
+    /// Parse a `--store-dtype` flag value.
+    pub fn parse(s: &str) -> Option<StoreDType> {
+        match s {
+            "f32" => Some(StoreDType::F32),
+            "i8" | "int8" => Some(StoreDType::I8),
+            "f16" | "half" => Some(StoreDType::F16),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreDType::F32 => "f32",
+            StoreDType::I8 => "i8",
+            StoreDType::F16 => "f16",
+        }
+    }
+}
+
+/// Encode one f32 factor for storage at `dtype`: the factor entry itself
+/// plus, for i8, the `.scale` sibling that must be stored alongside it.
+pub fn encode_factor(m: &Mat<f32>, dtype: StoreDType) -> (TensorEntry, Option<TensorEntry>) {
+    let dims = vec![m.rows(), m.cols()];
+    match dtype {
+        StoreDType::F32 => (TensorEntry::from_f32(dims, m.data()), None),
+        StoreDType::F16 => (TensorEntry::from_f32_as_f16(dims, m.data()), None),
+        StoreDType::I8 => {
+            let q = QuantMat::quantize(m);
+            let codes = TensorEntry::from_i8(dims, q.data());
+            let scales = TensorEntry::from_f32(vec![q.rows()], q.scales());
+            (codes, Some(scales))
         }
     }
 }
@@ -373,10 +445,44 @@ impl WeightSource for CheckpointSource {
     }
 }
 
+/// Load one i8 factor plus its `.scale` sibling as a [`QuantMat`].
+fn load_quant_factor(
+    src: &dyn WeightSource,
+    key: &str,
+    scale_key: &str,
+) -> Result<QuantMat, TenzError> {
+    let e = src.entry(key)?;
+    if e.dims.len() != 2 {
+        return Err(TenzError::NotAMatrix { name: key.into(), ndim: e.dims.len() });
+    }
+    let codes = e.to_i8().map_err(|err| name_dtype_error(err, key))?;
+    let scales = src.entry(scale_key)?.to_f32().map_err(|err| name_dtype_error(err, scale_key))?;
+    QuantMat::from_parts(e.dims[0], e.dims[1], codes, scales)
+        .map_err(|msg| TenzError::Corrupt(format!("{key}: {msg}")))
+}
+
+/// Attribute a payload-decode `WrongDType` to the tensor it came from.
+fn name_dtype_error(err: TenzError, name: &str) -> TenzError {
+    match err {
+        TenzError::WrongDType { got, want, .. } => {
+            TenzError::WrongDType { name: name.into(), got, want }
+        }
+        other => other,
+    }
+}
+
 /// Load the weight for `layer` from any source, preferring factored form.
+/// i8 factor entries (written by `--store-dtype i8`) dispatch to the
+/// quantized representation; f16 entries decode transparently to f32.
 pub fn load_weight_from(src: &dyn WeightSource, layer: &str) -> Result<StoredWeight, TenzError> {
-    if src.contains(&factor_a_key(layer)) {
-        let a = src.mat(&factor_a_key(layer))?;
+    let a_key = factor_a_key(layer);
+    if src.contains(&a_key) {
+        if src.dtype_of(&a_key) == Some(DType::I8) {
+            let a = load_quant_factor(src, &a_key, &factor_a_scale_key(layer))?;
+            let b = load_quant_factor(src, &factor_b_key(layer), &factor_b_scale_key(layer))?;
+            return Ok(StoredWeight::QuantizedFactored { a, b });
+        }
+        let a = src.mat(&a_key)?;
         let b = src.mat(&factor_b_key(layer))?;
         Ok(StoredWeight::Factored { a, b })
     } else {
@@ -389,17 +495,56 @@ pub fn load_weight(tf: &TensorFile, layer: &str) -> Result<StoredWeight, TenzErr
     load_weight_from(tf, layer)
 }
 
-/// Store a weight, clearing any previous representation of the same layer.
-pub fn store_weight(tf: &mut TensorFile, layer: &str, w: &StoredWeight) {
+/// Remove every stored representation of `layer` (dense, factored, and
+/// quantization scales).
+fn clear_layer_weight(tf: &mut TensorFile, layer: &str) {
     tf.remove(&weight_key(layer));
     tf.remove(&factor_a_key(layer));
     tf.remove(&factor_b_key(layer));
+    tf.remove(&factor_a_scale_key(layer));
+    tf.remove(&factor_b_scale_key(layer));
+}
+
+fn insert_quant(tf: &mut TensorFile, key: String, scale_key: String, q: &QuantMat) {
+    tf.insert(key, TensorEntry::from_i8(vec![q.rows(), q.cols()], q.data()));
+    tf.insert(scale_key, TensorEntry::from_f32(vec![q.rows()], q.scales()));
+}
+
+/// Store a weight, clearing any previous representation of the same layer.
+pub fn store_weight(tf: &mut TensorFile, layer: &str, w: &StoredWeight) {
+    clear_layer_weight(tf, layer);
     match w {
         StoredWeight::Dense(m) => tf.insert_mat(weight_key(layer), m),
         StoredWeight::Factored { a, b } => {
             tf.insert_mat(factor_a_key(layer), a);
             tf.insert_mat(factor_b_key(layer), b);
         }
+        StoredWeight::QuantizedFactored { a, b } => {
+            insert_quant(tf, factor_a_key(layer), factor_a_scale_key(layer), a);
+            insert_quant(tf, factor_b_key(layer), factor_b_scale_key(layer), b);
+        }
+    }
+}
+
+/// Store freshly computed f32 factors at the requested on-disk dtype —
+/// the eager pipeline's store step under `--store-dtype`.
+pub fn store_factors(
+    tf: &mut TensorFile,
+    layer: &str,
+    a: &Mat<f32>,
+    b: &Mat<f32>,
+    dtype: StoreDType,
+) {
+    clear_layer_weight(tf, layer);
+    let (ea, sa) = encode_factor(a, dtype);
+    tf.insert(factor_a_key(layer), ea);
+    if let Some(s) = sa {
+        tf.insert(factor_a_scale_key(layer), s);
+    }
+    let (eb, sb) = encode_factor(b, dtype);
+    tf.insert(factor_b_key(layer), eb);
+    if let Some(s) = sb {
+        tf.insert(factor_b_scale_key(layer), s);
     }
 }
 
@@ -628,5 +773,97 @@ mod tests {
         assert_eq!(ckpt.tenz().payload_reads(), 3); // + A and B
 
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn quantized_store_load_roundtrip() {
+        let mut g = GaussianSource::new(7);
+        let a = gaussian(6, 3, 1.0, &mut g);
+        let b = gaussian(3, 8, 1.0, &mut g);
+        let mut tf = TensorFile::new();
+        store_factors(&mut tf, "l", &a, &b, StoreDType::I8);
+        assert!(tf.contains("l.weight.A.scale") && tf.contains("l.weight.B.scale"));
+        // Scale keys must not surface phantom layers.
+        assert_eq!(list_layers(&tf), vec!["l"]);
+        let back = load_weight(&tf, "l").unwrap();
+        let StoredWeight::QuantizedFactored { a: qa, b: qb } = &back else {
+            panic!("expected quantized, got {back:?}");
+        };
+        assert_eq!((qa.clone(), qb.clone()), (QuantMat::quantize(&a), QuantMat::quantize(&b)));
+        assert_eq!(back.shape(), (6, 8));
+        assert_eq!(back.rank(), Some(3));
+        assert_eq!(back.param_count(), 6 * 3 + 3 * 8);
+        // Materialize goes through dequantize: error bounded by the scales.
+        let m = back.materialize();
+        assert_eq!(m.shape(), (6, 8));
+
+        // Re-storing as dense clears codes and scales.
+        store_weight(&mut tf, "l", &StoredWeight::Dense(Mat::zeros(6, 8)));
+        assert!(!tf.contains("l.weight.A") && !tf.contains("l.weight.A.scale"));
+    }
+
+    #[test]
+    fn f16_factors_load_as_plain_factored() {
+        let mut g = GaussianSource::new(8);
+        let a = gaussian(4, 2, 1.0, &mut g);
+        let b = gaussian(2, 5, 1.0, &mut g);
+        let mut tf = TensorFile::new();
+        store_factors(&mut tf, "l", &a, &b, StoreDType::F16);
+        let back = load_weight(&tf, "l").unwrap();
+        let StoredWeight::Factored { a: fa, .. } = &back else {
+            panic!("expected factored, got {back:?}");
+        };
+        // Every loaded value is the f16 rounding of the original.
+        for (x, y) in a.data().iter().zip(fa.data()) {
+            assert_eq!(y.to_bits(), f16_to_f32_bits_of(*x));
+        }
+        assert_eq!(back.shape(), (4, 5));
+    }
+
+    fn f16_to_f32_bits_of(v: f32) -> u32 {
+        crate::tensor::quant::f16_bits_to_f32(crate::tensor::quant::f32_to_f16_bits(v)).to_bits()
+    }
+
+    #[test]
+    fn quantized_load_errors_are_typed() {
+        let mut g = GaussianSource::new(9);
+        let a = gaussian(3, 2, 1.0, &mut g);
+        let b = gaussian(2, 4, 1.0, &mut g);
+        let mut tf = TensorFile::new();
+        store_factors(&mut tf, "l", &a, &b, StoreDType::I8);
+
+        // Missing scale sibling → NotFound, not a panic.
+        let mut broken = tf.clone();
+        broken.remove("l.weight.A.scale");
+        assert!(matches!(load_weight(&broken, "l"), Err(TenzError::NotFound(_))));
+
+        // Wrong scale length → Corrupt with the factor key named.
+        let mut broken = tf.clone();
+        broken.insert("l.weight.A.scale", TensorEntry::from_f32(vec![2], &[1.0, 1.0]));
+        match load_weight(&broken, "l") {
+            Err(TenzError::Corrupt(msg)) => assert!(msg.contains("l.weight.A"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+
+        // Integer scales → WrongDType attributed to the scale key.
+        let mut broken = tf;
+        broken.insert("l.weight.B.scale", TensorEntry::from_i32(vec![2], &[1, 1]));
+        match load_weight(&broken, "l") {
+            Err(TenzError::WrongDType { name, .. }) => assert_eq!(name, "l.weight.B.scale"),
+            other => panic!("expected WrongDType, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn store_dtype_parse_and_names() {
+        assert_eq!(StoreDType::parse("f32"), Some(StoreDType::F32));
+        assert_eq!(StoreDType::parse("i8"), Some(StoreDType::I8));
+        assert_eq!(StoreDType::parse("int8"), Some(StoreDType::I8));
+        assert_eq!(StoreDType::parse("f16"), Some(StoreDType::F16));
+        assert_eq!(StoreDType::parse("half"), Some(StoreDType::F16));
+        assert_eq!(StoreDType::parse("bf16"), None);
+        assert_eq!(StoreDType::default().name(), "f32");
+        assert_eq!(StoreDType::I8.name(), "i8");
+        assert_eq!(StoreDType::F16.name(), "f16");
     }
 }

@@ -10,7 +10,7 @@
 //! count  u32
 //! entry* :
 //!   name_len u16 | name utf-8
-//!   dtype    u8   (0=f32, 1=f64, 2=i32)
+//!   dtype    u8   (0=f32, 1=f64, 2=i32, 3=i8, 4=f16)
 //!   ndim     u8   (≥ 1; scalars are stored as shape [1])
 //!   dims     u64 × ndim
 //!   payload  raw little-endian values (row-major)
@@ -47,6 +47,10 @@
 //! The Python writer lives in `python/compile/tenz.py` (same interop
 //! contract: ndim ≥ 1, unique sorted names, no trailing bytes);
 //! cross-language round-trip is covered by `python/tests/test_tenz.py`.
+//! Tags 3 (i8) and 4 (f16) are the quantized-factor storage dtypes
+//! (`--store-dtype`), emitted by the Rust pipeline only: i8 entries carry
+//! per-row scales in an f32 `.scale` sibling tensor, f16 entries decode
+//! losslessly back to f32 through [`TensorEntry::to_f32`].
 
 use crate::tensor::Mat;
 use std::collections::{BTreeMap, BTreeSet};
@@ -95,6 +99,10 @@ pub enum DType {
     F32,
     F64,
     I32,
+    /// Quantized codes (per-row scales live in a `.scale` sibling tensor).
+    I8,
+    /// IEEE 754 binary16 storage; decodes exactly to f32 on read.
+    F16,
 }
 
 impl DType {
@@ -103,6 +111,8 @@ impl DType {
             DType::F32 => 0,
             DType::F64 => 1,
             DType::I32 => 2,
+            DType::I8 => 3,
+            DType::F16 => 4,
         }
     }
     pub(crate) fn from_tag(t: u8) -> Option<Self> {
@@ -110,6 +120,8 @@ impl DType {
             0 => Some(DType::F32),
             1 => Some(DType::F64),
             2 => Some(DType::I32),
+            3 => Some(DType::I8),
+            4 => Some(DType::F16),
             _ => None,
         }
     }
@@ -117,6 +129,8 @@ impl DType {
         match self {
             DType::F32 | DType::I32 => 4,
             DType::F64 => 8,
+            DType::I8 => 1,
+            DType::F16 => 2,
         }
     }
 }
@@ -380,6 +394,26 @@ impl TensorEntry {
         TensorEntry { dtype: DType::I32, dims, bytes }
     }
 
+    /// Quantized codes; the matching per-row scales go in a sibling
+    /// `.scale` f32 tensor (see `io::checkpoint::factor_a_scale_key`).
+    pub fn from_i8(dims: Vec<usize>, vals: &[i8]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let bytes = vals.iter().map(|&v| v as u8).collect();
+        TensorEntry { dtype: DType::I8, dims, bytes }
+    }
+
+    /// Encode f32 values as binary16 (round-to-nearest-even). Storage-only
+    /// dtype: [`TensorEntry::to_f32`] decodes it exactly, so readers see a
+    /// plain f32 tensor that costs half the bytes on disk.
+    pub fn from_f32_as_f16(dims: Vec<usize>, vals: &[f32]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), vals.len());
+        let mut bytes = Vec::with_capacity(vals.len() * 2);
+        for v in vals {
+            bytes.extend_from_slice(&crate::tensor::quant::f32_to_f16_bits(*v).to_le_bytes());
+        }
+        TensorEntry { dtype: DType::F16, dims, bytes }
+    }
+
     pub fn to_f32(&self) -> Result<Vec<f32>, TenzError> {
         match self.dtype {
             DType::F32 => Ok(self
@@ -394,12 +428,31 @@ impl TensorEntry {
                     f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
                 })
                 .collect()),
-            DType::I32 => Err(TenzError::WrongDType {
+            DType::F16 => Ok(self
+                .bytes
+                .chunks_exact(2)
+                .map(|c| crate::tensor::quant::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                .collect()),
+            // i8 codes are meaningless without their row scales: refusing
+            // here keeps a quantized factor from silently decoding as raw
+            // integers (the checkpoint loader pairs codes with scales).
+            DType::I32 | DType::I8 => Err(TenzError::WrongDType {
                 name: String::new(),
-                got: DType::I32,
+                got: self.dtype,
                 want: DType::F32,
             }),
         }
+    }
+
+    pub fn to_i8(&self) -> Result<Vec<i8>, TenzError> {
+        if self.dtype != DType::I8 {
+            return Err(TenzError::WrongDType {
+                name: String::new(),
+                got: self.dtype,
+                want: DType::I8,
+            });
+        }
+        Ok(self.bytes.iter().map(|&b| b as i8).collect())
     }
 
     pub fn to_i32(&self) -> Result<Vec<i32>, TenzError> {
@@ -618,6 +671,23 @@ mod tests {
         assert!(matches!(tf.mat("nope"), Err(TenzError::NotFound(_))));
         assert!(tf.vec_f32("ints").is_err());
         assert!(tf.vec_i32("ints").is_ok());
+    }
+
+    #[test]
+    fn i8_and_f16_entries_roundtrip() {
+        let mut tf = TensorFile::new();
+        tf.insert("q", TensorEntry::from_i8(vec![2, 2], &[-127, -1, 0, 127]));
+        let vals = [1.0f32, -0.5, 65504.0, 0.0];
+        tf.insert("h", TensorEntry::from_f32_as_f16(vec![4], &vals));
+        let back = TensorFile::from_bytes(&tf.to_bytes()).unwrap();
+        assert_eq!(back.get("q").unwrap().to_i8().unwrap(), vec![-127, -1, 0, 127]);
+        assert_eq!(back.get("q").unwrap().bytes.len(), 4); // 1 byte per code
+        // f16 is exact on f16-representable values and halves the bytes.
+        assert_eq!(back.vec_f32("h").unwrap(), vals.to_vec());
+        assert_eq!(back.get("h").unwrap().bytes.len(), 8);
+        // Codes refuse to decode as f32 without their scales; and vice versa.
+        assert!(matches!(back.vec_f32("q"), Err(TenzError::WrongDType { .. })));
+        assert!(matches!(back.get("h").unwrap().to_i8(), Err(TenzError::WrongDType { .. })));
     }
 
     #[test]

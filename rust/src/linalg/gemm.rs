@@ -4,13 +4,25 @@
 //! contiguous AXPY/dot over rows of the operands (auto-vectorizable):
 //!
 //! * `matmul`   (A·B):   ikj — C[i,:] += A[i,k] * B[k,:]
-//! * `matmul_nt`(A·Bᵀ):  dot(A[i,:], B[j,:])
+//! * `matmul_nt`(A·Bᵀ):  packed panels of B, 4×4 register micro-kernel
 //! * `matmul_tn`(Aᵀ·B):  kij — C[i,:] += A[k,i] * B[k,:]
 //!
-//! Work is partitioned over output rows across `std::thread` scopes; we
-//! only spawn when the flop count clears a threshold so small multiplies
-//! stay single-threaded.
+//! Work is partitioned over output rows through one shared helper
+//! ([`for_each_row_chunk`]): below a flop threshold the body runs inline on
+//! the calling thread (no scope, no spawn — tiny serving batches stay
+//! cheap), above it a `std::thread` scope splits the output rows. Because
+//! the partition never splits within an output element and every kernel
+//! accumulates each element in the same fixed order, results are
+//! bit-identical at any thread count — the property the routed/cluster
+//! serving tests pin down.
+//!
+//! The serving orientation (`matmul_nt`, reached via [`matvec_batch`] and
+//! [`matvec_batch_fused`]) is the hot path for compressed checkpoints: both
+//! skinny GEMMs of the factored rewrite run through the packed micro-kernel,
+//! and the affine epilogue ([`Epilogue`]) folds bias+ReLU into the final
+//! write-back so a served layer makes no second pass over N×C.
 
+use crate::tensor::quant::QuantMat;
 use crate::tensor::{Mat, Scalar};
 use crate::util::default_threads;
 
@@ -21,7 +33,39 @@ fn par_rows(rows: usize, flops: usize) -> usize {
     if flops < PAR_FLOP_THRESHOLD {
         return 1;
     }
-    default_threads().min(rows).max(1)
+    // default_threads() ≥ 1 and callers guarantee rows ≥ 1.
+    default_threads().min(rows)
+}
+
+/// Run `body(rows_slice, lo, hi)` over the `rows` × `width` row-major
+/// output `data`, splitting the rows across a thread scope only when
+/// `flops` clears [`PAR_FLOP_THRESHOLD`]. Every GEMM orientation routes
+/// through here so none of them pays scope+spawn overhead on small
+/// multiplies, and the partition is by whole output rows only — per-element
+/// accumulation order (hence output bits) cannot depend on thread count.
+fn for_each_row_chunk<E, F>(data: &mut [E], rows: usize, width: usize, flops: usize, body: F)
+where
+    E: Send,
+    F: Fn(&mut [E], usize, usize) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    debug_assert_eq!(data.len(), rows * width);
+    let nthreads = par_rows(rows, flops);
+    if nthreads <= 1 {
+        body(data, 0, rows);
+        return;
+    }
+    let chunk = rows.div_ceil(nthreads);
+    let body = &body;
+    std::thread::scope(|s| {
+        for (t, cslice) in data.chunks_mut(chunk * width).enumerate() {
+            let lo = t * chunk;
+            let hi = (lo + cslice.len() / width).min(rows);
+            s.spawn(move || body(cslice, lo, hi));
+        }
+    });
 }
 
 /// C = A · B. Panics on inner-dimension mismatch.
@@ -30,19 +74,8 @@ pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul: {m}x{ka} · {kb}x{n}");
     let mut c = Mat::zeros(m, n);
-    let nthreads = par_rows(m, m * ka * n);
-    if nthreads <= 1 {
-        matmul_rows(a, b, c.data_mut(), 0, m);
-        return c;
-    }
-    let chunk = m.div_ceil(nthreads);
-    let cdata = c.data_mut();
-    std::thread::scope(|s| {
-        for (t, cslice) in cdata.chunks_mut(chunk * n).enumerate() {
-            let lo = t * chunk;
-            let hi = (lo + cslice.len() / n).min(m);
-            s.spawn(move || matmul_rows(a, b, cslice, lo, hi));
-        }
+    for_each_row_chunk(c.data_mut(), m, n, m * ka * n, |cslice, lo, hi| {
+        matmul_rows(a, b, cslice, lo, hi)
     });
     c
 }
@@ -53,6 +86,12 @@ pub fn matmul<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
 /// memory-bound at ~4.5 GFLOP/s on this 1-core testbed; see
 /// EXPERIMENTS.md section Perf).
 const KB: usize = 256;
+
+/// Output-column panel width in `matmul_nt`: how many rows of B are packed
+/// per panel. A multiple of the 4-wide micro-kernel; 64 columns × KB=256
+/// floats keeps a packed panel (64 KiB) L2-resident while the whole
+/// micro-batch streams against it.
+const NB: usize = 64;
 
 /// Rows [lo, hi) of C = A·B, writing into `cslice` (rows relative to lo).
 fn matmul_rows<T: Scalar>(a: &Mat<T>, b: &Mat<T>, cslice: &mut [T], lo: usize, hi: usize) {
@@ -88,10 +127,9 @@ fn matmul_rows<T: Scalar>(a: &Mat<T>, b: &Mat<T>, cslice: &mut [T], lo: usize, h
             let crow = &mut cslice[(i - lo) * n..(i - lo + 1) * n];
             let arow = a.row(i);
             for p in p0..p1 {
+                // No zero-skip: the tail must run the same op sequence as
+                // the 4-row kernel (skipping `+= 0·b` can flip a -0.0 bit).
                 let aip = arow[p];
-                if aip == T::zero() {
-                    continue;
-                }
                 let brow = b.row(p);
                 for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
                     *cv += aip * *bv;
@@ -102,37 +140,238 @@ fn matmul_rows<T: Scalar>(a: &Mat<T>, b: &Mat<T>, cslice: &mut [T], lo: usize, h
     }
 }
 
+/// Affine epilogue fused into a GEMM's final write-back: optional
+/// per-output-column bias add, then optional ReLU. Matches the semantics
+/// of the serving layer's old second pass exactly (`y += bias` zipped over
+/// the row, then `if y < 0 { y = 0 }`), but costs zero extra traversals of
+/// the N×C output.
+#[derive(Clone, Copy)]
+pub struct Epilogue<'a, T: Scalar> {
+    /// Added to output column `j` (length must equal the output width).
+    pub bias: Option<&'a [T]>,
+    /// Clamp negative outputs to zero after the bias add.
+    pub relu: bool,
+}
+
+impl<T: Scalar> Default for Epilogue<'_, T> {
+    fn default() -> Self {
+        Epilogue { bias: None, relu: false }
+    }
+}
+
+impl<T: Scalar> Epilogue<'_, T> {
+    /// Identity epilogue: plain GEMM write-back.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn apply(&self, j: usize, v: T) -> T {
+        let v = match self.bias {
+            Some(b) => v + b[j],
+            None => v,
+        };
+        if self.relu && v < T::zero() {
+            T::zero()
+        } else {
+            v
+        }
+    }
+}
+
 /// C = A · Bᵀ.
 pub fn matmul_nt<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    matmul_nt_fused(a, b, Epilogue::none(), &mut c);
+    c
+}
+
+/// C = epilogue(A · Bᵀ), written into a caller-owned output buffer (which
+/// need not be zeroed: the first K-panel overwrites, later panels
+/// accumulate, and the last one applies the epilogue). This is the packed
+/// serving kernel: B (the C×D weight) is packed into quad-interleaved
+/// panels once per (column-block, K-panel) and every row of the micro-batch
+/// streams against the packed copy through a 4×4 register micro-kernel.
+pub fn matmul_nt_fused<T: Scalar>(a: &Mat<T>, b: &Mat<T>, epi: Epilogue<'_, T>, c: &mut Mat<T>) {
     let (m, ka) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(ka, kb, "matmul_nt: {m}x{ka} · ({n}x{kb})ᵀ");
-    let mut c = Mat::zeros(m, n);
-    let nthreads = par_rows(m, m * ka * n);
-    let chunk = if nthreads <= 1 { m.max(1) } else { m.div_ceil(nthreads) };
-    let cdata = c.data_mut();
-    std::thread::scope(|s| {
-        for (t, cslice) in cdata.chunks_mut(chunk * n.max(1)).enumerate() {
-            let lo = t * chunk;
-            let rows = if n == 0 { 0 } else { cslice.len() / n };
-            let hi = (lo + rows).min(m);
-            s.spawn(move || {
-                for i in lo..hi {
-                    let arow = a.row(i);
-                    let crow = &mut cslice[(i - lo) * n..(i - lo + 1) * n];
-                    for (j, cv) in crow.iter_mut().enumerate() {
-                        let brow = b.row(j);
-                        let mut acc = T::zero();
-                        for (x, y) in arow.iter().zip(brow.iter()) {
-                            acc += *x * *y;
-                        }
-                        *cv = acc;
-                    }
-                }
-            });
-        }
+    assert_eq!(c.shape(), (m, n), "matmul_nt: output is {:?}, want ({m}, {n})", c.shape());
+    if let Some(bias) = epi.bias {
+        assert_eq!(bias.len(), n, "matmul_nt: bias length vs {n} output columns");
+    }
+    for_each_row_chunk(c.data_mut(), m, n, m * ka * n, |cslice, lo, hi| {
+        matmul_nt_rows(a, b, &epi, cslice, lo, hi)
     });
-    c
+}
+
+/// Pack B rows [j0, j1) × columns [p0, p1) quad-interleaved:
+/// `packed[q*pw*4 + p*4 + lane] = B[j0 + 4q + lane][p0 + p]`, so the
+/// micro-kernel reads four weights as one contiguous quad per K step.
+/// Lanes past j1 are zero-filled; their accumulators are computed and
+/// discarded at write-back, keeping the kernel branch-free inside.
+fn pack_b_panel<T: Scalar>(
+    b: &Mat<T>,
+    j0: usize,
+    j1: usize,
+    p0: usize,
+    p1: usize,
+    packed: &mut [T],
+) {
+    let pw = p1 - p0;
+    let quads = (j1 - j0).div_ceil(4);
+    for q in 0..quads {
+        let dst = &mut packed[q * pw * 4..(q + 1) * pw * 4];
+        for lane in 0..4 {
+            let j = j0 + q * 4 + lane;
+            if j < j1 {
+                for (p, &bv) in b.row(j)[p0..p1].iter().enumerate() {
+                    dst[p * 4 + lane] = bv;
+                }
+            } else {
+                for slot in dst[lane..].iter_mut().step_by(4) {
+                    *slot = T::zero();
+                }
+            }
+        }
+    }
+}
+
+/// Write one micro-kernel quad back into a C row: the first K-panel
+/// overwrites (the output buffer may hold a recycled previous batch),
+/// middle panels accumulate, and the last panel applies the epilogue.
+/// `crow` holds only the quad's valid lanes (≤ 4).
+#[inline]
+fn write_quad<T: Scalar>(
+    epi: &Epilogue<'_, T>,
+    first: bool,
+    last: bool,
+    crow: &mut [T],
+    jq: usize,
+    acc: &[T; 4],
+) {
+    for (lane, cv) in crow.iter_mut().enumerate() {
+        let v = if first { acc[lane] } else { *cv + acc[lane] };
+        *cv = if last { epi.apply(jq + lane, v) } else { v };
+    }
+}
+
+/// Rows [lo, hi) of C = epilogue(A·Bᵀ), writing into `cslice`.
+///
+/// Loop nest: column blocks of NB B-rows → K-panels of KB → pack the panel
+/// once → stream this chunk's A rows against it (4 rows at a time, 1-row
+/// tail). Per output element the accumulation order is a function of
+/// (k, KB, NB) only — never of [lo, hi) or the 4-vs-1 row grouping — so
+/// thread count cannot change output bits.
+fn matmul_nt_rows<T: Scalar>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    epi: &Epilogue<'_, T>,
+    cslice: &mut [T],
+    lo: usize,
+    hi: usize,
+) {
+    let k = a.cols();
+    let n = b.rows();
+    if hi <= lo || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // No K-panel ever writes back: the product is zero, the output is
+        // just the epilogue of zero.
+        for row in cslice.chunks_mut(n).take(hi - lo) {
+            for (j, cv) in row.iter_mut().enumerate() {
+                *cv = epi.apply(j, T::zero());
+            }
+        }
+        return;
+    }
+    let kpanels = k.div_ceil(KB);
+    let mut packed = vec![T::zero(); NB * KB];
+    for j0 in (0..n).step_by(NB) {
+        let j1 = (j0 + NB).min(n);
+        let quads = (j1 - j0).div_ceil(4);
+        for (pi, p0) in (0..k).step_by(KB).enumerate() {
+            let p1 = (p0 + KB).min(k);
+            let pw = p1 - p0;
+            let first = pi == 0;
+            let last = pi + 1 == kpanels;
+            pack_b_panel(b, j0, j1, p0, p1, &mut packed);
+            let mut i = lo;
+            while i + 4 <= hi {
+                let base = (i - lo) * n;
+                let (r0, rest) = cslice[base..].split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3full) = rest.split_at_mut(n);
+                let r3 = &mut r3full[..n];
+                let a0 = &a.row(i)[p0..p1];
+                let a1 = &a.row(i + 1)[p0..p1];
+                let a2 = &a.row(i + 2)[p0..p1];
+                let a3 = &a.row(i + 3)[p0..p1];
+                for q in 0..quads {
+                    let panel = &packed[q * pw * 4..(q + 1) * pw * 4];
+                    // 4×4 register block, explicitly unrolled: 16
+                    // independent FMA streams per packed quad.
+                    let mut acc0 = [T::zero(); 4];
+                    let mut acc1 = [T::zero(); 4];
+                    let mut acc2 = [T::zero(); 4];
+                    let mut acc3 = [T::zero(); 4];
+                    for (p, bq) in panel.chunks_exact(4).enumerate() {
+                        let (b0, b1, b2, b3) = (bq[0], bq[1], bq[2], bq[3]);
+                        let x0 = a0[p];
+                        acc0[0] += x0 * b0;
+                        acc0[1] += x0 * b1;
+                        acc0[2] += x0 * b2;
+                        acc0[3] += x0 * b3;
+                        let x1 = a1[p];
+                        acc1[0] += x1 * b0;
+                        acc1[1] += x1 * b1;
+                        acc1[2] += x1 * b2;
+                        acc1[3] += x1 * b3;
+                        let x2 = a2[p];
+                        acc2[0] += x2 * b0;
+                        acc2[1] += x2 * b1;
+                        acc2[2] += x2 * b2;
+                        acc2[3] += x2 * b3;
+                        let x3 = a3[p];
+                        acc3[0] += x3 * b0;
+                        acc3[1] += x3 * b1;
+                        acc3[2] += x3 * b2;
+                        acc3[3] += x3 * b3;
+                    }
+                    let jq = j0 + q * 4;
+                    let jn = (jq + 4).min(j1) - jq;
+                    write_quad(epi, first, last, &mut r0[jq..jq + jn], jq, &acc0);
+                    write_quad(epi, first, last, &mut r1[jq..jq + jn], jq, &acc1);
+                    write_quad(epi, first, last, &mut r2[jq..jq + jn], jq, &acc2);
+                    write_quad(epi, first, last, &mut r3[jq..jq + jn], jq, &acc3);
+                }
+                i += 4;
+            }
+            // 1-row tail: identical per-element op sequence as the 4-row
+            // kernel (same packed quads, same p order) — required for the
+            // bit-identity guarantee.
+            while i < hi {
+                let crow = &mut cslice[(i - lo) * n..(i - lo + 1) * n];
+                let a0 = &a.row(i)[p0..p1];
+                for q in 0..quads {
+                    let panel = &packed[q * pw * 4..(q + 1) * pw * 4];
+                    let mut acc = [T::zero(); 4];
+                    for (p, bq) in panel.chunks_exact(4).enumerate() {
+                        let x0 = a0[p];
+                        acc[0] += x0 * bq[0];
+                        acc[1] += x0 * bq[1];
+                        acc[2] += x0 * bq[2];
+                        acc[3] += x0 * bq[3];
+                    }
+                    let jq = j0 + q * 4;
+                    let jn = (jq + 4).min(j1) - jq;
+                    write_quad(epi, first, last, &mut crow[jq..jq + jn], jq, &acc);
+                }
+                i += 1;
+            }
+        }
+    }
 }
 
 /// C = Aᵀ · B.
@@ -141,60 +380,54 @@ pub fn matmul_tn<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "matmul_tn: ({ka}x{m})ᵀ · {kb}x{n}");
     let mut c = Mat::zeros(m, n);
-    let nthreads = par_rows(m, m * ka * n);
-    let chunk = if nthreads <= 1 { m.max(1) } else { m.div_ceil(nthreads) };
-    let cdata = c.data_mut();
-    std::thread::scope(|s| {
-        for (t, cslice) in cdata.chunks_mut(chunk * n.max(1)).enumerate() {
-            let ilo = t * chunk;
-            let rows = if n == 0 { 0 } else { cslice.len() / n };
-            let ihi = (ilo + rows).min(m);
-            s.spawn(move || {
-                for p0 in (0..ka).step_by(KB) {
-                    let p1 = (p0 + KB).min(ka);
-                    // Same 4-row micro-kernel as matmul_rows, reading the
-                    // four A coefficients from one (transposed) row.
-                    let mut i = ilo;
-                    while i + 4 <= ihi {
-                        let base = (i - ilo) * n;
-                        let (c0, rest) = cslice[base..].split_at_mut(n);
-                        let (c1, rest) = rest.split_at_mut(n);
-                        let (c2, c3full) = rest.split_at_mut(n);
-                        let c3 = &mut c3full[..n];
-                        for p in p0..p1 {
-                            let arow = a.row(p);
-                            let (x0, x1, x2, x3) =
-                                (arow[i], arow[i + 1], arow[i + 2], arow[i + 3]);
-                            let brow = b.row(p);
-                            for j in 0..n {
-                                let bv = brow[j];
-                                c0[j] += x0 * bv;
-                                c1[j] += x1 * bv;
-                                c2[j] += x2 * bv;
-                                c3[j] += x3 * bv;
-                            }
-                        }
-                        i += 4;
-                    }
-                    while i < ihi {
-                        let crow = &mut cslice[(i - ilo) * n..(i - ilo + 1) * n];
-                        for p in p0..p1 {
-                            let api = a.row(p)[i];
-                            if api == T::zero() {
-                                continue;
-                            }
-                            let brow = b.row(p);
-                            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                                *cv += api * *bv;
-                            }
-                        }
-                        i += 1;
-                    }
-                }
-            });
-        }
+    for_each_row_chunk(c.data_mut(), m, n, m * ka * n, |cslice, ilo, ihi| {
+        matmul_tn_rows(a, b, cslice, ilo, ihi)
     });
     c
+}
+
+/// Rows [ilo, ihi) of C = Aᵀ·B, writing into `cslice`.
+fn matmul_tn_rows<T: Scalar>(a: &Mat<T>, b: &Mat<T>, cslice: &mut [T], ilo: usize, ihi: usize) {
+    let ka = a.rows();
+    let n = b.cols();
+    for p0 in (0..ka).step_by(KB) {
+        let p1 = (p0 + KB).min(ka);
+        // Same 4-row micro-kernel as matmul_rows, reading the four A
+        // coefficients from one (transposed) row.
+        let mut i = ilo;
+        while i + 4 <= ihi {
+            let base = (i - ilo) * n;
+            let (c0, rest) = cslice[base..].split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, c3full) = rest.split_at_mut(n);
+            let c3 = &mut c3full[..n];
+            for p in p0..p1 {
+                let arow = a.row(p);
+                let (x0, x1, x2, x3) = (arow[i], arow[i + 1], arow[i + 2], arow[i + 3]);
+                let brow = b.row(p);
+                for j in 0..n {
+                    let bv = brow[j];
+                    c0[j] += x0 * bv;
+                    c1[j] += x1 * bv;
+                    c2[j] += x2 * bv;
+                    c3[j] += x3 * bv;
+                }
+            }
+            i += 4;
+        }
+        while i < ihi {
+            let crow = &mut cslice[(i - ilo) * n..(i - ilo + 1) * n];
+            for p in p0..p1 {
+                // Same op sequence as the 4-row kernel (no zero-skip).
+                let api = a.row(p)[i];
+                let brow = b.row(p);
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += api * *bv;
+                }
+            }
+            i += 1;
+        }
+    }
 }
 
 /// Batched mat-vec — the serving orientation. Each row of `x` (N×D) is
@@ -203,6 +436,46 @@ pub fn matmul_tn<T: Scalar>(a: &Mat<T>, b: &Mat<T>) -> Mat<T> {
 /// separate `matvec`s, which is the entire point of request coalescing.
 pub fn matvec_batch<T: Scalar>(x: &Mat<T>, w: &Mat<T>) -> Mat<T> {
     matmul_nt(x, w)
+}
+
+/// Batched mat-vec with the affine epilogue fused into the GEMM write-back,
+/// into a caller-owned (recyclable) output buffer — the serving hot path.
+pub fn matvec_batch_fused<T: Scalar>(
+    x: &Mat<T>,
+    w: &Mat<T>,
+    epi: Epilogue<'_, T>,
+    out: &mut Mat<T>,
+) {
+    matmul_nt_fused(x, w, epi, out);
+}
+
+/// Batched mat-vec against a per-row-quantized i8 weight (logical C×D):
+/// `y[i,j] = scale[j] · Σ_d x[i,d]·q[j,d]`, accumulated in f32 with a
+/// single scale multiply per output — the dequantize-free kernel of the
+/// quantization+low-rank error analysis (arXiv 2502.02766). Same fused
+/// epilogue and row partitioning as [`matmul_nt_fused`]; thread count
+/// never changes output bits.
+pub fn matvec_batch_quant(x: &Mat<f32>, w: &QuantMat, epi: Epilogue<'_, f32>, out: &mut Mat<f32>) {
+    let (m, d) = x.shape();
+    let (n, dw) = (w.rows(), w.cols());
+    assert_eq!(d, dw, "matvec_batch_quant: {m}x{d} · ({n}x{dw})ᵀ");
+    assert_eq!(out.shape(), (m, n), "quant matvec: output is {:?}, want ({m}, {n})", out.shape());
+    if let Some(bias) = epi.bias {
+        assert_eq!(bias.len(), n, "matvec_batch_quant: bias length vs {n} output columns");
+    }
+    for_each_row_chunk(out.data_mut(), m, n, m * d * n, |cslice, lo, hi| {
+        for i in lo..hi {
+            let xrow = x.row(i);
+            let crow = &mut cslice[(i - lo) * n..(i - lo + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (xv, &qv) in xrow.iter().zip(w.row(j)) {
+                    acc += xv * f32::from(qv);
+                }
+                *cv = epi.apply(j, w.scale(j) * acc);
+            }
+        }
+    });
 }
 
 /// Gram matrix G = Aᵀ·A accumulated in f64 (symmetrized), returned in T.
@@ -238,29 +511,18 @@ pub fn gram_tn_f64<T: Scalar>(a: &Mat<T>) -> Mat<f64> {
 pub fn gram_nt_f64<T: Scalar>(a: &Mat<T>) -> Mat<f64> {
     let (m, _n) = a.shape();
     let mut g = Mat::<f64>::zeros(m, m);
-    let nthreads = par_rows(m, m * m * a.cols() / 2);
-    let chunk = m.div_ceil(nthreads.max(1)).max(1);
-    let gdata = g.data_mut();
-    std::thread::scope(|s| {
-        for (t, gslice) in gdata.chunks_mut(chunk * m).enumerate() {
-            let ilo = t * chunk;
-            let ihi = (ilo + gslice.len() / m).min(m);
-            s.spawn(move || {
-                for i in ilo..ihi {
-                    let ri = a.row(i);
-                    for j in 0..m {
-                        if j < i {
-                            continue; // fill upper triangle; mirror later
-                        }
-                        let rj = a.row(j);
-                        let mut acc = 0.0f64;
-                        for (x, y) in ri.iter().zip(rj.iter()) {
-                            acc += x.as_f64() * y.as_f64();
-                        }
-                        gslice[(i - ilo) * m + j] = acc;
-                    }
+    for_each_row_chunk(g.data_mut(), m, m, m * m * a.cols() / 2, |gslice, ilo, ihi| {
+        for i in ilo..ihi {
+            let ri = a.row(i);
+            for j in i..m {
+                // Fill the upper triangle; mirrored below.
+                let rj = a.row(j);
+                let mut acc = 0.0f64;
+                for (x, y) in ri.iter().zip(rj.iter()) {
+                    acc += x.as_f64() * y.as_f64();
                 }
-            });
+                gslice[(i - ilo) * m + j] = acc;
+            }
         }
     });
     for i in 0..m {
@@ -317,6 +579,61 @@ mod tests {
     }
 
     #[test]
+    fn matmul_nt_micro_kernel_tails_match_naive() {
+        // Row counts around the 4-row micro-kernel, column counts around
+        // the quad width and the NB panel edge, K around the KB panel edge.
+        let mut g = GaussianSource::new(21);
+        for &m in &[1usize, 2, 3, 4, 5, 6] {
+            for &n in &[1usize, 3, 4, 5, 63, 64, 65] {
+                for &k in &[1usize, 2, 255, 256, 257] {
+                    let a = gaussian(m, k, 1.0, &mut g);
+                    let b = gaussian(n, k, 1.0, &mut g);
+                    let tol = 1e-3 * (k as f64).sqrt();
+                    assert_close(&matmul_nt(&a, &b), &naive(&a, &b.transpose()), tol);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_fused_epilogue_matches_second_pass_bitwise() {
+        let mut g = GaussianSource::new(22);
+        let a = gaussian(5, 300, 1.0, &mut g);
+        let b = gaussian(37, 300, 1.0, &mut g);
+        let bias: Vec<f32> = (0..37).map(|j| (j as f32) * 0.25 - 4.0).collect();
+        // Reference: plain GEMM, then the old two-pass bias+ReLU.
+        let mut want = matmul_nt(&a, &b);
+        for r in 0..want.rows() {
+            for (v, bb) in want.row_mut(r).iter_mut().zip(bias.iter()) {
+                *v += *bb;
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let mut got = Mat::zeros(5, 37);
+        matmul_nt_fused(&a, &b, Epilogue { bias: Some(&bias), relu: true }, &mut got);
+        for (x, y) in want.data().iter().zip(got.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "fused epilogue must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_k_zero_is_pure_epilogue() {
+        let a = Mat::<f32>::zeros(3, 0);
+        let b = Mat::<f32>::zeros(4, 0);
+        let bias = [1.0f32, -2.0, 0.5, -0.0];
+        let mut c = Mat::from_vec(3, 4, vec![9.0; 12]); // stale recycled buffer
+        matmul_nt_fused(&a, &b, Epilogue { bias: Some(&bias), relu: true }, &mut c);
+        for r in 0..3 {
+            assert_eq!(c.row(r), &[1.0, 0.0, 0.5, -0.0]);
+        }
+        // And the empty-output edges don't panic.
+        assert_eq!(matmul_nt(&Mat::<f32>::zeros(0, 5), &Mat::<f32>::zeros(4, 5)).shape(), (0, 4));
+        assert_eq!(matmul_nt(&Mat::<f32>::zeros(3, 5), &Mat::<f32>::zeros(0, 5)).shape(), (3, 0));
+    }
+
+    #[test]
     fn matmul_tn_matches() {
         let mut g = GaussianSource::new(3);
         let a = gaussian(21, 13, 1.0, &mut g);
@@ -363,6 +680,19 @@ mod tests {
                 assert!((y.get(r, c) - wv).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn quant_matvec_matches_dequantized_reference() {
+        let mut g = GaussianSource::new(23);
+        let w = gaussian(19, 33, 1.0, &mut g);
+        let x = gaussian(5, 33, 1.0, &mut g);
+        let q = QuantMat::quantize(&w);
+        let mut got = Mat::zeros(5, 19);
+        matvec_batch_quant(&x, &q, Epilogue::none(), &mut got);
+        let want = matvec_batch(&x, &q.dequantize());
+        // Same math up to f32 association differences.
+        assert_close(&got, &want, 1e-3);
     }
 
     #[test]

@@ -7,12 +7,18 @@
 //! C·D break-even. Both kernels run whole micro-batches through
 //! [`gemm::matvec_batch`], so a coalesced batch of N requests is one (or
 //! two) threaded GEMMs, never N matvecs.
+//!
+//! Bias and ReLU are not a separate pass: every kernel takes a
+//! [`gemm::Epilogue`] that the GEMM applies during write-back, and the
+//! layer chain in [`ModelKernels::forward`] ping-pongs two scratch
+//! buffers (plus one shared mid-GEMM buffer) so a forward pass allocates
+//! nothing per layer after the first batch shape is seen.
 
 use crate::io::checkpoint::{
     bias_key, layer_infos_from, load_weight_from, StoredWeight, WeightSource,
 };
 use crate::linalg::gemm;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QuantMat};
 use anyhow::{Context, Result};
 
 /// Dense kernel: `y = Wx` over the stored C×D weight.
@@ -33,11 +39,31 @@ pub struct FactoredLinear {
     pub vt: Mat<f32>,
 }
 
+/// Quantized factored kernel: the same `y = U(Vᵀx)` rewrite over per-row
+/// i8 factors (`--store-dtype i8`). Accumulation is f32 against the raw
+/// codes; the row scale is applied once per output — the factors are
+/// never dequantized into a float matrix.
+#[derive(Debug, Clone)]
+pub struct QuantFactoredLinear {
+    /// C×k left factor (per-output-row scales).
+    pub u: QuantMat,
+    /// k×D right factor (per-rank-row scales).
+    pub vt: QuantMat,
+}
+
 /// One layer's execution kernel, chosen by how the checkpoint stores it.
 #[derive(Debug, Clone)]
 pub enum LinearKernel {
     Dense(DenseLinear),
     Factored(FactoredLinear),
+    QuantizedFactored(QuantFactoredLinear),
+}
+
+/// Reshape a recycled scratch vector into an all-zero rows×cols matrix.
+fn recycle(mut buf: Vec<f32>, rows: usize, cols: usize) -> Mat<f32> {
+    buf.clear();
+    buf.resize(rows * cols, 0.0);
+    Mat::from_vec(rows, cols, buf)
 }
 
 impl LinearKernel {
@@ -47,6 +73,9 @@ impl LinearKernel {
             StoredWeight::Factored { a, b } => {
                 LinearKernel::Factored(FactoredLinear { u: a, vt: b })
             }
+            StoredWeight::QuantizedFactored { a, b } => {
+                LinearKernel::QuantizedFactored(QuantFactoredLinear { u: a, vt: b })
+            }
         }
     }
 
@@ -55,6 +84,7 @@ impl LinearKernel {
         match self {
             LinearKernel::Dense(d) => d.w.shape(),
             LinearKernel::Factored(f) => (f.u.rows(), f.vt.cols()),
+            LinearKernel::QuantizedFactored(f) => (f.u.rows(), f.vt.cols()),
         }
     }
 
@@ -63,19 +93,45 @@ impl LinearKernel {
         match self {
             LinearKernel::Dense(_) => None,
             LinearKernel::Factored(f) => Some(f.u.cols()),
+            LinearKernel::QuantizedFactored(f) => Some(f.u.cols()),
+        }
+    }
+
+    /// Push a batch of row vectors (N×D) through the layer → N×C, applying
+    /// `epi` (bias/ReLU) inside the final GEMM's write-back. `y` must
+    /// already be N×C (its contents are overwritten); `mid` is recycled
+    /// scratch for the factored forms' N×k intermediate, grown on demand
+    /// and handed back so the caller can reuse it across layers.
+    pub fn forward_fused(
+        &self,
+        x: &Mat<f32>,
+        epi: gemm::Epilogue<'_, f32>,
+        y: &mut Mat<f32>,
+        mid: &mut Vec<f32>,
+    ) {
+        match self {
+            LinearKernel::Dense(d) => gemm::matvec_batch_fused(x, &d.w, epi, y),
+            LinearKernel::Factored(f) => {
+                // (N×D)·Vᵀ → N×k, then ·U → N×C: k(C+D) MACs per sample.
+                let mut h = recycle(std::mem::take(mid), x.rows(), f.vt.rows());
+                gemm::matvec_batch_fused(x, &f.vt, gemm::Epilogue::none(), &mut h);
+                gemm::matvec_batch_fused(&h, &f.u, epi, y);
+                *mid = h.into_vec();
+            }
+            LinearKernel::QuantizedFactored(f) => {
+                let mut h = recycle(std::mem::take(mid), x.rows(), f.vt.rows());
+                gemm::matvec_batch_quant(x, &f.vt, gemm::Epilogue::none(), &mut h);
+                gemm::matvec_batch_quant(&h, &f.u, epi, y);
+                *mid = h.into_vec();
+            }
         }
     }
 
     /// Push a batch of row vectors (N×D) through the layer → N×C.
     pub fn forward(&self, x: &Mat<f32>) -> Mat<f32> {
-        match self {
-            LinearKernel::Dense(d) => gemm::matvec_batch(x, &d.w),
-            LinearKernel::Factored(f) => {
-                // (N×D)·Vᵀ → N×k, then ·U → N×C: k(C+D) MACs per sample.
-                let xk = gemm::matvec_batch(x, &f.vt);
-                gemm::matvec_batch(&xk, &f.u)
-            }
-        }
+        let mut y = Mat::zeros(x.rows(), self.shape().0);
+        self.forward_fused(x, gemm::Epilogue::none(), &mut y, &mut Vec::new());
+        y
     }
 
     /// Fused multiply-adds per served sample: C·D dense, k(C+D) factored —
@@ -93,6 +149,7 @@ impl LinearKernel {
         match self {
             LinearKernel::Dense(d) => d.w.len(),
             LinearKernel::Factored(f) => f.u.len() + f.vt.len(),
+            LinearKernel::QuantizedFactored(f) => f.u.len() + f.vt.len(),
         }
     }
 }
@@ -109,27 +166,18 @@ pub struct ServeLayer {
 }
 
 impl ServeLayer {
+    /// Forward one batch (N×D → N×C) into a caller-provided output matrix,
+    /// applying bias and ReLU inside the GEMM epilogue — no second pass
+    /// over `y`. `y` must be N×C; `mid` is shared factored-form scratch.
+    pub fn forward_into(&self, x: &Mat<f32>, y: &mut Mat<f32>, mid: &mut Vec<f32>) {
+        let epi = gemm::Epilogue { bias: self.bias.as_deref(), relu: self.relu };
+        self.kernel.forward_fused(x, epi, y, mid);
+    }
+
     /// Forward one batch (N×D → N×C) through kernel, bias, activation.
     pub fn forward(&self, x: &Mat<f32>) -> Mat<f32> {
-        let mut y = self.kernel.forward(x);
-        if self.bias.is_none() && !self.relu {
-            return y;
-        }
-        for r in 0..y.rows() {
-            let row = y.row_mut(r);
-            if let Some(b) = &self.bias {
-                for (v, bb) in row.iter_mut().zip(b.iter()) {
-                    *v += *bb;
-                }
-            }
-            if self.relu {
-                for v in row.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
-        }
+        let mut y = Mat::zeros(x.rows(), self.kernel.shape().0);
+        self.forward_into(x, &mut y, &mut Vec::new());
         y
     }
 }
@@ -222,14 +270,24 @@ impl ModelKernels {
         self.layers.last().expect("load guarantees ≥1 layer").kernel.shape().0
     }
 
-    /// Forward a batch of row vectors (N×input_dim → N×output_dim).
+    /// Forward a batch of row vectors (N×input_dim → N×output_dim). Two
+    /// activation buffers ping-pong down the chain (layer i's input
+    /// becomes layer i+1's output scratch) and one mid-GEMM buffer is
+    /// shared by every factored layer — no per-layer allocation.
     pub fn forward(&self, x: &Mat<f32>) -> Mat<f32> {
         assert_eq!(x.cols(), self.input_dim(), "batch width vs model input dim");
-        let mut h = self.layers[0].forward(x);
+        let n = x.rows();
+        let mut mid = Vec::new();
+        let mut cur = recycle(Vec::new(), n, self.layers[0].kernel.shape().0);
+        self.layers[0].forward_into(x, &mut cur, &mut mid);
+        let mut spare = Vec::new();
         for layer in &self.layers[1..] {
-            h = layer.forward(&h);
+            let mut y = recycle(spare, n, layer.kernel.shape().0);
+            layer.forward_into(&cur, &mut y, &mut mid);
+            spare = cur.into_vec();
+            cur = y;
         }
-        h
+        cur
     }
 
     /// Total stored parameters across layers.
@@ -346,6 +404,68 @@ mod tests {
         for (a, b) in want.data().iter().zip(got.data()) {
             assert_eq!(a.to_bits(), b.to_bits(), "staged forward must be bit-identical");
         }
+    }
+
+    #[test]
+    fn quantized_kernel_matches_dequantized_reference() {
+        let mut g = GaussianSource::new(12);
+        let u = gaussian(9, 4, 1.0, &mut g);
+        let vt = gaussian(4, 13, 1.0, &mut g);
+        let x = gaussian(5, 13, 1.0, &mut g);
+        let (qu, qvt) = (QuantMat::quantize(&u), QuantMat::quantize(&vt));
+        let quant = LinearKernel::QuantizedFactored(QuantFactoredLinear {
+            u: qu.clone(),
+            vt: qvt.clone(),
+        });
+        // Reference: the same two-GEMM forward over the dequantized f32
+        // factors — the quantized kernel differs only in where the row
+        // scale is applied, so the results agree to float rounding.
+        let reference = LinearKernel::Factored(FactoredLinear {
+            u: qu.dequantize(),
+            vt: qvt.dequantize(),
+        });
+        let yq = quant.forward(&x);
+        let yr = reference.forward(&x);
+        assert_eq!(yq.shape(), (5, 9));
+        assert!(yq.sub(&yr).max_abs() < 1e-4, "diff {}", yq.sub(&yr).max_abs());
+        assert_eq!(quant.rank(), Some(4));
+        assert_eq!(quant.flops_per_sample(), 4 * (9 + 13));
+        assert_eq!(quant.param_count(), 9 * 4 + 4 * 13);
+    }
+
+    #[test]
+    fn quantized_model_serves_end_to_end() {
+        let mut g = GaussianSource::new(13);
+        let mut tf = TensorFile::new();
+        let (a, b) = (gaussian(4, 2, 1.0, &mut g), gaussian(2, 6, 1.0, &mut g));
+        crate::io::checkpoint::store_factors(
+            &mut tf,
+            "layers.0",
+            &a,
+            &b,
+            crate::io::checkpoint::StoreDType::I8,
+        );
+        tf.insert("layers.0.bias", TensorEntry::from_f32(vec![4], &[0.3; 4]));
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 4, 1.0, &mut g)));
+
+        let model = ModelKernels::load(&tf).unwrap();
+        assert!(matches!(model.layers[0].kernel, LinearKernel::QuantizedFactored(_)));
+        assert_eq!(model.layers[0].kernel.rank(), Some(2));
+        let x = gaussian(3, 6, 1.0, &mut g);
+        let y = model.forward(&x);
+        assert_eq!(y.shape(), (3, 3));
+
+        // Reference: serve the dequantized factors as a plain f32 model.
+        let mut tf_ref = tf.clone();
+        let stored = crate::io::checkpoint::load_weight(&tf, "layers.0").unwrap();
+        let StoredWeight::QuantizedFactored { a: qa, b: qb } = stored else { unreachable!() };
+        store_weight(
+            &mut tf_ref,
+            "layers.0",
+            &StoredWeight::Factored { a: qa.dequantize(), b: qb.dequantize() },
+        );
+        let want = ModelKernels::load(&tf_ref).unwrap().forward(&x);
+        assert!(y.sub(&want).max_abs() < 1e-4, "diff {}", y.sub(&want).max_abs());
     }
 
     #[test]

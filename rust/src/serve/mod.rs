@@ -9,8 +9,10 @@
 //! per-request overhead, dominates. The pieces:
 //!
 //! * [`kernel`]  — per-layer execution kernels ([`DenseLinear`] `Wx`,
-//!   [`FactoredLinear`] `U(Vᵀx)`) and the [`ModelKernels`] chain loaded
-//!   from any [`WeightSource`](crate::io::checkpoint::WeightSource).
+//!   [`FactoredLinear`] `U(Vᵀx)`, [`QuantFactoredLinear`] over i8 codes)
+//!   and the [`ModelKernels`] chain loaded from any
+//!   [`WeightSource`](crate::io::checkpoint::WeightSource). Bias+ReLU run
+//!   inside the GEMM epilogue; the chain reuses scratch across layers.
 //! * [`batcher`] — the micro-batching queue: coalesce up to `max_batch`
 //!   requests or `max_wait` of arrivals into one batched GEMM pass.
 //! * [`server`]  — the engine: one persistent
@@ -50,7 +52,9 @@ pub mod traffic;
 pub use batcher::{BatchExecutor, Batcher, BatcherConfig, LocalExecutor, PendingResponse};
 pub use cache::{ModelCache, ModelKey};
 pub use cluster::{PlacementMode, PlacementPlan, RoutedExecutor, Router, RouterConfig};
-pub use kernel::{DenseLinear, FactoredLinear, LinearKernel, ModelKernels, ServeLayer};
+pub use kernel::{
+    DenseLinear, FactoredLinear, LinearKernel, ModelKernels, QuantFactoredLinear, ServeLayer,
+};
 pub use metrics::{LatencyQuantiles, ServeMetrics};
 pub use server::{ServeConfig, Server};
 pub use traffic::{drive, TrafficReport};

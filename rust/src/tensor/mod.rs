@@ -8,8 +8,10 @@
 
 pub mod init;
 pub mod matrix;
+pub mod quant;
 
 pub use matrix::{Mat, MatError};
+pub use quant::QuantMat;
 
 /// Element trait: the two float types the system computes in.
 pub trait Scalar:

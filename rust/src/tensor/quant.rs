@@ -1,0 +1,270 @@
+//! Quantized factor storage: per-row symmetric i8 matrices and IEEE
+//! binary16 conversion — the data types behind the `--store-dtype i8|f16`
+//! checkpoint formats and the serve-side `QuantizedFactored` kernel (see
+//! DESIGN.md §Kernel-Tier; error regime per arXiv 2502.02766).
+
+use super::Mat;
+
+/// A row-major i8 matrix with one f32 scale per row: row `r` of the
+/// logical f32 matrix is `scales[r] * data[r*cols..(r+1)*cols]`.
+///
+/// Quantization is symmetric per row: `scale = max|row| / 127`, values
+/// round-to-nearest and clamp to `[-127, 127]`, so the elementwise
+/// dequantization error is at most `scale / 2`. An all-zero row gets
+/// scale 0 and all-zero codes (dequantizes exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantMat {
+    /// Quantize an f32 matrix row by row.
+    pub fn quantize(m: &Mat<f32>) -> QuantMat {
+        let (rows, cols) = m.shape();
+        let mut data = Vec::with_capacity(rows * cols);
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = m.row(r);
+            let amax = row.iter().fold(0.0f32, |acc, v| acc.max(v.abs()));
+            let scale = if amax > 0.0 { amax / 127.0 } else { 0.0 };
+            scales.push(scale);
+            if scale == 0.0 {
+                data.resize(data.len() + cols, 0);
+            } else {
+                for &v in row {
+                    let q = (v / scale).round().clamp(-127.0, 127.0);
+                    data.push(q as i8);
+                }
+            }
+        }
+        QuantMat { rows, cols, data, scales }
+    }
+
+    /// Rebuild from raw parts (checkpoint load). Rejects mismatched
+    /// payload or scale lengths with a descriptive message — the load
+    /// path maps this into a typed `TenzError::Corrupt`.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        data: Vec<i8>,
+        scales: Vec<f32>,
+    ) -> Result<QuantMat, String> {
+        if data.len() != rows * cols {
+            return Err(format!(
+                "i8 payload holds {} values for a {rows}x{cols} matrix",
+                data.len()
+            ));
+        }
+        if scales.len() != rows {
+            return Err(format!("{} scales for {rows} rows", scales.len()));
+        }
+        Ok(QuantMat { rows, cols, data, scales })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Stored code count (rows × cols).
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Codes of row `r`.
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Scale of row `r`.
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    /// Expand back to f32 (reference/materialize path; the serving kernel
+    /// never does this — it accumulates against the i8 codes directly).
+    pub fn dequantize(&self) -> Mat<f32> {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            let src = &self.data[r * self.cols..(r + 1) * self.cols];
+            for (dst, &q) in out.row_mut(r).iter_mut().zip(src) {
+                *dst = s * f32::from(q);
+            }
+        }
+        out
+    }
+}
+
+/// IEEE 754 binary16 bits → f32. Exact: every f16 value (including
+/// subnormals, infinities, and NaN) is representable in f32.
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = if bits & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = (bits >> 10) & 0x1f;
+    let frac = f32::from(bits & 0x03ff);
+    match exp {
+        0 => sign * frac * 2.0f32.powi(-24), // zero / subnormal
+        0x1f => {
+            if bits & 0x03ff == 0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        _ => sign * (1.0 + frac / 1024.0) * 2.0f32.powi(i32::from(exp) - 15),
+    }
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even; overflow goes to
+/// ±inf, values below half the smallest subnormal go to ±0.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let frac = x & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN; keep a payload bit set so NaN stays NaN.
+        let nan_bit = if frac != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan_bit | ((frac >> 13) as u16 & 0x03ff);
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // Normal f16: 23-bit mantissa → 10 bits, nearest-even; a rounding
+        // carry may overflow into the exponent, which is correct.
+        let mant = frac >> 13;
+        let rest = frac & 0x1fff;
+        let mut h = u32::from(sign) | (((e + 15) as u32) << 10) | mant;
+        if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    if e < -25 {
+        return sign; // underflow → ±0
+    }
+    // Subnormal f16: make the implicit leading 1 explicit, shift it out.
+    let mant = frac | 0x0080_0000;
+    let shift = (-14 - e) as u32 + 13;
+    let sub = mant >> shift;
+    let rest = mant & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut h = u32::from(sign) | sub;
+    if rest > half || (rest == half && (sub & 1) == 1) {
+        h += 1;
+    }
+    h as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianSource;
+    use crate::tensor::init::gaussian;
+
+    #[test]
+    fn quantize_roundtrip_error_within_half_step() {
+        let mut g = GaussianSource::new(11);
+        let m = gaussian(17, 29, 2.5, &mut g);
+        let q = QuantMat::quantize(&m);
+        let back = q.dequantize();
+        for r in 0..17 {
+            let bound = q.scale(r) as f64 * 0.5 + 1e-9;
+            for (x, y) in m.row(r).iter().zip(back.row(r)) {
+                let err = (*x as f64 - *y as f64).abs();
+                assert!(err <= bound, "row {r}: err {err} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_extremes_quantize_exactly() {
+        let m = Mat::from_vec(3, 2, vec![0.0, 0.0, 5.0, -5.0, 1e-30f32, 0.0]);
+        let q = QuantMat::quantize(&m);
+        assert_eq!(q.scale(0), 0.0);
+        assert_eq!(q.row(0), &[0, 0]);
+        assert_eq!(q.row(1), &[127, -127]);
+        let back = q.dequantize();
+        assert_eq!(back.row(1), &[5.0, -5.0]);
+        // Tiny but nonzero rows still carry their magnitude in the scale.
+        assert_eq!(q.row(2), &[127, 0]);
+    }
+
+    #[test]
+    fn from_parts_validates_lengths() {
+        assert!(QuantMat::from_parts(2, 3, vec![0; 6], vec![1.0, 1.0]).is_ok());
+        assert!(QuantMat::from_parts(2, 3, vec![0; 5], vec![1.0, 1.0]).is_err());
+        assert!(QuantMat::from_parts(2, 3, vec![0; 6], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn f16_known_values() {
+        let cases: &[(f32, u16)] = &[
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),      // f16 max
+            (6.1035156e-5, 0x0400), // smallest normal
+            (5.9604645e-8, 0x0001), // smallest subnormal
+            (f32::INFINITY, 0x7c00),
+        ];
+        for &(v, bits) in cases {
+            assert_eq!(f32_to_f16_bits(v), bits, "encode {v}");
+            assert_eq!(f16_bits_to_f32(bits).to_bits(), v.to_bits(), "decode {bits:04x}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf; deep underflow flushes to signed zero.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e-10), 0x8000);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_f16_values() {
+        // Every (finite) f16 bit pattern decodes to f32 and re-encodes to
+        // the same bits — decode/encode are exact inverses on the f16 set.
+        for bits in 0..=0xffffu16 {
+            let exp = (bits >> 10) & 0x1f;
+            let frac = bits & 0x03ff;
+            if exp == 0x1f && frac != 0 {
+                continue; // NaN payloads are not bit-preserved
+            }
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(bits)), bits, "bits {bits:04x}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10): ties to even → 1.0. Slightly above rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 0.00048828125), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 0.0005), 0x3c01);
+        // Halfway between 1+2^-10 and 1+2^-9 ties up to even (0x3c02).
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 0.00048828125), 0x3c02);
+    }
+}

@@ -1,0 +1,253 @@
+//! GEMM-KERNELS: property suite for the packed serving GEMM tier
+//! (`linalg::gemm`) and the quantized low-rank kernel.
+//!
+//! Shapes are randomized to straddle the kernel's blocking boundaries
+//! (4-row micro-kernel tails, NB=64 column blocks, KB=256 K-panels) and
+//! compared against a plain f64 triple loop. One test deliberately
+//! crosses `PAR_FLOP_THRESHOLD` (4·2²⁰ ≈ 4.19M flops at m·k·n) while
+//! varying `RSIC_THREADS`, asserting the thread count never changes a
+//! single output bit — every other test in this binary stays below the
+//! threshold so the env var is only read inside that one test.
+
+use rsi_compress::linalg::gemm::{self, Epilogue};
+use rsi_compress::tensor::{Mat, QuantMat};
+use rsi_compress::testutil::prop::{Gen, PropRunner};
+
+/// f64 reference for C = A·Bᵀ: the unblocked triple loop the packed
+/// kernel must agree with up to f32 accumulation-order rounding.
+fn naive_nt_f64(a: &Mat<f32>, b: &Mat<f32>) -> Vec<f64> {
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += f64::from(a.row(i)[p]) * f64::from(b.row(j)[p]);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Shape generator biased toward the kernel's edge cases: micro-kernel
+/// row tails (m ≡ 1,2,3 mod 4), NB=64 column-block boundaries, and
+/// KB=256 K-panel boundaries. All shapes stay well under the
+/// parallelism threshold (m·k·n < 4·2²⁰).
+fn edge_shape(g: &mut Gen) -> (usize, usize, usize) {
+    let m = *g.choice(&[1, 2, 3, 4, 5, 7, 8, 9]);
+    let n = *g.choice(&[1, 2, 5, 63, 64, 65, 127, 128, 130]);
+    let k = *g.choice(&[1, 2, 7, 64, 255, 256, 257]);
+    (m, n, k)
+}
+
+fn max_abs_err(got: &Mat<f32>, want: &[f64]) -> f64 {
+    got.data()
+        .iter()
+        .zip(want)
+        .map(|(&g, &w)| (f64::from(g) - w).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn prop_matmul_nt_matches_naive_reference() {
+    PropRunner::new(48).run("matmul_nt vs naive", |g| {
+        let (m, n, k) = edge_shape(g);
+        let a = g.mat(m, k, 1.0);
+        let b = g.mat(n, k, 1.0);
+        let c = gemm::matmul_nt(&a, &b);
+        assert_eq!(c.shape(), (m, n));
+        let tol = 1e-4 * (k as f64).sqrt().max(1.0);
+        let err = max_abs_err(&c, &naive_nt_f64(&a, &b));
+        assert!(err < tol, "{m}x{k}·({n}x{k})ᵀ: err {err:.3e} ≥ tol {tol:.3e}");
+    });
+}
+
+#[test]
+fn prop_matmul_tn_matches_naive_reference() {
+    PropRunner::new(32).run("matmul_tn vs naive", |g| {
+        let (m, n, k) = edge_shape(g);
+        let a = g.mat(k, m, 1.0);
+        let b = g.mat(k, n, 1.0);
+        let c = gemm::matmul_tn(&a, &b);
+        assert_eq!(c.shape(), (m, n));
+        // Same reference via the NT orientation: AᵀB = Aᵀ·(Bᵀ)ᵀ.
+        let want = naive_nt_f64(&a.transpose(), &b.transpose());
+        let tol = 1e-4 * (k as f64).sqrt().max(1.0);
+        let err = max_abs_err(&c, &want);
+        assert!(err < tol, "({k}x{m})ᵀ·{k}x{n}: err {err:.3e} ≥ tol {tol:.3e}");
+    });
+}
+
+/// The fused bias+ReLU epilogue must be bitwise identical to the plain
+/// GEMM followed by the old second pass — fusion moves work, never math.
+#[test]
+fn prop_fused_epilogue_is_bitwise_second_pass() {
+    PropRunner::new(48).run("fused epilogue", |g| {
+        let (m, n, k) = edge_shape(g);
+        let a = g.mat(m, k, 1.0);
+        let b = g.mat(n, k, 1.0);
+        let bias: Option<Vec<f32>> = g.bool().then(|| g.mat(1, n, 1.0).into_vec());
+        let relu = g.bool();
+
+        let mut fused = Mat::zeros(m, n);
+        gemm::matmul_nt_fused(&a, &b, Epilogue { bias: bias.as_deref(), relu }, &mut fused);
+
+        let mut plain = gemm::matmul_nt(&a, &b);
+        for i in 0..m {
+            for (j, v) in plain.row_mut(i).iter_mut().enumerate() {
+                if let Some(bv) = &bias {
+                    *v += bv[j];
+                }
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        for (f, p) in fused.data().iter().zip(plain.data()) {
+            assert_eq!(f.to_bits(), p.to_bits(), "bias={} relu={relu}", bias.is_some());
+        }
+    });
+}
+
+/// Degenerate dimensions must not panic: k = 0 is a pure epilogue pass
+/// (the kernel overwrites whatever stale values the recycled buffer
+/// held), and m = 0 / n = 0 produce empty outputs.
+#[test]
+fn degenerate_shapes_are_pure_epilogue_or_empty() {
+    let a = Mat::<f32>::zeros(3, 0);
+    let b = Mat::<f32>::zeros(5, 0);
+    let bias = [1.5f32, -2.0, 0.25, -0.5, 3.0];
+    let mut c = Mat::from_vec(3, 5, vec![9.0f32; 15]); // stale recycled buffer
+    gemm::matmul_nt_fused(&a, &b, Epilogue { bias: Some(&bias), relu: true }, &mut c);
+    for i in 0..3 {
+        let want = [1.5f32, 0.0, 0.25, 0.0, 3.0]; // bias then ReLU, no GEMM term
+        assert_eq!(c.row(i), want);
+    }
+    assert_eq!(gemm::matmul_nt(&a, &b).shape(), (3, 5));
+
+    let empty_rows = gemm::matmul_nt(&Mat::<f32>::zeros(0, 7), &Mat::<f32>::zeros(4, 7));
+    assert_eq!(empty_rows.shape(), (0, 4));
+    let empty_cols = gemm::matmul_nt(&Mat::<f32>::zeros(4, 7), &Mat::<f32>::zeros(0, 7));
+    assert_eq!(empty_cols.shape(), (4, 0));
+    let tn = gemm::matmul_tn(&Mat::<f32>::zeros(0, 3), &Mat::<f32>::zeros(0, 2));
+    assert_eq!(tn.shape(), (3, 2));
+}
+
+/// Thread count must never change output bits, on either side of
+/// `PAR_FLOP_THRESHOLD`. This is the only test in this binary that reads
+/// or writes `RSIC_THREADS` (all other tests stay below the threshold,
+/// where the kernel runs inline and never consults it), so mutating the
+/// process environment here cannot race another test.
+#[test]
+fn thread_count_never_changes_bits_across_threshold() {
+    let saved = std::env::var("RSIC_THREADS").ok();
+    // (m, n, k): 12·128·512 ≈ 0.79M flops (below 4·2²⁰, inline path) and
+    // 12·128·4096 ≈ 6.3M (above, threaded path).
+    let shapes = [(12usize, 128usize, 512usize), (12, 128, 4096)];
+    for (m, n, k) in shapes {
+        let mut g = Gen::new(0xbeef ^ (k as u64));
+        let a = g.mat(m, k, 1.0);
+        let b = g.mat(n, k, 1.0);
+        let bias = g.mat(1, n, 1.0).into_vec();
+        let epi = Epilogue { bias: Some(&bias), relu: true };
+        let q = QuantMat::quantize(&b);
+
+        let mut baseline: Option<(Vec<u32>, Vec<u32>)> = None;
+        for threads in ["1", "2", "4"] {
+            std::env::set_var("RSIC_THREADS", threads);
+            let mut c = Mat::zeros(m, n);
+            gemm::matmul_nt_fused(&a, &b, epi, &mut c);
+            let mut cq = Mat::zeros(m, n);
+            gemm::matvec_batch_quant(&a, &q, epi, &mut cq);
+            let bits: Vec<u32> = c.data().iter().map(|v| v.to_bits()).collect();
+            let qbits: Vec<u32> = cq.data().iter().map(|v| v.to_bits()).collect();
+            match &baseline {
+                None => baseline = Some((bits, qbits)),
+                Some((want, wantq)) => {
+                    assert_eq!(&bits, want, "{m}x{n}x{k} f32 bits vs {threads} threads");
+                    assert_eq!(&qbits, wantq, "{m}x{n}x{k} quant bits vs {threads} threads");
+                }
+            }
+        }
+        // Threaded or not, the answer must still be right. Looser than
+        // the small-shape tests: f32 accumulation error grows with k.
+        let tol = 1e-3 * (k as f64).sqrt();
+        let naive = naive_nt_f64(&a, &b);
+        let got = baseline.expect("ran at least one thread count").0;
+        for (idx, (&bits, &want)) in got.iter().zip(&naive).enumerate() {
+            let j = idx % n;
+            let w = (want + f64::from(bias[j])).max(0.0);
+            let err = (f64::from(f32::from_bits(bits)) - w).abs();
+            assert!(err < tol, "{m}x{n}x{k} element {idx}: err {err:.3e}");
+        }
+    }
+    match saved {
+        Some(v) => std::env::set_var("RSIC_THREADS", v),
+        None => std::env::remove_var("RSIC_THREADS"),
+    }
+}
+
+/// Quantized low-rank serving error stays within the analytic per-row
+/// quantization bound. With x→h = V̂ᵀ-kernel→ŷ = Û-kernel (per-row scales
+/// sV, sU, each elementwise quantization error ≤ scale/2):
+///
+///   |ĥ_r − h_r|        ≤ (sV_r/2)·Σ_d |x_d|                    =: eh_r
+///   |ŷ_c − y_c|        ≤ Σ_r |û_cr|·eh_r + (sU_c/2)·Σ_r |h_r|
+///
+/// where y is the exact f64 product against the *original* f32 factors
+/// and û the dequantized U. The bound is computed in f64 and inflated by
+/// 1% + 1e-5 to absorb the kernel's own f32 accumulation rounding.
+#[test]
+fn prop_quantized_serve_error_within_scale_bound() {
+    PropRunner::new(24).run("quant error bound", |g| {
+        let (n, c, d) = (g.usize_in(1, 6), g.usize_in(2, 24), g.usize_in(2, 48));
+        let k = g.usize_in(1, c.min(d));
+        let x = g.mat(n, d, 1.0);
+        let u = g.mat(c, k, 1.0); // logical C×k
+        let vt = g.mat(k, d, 1.0); // logical k×D
+        let qu = QuantMat::quantize(&u);
+        let qvt = QuantMat::quantize(&vt);
+
+        let mut h = Mat::zeros(n, k);
+        gemm::matvec_batch_quant(&x, &qvt, Epilogue::none(), &mut h);
+        let mut y = Mat::zeros(n, c);
+        gemm::matvec_batch_quant(&h, &qu, Epilogue::none(), &mut y);
+
+        for i in 0..n {
+            let xrow = x.row(i);
+            let x_l1: f64 = xrow.iter().map(|&v| f64::from(v).abs()).sum();
+            // Exact hidden state and its per-row error allowance.
+            let h_exact: Vec<f64> = (0..k)
+                .map(|r| {
+                    vt.row(r).iter().zip(xrow).map(|(&w, &v)| f64::from(w) * f64::from(v)).sum()
+                })
+                .collect();
+            let eh: Vec<f64> = (0..k).map(|r| f64::from(qvt.scale(r)) / 2.0 * x_l1).collect();
+            let h_l1: f64 = h_exact.iter().map(|v| v.abs()).sum();
+            for j in 0..c {
+                let y_exact: f64 = u
+                    .row(j)
+                    .iter()
+                    .zip(&h_exact)
+                    .map(|(&w, &hv)| f64::from(w) * hv)
+                    .sum();
+                let su = f64::from(qu.scale(j));
+                let u_hat_dot_eh: f64 = qu
+                    .row(j)
+                    .iter()
+                    .zip(&eh)
+                    .map(|(&q, &e)| (su * f64::from(q)).abs() * e)
+                    .sum();
+                let bound = (u_hat_dot_eh + su / 2.0 * h_l1) * 1.01 + 1e-5;
+                let err = (f64::from(y.row(i)[j]) - y_exact).abs();
+                assert!(
+                    err <= bound,
+                    "sample {i} output {j}: err {err:.3e} > bound {bound:.3e} \
+                     (n={n} c={c} d={d} k={k})"
+                );
+            }
+        }
+    });
+}

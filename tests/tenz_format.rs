@@ -36,7 +36,7 @@ fn prop_roundtrip_eager_lazy_writer_byte_identical() {
             for _ in 0..name_len {
                 name.push(*g.choice(&['a', 'b', 'z', 'Z', '.', '_', '0', '9']));
             }
-            let dtype = *g.choice(&[DType::F32, DType::F64, DType::I32]);
+            let dtype = *g.choice(&[DType::F32, DType::F64, DType::I32, DType::I8, DType::F16]);
             let ndim = g.usize_in(1, 3);
             let dims: Vec<usize> = (0..ndim).map(|_| g.usize_in(0, 5)).collect();
             let nbytes = dims.iter().product::<usize>() * dtype.size();
@@ -162,6 +162,27 @@ fn corrupt_bad_dtype_tag() {
     b.extend_from_slice(&entry_header(b"x", 7, &[1]));
     b.extend_from_slice(&[0u8; 4]);
     assert_both_reject("bad-dtype", &b, |e| matches!(e, TenzError::Corrupt(_)));
+    // Tag 5 is the first unassigned value after f16 (tag 4) — it must be
+    // rejected the same way, not silently decoded as some known dtype.
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"x", 5, &[1]));
+    b.extend_from_slice(&[0u8; 4]);
+    assert_both_reject("bad-dtype-5", &b, |e| matches!(e, TenzError::Corrupt(_)));
+}
+
+#[test]
+fn corrupt_truncated_i8_and_f16_payloads() {
+    // i8: declares 16 one-byte elements, ships 7.
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"q", 3, &[16]));
+    b.extend_from_slice(&[0u8; 7]);
+    assert_both_reject("short-i8", &b, |e| matches!(e, TenzError::Truncated { .. }));
+    // f16: declares 8 two-byte elements, ships 15 bytes (one short —
+    // also exercises the odd-length tail).
+    let mut b = magic_and_count(1);
+    b.extend_from_slice(&entry_header(b"h", 4, &[8]));
+    b.extend_from_slice(&[0u8; 15]);
+    assert_both_reject("short-f16", &b, |e| matches!(e, TenzError::Truncated { .. }));
 }
 
 #[test]
@@ -238,6 +259,62 @@ fn corrupt_count_larger_than_entries() {
     b.extend_from_slice(&entry_header(b"only", 0, &[1]));
     b.extend_from_slice(&[0u8; 4]);
     assert_both_reject("count-overrun", &b, |e| matches!(e, TenzError::Truncated { .. }));
+}
+
+// ---------------------------------------------------------------------
+// Quantized factor layout (i8 codes + .scale siblings)
+// ---------------------------------------------------------------------
+
+/// Build an i8-factored layer `l` (2×2 = A[2×2]·B[2×3] logical shapes),
+/// with a caller-chosen A-scale vector and optionally no B scale at all.
+fn quant_layer(scale_a: &[f32], with_b_scale: bool) -> TensorFile {
+    let mut tf = TensorFile::new();
+    tf.insert("l.weight.A", TensorEntry::from_i8(vec![2, 2], &[1, -2, 3, 4]));
+    tf.insert("l.weight.A.scale", TensorEntry::from_f32(vec![scale_a.len()], scale_a));
+    tf.insert("l.weight.B", TensorEntry::from_i8(vec![2, 3], &[1, 2, 3, -4, 5, -6]));
+    if with_b_scale {
+        tf.insert("l.weight.B.scale", TensorEntry::from_f32(vec![2], &[1.0, 2.0]));
+    }
+    tf
+}
+
+/// The checkpoint loader's quantized path must return typed errors for a
+/// scale/codes length mismatch (Corrupt, naming the tensor) and for a
+/// missing `.scale` sibling (NotFound) — through both readers.
+#[test]
+fn quantized_factor_corruption_is_typed_through_both_readers() {
+    use rsi_compress::io::checkpoint::{load_weight_from, StoredWeight};
+    let dir = tmp_dir("quant");
+    let cases: [(&str, TensorFile, fn(&TenzError) -> bool); 3] = [
+        ("good", quant_layer(&[0.5, 0.25], true), |_| false),
+        ("bad-scale-len", quant_layer(&[0.5; 5], true), |e| {
+            matches!(e, TenzError::Corrupt(msg) if msg.contains("l.weight.A"))
+        }),
+        ("missing-scale", quant_layer(&[0.5, 0.25], false), |e| {
+            matches!(e, TenzError::NotFound(name) if name == "l.weight.B.scale")
+        }),
+    ];
+    for (tag, tf, check) in cases {
+        let path = dir.join(format!("{tag}.tenz"));
+        tf.write(&path).unwrap();
+        let lazy = TenzReader::open(&path).unwrap();
+        let from_eager = load_weight_from(&tf, "l");
+        let from_lazy = load_weight_from(&lazy, "l");
+        for (reader, got) in [("eager", from_eager), ("lazy", from_lazy)] {
+            match got {
+                Ok(w) => {
+                    assert_eq!(tag, "good", "{reader}: corrupt case {tag} loaded");
+                    assert!(matches!(w, StoredWeight::QuantizedFactored { .. }), "{reader}");
+                    assert_eq!(w.shape(), (2, 3), "{reader}: logical shape from i8 factors");
+                }
+                Err(e) => {
+                    assert_ne!(tag, "good", "{reader}: good case rejected: {e:?}");
+                    assert!(check(&e), "{reader}: case {tag} gave unexpected error {e:?}");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 // ---------------------------------------------------------------------
