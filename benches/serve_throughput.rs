@@ -19,8 +19,9 @@
 //! Each shape also serves its `--store-dtype i8` form (`factored-i8`,
 //! local only), and every run records a `BENCH_<date>.json` snapshot of
 //! the perf trajectory via `bench::record` — with `RSIC_BENCH_ENFORCE=1`,
-//! a >10% req/s drop against the previous matching snapshot fails the
-//! run.
+//! a >10% goodput drop against the previous matching snapshot fails the
+//! run. All throughput columns are goodput (completed requests/sec):
+//! shed or errored requests never inflate the number.
 
 use rsi_compress::bench::record::{self, BenchRecord, BenchRow};
 use rsi_compress::compress::plan::{CompressionPlan, Method};
@@ -54,13 +55,20 @@ fn bench_serve_config() -> ServeConfig {
 
 /// Drive synthetic pipelined traffic at one checkpoint through the shared
 /// `serve::traffic` generator (the same one `rsic serve` uses) and return
-/// requests/sec.
+/// goodput (completed requests/sec — sheds and errors never count as
+/// throughput, so an overloaded run cannot flatter the number).
 fn run_traffic(path: &Path, requests: usize, clients: usize) -> anyhow::Result<f64> {
     let server = Arc::new(Server::new(bench_serve_config()));
     let report = traffic::drive(&server, &[path.to_path_buf()], requests, clients, 0x5e7e)?;
-    anyhow::ensure!(report.failed == 0, "{} requests failed under bench load", report.failed);
+    anyhow::ensure!(
+        report.failed() == 0,
+        "{} requests failed under bench load ({} shed, {} errored)",
+        report.failed(),
+        report.shed,
+        report.errored
+    );
     println!("    {}: {}", path.display(), server.metrics().summary());
-    Ok(report.req_per_sec())
+    Ok(report.goodput_per_sec())
 }
 
 /// The same traffic, but routed: 2 in-process replica workers over
@@ -89,9 +97,11 @@ fn run_traffic_routed(path: &Path, requests: usize, clients: usize) -> anyhow::R
     let server = Arc::new(Server::with_router(bench_serve_config(), Some(router)));
     let report = traffic::drive(&server, &[path.to_path_buf()], requests, clients, 0x5e7e)?;
     anyhow::ensure!(
-        report.failed == 0,
-        "{} routed requests failed under bench load",
-        report.failed
+        report.failed() == 0,
+        "{} routed requests failed under bench load ({} shed, {} errored)",
+        report.failed(),
+        report.shed,
+        report.errored
     );
     let failovers = server.metrics().failovers.load(Ordering::Relaxed);
     anyhow::ensure!(
@@ -99,7 +109,7 @@ fn run_traffic_routed(path: &Path, requests: usize, clients: usize) -> anyhow::R
         "routed bench fell back to local {failovers} times — the routed column would lie"
     );
     println!("    {} [routed]: {}", path.display(), server.metrics().summary());
-    Ok(report.req_per_sec())
+    Ok(report.goodput_per_sec())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -124,10 +134,10 @@ fn main() -> anyhow::Result<()> {
             "alpha",
             "k",
             "MACs/sample",
-            "req/s",
+            "goodput/s",
             "GFLOP/s",
             "speedup",
-            "routed req/s",
+            "routed goodput/s",
             "routed/local",
         ],
     );

@@ -4,12 +4,14 @@
 //! robust statistics, and the [`stats`] module for the mean/stddev/
 //! percentile summaries printed in the paper-style tables. The [`record`]
 //! module persists each serve-throughput run as a `BENCH_<date>.json`
-//! snapshot and compares against the previous one (the perf trajectory).
+//! snapshot and compares against the previous one (the perf trajectory);
+//! soak runs persist their degradation curves as `SOAK_<date>.json` the
+//! same way.
 
 pub mod harness;
 pub mod record;
 pub mod stats;
 
 pub use harness::{BenchResult, Harness};
-pub use record::{BenchRecord, BenchRow};
+pub use record::{BenchRecord, BenchRow, SoakPoint, SoakRecord};
 pub use stats::Summary;

@@ -155,6 +155,128 @@ impl BenchRecord {
     }
 }
 
+/// One load-factor point on a soak run's degradation curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoakPoint {
+    /// Load multiplier applied to the scenario's base rates.
+    pub factor: f64,
+    /// Offered arrival rate (requests/sec the generator produced).
+    pub offered_per_s: f64,
+    /// Completed requests/sec — sheds and errors excluded.
+    pub goodput_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Fraction of offered requests shed (admission + deadline).
+    pub shed_rate: f64,
+    /// Fraction of offered requests served by a degrade sibling.
+    pub degraded_rate: f64,
+}
+
+/// A soak run's snapshot — what a `SOAK_<date>.json` file holds: the
+/// degradation curve the CI traffic-soak step uploads as an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoakRecord {
+    /// UTC date the run finished (also the filename key).
+    pub date: String,
+    /// `git rev-parse --short HEAD`, or `"unknown"` outside a work tree.
+    pub git_rev: String,
+    /// Scenario name the curve was swept over.
+    pub scenario: String,
+    /// Whether the run used the CI fast settings (`RSIC_SOAK_FAST=1`).
+    pub fast: bool,
+    pub points: Vec<SoakPoint>,
+}
+
+impl SoakRecord {
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"date\": \"{}\",\n", esc(&self.date)));
+        out.push_str(&format!("  \"git_rev\": \"{}\",\n", esc(&self.git_rev)));
+        out.push_str(&format!("  \"scenario\": \"{}\",\n", esc(&self.scenario)));
+        out.push_str(&format!("  \"fast\": {},\n", self.fast));
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"factor\": {}, \"offered_per_s\": {}, \"goodput_per_s\": {}, \
+                 \"p50_ms\": {}, \"p99_ms\": {}, \"shed_rate\": {}, \"degraded_rate\": {}}}{}\n",
+                num(p.factor),
+                num(p.offered_per_s),
+                num(p.goodput_per_s),
+                num(p.p50_ms),
+                num(p.p99_ms),
+                num(p.shed_rate),
+                num(p.degraded_rate),
+                if i + 1 < self.points.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn from_json(text: &str) -> Result<SoakRecord, String> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        let date = v.get("date").and_then(Json::as_str).ok_or("missing \"date\"")?.to_string();
+        let git_rev =
+            v.get("git_rev").and_then(Json::as_str).ok_or("missing \"git_rev\"")?.to_string();
+        let scenario =
+            v.get("scenario").and_then(Json::as_str).ok_or("missing \"scenario\"")?.to_string();
+        let fast = v.get("fast").and_then(Json::as_bool).ok_or("missing \"fast\"")?;
+        let mut points = Vec::new();
+        for r in v.get("points").and_then(Json::as_arr).ok_or("missing \"points\"")? {
+            let field = |k: &str| {
+                r.get(k).and_then(Json::as_f64).ok_or_else(|| format!("point missing {k:?}"))
+            };
+            points.push(SoakPoint {
+                factor: field("factor")?,
+                offered_per_s: field("offered_per_s")?,
+                goodput_per_s: field("goodput_per_s")?,
+                p50_ms: field("p50_ms")?,
+                p99_ms: field("p99_ms")?,
+                shed_rate: field("shed_rate")?,
+                degraded_rate: field("degraded_rate")?,
+            });
+        }
+        Ok(SoakRecord { date, git_rev, scenario, fast, points })
+    }
+
+    /// Write `SOAK_<date>.json` into `dir` (same-day reruns overwrite).
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("SOAK_{}.json", self.date));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Latest readable `SOAK_*.json` in `dir` whose `fast` flag matches.
+    pub fn latest_in(dir: &Path, fast: bool) -> Option<(PathBuf, SoakRecord)> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .ok()?
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("SOAK_") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        while let Some(path) = paths.pop() {
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            let Ok(rec) = SoakRecord::from_json(&text) else { continue };
+            if rec.fast == fast {
+                return Some((path, rec));
+            }
+        }
+        None
+    }
+}
+
 /// Directory BENCH files live in: `$RSIC_BENCH_DIR` when set, else the
 /// repo root (benches run with `rust/` as the working directory), else
 /// the working directory itself.
@@ -497,6 +619,48 @@ mod tests {
         // A row with no baseline counterpart is not a regression.
         run.rows[1].kernel = "factored-i8".into();
         assert!(run.regressions_vs(&base).is_empty());
+    }
+
+    #[test]
+    fn soak_record_roundtrips_and_latest_matches_the_fast_flag() {
+        let rec = SoakRecord {
+            date: "2026-08-08".into(),
+            git_rev: "abc123".into(),
+            scenario: "rush".into(),
+            fast: true,
+            points: vec![
+                SoakPoint {
+                    factor: 1.0,
+                    offered_per_s: 900.0,
+                    goodput_per_s: 890.5,
+                    p50_ms: 2.5,
+                    p99_ms: 11.0,
+                    shed_rate: 0.0,
+                    degraded_rate: 0.0,
+                },
+                SoakPoint {
+                    factor: 8.0,
+                    offered_per_s: 7200.0,
+                    goodput_per_s: 4100.0,
+                    p50_ms: 9.0,
+                    p99_ms: 48.0,
+                    shed_rate: 0.31,
+                    degraded_rate: 0.12,
+                },
+            ],
+        };
+        let back = SoakRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back, rec);
+        assert!(SoakRecord::from_json("{\"date\": \"x\"}").is_err());
+
+        let dir = std::env::temp_dir().join(format!("soak_rec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        rec.write_to(&dir).unwrap();
+        let (path, read_back) = SoakRecord::latest_in(&dir, true).unwrap();
+        assert!(path.ends_with("SOAK_2026-08-08.json"));
+        assert_eq!(read_back, rec);
+        assert!(SoakRecord::latest_in(&dir, false).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!               [--out compressed.tenz] [--validate]
 //! rsic eval     --model synthvgg [--checkpoint path.tenz]
 //! rsic serve    --checkpoint path.tenz [--requests N] [--clients C] [--batch B]
+//! rsic traffic  --scenario f.toml [--load-factor X] [--curve 1,2,4,8]
 //! rsic table 4.1   [--model vgg|vit|both] [--backend ...] [--alphas 0.8,0.6]
 //! rsic figure 1.1|4.1|4.2 [--trials N] [--ranks 64,128,...]
 //! rsic theorem  [--alpha 0.2] [--q 1]
@@ -42,6 +43,10 @@ USAGE:
                 [--batch B] [--wait-ms MS] [--workers W] [--queue-depth Q]
                 [--max-queue N] [--cache-cap K] [--verify]
                 [--plan plan.toml]            # route batches to cluster workers
+  rsic traffic  --scenario f.toml [--load-factor X] [--curve 1,2,4,8] [--max-requests N]
+                [--submitters S] [--batch B] [--wait-ms MS] [--workers W]
+                [--queue-depth Q] [--max-queue N] [--cache-cap K] [--verify]
+                                              # open-loop multi-tenant scenario traffic
   rsic verify   <checkpoint>                   # full integrity pass (.tenz or manifest)
   rsic plan     --checkpoint F --worker ADDR [--worker ADDR ...]
                 [--mode replica|partition] [--out cluster.toml]
@@ -67,6 +72,7 @@ pub fn run(args: Args) -> Result<()> {
         "compress" => cmd_compress(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "traffic" => cmd_traffic(&args),
         "verify" => cmd_verify(&args),
         "plan" => cmd_plan(&args),
         "worker" => cmd_worker(&args),
@@ -382,16 +388,118 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     }
-    if report.failed > 0 {
-        println!("{} requests failed (overload shedding or model errors)", report.failed);
+    if let Some(warning) = report.warm_cache_warning() {
+        println!("{warning}");
+    }
+    if report.shed > 0 {
+        println!("{} requests shed (admission control / overload)", report.shed);
+    }
+    if report.errored > 0 {
+        println!("{} requests errored (model or execution failures)", report.errored);
     }
     println!(
-        "{} requests from {} clients in {:.3}s → {:.0} req/s",
+        "{} requests from {} clients in {:.3}s → {:.0} req/s offered, {:.0} req/s goodput",
         report.requests,
         report.clients,
         report.seconds,
-        report.req_per_sec()
+        report.req_per_sec(),
+        report.goodput_per_sec()
     );
+    Ok(())
+}
+
+/// `rsic traffic`: open-loop scenario traffic (`serve::scenario`) —
+/// seeded multi-tenant arrivals against a local server built from the
+/// scenario's tenant policies. With `--curve`, sweeps the load factor
+/// and records the degradation curve as a `SOAK_<date>.json` snapshot.
+fn cmd_traffic(args: &Args) -> Result<()> {
+    let Some(scenario_path) = args.opt("scenario") else {
+        bail!(
+            "usage: rsic traffic --scenario f.toml [--load-factor X] [--curve 1,2,4,8] \
+             [--max-requests N] [--submitters S] [--batch B] [--wait-ms MS] [--workers W] \
+             [--queue-depth Q] [--max-queue N] [--cache-cap K] [--verify]"
+        );
+    };
+    let spec = crate::serve::ScenarioSpec::load(scenario_path)?
+        .scaled(args.f64_or("load-factor", 1.0)?);
+    let config = ServeConfig {
+        max_batch: args.usize_or("batch", 32)?.max(1),
+        max_wait: Duration::from_secs_f64(args.f64_or("wait-ms", 2.0)?.max(0.0) / 1e3),
+        workers: args.usize_or("workers", crate::util::default_threads())?,
+        queue_depth: args.usize_or("queue-depth", 16)?,
+        max_queue: args.usize_or("max-queue", 8192)?,
+        cache_capacity: args.usize_or("cache-cap", 4)?,
+        verify: args.flag("verify"),
+        tenants: spec.tenant_policies(),
+        ..Default::default()
+    };
+    let opts = crate::serve::EngineOptions {
+        submitters: args.usize_or("submitters", 4)?.max(1),
+        max_requests: args.opt("max-requests").map(str::parse).transpose()?,
+    };
+    let factors = args.f64_list_or("curve", &[])?;
+    if factors.is_empty() {
+        // Single run at the spec's (possibly --load-factor-scaled) rate.
+        let server = Arc::new(Server::new(config));
+        let report = crate::serve::scenario::run_scenario(&server, &spec, &opts)?;
+        println!("{}", report.table().render());
+        println!("{}", server.metrics().render(Some(server.cache())).render());
+        if let Some(tenant_table) = server.metrics().tenant_table() {
+            println!("{}", tenant_table.render());
+        }
+        println!(
+            "{} offered in {:.3}s → {:.0} req/s offered, {:.0} req/s goodput \
+             ({} degraded, {} shed, {} errored)",
+            report.offered,
+            report.seconds,
+            report.offered_per_sec(),
+            report.goodput_per_sec(),
+            report.degraded,
+            report.shed,
+            report.errored
+        );
+        return Ok(());
+    }
+    // Degradation-curve sweep: fresh server per point, recorded like the
+    // bench trajectory so the CI soak step can diff and upload it.
+    use crate::bench::record::{self, SoakPoint, SoakRecord};
+    let make_server = || Arc::new(Server::new(config.clone()));
+    let curve = crate::serve::scenario::degradation_curve(make_server, &spec, &factors, &opts)?;
+    let mut table = crate::report::Table::new(
+        format!("Degradation curve — scenario {}", spec.name),
+        &["factor", "offered/s", "goodput/s", "p50 ms", "p99 ms", "shed %", "degraded %"],
+    );
+    let mut points = Vec::with_capacity(curve.len());
+    for (factor, report) in &curve {
+        table.row(&[
+            format!("{factor:.2}"),
+            format!("{:.0}", report.offered_per_sec()),
+            format!("{:.0}", report.goodput_per_sec()),
+            format!("{:.3}", report.p50 * 1e3),
+            format!("{:.3}", report.p99 * 1e3),
+            format!("{:.1}", report.shed_rate() * 100.0),
+            format!("{:.1}", report.degraded_rate() * 100.0),
+        ]);
+        points.push(SoakPoint {
+            factor: *factor,
+            offered_per_s: report.offered_per_sec(),
+            goodput_per_s: report.goodput_per_sec(),
+            p50_ms: report.p50 * 1e3,
+            p99_ms: report.p99 * 1e3,
+            shed_rate: report.shed_rate(),
+            degraded_rate: report.degraded_rate(),
+        });
+    }
+    println!("{}", table.render());
+    let snapshot = SoakRecord {
+        date: record::today_utc(),
+        git_rev: record::git_rev(),
+        scenario: spec.name.clone(),
+        fast: opts.max_requests.is_some(),
+        points,
+    };
+    let path = snapshot.write_to(&record::bench_dir())?;
+    println!("recorded degradation curve → {}", path.display());
     Ok(())
 }
 

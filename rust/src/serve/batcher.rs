@@ -1,12 +1,25 @@
-//! Micro-batching front end: coalesce concurrent requests into one GEMM.
+//! Micro-batching front end: coalesce concurrent requests into one GEMM,
+//! with per-tenant fair queueing and admission control.
 //!
-//! Requests enqueue on a channel; a dedicated batcher thread pulls the
-//! first request of a batch, then keeps collecting until either
-//! `max_batch` inputs are in hand or `max_wait` has elapsed since the
-//! batch opened — whichever comes first — and hands the whole batch to a
-//! [`BatchExecutor`]. A lone request is therefore answered after at most
-//! `max_wait` (flush-on-timeout), while a burst of N concurrent requests
-//! collapses into ⌈N/max_batch⌉ executor calls instead of N.
+//! Requests enqueue into per-tenant FIFO queues behind one mutex; a
+//! dedicated batcher thread waits for work, then keeps collecting until
+//! either `max_batch` inputs are queued or `max_wait` has elapsed since
+//! the batch opened — whichever comes first — drains the queues via
+//! **deficit round-robin** (each tenant earns `weight` slots per round,
+//! so a flooding tenant cannot starve the others), and hands the whole
+//! batch to a [`BatchExecutor`]. A lone request is therefore answered
+//! after at most `max_wait` (flush-on-timeout), while a burst of N
+//! concurrent requests collapses into ⌈N/max_batch⌉ executor calls
+//! instead of N.
+//!
+//! Admission control happens at [`Batcher::try_submit`]: a submission is
+//! bounced (the input handed back, no response channel burned) when the
+//! global `max_queue` bound or the tenant's queue quota is hit — the
+//! caller decides whether that becomes a shed or a degrade-reroute to a
+//! sibling checkpoint. Admitted requests can still be shed at drain time
+//! when they out-waited their tenant's deadline; both paths surface as
+//! [`RequestError::Shed`], distinguishable from genuine model failures
+//! ([`RequestError::Failed`]).
 //!
 //! The executor is what makes the same batcher serve both deployment
 //! shapes: [`LocalExecutor`] runs the batch as one forward pass on the
@@ -19,10 +32,14 @@ use super::kernel::ModelKernels;
 use super::metrics::ServeMetrics;
 use crate::coordinator::pool::WorkerPool;
 use crate::tensor::Mat;
-use std::sync::atomic::AtomicUsize;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Tenant name used when callers don't speak tenants ([`Batcher::submit`]).
+pub const DEFAULT_TENANT: &str = "default";
 
 /// Executes one coalesced batch. Implementations must answer every input
 /// row (one output row per input row, in order) or fail the whole batch.
@@ -73,57 +90,186 @@ impl BatchExecutor for LocalExecutor {
     }
 }
 
-/// Coalescing knobs.
+/// Coalescing and admission knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
     /// Largest batch one executor call serves.
     pub max_batch: usize,
     /// Longest a batch stays open waiting for more requests.
     pub max_wait: Duration,
-    /// Queued-request bound: submissions beyond this are rejected
-    /// immediately ("server overloaded") instead of buffering without
+    /// Queued-request bound across all tenants: submissions beyond this
+    /// are bounced ("server overloaded") instead of buffering without
     /// limit — sustained overload sheds load rather than growing memory
     /// and tail latency forever.
     pub max_queue: usize,
+    /// Default per-tenant queue quota applied when a [`TenantPolicy`]
+    /// doesn't set its own. `None` = only `max_queue` bounds a tenant.
+    pub tenant_quota: Option<usize>,
+    /// Default queue deadline: admitted requests still waiting past it
+    /// are shed at drain time instead of executing uselessly late.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2), max_queue: 8192 }
+        BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            max_queue: 8192,
+            tenant_quota: None,
+            deadline: None,
+        }
+    }
+}
+
+/// Per-tenant admission policy: how much queue a tenant may hold, how
+/// long its requests stay worth answering, what weight its queue drains
+/// at, and where to degrade when it overflows.
+#[derive(Debug, Clone)]
+pub struct TenantPolicy {
+    /// Tenant name — keys the per-tenant queue and metric rows.
+    pub name: Arc<str>,
+    /// Deficit-round-robin weight: slots earned per drain round relative
+    /// to other tenants (minimum 1).
+    pub weight: u32,
+    /// Queued-request bound for this tenant alone; falls back to
+    /// [`BatcherConfig::tenant_quota`] when `None`.
+    pub queue_quota: Option<usize>,
+    /// Queue deadline (the latency SLO): admitted requests waiting
+    /// longer are shed at drain time. Falls back to
+    /// [`BatcherConfig::deadline`].
+    pub deadline: Option<Duration>,
+    /// Sibling checkpoint (lower rank / i8) the admission controller
+    /// reroutes to instead of shedding — the paper's ‖Δy‖ ≤
+    /// ‖W−UVᵀ‖₂‖x‖₂ bound prices exactly what that substitution costs.
+    pub degrade_to: Option<PathBuf>,
+}
+
+impl TenantPolicy {
+    pub fn named(name: &str) -> TenantPolicy {
+        TenantPolicy {
+            name: Arc::from(name),
+            weight: 1,
+            queue_quota: None,
+            deadline: None,
+            degrade_to: None,
+        }
+    }
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy::named(DEFAULT_TENANT)
+    }
+}
+
+/// Why a request came back without an output vector: the server *chose*
+/// not to serve it (`Shed` — admission control or deadline), or it tried
+/// and couldn't (`Failed` — bad input width, executor error, shutdown).
+/// Throughput accounting needs the distinction: shed is load the policy
+/// declined, failure is load the system broke on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    Shed(String),
+    Failed(String),
+}
+
+impl RequestError {
+    pub fn is_shed(&self) -> bool {
+        matches!(self, RequestError::Shed(_))
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            RequestError::Shed(m) | RequestError::Failed(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.message())
     }
 }
 
 /// One queued inference request.
 struct Request {
     input: Vec<f32>,
+    tenant: Arc<str>,
     enqueued: Instant,
-    tx: Sender<Result<Vec<f32>, String>>,
+    /// Drain-time shed point (tenant deadline), when configured.
+    expires: Option<Instant>,
+    tx: Sender<Result<Vec<f32>, RequestError>>,
 }
 
 /// Handle to one in-flight request; [`wait`](Self::wait) blocks for the
 /// response.
 pub struct PendingResponse {
-    rx: Receiver<Result<Vec<f32>, String>>,
+    rx: Receiver<Result<Vec<f32>, RequestError>>,
 }
 
 impl PendingResponse {
+    /// A handle that is already resolved to `err` — how admission
+    /// decisions surface through the same code path as real responses.
+    pub fn immediate_error(err: RequestError) -> PendingResponse {
+        let (tx, rx) = channel();
+        let _ = tx.send(Err(err));
+        PendingResponse { rx }
+    }
+
     /// Block until the response (or the server's failure message) arrives.
     pub fn wait(self) -> Result<Vec<f32>, String> {
-        self.rx.recv().unwrap_or_else(|_| Err("server shut down before responding".into()))
+        self.wait_outcome().map_err(|e| e.message().to_string())
     }
+
+    /// Like [`wait`](Self::wait), but keeps the shed/failed distinction.
+    pub fn wait_outcome(self) -> Result<Vec<f32>, RequestError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(RequestError::Failed("server shut down before responding".into())))
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Vec<f32>, RequestError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                Some(Err(RequestError::Failed("server shut down before responding".into())))
+            }
+        }
+    }
+}
+
+/// One tenant's FIFO plus its drain weight.
+struct TenantQueue {
+    weight: u32,
+    deque: VecDeque<Request>,
+}
+
+/// Everything behind the queue mutex. `BTreeMap` (not `HashMap`) so the
+/// drain visits tenants in a deterministic order — fairness proofs in the
+/// tests depend on the round-robin order being reproducible.
+struct QueueState {
+    queues: BTreeMap<Arc<str>, TenantQueue>,
+    total: usize,
+    closed: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    arrived: Condvar,
 }
 
 /// The micro-batching queue for one loaded model. Dropping the batcher
 /// closes the queue; the thread flushes whatever is pending and exits.
 pub struct Batcher {
-    tx: Option<Sender<Request>>,
+    shared: Arc<Shared>,
     thread: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<ServeMetrics>,
-    /// Requests accepted but not yet pulled into a batch (queue gauge;
-    /// shared with the batcher thread, which decrements on pull).
-    queued: Arc<AtomicUsize>,
-    max_queue: usize,
+    config: BatcherConfig,
     input_dim: usize,
+    default_policy: TenantPolicy,
 }
 
 impl Batcher {
@@ -134,21 +280,23 @@ impl Batcher {
         config: BatcherConfig,
     ) -> Batcher {
         let input_dim = executor.input_dim();
-        let (tx, rx) = channel::<Request>();
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { queues: BTreeMap::new(), total: 0, closed: false }),
+            arrived: Condvar::new(),
+        });
+        let loop_shared = shared.clone();
         let loop_metrics = metrics.clone();
-        let queued = Arc::new(AtomicUsize::new(0));
-        let loop_queued = queued.clone();
         let thread = std::thread::Builder::new()
             .name("rsic-batcher".into())
-            .spawn(move || batch_loop(rx, executor, loop_metrics, loop_queued, config))
+            .spawn(move || batch_loop(loop_shared, executor, loop_metrics, config))
             .expect("spawn batcher thread");
         Batcher {
-            tx: Some(tx),
+            shared,
             thread: Some(thread),
             metrics,
-            queued,
-            max_queue: config.max_queue.max(1),
+            config,
             input_dim,
+            default_policy: TenantPolicy::default(),
         }
     }
 
@@ -167,84 +315,212 @@ impl Batcher {
         self.input_dim
     }
 
-    /// Enqueue one input vector. Wrong-width inputs and submissions past
-    /// the `max_queue` bound are rejected immediately (no batch slot
-    /// wasted, no unbounded buffering); the error still arrives through
-    /// the returned handle so callers have one code path.
-    pub fn submit(&self, input: Vec<f32>) -> PendingResponse {
+    /// Queued requests right now, across all tenants (tests/diagnostics).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().expect("batcher queue lock").total
+    }
+
+    /// Enqueue one input under `policy`. `Err(input)` hands the vector
+    /// back when admission control bounces it (global `max_queue` or the
+    /// tenant quota) — the caller decides shed vs degrade and no response
+    /// channel is burned. Wrong-width inputs and closed queues *are*
+    /// answered (`Ok` with a failed handle): those aren't load decisions.
+    pub fn try_submit(
+        &self,
+        policy: &TenantPolicy,
+        input: Vec<f32>,
+    ) -> Result<PendingResponse, Vec<f32>> {
         use std::sync::atomic::Ordering;
-        let (tx, rx) = channel();
         if input.len() != self.input_dim {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(format!(
+            return Ok(PendingResponse::immediate_error(RequestError::Failed(format!(
                 "input has {} features, model expects {}",
                 input.len(),
                 self.input_dim
-            )));
-            return PendingResponse { rx };
+            ))));
         }
-        let depth = self.queued.fetch_add(1, Ordering::AcqRel);
-        if depth >= self.max_queue {
-            self.queued.fetch_sub(1, Ordering::AcqRel);
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(format!("server overloaded: {depth} requests already queued")));
-            return PendingResponse { rx };
+        let quota = policy.queue_quota.or(self.config.tenant_quota);
+        let expires = policy
+            .deadline
+            .or(self.config.deadline)
+            .map(|d| Instant::now() + d);
+        {
+            let mut st = self.shared.state.lock().expect("batcher queue lock");
+            if st.closed {
+                drop(st);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Ok(PendingResponse::immediate_error(RequestError::Failed(
+                    "batcher thread is gone".into(),
+                )));
+            }
+            if st.total >= self.config.max_queue.max(1) {
+                return Err(input);
+            }
+            if let Some(quota) = quota {
+                // quota 0 = no queue at all: every request bounces to the
+                // caller's degrade/shed decision.
+                let depth = st.queues.get(&*policy.name).map_or(0, |q| q.deque.len());
+                if depth >= quota {
+                    return Err(input);
+                }
+            }
+            let (tx, rx) = channel();
+            let req =
+                Request { input, tenant: policy.name.clone(), enqueued: Instant::now(), expires, tx };
+            let entry = st
+                .queues
+                .entry(policy.name.clone())
+                .or_insert_with(|| TenantQueue { weight: 1, deque: VecDeque::new() });
+            entry.weight = policy.weight.max(1);
+            entry.deque.push_back(req);
+            st.total += 1;
+            drop(st);
+            self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            self.shared.arrived.notify_one();
+            Ok(PendingResponse { rx })
         }
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let req = Request { input, enqueued: Instant::now(), tx };
-        let queue = self.tx.as_ref().expect("batcher queue alive until drop");
-        if let Err(send_err) = queue.send(req) {
-            self.queued.fetch_sub(1, Ordering::AcqRel);
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = send_err.0.tx.send(Err("batcher thread is gone".into()));
+    }
+
+    /// Enqueue one input vector under the default tenant. Admission
+    /// bounces become an immediate shed here (single-tenant callers have
+    /// no degrade ladder); the error still arrives through the returned
+    /// handle so callers have one code path.
+    pub fn submit(&self, input: Vec<f32>) -> PendingResponse {
+        use std::sync::atomic::Ordering;
+        match self.try_submit(&self.default_policy, input) {
+            Ok(pending) => pending,
+            Err(_input) => {
+                let depth = self.shared.state.lock().map(|s| s.total).unwrap_or(0);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                PendingResponse::immediate_error(RequestError::Shed(format!(
+                    "server overloaded: {depth} requests already queued"
+                )))
+            }
         }
-        PendingResponse { rx }
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close the queue: the thread drains and exits
+        {
+            let mut st = self.shared.state.lock().expect("batcher queue lock");
+            st.closed = true; // close the queue: the thread drains and exits
+        }
+        self.shared.arrived.notify_all();
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
     }
 }
 
+/// Pull up to `max_batch` requests out of the tenant queues by deficit
+/// round-robin: every non-empty tenant earns `weight` slots per round, a
+/// tenant whose queue empties forfeits leftover credit. With per-request
+/// cost 1 and quantum ≥ 1 every round makes progress, and over time each
+/// backlogged tenant's share of batch slots converges to its weight share
+/// — the flooding tenant queues behind itself, not behind everyone.
+fn drain_drr(
+    state: &mut QueueState,
+    deficits: &mut BTreeMap<Arc<str>, u64>,
+    max_batch: usize,
+) -> Vec<Request> {
+    let mut out = Vec::with_capacity(max_batch.min(state.total));
+    while out.len() < max_batch && state.total > 0 {
+        let backlogged: Vec<Arc<str>> = state
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.deque.is_empty())
+            .map(|(name, _)| name.clone())
+            .collect();
+        for name in backlogged {
+            if out.len() >= max_batch {
+                break;
+            }
+            let q = state.queues.get_mut(&name).expect("backlogged tenant present");
+            if q.deque.is_empty() {
+                continue;
+            }
+            let credit = deficits.entry(name.clone()).or_insert(0);
+            *credit += u64::from(q.weight.max(1));
+            while *credit > 0 && out.len() < max_batch {
+                match q.deque.pop_front() {
+                    Some(req) => {
+                        *credit -= 1;
+                        state.total -= 1;
+                        out.push(req);
+                    }
+                    None => break,
+                }
+            }
+            if q.deque.is_empty() {
+                deficits.remove(&name);
+            }
+        }
+    }
+    out
+}
+
 /// Collect-and-flush loop (one per batcher thread).
 fn batch_loop(
-    rx: Receiver<Request>,
+    shared: Arc<Shared>,
     executor: Arc<dyn BatchExecutor>,
     metrics: Arc<ServeMetrics>,
-    queued: Arc<AtomicUsize>,
     config: BatcherConfig,
 ) {
     use std::sync::atomic::Ordering;
     let max_batch = config.max_batch.max(1);
+    // DRR credit persists across batches so weight shares hold over time,
+    // not just within one drain.
+    let mut deficits: BTreeMap<Arc<str>, u64> = BTreeMap::new();
     loop {
-        // Block for the request that opens the next batch; queue closure
-        // (all senders dropped) ends the loop.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return,
-        };
-        queued.fetch_sub(1, Ordering::AcqRel);
-        let mut batch = vec![first];
-        let deadline = Instant::now() + config.max_wait;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => {
-                    queued.fetch_sub(1, Ordering::AcqRel);
-                    batch.push(r);
+        let batch = {
+            let mut st = shared.state.lock().expect("batcher queue lock");
+            // Block for the request that opens the next batch; closure
+            // with an empty queue ends the loop.
+            while st.total == 0 {
+                if st.closed {
+                    return;
                 }
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                st = shared.arrived.wait(st).expect("batcher queue lock");
+            }
+            // Keep the batch open (releasing the lock while waiting)
+            // until it fills or `max_wait` elapses; closure flushes
+            // whatever is pending immediately.
+            let deadline = Instant::now() + config.max_wait;
+            while st.total < max_batch && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared
+                    .arrived
+                    .wait_timeout(st, deadline - now)
+                    .expect("batcher queue lock");
+                st = guard;
+            }
+            drain_drr(&mut st, &mut deficits, max_batch)
+        };
+        // Deadline shed happens at drain time, outside the lock: requests
+        // that out-waited their tenant's SLO are answered with a shed
+        // error instead of burning a batch slot on a uselessly late reply.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            match req.expires {
+                Some(t) if now > t => {
+                    metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    metrics.tenant_deadline_shed(&req.tenant);
+                    let waited_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                    let _ = req.tx.send(Err(RequestError::Shed(format!(
+                        "deadline exceeded: request waited {waited_ms:.1} ms in queue"
+                    ))));
+                }
+                _ => live.push(req),
             }
         }
-        flush(&executor, &metrics, batch);
+        if !live.is_empty() {
+            flush(&executor, &metrics, live);
+        }
     }
 }
 
@@ -258,7 +534,11 @@ fn flush(executor: &Arc<dyn BatchExecutor>, metrics: &ServeMetrics, batch: Vec<R
     match executor.execute(inputs) {
         Ok(outputs) if outputs.len() == batch.len() => {
             for (req, out) in batch.into_iter().zip(outputs) {
-                metrics.record_latency(executor.label(), req.enqueued.elapsed().as_secs_f64());
+                let secs = req.enqueued.elapsed().as_secs_f64();
+                metrics.record_latency(executor.label(), secs);
+                if req.tenant.as_ref() != DEFAULT_TENANT {
+                    metrics.record_tenant_latency(&req.tenant, secs);
+                }
                 let _ = req.tx.send(Ok(out));
             }
         }
@@ -269,12 +549,12 @@ fn flush(executor: &Arc<dyn BatchExecutor>, metrics: &ServeMetrics, batch: Vec<R
                 batch.len()
             );
             for req in batch {
-                let _ = req.tx.send(Err(msg.clone()));
+                let _ = req.tx.send(Err(RequestError::Failed(msg.clone())));
             }
         }
         Err(msg) => {
             for req in batch {
-                let _ = req.tx.send(Err(msg.clone()));
+                let _ = req.tx.send(Err(RequestError::Failed(msg.clone())));
             }
         }
     }
@@ -287,6 +567,7 @@ mod tests {
     use crate::io::tenz::TensorFile;
     use crate::rng::GaussianSource;
     use crate::tensor::init::gaussian;
+    use std::sync::atomic::{AtomicBool, Ordering};
 
     fn tiny_model(d: usize, c: usize) -> Arc<ModelKernels> {
         let mut g = GaussianSource::new(7);
@@ -311,7 +592,6 @@ mod tests {
         );
         let y = batcher.submit(vec![1.0; 4]).wait().unwrap();
         assert_eq!(y.len(), 2);
-        use std::sync::atomic::Ordering;
         // One lone request ⇒ exactly one batch of occupancy 1, answered
         // without waiting for 63 more inputs that never come.
         assert_eq!(metrics.batches.load(Ordering::Relaxed), 1);
@@ -327,7 +607,6 @@ mod tests {
             Batcher::spawn_local(tiny_model(4, 2), pool.clone(), metrics.clone(), Default::default());
         let err = batcher.submit(vec![1.0; 3]).wait().unwrap_err();
         assert!(err.contains("3 features"));
-        use std::sync::atomic::Ordering;
         assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.batches.load(Ordering::Relaxed), 0);
         drop(batcher);
@@ -335,7 +614,6 @@ mod tests {
 
     #[test]
     fn overload_sheds_requests_once_queue_is_full() {
-        use std::sync::atomic::Ordering;
         let pool = Arc::new(WorkerPool::new(1, 1));
         let metrics = Arc::new(ServeMetrics::new());
         // Saturate the single worker so the batcher's flush blocks behind
@@ -349,7 +627,12 @@ mod tests {
             tiny_model(3, 2),
             pool.clone(),
             metrics.clone(),
-            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1), max_queue: 3 },
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                max_queue: 3,
+                ..Default::default()
+            },
         );
         // First request: pulled into a batch whose flush is stuck behind
         // the blocker. record_batch fires before the flush blocks, so
@@ -361,8 +644,12 @@ mod tests {
         // Fill the queue to its bound, then watch the shed.
         let queued: Vec<_> = (0..3).map(|_| batcher.submit(vec![0.0; 3])).collect();
         let shed = batcher.submit(vec![0.0; 3]);
-        assert!(shed.wait().unwrap_err().contains("overloaded"));
-        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        match shed.wait_outcome().unwrap_err() {
+            RequestError::Shed(msg) => assert!(msg.contains("overloaded"), "{msg}"),
+            other => panic!("expected a shed, got {other:?}"),
+        }
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 0);
         // Unblock: everything accepted is still answered.
         block_tx.send(()).unwrap();
         assert_eq!(blocker.wait().unwrap(), 0);
@@ -415,6 +702,153 @@ mod tests {
         let batcher = Batcher::spawn(Arc::new(Short), metrics, Default::default());
         let err = batcher.submit(vec![0.0; 2]).wait().unwrap_err();
         assert!(err.contains("0 rows"), "{err}");
+        drop(batcher);
+    }
+
+    /// Echo executor whose *first* call blocks until released — lets a
+    /// test stack the queues deterministically, then observe exactly how
+    /// the drain orders them.
+    struct GatedEcho {
+        dim: usize,
+        entered: AtomicBool,
+        released: AtomicBool,
+        release: Mutex<Receiver<()>>,
+        calls: Mutex<Vec<Vec<f32>>>,
+    }
+
+    impl GatedEcho {
+        fn new(dim: usize) -> (Arc<GatedEcho>, Sender<()>) {
+            let (tx, rx) = channel();
+            let gate = Arc::new(GatedEcho {
+                dim,
+                entered: AtomicBool::new(false),
+                released: AtomicBool::new(false),
+                release: Mutex::new(rx),
+                calls: Mutex::new(Vec::new()),
+            });
+            (gate, tx)
+        }
+    }
+
+    impl BatchExecutor for GatedEcho {
+        fn label(&self) -> &str {
+            "gated-echo"
+        }
+        fn input_dim(&self) -> usize {
+            self.dim
+        }
+        fn execute(&self, inputs: Mat<f32>) -> Result<Vec<Vec<f32>>, String> {
+            if !self.released.swap(true, Ordering::SeqCst) {
+                self.entered.store(true, Ordering::SeqCst);
+                let _ = self.release.lock().unwrap().recv();
+            }
+            let tags: Vec<f32> = (0..inputs.rows()).map(|r| inputs.row(r)[0]).collect();
+            self.calls.lock().unwrap().push(tags);
+            Ok((0..inputs.rows()).map(|r| inputs.row(r).to_vec()).collect())
+        }
+    }
+
+    /// Deficit round-robin with weights 2:1 — tenant `a` flooding the
+    /// queue still drains interleaved at a 2:1 slot ratio with `b`, not
+    /// FIFO (which would empty all of `a` first).
+    #[test]
+    fn drain_is_weighted_round_robin_across_tenants() {
+        let (gate, release) = GatedEcho::new(2);
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::spawn(
+            gate.clone(),
+            metrics,
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let mut pol_a = TenantPolicy::named("a");
+        pol_a.weight = 2;
+        let pol_b = TenantPolicy::named("b");
+        // Park the batcher thread inside the first (dummy) flush so the
+        // queues below stack up untouched.
+        let dummy = batcher.try_submit(&pol_a, vec![0.0; 2]).unwrap();
+        while !gate.entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut pending = Vec::new();
+        for i in 0..4 {
+            pending.push(batcher.try_submit(&pol_a, vec![1.0 + i as f32; 2]).unwrap());
+        }
+        for i in 0..2 {
+            pending.push(batcher.try_submit(&pol_b, vec![101.0 + i as f32; 2]).unwrap());
+        }
+        release.send(()).unwrap();
+        assert_eq!(dummy.wait().unwrap().len(), 2);
+        for p in pending {
+            assert_eq!(p.wait().unwrap().len(), 2);
+        }
+        let calls = gate.calls.lock().unwrap().clone();
+        // Call 0 is the dummy; with max_batch=3 and weights a=2, b=1 the
+        // six queued requests drain as [a,a,b] [a,a,b].
+        assert_eq!(calls.len(), 3, "{calls:?}");
+        assert_eq!(calls[1], vec![1.0, 2.0, 101.0], "{calls:?}");
+        assert_eq!(calls[2], vec![3.0, 4.0, 102.0], "{calls:?}");
+        drop(batcher);
+    }
+
+    /// A tenant quota bounces only the over-quota tenant; the global
+    /// queue and other tenants keep admitting.
+    #[test]
+    fn tenant_quota_bounces_only_that_tenant() {
+        let (gate, release) = GatedEcho::new(2);
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::spawn(
+            gate.clone(),
+            metrics,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let mut pol_a = TenantPolicy::named("a");
+        pol_a.queue_quota = Some(2);
+        let pol_b = TenantPolicy::named("b");
+        let dummy = batcher.try_submit(&pol_b, vec![0.0; 2]).unwrap();
+        while !gate.entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let a1 = batcher.try_submit(&pol_a, vec![1.0; 2]).unwrap();
+        let a2 = batcher.try_submit(&pol_a, vec![2.0; 2]).unwrap();
+        // Third `a` hits the quota and hands the input back untouched…
+        let bounced = batcher.try_submit(&pol_a, vec![3.0; 2]);
+        assert_eq!(bounced.unwrap_err(), vec![3.0; 2]);
+        // …while `b` still gets in.
+        let b1 = batcher.try_submit(&pol_b, vec![4.0; 2]).unwrap();
+        release.send(()).unwrap();
+        for p in [dummy, a1, a2, b1] {
+            assert!(p.wait().is_ok());
+        }
+        drop(batcher);
+    }
+
+    /// Requests that out-wait their tenant deadline are shed at drain
+    /// time with a `Shed` error, not executed uselessly late.
+    #[test]
+    fn stale_requests_are_shed_at_the_deadline() {
+        let (gate, release) = GatedEcho::new(2);
+        let metrics = Arc::new(ServeMetrics::new());
+        let batcher = Batcher::spawn(
+            gate.clone(),
+            metrics.clone(),
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let mut pol = TenantPolicy::named("slo");
+        pol.deadline = Some(Duration::from_millis(5));
+        let dummy = batcher.try_submit(&TenantPolicy::default(), vec![0.0; 2]).unwrap();
+        while !gate.entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let stale = batcher.try_submit(&pol, vec![1.0; 2]).unwrap();
+        // Hold the flush well past the 5 ms deadline before releasing.
+        std::thread::sleep(Duration::from_millis(30));
+        release.send(()).unwrap();
+        assert!(dummy.wait().is_ok());
+        match stale.wait_outcome().unwrap_err() {
+            RequestError::Shed(msg) => assert!(msg.contains("deadline"), "{msg}"),
+            other => panic!("expected a deadline shed, got {other:?}"),
+        }
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
         drop(batcher);
     }
 }

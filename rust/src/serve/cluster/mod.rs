@@ -44,5 +44,7 @@ pub use placement::{
     PlacementMode, PlacementPlan, WorkerAssignment,
 };
 pub use router::{RoutedExecutor, Router, RouterConfig};
-pub use wire::{ErrorCode, Frame, ModelStats, WireError, MAX_FRAME_BYTES, PROTOCOL_VERSION};
+pub use wire::{
+    ErrorCode, Frame, ModelStats, TenantStats, WireError, MAX_FRAME_BYTES, PROTOCOL_VERSION,
+};
 pub use worker::{Worker, WorkerConfig, WorkerHandle};

@@ -140,7 +140,17 @@ impl Router {
     /// Fetch per-model latency statistics from worker `idx`.
     pub fn worker_stats(&self, idx: usize) -> Result<Vec<wire::ModelStats>, String> {
         match self.call_link(idx, &Frame::Stats) {
-            Ok(Frame::StatsOk { models }) => Ok(models),
+            Ok(Frame::StatsOk { models, .. }) => Ok(models),
+            Ok(other) => Err(format!("unexpected {} frame", other.name())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    /// Fetch per-tenant admission statistics from worker `idx` (empty on
+    /// a worker that serves no named tenants).
+    pub fn worker_tenant_stats(&self, idx: usize) -> Result<Vec<wire::TenantStats>, String> {
+        match self.call_link(idx, &Frame::Stats) {
+            Ok(Frame::StatsOk { tenants, .. }) => Ok(tenants),
             Ok(other) => Err(format!("unexpected {} frame", other.name())),
             Err(e) => Err(e.to_string()),
         }

@@ -21,8 +21,9 @@ use std::io::{Read, Write};
 use thiserror::Error;
 
 /// Protocol version this build speaks. Bumped on any frame-layout change;
-/// the handshake refuses mismatched peers up front.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// the handshake refuses mismatched peers up front. v2 added the
+/// per-tenant admission rows to [`Frame::StatsOk`].
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Hard cap on one frame's payload (tag + body). A `Forward` carrying a
 /// 4096-wide batch of 4096 f32 features is ~64 MiB; anything larger is a
@@ -107,6 +108,21 @@ pub struct ModelStats {
     pub max: f64,
 }
 
+/// Per-tenant admission statistics carried by [`Frame::StatsOk`] — the
+/// wire form of [`TenantSnapshot`](crate::serve::metrics::TenantSnapshot).
+/// `shed` folds in deadline sheds: on the wire a shed is a shed, however
+/// late the server decided it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub offered: u64,
+    pub admitted: u64,
+    pub degraded: u64,
+    pub shed: u64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
 /// One protocol message. Request frames flow router → worker; `*Ok`,
 /// `HelloAck` and `Error` flow back.
 #[derive(Debug, Clone, PartialEq)]
@@ -126,8 +142,10 @@ pub enum Frame {
     HealthOk { models: u32, requests: u64 },
     /// Ask for per-model latency statistics.
     Stats,
-    /// Per-model latency statistics (sorted by model name).
-    StatsOk { models: Vec<ModelStats> },
+    /// Per-model latency statistics (sorted by model name) plus
+    /// per-tenant admission rows (sorted by tenant name; empty when the
+    /// worker serves no named tenants).
+    StatsOk { models: Vec<ModelStats>, tenants: Vec<TenantStats> },
     /// Typed failure answer to any request.
     Error { code: ErrorCode, message: String },
 }
@@ -303,7 +321,7 @@ impl Frame {
                 out.extend_from_slice(&requests.to_le_bytes());
             }
             Frame::Stats => out.push(TAG_STATS),
-            Frame::StatsOk { models } => {
+            Frame::StatsOk { models, tenants } => {
                 out.push(TAG_STATS_OK);
                 let count = u32::try_from(models.len())
                     .map_err(|_| WireError::Malformed("too many stats entries".into()))?;
@@ -314,6 +332,18 @@ impl Frame {
                     out.extend_from_slice(&m.p50.to_le_bytes());
                     out.extend_from_slice(&m.p99.to_le_bytes());
                     out.extend_from_slice(&m.max.to_le_bytes());
+                }
+                let count = u32::try_from(tenants.len())
+                    .map_err(|_| WireError::Malformed("too many tenant entries".into()))?;
+                out.extend_from_slice(&count.to_le_bytes());
+                for t in tenants {
+                    put_string(&mut out, &t.tenant)?;
+                    out.extend_from_slice(&t.offered.to_le_bytes());
+                    out.extend_from_slice(&t.admitted.to_le_bytes());
+                    out.extend_from_slice(&t.degraded.to_le_bytes());
+                    out.extend_from_slice(&t.shed.to_le_bytes());
+                    out.extend_from_slice(&t.p50.to_le_bytes());
+                    out.extend_from_slice(&t.p99.to_le_bytes());
                 }
             }
             Frame::Error { code, message } => {
@@ -371,7 +401,27 @@ impl Frame {
                         max: r.f64()?,
                     });
                 }
-                Frame::StatsOk { models }
+                let count = r.u32()? as usize;
+                // Each tenant row is ≥ 50 bytes (2-byte string prefix +
+                // 4×u64 + 2×f64); same pre-allocation guard as above.
+                if count > r.remaining() / 50 {
+                    return Err(WireError::Malformed(format!(
+                        "tenant stats count {count} exceeds frame capacity"
+                    )));
+                }
+                let mut tenants = Vec::with_capacity(count);
+                for _ in 0..count {
+                    tenants.push(TenantStats {
+                        tenant: r.string()?,
+                        offered: r.u64()?,
+                        admitted: r.u64()?,
+                        degraded: r.u64()?,
+                        shed: r.u64()?,
+                        p50: r.f64()?,
+                        p99: r.f64()?,
+                    });
+                }
+                Frame::StatsOk { models, tenants }
             }
             TAG_ERROR => {
                 let code = ErrorCode::from_tag(r.u16()?)?;
@@ -434,7 +484,28 @@ mod tests {
                     ModelStats { model: "a.tenz".into(), n: 9, p50: 0.001, p99: 0.005, max: 0.9 },
                     ModelStats { model: "b.toml".into(), n: 0, p50: 0.0, p99: 0.0, max: 0.0 },
                 ],
+                tenants: vec![
+                    TenantStats {
+                        tenant: "gold".into(),
+                        offered: 120,
+                        admitted: 100,
+                        degraded: 15,
+                        shed: 5,
+                        p50: 0.002,
+                        p99: 0.04,
+                    },
+                    TenantStats {
+                        tenant: "free".into(),
+                        offered: 0,
+                        admitted: 0,
+                        degraded: 0,
+                        shed: 0,
+                        p50: 0.0,
+                        p99: 0.0,
+                    },
+                ],
             },
+            Frame::StatsOk { models: vec![], tenants: vec![] },
             Frame::Error { code: ErrorCode::ModelLoad, message: "no such shard".into() },
         ]
     }
@@ -502,6 +573,21 @@ mod tests {
         body.extend_from_slice(&99u16.to_le_bytes());
         body.extend_from_slice(&0u16.to_le_bytes());
         assert!(matches!(Frame::decode_body(&body), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn huge_declared_stats_counts_rejected_before_allocation() {
+        // Model count far past what the frame can hold.
+        let mut body = vec![TAG_STATS_OK];
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode_body(&body).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err}");
+        // Zero models, then an absurd tenant count.
+        let mut body = vec![TAG_STATS_OK];
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode_body(&body).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err}");
     }
 
     #[test]

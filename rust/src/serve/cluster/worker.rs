@@ -23,7 +23,9 @@
 //! CI smoke step drive.
 
 use super::placement::PlacementPlan;
-use super::wire::{read_frame, write_frame, ErrorCode, Frame, ModelStats, PROTOCOL_VERSION};
+use super::wire::{
+    read_frame, write_frame, ErrorCode, Frame, ModelStats, TenantStats, PROTOCOL_VERSION,
+};
 use crate::coordinator::pool::WorkerPool;
 use crate::io::checkpoint::CheckpointSource;
 use crate::serve::kernel::ModelKernels;
@@ -340,6 +342,22 @@ fn serve_conn(mut stream: TcpStream, state: Arc<WorkerState>, shutdown: Arc<Atom
                         max: lq.max,
                     })
                     .collect(),
+                tenants: state
+                    .metrics
+                    .tenant_snapshots()
+                    .into_iter()
+                    .map(|t| TenantStats {
+                        tenant: t.tenant,
+                        offered: t.counters.offered,
+                        admitted: t.counters.admitted,
+                        degraded: t.counters.degraded,
+                        // On the wire a shed is a shed, however late the
+                        // server decided it.
+                        shed: t.counters.shed + t.counters.deadline_shed,
+                        p50: t.latency.p50,
+                        p99: t.latency.p99,
+                    })
+                    .collect(),
             },
             other => Frame::Error {
                 code: ErrorCode::BadRequest,
@@ -477,10 +495,12 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match call(&mut stream, &Frame::Stats).unwrap() {
-            Frame::StatsOk { models } => {
+            Frame::StatsOk { models, tenants } => {
                 assert_eq!(models.len(), 1);
                 assert_eq!(models[0].model, plan.checkpoint);
                 assert_eq!(models[0].n, 2);
+                // A forward-only worker tracks no named tenants.
+                assert!(tenants.is_empty(), "{tenants:?}");
             }
             other => panic!("{other:?}"),
         }

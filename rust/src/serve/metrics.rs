@@ -97,6 +97,48 @@ impl LatencyReservoir {
     }
 }
 
+/// Per-tenant admission counters. `offered` is everything the tenant
+/// asked for; `admitted`, `degraded`, and `shed` partition the admission
+/// decision, while `deadline_shed` counts admitted requests later
+/// dropped in queue past the tenant's deadline (so they land in both
+/// `admitted` and `deadline_shed`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantCounters {
+    pub offered: u64,
+    pub admitted: u64,
+    pub degraded: u64,
+    pub shed: u64,
+    pub deadline_shed: u64,
+}
+
+#[derive(Debug)]
+struct TenantRow {
+    counters: TenantCounters,
+    latency: LatencyReservoir,
+    /// The p99 latency target (seconds) this tenant is judged against.
+    slo_secs: Option<f64>,
+    touched: u64,
+}
+
+/// One tenant's metrics row, snapshotted: admission counters, latency
+/// quantiles, and the SLO verdict — what the tenant table and the
+/// cluster `Stats` frame carry.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub tenant: String,
+    pub counters: TenantCounters,
+    pub latency: LatencyQuantiles,
+    pub slo_secs: Option<f64>,
+}
+
+impl TenantSnapshot {
+    /// `None` when no SLO is configured; otherwise whether observed p99
+    /// meets the target.
+    pub fn slo_met(&self) -> Option<bool> {
+        self.slo_secs.map(|slo| self.latency.p99 <= slo)
+    }
+}
+
 /// Counters shared by the batchers of one server process.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
@@ -106,6 +148,11 @@ pub struct ServeMetrics {
     pub responses: AtomicU64,
     /// Requests refused up front (wrong input width, shutdown).
     pub rejected: AtomicU64,
+    /// Requests the admission controller *chose* not to serve: global
+    /// queue overload, tenant quota with no degrade path left, or a
+    /// queue-deadline drop. Kept apart from `rejected` — shed is policy,
+    /// rejection is a broken request.
+    pub shed: AtomicU64,
     /// Batched GEMM passes executed.
     pub batches: AtomicU64,
     /// Total inputs across executed batches (occupancy numerator).
@@ -124,6 +171,9 @@ pub struct ServeMetrics {
     /// over-weights quiet models, so the aggregate quantiles come from
     /// this genuinely uniform sample of the whole request history.
     global: Mutex<LatencyReservoir>,
+    /// Per-tenant admission counters, latency reservoirs, and SLO
+    /// targets, keyed by tenant name — bounded like `models`.
+    tenants: Mutex<BTreeMap<String, TenantRow>>,
     /// Monotone stamp for reservoir recency (eviction order).
     touch_counter: AtomicU64,
 }
@@ -181,6 +231,130 @@ impl ServeMetrics {
         }
     }
 
+    /// Touch-or-create the tenant row, evicting the least-recently
+    /// updated one past the bound (same policy as the model reservoirs).
+    fn with_tenant<F: FnOnce(&mut TenantRow)>(&self, tenant: &str, f: F) {
+        let stamp = self.touch_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut map = self.tenants.lock().unwrap();
+        if !map.contains_key(tenant) && map.len() >= MAX_MODEL_RESERVOIRS {
+            if let Some(evict) = map.iter().min_by_key(|(_, r)| r.touched).map(|(k, _)| k.clone())
+            {
+                map.remove(&evict);
+            }
+        }
+        let row = map.entry(tenant.to_string()).or_insert_with(|| TenantRow {
+            counters: TenantCounters::default(),
+            latency: LatencyReservoir::for_model(tenant),
+            slo_secs: None,
+            touched: 0,
+        });
+        row.touched = stamp;
+        f(row);
+    }
+
+    /// One request arrived addressed to `tenant` (counted before any
+    /// admission decision).
+    pub fn tenant_offered(&self, tenant: &str) {
+        self.with_tenant(tenant, |r| r.counters.offered += 1);
+    }
+
+    /// The request was admitted into the tenant's queue as submitted.
+    pub fn tenant_admitted(&self, tenant: &str) {
+        self.with_tenant(tenant, |r| r.counters.admitted += 1);
+    }
+
+    /// The request was rerouted to the tenant's degrade sibling — served,
+    /// but at a known accuracy cost; counted apart from sheds.
+    pub fn tenant_degraded(&self, tenant: &str) {
+        self.with_tenant(tenant, |r| r.counters.degraded += 1);
+    }
+
+    /// The request was shed at admission. Also counts into the
+    /// process-wide [`shed`](Self::shed) total, so callers bump neither
+    /// separately.
+    pub fn tenant_shed(&self, tenant: &str) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.with_tenant(tenant, |r| r.counters.shed += 1);
+    }
+
+    /// An admitted request was dropped in queue past the tenant deadline.
+    /// The caller (the batcher's drain) bumps the global `shed` counter
+    /// at the drop site, so this only keeps the tenant's own books.
+    pub fn tenant_deadline_shed(&self, tenant: &str) {
+        self.with_tenant(tenant, |r| r.counters.deadline_shed += 1);
+    }
+
+    /// Declare the p99 latency target (seconds) `tenant` is judged
+    /// against in the tenant table.
+    pub fn set_tenant_slo(&self, tenant: &str, secs: f64) {
+        self.with_tenant(tenant, |r| r.slo_secs = Some(secs));
+    }
+
+    /// One of `tenant`'s requests completed `secs` after submission.
+    pub fn record_tenant_latency(&self, tenant: &str, secs: f64) {
+        self.with_tenant(tenant, |r| r.latency.record(secs));
+    }
+
+    /// Snapshot every tenant row (sorted by tenant name).
+    pub fn tenant_snapshots(&self) -> Vec<TenantSnapshot> {
+        let map = self.tenants.lock().unwrap();
+        map.iter()
+            .map(|(name, r)| TenantSnapshot {
+                tenant: name.clone(),
+                counters: r.counters,
+                latency: r.latency.quantiles(),
+                slo_secs: r.slo_secs,
+            })
+            .collect()
+    }
+
+    /// The per-tenant traffic table: offered vs admitted vs degraded vs
+    /// shed, and p50/p99 against the SLO target. `None` until some
+    /// tenant-addressed traffic has been recorded.
+    pub fn tenant_table(&self) -> Option<Table> {
+        let snaps = self.tenant_snapshots();
+        if snaps.is_empty() {
+            return None;
+        }
+        let mut t = Table::new(
+            "Per-tenant traffic",
+            &[
+                "tenant",
+                "offered",
+                "admitted",
+                "degraded",
+                "shed",
+                "deadline-shed",
+                "p50 ms",
+                "p99 ms",
+                "SLO p99 ms",
+                "SLO",
+            ],
+        );
+        for s in snaps {
+            let (target, verdict) = match s.slo_secs {
+                Some(slo) => (
+                    format!("{:.1}", slo * 1e3),
+                    if s.latency.p99 <= slo { "met" } else { "MISS" }.to_string(),
+                ),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            t.row(&[
+                s.tenant.clone(),
+                s.counters.offered.to_string(),
+                s.counters.admitted.to_string(),
+                s.counters.degraded.to_string(),
+                s.counters.shed.to_string(),
+                s.counters.deadline_shed.to_string(),
+                format!("{:.3}", s.latency.p50 * 1e3),
+                format!("{:.3}", s.latency.p99 * 1e3),
+                target,
+                verdict,
+            ]);
+        }
+        Some(t)
+    }
+
     /// Mean inputs per executed batch (1.0 = no coalescing happened).
     pub fn mean_occupancy(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -222,6 +396,10 @@ impl ServeMetrics {
         row(&mut t, "requests", self.requests.load(Ordering::Relaxed).to_string());
         row(&mut t, "responses", self.responses.load(Ordering::Relaxed).to_string());
         row(&mut t, "rejected", self.rejected.load(Ordering::Relaxed).to_string());
+        let shed = self.shed.load(Ordering::Relaxed);
+        if shed > 0 {
+            row(&mut t, "shed", shed.to_string());
+        }
         row(&mut t, "batches", self.batches.load(Ordering::Relaxed).to_string());
         row(&mut t, "mean batch occupancy", format!("{:.2}", self.mean_occupancy()));
         let routed = self.routed_batches.load(Ordering::Relaxed);
@@ -254,13 +432,14 @@ impl ServeMetrics {
     pub fn summary(&self) -> String {
         let lq = self.latency_quantiles();
         format!(
-            "{} requests in {} batches (occupancy {:.2}); p50 {:.3} ms, p99 {:.3} ms, {} rejected",
+            "{} requests in {} batches (occupancy {:.2}); p50 {:.3} ms, p99 {:.3} ms, {} rejected, {} shed",
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_occupancy(),
             lq.p50 * 1e3,
             lq.p99 * 1e3,
             self.rejected.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
         )
     }
 }
@@ -355,6 +534,40 @@ mod tests {
             LATENCY_RESERVOIR
         );
         assert!(lq.p50 > 0.0 && lq.p99 >= lq.p50 && lq.max >= lq.p99);
+    }
+
+    #[test]
+    fn tenant_rows_track_admission_and_slo() {
+        let m = ServeMetrics::new();
+        assert!(m.tenant_table().is_none());
+        m.set_tenant_slo("gold", 0.010);
+        for _ in 0..4 {
+            m.tenant_offered("gold");
+        }
+        m.tenant_admitted("gold");
+        m.tenant_admitted("gold");
+        m.tenant_degraded("gold");
+        m.tenant_shed("gold");
+        m.record_tenant_latency("gold", 0.002);
+        m.record_tenant_latency("gold", 0.004);
+        m.tenant_offered("free");
+        m.tenant_shed("free");
+        let snaps = m.tenant_snapshots();
+        assert_eq!(snaps.len(), 2);
+        let gold = snaps.iter().find(|s| s.tenant == "gold").unwrap();
+        assert_eq!(
+            gold.counters,
+            TenantCounters { offered: 4, admitted: 2, degraded: 1, shed: 1, deadline_shed: 0 }
+        );
+        assert_eq!(gold.slo_met(), Some(true), "p99 {} vs 10ms SLO", gold.latency.p99);
+        let free = snaps.iter().find(|s| s.tenant == "free").unwrap();
+        assert_eq!(free.slo_met(), None);
+        // tenant_shed keeps the process-wide ledger too.
+        assert_eq!(m.shed.load(Ordering::Relaxed), 2);
+        let rendered = m.tenant_table().unwrap().render();
+        assert!(rendered.contains("gold"), "{rendered}");
+        assert!(rendered.contains("met"), "{rendered}");
+        assert!(m.render(None).render().contains("shed"));
     }
 
     #[test]

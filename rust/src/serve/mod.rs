@@ -25,8 +25,15 @@
 //!   [`report::table`](crate::report::table); latencies live in bounded
 //!   per-model reservoirs so a long-lived server's memory stays O(1) and
 //!   p50/p99 report per checkpoint, not per process.
-//! * [`traffic`] — the synthetic load generator shared by `rsic serve`
-//!   and the throughput bench.
+//! * [`traffic`] — the closed-loop synthetic load generator shared by
+//!   `rsic serve` and the throughput bench.
+//! * [`scenario`] — the open-loop scenario engine (`rsic traffic`):
+//!   seeded Poisson/bursty/diurnal arrivals, multi-tenant mixes with
+//!   Zipf hot-key skew, and the soak/degradation-curve driver. Pairs
+//!   with the batcher's per-tenant admission control: quotas and
+//!   deadlines shed, degrade siblings serve overflow at the paper's
+//!   priced accuracy cost, deficit-round-robin drains keep a flooding
+//!   tenant from starving the rest.
 //! * [`cluster`] — multi-host serving: placement planner, wire protocol,
 //!   worker processes, and the routing front end the micro-batcher
 //!   drains into (with failover back to local execution).
@@ -46,15 +53,20 @@ pub mod cache;
 pub mod cluster;
 pub mod kernel;
 pub mod metrics;
+pub mod scenario;
 pub mod server;
 pub mod traffic;
 
-pub use batcher::{BatchExecutor, Batcher, BatcherConfig, LocalExecutor, PendingResponse};
+pub use batcher::{
+    BatchExecutor, Batcher, BatcherConfig, LocalExecutor, PendingResponse, RequestError,
+    TenantPolicy, DEFAULT_TENANT,
+};
 pub use cache::{ModelCache, ModelKey};
 pub use cluster::{PlacementMode, PlacementPlan, RoutedExecutor, Router, RouterConfig};
 pub use kernel::{
     DenseLinear, FactoredLinear, LinearKernel, ModelKernels, QuantFactoredLinear, ServeLayer,
 };
-pub use metrics::{LatencyQuantiles, ServeMetrics};
-pub use server::{ServeConfig, Server};
+pub use metrics::{LatencyQuantiles, ServeMetrics, TenantCounters, TenantSnapshot};
+pub use scenario::{ArrivalProcess, EngineOptions, ScenarioReport, ScenarioSpec};
+pub use server::{Admission, ServeConfig, Server, TenantSubmission};
 pub use traffic::{drive, TrafficReport};

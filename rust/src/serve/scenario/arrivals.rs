@@ -1,0 +1,273 @@
+//! Deterministic open-loop arrival processes and the hot-key sampler.
+//!
+//! An open-loop generator decides *when* requests arrive from a seeded
+//! stochastic process, never from response latency — so overload looks
+//! like production overload (arrivals keep coming while the server
+//! drowns) instead of the closed-loop self-throttling of
+//! [`traffic::drive`](crate::serve::traffic::drive). Every process here
+//! is a **pure function of `(process, seed, duration)`**: the schedule
+//! is computed up front from a private [`Pcg64`] stream, so two runs
+//! with the same seed produce bit-identical arrival times no matter how
+//! threads are scheduled — the property `tests/traffic_scenarios.rs`
+//! locks down.
+
+use crate::rng::Pcg64;
+
+/// Stream selector keeping arrival draws out of every other consumer of
+/// the same seed ("ARRV").
+const ARRIVAL_STREAM: u64 = 0x4152_5256;
+
+/// Exponential inter-arrival gap at `rate` events/sec (inverse CDF over
+/// an open-interval uniform, so `ln` never sees 0).
+fn exp_gap(rng: &mut Pcg64, rate: f64) -> f64 {
+    -rng.next_f64_open().ln() / rate
+}
+
+/// A seeded arrival process generating request times on `[0, duration)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant `rate` (events/sec).
+    Poisson { rate: f64 },
+    /// On/off Markov-modulated Poisson: bursts of Poisson arrivals at
+    /// `rate` lasting `mean_on` seconds on average, separated by silent
+    /// gaps of `mean_off` seconds on average (both exponentially
+    /// distributed). Long-run mean rate = `rate·mean_on/(mean_on+mean_off)`.
+    Bursty { rate: f64, mean_on: f64, mean_off: f64 },
+    /// Sinusoid-modulated rate `base·(1 + amplitude·sin(2πt/period))`
+    /// realized by thinning a Poisson stream at the peak rate — the
+    /// compressed-timescale stand-in for a diurnal load curve.
+    Diurnal { base: f64, amplitude: f64, period: f64 },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate (events/sec) — what capacity planning
+    /// compares against server throughput.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Bursty { rate, mean_on, mean_off } => {
+                if mean_on + mean_off <= 0.0 {
+                    0.0
+                } else {
+                    rate * mean_on / (mean_on + mean_off)
+                }
+            }
+            ArrivalProcess::Diurnal { base, .. } => base,
+        }
+    }
+
+    /// The same process with every rate multiplied by `factor` — the
+    /// overload knob the degradation-curve sweep turns.
+    pub fn scaled(&self, factor: f64) -> ArrivalProcess {
+        match *self {
+            ArrivalProcess::Poisson { rate } => ArrivalProcess::Poisson { rate: rate * factor },
+            ArrivalProcess::Bursty { rate, mean_on, mean_off } => {
+                ArrivalProcess::Bursty { rate: rate * factor, mean_on, mean_off }
+            }
+            ArrivalProcess::Diurnal { base, amplitude, period } => {
+                ArrivalProcess::Diurnal { base: base * factor, amplitude, period }
+            }
+        }
+    }
+
+    /// Generate the full arrival schedule on `[0, duration)`: strictly
+    /// increasing times, a pure function of `(self, seed, duration)`.
+    pub fn schedule(&self, seed: u64, duration: f64) -> Vec<f64> {
+        let mut rng = Pcg64::with_stream(seed, ARRIVAL_STREAM);
+        let mut out = Vec::new();
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                if rate <= 0.0 || duration <= 0.0 {
+                    return out;
+                }
+                let mut t = exp_gap(&mut rng, rate);
+                while t < duration {
+                    out.push(t);
+                    t += exp_gap(&mut rng, rate);
+                }
+            }
+            ArrivalProcess::Bursty { rate, mean_on, mean_off } => {
+                if rate <= 0.0 || duration <= 0.0 || mean_on <= 0.0 || mean_off < 0.0 {
+                    return out;
+                }
+                let mut t = 0.0;
+                let mut on = true; // runs open mid-burst: traffic exists at t=0
+                while t < duration {
+                    let phase = if on {
+                        exp_gap(&mut rng, 1.0 / mean_on)
+                    } else {
+                        exp_gap(&mut rng, 1.0 / mean_off.max(1e-12))
+                    };
+                    let end = (t + phase).min(duration);
+                    if on {
+                        let mut a = t + exp_gap(&mut rng, rate);
+                        while a < end {
+                            out.push(a);
+                            a += exp_gap(&mut rng, rate);
+                        }
+                    }
+                    t += phase;
+                    on = !on;
+                }
+            }
+            ArrivalProcess::Diurnal { base, amplitude, period } => {
+                if base <= 0.0 || duration <= 0.0 || period <= 0.0 {
+                    return out;
+                }
+                let amp = amplitude.clamp(0.0, 1.0);
+                let peak = base * (1.0 + amp);
+                let mut t = exp_gap(&mut rng, peak);
+                while t < duration {
+                    let rate_t =
+                        base * (1.0 + amp * (std::f64::consts::TAU * t / period).sin());
+                    // Poisson thinning: keep with probability rate(t)/peak.
+                    if rng.next_f64() * peak < rate_t {
+                        out.push(t);
+                    }
+                    t += exp_gap(&mut rng, peak);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Zipf(s) sampler over `n` ranked items — the hot-key skew of real
+/// multi-model traffic (a few checkpoints take most of the hits).
+/// `s = 0` degenerates to uniform. Sampling is inverse-CDF over the
+/// normalized weights `1/(i+1)^s`, so it is as deterministic as the rng
+/// stream feeding it.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n >= 1, "Zipf over an empty set");
+        let s = s.max(0.0);
+        let mut cdf: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-s)).collect();
+        let total: f64 = cdf.iter().sum();
+        let mut acc = 0.0;
+        for w in &mut cdf {
+            acc += *w / total;
+            *w = acc;
+        }
+        if let Some(last) = cdf.last_mut() {
+            *last = 1.0; // guard the running sum against fp drift
+        }
+        Zipf { cdf }
+    }
+
+    /// Draw one index in `0..n` (0 is the hottest key).
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_pure_functions_of_seed_rate_duration() {
+        for process in [
+            ArrivalProcess::Poisson { rate: 800.0 },
+            ArrivalProcess::Bursty { rate: 2000.0, mean_on: 0.05, mean_off: 0.05 },
+            ArrivalProcess::Diurnal { base: 800.0, amplitude: 0.8, period: 1.0 },
+        ] {
+            let a = process.schedule(42, 2.0);
+            let b = process.schedule(42, 2.0);
+            assert_eq!(a, b, "{process:?} not deterministic");
+            assert!(!a.is_empty());
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{process:?} times not sorted");
+            assert!(a.iter().all(|&t| (0.0..2.0).contains(&t)));
+            let c = process.schedule(43, 2.0);
+            assert_ne!(a, c, "{process:?} ignores the seed");
+        }
+    }
+
+    /// The Poisson schedule is exactly the textbook construction
+    /// t += -ln(U)/rate over this rng stream — an executable golden
+    /// reference (stronger than frozen constants: it pins the formula
+    /// *and* the stream, for every prefix, not just the first 20).
+    #[test]
+    fn poisson_schedule_matches_the_inverse_cdf_formula() {
+        let rate = 500.0;
+        let got = ArrivalProcess::Poisson { rate }.schedule(7, 1.0);
+        let mut rng = Pcg64::with_stream(7, ARRIVAL_STREAM);
+        let mut expect = Vec::new();
+        let mut t = -rng.next_f64_open().ln() / rate;
+        while t < 1.0 {
+            expect.push(t);
+            t += -rng.next_f64_open().ln() / rate;
+        }
+        assert_eq!(got.len(), expect.len());
+        for (g, e) in got.iter().zip(&expect).take(20) {
+            assert_eq!(g.to_bits(), e.to_bits(), "schedule diverges from the formula");
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn poisson_count_tracks_rate_times_duration() {
+        let n = ArrivalProcess::Poisson { rate: 1000.0 }.schedule(1, 4.0).len() as f64;
+        // 4000 expected, sd ≈ 63 — 5 sd of slack.
+        assert!((n - 4000.0).abs() < 320.0, "got {n} arrivals for E=4000");
+    }
+
+    #[test]
+    fn bursty_long_run_rate_honors_the_duty_cycle() {
+        let p = ArrivalProcess::Bursty { rate: 2000.0, mean_on: 0.05, mean_off: 0.15 };
+        assert!((p.mean_rate() - 500.0).abs() < 1e-9);
+        let n = p.schedule(3, 8.0).len() as f64;
+        // E = 4000 over 8 s; burst structure fattens the variance a lot.
+        assert!((n - 4000.0).abs() < 1200.0, "got {n} arrivals for E=4000");
+    }
+
+    #[test]
+    fn diurnal_peaks_where_the_sinusoid_peaks() {
+        let p = ArrivalProcess::Diurnal { base: 2000.0, amplitude: 0.9, period: 1.0 };
+        let times = p.schedule(11, 1.0);
+        // sin peaks at t=0.25, troughs at t=0.75 within one period.
+        let peak = times.iter().filter(|&&t| (0.15..0.35).contains(&t)).count();
+        let trough = times.iter().filter(|&&t| (0.65..0.85).contains(&t)).count();
+        assert!(
+            peak as f64 > 3.0 * trough.max(1) as f64,
+            "peak window {peak} vs trough window {trough}"
+        );
+    }
+
+    #[test]
+    fn scaled_multiplies_the_mean_rate() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 100.0 },
+            ArrivalProcess::Bursty { rate: 100.0, mean_on: 0.1, mean_off: 0.1 },
+            ArrivalProcess::Diurnal { base: 100.0, amplitude: 0.5, period: 2.0 },
+        ] {
+            assert!((p.scaled(3.0).mean_rate() - 3.0 * p.mean_rate()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_toward_the_head() {
+        let z = Zipf::new(8, 1.2);
+        let mut rng = Pcg64::new(9);
+        let mut counts = [0usize; 8];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[3]);
+        assert!(counts[0] > 4 * counts[7], "head {} tail {}", counts[0], counts[7]);
+        // s = 0 is uniform: every index within 20% of the mean.
+        let u = Zipf::new(4, 0.0);
+        let mut counts = [0usize; 4];
+        for _ in 0..20_000 {
+            counts[u.sample(&mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 5000.0).abs() < 1000.0, "{counts:?}");
+        }
+    }
+}

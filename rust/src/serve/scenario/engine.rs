@@ -1,0 +1,511 @@
+//! The scenario engine: plan a deterministic open-loop schedule, drive
+//! it against a [`Server`], and report per-tenant outcomes.
+//!
+//! Planning and driving are deliberately split. [`plan`] turns a
+//! [`ScenarioSpec`] into a flat, time-sorted list of
+//! [`PlannedArrival`]s — every arrival time, tenant, model pick, and
+//! per-request seed fixed *before any thread runs*, so the request
+//! multiset is a pure function of the spec. [`run_scenario`] then paces
+//! that schedule against the wall clock from a handful of submitter
+//! threads (open loop: a slow server changes nothing about when the
+//! next request is submitted) while a collector thread polls responses,
+//! so client-side waiting never blocks the arrival stream.
+
+use super::arrivals::Zipf;
+use super::spec::ScenarioSpec;
+use crate::bench::stats::percentile;
+use crate::io::tenz::Fnv1a;
+use crate::report::Table;
+use crate::rng::{derive_seed, GaussianSource, Pcg64};
+use crate::serve::batcher::RequestError;
+use crate::serve::server::{Admission, Server};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Stream selector for the per-tenant model-pick rng ("ZIPF").
+const MODEL_PICK_STREAM: u64 = 0x5a49_5046;
+
+/// One scheduled request, fully determined at plan time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannedArrival {
+    /// Seconds after scenario start.
+    pub at: f64,
+    /// Index into [`ScenarioSpec::tenants`].
+    pub tenant: usize,
+    /// Index into that tenant's `models` (Zipf-sampled).
+    pub model: usize,
+    /// Seed for this request's Gaussian input vector.
+    pub seed: u64,
+}
+
+/// Expand the spec into its full time-sorted arrival list. Pure: same
+/// spec (seed, rates, duration, load factor) ⇒ identical plan, bit for
+/// bit, regardless of thread counts or scheduling.
+pub fn plan(spec: &ScenarioSpec) -> Vec<PlannedArrival> {
+    let mut all = Vec::new();
+    for (ti, tenant) in spec.tenants.iter().enumerate() {
+        let schedule_seed = derive_seed(spec.seed, &format!("{}/arrivals", tenant.name), 0);
+        let times =
+            tenant.process.scaled(spec.load_factor).schedule(schedule_seed, spec.duration);
+        let zipf = Zipf::new(tenant.models.len(), tenant.zipf);
+        let mut pick = Pcg64::with_stream(
+            derive_seed(spec.seed, &format!("{}/models", tenant.name), 0),
+            MODEL_PICK_STREAM,
+        );
+        for (i, &at) in times.iter().enumerate() {
+            all.push(PlannedArrival {
+                at,
+                tenant: ti,
+                model: zipf.sample(&mut pick),
+                seed: derive_seed(spec.seed, &tenant.name, i as u64),
+            });
+        }
+    }
+    all.sort_by(|a, b| a.at.total_cmp(&b.at).then_with(|| a.tenant.cmp(&b.tenant)));
+    all
+}
+
+/// FNV-1a over the little-endian bytes of one request vector.
+fn request_digest(x: &[f32]) -> u64 {
+    let mut h = Fnv1a::new();
+    for v in x {
+        h.update(&v.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// How to drive a planned scenario.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Submitter threads pacing the schedule (arrivals are interleaved
+    /// round-robin so each thread's slice stays time-ordered).
+    pub submitters: usize,
+    /// Cap on arrivals actually driven (the soak's fast-mode knob);
+    /// `None` drives the whole schedule.
+    pub max_requests: Option<usize>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { submitters: 4, max_requests: None }
+    }
+}
+
+/// One tenant's outcome over a scenario run.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    pub tenant: String,
+    /// Arrivals the plan scheduled for this tenant.
+    pub offered: usize,
+    /// Admitted against the model as addressed.
+    pub admitted: usize,
+    /// Rerouted to the degrade sibling (and answered from it).
+    pub degraded: usize,
+    /// Shed at admission or at the queue deadline.
+    pub shed: usize,
+    /// Non-shed errors (model failure, shutdown).
+    pub errored: usize,
+    /// Answered with an output vector.
+    pub completed: usize,
+    /// Seconds, scheduled arrival → response, over completed requests.
+    pub p50: f64,
+    pub p99: f64,
+    /// The tenant's deadline/SLO target in ms, when configured.
+    pub slo_ms: Option<f64>,
+}
+
+impl TenantOutcome {
+    /// `None` without a configured SLO, else whether p99 met it.
+    pub fn slo_met(&self) -> Option<bool> {
+        self.slo_ms.map(|slo| self.p99 * 1e3 <= slo)
+    }
+}
+
+/// What one scenario run did, process-wide and per tenant.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    /// The spec's `load_factor` this run executed at.
+    pub load_factor: f64,
+    /// Wall time, first submission to last response.
+    pub seconds: f64,
+    pub offered: usize,
+    pub admitted: usize,
+    pub degraded: usize,
+    pub shed: usize,
+    pub errored: usize,
+    pub completed: usize,
+    /// Seconds, scheduled arrival → response, over completed requests.
+    pub p50: f64,
+    pub p99: f64,
+    /// Order-independent fingerprint of the request-vector multiset
+    /// (wrapping sum of per-request FNV-1a digests): equal across runs
+    /// ⇔ the same vectors were submitted, however threads interleaved.
+    pub vectors_hash: u64,
+    pub tenants: Vec<TenantOutcome>,
+}
+
+impl ScenarioReport {
+    pub fn offered_per_sec(&self) -> f64 {
+        self.offered as f64 / self.seconds.max(1e-9)
+    }
+
+    /// Useful throughput: completed requests only (degraded answers
+    /// count — they carried an output with a priced error; sheds and
+    /// failures don't).
+    pub fn goodput_per_sec(&self) -> f64 {
+        self.completed as f64 / self.seconds.max(1e-9)
+    }
+
+    /// Fraction of offered load shed (admission + deadline).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// Fraction of offered load answered from a degrade sibling.
+    pub fn degraded_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.degraded as f64 / self.offered as f64
+        }
+    }
+
+    /// Per-tenant outcome table (the client-side view; the server-side
+    /// twin is [`ServeMetrics::tenant_table`](crate::serve::ServeMetrics::tenant_table)).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            format!("Scenario {} @ {:.2}x load", self.name, self.load_factor),
+            &[
+                "tenant",
+                "offered",
+                "admitted",
+                "degraded",
+                "shed",
+                "errored",
+                "completed",
+                "p50 ms",
+                "p99 ms",
+                "SLO p99 ms",
+                "SLO",
+            ],
+        );
+        for o in &self.tenants {
+            let (target, verdict) = match (o.slo_ms, o.slo_met()) {
+                (Some(slo), Some(met)) => {
+                    (format!("{slo:.1}"), if met { "met" } else { "MISS" }.to_string())
+                }
+                _ => ("-".to_string(), "-".to_string()),
+            };
+            t.row(&[
+                o.tenant.clone(),
+                o.offered.to_string(),
+                o.admitted.to_string(),
+                o.degraded.to_string(),
+                o.shed.to_string(),
+                o.errored.to_string(),
+                o.completed.to_string(),
+                format!("{:.3}", o.p50 * 1e3),
+                format!("{:.3}", o.p99 * 1e3),
+                target,
+                verdict,
+            ]);
+        }
+        t
+    }
+}
+
+/// One in-flight request, handed from a submitter to the collector.
+struct InFlight {
+    tenant: usize,
+    at: f64,
+    outcome: Admission,
+    pending: crate::serve::batcher::PendingResponse,
+}
+
+/// One finished request, as the collector saw it.
+struct Done {
+    tenant: usize,
+    latency: f64,
+    outcome: Admission,
+    err: Option<RequestError>,
+}
+
+/// Drive `spec` against `server`, open loop. Models (including degrade
+/// siblings) are warm-loaded before the clock starts; a bad checkpoint
+/// fails here, not mid-run. Client-side thread panics surface as `Err`,
+/// never as a poisoned report — "zero client-visible panics" is a
+/// scenario-suite invariant.
+pub fn run_scenario(
+    server: &Arc<Server>,
+    spec: &ScenarioSpec,
+    opts: &EngineOptions,
+) -> Result<ScenarioReport> {
+    anyhow::ensure!(!spec.tenants.is_empty(), "scenario has no tenants");
+    let mut dims: HashMap<PathBuf, usize> = HashMap::new();
+    for path in spec.all_paths() {
+        let dim = server
+            .model(&path)
+            .with_context(|| format!("warm-loading {}", path.display()))?
+            .input_dim();
+        dims.insert(path, dim);
+    }
+    let mut arrivals = plan(spec);
+    if let Some(cap) = opts.max_requests {
+        arrivals.truncate(cap);
+    }
+    let offered = arrivals.len();
+    let mut offered_by_tenant = vec![0usize; spec.tenants.len()];
+    for a in &arrivals {
+        offered_by_tenant[a.tenant] += 1;
+    }
+    // (tenant name, model paths, model dims) — the slice submitters need.
+    let tenants: Arc<Vec<(String, Vec<(PathBuf, usize)>)>> = Arc::new(
+        spec.tenants
+            .iter()
+            .map(|t| {
+                let models =
+                    t.models.iter().map(|p| (p.clone(), dims[p])).collect::<Vec<_>>();
+                (t.name.clone(), models)
+            })
+            .collect(),
+    );
+    let arrivals = Arc::new(arrivals);
+    let (tx, rx) = channel::<InFlight>();
+    let start = Instant::now();
+
+    let n_submitters = opts.submitters.max(1);
+    let mut submitters = Vec::with_capacity(n_submitters);
+    for s in 0..n_submitters {
+        let server = server.clone();
+        let arrivals = arrivals.clone();
+        let tenants = tenants.clone();
+        let tx = tx.clone();
+        submitters.push(std::thread::spawn(move || -> Result<u64, String> {
+            let mut digest_sum = 0u64;
+            let mut idx = s;
+            while idx < arrivals.len() {
+                let a = arrivals[idx];
+                idx += n_submitters;
+                let target = start + Duration::from_secs_f64(a.at);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let (name, models) = &tenants[a.tenant];
+                let (path, dim) = &models[a.model];
+                let mut x = vec![0f32; *dim];
+                GaussianSource::new(a.seed).fill_f32(&mut x);
+                digest_sum = digest_sum.wrapping_add(request_digest(&x));
+                let sub = server.submit_tenant(path, name, x).map_err(|e| e.to_string())?;
+                let _ = tx.send(InFlight {
+                    tenant: a.tenant,
+                    at: a.at,
+                    outcome: sub.outcome,
+                    pending: sub.response,
+                });
+            }
+            Ok(digest_sum)
+        }));
+    }
+    drop(tx);
+
+    // Collector: poll in-flight responses so submitters never block on
+    // waits (that would close the loop).
+    let collector = std::thread::spawn(move || -> Vec<Done> {
+        let mut pending: Vec<InFlight> = Vec::new();
+        let mut done: Vec<Done> = Vec::new();
+        let mut open = true;
+        loop {
+            while open {
+                match rx.try_recv() {
+                    Ok(inflight) => pending.push(inflight),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => open = false,
+                }
+            }
+            let mut progressed = false;
+            let mut i = 0;
+            while i < pending.len() {
+                match pending[i].pending.try_wait() {
+                    Some(result) => {
+                        let f = pending.swap_remove(i);
+                        let latency = (start.elapsed().as_secs_f64() - f.at).max(0.0);
+                        done.push(Done {
+                            tenant: f.tenant,
+                            latency,
+                            outcome: f.outcome,
+                            err: result.err(),
+                        });
+                        progressed = true;
+                    }
+                    None => i += 1,
+                }
+            }
+            if !open && pending.is_empty() {
+                return done;
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    });
+
+    let mut vectors_hash = 0u64;
+    for handle in submitters {
+        let digest = handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("scenario submitter thread panicked"))?
+            .map_err(anyhow::Error::msg)?;
+        vectors_hash = vectors_hash.wrapping_add(digest);
+    }
+    let done = collector
+        .join()
+        .map_err(|_| anyhow::anyhow!("scenario collector thread panicked"))?;
+    let seconds = start.elapsed().as_secs_f64();
+
+    // Per-tenant bookkeeping.
+    let n_tenants = spec.tenants.len();
+    let mut admitted = vec![0usize; n_tenants];
+    let mut degraded = vec![0usize; n_tenants];
+    let mut shed = vec![0usize; n_tenants];
+    let mut errored = vec![0usize; n_tenants];
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_tenants];
+    for d in &done {
+        match d.outcome {
+            Admission::Admitted => admitted[d.tenant] += 1,
+            Admission::Degraded => degraded[d.tenant] += 1,
+            Admission::Shed => {}
+        }
+        match &d.err {
+            None => latencies[d.tenant].push(d.latency),
+            Some(e) if e.is_shed() => shed[d.tenant] += 1,
+            Some(_) => errored[d.tenant] += 1,
+        }
+    }
+    let mut all_latencies: Vec<f64> = Vec::new();
+    let mut tenants_out = Vec::with_capacity(n_tenants);
+    for (ti, tenant) in spec.tenants.iter().enumerate() {
+        let mut lats = std::mem::take(&mut latencies[ti]);
+        all_latencies.extend_from_slice(&lats);
+        lats.sort_by(f64::total_cmp);
+        // Invariant: completed + errored + shed == offered (admission
+        // sheds and deadline sheds both answer with a Shed error;
+        // `admitted`/`degraded` record the admission decision, so a
+        // deadline-shed request counts in both admitted and shed).
+        tenants_out.push(TenantOutcome {
+            tenant: tenant.name.clone(),
+            offered: offered_by_tenant[ti],
+            admitted: admitted[ti],
+            degraded: degraded[ti],
+            shed: shed[ti],
+            errored: errored[ti],
+            completed: lats.len(),
+            p50: percentile(&lats, 0.50),
+            p99: percentile(&lats, 0.99),
+            slo_ms: tenant.deadline_ms,
+        });
+    }
+    all_latencies.sort_by(f64::total_cmp);
+    let completed = all_latencies.len();
+    let total = |f: fn(&TenantOutcome) -> usize| tenants_out.iter().map(f).sum::<usize>();
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        load_factor: spec.load_factor,
+        seconds,
+        offered,
+        admitted: total(|t| t.admitted),
+        degraded: total(|t| t.degraded),
+        shed: total(|t| t.shed),
+        errored: total(|t| t.errored),
+        completed,
+        p50: percentile(&all_latencies, 0.50),
+        p99: percentile(&all_latencies, 0.99),
+        vectors_hash,
+        tenants: tenants_out,
+    })
+}
+
+/// Sweep `spec` across offered-load multipliers, a fresh server per
+/// point (so one point's backlog can't poison the next), and return the
+/// degradation curve as `(factor, report)` pairs.
+pub fn degradation_curve<F>(
+    make_server: F,
+    spec: &ScenarioSpec,
+    factors: &[f64],
+    opts: &EngineOptions,
+) -> Result<Vec<(f64, ScenarioReport)>>
+where
+    F: Fn() -> Arc<Server>,
+{
+    let mut curve = Vec::with_capacity(factors.len());
+    for &factor in factors {
+        let server = make_server();
+        let report = run_scenario(&server, &spec.scaled(factor), opts)?;
+        curve.push((factor, report));
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scenario::spec::ScenarioSpec;
+
+    fn two_tenant_spec() -> ScenarioSpec {
+        ScenarioSpec::parse(
+            r#"
+name = "unit"
+seed = 5
+duration = 0.5
+
+[tenant.a]
+models = ["x.tenz", "y.tenz"]
+rate = 200.0
+zipf = 1.0
+
+[tenant.b]
+models = ["x.tenz"]
+arrivals = "diurnal"
+rate = 100.0
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_is_deterministic_sorted_and_complete() {
+        let spec = two_tenant_spec();
+        let p1 = plan(&spec);
+        let p2 = plan(&spec);
+        assert_eq!(p1, p2);
+        assert!(!p1.is_empty());
+        assert!(p1.windows(2).all(|w| w[0].at <= w[1].at), "not time-sorted");
+        assert!(p1.iter().any(|a| a.tenant == 0) && p1.iter().any(|a| a.tenant == 1));
+        // Zipf over tenant a's two models: hot model 0 dominates.
+        let hot = p1.iter().filter(|a| a.tenant == 0 && a.model == 0).count();
+        let cold = p1.iter().filter(|a| a.tenant == 0 && a.model == 1).count();
+        assert!(hot > cold, "zipf head {hot} vs tail {cold}");
+        // Per-request seeds are unique.
+        let mut seeds: Vec<u64> = p1.iter().map(|a| a.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), p1.len(), "request seeds collide");
+    }
+
+    #[test]
+    fn load_factor_scales_the_plan() {
+        let spec = two_tenant_spec();
+        let base = plan(&spec).len() as f64;
+        let heavy = plan(&spec.scaled(4.0)).len() as f64;
+        assert!(heavy > 2.5 * base, "4x load produced {heavy} vs {base} arrivals");
+    }
+}

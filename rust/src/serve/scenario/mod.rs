@@ -1,0 +1,38 @@
+//! `serve::scenario` — open-loop traffic scenarios with per-tenant SLOs.
+//!
+//! Where [`traffic`](super::traffic) drives closed-loop uniform load
+//! (clients wait on their own backlog, so the server never truly
+//! drowns), this module generates **open-loop** traffic: arrivals come
+//! from a deterministic seeded process and keep coming no matter how
+//! slow responses are — the regime where admission control, fair
+//! queueing, and graceful degradation actually get exercised. The
+//! pieces:
+//!
+//! * [`arrivals`] — seeded arrival processes (Poisson, bursty on/off
+//!   Markov, diurnal sinusoid-thinned) that are pure functions of
+//!   `(process, seed, duration)`, plus the [`Zipf`] hot-key sampler.
+//! * [`spec`] — the TOML scenario description (`rsic traffic
+//!   --scenario f.toml`): per-tenant model sets, arrival shapes, DRR
+//!   weights, queue quotas, deadlines, and degrade siblings.
+//! * [`engine`] — [`plan`] expands a spec into a time-sorted arrival
+//!   list before any thread runs; [`run_scenario`] paces it against the
+//!   wall clock and reports per-tenant offered/admitted/degraded/shed
+//!   plus p50/p99-vs-SLO; [`degradation_curve`] sweeps the load factor
+//!   for the soak suite.
+//!
+//! The scenario suite in `tests/traffic_scenarios.rs` pins the
+//! contract: deterministic arrivals and request multisets, bounded shed
+//! under overload with zero client-visible panics, fair-queueing p99
+//! isolation, and degradation-mode goodput with the paper's
+//! ‖Δy‖ ≤ ‖W−UVᵀ‖₂‖x‖₂ bound on every degraded answer.
+
+pub mod arrivals;
+pub mod engine;
+pub mod spec;
+
+pub use arrivals::{ArrivalProcess, Zipf};
+pub use engine::{
+    degradation_curve, plan, run_scenario, EngineOptions, PlannedArrival, ScenarioReport,
+    TenantOutcome,
+};
+pub use spec::{ScenarioSpec, TenantSpec};

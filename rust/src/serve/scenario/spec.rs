@@ -1,0 +1,285 @@
+//! The TOML scenario spec: a declarative description of a multi-tenant
+//! traffic mix, parsed by the crate's own `config::toml` subset parser.
+//!
+//! ```toml
+//! name = "evening-rush"
+//! seed = 42
+//! duration = 2.0          # seconds of schedule
+//! load_factor = 1.0       # global rate multiplier (the overload knob)
+//!
+//! [tenant.gold]
+//! models = ["a.tenz", "b.tenz"]
+//! arrivals = "poisson"    # "poisson" | "bursty" | "diurnal"
+//! rate = 800.0            # events/sec (bursty: in-burst; diurnal: base)
+//! zipf = 1.1              # hot-key skew over `models` (0 = uniform)
+//! weight = 3              # deficit-round-robin drain weight
+//! quota = 256             # per-tenant queue bound
+//! deadline_ms = 50.0      # queue deadline == the p99 SLO target
+//! degrade_to = "a_r8.tenz" # overflow reroutes here instead of shedding
+//!
+//! [tenant.free]
+//! models = ["a.tenz"]
+//! arrivals = "bursty"
+//! rate = 4000.0
+//! mean_on = 0.05
+//! mean_off = 0.10
+//! ```
+//!
+//! Only `models` and `rate` are required per tenant; everything else has
+//! the defaults documented on [`TenantSpec`].
+
+use super::arrivals::ArrivalProcess;
+use crate::config::toml::{TomlDoc, TomlValue};
+use crate::serve::batcher::TenantPolicy;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One tenant's slice of the scenario: which checkpoints it hits, how
+/// its arrivals are shaped, and the admission policy it runs under.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Checkpoints this tenant draws from (Zipf rank order: first =
+    /// hottest).
+    pub models: Vec<PathBuf>,
+    /// Zipf exponent for the hot-key skew over `models` (0 = uniform).
+    pub zipf: f64,
+    pub process: ArrivalProcess,
+    /// Deficit-round-robin drain weight (default 1).
+    pub weight: u32,
+    /// Per-tenant queue bound (default: server-wide default).
+    pub quota: Option<usize>,
+    /// Queue deadline in ms — doubles as the p99 SLO target.
+    pub deadline_ms: Option<f64>,
+    /// Sibling checkpoint overflow reroutes to instead of shedding.
+    pub degrade_to: Option<PathBuf>,
+}
+
+/// A parsed traffic scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub seed: u64,
+    /// Seconds of arrival schedule per tenant.
+    pub duration: f64,
+    /// Global rate multiplier applied on top of every tenant's process.
+    pub load_factor: f64,
+    pub tenants: Vec<TenantSpec>,
+}
+
+fn opt_f64(doc: &TomlDoc, key: &str) -> Option<f64> {
+    doc.get(key).and_then(TomlValue::as_float)
+}
+
+fn opt_int(doc: &TomlDoc, key: &str) -> Option<i64> {
+    doc.get(key).and_then(TomlValue::as_int)
+}
+
+fn opt_str<'a>(doc: &'a TomlDoc, key: &str) -> Option<&'a str> {
+    doc.get(key).and_then(TomlValue::as_str)
+}
+
+impl ScenarioSpec {
+    pub fn parse(text: &str) -> Result<ScenarioSpec> {
+        let doc = TomlDoc::parse(text).context("parsing scenario TOML")?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ScenarioSpec> {
+        let path = path.as_ref();
+        let doc = TomlDoc::load(path)
+            .with_context(|| format!("loading scenario {}", path.display()))?;
+        Self::from_doc(&doc)
+            .with_context(|| format!("in scenario {}", path.display()))
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<ScenarioSpec> {
+        let name = opt_str(doc, "name").unwrap_or("scenario").to_string();
+        let seed = opt_int(doc, "seed").unwrap_or(42) as u64;
+        let duration = opt_f64(doc, "duration").unwrap_or(1.0);
+        let load_factor = opt_f64(doc, "load_factor").unwrap_or(1.0);
+        if duration <= 0.0 || load_factor <= 0.0 {
+            bail!("duration and load_factor must be positive");
+        }
+        // keys_under("tenant") yields "gold.rate", "gold.models", … —
+        // the first segment is the tenant name (BTreeSet: stable order).
+        let mut names = BTreeSet::new();
+        for key in doc.keys_under("tenant") {
+            if let Some(tenant) = key.split('.').next() {
+                if !tenant.is_empty() {
+                    names.insert(tenant.to_string());
+                }
+            }
+        }
+        if names.is_empty() {
+            bail!("scenario declares no [tenant.*] tables");
+        }
+        let mut tenants = Vec::with_capacity(names.len());
+        for tenant in names {
+            let key = |suffix: &str| format!("tenant.{tenant}.{suffix}");
+            let models_val = doc
+                .get(&key("models"))
+                .with_context(|| format!("tenant {tenant}: missing `models`"))?;
+            let models: Vec<PathBuf> = models_val
+                .as_array()
+                .map(|items| {
+                    items.iter().filter_map(TomlValue::as_str).map(PathBuf::from).collect()
+                })
+                .or_else(|| models_val.as_str().map(|s| vec![PathBuf::from(s)]))
+                .unwrap_or_default();
+            if models.is_empty() {
+                bail!("tenant {tenant}: `models` must name at least one checkpoint");
+            }
+            let rate = opt_f64(doc, &key("rate"))
+                .with_context(|| format!("tenant {tenant}: missing `rate`"))?;
+            if rate <= 0.0 {
+                bail!("tenant {tenant}: rate must be positive");
+            }
+            let kind = opt_str(doc, &key("arrivals")).unwrap_or("poisson");
+            let process = match kind {
+                "poisson" => ArrivalProcess::Poisson { rate },
+                "bursty" => {
+                    let mean_on = opt_f64(doc, &key("mean_on")).unwrap_or(0.05);
+                    let mean_off = opt_f64(doc, &key("mean_off")).unwrap_or(mean_on);
+                    ArrivalProcess::Bursty { rate, mean_on, mean_off }
+                }
+                "diurnal" => ArrivalProcess::Diurnal {
+                    base: rate,
+                    amplitude: opt_f64(doc, &key("amplitude")).unwrap_or(0.8),
+                    period: opt_f64(doc, &key("period")).unwrap_or(duration),
+                },
+                other => bail!(
+                    "tenant {tenant}: unknown arrivals kind {other:?} \
+                     (expected poisson|bursty|diurnal)"
+                ),
+            };
+            let weight = opt_int(doc, &key("weight")).unwrap_or(1).max(1) as u32;
+            let quota = opt_int(doc, &key("quota")).map(|q| q.max(0) as usize);
+            let deadline_ms = opt_f64(doc, &key("deadline_ms"));
+            let degrade_to = opt_str(doc, &key("degrade_to")).map(PathBuf::from);
+            tenants.push(TenantSpec {
+                name: tenant,
+                models,
+                zipf: opt_f64(doc, &key("zipf")).unwrap_or(0.0),
+                process,
+                weight,
+                quota,
+                deadline_ms,
+                degrade_to,
+            });
+        }
+        Ok(ScenarioSpec { name, seed, duration, load_factor, tenants })
+    }
+
+    /// The spec with `load_factor` multiplied by `factor` — the knob a
+    /// degradation-curve sweep turns between runs.
+    pub fn scaled(&self, factor: f64) -> ScenarioSpec {
+        let mut spec = self.clone();
+        spec.load_factor *= factor;
+        spec
+    }
+
+    /// Every checkpoint the scenario can touch (tenant models + degrade
+    /// siblings), deduplicated, in stable order — the warm-load set.
+    pub fn all_paths(&self) -> Vec<PathBuf> {
+        let mut seen = BTreeSet::new();
+        let mut out = Vec::new();
+        for t in &self.tenants {
+            for p in t.models.iter().chain(t.degrade_to.as_ref()) {
+                if seen.insert(p.clone()) {
+                    out.push(p.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Server-side admission policies for [`ServeConfig::tenants`]
+    /// (crate::serve::ServeConfig) matching this scenario's tenants.
+    pub fn tenant_policies(&self) -> Vec<TenantPolicy> {
+        self.tenants
+            .iter()
+            .map(|t| TenantPolicy {
+                name: Arc::from(t.name.as_str()),
+                weight: t.weight,
+                queue_quota: t.quota,
+                deadline: t.deadline_ms.map(|ms| Duration::from_secs_f64(ms / 1e3)),
+                degrade_to: t.degrade_to.clone(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+name = "rush"
+seed = 7
+duration = 2.0
+
+[tenant.gold]
+models = ["a.tenz", "b.tenz"]
+arrivals = "poisson"
+rate = 500.0
+zipf = 1.1
+weight = 3
+quota = 128
+deadline_ms = 40.0
+degrade_to = "a_r8.tenz"
+
+[tenant.free]
+models = "a.tenz"
+arrivals = "bursty"
+rate = 2000.0
+mean_on = 0.05
+mean_off = 0.1
+"#;
+
+    #[test]
+    fn parses_the_full_schema() {
+        let spec = ScenarioSpec::parse(SPEC).unwrap();
+        assert_eq!(spec.name, "rush");
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.tenants.len(), 2);
+        let free = &spec.tenants[0]; // BTreeSet order: free < gold
+        assert_eq!(free.name, "free");
+        assert_eq!(free.models, vec![PathBuf::from("a.tenz")]);
+        assert!(matches!(free.process, ArrivalProcess::Bursty { rate, .. } if rate == 2000.0));
+        let gold = &spec.tenants[1];
+        assert_eq!(gold.weight, 3);
+        assert_eq!(gold.quota, Some(128));
+        assert_eq!(gold.deadline_ms, Some(40.0));
+        assert_eq!(gold.degrade_to, Some(PathBuf::from("a_r8.tenz")));
+        // all_paths: models + degrade siblings, deduped.
+        let paths = spec.all_paths();
+        assert_eq!(paths.len(), 3, "{paths:?}");
+        let policies = spec.tenant_policies();
+        let gold_pol = policies.iter().find(|p| &*p.name == "gold").unwrap();
+        assert_eq!(gold_pol.queue_quota, Some(128));
+        assert_eq!(gold_pol.deadline, Some(Duration::from_millis(40)));
+    }
+
+    #[test]
+    fn scaled_turns_only_the_load_factor() {
+        let spec = ScenarioSpec::parse(SPEC).unwrap();
+        let hot = spec.scaled(10.0);
+        assert!((hot.load_factor - 10.0).abs() < 1e-12);
+        assert_eq!(hot.tenants.len(), spec.tenants.len());
+    }
+
+    #[test]
+    fn rejects_broken_specs() {
+        assert!(ScenarioSpec::parse("name = \"empty\"").is_err(), "no tenants");
+        let no_rate = "[tenant.t]\nmodels = [\"m.tenz\"]\n";
+        assert!(ScenarioSpec::parse(no_rate).is_err(), "missing rate");
+        let bad_kind = "[tenant.t]\nmodels = [\"m.tenz\"]\nrate = 1.0\narrivals = \"square\"\n";
+        assert!(ScenarioSpec::parse(bad_kind).is_err(), "unknown arrivals kind");
+        let neg = "duration = -1.0\n[tenant.t]\nmodels = [\"m.tenz\"]\nrate = 1.0\n";
+        assert!(ScenarioSpec::parse(neg).is_err(), "negative duration");
+    }
+}

@@ -8,8 +8,20 @@
 //! against any number of checkpoints share the process: the first request
 //! for a checkpoint loads and caches its kernels and spawns its batcher;
 //! subsequent requests coalesce into batched GEMM passes.
+//!
+//! Multi-tenant serving goes through [`Server::submit_tenant`]: each
+//! tenant carries a [`TenantPolicy`] (queue quota, deadline, DRR weight,
+//! degrade sibling), and the admission controller here decides per
+//! request between **admit** (queue as submitted), **degrade** (requeue
+//! against the configured lower-rank/i8 sibling checkpoint — served, at
+//! the accuracy cost the paper's ‖Δy‖ ≤ ‖W−UVᵀ‖₂‖x‖₂ bound prices), and
+//! **shed** (answer with a shed error). Every decision lands in the
+//! per-tenant [`ServeMetrics`] rows.
 
-use super::batcher::{BatchExecutor, Batcher, BatcherConfig, LocalExecutor, PendingResponse};
+use super::batcher::{
+    BatchExecutor, Batcher, BatcherConfig, LocalExecutor, PendingResponse, RequestError,
+    TenantPolicy,
+};
 use super::cache::{ModelCache, ModelKey};
 use super::cluster::{RoutedExecutor, Router};
 use super::kernel::ModelKernels;
@@ -41,6 +53,14 @@ pub struct ServeConfig {
     /// checkpoints, a full structural read on single `.tenz`) at every
     /// model load, before any traffic is answered from it.
     pub verify: bool,
+    /// Declared tenant policies (quota/deadline/weight/degrade sibling).
+    /// Requests naming an undeclared tenant run under a per-name copy of
+    /// the default policy.
+    pub tenants: Vec<TenantPolicy>,
+    /// Default per-tenant queue quota when a policy doesn't set one.
+    pub tenant_quota: Option<usize>,
+    /// Default queue deadline when a policy doesn't set one.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -53,8 +73,29 @@ impl Default for ServeConfig {
             max_queue: 8192,
             cache_capacity: 4,
             verify: false,
+            tenants: Vec::new(),
+            tenant_quota: None,
+            deadline: None,
         }
     }
+}
+
+/// What the admission controller decided for one tenant submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Queued against the checkpoint as submitted.
+    Admitted,
+    /// Requeued against the tenant's degrade sibling checkpoint.
+    Degraded,
+    /// Not served; the response handle resolves to a shed error.
+    Shed,
+}
+
+/// One tenant submission: the admission decision plus the response
+/// handle (already resolved for sheds).
+pub struct TenantSubmission {
+    pub outcome: Admission,
+    pub response: PendingResponse,
 }
 
 /// A traffic-serving engine over compressed (or dense) checkpoints.
@@ -66,6 +107,8 @@ pub struct Server {
     cache: Arc<ModelCache>,
     metrics: Arc<ServeMetrics>,
     config: ServeConfig,
+    /// Declared tenant policies by name (shared with every submission).
+    tenant_policies: HashMap<String, Arc<TenantPolicy>>,
     /// When set, batches for checkpoints the router's plan covers are
     /// shipped to cluster workers (with local failover); everything else
     /// executes in-process as before.
@@ -81,12 +124,21 @@ impl Server {
     /// the checkpoint the router's plan covers. Models are still loaded
     /// (and cached) locally — that is the failover target.
     pub fn with_router(config: ServeConfig, router: Option<Arc<Router>>) -> Server {
+        let metrics = Arc::new(ServeMetrics::new());
+        let mut tenant_policies = HashMap::new();
+        for policy in &config.tenants {
+            if let Some(slo) = policy.deadline.or(config.deadline) {
+                metrics.set_tenant_slo(&policy.name, slo.as_secs_f64());
+            }
+            tenant_policies.insert(policy.name.to_string(), Arc::new(policy.clone()));
+        }
         Server {
             batchers: Mutex::new(HashMap::new()),
             pool: Arc::new(WorkerPool::new(config.workers, config.queue_depth)),
             cache: Arc::new(ModelCache::with_verify(config.cache_capacity, config.verify)),
-            metrics: Arc::new(ServeMetrics::new()),
+            metrics,
             config,
+            tenant_policies,
             router,
         }
     }
@@ -103,6 +155,15 @@ impl Server {
         &self.pool
     }
 
+    /// The declared policy for `tenant`, or a per-name copy of the
+    /// default policy for tenants nobody declared.
+    pub fn tenant_policy(&self, tenant: &str) -> Arc<TenantPolicy> {
+        match self.tenant_policies.get(tenant) {
+            Some(p) => p.clone(),
+            None => Arc::new(TenantPolicy::named(tenant)),
+        }
+    }
+
     /// Load (or fetch from cache) the kernels for a checkpoint — also the
     /// warm-up/validation entry point: a bad checkpoint fails here, before
     /// any traffic is pointed at it.
@@ -110,11 +171,9 @@ impl Server {
         Ok(self.cache.get_or_load(path)?.1)
     }
 
-    /// Submit one request against the checkpoint at `path`. Returns a
-    /// handle immediately; the response is computed as part of a
-    /// coalesced micro-batch. Errors only when the checkpoint itself
-    /// cannot be loaded — per-request failures arrive through the handle.
-    pub fn submit(&self, path: &Path, input: Vec<f32>) -> Result<PendingResponse> {
+    /// The batcher serving `path`, spawning (and caching) it on first
+    /// use. Errors only when the checkpoint itself cannot be loaded.
+    fn batcher_for(&self, path: &Path) -> Result<Arc<Batcher>> {
         let (key, model) = self.cache.get_or_load(path)?;
         // Batchers whose model aged out of the cache are retired once
         // enough new keys accumulate, so the map tracks the cache instead
@@ -151,6 +210,8 @@ impl Server {
                             max_batch: self.config.max_batch,
                             max_wait: self.config.max_wait,
                             max_queue: self.config.max_queue,
+                            tenant_quota: self.config.tenant_quota,
+                            deadline: self.config.deadline,
                         },
                     ))
                 })
@@ -169,7 +230,64 @@ impl Server {
             batcher
         };
         drop(retired); // joins retired batcher threads outside the lock
-        Ok(batcher.submit(input))
+        Ok(batcher)
+    }
+
+    /// Submit one request against the checkpoint at `path`. Returns a
+    /// handle immediately; the response is computed as part of a
+    /// coalesced micro-batch. Errors only when the checkpoint itself
+    /// cannot be loaded — per-request failures arrive through the handle.
+    pub fn submit(&self, path: &Path, input: Vec<f32>) -> Result<PendingResponse> {
+        Ok(self.batcher_for(path)?.submit(input))
+    }
+
+    /// Submit one request on behalf of `tenant`, running the admission
+    /// ladder: admit under the tenant's policy; on a quota/overload
+    /// bounce, requeue against the policy's degrade sibling (quota-free —
+    /// only the global bound applies to degraded traffic); shed when no
+    /// rung is left. Errors only when a checkpoint cannot be loaded.
+    pub fn submit_tenant(
+        &self,
+        path: &Path,
+        tenant: &str,
+        input: Vec<f32>,
+    ) -> Result<TenantSubmission> {
+        let policy = self.tenant_policy(tenant);
+        self.metrics.tenant_offered(&policy.name);
+        let batcher = self.batcher_for(path)?;
+        let mut input = match batcher.try_submit(&policy, input) {
+            Ok(response) => {
+                self.metrics.tenant_admitted(&policy.name);
+                return Ok(TenantSubmission { outcome: Admission::Admitted, response });
+            }
+            Err(bounced) => bounced,
+        };
+        if let Some(sibling) = policy.degrade_to.as_ref() {
+            if let Ok(sibling_batcher) = self.batcher_for(sibling) {
+                let relaxed = TenantPolicy {
+                    name: policy.name.clone(),
+                    weight: policy.weight,
+                    queue_quota: None,
+                    deadline: policy.deadline,
+                    degrade_to: None,
+                };
+                match sibling_batcher.try_submit(&relaxed, input) {
+                    Ok(response) => {
+                        self.metrics.tenant_degraded(&policy.name);
+                        return Ok(TenantSubmission { outcome: Admission::Degraded, response });
+                    }
+                    Err(bounced) => input = bounced,
+                }
+            }
+        }
+        drop(input);
+        self.metrics.tenant_shed(&policy.name);
+        Ok(TenantSubmission {
+            outcome: Admission::Shed,
+            response: PendingResponse::immediate_error(RequestError::Shed(format!(
+                "tenant {tenant} over quota and no degrade capacity; request shed"
+            ))),
+        })
     }
 
     /// Convenience: submit one request and block for its output.
@@ -236,5 +354,73 @@ mod tests {
         let server = Server::new(ServeConfig::default());
         assert!(server.model(Path::new("/nonexistent/m.tenz")).is_err());
         assert!(server.submit(Path::new("/nonexistent/m.tenz"), vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn tenant_submission_admits_and_counts() {
+        let dir = tmp_dir("tenant");
+        let p = dir.join("m.tenz");
+        write_model(&p, 3, 2, 4);
+        let mut gold = TenantPolicy::named("gold");
+        gold.weight = 2;
+        let server = Server::new(ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            tenants: vec![gold],
+            deadline: Some(Duration::from_secs(5)),
+            ..Default::default()
+        });
+        let sub = server.submit_tenant(&p, "gold", vec![1.0; 4]).unwrap();
+        assert_eq!(sub.outcome, Admission::Admitted);
+        assert_eq!(sub.response.wait().unwrap().len(), 2);
+        // Undeclared tenants run under a per-name default policy.
+        let sub = server.submit_tenant(&p, "walk-in", vec![1.0; 4]).unwrap();
+        assert_eq!(sub.outcome, Admission::Admitted);
+        assert!(sub.response.wait().is_ok());
+        let snaps = server.metrics().tenant_snapshots();
+        let gold = snaps.iter().find(|s| s.tenant == "gold").unwrap();
+        assert_eq!(gold.counters.offered, 1);
+        assert_eq!(gold.counters.admitted, 1);
+        assert!(gold.slo_secs.is_some(), "declared tenants inherit the config deadline as SLO");
+        assert!(snaps.iter().any(|s| s.tenant == "walk-in"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// With a zero quota and a degrade sibling, every request reroutes to
+    /// the sibling (Degraded); without a sibling it sheds.
+    #[test]
+    fn degrade_ladder_reroutes_before_shedding() {
+        let dir = tmp_dir("ladder");
+        let primary = dir.join("primary.tenz");
+        let sibling = dir.join("sibling.tenz");
+        write_model(&primary, 4, 2, 4);
+        write_model(&sibling, 5, 2, 4);
+        let mut capped = TenantPolicy::named("capped");
+        capped.queue_quota = Some(0);
+        capped.degrade_to = Some(sibling.clone());
+        let mut doomed = TenantPolicy::named("doomed");
+        doomed.queue_quota = Some(0);
+        let server = Server::new(ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            tenants: vec![capped, doomed],
+            ..Default::default()
+        });
+        let sub = server.submit_tenant(&primary, "capped", vec![1.0; 4]).unwrap();
+        assert_eq!(sub.outcome, Admission::Degraded);
+        assert_eq!(sub.response.wait().unwrap().len(), 2);
+        let sub = server.submit_tenant(&primary, "doomed", vec![1.0; 4]).unwrap();
+        assert_eq!(sub.outcome, Admission::Shed);
+        match sub.response.wait_outcome().unwrap_err() {
+            RequestError::Shed(msg) => assert!(msg.contains("shed"), "{msg}"),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        let snaps = server.metrics().tenant_snapshots();
+        let capped = snaps.iter().find(|s| s.tenant == "capped").unwrap();
+        assert_eq!(capped.counters.degraded, 1);
+        assert_eq!(capped.counters.shed, 0);
+        let doomed = snaps.iter().find(|s| s.tenant == "doomed").unwrap();
+        assert_eq!(doomed.counters.shed, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

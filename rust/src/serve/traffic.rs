@@ -1,6 +1,8 @@
 //! Synthetic traffic driver — the one load generator behind both
 //! `rsic serve` and `benches/serve_throughput.rs`, so the CLI and the CI
-//! throughput gate measure exactly the same traffic shape.
+//! throughput gate measure exactly the same traffic shape. (Open-loop
+//! scenario traffic lives in [`scenario`](super::scenario); this driver
+//! is closed-loop and uniform, the baseline shape.)
 
 use super::server::Server;
 use crate::rng::GaussianSource;
@@ -18,14 +20,48 @@ pub struct TrafficReport {
     pub clients: usize,
     /// Wall time from first submission to last response.
     pub seconds: f64,
-    /// Requests answered with an error (overload shedding, model
-    /// failures) — the submissions themselves all succeeded.
-    pub failed: usize,
+    /// Requests the server *chose* not to serve (overload shedding) —
+    /// admission policy, not breakage.
+    pub shed: usize,
+    /// Requests answered with a non-shed error (model failure, wire
+    /// error, shutdown) — the submissions themselves all succeeded.
+    pub errored: usize,
+    /// Model-cache misses observed *after* the warm-load pass: a cache
+    /// smaller than the checkpoint set evicts mid-run, and every reload
+    /// bills cold-start cost to request latency. Nonzero means the
+    /// throughput numbers include reload stalls.
+    pub mid_run_reloads: u64,
 }
 
 impl TrafficReport {
+    /// Shed + errored — everything that didn't come back with an output.
+    pub fn failed(&self) -> usize {
+        self.shed + self.errored
+    }
+
+    /// Offered rate: every submission counts, served or not.
     pub fn req_per_sec(&self) -> f64 {
         self.requests as f64 / self.seconds.max(1e-9)
+    }
+
+    /// Useful throughput: only requests that came back with an output.
+    /// The bench gates regress on this, so a build that "goes faster" by
+    /// shedding load can't pass.
+    pub fn goodput_per_sec(&self) -> f64 {
+        (self.requests - self.failed()) as f64 / self.seconds.max(1e-9)
+    }
+
+    /// A human-readable warning when the warm-load guarantee was silently
+    /// violated mid-run (see `mid_run_reloads`), `None` when it held.
+    pub fn warm_cache_warning(&self) -> Option<String> {
+        if self.mid_run_reloads == 0 {
+            return None;
+        }
+        Some(format!(
+            "warning: {} mid-run model reload(s) — the model cache is smaller than the \
+             checkpoint set, so latency/throughput include cold reload stalls",
+            self.mid_run_reloads
+        ))
     }
 }
 
@@ -57,6 +93,9 @@ pub fn drive(
     for p in paths {
         dims.push(server.model(p)?.input_dim());
     }
+    // The warm loads above are the last misses the run should see; any
+    // further miss is a mid-run eviction+reload billed to some request.
+    let (_, warm_misses) = server.cache().stats();
     let sw = Stopwatch::start();
     let mut handles = Vec::with_capacity(clients);
     for client in 0..clients {
@@ -64,7 +103,7 @@ pub fn drive(
         let paths = paths.to_vec();
         let dims = dims.clone();
         let n = requests / clients + usize::from(client < requests % clients);
-        handles.push(std::thread::spawn(move || -> Result<usize, String> {
+        handles.push(std::thread::spawn(move || -> Result<(usize, usize), String> {
             let mut g = GaussianSource::new(seed ^ (client as u64 + 1));
             let mut pending = Vec::with_capacity(n);
             for i in 0..n {
@@ -73,15 +112,34 @@ pub fn drive(
                 g.fill_f32(&mut x);
                 pending.push(server.submit(&paths[which], x).map_err(|e| e.to_string())?);
             }
-            Ok(pending.into_iter().map(|p| usize::from(p.wait().is_err())).sum())
+            let (mut shed, mut errored) = (0usize, 0usize);
+            for p in pending {
+                match p.wait_outcome() {
+                    Ok(_) => {}
+                    Err(e) if e.is_shed() => shed += 1,
+                    Err(_) => errored += 1,
+                }
+            }
+            Ok((shed, errored))
         }));
     }
-    let mut failed = 0usize;
+    let (mut shed, mut errored) = (0usize, 0usize);
     for h in handles {
-        failed += h
+        let (s, e) = h
             .join()
             .map_err(|_| anyhow::anyhow!("traffic client thread panicked"))?
             .map_err(anyhow::Error::msg)?;
+        shed += s;
+        errored += e;
     }
-    Ok(TrafficReport { requests, clients, seconds: sw.secs(), failed })
+    let seconds = sw.secs();
+    let (_, misses_after) = server.cache().stats();
+    Ok(TrafficReport {
+        requests,
+        clients,
+        seconds,
+        shed,
+        errored,
+        mid_run_reloads: misses_after.saturating_sub(warm_misses),
+    })
 }

@@ -70,6 +70,7 @@ fn random_frame(g: &mut Gen) -> Frame {
         6 => Frame::Stats,
         7 => {
             let n = g.usize_in(0, 5);
+            let nt = g.usize_in(0, 4);
             Frame::StatsOk {
                 models: (0..n)
                     .map(|_| wire::ModelStats {
@@ -78,6 +79,17 @@ fn random_frame(g: &mut Gen) -> Frame {
                         p50: g.f64_in(0.0, 1.0),
                         p99: g.f64_in(0.0, 10.0),
                         max: g.f64_in(0.0, 100.0),
+                    })
+                    .collect(),
+                tenants: (0..nt)
+                    .map(|_| wire::TenantStats {
+                        tenant: random_string(g),
+                        offered: g.usize_in(0, 1 << 40) as u64,
+                        admitted: g.usize_in(0, 1 << 40) as u64,
+                        degraded: g.usize_in(0, 1 << 20) as u64,
+                        shed: g.usize_in(0, 1 << 20) as u64,
+                        p50: g.f64_in(0.0, 1.0),
+                        p99: g.f64_in(0.0, 10.0),
                     })
                     .collect(),
             }
@@ -423,20 +435,20 @@ fn worker_death_fails_over_with_zero_client_errors() {
     // Phase 1: both workers alive.
     let r1 =
         rsi_compress::serve::traffic::drive(&server, &[dense_path.clone()], 32, 4, 0xA).unwrap();
-    assert_eq!(r1.failed, 0, "healthy fleet must answer everything");
+    assert_eq!(r1.failed(), 0, "healthy fleet must answer everything");
     assert!(server.metrics().routed_batches.load(Ordering::Relaxed) > 0);
 
     // Phase 2: kill one worker mid-traffic; the survivor absorbs.
     fleet[0].shutdown();
     let r2 =
         rsi_compress::serve::traffic::drive(&server, &[dense_path.clone()], 32, 4, 0xB).unwrap();
-    assert_eq!(r2.failed, 0, "one dead replica must be invisible to clients");
+    assert_eq!(r2.failed(), 0, "one dead replica must be invisible to clients");
 
     // Phase 3: kill the whole fleet; local failover serves.
     fleet[1].shutdown();
     let r3 =
         rsi_compress::serve::traffic::drive(&server, &[dense_path.clone()], 32, 4, 0xC).unwrap();
-    assert_eq!(r3.failed, 0, "a dead fleet must degrade to local, not error");
+    assert_eq!(r3.failed(), 0, "a dead fleet must degrade to local, not error");
     assert!(
         server.metrics().failovers.load(Ordering::Relaxed) > 0,
         "phase 3 must have exercised the local fallback"

@@ -15,14 +15,15 @@ use rsi_compress::linalg::norms::residual_spectral_norm;
 use rsi_compress::rng::GaussianSource;
 use rsi_compress::io::shard::ShardedWriter;
 use rsi_compress::serve::{
-    Batcher, BatcherConfig, DenseLinear, FactoredLinear, LinearKernel, ModelCache, ModelKernels,
-    ModelKey, ServeConfig, ServeMetrics, Server,
+    traffic, BatchExecutor, Batcher, BatcherConfig, DenseLinear, FactoredLinear, LinearKernel,
+    ModelCache, ModelKernels, ModelKey, ServeConfig, ServeMetrics, Server, TenantPolicy,
 };
 use rsi_compress::tensor::init::{gaussian, matrix_with_spectrum, SpectrumShape};
 use rsi_compress::tensor::Mat;
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -319,6 +320,219 @@ fn model_cache_invalidates_when_any_shard_mtime_changes() {
     assert_ne!(k3, k1);
     assert_eq!(cache.stats(), (1, 2), "touched shard ⇒ miss and reload");
     assert_eq!(m3.input_dim(), 40);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Echo executor whose *first* call blocks until released — parks the
+/// batcher thread inside a dummy flush so a test can stack the queue to
+/// an exact depth before any drain happens.
+struct GatedEcho {
+    dim: usize,
+    entered: AtomicBool,
+    released: AtomicBool,
+    release: Mutex<Receiver<()>>,
+}
+
+impl GatedEcho {
+    fn new(dim: usize) -> (Arc<GatedEcho>, Sender<()>) {
+        let (tx, rx) = channel();
+        let gate = Arc::new(GatedEcho {
+            dim,
+            entered: AtomicBool::new(false),
+            released: AtomicBool::new(false),
+            release: Mutex::new(rx),
+        });
+        (gate, tx)
+    }
+
+    fn park(&self) {
+        while !self.entered.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+impl BatchExecutor for GatedEcho {
+    fn label(&self) -> &str {
+        "gated-echo"
+    }
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+    fn execute(&self, inputs: Mat<f32>) -> Result<Vec<Vec<f32>>, String> {
+        if !self.released.swap(true, Ordering::SeqCst) {
+            self.entered.store(true, Ordering::SeqCst);
+            let _ = self.release.lock().unwrap().recv();
+        }
+        Ok((0..inputs.rows()).map(|r| inputs.row(r).to_vec()).collect())
+    }
+}
+
+/// Admission at the exact `max_queue` boundary: with the batcher thread
+/// parked, request number `max_queue` is admitted and request
+/// `max_queue + 1` bounces — off-by-one in either direction would admit
+/// unbounded memory or shed capacity the config promised.
+#[test]
+fn max_queue_admits_exactly_the_configured_depth() {
+    let (gate, release) = GatedEcho::new(3);
+    let metrics = Arc::new(ServeMetrics::new());
+    let batcher = Batcher::spawn(
+        gate.clone(),
+        metrics.clone(),
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            max_queue: 4,
+            ..Default::default()
+        },
+    );
+    let pol = TenantPolicy::named("t");
+    // Park the drain inside a dummy flush; it no longer holds queue slots.
+    let dummy = batcher.try_submit(&pol, vec![0.0; 3]).unwrap();
+    gate.park();
+
+    let mut pending = Vec::new();
+    for i in 0..4 {
+        match batcher.try_submit(&pol, vec![1.0 + i as f32; 3]) {
+            Ok(p) => pending.push(p),
+            Err(_) => panic!("request {} of max_queue=4 bounced early", i + 1),
+        }
+    }
+    assert_eq!(batcher.queue_depth(), 4);
+    let give_back = match batcher.try_submit(&pol, vec![9.0; 3]) {
+        Err(input) => input,
+        Ok(_) => panic!("request max_queue+1 must bounce"),
+    };
+    assert_eq!(give_back, vec![9.0; 3], "bounce must hand the input back intact");
+
+    // The tenant-less `submit` path converts the same bounce into an
+    // immediate shed error (and counts it).
+    let shed = batcher.submit(vec![8.0; 3]).wait_outcome().unwrap_err();
+    assert!(shed.is_shed(), "queue-full on submit() must shed, got: {shed}");
+    assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+
+    release.send(()).unwrap();
+    assert_eq!(dummy.wait().unwrap(), vec![0.0; 3]);
+    for (i, p) in pending.into_iter().enumerate() {
+        assert_eq!(p.wait().unwrap(), vec![1.0 + i as f32; 3], "queued request {i} lost");
+    }
+    drop(batcher);
+}
+
+/// Straggler flush: 5 queued requests against `max_batch = 4` drain as
+/// one full batch plus a lone straggler that flushes after `max_wait` —
+/// it must not starve waiting for 3 peers that never come.
+#[test]
+fn straggler_beyond_a_full_batch_flushes_on_max_wait() {
+    let (gate, release) = GatedEcho::new(2);
+    let metrics = Arc::new(ServeMetrics::new());
+    let batcher = Batcher::spawn(
+        gate.clone(),
+        metrics.clone(),
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(20), ..Default::default() },
+    );
+    let pol = TenantPolicy::named("t");
+    let dummy = batcher.try_submit(&pol, vec![0.0; 2]).unwrap();
+    gate.park();
+    let pending: Vec<_> = (0..5)
+        .map(|i| batcher.try_submit(&pol, vec![i as f32; 2]).unwrap())
+        .collect();
+    release.send(()).unwrap();
+
+    let t0 = Instant::now();
+    assert_eq!(dummy.wait().unwrap(), vec![0.0; 2]);
+    for (i, p) in pending.into_iter().enumerate() {
+        assert_eq!(p.wait().unwrap(), vec![i as f32; 2]);
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5), "straggler never flushed");
+    // dummy batch + full batch of 4 + straggler batch of 1.
+    assert_eq!(metrics.batches.load(Ordering::Relaxed), 3);
+    assert_eq!(metrics.batched_inputs.load(Ordering::Relaxed), 6);
+    drop(batcher);
+}
+
+/// Batcher retirement with requests in flight: when enough distinct
+/// checkpoints rotate through a tiny cache, the server retires batchers
+/// whose models aged out — and a request still queued on a retired
+/// batcher must be answered on the way out, not dropped.
+#[test]
+fn retired_batcher_answers_its_in_flight_requests() {
+    let dir = tmp_dir("retire");
+    let mut paths = Vec::new();
+    for i in 0..3 {
+        let p = dir.join(format!("m{i}.tenz"));
+        let mut g = GaussianSource::new(40 + i as u64);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(4, 6, 1.0, &mut g)));
+        tf.write(&p).unwrap();
+        paths.push(p);
+    }
+    // capacity 1 ⇒ the batcher map retires once it tracks > 2 models.
+    // A long max_wait keeps the m0 request parked in its open batch
+    // while m1/m2 submissions trigger the retirement sweep.
+    let server = Server::new(ServeConfig {
+        workers: 1,
+        max_batch: 64,
+        max_wait: Duration::from_millis(500),
+        cache_capacity: 1,
+        ..Default::default()
+    });
+    let in_flight = server.submit(&paths[0], vec![0.25; 6]).unwrap();
+    let p1 = server.submit(&paths[1], vec![0.5; 6]).unwrap();
+    // This submission pushes the batcher map past 2·capacity: m0's and
+    // m1's batchers retire (dropped with our requests still queued).
+    let p2 = server.submit(&paths[2], vec![0.75; 6]).unwrap();
+
+    let y0 = in_flight.wait().expect("retired batcher dropped an in-flight request");
+    assert_eq!(y0.len(), 4);
+    assert_eq!(p1.wait().unwrap().len(), 4);
+    assert_eq!(p2.wait().unwrap().len(), 4);
+    // The retired answer is the same forward pass a fresh load computes.
+    let y0_fresh = server.infer(&paths[0], vec![0.25; 6]).unwrap();
+    assert_eq!(y0, y0_fresh, "retired-batcher answer differs from a fresh load");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Warm-load ordering hole (regression): a model cache smaller than the
+/// checkpoint set silently evicts mid-run, so the traffic report must
+/// call it out — nonzero `mid_run_reloads` plus a rendered warning. A
+/// roomy cache on the same traffic stays clean.
+#[test]
+fn traffic_report_flags_mid_run_cache_evictions() {
+    let dir = tmp_dir("thrash");
+    let mut paths = Vec::new();
+    for i in 0..3 {
+        let p = dir.join(format!("m{i}.tenz"));
+        let mut g = GaussianSource::new(60 + i as u64);
+        let mut tf = TensorFile::new();
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 5, 1.0, &mut g)));
+        tf.write(&p).unwrap();
+        paths.push(p);
+    }
+    let config = |cache_capacity| ServeConfig {
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        cache_capacity,
+        ..Default::default()
+    };
+
+    // cache_capacity < paths.len(): round-robin traffic must thrash.
+    let server = Arc::new(Server::new(config(1)));
+    let report = traffic::drive(&server, &paths, 12, 2, 0xcafe).unwrap();
+    assert_eq!(report.failed(), 0);
+    assert!(
+        report.mid_run_reloads > 0,
+        "capacity 1 across 3 checkpoints must reload mid-run"
+    );
+    let warning = report.warm_cache_warning().expect("thrashing run must warn");
+    assert!(warning.contains("mid-run model reload"), "{warning}");
+
+    // Same traffic with room for every model: warm loads only.
+    let roomy = Arc::new(Server::new(config(4)));
+    let clean = traffic::drive(&roomy, &paths, 12, 2, 0xcafe).unwrap();
+    assert_eq!(clean.failed(), 0);
+    assert_eq!(clean.mid_run_reloads, 0, "roomy cache must not reload mid-run");
+    assert!(clean.warm_cache_warning().is_none());
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -1,0 +1,573 @@
+//! Traffic-scenario suite: the open-loop contract of `serve::scenario`.
+//!
+//! What a multi-tenant serving stack must prove before anyone trusts its
+//! numbers, pinned as tests:
+//!
+//! 1. **Determinism** — the planned schedule and the exact multiset of
+//!    request vectors are pure functions of the scenario spec: identical
+//!    across repeated runs, submitter-thread counts, and
+//!    `RSIC_THREADS` settings (property-tested over random specs).
+//! 2. **Bounded overload** — a flood sheds (admission control) instead
+//!    of erroring, locally and through a routed loopback cluster, and
+//!    every offered request is accounted for:
+//!    `completed + shed + errored == offered`, always.
+//! 3. **Fair queueing** — a flooding tenant cannot starve a steady one:
+//!    the steady tenant's p99 under contention stays within a configured
+//!    factor of its solo p99, and it keeps completing.
+//! 4. **Priced degradation** — overflow rerouted to a low-rank sibling
+//!    keeps goodput up, and every degraded answer obeys the paper's
+//!    ‖Δy‖ ≤ ‖W − UVᵀ‖₂·‖x‖₂ bound with the ‖W − UVᵀ‖₂ the compression
+//!    pipeline itself measured.
+//! 5. **Soak** — the degradation-curve sweep the CI `traffic-soak` step
+//!    runs: `RSIC_SOAK_FAST=1` drives ~10⁴ requests; `RSIC_SOAK_REQUESTS`
+//!    scales the same test to 10⁷ without a code change. The curve lands
+//!    in a `SOAK_<date>.json` snapshot via `bench::record`.
+
+use rsi_compress::bench::record::{SoakPoint, SoakRecord};
+use rsi_compress::compress::plan::{CompressionPlan, Method};
+use rsi_compress::compress::rsi::RsiOptions;
+use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+use rsi_compress::io::checkpoint::{store_weight, CheckpointReader, CheckpointSource, StoredWeight};
+use rsi_compress::io::tenz::{TensorEntry, TensorFile};
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::serve::cluster::{
+    checkpoint_identity_hash_of, PlacementMode, PlacementPlan, Router, RouterConfig, Worker,
+    WorkerConfig,
+};
+use rsi_compress::serve::scenario::{degradation_curve, plan, run_scenario, EngineOptions};
+use rsi_compress::serve::{Admission, ScenarioSpec, ServeConfig, Server};
+use rsi_compress::tensor::init::{gaussian, matrix_with_spectrum, SpectrumShape};
+use rsi_compress::testutil::prop::PropRunner;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("traffic_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn row_norm(row: &[f32]) -> f64 {
+    row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+/// Write a dense `c × d` checkpoint (Gaussian weights, zero bias).
+fn write_dense(path: &Path, seed: u64, c: usize, d: usize) {
+    let mut g = GaussianSource::new(seed);
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(c, d, 1.0, &mut g)));
+    tf.insert("head.bias", TensorEntry::from_f32(vec![c], &vec![0.0f32; c]));
+    tf.write(path).unwrap();
+}
+
+/// Accounting invariant every scenario report must satisfy, per tenant
+/// and in total: nothing offered may vanish.
+fn assert_accounted(report: &rsi_compress::serve::ScenarioReport) {
+    assert_eq!(
+        report.completed + report.shed + report.errored,
+        report.offered,
+        "{}: completed {} + shed {} + errored {} != offered {}",
+        report.name,
+        report.completed,
+        report.shed,
+        report.errored,
+        report.offered
+    );
+    for t in &report.tenants {
+        assert_eq!(
+            t.completed + t.shed + t.errored,
+            t.offered,
+            "tenant {}: completed {} + shed {} + errored {} != offered {}",
+            t.tenant,
+            t.completed,
+            t.shed,
+            t.errored,
+            t.offered
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Determinism
+// ---------------------------------------------------------------------------
+
+/// Property (satellite: generator purity): the planned arrival list is a
+/// pure function of `(seed, rates, duration, load_factor)` — re-planning
+/// a freshly re-parsed identical spec reproduces it bit for bit, and the
+/// first-20 prefix (the part a human would eyeball in a golden file) is
+/// stable across calls. Perturbing the seed must change the schedule.
+#[test]
+fn planned_schedules_are_pure_functions_of_the_spec() {
+    PropRunner::new(24).with_seed(0x7261_4666).run("plan purity", |g| {
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let rate = g.f64_in(50.0, 3000.0);
+        let duration = g.f64_in(0.1, 1.5);
+        let kind = *g.choice(&["poisson", "bursty", "diurnal"]);
+        let text = format!(
+            "name = \"prop\"\nseed = {seed}\nduration = {duration}\n\
+             [tenant.a]\nmodels = [\"x.tenz\", \"y.tenz\"]\narrivals = \"{kind}\"\n\
+             rate = {rate}\nzipf = 1.1\n\
+             [tenant.b]\nmodels = [\"y.tenz\"]\nrate = {}\n",
+            g.f64_in(50.0, 1000.0)
+        );
+        let spec = ScenarioSpec::parse(&text).unwrap();
+        let respec = ScenarioSpec::parse(&text).unwrap();
+        let p1 = plan(&spec);
+        let p2 = plan(&respec);
+        assert_eq!(p1, p2, "re-parsed identical spec planned differently");
+        assert_eq!(
+            &p1[..p1.len().min(20)],
+            &p2[..p2.len().min(20)],
+            "first-20 golden prefix drifted"
+        );
+        assert!(p1.windows(2).all(|w| w[0].at <= w[1].at), "plan not time-sorted");
+        assert!(p1.iter().all(|a| a.at >= 0.0 && a.at < duration + 1e-9));
+        // The seed is live: a different master seed reshapes the plan
+        // (vacuous on the rare empty draw, so skip that case).
+        if !p1.is_empty() {
+            let mut reseeded = spec.clone();
+            reseeded.seed ^= 0x5eed;
+            assert_ne!(plan(&reseeded), p1, "plan ignores the scenario seed");
+        }
+    });
+}
+
+/// The plan must not depend on host parallelism knobs. This is the only
+/// test in this binary that reads or writes `RSIC_THREADS` — integration
+/// tests in one binary share a process, so a second env-mutating test
+/// would race this one.
+#[test]
+fn planned_schedules_ignore_rsic_threads() {
+    let spec = ScenarioSpec::parse(
+        "name = \"threads\"\nseed = 11\nduration = 0.8\n\
+         [tenant.a]\nmodels = [\"x.tenz\"]\narrivals = \"bursty\"\nrate = 900.0\n\
+         mean_on = 0.05\nmean_off = 0.05\n",
+    )
+    .unwrap();
+    let saved = std::env::var("RSIC_THREADS").ok();
+    let baseline = plan(&spec);
+    for threads in ["1", "2", "4"] {
+        std::env::set_var("RSIC_THREADS", threads);
+        assert_eq!(
+            plan(&spec),
+            baseline,
+            "RSIC_THREADS={threads} changed the planned schedule"
+        );
+    }
+    match saved {
+        Some(v) => std::env::set_var("RSIC_THREADS", v),
+        None => std::env::remove_var("RSIC_THREADS"),
+    }
+    assert!(!baseline.is_empty());
+}
+
+/// Tentpole determinism proof, end to end: two full scenario runs with
+/// *different submitter-thread counts* submit the exact same multiset of
+/// request vectors — same `vectors_hash`, same offered counts per
+/// tenant — because everything random was fixed at plan time.
+#[test]
+fn scenario_runs_submit_identical_request_multisets_across_thread_counts() {
+    let dir = tmp_dir("determinism");
+    let a = dir.join("a.tenz");
+    let b = dir.join("b.tenz");
+    write_dense(&a, 31, 8, 16);
+    write_dense(&b, 32, 8, 16);
+    let spec = ScenarioSpec::parse(&format!(
+        "name = \"det\"\nseed = 909\nduration = 0.4\n\
+         [tenant.gold]\nmodels = [\"{}\", \"{}\"]\nrate = 300.0\nzipf = 1.2\n\
+         [tenant.free]\nmodels = [\"{}\"]\narrivals = \"diurnal\"\nrate = 200.0\n",
+        a.display(),
+        b.display(),
+        b.display()
+    ))
+    .unwrap();
+    let planned = plan(&spec);
+    assert!(!planned.is_empty());
+
+    let mut reports = Vec::new();
+    for submitters in [2usize, 5] {
+        let server = Arc::new(Server::new(ServeConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        }));
+        let opts = EngineOptions { submitters, max_requests: None };
+        let report = run_scenario(&server, &spec, &opts).unwrap();
+        assert_eq!(report.offered, planned.len());
+        assert_accounted(&report);
+        assert_eq!(report.errored, 0, "determinism run must not error");
+        reports.push(report);
+    }
+    assert_eq!(
+        reports[0].vectors_hash, reports[1].vectors_hash,
+        "2 vs 5 submitter threads changed the request multiset"
+    );
+    for (t0, t1) in reports[0].tenants.iter().zip(&reports[1].tenants) {
+        assert_eq!(t0.tenant, t1.tenant);
+        assert_eq!(t0.offered, t1.offered, "tenant {} offered drifted", t0.tenant);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 2. Overload: bounded shed, zero client-visible errors
+// ---------------------------------------------------------------------------
+
+/// A deliberately slow single-worker server (big dense model) under an
+/// open-loop flood far beyond its drain rate.
+fn overload_spec(model: &Path) -> ScenarioSpec {
+    ScenarioSpec::parse(&format!(
+        "name = \"flood\"\nseed = 77\nduration = 0.25\n\
+         [tenant.flood]\nmodels = [\"{}\"]\narrivals = \"bursty\"\nrate = 20000.0\n\
+         mean_on = 0.2\nmean_off = 0.02\nquota = 32\n",
+        model.display()
+    ))
+    .unwrap()
+}
+
+fn overload_config() -> ServeConfig {
+    ServeConfig {
+        workers: 1,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        max_queue: 256,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn overload_sheds_boundedly_and_never_errors() {
+    let dir = tmp_dir("overload");
+    let model = dir.join("heavy.tenz");
+    write_dense(&model, 41, 512, 1024);
+    let spec = overload_spec(&model);
+    let config = ServeConfig { tenants: spec.tenant_policies(), ..overload_config() };
+    let server = Arc::new(Server::new(config));
+    let report = run_scenario(&server, &spec, &EngineOptions::default()).unwrap();
+    assert_accounted(&report);
+    assert_eq!(report.errored, 0, "overload must shed, not error: {report:?}");
+    assert!(
+        report.shed > 0,
+        "a {}-request flood against a 1-worker server never shed",
+        report.offered
+    );
+    assert!(report.completed > 0, "admission control shed *everything*");
+    // The shed decisions landed in the per-tenant server metrics too.
+    let snap = server.metrics().tenant_snapshots();
+    let flood = snap.iter().find(|t| t.tenant == "flood").expect("flood tenant row");
+    assert!(flood.counters.shed + flood.counters.deadline_shed > 0);
+    assert_eq!(flood.counters.offered as usize, report.offered);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The same flood through a 2-replica loopback cluster: routing must not
+/// turn overload into client-visible failures, and the routed path must
+/// actually carry batches (no silent local fallback).
+#[test]
+fn overload_sheds_boundedly_through_a_routed_cluster() {
+    let dir = tmp_dir("overload_routed");
+    let model = dir.join("heavy.tenz");
+    write_dense(&model, 43, 512, 1024);
+
+    let src = CheckpointSource::open(&model).unwrap();
+    let hash = checkpoint_identity_hash_of(&src);
+    let mut placement = PlacementPlan::build(
+        &src,
+        model.to_str().unwrap(),
+        hash,
+        PlacementMode::Replica,
+        &[String::new(), String::new()],
+    )
+    .unwrap();
+    let mut fleet = Vec::new();
+    for i in 0..placement.workers.len() {
+        let mut cfg = WorkerConfig::new("127.0.0.1:0", placement.clone(), i);
+        cfg.threads = 2;
+        let h = Worker::spawn(cfg).unwrap();
+        placement.workers[i].addr = h.addr().to_string();
+        fleet.push(h);
+    }
+    let router = Arc::new(Router::new(placement, RouterConfig::default()));
+
+    let spec = overload_spec(&model);
+    let config = ServeConfig { tenants: spec.tenant_policies(), ..overload_config() };
+    let server = Arc::new(Server::with_router(config, Some(router)));
+    let report = run_scenario(&server, &spec, &EngineOptions::default()).unwrap();
+    assert_accounted(&report);
+    assert_eq!(report.errored, 0, "routed overload must shed, not error: {report:?}");
+    assert!(report.shed > 0, "routed flood never shed");
+    assert!(report.completed > 0, "routed admission shed everything");
+    assert!(
+        server.metrics().routed_batches.load(Ordering::Relaxed) > 0,
+        "no batch ever took the wire — the routed overload test measured local serving"
+    );
+    drop(fleet);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 3. Fair queueing
+// ---------------------------------------------------------------------------
+
+/// A flooding tenant must not starve a steady one: with DRR weights the
+/// steady tenant keeps completing, and its p99 under contention stays
+/// within a generous configured factor of its solo p99 (floored — CI
+/// boxes are noisy at sub-10ms scales).
+#[test]
+fn fair_queueing_bounds_cross_tenant_p99_inflation() {
+    let dir = tmp_dir("fairness");
+    let model = dir.join("shared.tenz");
+    // Heavy enough that one batch costs milliseconds: the flood tenant
+    // must genuinely outrun the drain or its quota never overflows.
+    write_dense(&model, 51, 512, 1024);
+
+    let steady_toml = format!(
+        "[tenant.steady]\nmodels = [\"{}\"]\nrate = 200.0\nweight = 8\ndeadline_ms = 500.0\n",
+        model.display()
+    );
+    let flood_toml = format!(
+        "[tenant.zflood]\nmodels = [\"{}\"]\nrate = 12000.0\nquota = 64\nweight = 1\n",
+        model.display()
+    );
+    let solo = ScenarioSpec::parse(&format!(
+        "name = \"solo\"\nseed = 500\nduration = 0.4\n{steady_toml}"
+    ))
+    .unwrap();
+    let mixed = ScenarioSpec::parse(&format!(
+        "name = \"contended\"\nseed = 500\nduration = 0.4\n{steady_toml}{flood_toml}"
+    ))
+    .unwrap();
+    let config = |spec: &ScenarioSpec| ServeConfig {
+        workers: 2,
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+        max_queue: 512,
+        tenants: spec.tenant_policies(),
+        ..Default::default()
+    };
+
+    let solo_server = Arc::new(Server::new(config(&solo)));
+    let solo_report = run_scenario(&solo_server, &solo, &EngineOptions::default()).unwrap();
+    assert_accounted(&solo_report);
+    let solo_steady = &solo_report.tenants[0];
+    assert_eq!(solo_steady.tenant, "steady");
+    assert_eq!(solo_steady.errored, 0);
+    assert_eq!(solo_steady.shed, 0, "steady tenant alone must never shed");
+
+    let mixed_server = Arc::new(Server::new(config(&mixed)));
+    let mixed_report = run_scenario(&mixed_server, &mixed, &EngineOptions::default()).unwrap();
+    assert_accounted(&mixed_report);
+    let steady = mixed_report.tenants.iter().find(|t| t.tenant == "steady").unwrap();
+    let flood = mixed_report.tenants.iter().find(|t| t.tenant == "zflood").unwrap();
+    assert_eq!(steady.errored, 0);
+    assert!(flood.shed > 0, "the flood tenant was supposed to overflow its quota");
+    // The steady tenant keeps completing: the flood's quota plus DRR
+    // weight 8:1 keep its queue moving.
+    assert!(
+        steady.completed as f64 >= 0.95 * steady.offered as f64,
+        "steady tenant completed only {}/{} under contention",
+        steady.completed,
+        steady.offered
+    );
+    // p99 isolation: within 10× of solo, floored at 250ms of absolute
+    // headroom so machine noise can't flake the gate.
+    let ceiling = (10.0 * solo_steady.p99).max(0.25);
+    assert!(
+        steady.p99 <= ceiling,
+        "fair queueing failed: steady p99 {:.4}s vs solo {:.4}s (ceiling {:.4}s)",
+        steady.p99,
+        solo_steady.p99,
+        ceiling
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 4. Degradation: goodput preserved, error priced by the spectral bound
+// ---------------------------------------------------------------------------
+
+/// Overflow rerouted to the compressed sibling keeps goodput ≥ 95% while
+/// every degraded answer stays within ‖W − UVᵀ‖₂·‖x‖₂ of the dense one —
+/// with ‖W − UVᵀ‖₂ taken from the compression pipeline's own validation
+/// report, exactly how an operator would price the degrade tier.
+#[test]
+fn degradation_keeps_goodput_and_respects_the_spectral_bound() {
+    let dir = tmp_dir("degrade");
+    let dense_path = dir.join("dense.tenz");
+    let sibling_path = dir.join("sibling.tenz");
+    let (c, d) = (24usize, 36usize);
+    let mut g = GaussianSource::new(61);
+    let spec_vals = SpectrumShape::pretrained_like().values(c);
+    let w = matrix_with_spectrum(c, d, &spec_vals, &mut g);
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "head", &StoredWeight::Dense(w));
+    tf.write(&dense_path).unwrap();
+
+    let pipe =
+        Pipeline::new(PipelineConfig { workers: 2, validate: true, ..Default::default() }).unwrap();
+    let plan_cfg = CompressionPlan::uniform_alpha(0.3, Method::Rsi(RsiOptions::with_q(2, 7)));
+    let src = Arc::new(CheckpointReader::open(&dense_path).unwrap());
+    let report = pipe.compress_to_path(src, &plan_cfg, &sibling_path).unwrap();
+    let err = report.outcomes[0].spectral_error.expect("validation on");
+    assert!(err > 0.0);
+
+    // quota 0 = no queue for this tenant: every request takes the
+    // degrade rung, so the bound check below sees only sibling answers.
+    let scenario = ScenarioSpec::parse(&format!(
+        "name = \"degrade\"\nseed = 88\nduration = 0.3\n\
+         [tenant.gold]\nmodels = [\"{}\"]\nrate = 400.0\nquota = 0\ndegrade_to = \"{}\"\n",
+        dense_path.display(),
+        sibling_path.display()
+    ))
+    .unwrap();
+    let server = Arc::new(Server::new(ServeConfig {
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        tenants: scenario.tenant_policies(),
+        ..Default::default()
+    }));
+
+    // Direct bound check on the admission ladder itself.
+    for trial in 0..8u64 {
+        let mut x = vec![0f32; d];
+        GaussianSource::new(1000 + trial).fill_f32(&mut x);
+        let sub = server.submit_tenant(&dense_path, "gold", x.clone()).unwrap();
+        assert_eq!(sub.outcome, Admission::Degraded, "quota 0 must force the degrade rung");
+        let y_deg = sub.response.wait().unwrap();
+        let y_dense = server.infer(&dense_path, x.clone()).unwrap();
+        let diff: Vec<f32> = y_dense.iter().zip(&y_deg).map(|(a, b)| a - b).collect();
+        let lhs = row_norm(&diff);
+        let bound = err * row_norm(&x);
+        assert!(
+            lhs <= bound * 1.05 + 1e-6,
+            "trial {trial}: degraded answer off by {lhs} > ‖W−UVᵀ‖₂·‖x‖₂ = {bound}"
+        );
+    }
+
+    // And the open-loop run: all-degraded traffic still lands ≥ 95%
+    // goodput — degrade-to-sibling is serving, not shedding.
+    let scenario_report = run_scenario(&server, &scenario, &EngineOptions::default()).unwrap();
+    assert_accounted(&scenario_report);
+    assert_eq!(scenario_report.errored, 0);
+    assert!(scenario_report.degraded > 0, "nothing degraded: {scenario_report:?}");
+    assert!(
+        scenario_report.completed as f64 >= 0.95 * scenario_report.offered as f64,
+        "degraded goodput collapsed: {}/{}",
+        scenario_report.completed,
+        scenario_report.offered
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 5. Soak: the CI-gated degradation curve
+// ---------------------------------------------------------------------------
+
+/// How many requests the soak drives per curve point:
+/// `RSIC_SOAK_REQUESTS=<n>` wins (scale to 10⁷ without a code change),
+/// else `RSIC_SOAK_FAST=1` means the CI size (10⁴), else a small default
+/// so plain `cargo test` stays quick.
+fn soak_requests() -> (usize, bool) {
+    if let Ok(v) = std::env::var("RSIC_SOAK_REQUESTS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return (n.max(100), true);
+        }
+    }
+    if std::env::var("RSIC_SOAK_FAST").map(|v| v == "1").unwrap_or(false) {
+        return (10_000, true);
+    }
+    (2_000, false)
+}
+
+#[test]
+fn soak_records_a_degradation_curve() {
+    let dir = tmp_dir("soak");
+    let dense_path = dir.join("dense.tenz");
+    let sibling_path = dir.join("sibling.tenz");
+    write_dense(&dense_path, 71, 64, 128);
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+    let plan_cfg = CompressionPlan::uniform_alpha(0.25, Method::Rsi(RsiOptions::with_q(2, 7)));
+    let src = Arc::new(CheckpointReader::open(&dense_path).unwrap());
+    pipe.compress_to_path(src, &plan_cfg, &sibling_path).unwrap();
+
+    let (requests, export) = soak_requests();
+    // Rate × duration ≈ the request target at factor 1; higher factors
+    // offer more and get truncated by `max_requests`, so every point
+    // drives a comparable request count at a hotter instantaneous rate.
+    let duration = 1.0f64;
+    let rate = requests as f64 / duration;
+    let spec = ScenarioSpec::parse(&format!(
+        "name = \"soak\"\nseed = 4242\nduration = {duration}\n\
+         [tenant.gold]\nmodels = [\"{}\"]\nrate = {rate}\nquota = 128\n\
+         weight = 4\ndeadline_ms = 400.0\ndegrade_to = \"{}\"\n\
+         [tenant.free]\nmodels = [\"{}\"]\narrivals = \"bursty\"\nrate = {}\n\
+         mean_on = 0.1\nmean_off = 0.1\nquota = 64\n",
+        dense_path.display(),
+        sibling_path.display(),
+        sibling_path.display(),
+        rate / 2.0
+    ))
+    .unwrap();
+
+    let config = ServeConfig {
+        workers: 2,
+        max_batch: 32,
+        max_wait: Duration::from_millis(1),
+        max_queue: 1024,
+        tenants: spec.tenant_policies(),
+        ..Default::default()
+    };
+    let opts = EngineOptions { submitters: 4, max_requests: Some(requests) };
+    let factors = [1.0f64, 4.0];
+    let curve = degradation_curve(
+        || Arc::new(Server::new(config.clone())),
+        &spec,
+        &factors,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(curve.len(), factors.len());
+
+    let mut points = Vec::new();
+    for (factor, report) in &curve {
+        assert_accounted(report);
+        assert_eq!(
+            report.errored, 0,
+            "soak point ×{factor} saw client-visible errors: {report:?}"
+        );
+        assert!(report.completed > 0, "soak point ×{factor} completed nothing");
+        points.push(SoakPoint {
+            factor: *factor,
+            offered_per_s: report.offered_per_sec(),
+            goodput_per_s: report.goodput_per_sec(),
+            p50_ms: report.p50 * 1e3,
+            p99_ms: report.p99 * 1e3,
+            shed_rate: report.shed_rate(),
+            degraded_rate: report.degraded_rate(),
+        });
+    }
+
+    // The snapshot round-trips through the strict hand-rolled JSON and
+    // lands where `bench::record` keeps the perf trajectory — next to
+    // BENCH_<date>.json, where the CI soak step uploads it from.
+    let record = SoakRecord {
+        date: rsi_compress::bench::record::today_utc(),
+        git_rev: rsi_compress::bench::record::git_rev(),
+        scenario: spec.name.clone(),
+        fast: true,
+        points,
+    };
+    let back = SoakRecord::from_json(&record.to_json()).unwrap();
+    assert_eq!(back, record, "SOAK json round-trip drifted");
+    let out_dir =
+        if export { rsi_compress::bench::record::bench_dir() } else { dir.clone() };
+    let written = record.write_to(&out_dir).unwrap();
+    assert!(written.exists());
+    let (latest_path, latest) =
+        SoakRecord::latest_in(&out_dir, true).expect("just-written soak snapshot");
+    assert_eq!(latest.points.len(), record.points.len());
+    println!("soak curve recorded → {}", latest_path.display());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
