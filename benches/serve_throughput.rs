@@ -112,6 +112,25 @@ fn run_traffic_routed(path: &Path, requests: usize, clients: usize) -> anyhow::R
     Ok(report.goodput_per_sec())
 }
 
+/// The obs-overhead gate: goodput with instrumentation off vs on over
+/// the same checkpoint, interleaved (off, on, off, on, …) so clock or
+/// thermal drift hits both sides equally, median of 3 each. Returns
+/// `(off, on, overhead_pct)`; leaves obs disabled.
+fn obs_overhead(path: &Path, requests: usize, clients: usize) -> anyhow::Result<(f64, f64, f64)> {
+    let mut off = Vec::with_capacity(3);
+    let mut on = Vec::with_capacity(3);
+    for _ in 0..3 {
+        rsi_compress::obs::set_enabled(false);
+        off.push(run_traffic(path, requests, clients)?);
+        rsi_compress::obs::set_enabled(true);
+        on.push(run_traffic(path, requests, clients)?);
+    }
+    rsi_compress::obs::set_enabled(false);
+    off.sort_by(f64::total_cmp);
+    on.sort_by(f64::total_cmp);
+    Ok((off[1], on[1], (off[1] - on[1]) / off[1] * 100.0))
+}
+
 fn main() -> anyhow::Result<()> {
     let fast = std::env::var("RSIC_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
     let shapes: Vec<(usize, usize)> =
@@ -143,6 +162,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut best_speedup = 0.0f64;
     let mut recorded: Vec<BenchRow> = Vec::new();
+    let mut overhead_ckpt: Option<std::path::PathBuf> = None;
     for (c, d) in shapes {
         println!("== {c}x{d}, {requests} requests, {clients} clients ==");
         let mut g = GaussianSource::new((c * 31 + d) as u64);
@@ -155,6 +175,7 @@ fn main() -> anyhow::Result<()> {
         tf.insert("head.bias", TensorEntry::from_f32(vec![c], &bias));
         let dense_path = dir.join(format!("dense_{c}x{d}.tenz"));
         tf.write(&dense_path)?;
+        overhead_ckpt.get_or_insert_with(|| dense_path.clone());
 
         let dense_rps = run_traffic(&dense_path, requests, clients)?;
         let dense_routed = run_traffic_routed(&dense_path, requests, clients)?;
@@ -249,6 +270,31 @@ fn main() -> anyhow::Result<()> {
     println!("{}", table.render());
     write_report("reports/serve_throughput.csv", &table.to_csv())?;
     println!("wrote reports/serve_throughput.csv (best factored speedup {best_speedup:.2}×)");
+
+    // Obs-overhead gate (the PR-8 ≤2% budget): full instrumentation may
+    // not meaningfully slow serving, and disabled instrumentation is one
+    // relaxed atomic load. The instrumented runs double as the trace-
+    // artifact source for CI.
+    let overhead_path = overhead_ckpt.expect("at least one shape ran");
+    let (off_rps, on_rps, overhead_pct) = obs_overhead(&overhead_path, requests, clients)?;
+    println!("obs overhead: {off_rps:.0} req/s off vs {on_rps:.0} req/s on ({overhead_pct:+.2}%)");
+    let bench_dir = record::bench_dir();
+    std::fs::create_dir_all(&bench_dir)?;
+    let trace_path = bench_dir.join(format!("TRACE_{}.json", record::today_utc()));
+    let spans = rsi_compress::obs::span::write_trace(&trace_path)?;
+    println!("wrote {spans} trace events → {}", trace_path.display());
+    let max_pct = std::env::var("RSIC_OBS_OVERHEAD_MAX_PCT")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(2.0);
+    if overhead_pct > max_pct {
+        let msg =
+            format!("instrumentation overhead {overhead_pct:.2}% exceeds the {max_pct}% budget");
+        if record::enforce() {
+            anyhow::bail!("{msg}");
+        }
+        println!("WARNING: {msg} (set RSIC_BENCH_ENFORCE=1 to fail on this)");
+    }
     let _ = std::fs::remove_dir_all(&dir);
 
     // Perf trajectory: compare against the last matching snapshot, then
@@ -259,7 +305,6 @@ fn main() -> anyhow::Result<()> {
         fast,
         rows: recorded,
     };
-    let bench_dir = record::bench_dir();
     let baseline = BenchRecord::latest_in(&bench_dir, fast);
     let snap_path = snapshot.write_to(&bench_dir)?;
     println!("recorded perf snapshot → {}", snap_path.display());

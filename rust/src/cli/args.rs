@@ -1,7 +1,9 @@
 //! Minimal CLI argument parser (clap is not in the offline crate universe).
 //!
 //! Supports: positional arguments, `--flag`, `--key value` / `--key=value`,
-//! repeated keys, and typed getters with defaults.
+//! short-flag clusters (`-v`, `-vv`, `-q` — alphabetic only, so negative
+//! numbers stay positional), repeated keys, and typed getters with
+//! defaults.
 
 use std::collections::HashMap;
 use thiserror::Error;
@@ -42,6 +44,16 @@ impl Args {
                         out.flags.push(rest.to_string());
                     }
                 }
+            } else if tok.len() > 1
+                && tok.starts_with('-')
+                && tok[1..].chars().all(|c| c.is_ascii_alphabetic())
+            {
+                // Short-flag cluster: `-v` → v, `-vv` → v v, `-qv` → q v.
+                // Anything non-alphabetic after the dash (`-3`, `-0.5`)
+                // stays positional.
+                for c in tok[1..].chars() {
+                    out.flags.push(c.to_string());
+                }
             } else {
                 out.positional.push(tok);
             }
@@ -55,6 +67,11 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// How many times a flag was given (`-vv` or `-v -v` → 2).
+    pub fn flag_count(&self, name: &str) -> usize {
+        self.flags.iter().filter(|f| *f == name).count()
     }
 
     pub fn opt(&self, name: &str) -> Option<&str> {
@@ -193,5 +210,26 @@ mod tests {
         let a = parse("cmd --fast");
         assert!(a.flag("fast"));
         assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn short_flag_clusters() {
+        let a = parse("serve -vv -q m.tenz");
+        assert_eq!(a.flag_count("v"), 2);
+        assert_eq!(a.flag_count("q"), 1);
+        assert!(a.flag("v"));
+        assert_eq!(a.positional, vec!["serve", "m.tenz"]);
+        let b = parse("-v -v");
+        assert_eq!(b.flag_count("v"), 2);
+    }
+
+    #[test]
+    fn negative_numbers_stay_positional() {
+        let a = parse("shift -3 -0.5 -x2");
+        assert_eq!(a.positional, vec!["shift", "-3", "-0.5", "-x2"]);
+        assert_eq!(a.flag_count("v"), 0);
+        // A bare dash is positional too (stdin convention).
+        let b = parse("-");
+        assert_eq!(b.positional, vec!["-"]);
     }
 }

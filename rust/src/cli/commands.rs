@@ -43,6 +43,8 @@ USAGE:
                 [--batch B] [--wait-ms MS] [--workers W] [--queue-depth Q]
                 [--max-queue N] [--cache-cap K] [--verify]
                 [--plan plan.toml]            # route batches to cluster workers
+                [--metrics-addr HOST:PORT]    # Prometheus-style /metrics endpoint
+                [--trace-out F.json]          # Chrome trace-event dump at exit
   rsic traffic  --scenario f.toml [--load-factor X] [--curve 1,2,4,8] [--max-requests N]
                 [--submitters S] [--batch B] [--wait-ms MS] [--workers W]
                 [--queue-depth Q] [--max-queue N] [--cache-cap K] [--verify]
@@ -62,11 +64,18 @@ USAGE:
 Backends: native (default), xla (stepped Pallas artifacts), fused.
 Checkpoint paths (--checkpoint / --out) take either a single .tenz file or a
 sharded checkpoint's .toml manifest, transparently.
+Logging: --log-level off|error|warn|info|debug|trace, or -v/-vv (louder) and
+-q/-qq (quieter) from the info baseline; $RSIC_LOG sets the default.
+Observability: RSIC_OBS=1 (or --metrics-addr / --trace-out on serve) turns on
+request tracing, per-layer kernel timing, and the flight recorder.
 Run `make artifacts` before any command that touches models or XLA.";
 
 /// Entry point used by main.rs. Returns the process exit code.
 pub fn run(args: Args) -> Result<()> {
-    crate::util::logging::init(None);
+    crate::util::logging::init(log_level_of(&args)?);
+    if std::env::var("RSIC_OBS").is_ok_and(|v| v == "1") {
+        crate::obs::set_enabled(true);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "compress" => cmd_compress(&args),
@@ -88,6 +97,33 @@ pub fn run(args: Args) -> Result<()> {
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Resolve the log level from the CLI: explicit `--log-level` wins;
+/// otherwise each `-v` raises and each `-q` lowers verbosity from the
+/// Info baseline. `None` defers to `$RSIC_LOG` inside `logging::init`.
+fn log_level_of(args: &Args) -> Result<Option<log::LevelFilter>> {
+    use log::LevelFilter;
+    if let Some(s) = args.opt("log-level") {
+        let (lvl, known) = crate::util::logging::parse_level_checked(s);
+        anyhow::ensure!(known, "bad --log-level {s:?} (off|error|warn|info|debug|trace)");
+        return Ok(Some(lvl));
+    }
+    let v = args.flag_count("v");
+    let q = args.flag_count("q");
+    if v == 0 && q == 0 {
+        return Ok(None);
+    }
+    const LADDER: [LevelFilter; 6] = [
+        LevelFilter::Off,
+        LevelFilter::Error,
+        LevelFilter::Warn,
+        LevelFilter::Info,
+        LevelFilter::Debug,
+        LevelFilter::Trace,
+    ];
+    let rank = (3 + v as i64 - q as i64).clamp(0, 5) as usize;
+    Ok(Some(LADDER[rank]))
 }
 
 fn backend_of(args: &Args) -> Result<BackendKind> {
@@ -301,12 +337,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!(
             "usage: rsic serve --checkpoint model.tenz [--checkpoint more.tenz] \
              [--requests N] [--clients C] [--batch B] [--wait-ms MS] [--workers W] \
-             [--queue-depth Q] [--max-queue N] [--cache-cap K] [--verify] [--plan plan.toml]"
+             [--queue-depth Q] [--max-queue N] [--cache-cap K] [--verify] [--plan plan.toml] \
+             [--metrics-addr HOST:PORT] [--trace-out F.json]"
         );
     }
     let requests = args.usize_or("requests", 256)?;
     let clients = args.usize_or("clients", 4)?.max(1);
     let seed = args.u64_or("seed", 42)?;
+    // Either observability surface implies instrumentation on; flip the
+    // global switch before any model loads so warm-up traffic is traced
+    // too, and arm the flight recorder's postmortem dumps.
+    let metrics_addr = args.opt("metrics-addr").map(str::to_string);
+    let trace_out = args.opt("trace-out").map(std::path::PathBuf::from);
+    if metrics_addr.is_some() || trace_out.is_some() {
+        crate::obs::set_enabled(true);
+    }
+    if crate::obs::enabled() {
+        crate::obs::recorder::configure(
+            crate::obs::recorder::DEFAULT_CAPACITY,
+            Some(".".into()),
+            crate::obs::recorder::DEFAULT_COOLDOWN,
+        );
+    }
     let config = ServeConfig {
         max_batch: args.usize_or("batch", 32)?.max(1),
         max_wait: Duration::from_secs_f64(args.f64_or("wait-ms", 2.0)?.max(0.0) / 1e3),
@@ -315,6 +367,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queue: args.usize_or("max-queue", 8192)?,
         cache_capacity: args.usize_or("cache-cap", 4)?,
         verify: args.flag("verify"),
+        ..Default::default()
     };
     let router = match args.opt("plan") {
         Some(plan_path) => {
@@ -339,6 +392,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let server = Arc::new(Server::with_router(config, router.clone()));
+    let metrics_endpoint = match &metrics_addr {
+        Some(addr) => {
+            let ep = crate::obs::endpoint::MetricsServer::spawn(addr, server.clone())
+                .with_context(|| format!("binding metrics endpoint on {addr}"))?;
+            println!("metrics endpoint listening on http://{}/metrics", ep.addr());
+            Some(ep)
+        }
+        None => None,
+    };
     let paths: Vec<std::path::PathBuf> = ckpts.into_iter().map(std::path::PathBuf::from).collect();
     // Routing matches checkpoint paths *as given*: if the plan names the
     // checkpoint differently (./m.tenz vs m.tenz), every batch would
@@ -405,6 +467,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.req_per_sec(),
         report.goodput_per_sec()
     );
+    // Scrape window is over; stop the endpoint, quiesce the server (its
+    // batcher threads flush their span buffers on exit), then dump the
+    // trace.
+    drop(metrics_endpoint);
+    drop(server);
+    if let Some(path) = &trace_out {
+        let n = crate::obs::span::write_trace(path)
+            .with_context(|| format!("writing trace {}", path.display()))?;
+        println!("wrote {n} trace events → {}", path.display());
+    }
     Ok(())
 }
 
@@ -772,6 +844,25 @@ mod tests {
     fn help_is_ok() {
         let args = Args::parse(["help".to_string()]);
         run(args).unwrap();
+    }
+
+    #[test]
+    fn log_level_resolution() {
+        use log::LevelFilter;
+        let parse = |s: &str| Args::parse(s.split_whitespace().map(|t| t.to_string()));
+        // No flags: defer to $RSIC_LOG / Info inside init.
+        assert_eq!(log_level_of(&parse("serve")).unwrap(), None);
+        assert_eq!(log_level_of(&parse("serve -v")).unwrap(), Some(LevelFilter::Debug));
+        assert_eq!(log_level_of(&parse("serve -vv")).unwrap(), Some(LevelFilter::Trace));
+        assert_eq!(log_level_of(&parse("serve -q")).unwrap(), Some(LevelFilter::Warn));
+        assert_eq!(log_level_of(&parse("serve -qqq")).unwrap(), Some(LevelFilter::Off));
+        // Explicit --log-level beats the flags; unknown names are refused
+        // loudly, not degraded to Info.
+        assert_eq!(
+            log_level_of(&parse("serve -vv --log-level error")).unwrap(),
+            Some(LevelFilter::Error)
+        );
+        assert!(log_level_of(&parse("serve --log-level loud")).is_err());
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub mod eval;
 pub mod io;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod rng;
 pub mod runtime;

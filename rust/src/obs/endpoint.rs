@@ -1,0 +1,399 @@
+//! `rsic serve --metrics-addr ADDR`: the Prometheus scrape endpoint.
+//!
+//! A plain `std::net` TCP listener (the offline crate universe has no
+//! HTTP stack) answering `GET /metrics` with the text exposition built
+//! by [`gather`]. The request reader follows the wire codec's
+//! declared-size discipline: the head is capped at
+//! [`MAX_REQUEST_BYTES`] before anything is parsed, reads carry
+//! timeouts, and every malformed request gets a typed status line, not
+//! a hang or a panic. Shutdown uses the cluster worker's wake-by-
+//! connect idiom so `Drop` never blocks on a sleeping `accept`.
+
+use super::expo::Expo;
+use crate::serve::server::Server;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Cap on one scrape request's head (request line + headers). Scrapers
+/// send a few hundred bytes; anything larger is junk traffic.
+pub const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Per-connection read/write timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A running scrape endpoint; dropping it stops the listener thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve scrapes of `server`'s
+    /// metrics until shutdown.
+    pub fn spawn(addr: &str, server: Arc<Server>) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("rsic-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => handle_conn(stream, &server),
+                        Err(e) => log::debug!("metrics accept failed: {e}"),
+                    }
+                }
+            })?;
+        log::info!("metrics endpoint listening on {addr}");
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread and wait for it to exit.
+    pub fn shutdown(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            // Wake the blocking accept with a throwaway connection (the
+            // cluster worker's shutdown idiom).
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read the request head (≤ [`MAX_REQUEST_BYTES`], up to the blank
+/// line) and answer it.
+fn handle_conn(mut stream: TcpStream, server: &Server) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut head = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.windows(2).any(|w| w == b"\n\n") {
+            break;
+        }
+        if head.len() >= MAX_REQUEST_BYTES {
+            respond(&mut stream, "431 Request Header Fields Too Large", "request too large\n");
+            // Drain (bounded) what the client already sent: closing
+            // with unread bytes in the receive buffer sends RST, which
+            // can destroy the response before the client reads it.
+            let mut sink = [0u8; 1024];
+            for _ in 0..64 {
+                match stream.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&chunk[..n]),
+            Err(_) => return,
+        }
+    }
+    let head = String::from_utf8_lossy(&head);
+    match route(&head) {
+        Route::Metrics => {
+            let body = gather(server);
+            let mut out = String::with_capacity(body.len() + 128);
+            out.push_str("HTTP/1.1 200 OK\r\n");
+            out.push_str("Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n");
+            out.push_str(&format!("Content-Length: {}\r\n", body.len()));
+            out.push_str("Connection: close\r\n\r\n");
+            out.push_str(&body);
+            let _ = stream.write_all(out.as_bytes());
+        }
+        Route::NotFound => respond(&mut stream, "404 Not Found", "try /metrics\n"),
+        Route::BadMethod => respond(&mut stream, "405 Method Not Allowed", "GET only\n"),
+        Route::Malformed => respond(&mut stream, "400 Bad Request", "malformed request\n"),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: &str, body: &str) {
+    let out = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(out.as_bytes());
+}
+
+#[derive(Debug, PartialEq, Eq)]
+enum Route {
+    Metrics,
+    NotFound,
+    BadMethod,
+    Malformed,
+}
+
+/// Dispatch on the request line. Strict like the wire codec: exactly
+/// `GET <path> HTTP/…` routes; everything else is a typed refusal.
+fn route(head: &str) -> Route {
+    let line = head.lines().next().unwrap_or("");
+    let mut parts = line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if parts.next().is_none() => (m, p, v),
+        _ => return Route::Malformed,
+    };
+    if !version.starts_with("HTTP/") {
+        return Route::Malformed;
+    }
+    if method != "GET" {
+        return Route::BadMethod;
+    }
+    match path {
+        "/metrics" | "/" => Route::Metrics,
+        _ => Route::NotFound,
+    }
+}
+
+/// Render one scrape body: every `ServeMetrics` counter, gauge, and
+/// quantile, the model-cache stats, per-tenant admission rows, the
+/// per-layer GEMM histograms, obs bookkeeping, and — when the server
+/// routes to a fleet — per-worker series from the cluster `Stats`
+/// exchange, labeled by worker index.
+pub fn gather(server: &Server) -> String {
+    let m = server.metrics();
+    let load = |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed) as f64;
+    let mut e = Expo::new();
+
+    e.header("rsic_requests_total", "counter", "Requests accepted into a batcher queue.");
+    e.sample("rsic_requests_total", &[], load(&m.requests));
+    e.header("rsic_responses_total", "counter", "Requests answered with an output vector.");
+    e.sample("rsic_responses_total", &[], load(&m.responses));
+    e.header("rsic_rejected_total", "counter", "Requests refused up front.");
+    e.sample("rsic_rejected_total", &[], load(&m.rejected));
+    e.header("rsic_shed_total", "counter", "Requests shed by admission control.");
+    e.sample("rsic_shed_total", &[], load(&m.shed));
+    e.header("rsic_batches_total", "counter", "Batched GEMM passes executed.");
+    e.sample("rsic_batches_total", &[], load(&m.batches));
+    e.header("rsic_batched_inputs_total", "counter", "Total inputs across executed batches.");
+    e.sample("rsic_batched_inputs_total", &[], load(&m.batched_inputs));
+    e.header("rsic_routed_batches_total", "counter", "Batches answered by a cluster worker.");
+    e.sample("rsic_routed_batches_total", &[], load(&m.routed_batches));
+    e.header("rsic_failovers_total", "counter", "Routed batches that fell back to local.");
+    e.sample("rsic_failovers_total", &[], load(&m.failovers));
+    e.header("rsic_batch_occupancy_mean", "gauge", "Mean inputs per executed batch.");
+    e.sample("rsic_batch_occupancy_mean", &[], m.mean_occupancy());
+
+    let cache = server.cache();
+    let (hits, misses) = cache.stats();
+    e.header("rsic_model_cache_hits_total", "counter", "Model cache hits.");
+    e.sample("rsic_model_cache_hits_total", &[], hits as f64);
+    e.header("rsic_model_cache_misses_total", "counter", "Model cache misses.");
+    e.sample("rsic_model_cache_misses_total", &[], misses as f64);
+    e.header("rsic_model_cache_evictions_total", "counter", "Model cache evictions.");
+    e.sample("rsic_model_cache_evictions_total", &[], cache.evictions() as f64);
+    e.header("rsic_model_cache_entries", "gauge", "Models resident in the cache.");
+    e.sample("rsic_model_cache_entries", &[], cache.len() as f64);
+    e.header("rsic_model_cache_capacity", "gauge", "Model cache capacity.");
+    e.sample("rsic_model_cache_capacity", &[], cache.capacity() as f64);
+
+    e.header("rsic_latency_seconds", "gauge", "Request latency quantiles (enqueue to reply).");
+    let lq = m.latency_quantiles();
+    e.sample("rsic_latency_seconds", &[("quantile", "0.5")], lq.p50);
+    e.sample("rsic_latency_seconds", &[("quantile", "0.99")], lq.p99);
+    e.sample("rsic_latency_seconds", &[("quantile", "max")], lq.max);
+    e.header("rsic_latency_seconds_count", "counter", "Requests in the latency ledger.");
+    e.sample("rsic_latency_seconds_count", &[], lq.n as f64);
+    e.header("rsic_model_latency_seconds", "gauge", "Per-model request latency quantiles.");
+    let per_model = m.model_quantiles();
+    for (model, lq) in &per_model {
+        e.sample("rsic_model_latency_seconds", &[("model", model), ("quantile", "0.5")], lq.p50);
+        e.sample("rsic_model_latency_seconds", &[("model", model), ("quantile", "0.99")], lq.p99);
+    }
+    e.header("rsic_model_latency_seconds_count", "counter", "Per-model recorded requests.");
+    for (model, lq) in &per_model {
+        e.sample("rsic_model_latency_seconds_count", &[("model", model)], lq.n as f64);
+    }
+
+    let tenants = m.tenant_snapshots();
+    if !tenants.is_empty() {
+        e.header("rsic_tenant_requests_total", "counter", "Per-tenant admission outcomes.");
+        for t in &tenants {
+            let name = t.tenant.as_str();
+            let c = &t.counters;
+            for (outcome, v) in [
+                ("offered", c.offered),
+                ("admitted", c.admitted),
+                ("degraded", c.degraded),
+                ("shed", c.shed),
+                ("deadline_shed", c.deadline_shed),
+            ] {
+                e.sample(
+                    "rsic_tenant_requests_total",
+                    &[("tenant", name), ("outcome", outcome)],
+                    v as f64,
+                );
+            }
+        }
+        e.header("rsic_tenant_latency_seconds", "gauge", "Per-tenant latency quantiles.");
+        for t in &tenants {
+            let name = t.tenant.as_str();
+            let labels = |q: &'static str| [("tenant", name), ("quantile", q)];
+            e.sample("rsic_tenant_latency_seconds", &labels("0.5"), t.latency.p50);
+            e.sample("rsic_tenant_latency_seconds", &labels("0.99"), t.latency.p99);
+        }
+        e.header("rsic_tenant_slo_seconds", "gauge", "Per-tenant p99 SLO target.");
+        for t in &tenants {
+            if let Some(slo) = t.slo_secs {
+                e.sample("rsic_tenant_slo_seconds", &[("tenant", t.tenant.as_str())], slo);
+            }
+        }
+    }
+
+    let layers = super::layers::snapshot();
+    if !layers.is_empty() {
+        e.header("rsic_layer_gemm_seconds", "histogram", "Per-layer GEMM call latency.");
+        for (layer, st) in &layers {
+            let mut cum = 0u64;
+            for (i, &bound_us) in super::layers::BUCKET_BOUNDS_US.iter().enumerate() {
+                cum += st.buckets[i];
+                let le = format!("{}", bound_us as f64 / 1e6);
+                e.sample(
+                    "rsic_layer_gemm_seconds_bucket",
+                    &[("layer", layer), ("le", &le)],
+                    cum as f64,
+                );
+            }
+            e.sample(
+                "rsic_layer_gemm_seconds_bucket",
+                &[("layer", layer), ("le", "+Inf")],
+                st.calls as f64,
+            );
+            e.sample("rsic_layer_gemm_seconds_sum", &[("layer", layer)], st.total_secs);
+            e.sample("rsic_layer_gemm_seconds_count", &[("layer", layer)], st.calls as f64);
+        }
+        e.header("rsic_layer_gemm_max_seconds", "gauge", "Slowest GEMM call per layer.");
+        for (layer, st) in &layers {
+            e.sample("rsic_layer_gemm_max_seconds", &[("layer", layer)], st.max_secs);
+        }
+        e.header("rsic_layer_rows_total", "counter", "Batch rows pushed through each layer.");
+        for (layer, st) in &layers {
+            e.sample("rsic_layer_rows_total", &[("layer", layer)], st.rows as f64);
+        }
+        e.header("rsic_layer_flops_total", "counter", "FLOPs executed per layer (2 x MACs).");
+        for (layer, st) in &layers {
+            e.sample("rsic_layer_flops_total", &[("layer", layer)], st.flops as f64);
+        }
+    }
+
+    e.header("rsic_obs_spans_total", "counter", "Spans recorded since process start.");
+    e.sample("rsic_obs_spans_total", &[], super::span::recorded_total() as f64);
+    e.header("rsic_obs_spans_dropped_total", "counter", "Spans dropped at the store cap.");
+    e.sample("rsic_obs_spans_dropped_total", &[], super::span::dropped_total() as f64);
+    e.header("rsic_obs_layer_overflow_total", "counter", "Layer records refused at the cap.");
+    e.sample("rsic_obs_layer_overflow_total", &[], super::layers::overflow_total() as f64);
+    e.header("rsic_flight_events_total", "counter", "Flight-recorder events recorded.");
+    e.sample("rsic_flight_events_total", &[], super::recorder::events_total() as f64);
+    e.header("rsic_flight_dumps_total", "counter", "Postmortem dumps written.");
+    e.sample("rsic_flight_dumps_total", &[], super::recorder::dumps_total() as f64);
+
+    if let Some(router) = server.router() {
+        let snaps: Vec<(String, _)> = (0..router.worker_count())
+            .map(|i| (i.to_string(), router.worker_snapshot(i)))
+            .collect();
+        e.header("rsic_worker_up", "gauge", "Whether the fleet worker answered the scrape.");
+        for (w, snap) in &snaps {
+            e.sample("rsic_worker_up", &[("worker", w)], if snap.is_ok() { 1.0 } else { 0.0 });
+        }
+        e.header("rsic_worker_latency_seconds", "gauge", "Per-worker model latency quantiles.");
+        for (w, snap) in &snaps {
+            let Ok(obs) = snap else { continue };
+            for s in &obs.models {
+                let labels = |q: &'static str| {
+                    [("worker", w.as_str()), ("model", s.model.as_str()), ("quantile", q)]
+                };
+                e.sample("rsic_worker_latency_seconds", &labels("0.5"), s.p50);
+                e.sample("rsic_worker_latency_seconds", &labels("0.99"), s.p99);
+                e.sample("rsic_worker_latency_seconds", &labels("max"), s.max);
+            }
+        }
+        e.header("rsic_worker_tenant_requests_total", "counter", "Per-worker tenant outcomes.");
+        for (w, snap) in &snaps {
+            let Ok(obs) = snap else { continue };
+            for t in &obs.tenants {
+                for (outcome, v) in [
+                    ("offered", t.offered),
+                    ("admitted", t.admitted),
+                    ("degraded", t.degraded),
+                    ("shed", t.shed),
+                ] {
+                    e.sample(
+                        "rsic_worker_tenant_requests_total",
+                        &[("worker", w), ("tenant", &t.tenant), ("outcome", outcome)],
+                        v as f64,
+                    );
+                }
+            }
+        }
+        e.header("rsic_worker_layer_gemm_seconds_sum", "counter", "Per-worker layer GEMM time.");
+        for (w, snap) in &snaps {
+            let Ok(obs) = snap else { continue };
+            for k in &obs.kernels {
+                let labels = [("worker", w.as_str()), ("layer", k.layer.as_str())];
+                e.sample("rsic_worker_layer_gemm_seconds_sum", &labels, k.total_secs);
+            }
+        }
+        e.header("rsic_worker_layer_calls_total", "counter", "Per-worker layer GEMM calls.");
+        for (w, snap) in &snaps {
+            let Ok(obs) = snap else { continue };
+            for k in &obs.kernels {
+                let labels = [("worker", w.as_str()), ("layer", k.layer.as_str())];
+                e.sample("rsic_worker_layer_calls_total", &labels, k.calls as f64);
+            }
+        }
+        e.header("rsic_worker_layer_flops_total", "counter", "Per-worker layer FLOPs.");
+        for (w, snap) in &snaps {
+            let Ok(obs) = snap else { continue };
+            for k in &obs.kernels {
+                let labels = [("worker", w.as_str()), ("layer", k.layer.as_str())];
+                e.sample("rsic_worker_layer_flops_total", &labels, k.flops as f64);
+            }
+        }
+        e.header("rsic_worker_spans_total", "counter", "Spans recorded on each worker.");
+        for (w, snap) in &snaps {
+            let Ok(obs) = snap else { continue };
+            e.sample("rsic_worker_spans_total", &[("worker", w)], obs.spans as f64);
+        }
+    }
+
+    e.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_routing_is_strict() {
+        assert_eq!(route("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"), Route::Metrics);
+        assert_eq!(route("GET / HTTP/1.0\r\n\r\n"), Route::Metrics);
+        assert_eq!(route("GET /nope HTTP/1.1\r\n\r\n"), Route::NotFound);
+        assert_eq!(route("POST /metrics HTTP/1.1\r\n\r\n"), Route::BadMethod);
+        assert_eq!(route("GET /metrics\r\n\r\n"), Route::Malformed);
+        assert_eq!(route("GET /metrics HTTP/1.1 junk\r\n\r\n"), Route::Malformed);
+        assert_eq!(route("GET /metrics SMTP/1.1\r\n\r\n"), Route::Malformed);
+        assert_eq!(route(""), Route::Malformed);
+    }
+}

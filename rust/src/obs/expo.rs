@@ -1,0 +1,253 @@
+//! Prometheus text exposition: a hand-rolled renderer and its strict
+//! parse-back twin.
+//!
+//! The renderer ([`Expo`]) emits the text format scrapers expect
+//! (`# HELP`/`# TYPE` headers, `name{label="value"} 1.5` samples, LF
+//! line endings); the parser ([`parse`]) reads exactly what the
+//! renderer writes — the round-trip property the exposition tests pin:
+//! every exposed series reconstructs its name, labels, and value
+//! bit-for-bit (f64 `Display` is shortest-round-trip). Offline crate
+//! universe: no prometheus client crate, same reasoning as
+//! `bench::record`'s JSON.
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Series {
+    /// The label value for `key`, when present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Incremental renderer for one scrape body.
+#[derive(Debug, Default)]
+pub struct Expo {
+    out: String,
+}
+
+impl Expo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Emit `# HELP` and `# TYPE` headers for a metric family.
+    /// `kind` is `counter`, `gauge`, or `histogram`.
+    pub fn header(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {}\n", esc_help(help)));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one sample line.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", esc_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {}\n", fmt_value(value)));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn esc_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn esc_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn parse_value(s: &str) -> Result<f64, String> {
+    match s {
+        "NaN" => Ok(f64::NAN),
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        other => other.parse::<f64>().map_err(|e| format!("bad value {other:?}: {e}")),
+    }
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Parse an exposition body back into its sample lines. Strict over the
+/// dialect the renderer writes: unknown escapes, malformed label
+/// blocks, bad metric names, and trailing junk are errors, never
+/// panics. Comment (`#`) and blank lines are skipped.
+pub fn parse(text: &str) -> Result<Vec<Series>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end_matches('\r');
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(parse_line(line).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+fn parse_line(line: &str) -> Result<Series, String> {
+    let bytes = line.as_bytes();
+    let name_end = bytes
+        .iter()
+        .position(|&b| b == b'{' || b == b' ')
+        .ok_or("missing value separator")?;
+    let name = &line[..name_end];
+    if !valid_name(name) {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let mut labels = Vec::new();
+    let mut i = name_end;
+    if bytes[i] == b'{' {
+        i += 1;
+        loop {
+            if i >= bytes.len() {
+                return Err("unterminated label block".into());
+            }
+            if bytes[i] == b'}' {
+                i += 1;
+                break;
+            }
+            let key_start = i;
+            while i < bytes.len() && bytes[i] != b'=' {
+                i += 1;
+            }
+            if i >= bytes.len() {
+                return Err("label missing '='".into());
+            }
+            let key = &line[key_start..i];
+            if !valid_name(key) {
+                return Err(format!("bad label name {key:?}"));
+            }
+            i += 1; // '='
+            if i >= bytes.len() || bytes[i] != b'"' {
+                return Err("label value must be quoted".into());
+            }
+            i += 1; // opening quote
+            let mut value = String::new();
+            loop {
+                match bytes.get(i) {
+                    None => return Err("unterminated label value".into()),
+                    Some(b'"') => {
+                        i += 1;
+                        break;
+                    }
+                    Some(b'\\') => {
+                        i += 1;
+                        match bytes.get(i) {
+                            Some(b'\\') => value.push('\\'),
+                            Some(b'"') => value.push('"'),
+                            Some(b'n') => value.push('\n'),
+                            other => {
+                                return Err(format!(
+                                    "bad escape \\{}",
+                                    other.map(|&b| b as char).unwrap_or('?')
+                                ))
+                            }
+                        }
+                        i += 1;
+                    }
+                    Some(_) => {
+                        // Label values are UTF-8; copy whole chars.
+                        let rest = &line[i..];
+                        let c = rest.chars().next().ok_or("invalid utf-8")?;
+                        value.push(c);
+                        i += c.len_utf8();
+                    }
+                }
+            }
+            labels.push((key.to_string(), value));
+            match bytes.get(i) {
+                Some(b',') => i += 1,
+                Some(b'}') => {}
+                _ => return Err("expected ',' or '}' after label".into()),
+            }
+        }
+    }
+    if bytes.get(i) != Some(&b' ') {
+        return Err("expected space before value".into());
+    }
+    let value_txt = line[i + 1..].trim();
+    if value_txt.is_empty() || value_txt.contains(' ') {
+        return Err(format!("bad value field {value_txt:?}"));
+    }
+    let value = parse_value(value_txt)?;
+    Ok(Series { name: name.to_string(), labels, value })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_the_expected_text_shape() {
+        let mut e = Expo::new();
+        e.header("rsic_requests_total", "counter", "Requests submitted.");
+        e.sample("rsic_requests_total", &[], 42.0);
+        e.sample("rsic_latency_seconds", &[("model", "a.tenz"), ("quantile", "0.5")], 0.0125);
+        let text = e.finish();
+        assert!(text.contains("# HELP rsic_requests_total Requests submitted.\n"));
+        assert!(text.contains("# TYPE rsic_requests_total counter\n"));
+        assert!(text.contains("rsic_requests_total 42\n"));
+        let want = "rsic_latency_seconds{model=\"a.tenz\",quantile=\"0.5\"} 0.0125\n";
+        assert!(text.contains(want));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(parse("no_value_here").is_err());
+        assert!(parse("1bad_name 3").is_err());
+        assert!(parse("m{k=unquoted} 1").is_err());
+        assert!(parse("m{k=\"open} 1").is_err());
+        assert!(parse("m{k=\"v\"").is_err());
+        assert!(parse("m{k=\"\\x\"} 1").is_err(), "unknown escape must be rejected");
+        assert!(parse("m 1 2").is_err(), "trailing junk after the value");
+        assert!(parse("m notanumber").is_err());
+        // Comments and blanks are fine.
+        assert_eq!(parse("# TYPE m counter\n\nm 1\n").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn roundtrip_escaped_labels_and_special_values() {
+        let mut e = Expo::new();
+        e.sample("m", &[("path", "a\\b\"c\nd")], 1.5);
+        e.sample("inf", &[], f64::INFINITY);
+        e.sample("ninf", &[], f64::NEG_INFINITY);
+        e.sample("nan", &[], f64::NAN);
+        let parsed = parse(&e.finish()).unwrap();
+        assert_eq!(parsed[0].label("path"), Some("a\\b\"c\nd"));
+        assert_eq!(parsed[0].value, 1.5);
+        assert_eq!(parsed[1].value, f64::INFINITY);
+        assert_eq!(parsed[2].value, f64::NEG_INFINITY);
+        assert!(parsed[3].value.is_nan());
+    }
+}

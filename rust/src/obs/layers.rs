@@ -1,0 +1,150 @@
+//! Per-layer GEMM telemetry: a process-wide registry keyed by layer
+//! name, fed from `ModelKernels::forward` when obs is enabled.
+//!
+//! Each layer accumulates call/row/FLOP counters, total and max
+//! latency, and a log-bucketed latency histogram — the per-layer cost
+//! signal the ROADMAP's rank-budget compiler needs (SVD-NAS allocates
+//! rank by measured layer cost) and the series the exposition endpoint
+//! renders as Prometheus histograms. The registry is bounded at
+//! [`MAX_LAYERS`] distinct names; overflow is counted, never grown.
+
+use super::{enabled, lock};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Histogram bucket upper bounds, microseconds (the last bucket is
+/// +Inf). Spans 50µs–100ms: micro-batch GEMMs at serve shapes land in
+/// the low buckets, cold-start and overload tails in the high ones.
+pub const BUCKET_BOUNDS_US: [u64; 11] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000];
+
+/// Bucket count including the +Inf overflow bucket.
+pub const NUM_BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
+
+/// Cap on distinct layer names (cardinality guard for the exposition
+/// surface).
+pub const MAX_LAYERS: usize = 256;
+
+/// One layer's accumulated GEMM telemetry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerStat {
+    /// Batched forward calls through this layer.
+    pub calls: u64,
+    /// Total samples (batch rows) pushed through.
+    pub rows: u64,
+    /// Total FLOPs (2 × MACs × rows, the bench's accounting).
+    pub flops: u64,
+    pub total_secs: f64,
+    pub max_secs: f64,
+    /// Per-bucket call counts (non-cumulative; the renderer cumulates).
+    pub buckets: [u64; NUM_BUCKETS],
+}
+
+static LAYERS: Mutex<BTreeMap<String, LayerStat>> = Mutex::new(BTreeMap::new());
+static OVERFLOW: AtomicU64 = AtomicU64::new(0);
+
+/// Bucket index for a call latency in microseconds.
+pub fn bucket_index(us: u64) -> usize {
+    BUCKET_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_BOUNDS_US.len())
+}
+
+/// Fold one layer forward into the registry. No-op when obs is
+/// disabled.
+pub fn record(layer: &str, rows: u64, flops: u64, elapsed: Duration) {
+    if !enabled() {
+        return;
+    }
+    let secs = elapsed.as_secs_f64();
+    let us = elapsed.as_micros() as u64;
+    let mut map = lock(&LAYERS);
+    // Fast path: known layer, no allocation.
+    if let Some(st) = map.get_mut(layer) {
+        bump(st, rows, flops, secs, us);
+        return;
+    }
+    if map.len() >= MAX_LAYERS {
+        OVERFLOW.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    bump(map.entry(layer.to_string()).or_default(), rows, flops, secs, us);
+}
+
+fn bump(st: &mut LayerStat, rows: u64, flops: u64, secs: f64, us: u64) {
+    st.calls += 1;
+    st.rows += rows;
+    st.flops += flops;
+    st.total_secs += secs;
+    if secs > st.max_secs {
+        st.max_secs = secs;
+    }
+    st.buckets[bucket_index(us)] += 1;
+}
+
+/// Snapshot every layer's stats, name-sorted.
+pub fn snapshot() -> Vec<(String, LayerStat)> {
+    lock(&LAYERS).iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+}
+
+/// Records refused at the [`MAX_LAYERS`] cardinality cap.
+pub fn overflow_total() -> u64 {
+    OVERFLOW.load(Ordering::Relaxed)
+}
+
+/// Clear the registry (test isolation).
+pub fn reset() {
+    lock(&LAYERS).clear();
+    OVERFLOW.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_bounds_and_overflow() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(50), 0);
+        assert_eq!(bucket_index(51), 1);
+        assert_eq!(bucket_index(100_000), BUCKET_BOUNDS_US.len() - 1);
+        assert_eq!(bucket_index(100_001), BUCKET_BOUNDS_US.len());
+        assert_eq!(bucket_index(u64::MAX), BUCKET_BOUNDS_US.len());
+    }
+
+    #[test]
+    fn record_accumulates_per_layer() {
+        let _g = lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(true);
+        reset();
+        record("layers.0", 4, 800, Duration::from_micros(60));
+        record("layers.0", 2, 400, Duration::from_micros(40));
+        record("head", 1, 10, Duration::from_micros(5));
+        crate::obs::set_enabled(false);
+        // Disabled records vanish.
+        record("layers.0", 99, 9999, Duration::from_micros(1));
+        let snap = snapshot();
+        assert_eq!(snap.len(), 2);
+        let (name, st) = &snap[1];
+        assert_eq!(name, "layers.0");
+        assert_eq!((st.calls, st.rows, st.flops), (2, 6, 1200));
+        assert_eq!(st.buckets[0], 1, "40µs call lands in the ≤50µs bucket");
+        assert_eq!(st.buckets[1], 1, "60µs call lands in the ≤100µs bucket");
+        assert!(st.total_secs > 0.0 && st.max_secs >= 60e-6);
+        reset();
+    }
+
+    #[test]
+    fn cardinality_cap_counts_overflow() {
+        let _g = lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(true);
+        reset();
+        for i in 0..MAX_LAYERS + 3 {
+            record(&format!("l{i}"), 1, 1, Duration::from_micros(1));
+        }
+        crate::obs::set_enabled(false);
+        assert_eq!(snapshot().len(), MAX_LAYERS);
+        assert_eq!(overflow_total(), 3);
+        reset();
+    }
+}

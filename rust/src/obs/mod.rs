@@ -1,0 +1,151 @@
+//! `obs` — always-on, off-the-numeric-path observability for the serve
+//! stack.
+//!
+//! The serve/cluster/kernel tiers answer "how fast" through
+//! `ServeMetrics` tables and `BENCH_*.json` snapshots, but neither can
+//! say *where a request's time went*. This module adds that window
+//! without touching a single output bit:
+//!
+//! * [`span`] — lock-free per-thread span buffers over [`std::time::Instant`]
+//!   recording each request's lifecycle (admission decision → queue wait
+//!   → batch assembly → per-layer GEMM time with FLOPs → wire RTT →
+//!   reply), exportable as Chrome trace-event JSON
+//!   (`rsic serve --trace-out f.json`).
+//! * [`expo`] — the Prometheus text-format renderer and its strict
+//!   parse-back twin (the round-trip property the exposition tests pin).
+//! * [`endpoint`] — `rsic serve --metrics-addr ADDR`: a plain `std::net`
+//!   TCP scrape endpoint with the same declared-size hardening
+//!   discipline as the cluster wire codec, serving every `ServeMetrics`
+//!   counter/gauge/quantile, the per-layer kernel histograms, and
+//!   fleet-merged per-worker series when a router is attached.
+//! * [`layers`] — the per-layer GEMM registry: call/row/FLOP counters
+//!   and a log-bucketed latency histogram per served layer.
+//! * [`recorder`] — the flight recorder: a bounded ring of recent
+//!   request events, dumped to a JSON postmortem on shed bursts,
+//!   failover, or worker death.
+//!
+//! **The invariant that shapes everything here:** instrumentation never
+//! changes numerics. Every hook is `Instant::now()` bookkeeping *around*
+//! a numeric call, gated on one process-wide [`enabled`] flag — disabled
+//! (the default) the hot path pays one relaxed atomic load; enabled it
+//! pays timestamps and a thread-local push, bounded to ≤2% of serve
+//! throughput by the bench gate in `benches/serve_throughput.rs`. The
+//! routed-vs-local and `RSIC_THREADS` bit-identity suites run with obs
+//! enabled to prove the zero-bit-drift claim.
+//!
+//! Registries are process-global: in-process loopback fleets (the test
+//! topology) share one registry between router and workers, while real
+//! deployments get per-process stats that the cluster `Stats` exchange
+//! merges fleet-wide (protocol v3).
+
+pub mod endpoint;
+pub mod expo;
+pub mod layers;
+pub mod recorder;
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Whether instrumentation is collecting. One relaxed load — this is the
+/// entire disabled-path cost of every hook.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn collection on or off process-wide. Enabling also pins the trace
+/// epoch so span timestamps are monotone from this point.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// `Some(now)` when obs is enabled, `None` (and no clock read) when not.
+/// The idiom at every instrumentation site:
+///
+/// ```ignore
+/// let t = obs::now_if_enabled();
+/// numeric_work();
+/// if let Some(t0) = t { obs::span::record("work", t0, vec![]) }
+/// ```
+#[inline]
+pub fn now_if_enabled() -> Option<Instant> {
+    enabled().then(Instant::now)
+}
+
+/// The process trace epoch: all span/event timestamps are microseconds
+/// since this instant. Pinned on first use (or on [`set_enabled`]).
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds from the trace epoch to `t` (0 for pre-epoch instants).
+pub(crate) fn micros_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// Lock a registry mutex, shrugging off poisoning: observability state
+/// is advisory, so a panicked writer must never take the serve path
+/// down with it.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Escape a string for embedding in a hand-rolled JSON document (same
+/// rules as `bench::record`'s emitter).
+pub(crate) fn esc_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serializes tests that flip the process-global enable flag or drain
+/// the global registries — `cargo test` runs tests concurrently, and
+/// obs state is deliberately process-wide.
+#[cfg(test)]
+pub(crate) static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_hooks_do_no_work() {
+        let _g = lock(&TEST_GUARD);
+        set_enabled(false);
+        assert!(now_if_enabled().is_none());
+        set_enabled(true);
+        assert!(now_if_enabled().is_some());
+        set_enabled(false);
+    }
+
+    #[test]
+    fn epoch_is_pinned_once() {
+        assert_eq!(epoch(), epoch());
+        assert!(micros_since_epoch(Instant::now()) < 60 * 60 * 1_000_000);
+    }
+
+    #[test]
+    fn json_escaping_matches_the_record_dialect() {
+        assert_eq!(esc_json("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc_json("\u{1}"), "\\u0001");
+        assert_eq!(esc_json("plain"), "plain");
+    }
+}

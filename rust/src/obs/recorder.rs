@@ -1,0 +1,275 @@
+//! The flight recorder: a bounded ring of recent request events,
+//! dumped to a JSON postmortem when something goes wrong.
+//!
+//! Every admission decision, deadline shed, failover, and worker death
+//! lands in the ring (newest [`capacity`](configure) events kept, older
+//! ones overwritten — the black-box model). Three triggers write the
+//! ring out as `POSTMORTEM_<seq>.json`:
+//!
+//! * **shed burst** — ≥ [`SHED_BURST_THRESHOLD`] shed events inside a
+//!   2 s window,
+//! * **failover** — a routed batch fell back to local execution,
+//! * **worker death** — a fleet worker went down.
+//!
+//! Dumps are rate-limited by a cooldown so a sustained shed storm
+//! writes one postmortem, not thousands. Everything is gated on
+//! [`crate::obs::enabled`] and the dump directory being configured —
+//! unconfigured (the default), the recorder costs nothing.
+
+use super::{enabled, esc_json, lock, micros_since_epoch};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Default ring capacity.
+pub const DEFAULT_CAPACITY: usize = 1024;
+/// Shed events within [`SHED_BURST_WINDOW`] that trigger a dump.
+pub const SHED_BURST_THRESHOLD: usize = 32;
+/// The sliding window the shed-burst trigger counts over.
+pub const SHED_BURST_WINDOW: Duration = Duration::from_secs(2);
+/// Default minimum spacing between dumps.
+pub const DEFAULT_COOLDOWN: Duration = Duration::from_secs(5);
+
+/// What kind of request event landed in the ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Admitted,
+    Degraded,
+    Shed,
+    DeadlineShed,
+    Failover,
+    WorkerDown,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::Degraded => "degraded",
+            EventKind::Shed => "shed",
+            EventKind::DeadlineShed => "deadline-shed",
+            EventKind::Failover => "failover",
+            EventKind::WorkerDown => "worker-down",
+        }
+    }
+
+    fn is_shed(self) -> bool {
+        matches!(self, EventKind::Shed | EventKind::DeadlineShed)
+    }
+
+    fn dumps_immediately(self) -> Option<&'static str> {
+        match self {
+            EventKind::Failover => Some("failover"),
+            EventKind::WorkerDown => Some("worker-down"),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightEvent {
+    /// Microseconds since the process trace epoch.
+    pub at_us: u64,
+    pub kind: EventKind,
+    /// Free-form context (`tenant=a model=m.tenz`).
+    pub detail: String,
+}
+
+struct RecState {
+    ring: VecDeque<FlightEvent>,
+    capacity: usize,
+    dump_dir: Option<PathBuf>,
+    cooldown: Duration,
+    shed_times: VecDeque<Instant>,
+    last_dump: Option<Instant>,
+    seq: u64,
+}
+
+static EVENTS: AtomicU64 = AtomicU64::new(0);
+static DUMPS: AtomicU64 = AtomicU64::new(0);
+
+fn state() -> &'static Mutex<RecState> {
+    static S: OnceLock<Mutex<RecState>> = OnceLock::new();
+    S.get_or_init(|| {
+        Mutex::new(RecState {
+            ring: VecDeque::new(),
+            capacity: DEFAULT_CAPACITY,
+            dump_dir: None,
+            cooldown: DEFAULT_COOLDOWN,
+            shed_times: VecDeque::new(),
+            last_dump: None,
+            seq: 0,
+        })
+    })
+}
+
+/// (Re)configure the recorder: ring capacity, where postmortems are
+/// written (`None` disables dumping), and the dump cooldown.
+pub fn configure(capacity: usize, dump_dir: Option<PathBuf>, cooldown: Duration) {
+    let mut s = lock(state());
+    s.capacity = capacity.max(1);
+    while s.ring.len() > s.capacity {
+        s.ring.pop_front();
+    }
+    s.dump_dir = dump_dir;
+    s.cooldown = cooldown;
+}
+
+/// Record one event; returns the postmortem path when this event
+/// tripped a dump trigger. No-op when obs is disabled.
+pub fn record(kind: EventKind, detail: String) -> Option<PathBuf> {
+    if !enabled() {
+        return None;
+    }
+    EVENTS.fetch_add(1, Ordering::Relaxed);
+    let now = Instant::now();
+    let at_us = micros_since_epoch(now);
+    let mut s = lock(state());
+    if s.ring.len() >= s.capacity {
+        s.ring.pop_front();
+    }
+    s.ring.push_back(FlightEvent { at_us, kind, detail });
+    let reason = if let Some(r) = kind.dumps_immediately() {
+        Some(r)
+    } else if kind.is_shed() {
+        s.shed_times.push_back(now);
+        while let Some(&front) = s.shed_times.front() {
+            if now.duration_since(front) > SHED_BURST_WINDOW {
+                s.shed_times.pop_front();
+            } else {
+                break;
+            }
+        }
+        if s.shed_times.len() >= SHED_BURST_THRESHOLD {
+            s.shed_times.clear();
+            Some("shed-burst")
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    dump_locked(&mut s, reason?, now, true)
+}
+
+/// Write a postmortem right now (cooldown ignored) — the explicit
+/// "grab the black box" entry point. Returns `None` when no dump
+/// directory is configured or the write fails.
+pub fn dump_now(reason: &str) -> Option<PathBuf> {
+    let mut s = lock(state());
+    dump_locked(&mut s, reason, Instant::now(), false)
+}
+
+fn dump_locked(
+    s: &mut RecState,
+    reason: &str,
+    now: Instant,
+    respect_cooldown: bool,
+) -> Option<PathBuf> {
+    if respect_cooldown {
+        if let Some(last) = s.last_dump {
+            if now.duration_since(last) < s.cooldown {
+                return None;
+            }
+        }
+    }
+    let dir = s.dump_dir.clone()?;
+    s.last_dump = Some(now);
+    s.seq += 1;
+    let path = dir.join(format!("POSTMORTEM_{:04}.json", s.seq));
+    let body = render_dump(reason, micros_since_epoch(now), &s.ring);
+    if std::fs::write(&path, body).is_err() {
+        return None;
+    }
+    DUMPS.fetch_add(1, Ordering::Relaxed);
+    Some(path)
+}
+
+fn render_dump(reason: &str, at_us: u64, ring: &VecDeque<FlightEvent>) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"reason\": \"{}\",\n", esc_json(reason)));
+    out.push_str(&format!("  \"at_us\": {at_us},\n"));
+    out.push_str("  \"events\": [\n");
+    for (i, e) in ring.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"at_us\": {}, \"kind\": \"{}\", \"detail\": \"{}\"}}{}\n",
+            e.at_us,
+            e.kind.name(),
+            esc_json(&e.detail),
+            if i + 1 < ring.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The current ring contents, oldest first.
+pub fn snapshot() -> Vec<FlightEvent> {
+    lock(state()).ring.iter().cloned().collect()
+}
+
+/// Events recorded since process start.
+pub fn events_total() -> u64 {
+    EVENTS.load(Ordering::Relaxed)
+}
+
+/// Postmortems successfully written since process start.
+pub fn dumps_total() -> u64 {
+    DUMPS.load(Ordering::Relaxed)
+}
+
+/// Clear ring + triggers + counters; configuration is kept (test
+/// isolation).
+pub fn reset() {
+    let mut s = lock(state());
+    s.ring.clear();
+    s.shed_times.clear();
+    s.last_dump = None;
+    s.seq = 0;
+    EVENTS.store(0, Ordering::Relaxed);
+    DUMPS.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_stays_empty() {
+        let _g = lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(false);
+        reset();
+        assert!(record(EventKind::Shed, "t=a".into()).is_none());
+        assert!(snapshot().is_empty());
+        assert_eq!(events_total(), 0);
+    }
+
+    #[test]
+    fn shed_burst_trips_once_per_window() {
+        let _g = lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(true);
+        reset();
+        let dir = std::env::temp_dir().join(format!("fr_burst_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        configure(64, Some(dir.clone()), Duration::from_secs(3600));
+        let mut dumped = None;
+        for i in 0..SHED_BURST_THRESHOLD + 5 {
+            if let Some(p) = record(EventKind::Shed, format!("i={i}")) {
+                dumped = Some(p);
+            }
+        }
+        crate::obs::set_enabled(false);
+        let path = dumped.expect("burst threshold must trigger a dump");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"reason\": \"shed-burst\""));
+        assert!(body.contains("\"kind\": \"shed\""));
+        assert_eq!(dumps_total(), 1, "cooldown must swallow the post-burst sheds");
+        configure(DEFAULT_CAPACITY, None, DEFAULT_COOLDOWN);
+        reset();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,271 @@
+//! Request-lifecycle spans: lock-free per-thread buffers over
+//! [`Instant`], flushed in chunks to a bounded global store and
+//! exportable as Chrome trace-event JSON (`chrome://tracing`,
+//! Perfetto).
+//!
+//! The hot path never takes a lock: [`record`] pushes into a
+//! `thread_local!` vector and only touches the global mutex every
+//! [`FLUSH_CHUNK`] spans (or at thread exit, via the buffer's `Drop`).
+//! The store is capped at [`MAX_SPANS`]; overflow increments a dropped
+//! counter instead of growing without bound — a long soak keeps the
+//! newest [`MAX_SPANS`]-sized prefix of history, never the whole run.
+//!
+//! Timestamps are microseconds since [`crate::obs::epoch`], so spans
+//! from every thread (and the `ts`/`dur` fields Chrome expects) share
+//! one clock without any cross-thread synchronization on the hot path.
+
+use super::{enabled, esc_json, lock, micros_since_epoch};
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Global-store cap: beyond this, new spans are counted as dropped.
+pub const MAX_SPANS: usize = 1 << 20;
+/// Spans buffered per thread before a flush into the global store.
+const FLUSH_CHUNK: usize = 128;
+
+/// One span argument value (rendered into the trace event's `args`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgVal {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// One completed span, timestamped against the process trace epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    /// Microseconds, epoch → span start.
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+    /// Small dense thread id (assigned per thread at first record).
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+static STORE: Mutex<Vec<Span>> = Mutex::new(Vec::new());
+static RECORDED: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// The per-thread buffer; `Drop` flushes whatever the thread still
+/// holds when it exits, so joined pool/batcher threads never lose
+/// spans.
+struct LocalBuf {
+    tid: u64,
+    spans: Vec<Span>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        flush_into_store(&mut self.spans);
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<LocalBuf> = RefCell::new(LocalBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        spans: Vec::new(),
+    });
+}
+
+fn flush_into_store(spans: &mut Vec<Span>) {
+    if spans.is_empty() {
+        return;
+    }
+    let mut store = lock(&STORE);
+    let room = MAX_SPANS.saturating_sub(store.len());
+    if spans.len() > room {
+        DROPPED.fetch_add((spans.len() - room) as u64, Ordering::Relaxed);
+        spans.truncate(room);
+    }
+    store.append(spans);
+}
+
+/// Record a span that started at `start` and ends now. No-op when obs
+/// is disabled — callers obtain `start` via
+/// [`now_if_enabled`](crate::obs::now_if_enabled), so the disabled path
+/// never reads the clock or allocates.
+pub fn record(name: &'static str, start: Instant, args: Vec<(&'static str, ArgVal)>) {
+    if !enabled() {
+        return;
+    }
+    let dur_us = start.elapsed().as_micros() as u64;
+    let start_us = micros_since_epoch(start);
+    RECORDED.fetch_add(1, Ordering::Relaxed);
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        let tid = b.tid;
+        b.spans.push(Span { name, start_us, dur_us, tid, args });
+        if b.spans.len() >= FLUSH_CHUNK {
+            let mut full = std::mem::take(&mut b.spans);
+            flush_into_store(&mut full);
+        }
+    });
+}
+
+/// Record an instantaneous (zero-duration) marker.
+pub fn instant(name: &'static str, args: Vec<(&'static str, ArgVal)>) {
+    if !enabled() {
+        return;
+    }
+    record(name, Instant::now(), args);
+}
+
+/// Force the calling thread's buffer into the global store.
+pub fn flush_thread() {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        let mut full = std::mem::take(&mut b.spans);
+        flush_into_store(&mut full);
+    });
+}
+
+/// Spans recorded since process start (including any later dropped).
+pub fn recorded_total() -> u64 {
+    RECORDED.load(Ordering::Relaxed)
+}
+
+/// Spans dropped at the [`MAX_SPANS`] cap.
+pub fn dropped_total() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Drain every flushed span (the calling thread is force-flushed
+/// first). Other threads' partially-filled buffers flush when those
+/// threads exit or next cross [`FLUSH_CHUNK`] — callers wanting a
+/// complete trace should join worker threads first (dropping a
+/// `Server` does).
+pub fn drain() -> Vec<Span> {
+    flush_thread();
+    std::mem::take(&mut *lock(&STORE))
+}
+
+/// Clear all span state (test isolation).
+pub fn reset() {
+    drain();
+    RECORDED.store(0, Ordering::Relaxed);
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Render spans as a Chrome trace-event JSON document (the
+/// `traceEvents` array form; each span is one complete `"ph": "X"`
+/// event). Hand-rolled like `bench::record` — serde is not in the
+/// offline crate universe.
+pub fn to_chrome_trace(spans: &[Span]) -> String {
+    let mut out = String::new();
+    out.push_str("{\"traceEvents\": [\n");
+    for (i, s) in spans.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"cat\": \"serve\", \"ph\": \"X\", \"pid\": 1, \
+             \"tid\": {}, \"ts\": {}, \"dur\": {}, \"args\": {{",
+            esc_json(s.name),
+            s.tid,
+            s.start_us,
+            s.dur_us
+        ));
+        for (j, (k, v)) in s.args.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\": ", esc_json(k)));
+            match v {
+                ArgVal::U64(u) => out.push_str(&u.to_string()),
+                ArgVal::F64(f) if f.is_finite() => out.push_str(&format!("{f}")),
+                ArgVal::F64(_) => out.push('0'),
+                ArgVal::Str(s) => out.push_str(&format!("\"{}\"", esc_json(s))),
+            }
+        }
+        out.push_str(&format!("}}}}{}\n", if i + 1 < spans.len() { "," } else { "" }));
+    }
+    out.push_str("]}\n");
+    out
+}
+
+/// Drain all spans and write them to `path` as Chrome trace JSON.
+/// Returns the number of spans written.
+pub fn write_trace(path: &Path) -> std::io::Result<usize> {
+    let spans = drain();
+    std::fs::write(path, to_chrome_trace(&spans))?;
+    Ok(spans.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Spans recorded while disabled vanish; enabled ones drain with
+    /// their name, args, and a sane duration.
+    #[test]
+    fn record_respects_the_enable_gate() {
+        let _g = lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(false);
+        reset();
+        record("ghost", Instant::now(), vec![]);
+        assert!(drain().is_empty());
+
+        crate::obs::set_enabled(true);
+        let t0 = Instant::now();
+        record("real", t0, vec![("rows", ArgVal::U64(7))]);
+        crate::obs::set_enabled(false);
+        let spans = drain();
+        let got = spans.iter().find(|s| s.name == "real").expect("span flushed");
+        assert_eq!(got.args, vec![("rows", ArgVal::U64(7))]);
+        assert!(recorded_total() >= 1);
+        reset();
+    }
+
+    /// Per-thread buffers flush on thread exit, and every thread gets
+    /// its own tid.
+    #[test]
+    fn thread_buffers_flush_on_exit_with_distinct_tids() {
+        let _g = lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(true);
+        reset();
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    record("worker", Instant::now(), vec![("i", ArgVal::U64(i))]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        crate::obs::set_enabled(false);
+        let spans = drain();
+        let workers: Vec<&Span> = spans.iter().filter(|s| s.name == "worker").collect();
+        assert_eq!(workers.len(), 3, "each exiting thread must flush its buffer");
+        let mut tids: Vec<u64> = workers.iter().map(|s| s.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), 3, "threads must not share a tid");
+        reset();
+    }
+
+    #[test]
+    fn chrome_trace_escapes_and_separates_events() {
+        let spans = vec![
+            Span {
+                name: "a",
+                start_us: 1,
+                dur_us: 2,
+                tid: 3,
+                args: vec![("model", ArgVal::Str("x\"y".into())), ("ms", ArgVal::F64(1.5))],
+            },
+            Span { name: "b", start_us: 4, dur_us: 0, tid: 3, args: vec![] },
+        ];
+        let json = to_chrome_trace(&spans);
+        assert!(json.starts_with("{\"traceEvents\": ["));
+        assert!(json.contains("\"model\": \"x\\\"y\""));
+        assert!(json.contains("\"ms\": 1.5"));
+        assert!(json.contains("\"ph\": \"X\""));
+        assert_eq!(json.matches("\"name\"").count(), 2);
+        // Exactly one comma between the two events.
+        assert_eq!(json.matches("},\n").count(), 1);
+    }
+}

@@ -78,7 +78,8 @@ mod tests {
         // Skips (rather than fails) when PJRT is unavailable — e.g. when
         // the crate is built against the vendored stub `xla` crate.
         let Ok(a) = shared_client() else {
-            eprintln!("[skip] PJRT CPU client unavailable in this build");
+            crate::util::logging::init(None);
+            log::warn!("[skip] PJRT CPU client unavailable in this build");
             return;
         };
         let b = shared_client().unwrap();

@@ -511,6 +511,12 @@ fn batch_loop(
                     metrics.shed.fetch_add(1, Ordering::Relaxed);
                     metrics.tenant_deadline_shed(&req.tenant);
                     let waited_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                    if crate::obs::enabled() {
+                        crate::obs::recorder::record(
+                            crate::obs::recorder::EventKind::DeadlineShed,
+                            format!("tenant={} waited_ms={waited_ms:.1}", req.tenant),
+                        );
+                    }
                     let _ = req.tx.send(Err(RequestError::Shed(format!(
                         "deadline exceeded: request waited {waited_ms:.1} ms in queue"
                     ))));
@@ -527,11 +533,37 @@ fn batch_loop(
 /// Hand one coalesced batch to the executor and scatter the output rows
 /// back to their requesters.
 fn flush(executor: &Arc<dyn BatchExecutor>, metrics: &ServeMetrics, batch: Vec<Request>) {
+    use crate::obs::span::ArgVal;
     let rows: Vec<&[f32]> = batch.iter().map(|r| r.input.as_slice()).collect();
     let inputs = Mat::from_rows(&rows);
     drop(rows);
     metrics.record_batch(batch.len());
-    match executor.execute(inputs) {
+    // Queue-wait span: oldest enqueue → the moment the batch leaves for
+    // the executor. Recorded before execution so the span measures wait,
+    // not wait + compute.
+    if crate::obs::enabled() {
+        if let Some(oldest) = batch.iter().map(|r| r.enqueued).min() {
+            crate::obs::span::record(
+                "queue_wait",
+                oldest,
+                vec![("rows", ArgVal::U64(batch.len() as u64))],
+            );
+        }
+    }
+    let t_exec = crate::obs::now_if_enabled();
+    let result = executor.execute(inputs);
+    if let Some(t0) = t_exec {
+        crate::obs::span::record(
+            "execute",
+            t0,
+            vec![
+                ("model", ArgVal::Str(executor.label().to_string())),
+                ("rows", ArgVal::U64(batch.len() as u64)),
+                ("ok", ArgVal::U64(u64::from(result.is_ok()))),
+            ],
+        );
+    }
+    match result {
         Ok(outputs) if outputs.len() == batch.len() => {
             for (req, out) in batch.into_iter().zip(outputs) {
                 let secs = req.enqueued.elapsed().as_secs_f64();

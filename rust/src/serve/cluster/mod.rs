@@ -43,8 +43,9 @@ pub use placement::{
     checkpoint_identity_hash, checkpoint_identity_hash_of, layer_costs, LayerCost,
     PlacementMode, PlacementPlan, WorkerAssignment,
 };
-pub use router::{RoutedExecutor, Router, RouterConfig};
+pub use router::{RoutedExecutor, Router, RouterConfig, WorkerObs};
 pub use wire::{
-    ErrorCode, Frame, ModelStats, TenantStats, WireError, MAX_FRAME_BYTES, PROTOCOL_VERSION,
+    ErrorCode, Frame, KernelStats, ModelStats, TenantStats, WireError, MAX_FRAME_BYTES,
+    PROTOCOL_VERSION,
 };
 pub use worker::{Worker, WorkerConfig, WorkerHandle};

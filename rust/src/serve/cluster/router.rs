@@ -72,6 +72,12 @@ impl Link {
     fn mark_down(&self) {
         self.healthy.store(false, Ordering::Relaxed);
         *self.last_failure.lock().unwrap() = Some(std::time::Instant::now());
+        if crate::obs::enabled() {
+            crate::obs::recorder::record(
+                crate::obs::recorder::EventKind::WorkerDown,
+                format!("addr={}", self.addr),
+            );
+        }
     }
 
     /// Live, or down long enough that it is worth a probe.
@@ -156,6 +162,25 @@ impl Router {
         }
     }
 
+    /// Workers in this router's placement plan (the fleet scrape bound).
+    pub fn worker_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Everything one `Stats` exchange carries from worker `idx` — the
+    /// per-model and per-tenant rows plus the protocol-v3 per-layer
+    /// kernel summaries and span count. One wire call, so the metrics
+    /// endpoint's fleet scrape costs one RTT per worker.
+    pub fn worker_snapshot(&self, idx: usize) -> Result<WorkerObs, String> {
+        match self.call_link(idx, &Frame::Stats) {
+            Ok(Frame::StatsOk { models, tenants, kernels, spans }) => {
+                Ok(WorkerObs { models, tenants, kernels, spans })
+            }
+            Ok(other) => Err(format!("unexpected {} frame", other.name())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
     /// Dial and handshake one worker.
     fn connect(&self, link: &Link) -> Result<TcpStream, WireError> {
         let addr = link
@@ -199,6 +224,22 @@ impl Router {
     /// mark the link down, protocol-level `Error` answers keep it up
     /// (the worker is alive — it just refused this request).
     fn call_link(&self, idx: usize, request: &Frame) -> Result<Frame, WireError> {
+        let t0 = crate::obs::now_if_enabled();
+        let result = self.call_link_inner(idx, request);
+        if let Some(t0) = t0 {
+            crate::obs::span::record(
+                "wire",
+                t0,
+                vec![
+                    ("worker", crate::obs::span::ArgVal::U64(idx as u64)),
+                    ("ok", crate::obs::span::ArgVal::U64(u64::from(result.is_ok()))),
+                ],
+            );
+        }
+        result
+    }
+
+    fn call_link_inner(&self, idx: usize, request: &Frame) -> Result<Frame, WireError> {
         let link = &self.links[idx];
         let mut guard = link.conn.lock().unwrap();
         for attempt in 0..2 {
@@ -312,6 +353,17 @@ impl Router {
     }
 }
 
+/// One worker's full observability snapshot from a single `Stats`
+/// exchange ([`Router::worker_snapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerObs {
+    pub models: Vec<wire::ModelStats>,
+    pub tenants: Vec<wire::TenantStats>,
+    pub kernels: Vec<wire::KernelStats>,
+    /// Spans the worker has recorded (its own obs store).
+    pub spans: u64,
+}
+
 /// [`BatchExecutor`] over a [`Router`], with local failover: batches go
 /// to the fleet; if the fleet cannot answer, the batch runs on the local
 /// kernels (already resident via the model cache) and the failover is
@@ -325,6 +377,18 @@ pub struct RoutedExecutor {
 impl RoutedExecutor {
     pub fn new(router: Arc<Router>, local: LocalExecutor, metrics: Arc<ServeMetrics>) -> Self {
         RoutedExecutor { router, local, metrics }
+    }
+}
+
+/// Flight-record one routed→local failover (an immediate-dump trigger
+/// when a postmortem directory is configured). The enable check keeps
+/// the disabled path allocation-free.
+fn record_failover(model: &str, reason: &str) {
+    if crate::obs::enabled() {
+        crate::obs::recorder::record(
+            crate::obs::recorder::EventKind::Failover,
+            format!("model={model} reason={reason}"),
+        );
     }
 }
 
@@ -350,11 +414,13 @@ impl BatchExecutor for RoutedExecutor {
                     inputs.rows()
                 );
                 self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                record_failover(self.local.label(), "row-count mismatch");
                 self.local.execute(inputs)
             }
             Err(e) => {
                 log::warn!("routed batch failed ({e}) — failing over to local");
                 self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                record_failover(self.local.label(), &e);
                 self.local.execute(inputs)
             }
         }

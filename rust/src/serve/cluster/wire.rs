@@ -22,8 +22,10 @@ use thiserror::Error;
 
 /// Protocol version this build speaks. Bumped on any frame-layout change;
 /// the handshake refuses mismatched peers up front. v2 added the
-/// per-tenant admission rows to [`Frame::StatsOk`].
-pub const PROTOCOL_VERSION: u32 = 2;
+/// per-tenant admission rows to [`Frame::StatsOk`]; v3 added the
+/// per-layer kernel summaries and span count (the fleet-wide obs
+/// exposition).
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Hard cap on one frame's payload (tag + body). A `Forward` carrying a
 /// 4096-wide batch of 4096 f32 features is ~64 MiB; anything larger is a
@@ -123,6 +125,20 @@ pub struct TenantStats {
     pub p99: f64,
 }
 
+/// Per-layer GEMM telemetry carried by [`Frame::StatsOk`] since v3 — the
+/// wire form of [`LayerStat`](crate::obs::layers::LayerStat), minus the
+/// histogram buckets (the fleet view needs totals; the full histogram
+/// stays a per-process exposition series).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelStats {
+    pub layer: String,
+    pub calls: u64,
+    pub rows: u64,
+    pub flops: u64,
+    pub total_secs: f64,
+    pub max_secs: f64,
+}
+
 /// One protocol message. Request frames flow router → worker; `*Ok`,
 /// `HelloAck` and `Error` flow back.
 #[derive(Debug, Clone, PartialEq)]
@@ -142,10 +158,17 @@ pub enum Frame {
     HealthOk { models: u32, requests: u64 },
     /// Ask for per-model latency statistics.
     Stats,
-    /// Per-model latency statistics (sorted by model name) plus
-    /// per-tenant admission rows (sorted by tenant name; empty when the
-    /// worker serves no named tenants).
-    StatsOk { models: Vec<ModelStats>, tenants: Vec<TenantStats> },
+    /// Per-model latency statistics (sorted by model name), per-tenant
+    /// admission rows (sorted by tenant name; empty when the worker
+    /// serves no named tenants), per-layer kernel summaries (empty when
+    /// the worker's obs collection is disabled), and the worker's span
+    /// count.
+    StatsOk {
+        models: Vec<ModelStats>,
+        tenants: Vec<TenantStats>,
+        kernels: Vec<KernelStats>,
+        spans: u64,
+    },
     /// Typed failure answer to any request.
     Error { code: ErrorCode, message: String },
 }
@@ -321,7 +344,7 @@ impl Frame {
                 out.extend_from_slice(&requests.to_le_bytes());
             }
             Frame::Stats => out.push(TAG_STATS),
-            Frame::StatsOk { models, tenants } => {
+            Frame::StatsOk { models, tenants, kernels, spans } => {
                 out.push(TAG_STATS_OK);
                 let count = u32::try_from(models.len())
                     .map_err(|_| WireError::Malformed("too many stats entries".into()))?;
@@ -345,6 +368,18 @@ impl Frame {
                     out.extend_from_slice(&t.p50.to_le_bytes());
                     out.extend_from_slice(&t.p99.to_le_bytes());
                 }
+                let count = u32::try_from(kernels.len())
+                    .map_err(|_| WireError::Malformed("too many kernel entries".into()))?;
+                out.extend_from_slice(&count.to_le_bytes());
+                for k in kernels {
+                    put_string(&mut out, &k.layer)?;
+                    out.extend_from_slice(&k.calls.to_le_bytes());
+                    out.extend_from_slice(&k.rows.to_le_bytes());
+                    out.extend_from_slice(&k.flops.to_le_bytes());
+                    out.extend_from_slice(&k.total_secs.to_le_bytes());
+                    out.extend_from_slice(&k.max_secs.to_le_bytes());
+                }
+                out.extend_from_slice(&spans.to_le_bytes());
             }
             Frame::Error { code, message } => {
                 out.push(TAG_ERROR);
@@ -421,7 +456,27 @@ impl Frame {
                         p99: r.f64()?,
                     });
                 }
-                Frame::StatsOk { models, tenants }
+                let count = r.u32()? as usize;
+                // Each kernel row is ≥ 42 bytes (2-byte string prefix +
+                // 3×u64 + 2×f64); same pre-allocation guard as above.
+                if count > r.remaining() / 42 {
+                    return Err(WireError::Malformed(format!(
+                        "kernel stats count {count} exceeds frame capacity"
+                    )));
+                }
+                let mut kernels = Vec::with_capacity(count);
+                for _ in 0..count {
+                    kernels.push(KernelStats {
+                        layer: r.string()?,
+                        calls: r.u64()?,
+                        rows: r.u64()?,
+                        flops: r.u64()?,
+                        total_secs: r.f64()?,
+                        max_secs: r.f64()?,
+                    });
+                }
+                let spans = r.u64()?;
+                Frame::StatsOk { models, tenants, kernels, spans }
             }
             TAG_ERROR => {
                 let code = ErrorCode::from_tag(r.u16()?)?;
@@ -504,8 +559,27 @@ mod tests {
                         p99: 0.0,
                     },
                 ],
+                kernels: vec![
+                    KernelStats {
+                        layer: "layers.0".into(),
+                        calls: 17,
+                        rows: 544,
+                        flops: 8_912_896,
+                        total_secs: 0.021,
+                        max_secs: 0.004,
+                    },
+                    KernelStats {
+                        layer: "head".into(),
+                        calls: 17,
+                        rows: 544,
+                        flops: 1_114_112,
+                        total_secs: 0.003,
+                        max_secs: 0.001,
+                    },
+                ],
+                spans: 99,
             },
-            Frame::StatsOk { models: vec![], tenants: vec![] },
+            Frame::StatsOk { models: vec![], tenants: vec![], kernels: vec![], spans: 0 },
             Frame::Error { code: ErrorCode::ModelLoad, message: "no such shard".into() },
         ]
     }
@@ -584,6 +658,13 @@ mod tests {
         assert!(matches!(err, WireError::Malformed(_)), "{err}");
         // Zero models, then an absurd tenant count.
         let mut body = vec![TAG_STATS_OK];
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode_body(&body).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err}");
+        // Zero models and tenants, then an absurd kernel count.
+        let mut body = vec![TAG_STATS_OK];
+        body.extend_from_slice(&0u32.to_le_bytes());
         body.extend_from_slice(&0u32.to_le_bytes());
         body.extend_from_slice(&u32::MAX.to_le_bytes());
         let err = Frame::decode_body(&body).unwrap_err();

@@ -24,7 +24,8 @@
 
 use super::placement::PlacementPlan;
 use super::wire::{
-    read_frame, write_frame, ErrorCode, Frame, ModelStats, TenantStats, PROTOCOL_VERSION,
+    read_frame, write_frame, ErrorCode, Frame, KernelStats, ModelStats, TenantStats,
+    PROTOCOL_VERSION,
 };
 use crate::coordinator::pool::WorkerPool;
 use crate::io::checkpoint::CheckpointSource;
@@ -145,6 +146,12 @@ impl WorkerHandle {
     pub fn shutdown(&mut self) {
         if self.shutdown.swap(true, Ordering::SeqCst) {
             return;
+        }
+        if crate::obs::enabled() {
+            crate::obs::recorder::record(
+                crate::obs::recorder::EventKind::WorkerDown,
+                format!("addr={} reason=shutdown", self.addr),
+            );
         }
         // Wake the blocking accept with a throwaway connection.
         let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
@@ -358,6 +365,21 @@ fn serve_conn(mut stream: TcpStream, state: Arc<WorkerState>, shutdown: Arc<Atom
                         p99: t.latency.p99,
                     })
                     .collect(),
+                // Per-layer kernel timings and the span count ride the
+                // same Stats round trip so the router scrapes a whole
+                // worker in one RTT.
+                kernels: crate::obs::layers::snapshot()
+                    .into_iter()
+                    .map(|(layer, s)| KernelStats {
+                        layer,
+                        calls: s.calls,
+                        rows: s.rows,
+                        flops: s.flops,
+                        total_secs: s.total_secs,
+                        max_secs: s.max_secs,
+                    })
+                    .collect(),
+                spans: crate::obs::span::recorded_total(),
             },
             other => Frame::Error {
                 code: ErrorCode::BadRequest,
@@ -405,6 +427,17 @@ fn handle_forward(state: &Arc<WorkerState>, model: &str, batch: crate::tensor::M
             // One latency sample per row, recorded in one lock pass —
             // every request in the batch waited the same wall time.
             state.metrics.record_latency_n(model, started.elapsed().as_secs_f64(), rows);
+            if crate::obs::enabled() {
+                use crate::obs::span::ArgVal;
+                crate::obs::span::record(
+                    "worker_forward",
+                    started,
+                    vec![
+                        ("model", ArgVal::Str(model.to_string())),
+                        ("rows", ArgVal::U64(rows as u64)),
+                    ],
+                );
+            }
             Frame::ForwardOk { outputs }
         }
         Err(e) => Frame::Error { code: ErrorCode::Internal, message: e },
@@ -495,7 +528,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match call(&mut stream, &Frame::Stats).unwrap() {
-            Frame::StatsOk { models, tenants } => {
+            Frame::StatsOk { models, tenants, .. } => {
                 assert_eq!(models.len(), 1);
                 assert_eq!(models[0].model, plan.checkpoint);
                 assert_eq!(models[0].n, 2);

@@ -154,6 +154,26 @@ impl LinearKernel {
     }
 }
 
+/// Fold one timed layer forward into the obs registries: the per-layer
+/// GEMM histogram plus a `"gemm"` span. Only reached when obs was
+/// enabled at the time the timer was taken, and strictly *after* the
+/// numeric work — the instrumentation reads the clock, never the data.
+fn record_layer_obs(layer: &ServeLayer, rows: usize, t0: std::time::Instant) {
+    use crate::obs::span::ArgVal;
+    // FLOPs = 2 × MACs × rows, the throughput bench's accounting.
+    let flops = 2 * layer.kernel.flops_per_sample() as u64 * rows as u64;
+    crate::obs::layers::record(&layer.name, rows as u64, flops, t0.elapsed());
+    crate::obs::span::record(
+        "gemm",
+        t0,
+        vec![
+            ("layer", ArgVal::Str(layer.name.clone())),
+            ("rows", ArgVal::U64(rows as u64)),
+            ("flops", ArgVal::U64(flops)),
+        ],
+    );
+}
+
 /// One servable layer: kernel + optional bias + activation.
 #[derive(Debug, Clone)]
 pub struct ServeLayer {
@@ -279,11 +299,19 @@ impl ModelKernels {
         let n = x.rows();
         let mut mid = Vec::new();
         let mut cur = recycle(Vec::new(), n, self.layers[0].kernel.shape().0);
+        let t0 = crate::obs::now_if_enabled();
         self.layers[0].forward_into(x, &mut cur, &mut mid);
+        if let Some(t0) = t0 {
+            record_layer_obs(&self.layers[0], n, t0);
+        }
         let mut spare = Vec::new();
         for layer in &self.layers[1..] {
             let mut y = recycle(spare, n, layer.kernel.shape().0);
+            let t0 = crate::obs::now_if_enabled();
             layer.forward_into(&cur, &mut y, &mut mid);
+            if let Some(t0) = t0 {
+                record_layer_obs(layer, n, t0);
+            }
             spare = cur.into_vec();
             cur = y;
         }
@@ -489,5 +517,40 @@ mod tests {
         tf.insert("head.bias", TensorEntry::from_f32(vec![5], &[0.0; 5]));
         let err = ModelKernels::load(&tf).unwrap_err();
         assert!(format!("{err:#}").contains("5 values"));
+    }
+
+    /// The obs invariant at its source: timing a layer forward must not
+    /// move a single output bit, and the registry sees every call.
+    #[test]
+    fn instrumented_forward_is_bit_identical_and_counted() {
+        let mut g = GaussianSource::new(21);
+        let mut tf = TensorFile::new();
+        let (a, b) = (gaussian(4, 2, 1.0, &mut g), gaussian(2, 6, 1.0, &mut g));
+        store_weight(&mut tf, "layers.0", &StoredWeight::Factored { a, b });
+        store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, 4, 1.0, &mut g)));
+        let model = ModelKernels::load(&tf).unwrap();
+        let x = gaussian(5, 6, 1.0, &mut g);
+
+        let _guard = crate::obs::lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(false);
+        let plain = model.forward(&x);
+        crate::obs::layers::reset();
+        crate::obs::span::reset();
+        crate::obs::set_enabled(true);
+        let timed = model.forward(&x);
+        crate::obs::set_enabled(false);
+
+        for (p, t) in plain.data().iter().zip(timed.data()) {
+            assert_eq!(p.to_bits(), t.to_bits(), "instrumentation changed an output bit");
+        }
+        let snap = crate::obs::layers::snapshot();
+        assert_eq!(snap.len(), 2, "both layers must register");
+        let head = snap.iter().find(|(n, _)| n == "head").unwrap();
+        assert_eq!(head.1.calls, 1);
+        assert_eq!(head.1.rows, 5);
+        assert_eq!(head.1.flops, 2 * (3 * 4) * 5);
+        assert!(crate::obs::span::recorded_total() >= 2);
+        crate::obs::layers::reset();
+        crate::obs::span::reset();
     }
 }

@@ -417,6 +417,18 @@ pub fn run_scenario(
     all_latencies.sort_by(f64::total_cmp);
     let completed = all_latencies.len();
     let total = |f: fn(&TenantOutcome) -> usize| tenants_out.iter().map(f).sum::<usize>();
+    if crate::obs::enabled() {
+        use crate::obs::span::ArgVal;
+        crate::obs::span::record(
+            "scenario",
+            start,
+            vec![
+                ("name", ArgVal::Str(spec.name.clone())),
+                ("offered", ArgVal::U64(offered as u64)),
+                ("completed", ArgVal::U64(completed as u64)),
+            ],
+        );
+    }
     Ok(ScenarioReport {
         name: spec.name.clone(),
         load_factor: spec.load_factor,

@@ -155,6 +155,13 @@ impl Server {
         &self.pool
     }
 
+    /// The cluster router this server drains routed batches into, when
+    /// one is attached (the metrics endpoint scrapes fleet-wide series
+    /// through it).
+    pub fn router(&self) -> Option<&Arc<Router>> {
+        self.router.as_ref()
+    }
+
     /// The declared policy for `tenant`, or a per-name copy of the
     /// default policy for tenants nobody declared.
     pub fn tenant_policy(&self, tenant: &str) -> Arc<TenantPolicy> {
@@ -258,6 +265,7 @@ impl Server {
         let mut input = match batcher.try_submit(&policy, input) {
             Ok(response) => {
                 self.metrics.tenant_admitted(&policy.name);
+                record_admission(crate::obs::recorder::EventKind::Admitted, &policy.name, path);
                 return Ok(TenantSubmission { outcome: Admission::Admitted, response });
             }
             Err(bounced) => bounced,
@@ -274,6 +282,11 @@ impl Server {
                 match sibling_batcher.try_submit(&relaxed, input) {
                     Ok(response) => {
                         self.metrics.tenant_degraded(&policy.name);
+                        record_admission(
+                            crate::obs::recorder::EventKind::Degraded,
+                            &policy.name,
+                            sibling,
+                        );
                         return Ok(TenantSubmission { outcome: Admission::Degraded, response });
                     }
                     Err(bounced) => input = bounced,
@@ -282,6 +295,7 @@ impl Server {
         }
         drop(input);
         self.metrics.tenant_shed(&policy.name);
+        record_admission(crate::obs::recorder::EventKind::Shed, &policy.name, path);
         Ok(TenantSubmission {
             outcome: Admission::Shed,
             response: PendingResponse::immediate_error(RequestError::Shed(format!(
@@ -293,6 +307,15 @@ impl Server {
     /// Convenience: submit one request and block for its output.
     pub fn infer(&self, path: &Path, input: Vec<f32>) -> Result<Vec<f32>> {
         self.submit(path, input)?.wait().map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+/// Log one admission decision into the flight recorder (shed bursts
+/// trip a postmortem dump there). The enable check here keeps the
+/// disabled path free of the detail-string allocation.
+fn record_admission(kind: crate::obs::recorder::EventKind, tenant: &str, path: &Path) {
+    if crate::obs::enabled() {
+        crate::obs::recorder::record(kind, format!("tenant={tenant} model={}", path.display()));
     }
 }
 

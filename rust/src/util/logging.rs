@@ -34,16 +34,39 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
-/// Parse a level name; unknown names map to Info.
-pub fn parse_level(s: &str) -> LevelFilter {
-    match s.to_ascii_lowercase().as_str() {
+/// Parse a level name. Returns the filter and whether the name was
+/// recognized — unknown names fall back to Info, and the caller decides
+/// whether that deserves a warning.
+pub fn parse_level_checked(s: &str) -> (LevelFilter, bool) {
+    let lvl = match s.to_ascii_lowercase().as_str() {
         "off" => LevelFilter::Off,
         "error" => LevelFilter::Error,
         "warn" | "warning" => LevelFilter::Warn,
         "info" => LevelFilter::Info,
         "debug" => LevelFilter::Debug,
         "trace" => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        _ => return (LevelFilter::Info, false),
+    };
+    (lvl, true)
+}
+
+/// Parse a level name; unknown names map to Info.
+pub fn parse_level(s: &str) -> LevelFilter {
+    parse_level_checked(s).0
+}
+
+/// A misspelled `$RSIC_LOG` used to degrade to Info *silently* — the
+/// one warning that can explain why `RSIC_LOG=dbug` shows no debug
+/// output. Warn once per process, on stderr directly (the logger may
+/// not be installed yet, and at the fallback Info level a `log::warn!`
+/// would race its own visibility).
+fn warn_unknown_level(value: &str) {
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if WARNED.compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst).is_ok() {
+        eprintln!(
+            "[WARN ] rsic — unknown RSIC_LOG level {value:?} \
+             (expected off|error|warn|info|debug|trace); using info"
+        );
     }
 }
 
@@ -51,7 +74,15 @@ pub fn parse_level(s: &str) -> LevelFilter {
 /// explicit argument > `$RSIC_LOG` > Info.
 pub fn init(level: Option<LevelFilter>) {
     let lvl = level
-        .or_else(|| std::env::var("RSIC_LOG").ok().map(|s| parse_level(&s)))
+        .or_else(|| {
+            std::env::var("RSIC_LOG").ok().map(|s| {
+                let (lvl, known) = parse_level_checked(&s);
+                if !known {
+                    warn_unknown_level(&s);
+                }
+                lvl
+            })
+        })
         .unwrap_or(LevelFilter::Info);
     if INSTALLED
         .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
@@ -72,6 +103,16 @@ mod tests {
         assert_eq!(parse_level("WARN"), LevelFilter::Warn);
         assert_eq!(parse_level("bogus"), LevelFilter::Info);
         assert_eq!(parse_level("off"), LevelFilter::Off);
+    }
+
+    #[test]
+    fn checked_parse_flags_unknown_names() {
+        assert_eq!(parse_level_checked("trace"), (LevelFilter::Trace, true));
+        assert_eq!(parse_level_checked("WARNING"), (LevelFilter::Warn, true));
+        // The fallback is Info, and the caller is told it *was* a
+        // fallback — the silent-degrade bug this API exists to fix.
+        assert_eq!(parse_level_checked("dbug"), (LevelFilter::Info, false));
+        assert_eq!(parse_level_checked(""), (LevelFilter::Info, false));
     }
 
     #[test]

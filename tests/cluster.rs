@@ -71,6 +71,7 @@ fn random_frame(g: &mut Gen) -> Frame {
         7 => {
             let n = g.usize_in(0, 5);
             let nt = g.usize_in(0, 4);
+            let nk = g.usize_in(0, 4);
             Frame::StatsOk {
                 models: (0..n)
                     .map(|_| wire::ModelStats {
@@ -92,6 +93,17 @@ fn random_frame(g: &mut Gen) -> Frame {
                         p99: g.f64_in(0.0, 10.0),
                     })
                     .collect(),
+                kernels: (0..nk)
+                    .map(|_| wire::KernelStats {
+                        layer: random_string(g),
+                        calls: g.usize_in(0, 1 << 40) as u64,
+                        rows: g.usize_in(0, 1 << 40) as u64,
+                        flops: random_u64(g),
+                        total_secs: g.f64_in(0.0, 100.0),
+                        max_secs: g.f64_in(0.0, 1.0),
+                    })
+                    .collect(),
+                spans: random_u64(g),
             }
         }
         _ => Frame::Error {
@@ -323,6 +335,9 @@ fn build_checkpoints(dir: &Path) -> (PathBuf, PathBuf, PathBuf) {
 /// quietly failed over.
 #[test]
 fn routed_replica_serving_is_bit_identical_to_local() {
+    // The instrumentation-changes-nothing constraint, proven at the
+    // fleet tier: the whole equivalence suite runs with obs on.
+    rsi_compress::obs::set_enabled(true);
     let dir = tmp_dir("replica_ident");
     let (dense_path, single_path, manifest_path) = build_checkpoints(&dir);
     let local = local_server();
@@ -357,6 +372,7 @@ fn routed_replica_serving_is_bit_identical_to_local() {
 /// keeps its ReLU.
 #[test]
 fn routed_partition_serving_is_bit_identical_to_local() {
+    rsi_compress::obs::set_enabled(true);
     let dir = tmp_dir("partition_ident");
     let (_dense, single_path, manifest_path) = build_checkpoints(&dir);
     let local = local_server();
@@ -426,6 +442,7 @@ fn partition_stage_opens_only_its_shards() {
 /// and the failed-over outputs still match the local reference.
 #[test]
 fn worker_death_fails_over_with_zero_client_errors() {
+    rsi_compress::obs::set_enabled(true);
     let dir = tmp_dir("failover");
     let (dense_path, _single, _manifest) = build_checkpoints(&dir);
     let mut plan = make_plan(&dense_path, PlacementMode::Replica, 2);

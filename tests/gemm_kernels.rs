@@ -142,6 +142,9 @@ fn degenerate_shapes_are_pure_epilogue_or_empty() {
 /// process environment here cannot race another test.
 #[test]
 fn thread_count_never_changes_bits_across_threshold() {
+    // Run the invariance proof with instrumentation on: obs must not
+    // change a bit either.
+    rsi_compress::obs::set_enabled(true);
     let saved = std::env::var("RSIC_THREADS").ok();
     // (m, n, k): 12·128·512 ≈ 0.79M flops (below 4·2²⁰, inline path) and
     // 12·128·4096 ≈ 6.3M (above, threaded path).

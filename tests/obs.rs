@@ -1,0 +1,337 @@
+//! Observability integration: the exposition round-trip property, the
+//! flight recorder's ring + dump triggers, a live scrape of the metrics
+//! endpoint checked against the server's own counters, bit-identity of
+//! instrumented serving, and the Chrome trace export.
+//!
+//! Tests that flip the process-global obs switch serialize on a local
+//! mutex (`GUARD`) — the crate's internal TEST_GUARD is not visible
+//! from an integration test.
+
+use rsi_compress::io::checkpoint::{store_weight, StoredWeight};
+use rsi_compress::io::tenz::{TensorEntry, TensorFile};
+use rsi_compress::obs;
+use rsi_compress::obs::expo::{self, Series};
+use rsi_compress::obs::recorder::{self, EventKind};
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::serve::{ServeConfig, Server};
+use rsi_compress::tensor::init::gaussian;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("obs_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A 12 → 8 (relu, bias) → 4 two-layer checkpoint.
+fn write_checkpoint(path: &std::path::Path, seed: u64) {
+    let mut g = GaussianSource::new(seed);
+    let mut tf = TensorFile::new();
+    store_weight(&mut tf, "layers.0", &StoredWeight::Dense(gaussian(8, 12, 1.0, &mut g)));
+    tf.insert("layers.0.bias", TensorEntry::from_f32(vec![8], &[0.05; 8]));
+    store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(4, 8, 1.0, &mut g)));
+    tf.write(path).unwrap();
+}
+
+fn serve_config() -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+fn find<'a>(series: &'a [Series], name: &str, labels: &[(&str, &str)]) -> &'a Series {
+    series
+        .iter()
+        .find(|s| s.name == name && labels.iter().all(|(k, v)| s.label(k) == Some(*v)))
+        .unwrap_or_else(|| panic!("no series {name} with labels {labels:?}"))
+}
+
+/// Property: whatever the renderer emits, the parser reconstructs —
+/// names, labels (escapes included), and values bit-for-bit — across a
+/// seeded sweep of awkward floats and label strings.
+#[test]
+fn exposition_roundtrip_property() {
+    let awkward_values = [
+        0.0,
+        -0.0,
+        1.5,
+        -2.25e-9,
+        1e308,
+        5e-324, // min subnormal
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::NAN,
+        std::f64::consts::PI,
+    ];
+    let awkward_labels = [
+        "plain",
+        "with space",
+        "quote\"inside",
+        "back\\slash",
+        "new\nline",
+        "utf8 Δ¹₂",
+        "trailing\\",
+        "",
+    ];
+    // A seeded LCG walks (value, label) pairs so the sweep covers the
+    // cross product in a shuffled order plus random doubles.
+    let mut state = 0x2545f4914f6cdd1du64;
+    let mut next = move || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        state
+    };
+    let mut e = expo::Expo::new();
+    let mut want: Vec<(String, f64)> = Vec::new();
+    for i in 0..200 {
+        let v = if i % 3 == 0 {
+            awkward_values[next() as usize % awkward_values.len()]
+        } else {
+            // Random finite double from random bits (retry on non-finite).
+            let mut bits = next();
+            while !f64::from_bits(bits).is_finite() {
+                bits = next();
+            }
+            f64::from_bits(bits)
+        };
+        let label = awkward_labels[next() as usize % awkward_labels.len()];
+        e.sample("rsic_roundtrip_metric", &[("case", label), ("i", &i.to_string())], v);
+        want.push((label.to_string(), v));
+    }
+    let text = e.finish();
+    let parsed = expo::parse(&text).unwrap();
+    assert_eq!(parsed.len(), want.len());
+    for (i, (s, (label, v))) in parsed.iter().zip(&want).enumerate() {
+        assert_eq!(s.name, "rsic_roundtrip_metric");
+        assert_eq!(s.label("case"), Some(label.as_str()), "case {i}");
+        assert_eq!(s.label("i"), Some(i.to_string().as_str()));
+        assert_eq!(
+            s.value.to_bits(),
+            v.to_bits(),
+            "case {i}: {v} did not round-trip bit-exactly (got {})",
+            s.value
+        );
+    }
+}
+
+/// The ring keeps exactly the newest `capacity` events across
+/// wraparound; a failover dumps the ring immediately; the cooldown
+/// swallows a second dump inside its window.
+#[test]
+fn flight_recorder_wraps_and_dumps() {
+    let _g = guard();
+    obs::set_enabled(true);
+    recorder::reset();
+    let dir = tmp_dir("flight");
+    recorder::configure(8, Some(dir.clone()), Duration::from_secs(3600));
+
+    for i in 0..20 {
+        assert!(recorder::record(EventKind::Admitted, format!("i={i}")).is_none());
+    }
+    let ring = recorder::snapshot();
+    assert_eq!(ring.len(), 8, "ring must cap at the configured capacity");
+    let details: Vec<&str> = ring.iter().map(|e| e.detail.as_str()).collect();
+    assert_eq!(details[0], "i=12", "oldest surviving event after wraparound");
+    assert_eq!(details[7], "i=19", "newest event");
+    assert_eq!(recorder::events_total(), 20);
+
+    // Failover dumps immediately — the ring (including the failover
+    // itself) lands in a POSTMORTEM file.
+    let path = recorder::record(EventKind::Failover, "model=m.tenz reason=io".into())
+        .expect("failover must dump");
+    let body = std::fs::read_to_string(&path).unwrap();
+    assert!(body.contains("\"reason\": \"failover\""), "{body}");
+    assert!(body.contains("\"kind\": \"failover\""));
+    assert!(body.contains("model=m.tenz reason=io"));
+    assert_eq!(body.matches("\"at_us\"").count(), 8 + 1, "8 ring events + header stamp");
+    assert_eq!(recorder::dumps_total(), 1);
+
+    // Inside the cooldown window a second trigger records but does not
+    // dump again.
+    assert!(recorder::record(EventKind::WorkerDown, "addr=x".into()).is_none());
+    assert_eq!(recorder::dumps_total(), 1);
+    // The explicit entry point ignores the cooldown.
+    assert!(recorder::dump_now("operator-request").is_some());
+    assert_eq!(recorder::dumps_total(), 2);
+
+    obs::set_enabled(false);
+    recorder::configure(recorder::DEFAULT_CAPACITY, None, recorder::DEFAULT_COOLDOWN);
+    recorder::reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Scrape the live endpoint over TCP and check every core series
+/// against the server's own metrics — plus the typed refusals for bad
+/// paths and oversized requests.
+#[test]
+fn metrics_endpoint_scrape_matches_snapshot() {
+    let _g = guard();
+    obs::set_enabled(true);
+    obs::span::reset();
+    obs::layers::reset();
+    let dir = tmp_dir("scrape");
+    let ckpt = dir.join("m.tenz");
+    write_checkpoint(&ckpt, 7);
+    let server = Arc::new(Server::new(serve_config()));
+    for i in 0..12 {
+        let x: Vec<f32> = (0..12).map(|j| ((i * 12 + j) % 17) as f32 * 0.1).collect();
+        server.infer(&ckpt, x).unwrap();
+    }
+    let endpoint = obs::endpoint::MetricsServer::spawn("127.0.0.1:0", server.clone()).unwrap();
+    let addr = endpoint.addr();
+
+    let get = |path: &str, req: Option<&[u8]>| -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        match req {
+            Some(raw) => stream.write_all(raw).unwrap(),
+            None => stream
+                .write_all(format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+                .unwrap(),
+        }
+        // Half-close so the endpoint's drain sees EOF instead of
+        // blocking out its read timeout.
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        response
+    };
+
+    let response = get("/metrics", None);
+    assert!(response.starts_with("HTTP/1.1 200 OK\r\n"), "{response}");
+    assert!(response.contains("Content-Type: text/plain; version=0.0.4"));
+    let body = response.split("\r\n\r\n").nth(1).expect("header/body split");
+    let series = expo::parse(body).expect("scrape body must parse back cleanly");
+
+    let m = server.metrics();
+    let counter = |c: &std::sync::atomic::AtomicU64| {
+        c.load(std::sync::atomic::Ordering::Relaxed) as f64
+    };
+    assert_eq!(find(&series, "rsic_requests_total", &[]).value, counter(&m.requests));
+    assert_eq!(find(&series, "rsic_responses_total", &[]).value, 12.0);
+    assert_eq!(find(&series, "rsic_batched_inputs_total", &[]).value, 12.0);
+    let (hits, misses) = server.cache().stats();
+    assert_eq!(find(&series, "rsic_model_cache_hits_total", &[]).value, hits as f64);
+    assert_eq!(find(&series, "rsic_model_cache_misses_total", &[]).value, misses as f64);
+    let lq = m.latency_quantiles();
+    assert_eq!(find(&series, "rsic_latency_seconds_count", &[]).value, lq.n as f64);
+    assert_eq!(find(&series, "rsic_latency_seconds", &[("quantile", "0.5")]).value, lq.p50);
+    assert_eq!(find(&series, "rsic_latency_seconds", &[("quantile", "0.99")]).value, lq.p99);
+
+    // The per-layer kernel histograms rode the same scrape: both layers
+    // saw one row per request, and the +Inf bucket equals the count.
+    for layer in ["layers.0", "head"] {
+        let calls = find(&series, "rsic_layer_gemm_seconds_count", &[("layer", layer)]).value;
+        assert!(calls >= 1.0, "{layer} must have recorded calls");
+        let inf =
+            find(&series, "rsic_layer_gemm_seconds_bucket", &[("layer", layer), ("le", "+Inf")]);
+        assert_eq!(inf.value, calls, "{layer}: +Inf bucket must equal the call count");
+        assert_eq!(find(&series, "rsic_layer_rows_total", &[("layer", layer)]).value, 12.0);
+    }
+    let spans = find(&series, "rsic_obs_spans_total", &[]).value;
+    assert!(spans >= 24.0, "two instrumented layers x 12 requests, got {spans}");
+
+    // Typed refusals: wrong path, wrong method, oversized head.
+    assert!(get("/nope", None).starts_with("HTTP/1.1 404"));
+    assert!(get("", Some(b"POST /metrics HTTP/1.1\r\n\r\n")).starts_with("HTTP/1.1 405"));
+    let huge = vec![b'A'; obs::endpoint::MAX_REQUEST_BYTES + 1024];
+    assert!(get("", Some(&huge)).starts_with("HTTP/1.1 431"));
+
+    drop(endpoint);
+    obs::set_enabled(false);
+    obs::span::reset();
+    obs::layers::reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The hard constraint: turning instrumentation on must not change a
+/// single output bit of served inference.
+#[test]
+fn obs_enabled_serving_is_bit_identical() {
+    let _g = guard();
+    obs::set_enabled(false);
+    obs::span::reset();
+    obs::layers::reset();
+    let dir = tmp_dir("bits");
+    let ckpt = dir.join("m.tenz");
+    write_checkpoint(&ckpt, 23);
+    let inputs: Vec<Vec<f32>> = (0..16)
+        .map(|i| (0..12).map(|j| ((i * 7 + j * 3) % 29) as f32 * 0.25 - 2.0).collect())
+        .collect();
+
+    let run = || -> Vec<Vec<f32>> {
+        let server = Server::new(serve_config());
+        inputs.iter().map(|x| server.infer(&ckpt, x.clone()).unwrap()).collect()
+    };
+    let baseline = run();
+    obs::set_enabled(true);
+    let instrumented = run();
+    obs::set_enabled(false);
+
+    for (i, (a, b)) in baseline.iter().zip(&instrumented).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "request {i} component {j}: obs changed an output bit ({x} vs {y})"
+            );
+        }
+    }
+    // And the instrumented run actually observed something.
+    assert!(obs::span::recorded_total() >= 32, "spans: {}", obs::span::recorded_total());
+    let layers = obs::layers::snapshot();
+    assert_eq!(layers.len(), 2, "{layers:?}");
+    obs::span::reset();
+    obs::layers::reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Served traffic exports a structurally sound Chrome trace with the
+/// expected span names.
+#[test]
+fn trace_json_export() {
+    let _g = guard();
+    obs::set_enabled(true);
+    obs::span::reset();
+    obs::layers::reset();
+    let dir = tmp_dir("trace");
+    let ckpt = dir.join("m.tenz");
+    write_checkpoint(&ckpt, 31);
+    {
+        let server = Server::new(serve_config());
+        for i in 0..6 {
+            server.infer(&ckpt, vec![0.1 * i as f32; 12]).unwrap();
+        }
+        // Dropping the server joins its batcher threads, flushing their
+        // span buffers into the global store.
+    }
+    obs::set_enabled(false);
+    let out = dir.join("trace.json");
+    let n = obs::span::write_trace(&out).unwrap();
+    assert!(n >= 12, "expected at least 2 gemm spans per request, wrote {n}");
+    let body = std::fs::read_to_string(&out).unwrap();
+    assert!(body.starts_with("{\"traceEvents\": ["));
+    assert!(body.trim_end().ends_with("]}"));
+    assert!(body.contains("\"name\": \"gemm\""));
+    assert!(body.contains("\"name\": \"execute\""));
+    assert!(body.contains("\"name\": \"queue_wait\""));
+    assert!(body.contains("\"layer\": \"head\""));
+    assert_eq!(body.matches("\"ph\": \"X\"").count(), n);
+    obs::span::reset();
+    obs::layers::reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -169,6 +169,8 @@ fn planned_schedules_ignore_rsic_threads() {
 /// tenant — because everything random was fixed at plan time.
 #[test]
 fn scenario_runs_submit_identical_request_multisets_across_thread_counts() {
+    // Determinism must survive instrumentation: obs on for both runs.
+    rsi_compress::obs::set_enabled(true);
     let dir = tmp_dir("determinism");
     let a = dir.join("a.tenz");
     let b = dir.join("b.tenz");
