@@ -38,6 +38,7 @@ USAGE:
                 [--shard-size N[k|m|g]]       # write a sharded checkpoint (--out is a .toml manifest)
                 [--adaptive <budget-ratio>]   # section-5 adaptive layer-wise ranks
                 [--store-dtype f32|f16|i8]    # on-disk factor dtype (i8 adds per-row .scale tensors)
+                [--compress-payload]          # chunk-compress the output at rest (read transparently)
   rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
   rsic serve    --checkpoint F [--checkpoint F2 ...] [--requests N] [--clients C]
                 [--batch B] [--wait-ms MS] [--workers W] [--queue-depth Q]
@@ -236,6 +237,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", crate::util::default_threads())?,
         shard_size,
         store_dtype,
+        compress_payload: args.flag("compress-payload"),
         ..Default::default()
     })?;
     let report = pipe.compress_to_path(src.clone(), &plan, out)?;

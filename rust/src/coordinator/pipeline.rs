@@ -76,6 +76,13 @@ pub struct PipelineConfig {
     /// `.scale` siblings. Affects only newly written factors; passthrough
     /// tensors keep their source dtype.
     pub store_dtype: StoreDType,
+    /// Store the output chunk-compressed at rest (`rsic compress
+    /// --compress-payload`): each container is rewritten into the
+    /// `TENZC001` form as it closes (per-chunk frames with FNV-1a
+    /// hashes — see `io::chunkz`). Readers sniff the form by magic, so
+    /// downstream consumers need no flag. `shard_size` still budgets
+    /// *raw* bytes per shard.
+    pub compress_payload: bool,
 }
 
 impl Default for PipelineConfig {
@@ -88,6 +95,7 @@ impl Default for PipelineConfig {
             passthrough_chunk: 1 << 20,
             shard_size: None,
             store_dtype: StoreDType::F32,
+            compress_payload: false,
         }
     }
 }
@@ -194,19 +202,25 @@ type JobOutput = (LayerPlan, Result<(Factorization, f64, Option<f64>), String>);
 /// which a [`ShardedWriter`] partitions into contiguous sorted runs (the
 /// write frontier is preserved *per shard*).
 enum CheckpointSink {
-    Single(TenzWriter),
+    Single {
+        writer: TenzWriter,
+        /// Chunk-compress the finished container in place (the same
+        /// post-pass `ShardedWriter` runs per shard).
+        compress: bool,
+    },
     Sharded(ShardedWriter),
 }
 
 impl CheckpointSink {
-    fn create(out: &Path, shard_size: Option<u64>) -> Result<Self, TenzError> {
+    fn create(out: &Path, shard_size: Option<u64>, compress: bool) -> Result<Self, TenzError> {
         if is_manifest_path(out) {
-            Ok(CheckpointSink::Sharded(ShardedWriter::create(
+            Ok(CheckpointSink::Sharded(ShardedWriter::create_with(
                 out,
                 shard_size.unwrap_or(u64::MAX),
+                compress.then_some(crate::io::chunkz::DEFAULT_CHUNK),
             )?))
         } else {
-            Ok(CheckpointSink::Single(TenzWriter::create(out)?))
+            Ok(CheckpointSink::Single { writer: TenzWriter::create(out)?, compress })
         }
     }
 
@@ -217,7 +231,7 @@ impl CheckpointSink {
         dims: &[usize],
     ) -> Result<EntrySink<'_>, TenzError> {
         match self {
-            CheckpointSink::Single(w) => w.begin_entry(name, dtype, dims),
+            CheckpointSink::Single { writer, .. } => writer.begin_entry(name, dtype, dims),
             CheckpointSink::Sharded(w) => w.begin_entry(name, dtype, dims),
         }
     }
@@ -232,7 +246,7 @@ impl CheckpointSink {
 
     fn tensors_written(&self) -> usize {
         match self {
-            CheckpointSink::Single(w) => w.tensors_written(),
+            CheckpointSink::Single { writer, .. } => writer.tensors_written(),
             CheckpointSink::Sharded(w) => w.tensors_written(),
         }
     }
@@ -240,8 +254,14 @@ impl CheckpointSink {
     /// Commit the output; returns how many shard files back it.
     fn finish(self) -> Result<usize, TenzError> {
         match self {
-            CheckpointSink::Single(w) => {
-                w.finish()?;
+            CheckpointSink::Single { writer, compress } => {
+                let path = writer.finish()?;
+                if compress {
+                    // Same atomic shape as the write itself: the raw
+                    // container is already in place, and the compressed
+                    // form replaces it via a temp-sibling rename.
+                    crate::io::chunkz::compress_file(&path, crate::io::chunkz::DEFAULT_CHUNK)?;
+                }
                 Ok(1)
             }
             CheckpointSink::Sharded(w) => Ok(w.finish()?.shards.len()),
@@ -605,7 +625,11 @@ impl Pipeline {
         // immediately-detectable output-path failure costs zero
         // factorization work. A `.toml` output path makes it a sharded
         // checkpoint (manifest + shards); anything else a single `.tenz`.
-        let mut writer = CheckpointSink::create(out.as_ref(), self.config.shard_size)?;
+        let mut writer = CheckpointSink::create(
+            out.as_ref(),
+            self.config.shard_size,
+            self.config.compress_payload,
+        )?;
 
         // Jobs are submitted in write order, never more than `window`
         // ahead of the write frontier: completed-but-unwritten results
@@ -979,6 +1003,35 @@ mod tests {
         let back = TensorFile::read(&out).unwrap();
         assert_eq!(back.to_bytes(), eager.compressed.to_bytes());
         assert_eq!(stream.tensors_written, back.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compress_payload_output_decodes_bit_identically() {
+        // With `compress_payload` on, the single-file output is rewritten
+        // into the chunk-compressed at-rest form; the lazy reader must
+        // decode it back to exactly the bytes the plain run produces.
+        let dir = std::env::temp_dir().join(format!("pipe_chunkz_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("out.tenz");
+
+        let ckpt = test_ckpt();
+        let plan = CompressionPlan::uniform_alpha(0.4, Method::Rsi(RsiOptions::with_q(2, 11)));
+        let pipe = Pipeline::new(PipelineConfig {
+            workers: 2,
+            compress_payload: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let eager = pipe.compress_checkpoint(&ckpt, &plan).unwrap();
+        let stream = pipe.compress_to_path(Arc::new(ckpt), &plan, &out).unwrap();
+        assert!(stream.outcomes.iter().all(|o| o.error.is_none()), "{:?}", stream.outcomes);
+
+        let r = crate::io::TenzReader::open(&out).unwrap();
+        assert!(r.is_compressed(), "output should be a TENZC001 container");
+        assert_eq!(r.file_bytes(), eager.compressed.to_bytes().len() as u64);
+        let back = r.read_all().unwrap();
+        assert_eq!(back.to_bytes(), eager.compressed.to_bytes());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -343,6 +343,28 @@ impl CheckpointSource {
         }
     }
 
+    /// Open-time `(length, mtime)` of every backing file, in
+    /// [`modified_snapshot`](Self::modified_snapshot) order. Cache keys
+    /// fold the lengths in because mtime alone has whole-second
+    /// granularity on some filesystems — a same-second rewrite must not
+    /// serve stale kernels.
+    pub fn backing_stats(&self) -> Vec<(u64, Option<SystemTime>)> {
+        match self {
+            CheckpointSource::Single(r) => vec![r.tenz().backing_stat()],
+            CheckpointSource::Sharded(s) => s.backing_stats(),
+        }
+    }
+
+    /// Content fingerprint for sharded checkpoints (the manifest's
+    /// [`identity_hash`](super::shard::ShardManifest::identity_hash));
+    /// `None` for single containers, which carry no stored hash.
+    pub fn identity(&self) -> Option<u64> {
+        match self {
+            CheckpointSource::Single(_) => None,
+            CheckpointSource::Sharded(s) => Some(s.identity_hash()),
+        }
+    }
+
     /// Tensors in the checkpoint (header/manifest metadata only).
     pub fn tensor_count(&self) -> usize {
         match self {

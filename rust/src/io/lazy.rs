@@ -1,69 +1,202 @@
 //! Lazy, indexed `.tenz` reading: [`TenzReader`].
 //!
-//! `open` runs the shared header scan ([`scan_index`]) over the file —
-//! O(header) bytes for an N-tensor container — and keeps a
-//! name → [`TensorMeta`] index plus the open file handle. Tensor payloads
-//! are materialized one at a time via positional reads, so a checkpoint
-//! larger than RAM can flow through the streaming pipeline: peak memory
-//! tracks the tensors actually in flight, never the container size.
+//! `open` runs the shared header scan ([`scan_index`]) over the
+//! container — O(header) bytes for an N-tensor file — and keeps a
+//! name → [`TensorMeta`] index plus a [`PayloadSource`] backend. Tensor
+//! payloads are materialized one at a time via positional reads, so a
+//! checkpoint larger than RAM can flow through the streaming pipeline:
+//! peak memory tracks the tensors actually in flight, never the
+//! container size.
 //!
-//! Payload reads are counted ([`TenzReader::payload_reads`]) so tests and
-//! callers can prove how often the disk was touched — the streaming
+//! Two storage forms hide behind one reader, sniffed by magic at open:
+//!
+//! * **raw** `TENZ0001` — reads go straight to the [`PayloadSource`]
+//!   tier (mmap where available: payload access is a page-cache hit,
+//!   and chunked streaming borrows the mapping with zero copies).
+//! * **compressed** `TENZC001` ([`super::chunkz`]) — reads route
+//!   through a [`ChunkzReader`], which decompresses and hash-verifies
+//!   one chunk at a time; tensor offsets address the *decompressed*
+//!   byte space, so the index and all callers are form-agnostic.
+//!
+//! Payload reads are counted ([`TenzReader::payload_reads`]) so tests
+//! and callers can prove how often the disk was touched — the streaming
 //! pipeline asserts each planned weight is read exactly once.
 
+use super::chunkz::{ChunkzReader, CHUNKZ_MAGIC};
+use super::source::{PayloadSource, SourceMode};
 use super::tenz::{mat_from_entry, scan_index, TensorEntry, TensorFile, TensorMeta, TenzError};
 use crate::tensor::Mat;
 use std::collections::BTreeMap;
-use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Indexed lazy reader over an on-disk `.tenz` container.
+/// Storage backend behind one open container: raw positional access or
+/// chunk-decompressing access, same `read_at` contract either way.
+#[derive(Debug)]
+enum Backend {
+    Raw(PayloadSource),
+    Compressed(ChunkzReader),
+}
+
+impl Backend {
+    /// Logical (decompressed) container length.
+    fn len(&self) -> u64 {
+        match self {
+            Backend::Raw(s) => s.len(),
+            Backend::Compressed(c) => c.raw_len(),
+        }
+    }
+
+    fn read_at(&self, buf: &mut [u8], offset: u64) -> Result<(), TenzError> {
+        match self {
+            Backend::Raw(s) => s.read_at(buf, offset),
+            Backend::Compressed(c) => c.read_at(buf, offset),
+        }
+    }
+
+    /// Zero-copy borrow of payload bytes — `Some` only on the raw mmap
+    /// backend (compressed chunks are synthesized, not resident).
+    fn as_slice(&self, offset: u64, len: usize) -> Option<&[u8]> {
+        match self {
+            Backend::Raw(s) => s.as_slice(offset, len),
+            Backend::Compressed(_) => None,
+        }
+    }
+}
+
+/// `Read + Seek` adapter over a [`Backend`] so `scan_index` can walk
+/// entry headers the same way over every storage form.
+struct BackendCursor<'a> {
+    backend: &'a Backend,
+    pos: u64,
+}
+
+impl Read for BackendCursor<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let remaining = self.backend.len().saturating_sub(self.pos);
+        if remaining == 0 || buf.is_empty() {
+            return Ok(0);
+        }
+        let n = (buf.len() as u64).min(remaining) as usize;
+        self.backend.read_at(&mut buf[..n], self.pos).map_err(|e| match e {
+            TenzError::Io(io) => io,
+            other => std::io::Error::new(std::io::ErrorKind::InvalidData, other.to_string()),
+        })?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+impl Seek for BackendCursor<'_> {
+    fn seek(&mut self, pos: SeekFrom) -> std::io::Result<u64> {
+        let new = match pos {
+            SeekFrom::Start(o) => Some(o),
+            SeekFrom::End(d) => checked_offset(self.backend.len(), d),
+            SeekFrom::Current(d) => checked_offset(self.pos, d),
+        };
+        match new {
+            Some(p) => {
+                self.pos = p;
+                Ok(p)
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "seek to a negative or overflowing position",
+            )),
+        }
+    }
+}
+
+fn checked_offset(base: u64, delta: i64) -> Option<u64> {
+    if delta >= 0 {
+        base.checked_add(delta as u64)
+    } else {
+        base.checked_sub(delta.unsigned_abs())
+    }
+}
+
+/// Indexed lazy reader over an on-disk `.tenz` container (raw or
+/// chunk-compressed — sniffed by magic).
 ///
-/// All accessors take `&self`; payloads are fetched with positional reads
-/// (`pread` on unix), so one reader can serve many worker threads
-/// concurrently without a lock.
+/// All accessors take `&self`; payloads are fetched with positional
+/// reads through the [`PayloadSource`] tier, so one reader can serve
+/// many worker threads concurrently. The backend holds the handle (or
+/// mapping) opened at construction and never reopens by path, so a
+/// container atomically replaced mid-run is still read with the bytes
+/// this reader's index describes — the old inode stays alive until the
+/// reader drops.
 #[derive(Debug)]
 pub struct TenzReader {
     path: PathBuf,
-    file: File,
+    backend: Backend,
     index: BTreeMap<String, TensorMeta>,
+    /// Logical container length (decompressed bytes for `TENZC001`).
     total_len: u64,
+    /// On-disk length (what `stat` reports; smaller than `total_len`
+    /// when the container is compressed).
+    disk_len: u64,
     /// Modification time snapshot taken at open — the bytes this index
     /// describes. Cache keys (serve's model cache) pair it with the path
-    /// so a rewritten checkpoint is a different model, not a stale hit.
+    /// and length so a rewritten checkpoint is a different model, not a
+    /// stale hit.
     modified: Option<std::time::SystemTime>,
     payload_reads: AtomicU64,
 }
 
 impl TenzReader {
     /// Open a container and index it by scanning entry headers only.
-    /// Every declared size is validated against the file length before
-    /// anything is allocated; payload bytes are seeked past, not read.
-    ///
-    /// The scan runs on the bare file handle — deliberately unbuffered,
-    /// because `BufReader`'s `Seek` impl discards (and then refills) its
-    /// buffer on every payload skip, which would turn the O(header) open
-    /// into O(file) reads for sub-buffer-sized tensors. Header fields are
-    /// tiny, so the extra syscalls per entry are the cheaper trade.
+    /// Every declared size is validated against the (logical) container
+    /// length before anything is allocated; payload bytes are seeked
+    /// past, not read. Backend selection honors `$RSIC_IO`.
     pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        Self::open_mode(path, SourceMode::from_env())
+    }
+
+    /// Open with an explicit [`SourceMode`] — how tests and the
+    /// cold-start bench pin a backend regardless of environment.
+    pub fn open_mode(path: impl AsRef<Path>, mode: SourceMode) -> Result<Self, TenzError> {
         let path = path.as_ref().to_path_buf();
-        let file = File::open(&path)?;
-        let md = file.metadata()?;
-        let total_len = md.len();
-        let modified = md.modified().ok();
+        let modified = std::fs::metadata(&path).ok().and_then(|m| m.modified().ok());
+        let source = PayloadSource::open_mode(&path, mode)?;
+        let disk_len = source.len();
+        let mut magic = [0u8; 8];
+        let compressed = disk_len >= 8 && {
+            source.read_at(&mut magic, 0)?;
+            magic == *CHUNKZ_MAGIC
+        };
+        let backend = if compressed {
+            Backend::Compressed(ChunkzReader::open(source, path.display().to_string())?)
+        } else {
+            Backend::Raw(source)
+        };
+        let total_len = backend.len();
         let metas = {
-            let mut r = &file;
-            scan_index(&mut r, total_len)?
+            let mut cursor = BackendCursor { backend: &backend, pos: 0 };
+            scan_index(&mut cursor, total_len)?
         };
         let index = metas.into_iter().map(|m| (m.name.clone(), m)).collect();
-        Ok(TenzReader { path, file, index, total_len, modified, payload_reads: AtomicU64::new(0) })
+        Ok(TenzReader {
+            path,
+            backend,
+            index,
+            total_len,
+            disk_len,
+            modified,
+            payload_reads: AtomicU64::new(0),
+        })
     }
 
     /// Modification time of the container at open (`None` where the
     /// filesystem doesn't report one).
     pub fn modified(&self) -> Option<std::time::SystemTime> {
         self.modified
+    }
+
+    /// `(on-disk length, mtime)` at open — what cache staleness keys
+    /// fold in alongside the path.
+    pub fn backing_stat(&self) -> (u64, Option<std::time::SystemTime>) {
+        (self.disk_len, self.modified)
     }
 
     pub fn path(&self) -> &Path {
@@ -97,9 +230,29 @@ impl TenzReader {
         self.index.values()
     }
 
-    /// Container size on disk.
+    /// Logical container size: the raw `.tenz` byte length, whatever
+    /// the at-rest form. Equal to on-disk size for raw containers.
     pub fn file_bytes(&self) -> u64 {
         self.total_len
+    }
+
+    /// Bytes actually on disk (compressed size for `TENZC001`).
+    pub fn disk_bytes(&self) -> u64 {
+        self.disk_len
+    }
+
+    /// Whether the at-rest form is chunk-compressed.
+    pub fn is_compressed(&self) -> bool {
+        matches!(self.backend, Backend::Compressed(_))
+    }
+
+    /// Which access path payload reads take: `"mmap"`, `"pread"`,
+    /// `"seek"`, or `"chunkz"` for compressed containers.
+    pub fn source_kind(&self) -> &'static str {
+        match &self.backend {
+            Backend::Raw(s) => s.kind(),
+            Backend::Compressed(_) => "chunkz",
+        }
     }
 
     /// Total payload bytes across all tensors (storage accounting),
@@ -121,59 +274,24 @@ impl TenzReader {
         self.payload_reads.load(Ordering::Relaxed)
     }
 
-    #[cfg(unix)]
-    fn read_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
-        use std::os::unix::fs::FileExt;
-        self.file.read_exact_at(buf, offset)
-    }
-
-    #[cfg(windows)]
-    fn read_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
-        // seek_read takes an explicit offset per call, so concurrent
-        // readers don't race on a shared cursor — and the original handle
-        // is kept, so an atomic replace of the path mid-run cannot pair
-        // this index with another file's bytes.
-        use std::os::windows::fs::FileExt;
-        let mut done = 0usize;
-        while done < buf.len() {
-            let n = self.file.seek_read(&mut buf[done..], offset + done as u64)?;
-            if n == 0 {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::UnexpectedEof,
-                    "unexpected eof in .tenz payload",
-                ));
-            }
-            done += n;
-        }
-        Ok(())
-    }
-
-    #[cfg(not(any(unix, windows)))]
-    fn read_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
-        // Last-resort fallback: a fresh handle per read keeps `&self`
-        // concurrent. Caveat: reopening by path means a file atomically
-        // replaced mid-run is read with this reader's stale index.
-        use std::io::{Read, Seek, SeekFrom};
-        let mut f = File::open(&self.path)?;
-        f.seek(SeekFrom::Start(offset))?;
-        f.read_exact(buf)
-    }
-
     /// Materialize one tensor's payload.
     pub fn entry(&self, name: &str) -> Result<TensorEntry, TenzError> {
         let m = self.index.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
-        // nbytes was proven ≤ file length at open, so this allocation is
-        // bounded by the container size.
+        // nbytes was proven ≤ container length at open, so this
+        // allocation is bounded by the container size.
         let mut bytes = vec![0u8; m.nbytes as usize];
-        self.read_at(&mut bytes, m.offset)?;
+        self.backend.read_at(&mut bytes, m.offset)?;
         self.payload_reads.fetch_add(1, Ordering::Relaxed);
         Ok(TensorEntry { dtype: m.dtype, dims: m.dims.clone(), bytes })
     }
 
-    /// Stream one tensor's payload into `sink` via positional reads of at
-    /// most `chunk_bytes`, without ever materializing the whole payload —
-    /// peak residency is the chunk, not the tensor. Counts as a single
-    /// payload read (one materialization pass over the tensor).
+    /// Stream one tensor's payload into `sink` in pieces of at most
+    /// `chunk_bytes`, without ever materializing the whole payload —
+    /// peak residency is the chunk, not the tensor. On the mmap backend
+    /// the pieces are borrowed straight from the mapping (zero copies,
+    /// zero allocation); elsewhere they pass through one chunk-sized
+    /// buffer. Counts as a single payload read (one materialization
+    /// pass over the tensor).
     pub fn copy_payload_chunked(
         &self,
         name: &str,
@@ -182,13 +300,19 @@ impl TenzReader {
     ) -> Result<(), TenzError> {
         let m = self.index.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
         let chunk = (chunk_bytes.max(1) as u64).min(m.nbytes.max(1)) as usize;
-        let mut buf = vec![0u8; chunk];
-        let mut off = 0u64;
-        while off < m.nbytes {
-            let n = ((m.nbytes - off) as usize).min(chunk);
-            self.read_at(&mut buf[..n], m.offset + off)?;
-            sink(&buf[..n])?;
-            off += n as u64;
+        if let Some(payload) = self.backend.as_slice(m.offset, m.nbytes as usize) {
+            for piece in payload.chunks(chunk) {
+                sink(piece)?;
+            }
+        } else {
+            let mut buf = vec![0u8; chunk];
+            let mut off = 0u64;
+            while off < m.nbytes {
+                let n = ((m.nbytes - off) as usize).min(chunk);
+                self.backend.read_at(&mut buf[..n], m.offset + off)?;
+                sink(&buf[..n])?;
+                off += n as u64;
+            }
         }
         self.payload_reads.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -228,6 +352,7 @@ impl TenzReader {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::io::chunkz;
 
     fn tmp_dir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!("tenz_lazy_{tag}_{}", std::process::id()));
@@ -243,6 +368,9 @@ mod tests {
         tf
     }
 
+    const MODES: [SourceMode; 4] =
+        [SourceMode::Auto, SourceMode::Mmap, SourceMode::Pread, SourceMode::Seek];
+
     #[test]
     fn open_indexes_without_reading_payloads() {
         let dir = tmp_dir("index");
@@ -256,6 +384,8 @@ mod tests {
         assert_eq!(m.dims, vec![4, 6]);
         assert_eq!(m.nbytes, 4 * 6 * 4);
         assert_eq!(r.header_bytes() + r.payload_bytes(), r.file_bytes());
+        assert_eq!(r.disk_bytes(), r.file_bytes(), "raw form stores the logical bytes");
+        assert!(!r.is_compressed());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -280,30 +410,50 @@ mod tests {
     }
 
     #[test]
+    fn every_backend_reads_identical_bytes() {
+        let dir = tmp_dir("modes");
+        let path = dir.join("s.tenz");
+        let tf = sample();
+        tf.write(&path).unwrap();
+        let want = tf.to_bytes();
+        for mode in MODES {
+            let r = TenzReader::open_mode(&path, mode).unwrap();
+            assert_eq!(
+                r.read_all().unwrap().to_bytes(),
+                want,
+                "backend {} must be bit-identical",
+                r.source_kind()
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn chunked_copy_matches_entry_and_bounds_chunks() {
         let dir = tmp_dir("chunked");
         let path = dir.join("s.tenz");
         let tf = sample();
         tf.write(&path).unwrap();
-        let r = TenzReader::open(&path).unwrap();
-
         let want = tf.get("layers.0.weight").unwrap().bytes.clone();
-        let mut got = Vec::new();
-        let mut max_chunk = 0usize;
-        r.copy_payload_chunked("layers.0.weight", 10, &mut |ch| {
-            max_chunk = max_chunk.max(ch.len());
-            got.extend_from_slice(ch);
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(got, want, "chunked copy must reproduce the payload exactly");
-        assert!(max_chunk <= 10, "chunk {max_chunk} exceeds the 10-byte bound");
-        // One materialization pass, like entry().
-        assert_eq!(r.payload_reads(), 1);
-        assert!(matches!(
-            r.copy_payload_chunked("nope", 10, &mut |_| Ok(())),
-            Err(TenzError::NotFound(_))
-        ));
+        for mode in MODES {
+            let r = TenzReader::open_mode(&path, mode).unwrap();
+            let mut got = Vec::new();
+            let mut max_chunk = 0usize;
+            r.copy_payload_chunked("layers.0.weight", 10, &mut |ch| {
+                max_chunk = max_chunk.max(ch.len());
+                got.extend_from_slice(ch);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got, want, "chunked copy must reproduce the payload exactly");
+            assert!(max_chunk <= 10, "chunk {max_chunk} exceeds the 10-byte bound");
+            // One materialization pass, like entry().
+            assert_eq!(r.payload_reads(), 1);
+            assert!(matches!(
+                r.copy_payload_chunked("nope", 10, &mut |_| Ok(())),
+                Err(TenzError::NotFound(_))
+            ));
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -316,6 +466,52 @@ mod tests {
         let r = TenzReader::open(&path).unwrap();
         let back = r.read_all().unwrap();
         assert_eq!(back.to_bytes(), tf.to_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compressed_container_reads_transparently() {
+        let dir = tmp_dir("compressed");
+        let path = dir.join("s.tenz");
+        let tf = sample();
+        tf.write(&path).unwrap();
+        let raw_bytes = std::fs::metadata(&path).unwrap().len();
+        chunkz::compress_file(&path, 64).unwrap();
+        for mode in MODES {
+            let r = TenzReader::open_mode(&path, mode).unwrap();
+            assert!(r.is_compressed());
+            assert_eq!(r.source_kind(), "chunkz");
+            assert_eq!(r.file_bytes(), raw_bytes, "logical size is the raw container");
+            assert_eq!(r.header_bytes() + r.payload_bytes(), r.file_bytes());
+            assert_eq!(r.read_all().unwrap().to_bytes(), tf.to_bytes());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn replaced_container_keeps_serving_its_own_bytes() {
+        // The stale-index regression: atomically replacing the container
+        // after open must NOT pair this reader's index with the new
+        // file's bytes — every backend holds the original handle or
+        // mapping, so it keeps reading the old inode.
+        let dir = tmp_dir("replace");
+        let path = dir.join("s.tenz");
+        for mode in MODES {
+            let tf = sample();
+            tf.write(&path).unwrap();
+            let r = TenzReader::open_mode(&path, mode).unwrap();
+            let mut other = TensorFile::new();
+            other.insert("layers.0.weight", TensorEntry::from_f32(vec![24], &[9.0; 24]));
+            let tmp = dir.join("replacement.tenz");
+            other.write(&tmp).unwrap();
+            std::fs::rename(&tmp, &path).unwrap();
+            assert_eq!(
+                r.mat("layers.0.weight").unwrap(),
+                tf.mat("layers.0.weight").unwrap(),
+                "backend {} read replaced bytes through a stale index",
+                r.source_kind()
+            );
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -8,6 +8,12 @@
 //! append-mode [`TenzWriter`] for outputs produced layer-by-layer. See
 //! `io::tenz` module docs for the eager-vs-lazy decision rule.
 //!
+//! Below the readers, [`source`] is the positional-access tier
+//! ([`PayloadSource`]: mmap / pread / mutexed seek, `$RSIC_IO`), and
+//! [`chunkz`] the optional chunk-compressed at-rest form (`TENZC001`
+//! frames with per-chunk FNV-1a hashes) that `TenzReader` transparently
+//! decompresses. See DESIGN.md §Storage.
+//!
 //! Above the single-container layer, [`shard`] scales a checkpoint to a
 //! *set* of `.tenz` shards behind one TOML manifest ([`ShardManifest`]):
 //! [`ShardedReader`]/[`ShardedWriter`] mirror the lazy reader / streaming
@@ -15,13 +21,17 @@
 //! checkpoint path (single file or manifest) to the right reader.
 
 pub mod checkpoint;
+pub mod chunkz;
 pub mod lazy;
 pub mod shard;
+pub mod source;
 pub mod tenz;
 pub mod writer;
 
 pub use checkpoint::{CheckpointReader, CheckpointSource, WeightSource};
+pub use chunkz::ChunkzReader;
 pub use lazy::TenzReader;
 pub use shard::{ShardManifest, ShardedReader, ShardedWriter};
+pub use source::{PayloadSource, SourceMode};
 pub use tenz::{DType, TensorEntry, TensorFile, TensorMeta};
 pub use writer::TenzWriter;

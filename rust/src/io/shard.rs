@@ -38,7 +38,9 @@
 //!   `MissingShard`, `ShardHashMismatch`, `MisroutedTensor`,
 //!   `DuplicateAcrossShards` — never as a panic.
 
+use super::chunkz::{self, ChunkzReader};
 use super::lazy::TenzReader;
+use super::source::PayloadSource;
 use super::tenz::{
     tmp_sibling, validate_entry, validate_meta, DType, Fnv1a, TensorEntry, TensorFile, TenzError,
     MAGIC,
@@ -73,7 +75,19 @@ pub struct ShardEntry {
     /// writer can hash incrementally while streaming — the leading count
     /// is patched only at shard close. `finish`-time size + open-time
     /// structural validation cover the preamble.
+    ///
+    /// For compressed shards this is still the hash of the *raw* entry
+    /// region — content identity is invariant across at-rest forms, so
+    /// a re-compression (or decompression) of the same tensors keeps
+    /// the same hash.
     pub hash: u64,
+    /// Whether the shard file is stored in the chunk-compressed
+    /// `TENZC001` form (`codec = "chunkz"` in the manifest; absent for
+    /// raw shards). [`TenzReader`] sniffs the form by magic, so readers
+    /// work either way — the flag routes [`verify_hashes`]
+    /// (`ShardedReader::verify_hashes`) and documents `bytes` as the
+    /// on-disk (compressed) size.
+    pub compressed: bool,
     /// Tensor names stored in this shard, in sorted order.
     pub tensors: Vec<String>,
 }
@@ -104,6 +118,9 @@ impl ShardManifest {
             out.push_str(&format!("file = {}\n", toml_quote(&s.file)));
             out.push_str(&format!("bytes = {}\n", s.bytes));
             out.push_str(&format!("hash = \"{:016x}\"\n", s.hash));
+            if s.compressed {
+                out.push_str("codec = \"chunkz\"\n");
+            }
             let tensors: Vec<String> = s.tensors.iter().map(|t| toml_quote(t)).collect();
             out.push_str(&format!("tensors = [{}]\n", tensors.join(", ")));
         }
@@ -142,6 +159,23 @@ impl ShardManifest {
             let hash = u64::from_str_radix(hash_hex, 16).map_err(|_| {
                 TenzError::Manifest(format!("shard {file:?}: bad hash {hash_hex:?}"))
             })?;
+            let compressed = match doc.get(&format!("shard.{i}.codec")) {
+                None => false,
+                Some(v) => match v.as_str() {
+                    Some("chunkz") => true,
+                    Some(other) => {
+                        return Err(TenzError::Manifest(format!(
+                            "shard {file:?}: unsupported codec {other:?} (this build reads \
+                             \"chunkz\")"
+                        )));
+                    }
+                    None => {
+                        return Err(TenzError::Manifest(format!(
+                            "shard {file:?}: codec is not a string"
+                        )));
+                    }
+                },
+            };
             let tensors_val = doc
                 .get(&format!("shard.{i}.tensors"))
                 .ok_or_else(|| TenzError::Manifest(format!("shard {file:?}: missing tensors")))?;
@@ -156,7 +190,7 @@ impl ShardManifest {
                     })
                 })
                 .collect::<Result<Vec<String>, TenzError>>()?;
-            shards.push(ShardEntry { file, bytes, hash, tensors });
+            shards.push(ShardEntry { file, bytes, hash, compressed, tensors });
         }
         Ok(ShardManifest { shards })
     }
@@ -254,6 +288,7 @@ pub struct ShardedReader {
     manifest: ShardManifest,
     route: BTreeMap<String, usize>,
     readers: Vec<OnceLock<TenzReader>>,
+    manifest_len: u64,
     manifest_mtime: Option<SystemTime>,
     shard_mtimes: Vec<Option<SystemTime>>,
 }
@@ -261,8 +296,9 @@ pub struct ShardedReader {
 impl ShardedReader {
     pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
         let manifest_path = path.as_ref().to_path_buf();
-        let manifest_mtime =
-            std::fs::metadata(&manifest_path).ok().and_then(|m| m.modified().ok());
+        let manifest_md = std::fs::metadata(&manifest_path).ok();
+        let manifest_len = manifest_md.as_ref().map(|m| m.len()).unwrap_or(0);
+        let manifest_mtime = manifest_md.and_then(|m| m.modified().ok());
         let manifest = ShardManifest::load(&manifest_path)?;
         let dir = manifest_path
             .parent()
@@ -293,6 +329,7 @@ impl ShardedReader {
             manifest,
             route,
             readers,
+            manifest_len,
             manifest_mtime,
             shard_mtimes,
         })
@@ -339,6 +376,28 @@ impl ShardedReader {
         v
     }
 
+    /// Open-time `(length, mtime)` of every backing file, manifest
+    /// first. Cache keys fold both in — mtime alone has whole-second
+    /// granularity on some filesystems, so a same-second rewrite would
+    /// otherwise serve stale kernels.
+    pub fn backing_stats(&self) -> Vec<(u64, Option<SystemTime>)> {
+        let mut v = Vec::with_capacity(1 + self.shard_mtimes.len());
+        v.push((self.manifest_len, self.manifest_mtime));
+        for (s, mtime) in self.manifest.shards.iter().zip(&self.shard_mtimes) {
+            // Open proved on-disk length == the manifest's declared size.
+            v.push((s.bytes, *mtime));
+        }
+        v
+    }
+
+    /// The manifest's content fingerprint (see
+    /// [`ShardManifest::identity_hash`]) — the strongest staleness
+    /// signal cache keys carry: any content change flows through the
+    /// per-shard hashes into this value, mtime granularity aside.
+    pub fn identity_hash(&self) -> u64 {
+        self.manifest.identity_hash()
+    }
+
     /// How many shards have actually been opened so far — the laziness
     /// gauge tests assert against.
     pub fn shards_opened(&self) -> usize {
@@ -383,40 +442,65 @@ impl ShardedReader {
         Ok(self.readers[idx].get_or_init(|| r))
     }
 
-    /// Full integrity pass: re-read every shard and compare its entry
-    /// region's FNV-1a against the manifest. O(checkpoint) I/O — this is
+    /// Full integrity pass: re-read every shard and compare its *raw*
+    /// entry region's FNV-1a against the manifest. Compressed shards
+    /// decompress through the chunk layer, whose per-chunk hashes make
+    /// frame-level rot a typed [`TenzError::ChunkCorrupt`] before the
+    /// shard-level comparison even runs. O(checkpoint) I/O — this is
     /// the deliberate, explicit check; `open` stays O(stat).
     pub fn verify_hashes(&self) -> Result<(), TenzError> {
-        use std::io::Read;
         for s in &self.manifest.shards {
             let p = self.dir.join(&s.file);
-            let mut f = std::fs::File::open(&p).map_err(|e| TenzError::MissingShard {
+            let src = PayloadSource::open(&p).map_err(|e| TenzError::MissingShard {
                 file: s.file.clone(),
                 detail: e.to_string(),
             })?;
+            if src.len() != s.bytes {
+                return Err(TenzError::Manifest(format!(
+                    "shard {:?}: {} bytes on disk, manifest declares {}",
+                    s.file,
+                    src.len(),
+                    s.bytes
+                )));
+            }
+            enum Form {
+                Raw(PayloadSource),
+                Compressed(ChunkzReader),
+            }
+            let form = if s.compressed {
+                Form::Compressed(ChunkzReader::open(src, s.file.clone())?)
+            } else {
+                Form::Raw(src)
+            };
+            let raw_len = match &form {
+                Form::Raw(r) => r.len(),
+                Form::Compressed(c) => c.raw_len(),
+            };
+            let read_at = |buf: &mut [u8], off: u64| -> Result<(), TenzError> {
+                match &form {
+                    Form::Raw(r) => r.read_at(buf, off),
+                    Form::Compressed(c) => c.read_at(buf, off),
+                }
+            };
             let mut preamble = [0u8; 12];
-            f.read_exact(&mut preamble).map_err(|_| {
-                TenzError::Manifest(format!("shard {:?} shorter than its preamble", s.file))
-            })?;
+            if raw_len < preamble.len() as u64 {
+                return Err(TenzError::Manifest(format!(
+                    "shard {:?} shorter than its preamble",
+                    s.file
+                )));
+            }
+            read_at(&mut preamble, 0)?;
             if preamble[..MAGIC.len()] != MAGIC[..] {
                 return Err(TenzError::BadMagic);
             }
             let mut hasher = Fnv1a::new();
-            let mut total = preamble.len() as u64;
             let mut buf = vec![0u8; 1 << 16];
-            loop {
-                let n = f.read(&mut buf)?;
-                if n == 0 {
-                    break;
-                }
+            let mut off = preamble.len() as u64;
+            while off < raw_len {
+                let n = ((raw_len - off) as usize).min(buf.len());
+                read_at(&mut buf[..n], off)?;
                 hasher.update(&buf[..n]);
-                total += n as u64;
-            }
-            if total != s.bytes {
-                return Err(TenzError::Manifest(format!(
-                    "shard {:?}: {} bytes on disk, manifest declares {}",
-                    s.file, total, s.bytes
-                )));
+                off += n as u64;
             }
             let got = hasher.finish();
             if got != s.hash {
@@ -512,6 +596,13 @@ pub struct ShardedWriter {
     dir: PathBuf,
     stem: String,
     budget: u64,
+    /// `Some(chunk_size)` compresses each shard into the `TENZC001`
+    /// form as it closes (a streaming post-pass over the staged file,
+    /// O(chunk) memory). The budget still governs *raw* bytes per
+    /// shard — deterministic rolling, independent of how well a given
+    /// shard compresses — and the manifest records the raw-content
+    /// hash with `bytes` = on-disk (compressed) size.
+    compress_chunk: Option<u32>,
     current: Option<TenzWriter>,
     current_file: String,
     current_part: PathBuf,
@@ -532,6 +623,20 @@ impl ShardedWriter {
         manifest_path: impl AsRef<Path>,
         shard_budget: u64,
     ) -> Result<Self, TenzError> {
+        Self::create_with(manifest_path, shard_budget, None)
+    }
+
+    /// [`create`](Self::create) with an at-rest form choice:
+    /// `compress_chunk = Some(chunk_size)` stores every shard
+    /// chunk-compressed (`TENZC001`, see [`chunkz`]); `None` stores raw.
+    pub fn create_with(
+        manifest_path: impl AsRef<Path>,
+        shard_budget: u64,
+        compress_chunk: Option<u32>,
+    ) -> Result<Self, TenzError> {
+        if compress_chunk == Some(0) {
+            return Err(TenzError::Corrupt("compressed chunk size must be ≥ 1".into()));
+        }
         let manifest_path = manifest_path.as_ref().to_path_buf();
         let dir = manifest_path
             .parent()
@@ -547,6 +652,7 @@ impl ShardedWriter {
             dir,
             stem,
             budget: shard_budget.max(1),
+            compress_chunk,
             current: None,
             current_file: String::new(),
             current_part: PathBuf::new(),
@@ -571,17 +677,27 @@ impl ShardedWriter {
     }
 
     /// Close the current shard (if any) and record its manifest entry.
+    /// When compression is on, the staged shard is rewritten into the
+    /// `TENZC001` form here — after the raw writer's `finish` (so the
+    /// patched leading count is in the bytes being compressed), before
+    /// the manifest ever names the file.
     fn close_current(&mut self) -> Result<(), TenzError> {
         if let Some(w) = self.current.take() {
-            let entry = ShardEntry {
+            let mut entry = ShardEntry {
                 file: std::mem::take(&mut self.current_file),
                 bytes: w.bytes_written(),
                 hash: w.entry_hash(),
+                compressed: self.compress_chunk.is_some(),
                 tensors: std::mem::take(&mut self.current_tensors),
             };
             w.finish()?;
+            let part = std::mem::take(&mut self.current_part);
+            if let Some(chunk) = self.compress_chunk {
+                let (_raw, comp) = chunkz::compress_file(&part, chunk)?;
+                entry.bytes = comp;
+            }
             self.done.push(entry);
-            self.part_paths.push(std::mem::take(&mut self.current_part));
+            self.part_paths.push(part);
         }
         Ok(())
     }
@@ -712,12 +828,14 @@ mod tests {
                     file: "m-00000.tenz".into(),
                     bytes: 1234,
                     hash: 0xdead_beef_0102_0304,
+                    compressed: false,
                     tensors: vec!["a.weight".into(), "b \"q\" \\ #x".into()],
                 },
                 ShardEntry {
                     file: "m-00001.tenz".into(),
                     bytes: 9,
                     hash: 7,
+                    compressed: true,
                     tensors: vec![],
                 },
             ],
@@ -744,11 +862,25 @@ mod tests {
         assert!(matches!(ShardManifest::parse(bad_hash), Err(TenzError::Manifest(_))));
         let dup = ShardManifest {
             shards: vec![
-                ShardEntry { file: "a".into(), bytes: 0, hash: 0, tensors: vec!["t".into()] },
-                ShardEntry { file: "b".into(), bytes: 0, hash: 0, tensors: vec!["t".into()] },
+                ShardEntry {
+                    file: "a".into(),
+                    bytes: 0,
+                    hash: 0,
+                    compressed: false,
+                    tensors: vec!["t".into()],
+                },
+                ShardEntry {
+                    file: "b".into(),
+                    bytes: 0,
+                    hash: 0,
+                    compressed: false,
+                    tensors: vec!["t".into()],
+                },
             ],
         };
         assert!(matches!(dup.route(), Err(TenzError::DuplicateAcrossShards { .. })));
+        let bad_codec = "version = 1\nshards = 1\n[shard.0]\nfile = \"x.tenz\"\nbytes = 1\nhash = \"0\"\ncodec = \"zstd\"\ntensors = []\n";
+        assert!(matches!(ShardManifest::parse(bad_codec), Err(TenzError::Manifest(_))));
     }
 
     #[test]
@@ -862,6 +994,67 @@ mod tests {
         assert_eq!(r.shard_count(), 2);
         assert_eq!(r.manifest().shards[0].tensors, vec!["big".to_string()]);
         assert_eq!(r.read_all().unwrap().to_bytes(), tf.to_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compressed_shards_roundtrip_and_verify() {
+        let dir = tmp_dir("compressed");
+        // Repetitive payloads (what quantized factors look like) so the
+        // codec actually bites.
+        let mut tf = TensorFile::new();
+        tf.insert("a.weight", TensorEntry::from_f32(vec![512], &[0.25; 512]));
+        tf.insert("b.weight", TensorEntry::from_f32(vec![512], &[0.5; 512]));
+        let manifest_path = dir.join("m.toml");
+        let mut w = ShardedWriter::create_with(&manifest_path, 1, Some(64)).unwrap();
+        for n in tf.names().map(str::to_string).collect::<Vec<_>>() {
+            w.append(&n, tf.get(&n).unwrap()).unwrap();
+        }
+        let manifest = w.finish().unwrap();
+        assert!(manifest.shards.iter().all(|s| s.compressed));
+        for s in &manifest.shards {
+            let on_disk = std::fs::metadata(dir.join(&s.file)).unwrap().len();
+            assert_eq!(on_disk, s.bytes, "manifest bytes must be the on-disk size");
+        }
+        let r = ShardedReader::open(&manifest_path).unwrap();
+        r.verify_hashes().unwrap();
+        assert_eq!(r.read_all().unwrap().to_bytes(), tf.to_bytes());
+
+        // Content hashes are raw-form invariant: the same tensors written
+        // raw carry the same per-shard hashes.
+        let raw_manifest = write_sharded(&dir, "raw.toml", &tf, 1);
+        let raw = ShardManifest::load(&raw_manifest).unwrap();
+        for (c, r) in manifest.shards.iter().zip(&raw.shards) {
+            assert_eq!(c.hash, r.hash, "raw-content hash must not depend on the at-rest form");
+            assert!(c.bytes < r.bytes, "compressible shard must shrink on disk");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_compressed_shard_is_a_typed_error() {
+        let dir = tmp_dir("compressed_corrupt");
+        let mut tf = TensorFile::new();
+        tf.insert("w", TensorEntry::from_f32(vec![256], &[1.5; 256]));
+        let manifest_path = dir.join("m.toml");
+        let mut w = ShardedWriter::create_with(&manifest_path, u64::MAX, Some(64)).unwrap();
+        w.append("w", tf.get("w").unwrap()).unwrap();
+        let manifest = w.finish().unwrap();
+        let shard_path = dir.join(&manifest.shards[0].file);
+        let mut bytes = std::fs::read(&shard_path).unwrap();
+        // Flip one frame byte, keeping the on-disk size (so open's stat
+        // check passes and the chunk layer must catch it).
+        bytes[40] ^= 0x10;
+        std::fs::write(&shard_path, &bytes).unwrap();
+        let r = ShardedReader::open(&manifest_path).unwrap();
+        match r.verify_hashes() {
+            Err(TenzError::ChunkCorrupt { .. }) | Err(TenzError::ShardHashMismatch { .. }) => {}
+            other => panic!("corruption must be typed, got {other:?}"),
+        }
+        match r.read_all() {
+            Err(TenzError::ChunkCorrupt { .. }) => {}
+            other => panic!("read of corrupt shard must be typed, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,410 @@
+//! Positional byte access behind one abstraction: [`PayloadSource`].
+//!
+//! Every `.tenz` read path used to pull payloads through per-call
+//! buffered reads. `PayloadSource` replaces that with a three-backend
+//! tier, picked at open time:
+//!
+//! * **mmap** (unix, 64-bit): the whole container is mapped
+//!   `PROT_READ`/`MAP_PRIVATE`; `read_at` is a memcpy out of the page
+//!   cache and [`PayloadSource::as_slice`] exposes the mapping directly
+//!   for true zero-copy streaming (passthrough copies, worker
+//!   cold-start loads).
+//! * **pread** (unix/windows): positional reads on the open handle
+//!   (`read_exact_at` / `seek_read`) — no shared cursor, no lock.
+//! * **seek** (everywhere): the open handle behind a mutex, explicit
+//!   `seek` + `read_exact`. This is the portable fallback; it keeps the
+//!   handle opened at construction (never reopens by path), so a
+//!   checkpoint atomically replaced mid-run still reads the bytes its
+//!   index describes — the old inode stays alive through the handle.
+//!
+//! Selection: [`SourceMode::Auto`] (mmap where available, else pread,
+//! else seek), overridable per-process with `RSIC_IO=mmap|pread|seek`
+//! or per-call via [`PayloadSource::open_mode`] (what the cold-start
+//! bench and the fallback CI leg use).
+
+use super::tenz::TenzError;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Which backend [`PayloadSource::open_mode`] should build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SourceMode {
+    /// mmap where supported, else positional reads, else seek+read.
+    #[default]
+    Auto,
+    /// Force the memory-mapped backend (falls back to `Pread` if the
+    /// platform has no mmap or the map fails, e.g. an empty file).
+    Mmap,
+    /// Force positional reads on the open handle.
+    Pread,
+    /// Force the portable mutexed seek+read backend.
+    Seek,
+}
+
+impl SourceMode {
+    /// Parse an `RSIC_IO` value. Unknown strings are `None` so callers
+    /// can warn rather than silently misconfigure.
+    pub fn parse(s: &str) -> Option<SourceMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(SourceMode::Auto),
+            "mmap" => Some(SourceMode::Mmap),
+            "pread" => Some(SourceMode::Pread),
+            "seek" => Some(SourceMode::Seek),
+            _ => None,
+        }
+    }
+
+    /// Backend requested by `$RSIC_IO`, or `Auto` when unset/unknown.
+    pub fn from_env() -> SourceMode {
+        match std::env::var("RSIC_IO") {
+            Ok(v) => SourceMode::parse(&v).unwrap_or_else(|| {
+                log::warn!("unknown RSIC_IO={v:?} (want mmap|pread|seek|auto); using auto");
+                SourceMode::Auto
+            }),
+            Err(_) => SourceMode::Auto,
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod map {
+    //! Raw `mmap(2)` binding — the crate universe has no `libc`/`memmap`,
+    //! and the two symbols we need are stable POSIX.
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// A read-only private mapping of a whole file. `Send + Sync`: the
+    /// mapping is immutable for its lifetime and unmapped exactly once
+    /// on drop.
+    pub struct MmapRegion {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    unsafe impl Send for MmapRegion {}
+    unsafe impl Sync for MmapRegion {}
+
+    impl MmapRegion {
+        /// Map `len` bytes of `file`. `None` on failure or for empty
+        /// files (mmap of length 0 is EINVAL) — callers fall back to a
+        /// read-based backend.
+        pub fn map(file: &File, len: u64) -> Option<MmapRegion> {
+            let len = usize::try_from(len).ok()?;
+            if len == 0 {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return None;
+            }
+            Some(MmapRegion { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            // Safe: the region is PROT_READ, private, and lives until drop.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for MmapRegion {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+
+    impl std::fmt::Debug for MmapRegion {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("MmapRegion").field("len", &self.len).finish()
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Imp {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap(map::MmapRegion),
+    #[cfg(any(unix, windows))]
+    Direct(File),
+    Seek(Mutex<File>),
+}
+
+/// Read-only positional access to one on-disk container.
+///
+/// All reads take `&self`; the mmap and pread backends are lock-free,
+/// the seek backend serializes on an internal mutex. The file length is
+/// snapshotted at open — the same snapshot `scan_index` validates
+/// against — so every backend reads the bytes the index describes.
+#[derive(Debug)]
+pub struct PayloadSource {
+    imp: Imp,
+    len: u64,
+}
+
+impl PayloadSource {
+    /// Open with the backend requested by `$RSIC_IO` (default: auto).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, TenzError> {
+        Self::open_mode(path, SourceMode::from_env())
+    }
+
+    /// Open with an explicit backend choice (tests and benches use this
+    /// to pin a backend regardless of process environment).
+    pub fn open_mode(path: impl AsRef<Path>, mode: SourceMode) -> Result<Self, TenzError> {
+        let file = File::open(path.as_ref())?;
+        let len = file.metadata()?.len();
+        let imp = match mode {
+            SourceMode::Auto | SourceMode::Mmap => backend_mmap_or_direct(file, len),
+            SourceMode::Pread => backend_direct(file),
+            SourceMode::Seek => Imp::Seek(Mutex::new(file)),
+        };
+        Ok(PayloadSource { imp, len })
+    }
+
+    /// File length snapshotted at open.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Which backend is live: `"mmap"`, `"pread"`, or `"seek"`.
+    pub fn kind(&self) -> &'static str {
+        match &self.imp {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Imp::Mmap(_) => "mmap",
+            #[cfg(any(unix, windows))]
+            Imp::Direct(_) => "pread",
+            Imp::Seek(_) => "seek",
+        }
+    }
+
+    /// Borrow `len` bytes at `offset` straight out of the mapping —
+    /// `Some` only on the mmap backend, where it is zero-copy. Callers
+    /// must be prepared for `None` and fall back to [`Self::read_at`].
+    pub fn as_slice(&self, offset: u64, len: usize) -> Option<&[u8]> {
+        match &self.imp {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Imp::Mmap(m) => {
+                let s = m.as_slice();
+                let start = usize::try_from(offset).ok()?;
+                let end = start.checked_add(len)?;
+                s.get(start..end)
+            }
+            _ => None,
+        }
+    }
+
+    /// Fill `buf` from absolute `offset`. Reads past the snapshotted
+    /// length fail with an `UnexpectedEof` I/O error on every backend.
+    pub fn read_at(&self, buf: &mut [u8], offset: u64) -> Result<(), TenzError> {
+        if buf.is_empty() {
+            return Ok(());
+        }
+        match offset.checked_add(buf.len() as u64) {
+            Some(end) if end <= self.len => {}
+            _ => {
+                return Err(TenzError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                    format!(
+                        "read of {} bytes at offset {offset} past end of {}-byte container",
+                        buf.len(),
+                        self.len
+                    ),
+                )));
+            }
+        }
+        match &self.imp {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Imp::Mmap(m) => {
+                let s = m.as_slice();
+                let start = offset as usize;
+                buf.copy_from_slice(&s[start..start + buf.len()]);
+                Ok(())
+            }
+            #[cfg(unix)]
+            Imp::Direct(f) => {
+                use std::os::unix::fs::FileExt;
+                f.read_exact_at(buf, offset)?;
+                Ok(())
+            }
+            #[cfg(windows)]
+            Imp::Direct(f) => {
+                use std::os::windows::fs::FileExt;
+                let mut done = 0usize;
+                while done < buf.len() {
+                    let n = f.seek_read(&mut buf[done..], offset + done as u64)?;
+                    if n == 0 {
+                        return Err(TenzError::Io(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "unexpected eof in positional read",
+                        )));
+                    }
+                    done += n;
+                }
+                Ok(())
+            }
+            Imp::Seek(m) => {
+                let mut f = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                f.seek(SeekFrom::Start(offset))?;
+                f.read_exact(buf)?;
+                Ok(())
+            }
+        }
+    }
+}
+
+fn backend_mmap_or_direct(file: File, len: u64) -> Imp {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    {
+        if let Some(m) = map::MmapRegion::map(&file, len) {
+            return Imp::Mmap(m);
+        }
+    }
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    let _ = len;
+    backend_direct(file)
+}
+
+fn backend_direct(file: File) -> Imp {
+    #[cfg(any(unix, windows))]
+    {
+        Imp::Direct(file)
+    }
+    #[cfg(not(any(unix, windows)))]
+    {
+        Imp::Seek(Mutex::new(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_file(tag: &str, bytes: &[u8]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tenz_source_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("payload.bin");
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    fn cleanup(path: &Path) {
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    const MODES: [SourceMode; 4] =
+        [SourceMode::Auto, SourceMode::Mmap, SourceMode::Pread, SourceMode::Seek];
+
+    #[test]
+    fn every_backend_reads_identical_bytes() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 7 + 3) as u8).collect();
+        let path = tmp_file("ident", &data);
+        for mode in MODES {
+            let src = PayloadSource::open_mode(&path, mode).unwrap();
+            assert_eq!(src.len(), data.len() as u64);
+            // Whole-file, interior, and tail reads.
+            for (off, n) in [(0usize, data.len()), (17, 100), (data.len() - 5, 5), (100, 0)] {
+                let mut buf = vec![0u8; n];
+                src.read_at(&mut buf, off as u64).unwrap();
+                assert_eq!(buf, &data[off..off + n], "mode {mode:?} off {off} len {n}");
+            }
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn reads_past_end_are_typed_errors_not_panics() {
+        let path = tmp_file("eof", &[1, 2, 3, 4]);
+        for mode in MODES {
+            let src = PayloadSource::open_mode(&path, mode).unwrap();
+            let mut buf = [0u8; 3];
+            assert!(src.read_at(&mut buf, 2).is_err(), "mode {mode:?}");
+            assert!(src.read_at(&mut buf, u64::MAX - 1).is_err(), "mode {mode:?}");
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn as_slice_is_exclusive_to_mmap_and_bounds_checked() {
+        let data = [9u8; 64];
+        let path = tmp_file("slice", &data);
+        for mode in MODES {
+            let src = PayloadSource::open_mode(&path, mode).unwrap();
+            match src.as_slice(8, 16) {
+                Some(s) => {
+                    assert_eq!(src.kind(), "mmap");
+                    assert_eq!(s, &data[8..24]);
+                    assert!(src.as_slice(60, 8).is_none(), "out of bounds must be None");
+                }
+                None => assert_ne!(src.kind(), "mmap"),
+            }
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn empty_file_opens_on_every_backend() {
+        let path = tmp_file("empty", &[]);
+        for mode in MODES {
+            let src = PayloadSource::open_mode(&path, mode).unwrap();
+            assert_eq!(src.len(), 0);
+            src.read_at(&mut [], 0).unwrap();
+            let mut one = [0u8; 1];
+            assert!(src.read_at(&mut one, 0).is_err());
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn seek_backend_survives_atomic_replace() {
+        // The regression for the old path-reopening fallback: after an
+        // atomic rename over the container, a source opened before the
+        // replace must keep reading the *old* bytes (its index's bytes),
+        // because it holds the original handle, not the path.
+        let path = tmp_file("replace", b"old-old-old-old!");
+        for mode in MODES {
+            let src = PayloadSource::open_mode(&path, mode).unwrap();
+            let new_path = path.with_extension("new");
+            std::fs::write(&new_path, b"NEW-NEW-NEW-NEW!").unwrap();
+            std::fs::rename(&new_path, &path).unwrap();
+            let mut buf = [0u8; 16];
+            src.read_at(&mut buf, 0).unwrap();
+            assert_eq!(&buf, b"old-old-old-old!", "mode {mode:?} read replaced bytes");
+            // Restore for the next mode.
+            std::fs::write(&path, b"old-old-old-old!").unwrap();
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(SourceMode::parse("mmap"), Some(SourceMode::Mmap));
+        assert_eq!(SourceMode::parse(" PREAD "), Some(SourceMode::Pread));
+        assert_eq!(SourceMode::parse("seek"), Some(SourceMode::Seek));
+        assert_eq!(SourceMode::parse("auto"), Some(SourceMode::Auto));
+        assert_eq!(SourceMode::parse("zstd"), None);
+    }
+}

@@ -76,6 +76,8 @@ pub enum TenzError {
     DuplicateName(String),
     #[error("corrupt entry: {0}")]
     Corrupt(String),
+    #[error("compressed chunk {chunk} of {context}: {detail}")]
+    ChunkCorrupt { context: String, chunk: usize, detail: String },
     #[error("tensor {0:?} not found")]
     NotFound(String),
     #[error("shard manifest: {0}")]

@@ -31,6 +31,7 @@
 use super::kernel::ModelKernels;
 use super::metrics::ServeMetrics;
 use crate::coordinator::pool::WorkerPool;
+use crate::util::lock_recover;
 use crate::tensor::Mat;
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
@@ -317,7 +318,7 @@ impl Batcher {
 
     /// Queued requests right now, across all tenants (tests/diagnostics).
     pub fn queue_depth(&self) -> usize {
-        self.shared.state.lock().expect("batcher queue lock").total
+        lock_recover(&self.shared.state).total
     }
 
     /// Enqueue one input under `policy`. `Err(input)` hands the vector
@@ -345,7 +346,7 @@ impl Batcher {
             .or(self.config.deadline)
             .map(|d| Instant::now() + d);
         {
-            let mut st = self.shared.state.lock().expect("batcher queue lock");
+            let mut st = lock_recover(&self.shared.state);
             if st.closed {
                 drop(st);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -390,7 +391,7 @@ impl Batcher {
         match self.try_submit(&self.default_policy, input) {
             Ok(pending) => pending,
             Err(_input) => {
-                let depth = self.shared.state.lock().map(|s| s.total).unwrap_or(0);
+                let depth = lock_recover(&self.shared.state).total;
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
                 PendingResponse::immediate_error(RequestError::Shed(format!(
                     "server overloaded: {depth} requests already queued"
@@ -403,7 +404,7 @@ impl Batcher {
 impl Drop for Batcher {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().expect("batcher queue lock");
+            let mut st = lock_recover(&self.shared.state);
             st.closed = true; // close the queue: the thread drains and exits
         }
         self.shared.arrived.notify_all();
@@ -474,14 +475,14 @@ fn batch_loop(
     let mut deficits: BTreeMap<Arc<str>, u64> = BTreeMap::new();
     loop {
         let batch = {
-            let mut st = shared.state.lock().expect("batcher queue lock");
+            let mut st = lock_recover(&shared.state);
             // Block for the request that opens the next batch; closure
             // with an empty queue ends the loop.
             while st.total == 0 {
                 if st.closed {
                     return;
                 }
-                st = shared.arrived.wait(st).expect("batcher queue lock");
+                st = shared.arrived.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
             }
             // Keep the batch open (releasing the lock while waiting)
             // until it fills or `max_wait` elapses; closure flushes
@@ -495,7 +496,7 @@ fn batch_loop(
                 let (guard, _) = shared
                     .arrived
                     .wait_timeout(st, deadline - now)
-                    .expect("batcher queue lock");
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 st = guard;
             }
             drain_drr(&mut st, &mut deficits, max_batch)

@@ -1,16 +1,23 @@
 //! LRU model cache: one server process, many checkpoints.
 //!
-//! Keys are checkpoint path + modification-time snapshot of *every file
-//! backing the checkpoint* — the container itself for a single `.tenz`,
-//! the manifest plus each shard for a sharded checkpoint — so rewriting
-//! any of them on disk (a new compression run finishing, one shard
-//! re-rolled, say) invalidates the cached kernels instead of serving
-//! stale weights. Capacity-bounded with least-recently-used eviction;
-//! hit/miss/eviction counters feed the
-//! [`ServeMetrics`](super::metrics::ServeMetrics) table.
+//! Keys are checkpoint path + a `(length, mtime)` stat snapshot of
+//! *every file backing the checkpoint* — the container itself for a
+//! single `.tenz`, the manifest plus each shard for a sharded one —
+//! plus the manifest's content fingerprint
+//! ([`ShardManifest::identity_hash`](crate::io::shard::ShardManifest::identity_hash))
+//! where one exists. mtime alone is not a staleness signal: it has
+//! whole-second granularity on some filesystems, so a rewrite landing in
+//! the same second as the load would serve stale weights forever. The
+//! length catches same-second rewrites that change size; the identity
+//! hash catches same-size rewrites of sharded checkpoints (every content
+//! change flows through the per-shard hashes into the manifest).
+//! Capacity-bounded with least-recently-used eviction; hit/miss/eviction
+//! counters feed the [`ServeMetrics`](super::metrics::ServeMetrics)
+//! table.
 
 use super::kernel::ModelKernels;
 use crate::io::checkpoint::CheckpointSource;
+use crate::util::lock_recover;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
@@ -19,14 +26,17 @@ use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
 /// Identity of one loaded model: where it came from and which bytes
-/// (mtime snapshots) were loaded.
+/// (stat snapshots + manifest fingerprint) were loaded.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ModelKey {
     pub path: PathBuf,
-    /// One snapshot per backing file: `[container]` for a single-file
-    /// checkpoint, `[manifest, shard…]` (manifest order) for a sharded
-    /// one. Any element changing makes a different key.
-    pub mtimes: Vec<Option<SystemTime>>,
+    /// One `(length, mtime)` per backing file: `[container]` for a
+    /// single-file checkpoint, `[manifest, shard…]` (manifest order) for
+    /// a sharded one. Any element changing makes a different key.
+    pub stats: Vec<(u64, Option<SystemTime>)>,
+    /// The manifest's content fingerprint for sharded checkpoints;
+    /// `None` for single containers, which carry no stored hash.
+    pub identity: Option<u64>,
 }
 
 impl ModelKey {
@@ -34,60 +44,69 @@ impl ModelKey {
     /// helper both the cache probe and the sharded load path use, so a
     /// touched shard can never produce a key the probe would still match.
     pub fn snapshot(path: &Path) -> ModelKey {
-        ModelKey { path: path.to_path_buf(), mtimes: snapshot_mtimes(path) }
+        if !crate::io::shard::is_manifest_path(path) {
+            return ModelKey {
+                path: path.to_path_buf(),
+                stats: vec![stat_of(path)],
+                identity: None,
+            };
+        }
+        let (len, mtime) = stat_of(path);
+        let (identity, shard_files) = manifest_probe(path, len, mtime);
+        let mut stats = vec![(len, mtime)];
+        stats.extend(shard_files.iter().map(|p| stat_of(p)));
+        ModelKey { path: path.to_path_buf(), stats, identity }
     }
 }
 
-fn mtime_of(path: &Path) -> Option<SystemTime> {
-    std::fs::metadata(path).and_then(|m| m.modified()).ok()
+/// `(length, mtime)` of `path`; `(0, None)` when it cannot be stat'ed —
+/// the subsequent open reports the real error.
+fn stat_of(path: &Path) -> (u64, Option<SystemTime>) {
+    match std::fs::metadata(path) {
+        Ok(md) => (md.len(), md.modified().ok()),
+        Err(_) => (0, None),
+    }
 }
 
-/// Process-wide memo of each manifest's shard-file list, keyed by the
-/// manifest's `(len, mtime)` stat. `get_or_load` runs on every request,
-/// so the probe must stay at stat cost: the manifest is read and parsed
-/// only when its stat changes (or the filesystem reports no mtime, where
-/// staleness cannot be detected and correctness wins). The memo stores
-/// only file *names* — key freshness still comes from live stats.
-type ShardListMemo =
-    Mutex<std::collections::HashMap<PathBuf, (u64, Option<SystemTime>, Vec<PathBuf>)>>;
-static SHARD_LISTS: std::sync::OnceLock<ShardListMemo> = std::sync::OnceLock::new();
+/// Process-wide memo of each manifest's identity hash and shard-file
+/// list, keyed by the manifest's `(len, mtime)` stat. `get_or_load` runs
+/// on every request, so the probe must stay at stat cost: the manifest
+/// is read and parsed only when its stat changes (or the filesystem
+/// reports no mtime, where staleness cannot be detected and correctness
+/// wins). The memo stores only the fingerprint and file *names* — key
+/// freshness still comes from live stats.
+type ManifestMemo = Mutex<
+    std::collections::HashMap<PathBuf, (u64, Option<SystemTime>, Option<u64>, Vec<PathBuf>)>,
+>;
+static MANIFESTS: std::sync::OnceLock<ManifestMemo> = std::sync::OnceLock::new();
 
-fn shard_paths_of(path: &Path, len: u64, mtime: Option<SystemTime>) -> Vec<PathBuf> {
-    let memo = SHARD_LISTS.get_or_init(Default::default);
+fn manifest_probe(
+    path: &Path,
+    len: u64,
+    mtime: Option<SystemTime>,
+) -> (Option<u64>, Vec<PathBuf>) {
+    let memo = MANIFESTS.get_or_init(Default::default);
     if mtime.is_some() {
-        if let Some((l, t, files)) = memo.lock().unwrap().get(path) {
+        if let Some((l, t, id, files)) = lock_recover(memo).get(path) {
             if *l == len && *t == mtime {
-                return files.clone();
+                return (*id, files.clone());
             }
         }
     }
     let dir = path.parent().unwrap_or(Path::new("."));
-    // An unreadable manifest yields no shard entries — the subsequent
-    // open reports the real error.
-    let files: Vec<PathBuf> = crate::io::shard::ShardManifest::load(path)
-        .map(|m| m.shards.iter().map(|s| dir.join(&s.file)).collect())
-        .unwrap_or_default();
-    if mtime.is_some() {
-        memo.lock().unwrap().insert(path.to_path_buf(), (len, mtime, files.clone()));
-    }
-    files
-}
-
-/// Modification times of every file backing the checkpoint at `path`,
-/// by `stat` alone on the warm path: `[container]` for a `.tenz`,
-/// `[manifest, shard…]` for a manifest (shard list memoized against the
-/// manifest's stat, so cache hits never re-parse it).
-fn snapshot_mtimes(path: &Path) -> Vec<Option<SystemTime>> {
-    if !crate::io::shard::is_manifest_path(path) {
-        return vec![mtime_of(path)];
-    }
-    let (len, mtime) = match std::fs::metadata(path) {
-        Ok(md) => (md.len(), md.modified().ok()),
-        Err(_) => (0, None),
+    // An unreadable manifest yields no identity and no shard entries —
+    // the subsequent open reports the real error.
+    let (identity, files) = match crate::io::shard::ShardManifest::load(path) {
+        Ok(m) => {
+            let files = m.shards.iter().map(|s| dir.join(&s.file)).collect();
+            (Some(m.identity_hash()), files)
+        }
+        Err(_) => (None, Vec::new()),
     };
-    let mut v = vec![mtime];
-    v.extend(shard_paths_of(path, len, mtime).iter().map(|p| mtime_of(p)));
-    v
+    if mtime.is_some() {
+        lock_recover(memo).insert(path.to_path_buf(), (len, mtime, identity, files.clone()));
+    }
+    (identity, files)
 }
 
 /// Thread-safe LRU cache of executable model kernels.
@@ -128,7 +147,7 @@ impl ModelCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lock_recover(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -137,7 +156,7 @@ impl ModelCache {
 
     /// Whether `key` is currently cached (no recency update).
     pub fn contains(&self, key: &ModelKey) -> bool {
-        self.inner.lock().unwrap().iter().any(|(k, _)| k == key)
+        lock_recover(&self.inner).iter().any(|(k, _)| k == key)
     }
 
     /// (hits, misses) counters.
@@ -161,16 +180,17 @@ impl ModelCache {
 
     /// Fetch (loading on miss) the kernels for the checkpoint at `path`
     /// — single `.tenz` or shard manifest alike. The lookup key pairs the
-    /// path with the current mtimes of every backing file
-    /// ([`ModelKey::snapshot`]), so a rewritten container *or any touched
-    /// shard* misses and reloads; the stale entry ages out by LRU.
-    /// Loading happens outside the lock — two threads racing on the same
-    /// cold model may both load it, but the cache stays consistent
-    /// (first insert wins).
+    /// path with the current `(length, mtime)` of every backing file plus
+    /// the manifest fingerprint ([`ModelKey::snapshot`]), so a rewritten
+    /// container *or any touched shard* misses and reloads — even when
+    /// the rewrite lands inside the filesystem's mtime granularity; the
+    /// stale entry ages out by LRU. Loading happens outside the lock —
+    /// two threads racing on the same cold model may both load it, but
+    /// the cache stays consistent (first insert wins).
     pub fn get_or_load(&self, path: &Path) -> Result<(ModelKey, Arc<ModelKernels>)> {
         let probe = ModelKey::snapshot(path);
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_recover(&self.inner);
             if let Some(pos) = inner.iter().position(|(k, _)| *k == probe) {
                 let entry = inner.remove(pos).expect("position just found");
                 let model = entry.1.clone();
@@ -188,16 +208,16 @@ impl ModelCache {
         }
         // Key on the source's open-time snapshot: it describes the bytes
         // actually indexed, even if files were replaced since the stat.
-        // Fall back to the probe where the filesystem reported nothing.
-        let snap = src.modified_snapshot();
-        let mtimes =
-            if snap.iter().all(Option::is_none) { probe.mtimes.clone() } else { snap };
-        let key = ModelKey { path: path.to_path_buf(), mtimes };
+        let key = ModelKey {
+            path: path.to_path_buf(),
+            stats: src.backing_stats(),
+            identity: src.identity(),
+        };
         let model = Arc::new(
             ModelKernels::load(&src)
                 .with_context(|| format!("assembling kernels for {}", path.display()))?,
         );
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if let Some(pos) = inner.iter().position(|(k, _)| *k == key) {
             // Lost a load race: keep the incumbent (recency-bumped).
             let entry = inner.remove(pos).expect("position just found");
@@ -218,9 +238,11 @@ impl ModelCache {
 mod tests {
     use super::*;
     use crate::io::checkpoint::{store_weight, StoredWeight};
+    use crate::io::shard::ShardedWriter;
     use crate::io::tenz::TensorFile;
     use crate::rng::GaussianSource;
     use crate::tensor::init::gaussian;
+    use crate::tensor::Mat;
 
     fn tmp_dir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!("serve_cache_{tag}_{}", std::process::id()));
@@ -228,11 +250,36 @@ mod tests {
         dir
     }
 
-    fn write_model(path: &Path, seed: u64, d: usize) {
+    fn model_tensors(seed: u64, d: usize) -> TensorFile {
         let mut g = GaussianSource::new(seed);
         let mut tf = TensorFile::new();
         store_weight(&mut tf, "head", &StoredWeight::Dense(gaussian(3, d, 1.0, &mut g)));
-        tf.write(path).unwrap();
+        tf
+    }
+
+    fn write_model(path: &Path, seed: u64, d: usize) {
+        model_tensors(seed, d).write(path).unwrap();
+    }
+
+    fn write_sharded_model(manifest: &Path, seed: u64, d: usize) {
+        let tf = model_tensors(seed, d);
+        let mut w = ShardedWriter::create(manifest, 256).unwrap();
+        for n in tf.names().map(str::to_string).collect::<Vec<_>>() {
+            w.append(&n, tf.get(&n).unwrap()).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    /// Pin `path`'s mtime to `t`, so stat-visible time carries no
+    /// information and staleness detection must come from length or
+    /// identity.
+    fn pin_mtime(path: &Path, t: SystemTime) {
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .unwrap()
+            .set_modified(t)
+            .unwrap();
     }
 
     #[test]
@@ -263,29 +310,83 @@ mod tests {
     }
 
     #[test]
-    fn rewritten_checkpoint_invalidates() {
-        let dir = tmp_dir("mtime");
+    fn same_mtime_rewrite_invalidates_by_length() {
+        // Regression: keys used to fold in mtime alone, so a rewrite
+        // landing inside the filesystem's mtime granularity served stale
+        // kernels forever. Pin the mtime to make the rewrite
+        // stat-time-invisible and prove the length signal catches it.
+        let dir = tmp_dir("len");
         let path = dir.join("m.tenz");
         write_model(&path, 1, 4);
+        let t0 = std::fs::metadata(&path).unwrap().modified().unwrap();
         let cache = ModelCache::new(4);
         let (k1, m1) = cache.get_or_load(&path).unwrap();
         assert_eq!(m1.input_dim(), 4);
-        // Rewrite with a different shape and a bumped mtime (filesystem
-        // mtime granularity can be coarse — set it explicitly via a
-        // sleep-free monotone touch: rewriting content is enough when the
-        // clock ticks, so nudge it with a short sleep only if needed).
-        std::thread::sleep(std::time::Duration::from_millis(20));
         write_model(&path, 2, 9);
+        pin_mtime(&path, t0);
         let (k2, m2) = cache.get_or_load(&path).unwrap();
-        if k2 == k1 {
-            // mtime granularity too coarse to distinguish — nothing to
-            // assert beyond the cache staying consistent.
-            assert_eq!(m2.input_dim(), 4);
-        } else {
-            assert_eq!(m2.input_dim(), 9, "new bytes must be served after rewrite");
-            let (_, m3) = cache.get_or_load(&path).unwrap();
-            assert_eq!(m3.input_dim(), 9);
+        assert_ne!(k1, k2, "pinned-mtime rewrite must change the key");
+        assert_eq!(m2.input_dim(), 9, "new bytes must be served after rewrite");
+        let (_, m3) = cache.get_or_load(&path).unwrap();
+        assert_eq!(m3.input_dim(), 9);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn same_mtime_sharded_rewrite_invalidates_by_identity() {
+        // Same-shape, different-content rewrite of a sharded checkpoint:
+        // every shard keeps its byte size, and every mtime is pinned back
+        // to the original, so only the manifest identity hash (fed by the
+        // per-shard content hashes) can tell the two checkpoints apart.
+        let dir = tmp_dir("identity");
+        let manifest = dir.join("m.toml");
+        write_sharded_model(&manifest, 1, 6);
+        let mut pinned: Vec<(PathBuf, SystemTime)> = Vec::new();
+        for e in std::fs::read_dir(&dir).unwrap() {
+            let p = e.unwrap().path();
+            pinned.push((p.clone(), std::fs::metadata(&p).unwrap().modified().unwrap()));
         }
+        let cache = ModelCache::new(4);
+        let (k1, m1) = cache.get_or_load(&manifest).unwrap();
+        assert_eq!(m1.input_dim(), 6);
+        let ones = Mat::from_fn(1, 6, |_, _| 1.0);
+        let v1 = m1.forward(&ones);
+
+        write_sharded_model(&manifest, 2, 6);
+        for (p, t) in &pinned {
+            pin_mtime(p, *t);
+        }
+        let (k2, m2) = cache.get_or_load(&manifest).unwrap();
+        assert_ne!(
+            k1.identity, k2.identity,
+            "different shard content must change the manifest fingerprint"
+        );
+        assert_ne!(k1, k2, "pinned-mtime sharded rewrite must change the key");
+        let v2 = m2.forward(&ones);
+        assert_ne!(v1.data(), v2.data(), "new weights must be served after rewrite");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn poisoned_cache_lock_recovers() {
+        // A panic on one request thread while holding the cache lock must
+        // not wedge every later request with a PoisonError.
+        let dir = tmp_dir("poison");
+        let path = dir.join("m.tenz");
+        write_model(&path, 3, 5);
+        let cache = Arc::new(ModelCache::new(2));
+        let (k1, _) = cache.get_or_load(&path).unwrap();
+        let c2 = Arc::clone(&cache);
+        let _ = std::thread::spawn(move || {
+            let _g = c2.inner.lock().unwrap();
+            panic!("injected panic while holding the cache lock");
+        })
+        .join();
+        assert!(cache.inner.lock().is_err(), "lock should be poisoned");
+        let (k2, m) = cache.get_or_load(&path).unwrap();
+        assert_eq!(k1, k2, "cached entry must survive the poisoned lock");
+        assert_eq!(m.input_dim(), 5);
+        assert_eq!(cache.stats().0, 1, "post-poison lookup is a plain hit");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -71,7 +71,7 @@ struct Link {
 impl Link {
     fn mark_down(&self) {
         self.healthy.store(false, Ordering::Relaxed);
-        *self.last_failure.lock().unwrap() = Some(std::time::Instant::now());
+        *crate::util::lock_recover(&self.last_failure) = Some(std::time::Instant::now());
         if crate::obs::enabled() {
             crate::obs::recorder::record(
                 crate::obs::recorder::EventKind::WorkerDown,
@@ -85,9 +85,7 @@ impl Link {
         if self.healthy.load(Ordering::Relaxed) {
             return true;
         }
-        self.last_failure
-            .lock()
-            .unwrap()
+        crate::util::lock_recover(&self.last_failure)
             .map(|t| t.elapsed() >= reprobe_after)
             .unwrap_or(true)
     }
@@ -241,7 +239,7 @@ impl Router {
 
     fn call_link_inner(&self, idx: usize, request: &Frame) -> Result<Frame, WireError> {
         let link = &self.links[idx];
-        let mut guard = link.conn.lock().unwrap();
+        let mut guard = crate::util::lock_recover(&link.conn);
         for attempt in 0..2 {
             let had_cached = guard.is_some();
             let mut stream = match guard.take() {

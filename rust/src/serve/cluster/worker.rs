@@ -90,7 +90,7 @@ impl WorkerState {
 
     /// Load (or fetch) the kernels for this worker's assignment.
     fn model(&self) -> Result<Arc<ModelKernels>, String> {
-        let mut guard = self.model.lock().unwrap();
+        let mut guard = crate::util::lock_recover(&self.model);
         if let Some(m) = &*guard {
             return Ok(m.clone());
         }
@@ -117,7 +117,7 @@ impl WorkerState {
     }
 
     fn models_loaded(&self) -> u32 {
-        u32::from(self.model.lock().unwrap().is_some())
+        u32::from(crate::util::lock_recover(&self.model).is_some())
     }
 }
 

@@ -11,6 +11,7 @@ use super::cache::ModelCache;
 use crate::bench::stats::percentile;
 use crate::report::Table;
 use crate::rng::Pcg64;
+use crate::util::lock_recover;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -209,7 +210,7 @@ impl ServeMetrics {
         self.responses.fetch_add(n as u64, Ordering::Relaxed);
         let stamp = self.touch_counter.fetch_add(1, Ordering::Relaxed) + 1;
         {
-            let mut map = self.models.lock().unwrap();
+            let mut map = lock_recover(&self.models);
             if !map.contains_key(model) && map.len() >= MAX_MODEL_RESERVOIRS {
                 if let Some(evict) =
                     map.iter().min_by_key(|(_, r)| r.touched).map(|(k, _)| k.clone())
@@ -225,7 +226,7 @@ impl ServeMetrics {
                 r.record(secs);
             }
         }
-        let mut global = self.global.lock().unwrap();
+        let mut global = lock_recover(&self.global);
         for _ in 0..n {
             global.record(secs);
         }
@@ -235,7 +236,7 @@ impl ServeMetrics {
     /// updated one past the bound (same policy as the model reservoirs).
     fn with_tenant<F: FnOnce(&mut TenantRow)>(&self, tenant: &str, f: F) {
         let stamp = self.touch_counter.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut map = self.tenants.lock().unwrap();
+        let mut map = lock_recover(&self.tenants);
         if !map.contains_key(tenant) && map.len() >= MAX_MODEL_RESERVOIRS {
             if let Some(evict) = map.iter().min_by_key(|(_, r)| r.touched).map(|(k, _)| k.clone())
             {
@@ -297,7 +298,7 @@ impl ServeMetrics {
 
     /// Snapshot every tenant row (sorted by tenant name).
     pub fn tenant_snapshots(&self) -> Vec<TenantSnapshot> {
-        let map = self.tenants.lock().unwrap();
+        let map = lock_recover(&self.tenants);
         map.iter()
             .map(|(name, r)| TenantSnapshot {
                 tenant: name.clone(),
@@ -369,19 +370,19 @@ impl ServeMetrics {
     /// reservoir — a uniform sample over every request regardless of
     /// which model served it (`n` counts all requests ever recorded).
     pub fn latency_quantiles(&self) -> LatencyQuantiles {
-        self.global.lock().unwrap().quantiles()
+        lock_recover(&self.global).quantiles()
     }
 
     /// Per-model latency quantiles, sorted by model label — what
     /// `rsic serve` prints and the cluster `Stats` frame carries.
     pub fn model_quantiles(&self) -> Vec<(String, LatencyQuantiles)> {
-        let map = self.models.lock().unwrap();
+        let map = lock_recover(&self.models);
         map.iter().map(|(name, r)| (name.clone(), r.quantiles())).collect()
     }
 
     /// Models with at least one recorded latency.
     pub fn models_seen(&self) -> usize {
-        self.models.lock().unwrap().len()
+        lock_recover(&self.models).len()
     }
 
     /// Render the serving counters (and, when given, the model cache's
@@ -568,6 +569,31 @@ mod tests {
         assert!(rendered.contains("gold"), "{rendered}");
         assert!(rendered.contains("met"), "{rendered}");
         assert!(m.render(None).render().contains("shed"));
+    }
+
+    #[test]
+    fn poisoned_metric_locks_keep_recording() {
+        // A panic on one request thread while holding a metrics lock must
+        // not silence every later sample with a PoisonError.
+        let m = std::sync::Arc::new(ServeMetrics::new());
+        m.record_latency("m.tenz", 0.001);
+        m.tenant_offered("gold");
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _a = m2.models.lock().unwrap();
+            let _b = m2.global.lock().unwrap();
+            let _c = m2.tenants.lock().unwrap();
+            panic!("injected panic while holding metrics locks");
+        })
+        .join();
+        assert!(m.models.lock().is_err(), "models lock should be poisoned");
+        m.record_latency("m.tenz", 0.003);
+        m.tenant_offered("gold");
+        let lq = m.latency_quantiles();
+        assert_eq!(lq.n, 2, "both samples must survive the poisoning");
+        assert_eq!(m.models_seen(), 1);
+        assert_eq!(m.tenant_snapshots()[0].counters.offered, 2);
+        assert!(m.render(None).render().contains("p50 latency"));
     }
 
     #[test]

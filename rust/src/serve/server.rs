@@ -191,7 +191,7 @@ impl Server {
         // other model's submissions on the map mutex.
         let mut retired: Vec<Arc<Batcher>> = Vec::new();
         let batcher = {
-            let mut map = self.batchers.lock().unwrap();
+            let mut map = crate::util::lock_recover(&self.batchers);
             let batcher = map
                 .entry(key)
                 .or_insert_with(|| {
@@ -406,6 +406,32 @@ mod tests {
         assert_eq!(gold.counters.admitted, 1);
         assert!(gold.slo_secs.is_some(), "declared tenants inherit the config deadline as SLO");
         assert!(snaps.iter().any(|s| s.tenant == "walk-in"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn serving_survives_poisoned_locks() {
+        // A request thread that panics while holding the serve-path locks
+        // (batcher map, cache, metrics) must not take the server down for
+        // everyone else: later submissions recover the locks and serve.
+        let dir = tmp_dir("poison");
+        let p = dir.join("m.tenz");
+        write_model(&p, 6, 2, 4);
+        let server = std::sync::Arc::new(Server::new(ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        }));
+        let y1 = server.infer(&p, vec![1.0; 4]).unwrap();
+        let s2 = std::sync::Arc::clone(&server);
+        let _ = std::thread::spawn(move || {
+            let _g = s2.batchers.lock().unwrap();
+            panic!("injected panic while holding the batcher-map lock");
+        })
+        .join();
+        assert!(server.batchers.lock().is_err(), "batcher map should be poisoned");
+        let y2 = server.infer(&p, vec![1.0; 4]).unwrap();
+        assert_eq!(y1, y2, "the same cached model must keep serving after the panic");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -29,6 +29,19 @@ pub fn rank_for_alpha(alpha: f64, c: usize, d: usize) -> usize {
     k.clamp(1, m)
 }
 
+/// Lock a mutex, recovering from poisoning instead of propagating it.
+///
+/// Serve-path locks guard caches, counters, and queues whose invariants
+/// hold at every await-free store (each critical section leaves the value
+/// consistent), so a panic on one request thread must not wedge every
+/// subsequent request with a `PoisonError`. The data is still whatever
+/// the panicking thread last wrote — safe here, where the guarded state
+/// is always structurally valid — not a general-purpose pattern.
+#[inline]
+pub fn lock_recover<T: ?Sized>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Number of worker threads to use: `$RSIC_THREADS` or available parallelism.
 pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("RSIC_THREADS") {
@@ -76,5 +89,21 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn lock_recover_survives_poisoning() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
     }
 }

@@ -426,6 +426,134 @@ fn hash_mismatch_detected_by_verify() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+// ---------------------------------------------------------------------
+// Chunk-compressed shard payloads (codec = "chunkz").
+// ---------------------------------------------------------------------
+
+/// `write_sharded`, but every finished shard is rewritten into the
+/// chunk-compressed at-rest form (`ShardedWriter::create_with`).
+fn write_sharded_compressed(tf: &TensorFile, manifest: &Path, budget: u64, chunk: u32) {
+    let mut w = ShardedWriter::create_with(manifest, budget, Some(chunk)).unwrap();
+    for name in tf.names().map(str::to_string).collect::<Vec<_>>() {
+        w.append(&name, tf.get(&name).unwrap()).unwrap();
+    }
+    w.finish().unwrap();
+}
+
+/// Compressed shards round-trip bit-identically, roll at the same raw
+/// budget as their plain twins, and keep form-invariant manifest hashes
+/// (the hash covers raw entry content, so re-compressing never changes
+/// checkpoint identity semantics).
+#[test]
+fn compressed_shards_roundtrip_with_form_invariant_hashes() {
+    let dir = tmp_dir("chunkz");
+    let tf = checkpoint(3, 6, 9, 17);
+    let raw_manifest = dir.join("raw.toml");
+    let comp_manifest = dir.join("comp.toml");
+    write_sharded(&tf, &raw_manifest, 512);
+    write_sharded_compressed(&tf, &comp_manifest, 512, 64);
+
+    let raw = ShardManifest::load(&raw_manifest).unwrap();
+    let comp = ShardManifest::load(&comp_manifest).unwrap();
+    assert_eq!(raw.shards.len(), comp.shards.len(), "the budget governs raw bytes in both forms");
+    for (r, c) in raw.shards.iter().zip(&comp.shards) {
+        assert!(!r.compressed);
+        assert!(c.compressed);
+        assert_eq!(r.hash, c.hash, "manifest hashes cover raw content — form-invariant");
+        assert_eq!(r.tensors, c.tensors);
+        assert_eq!(
+            c.bytes,
+            std::fs::metadata(dir.join(&c.file)).unwrap().len(),
+            "manifest bytes record the on-disk (compressed) size"
+        );
+    }
+
+    let r = ShardedReader::open(&comp_manifest).unwrap();
+    r.verify_hashes().unwrap();
+    assert_eq!(
+        r.read_all().unwrap().to_bytes(),
+        tf.to_bytes(),
+        "compressed shards must decode bit-identically"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A bit-flipped byte inside a compressed frame keeps the file size (so
+/// open's stat check passes) but surfaces as a typed per-chunk error
+/// from both the integrity pass and a plain read — never a panic.
+#[test]
+fn corrupted_compressed_shard_is_typed_error() {
+    let dir = tmp_dir("chunkz_rot");
+    let tf = checkpoint(2, 6, 9, 19);
+    let manifest = dir.join("ck.toml");
+    write_sharded_compressed(&tf, &manifest, 512, 64);
+    let m = ShardManifest::load(&manifest).unwrap();
+    let victim = dir.join(&m.shards[0].file);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes[40] ^= 0x10; // inside the first frame, past the 32-byte header
+    std::fs::write(&victim, &bytes).unwrap();
+
+    let r = ShardedReader::open(&manifest).unwrap();
+    match r.verify_hashes() {
+        Err(TenzError::ChunkCorrupt { .. }) | Err(TenzError::ShardHashMismatch { .. }) => {}
+        other => panic!("expected a typed corruption error, got {other:?}"),
+    }
+    match r.read_all() {
+        Err(TenzError::ChunkCorrupt { .. }) => {}
+        Err(e) => panic!("expected ChunkCorrupt, got {e:?}"),
+        Ok(_) => panic!("corrupt compressed shard parsed"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `rsic compress --compress-payload` end to end: the pipeline writes
+/// chunk-compressed shards that decode bit-identically to the plain
+/// run's output, with the same shard roll points.
+#[test]
+fn pipeline_compress_payload_sharded_end_to_end() {
+    let dir = tmp_dir("pipe_chunkz");
+    let ckpt = checkpoint(4, 12, 20, 23);
+    let plan = plan();
+    let src_path = dir.join("in.tenz");
+    ckpt.write(&src_path).unwrap();
+    let src = Arc::new(CheckpointSource::open(&src_path).unwrap());
+
+    // Reference: the same plan through a plain sharded run.
+    let plain = Pipeline::new(PipelineConfig {
+        workers: 2,
+        shard_size: Some(700),
+        ..Default::default()
+    })
+    .unwrap();
+    let ref_manifest = dir.join("ref.toml");
+    let ref_report = plain.compress_to_path(src.clone(), &plan, &ref_manifest).unwrap();
+    assert!(ref_report.shards > 1);
+    let reference = ShardedReader::open(&ref_manifest).unwrap().read_all().unwrap().to_bytes();
+
+    let pipe = Pipeline::new(PipelineConfig {
+        workers: 2,
+        shard_size: Some(700),
+        compress_payload: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let out_manifest = dir.join("out.toml");
+    let report = pipe.compress_to_path(src, &plan, &out_manifest).unwrap();
+    assert!(report.outcomes.iter().all(|o| o.error.is_none()), "{:?}", report.outcomes);
+    assert_eq!(report.shards, ref_report.shards, "raw-byte budget ⇒ identical roll points");
+
+    let m = ShardManifest::load(&out_manifest).unwrap();
+    assert!(m.shards.iter().all(|s| s.compressed), "every shard is chunk-compressed");
+    let back = ShardedReader::open(&out_manifest).unwrap();
+    back.verify_hashes().unwrap();
+    assert_eq!(
+        back.read_all().unwrap().to_bytes(),
+        reference,
+        "compressed-at-rest output must decode bit-identically to the plain run"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 /// Mangled manifests — truncations, bit flips, junk — must parse to a
 /// typed error or a valid manifest, never panic. (`ShardedReader::open`
 /// on the mutants additionally exercises the stat-level checks.)

@@ -87,6 +87,159 @@ fn prop_roundtrip_eager_lazy_writer_byte_identical() {
 }
 
 // ---------------------------------------------------------------------
+// Compressed-at-rest form: backend × form bit-identity property
+// ---------------------------------------------------------------------
+
+/// Satellite property: `entry`, `copy_payload_chunked`, and `read_all`
+/// return bit-identical bytes for every dtype (zero-length tensors
+/// included), through every positional backend (mmap / pread / seek),
+/// over both the raw container and its chunk-compressed form — with
+/// frame sizes deliberately straddling entry and payload boundaries.
+#[test]
+fn prop_backends_and_compressed_form_bit_identical() {
+    use rsi_compress::io::SourceMode;
+    const MODES: [SourceMode; 4] =
+        [SourceMode::Auto, SourceMode::Mmap, SourceMode::Pread, SourceMode::Seek];
+    let dir = tmp_dir("prop_chunkz");
+    let dir2 = dir.clone();
+    PropRunner::new(12).run("tenz-chunkz-backends", move |g| {
+        let n = g.usize_in(0, 5);
+        let mut tf = TensorFile::new();
+        for i in 0..n {
+            let dtype = *g.choice(&[DType::F32, DType::F64, DType::I32, DType::I8, DType::F16]);
+            let ndim = g.usize_in(1, 3);
+            // dims may hit 0 ⇒ zero-length payloads are always in play.
+            let dims: Vec<usize> = (0..ndim).map(|_| g.usize_in(0, 6)).collect();
+            let nbytes = dims.iter().product::<usize>() * dtype.size();
+            let bytes: Vec<u8> = (0..nbytes).map(|_| g.usize_in(0, 255) as u8).collect();
+            tf.insert(format!("t{i}"), TensorEntry { dtype, dims, bytes });
+        }
+        let raw = dir2.join(format!("r_{:x}.tenz", g.seed()));
+        let comp = dir2.join(format!("c_{:x}.tenz", g.seed()));
+        tf.write(&raw).unwrap();
+        tf.write(&comp).unwrap();
+        let raw_bytes = std::fs::read(&raw).unwrap();
+        // Frame sizes from 1 byte (every payload spans frames) to larger
+        // than the whole container (single frame).
+        let chunk = *g.choice(&[1u32, 3, 7, 61, 256, 1 << 16]);
+        rsi_compress::io::chunkz::compress_file(&comp, chunk).unwrap();
+
+        for mode in MODES {
+            for (path, compressed) in [(&raw, false), (&comp, true)] {
+                let r = TenzReader::open_mode(path, mode).unwrap();
+                assert_eq!(r.is_compressed(), compressed);
+                // Logical geometry is form-invariant.
+                assert_eq!(r.file_bytes(), raw_bytes.len() as u64);
+                assert_eq!(r.header_bytes() + r.payload_bytes(), r.file_bytes());
+                for name in tf.names() {
+                    let want = tf.get(name).unwrap();
+                    let got = r.entry(name).unwrap();
+                    assert_eq!(
+                        got.bytes,
+                        want.bytes,
+                        "{name} via {} (chunk {chunk})",
+                        r.source_kind()
+                    );
+                    for copy_chunk in [1usize, 5, 64, 1 << 16] {
+                        let mut streamed = Vec::new();
+                        r.copy_payload_chunked(name, copy_chunk, &mut |piece| {
+                            streamed.extend_from_slice(piece);
+                            Ok(())
+                        })
+                        .unwrap();
+                        assert_eq!(
+                            streamed, want.bytes,
+                            "{name} streamed at {copy_chunk} via {mode:?}"
+                        );
+                    }
+                }
+                assert_eq!(r.read_all().unwrap().to_bytes(), raw_bytes);
+            }
+        }
+        std::fs::remove_file(&raw).unwrap();
+        std::fs::remove_file(&comp).unwrap();
+    });
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Corruption matrix over the compressed form: truncated frames, a
+/// bit-flipped payload frame, and a corrupted chunk index all surface as
+/// typed `TenzError`s — never panics — at open or first read.
+#[test]
+fn corrupt_compressed_container_is_typed_error_never_panic() {
+    let dir = tmp_dir("chunkz_corrupt");
+    let vals: Vec<f32> = (0..300).map(|i| (i % 7) as f32 - 3.0).collect();
+    let mut tf = TensorFile::new();
+    tf.insert("w", TensorEntry::from_f32(vec![300], &vals));
+    let good = dir.join("good.tenz");
+    tf.write(&good).unwrap();
+    let (raw_len, _comp_len) = rsi_compress::io::chunkz::compress_file(&good, 64).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    // TENZC001 layout: 32-byte header, frames, then nchunks × 16-byte
+    // index entries (comp_len, raw_len, fnv1a of the raw chunk).
+    let nchunks = raw_len.div_ceil(64) as usize;
+    let index_off = bytes.len() - nchunks * 16;
+
+    // Sanity: the intact compressed container round-trips.
+    let r = TenzReader::open(&good).unwrap();
+    assert!(r.is_compressed());
+    assert_eq!(r.vec_f32("w").unwrap(), vals);
+
+    // Truncations at every layer: mid-index, mid-frames, mid-header.
+    for cut in [bytes.len() - 1, index_off + 3, bytes.len() / 2, 33, 9] {
+        let p = dir.join(format!("trunc_{cut}.tenz"));
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        let e = TenzReader::open(&p).expect_err("truncated compressed container parsed");
+        assert!(
+            matches!(
+                e,
+                TenzError::Corrupt(_) | TenzError::Truncated { .. } | TenzError::Io(_)
+            ),
+            "cut={cut}: unexpected error {e:?}"
+        );
+    }
+
+    // Bit-flip inside a late payload frame: the index and early frames
+    // stay intact, so open succeeds — the read covering that chunk is a
+    // typed per-chunk error.
+    let mut flipped = bytes.clone();
+    flipped[index_off - 10] ^= 0x01;
+    let p = dir.join("flip_frame.tenz");
+    std::fs::write(&p, &flipped).unwrap();
+    let r = TenzReader::open(&p).unwrap();
+    match r.vec_f32("w") {
+        Err(TenzError::ChunkCorrupt { .. }) => {}
+        other => panic!("expected ChunkCorrupt from a flipped frame, got {other:?}"),
+    }
+
+    // Flipped hash in the chunk index: geometry still checks out at
+    // open; the guarded chunk fails its integrity check on read.
+    let mut badhash = bytes.clone();
+    let last = badhash.len() - 1;
+    badhash[last] ^= 0x80;
+    let p = dir.join("flip_hash.tenz");
+    std::fs::write(&p, &badhash).unwrap();
+    let r = TenzReader::open(&p).unwrap();
+    match r.read_all() {
+        Err(TenzError::ChunkCorrupt { .. }) => {}
+        other => panic!("expected ChunkCorrupt from a flipped index hash, got {:?}", other.map(|_| ())),
+    }
+
+    // Flipped frame length in the chunk index: the frame prefix-sum no
+    // longer reaches the index, rejected structurally at open.
+    let mut badlen = bytes.clone();
+    badlen[index_off] ^= 0xFF;
+    let p = dir.join("flip_len.tenz");
+    std::fs::write(&p, &badlen).unwrap();
+    match TenzReader::open(&p) {
+        Err(TenzError::Corrupt(msg)) => assert!(!msg.is_empty()),
+        other => panic!("expected Corrupt from a flipped index length, got {:?}", other.map(|_| ())),
+    }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
 // Corruption / fuzz matrix
 // ---------------------------------------------------------------------
 
