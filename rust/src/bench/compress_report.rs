@@ -1,0 +1,346 @@
+//! Machine-readable compress reports: `COMPRESS_REPORT_<date>.json`.
+//!
+//! `rsic compress --report-out` persists one [`CompressReport`] per run —
+//! the compression-path twin of `BENCH_<date>.json`. Each
+//! [`LayerReport`] row carries the planner-facing cost signals for one
+//! factorized layer: shape and rank, stage timings (read / factorize /
+//! validate / quantize / write), the spectral error and σ_k/σ_{k+1} gap,
+//! the per-power-iteration RSI convergence trace, and the stored-bytes
+//! delta. The run header folds in the whole-run totals plus the
+//! storage-tier I/O counters ([`crate::obs::iostat`]) observed during
+//! the run.
+//!
+//! Hand-rolled JSON like `bench::record` (serde is not in the offline
+//! crate universe); `from_json` is the strict parse-back twin that the
+//! round-trip tests pin and that future planner tooling reads.
+
+use super::record::{esc, num, parse_json, Json};
+use crate::obs::compress::LayerTelemetry;
+use crate::obs::iostat::IoSnapshot;
+use std::path::{Path, PathBuf};
+
+/// Per-layer entry of a compress report — the planner's future
+/// cost-signal input.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerReport {
+    pub layer: String,
+    /// Logical shape (C, D).
+    pub c: usize,
+    pub d: usize,
+    /// Factorization rank.
+    pub k: usize,
+    /// The resolved factorizer's self-description.
+    pub method: String,
+    pub read_secs: f64,
+    pub factorize_secs: f64,
+    pub validate_secs: f64,
+    pub quantize_secs: f64,
+    pub write_secs: f64,
+    /// ‖W − A·B‖₂ estimate (`null` when validation was off).
+    pub spectral_error: Option<f64>,
+    /// σ_k and σ_{k+1} from the factorization's spectrum estimate —
+    /// the gap is the rank-choice signal.
+    pub sigma_k: f64,
+    pub sigma_k1: f64,
+    /// ‖WᵀXₜ‖_F after each power iteration — the RSI convergence trace.
+    pub convergence: Vec<f64>,
+    /// Stored bytes this layer occupied in the source checkpoint.
+    pub bytes_before: u64,
+    /// Stored bytes its factors occupy in the output.
+    pub bytes_after: u64,
+}
+
+impl From<LayerTelemetry> for LayerReport {
+    fn from(t: LayerTelemetry) -> Self {
+        LayerReport {
+            layer: t.layer,
+            c: t.c,
+            d: t.d,
+            k: t.k,
+            method: t.method,
+            read_secs: t.read_secs,
+            factorize_secs: t.factorize_secs,
+            validate_secs: t.validate_secs,
+            quantize_secs: t.quantize_secs,
+            write_secs: t.write_secs,
+            spectral_error: t.spectral_error,
+            sigma_k: t.sigma_k,
+            sigma_k1: t.sigma_k1,
+            convergence: t.convergence,
+            bytes_before: t.bytes_before,
+            bytes_after: t.bytes_after,
+        }
+    }
+}
+
+/// One compress run, as written to `COMPRESS_REPORT_<date>.json`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompressReport {
+    pub date: String,
+    pub git_rev: String,
+    /// Plan method name (e.g. `rsi`).
+    pub method: String,
+    /// Resolved factorizer self-description.
+    pub factorizer: String,
+    pub backend: String,
+    pub out_path: String,
+    pub total_seconds: f64,
+    /// Compressed/original parameter ratio over the whole model.
+    pub ratio: f64,
+    pub tensors_written: u64,
+    pub shards: u64,
+    pub layers_failed: u64,
+    /// Storage-tier counter deltas observed over the run.
+    pub io: IoSnapshot,
+    pub layers: Vec<LayerReport>,
+}
+
+impl CompressReport {
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"date\": \"{}\",\n", esc(&self.date)));
+        out.push_str(&format!("  \"git_rev\": \"{}\",\n", esc(&self.git_rev)));
+        out.push_str(&format!("  \"method\": \"{}\",\n", esc(&self.method)));
+        out.push_str(&format!("  \"factorizer\": \"{}\",\n", esc(&self.factorizer)));
+        out.push_str(&format!("  \"backend\": \"{}\",\n", esc(&self.backend)));
+        out.push_str(&format!("  \"out_path\": \"{}\",\n", esc(&self.out_path)));
+        out.push_str(&format!("  \"total_seconds\": {},\n", num(self.total_seconds)));
+        out.push_str(&format!("  \"ratio\": {},\n", num(self.ratio)));
+        out.push_str(&format!("  \"tensors_written\": {},\n", self.tensors_written));
+        out.push_str(&format!("  \"shards\": {},\n", self.shards));
+        out.push_str(&format!("  \"layers_failed\": {},\n", self.layers_failed));
+        out.push_str("  \"io\": {\n");
+        let io = &self.io;
+        out.push_str(&format!("    \"mmap_read_bytes\": {},\n", io.mmap_read_bytes));
+        out.push_str(&format!("    \"pread_read_bytes\": {},\n", io.pread_read_bytes));
+        out.push_str(&format!("    \"seek_read_bytes\": {},\n", io.seek_read_bytes));
+        out.push_str(&format!("    \"chunk_cache_hits\": {},\n", io.chunk_cache_hits));
+        out.push_str(&format!("    \"chunk_cache_misses\": {},\n", io.chunk_cache_misses));
+        out.push_str(&format!(
+            "    \"chunk_decompressed_bytes\": {},\n",
+            io.chunk_decompressed_bytes
+        ));
+        out.push_str(&format!("    \"writer_bytes\": {},\n", io.writer_bytes));
+        out.push_str(&format!("    \"madvise_willneed\": {},\n", io.madvise_willneed));
+        out.push_str(&format!("    \"madvise_dontneed\": {},\n", io.madvise_dontneed));
+        out.push_str(&format!("    \"exec_cache_hits\": {},\n", io.exec_cache_hits));
+        out.push_str(&format!("    \"exec_cache_misses\": {}\n", io.exec_cache_misses));
+        out.push_str("  },\n");
+        out.push_str("  \"layers\": [\n");
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push_str("    {\n");
+            out.push_str(&format!("      \"layer\": \"{}\",\n", esc(&l.layer)));
+            out.push_str(&format!("      \"c\": {},\n", l.c));
+            out.push_str(&format!("      \"d\": {},\n", l.d));
+            out.push_str(&format!("      \"k\": {},\n", l.k));
+            out.push_str(&format!("      \"method\": \"{}\",\n", esc(&l.method)));
+            out.push_str(&format!("      \"read_secs\": {},\n", num(l.read_secs)));
+            out.push_str(&format!("      \"factorize_secs\": {},\n", num(l.factorize_secs)));
+            out.push_str(&format!("      \"validate_secs\": {},\n", num(l.validate_secs)));
+            out.push_str(&format!("      \"quantize_secs\": {},\n", num(l.quantize_secs)));
+            out.push_str(&format!("      \"write_secs\": {},\n", num(l.write_secs)));
+            match l.spectral_error {
+                Some(e) => out.push_str(&format!("      \"spectral_error\": {},\n", num(e))),
+                None => out.push_str("      \"spectral_error\": null,\n"),
+            }
+            out.push_str(&format!("      \"sigma_k\": {},\n", num(l.sigma_k)));
+            out.push_str(&format!("      \"sigma_k1\": {},\n", num(l.sigma_k1)));
+            let trace: Vec<String> = l.convergence.iter().map(|&v| num(v)).collect();
+            out.push_str(&format!("      \"convergence\": [{}],\n", trace.join(", ")));
+            out.push_str(&format!("      \"bytes_before\": {},\n", l.bytes_before));
+            out.push_str(&format!("      \"bytes_after\": {}\n", l.bytes_after));
+            out.push_str(&format!("    }}{}\n", if i + 1 < self.layers.len() { "," } else { "" }));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn from_json(text: &str) -> Result<CompressReport, String> {
+        let v = parse_json(text)?;
+        let s = |key: &str| -> Result<String, String> {
+            v.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing \"{key}\""))
+        };
+        let f = |key: &str| -> Result<f64, String> {
+            v.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing \"{key}\""))
+        };
+        let io_obj = v.get("io").ok_or("missing \"io\"")?;
+        let io_u = |key: &str| -> Result<u64, String> {
+            io_obj
+                .get(key)
+                .and_then(Json::as_f64)
+                .map(|x| x as u64)
+                .ok_or_else(|| format!("missing \"io.{key}\""))
+        };
+        let io = IoSnapshot {
+            mmap_read_bytes: io_u("mmap_read_bytes")?,
+            pread_read_bytes: io_u("pread_read_bytes")?,
+            seek_read_bytes: io_u("seek_read_bytes")?,
+            chunk_cache_hits: io_u("chunk_cache_hits")?,
+            chunk_cache_misses: io_u("chunk_cache_misses")?,
+            chunk_decompressed_bytes: io_u("chunk_decompressed_bytes")?,
+            writer_bytes: io_u("writer_bytes")?,
+            madvise_willneed: io_u("madvise_willneed")?,
+            madvise_dontneed: io_u("madvise_dontneed")?,
+            exec_cache_hits: io_u("exec_cache_hits")?,
+            exec_cache_misses: io_u("exec_cache_misses")?,
+        };
+        let mut layers = Vec::new();
+        for l in v.get("layers").and_then(Json::as_arr).ok_or("missing \"layers\"")? {
+            let ls = |key: &str| -> Result<String, String> {
+                l.get(key)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("missing layer \"{key}\""))
+            };
+            let lf = |key: &str| -> Result<f64, String> {
+                l.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing layer \"{key}\""))
+            };
+            let spectral_error = match l.get("spectral_error") {
+                Some(Json::Null) => None,
+                Some(j) => Some(j.as_f64().ok_or("bad \"spectral_error\"")?),
+                None => return Err("missing layer \"spectral_error\"".into()),
+            };
+            let convergence = l
+                .get("convergence")
+                .and_then(Json::as_arr)
+                .ok_or("missing layer \"convergence\"")?
+                .iter()
+                .map(|j| j.as_f64().ok_or_else(|| "bad convergence entry".to_string()))
+                .collect::<Result<Vec<f64>, String>>()?;
+            layers.push(LayerReport {
+                layer: ls("layer")?,
+                c: lf("c")? as usize,
+                d: lf("d")? as usize,
+                k: lf("k")? as usize,
+                method: ls("method")?,
+                read_secs: lf("read_secs")?,
+                factorize_secs: lf("factorize_secs")?,
+                validate_secs: lf("validate_secs")?,
+                quantize_secs: lf("quantize_secs")?,
+                write_secs: lf("write_secs")?,
+                spectral_error,
+                sigma_k: lf("sigma_k")?,
+                sigma_k1: lf("sigma_k1")?,
+                convergence,
+                bytes_before: lf("bytes_before")? as u64,
+                bytes_after: lf("bytes_after")? as u64,
+            });
+        }
+        Ok(CompressReport {
+            date: s("date")?,
+            git_rev: s("git_rev")?,
+            method: s("method")?,
+            factorizer: s("factorizer")?,
+            backend: s("backend")?,
+            out_path: s("out_path")?,
+            total_seconds: f("total_seconds")?,
+            ratio: f("ratio")?,
+            tensors_written: f("tensors_written")? as u64,
+            shards: f("shards")? as u64,
+            layers_failed: f("layers_failed")? as u64,
+            io,
+            layers,
+        })
+    }
+
+    /// Write as `COMPRESS_REPORT_<date>.json` under `dir`; returns the
+    /// written path. Same naming discipline as `BenchRecord::write_to`.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("COMPRESS_REPORT_{}.json", self.date));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CompressReport {
+        CompressReport {
+            date: "2026-08-08".into(),
+            git_rev: "abc1234".into(),
+            method: "rsi".into(),
+            factorizer: "rsi(q=2)".into(),
+            backend: "native".into(),
+            out_path: "/tmp/out.tenz".into(),
+            total_seconds: 1.25,
+            ratio: 0.31,
+            tensors_written: 7,
+            shards: 2,
+            layers_failed: 0,
+            io: IoSnapshot {
+                mmap_read_bytes: 4096,
+                pread_read_bytes: 0,
+                seek_read_bytes: 12,
+                chunk_cache_hits: 3,
+                chunk_cache_misses: 1,
+                chunk_decompressed_bytes: 65536,
+                writer_bytes: 2048,
+                madvise_willneed: 2,
+                madvise_dontneed: 2,
+                exec_cache_hits: 0,
+                exec_cache_misses: 0,
+            },
+            layers: vec![
+                LayerReport {
+                    layer: "layers.0".into(),
+                    c: 24,
+                    d: 60,
+                    k: 7,
+                    method: "rsi(q=2)".into(),
+                    read_secs: 0.001,
+                    factorize_secs: 0.05,
+                    validate_secs: 0.002,
+                    quantize_secs: 0.0005,
+                    write_secs: 0.0009,
+                    spectral_error: Some(0.125),
+                    sigma_k: 1.5,
+                    sigma_k1: 0.4,
+                    convergence: vec![10.0, 10.6, 10.61],
+                    bytes_before: 5760,
+                    bytes_after: 2352,
+                },
+                LayerReport {
+                    layer: "head \"odd\"".into(),
+                    spectral_error: None,
+                    ..Default::default()
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let rec = sample();
+        let back = CompressReport::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_and_truncated_reports() {
+        assert!(CompressReport::from_json("{").is_err());
+        assert!(CompressReport::from_json("[]").is_err());
+        assert!(CompressReport::from_json("{\"date\": \"x\"}").is_err());
+        let mut text = sample().to_json();
+        text.push('x');
+        assert!(CompressReport::from_json(&text).is_err(), "trailing bytes must be rejected");
+    }
+
+    #[test]
+    fn write_to_names_the_file_by_date() {
+        let dir =
+            std::env::temp_dir().join(format!("compress_report_{}", std::process::id()));
+        let rec = sample();
+        let path = rec.write_to(&dir).unwrap();
+        assert!(path.ends_with("COMPRESS_REPORT_2026-08-08.json"));
+        let back = CompressReport::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, rec);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -6,12 +6,16 @@
 //! module persists each serve-throughput run as a `BENCH_<date>.json`
 //! snapshot and compares against the previous one (the perf trajectory);
 //! soak runs persist their degradation curves as `SOAK_<date>.json` the
-//! same way.
+//! same way. The [`compress_report`] module is the compression path's
+//! counterpart: `rsic compress --report-out` writes per-layer spectral
+//! and timing telemetry as `COMPRESS_REPORT_<date>.json`.
 
+pub mod compress_report;
 pub mod harness;
 pub mod record;
 pub mod stats;
 
+pub use compress_report::{CompressReport, LayerReport};
 pub use harness::{BenchResult, Harness};
 pub use record::{BenchRecord, BenchRow, SoakPoint, SoakRecord};
 pub use stats::Summary;

@@ -336,7 +336,7 @@ fn civil_from_days(z: i64) -> (i64, u32, u32) {
     (y, m as u32, d)
 }
 
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -353,7 +353,7 @@ fn esc(s: &str) -> String {
 }
 
 /// JSON-safe float text (`Display` for f64 is shortest-round-trip).
-fn num(v: f64) -> String {
+pub(crate) fn num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {
@@ -364,7 +364,7 @@ fn num(v: f64) -> String {
 /// Minimal strict JSON value + recursive-descent parser — just enough to
 /// read back the snapshots this module writes.
 #[derive(Debug, Clone, PartialEq)]
-enum Json {
+pub(crate) enum Json {
     Null,
     Bool(bool),
     Num(f64),
@@ -374,36 +374,49 @@ enum Json {
 }
 
 impl Json {
-    fn get(&self, key: &str) -> Option<&Json> {
+    pub(crate) fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
             _ => None,
         }
     }
-    fn as_str(&self) -> Option<&str> {
+    pub(crate) fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
-    fn as_f64(&self) -> Option<f64> {
+    pub(crate) fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(v) => Some(*v),
             _ => None,
         }
     }
-    fn as_bool(&self) -> Option<bool> {
+    pub(crate) fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
-    fn as_arr(&self) -> Option<&[Json]> {
+    pub(crate) fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
     }
+}
+
+/// Parse a complete JSON document, rejecting trailing bytes — the
+/// shared entry point for every hand-rolled snapshot reader in the
+/// crate (bench records, compress reports).
+pub(crate) fn parse_json(text: &str) -> Result<Json, String> {
+    let mut p = Parser { s: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.s.len() {
+        return Err(format!("trailing bytes at offset {}", p.i));
+    }
+    Ok(v)
 }
 
 struct Parser<'a> {

@@ -39,6 +39,10 @@ USAGE:
                 [--adaptive <budget-ratio>]   # section-5 adaptive layer-wise ranks
                 [--store-dtype f32|f16|i8]    # on-disk factor dtype (i8 adds per-row .scale tensors)
                 [--compress-payload]          # chunk-compress the output at rest (read transparently)
+                [--report-out [DIR]]          # write COMPRESS_REPORT_<date>.json (per-layer telemetry)
+                [--trace-out F.json]          # Chrome trace of the compress pipeline stages
+                [--progress]                  # live layers/ETA/resident ticker (auto when stderr is a tty)
+  rsic inspect  <checkpoint> [--json]          # header-only per-layer rank/dtype/bytes/codec/shard table
   rsic eval     --model <synthvgg|synthvit> [--checkpoint F]
   rsic serve    --checkpoint F [--checkpoint F2 ...] [--requests N] [--clients C]
                 [--batch B] [--wait-ms MS] [--workers W] [--queue-depth Q]
@@ -67,8 +71,9 @@ Checkpoint paths (--checkpoint / --out) take either a single .tenz file or a
 sharded checkpoint's .toml manifest, transparently.
 Logging: --log-level off|error|warn|info|debug|trace, or -v/-vv (louder) and
 -q/-qq (quieter) from the info baseline; $RSIC_LOG sets the default.
-Observability: RSIC_OBS=1 (or --metrics-addr / --trace-out on serve) turns on
-request tracing, per-layer kernel timing, and the flight recorder.
+Observability: RSIC_OBS=1 (or --metrics-addr / --trace-out on serve, or
+--report-out / --trace-out on compress) turns on request tracing, per-layer
+kernel timing, compression telemetry, and the flight recorder.
 Run `make artifacts` before any command that touches models or XLA.";
 
 /// Entry point used by main.rs. Returns the process exit code.
@@ -80,6 +85,7 @@ pub fn run(args: Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "compress" => cmd_compress(&args),
+        "inspect" => cmd_inspect(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "traffic" => cmd_traffic(&args),
@@ -231,6 +237,28 @@ fn cmd_compress(args: &Args) -> Result<()> {
             .with_context(|| format!("bad --store-dtype {s:?} (f32|f16|i8)"))?,
         None => Default::default(),
     };
+    use crate::bench::record;
+    // `--report-out` alone means the default bench dir (next to
+    // BENCH_*.json); with a value it names the report directory.
+    let report_out: Option<std::path::PathBuf> =
+        if args.flag("report-out") || args.opt("report-out").is_some() {
+            Some(args.opt("report-out").map(Into::into).unwrap_or_else(record::bench_dir))
+        } else {
+            None
+        };
+    let trace_out = args.opt("trace-out").map(std::path::PathBuf::from);
+    // Either artifact implies instrumentation on — same contract as
+    // serve's --metrics-addr/--trace-out. Compressed bytes are identical
+    // either way; obs only observes.
+    if report_out.is_some() || trace_out.is_some() {
+        crate::obs::set_enabled(true);
+    }
+    if crate::obs::enabled() {
+        // A fresh run's report must not inherit telemetry from an
+        // earlier run in the same process.
+        crate::obs::compress::reset();
+    }
+    let io_before = crate::obs::iostat::snapshot();
     let pipe = Pipeline::new(PipelineConfig {
         backend: backend_of(args)?,
         validate: args.flag("validate"),
@@ -240,7 +268,55 @@ fn cmd_compress(args: &Args) -> Result<()> {
         compress_payload: args.flag("compress-payload"),
         ..Default::default()
     })?;
-    let report = pipe.compress_to_path(src.clone(), &plan, out)?;
+    use std::io::IsTerminal;
+    let progress = args.flag("progress") || std::io::stderr().is_terminal();
+    let ticker_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let ticker = progress.then(|| {
+        let metrics = pipe.metrics_handle();
+        let stop = ticker_stop.clone();
+        std::thread::spawn(move || {
+            use std::io::Write;
+            use std::sync::atomic::Ordering;
+            let t0 = std::time::Instant::now();
+            let mut ticked = false;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(200));
+                let sub = metrics.layers_submitted.load(Ordering::Relaxed);
+                let done = metrics.layers_completed.load(Ordering::Relaxed)
+                    + metrics.layers_failed.load(Ordering::Relaxed);
+                if sub == 0 {
+                    continue;
+                }
+                let elapsed = t0.elapsed().as_secs_f64();
+                // ETA from completed-layer throughput so far.
+                let eta = if done > 0 && sub > done {
+                    format!("{:.0}s", elapsed / done as f64 * (sub - done) as f64)
+                } else if done == sub {
+                    "0s".into()
+                } else {
+                    "--".into()
+                };
+                let resident = metrics.resident_bytes.load(Ordering::Relaxed);
+                let in_flight = metrics.weights_resident.load(Ordering::Relaxed);
+                eprint!(
+                    "\r[compress] {done}/{sub} layers | {elapsed:.1}s elapsed, ETA {eta} | \
+                     {in_flight} weights / {:.1} MiB resident   ",
+                    resident as f64 / (1 << 20) as f64
+                );
+                let _ = std::io::stderr().flush();
+                ticked = true;
+            }
+            if ticked {
+                eprintln!();
+            }
+        })
+    });
+    let run = pipe.compress_to_path(src.clone(), &plan, out);
+    ticker_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(t) = ticker {
+        let _ = t.join();
+    }
+    let report = run?;
     println!("{}", report.summary());
     for o in &report.outcomes {
         let err = o
@@ -268,7 +344,281 @@ fn cmd_compress(args: &Args) -> Result<()> {
         if report.shards == 1 { "" } else { "s" },
         src.payload_reads()
     );
+    if let Some(dir) = report_out {
+        let compress_report = crate::bench::CompressReport {
+            date: record::today_utc(),
+            git_rev: record::git_rev(),
+            method: report.method.clone(),
+            factorizer: report.factorizer.clone(),
+            backend: report.backend.to_string(),
+            out_path: out.to_string(),
+            total_seconds: report.total_seconds,
+            ratio: report.ratio,
+            tensors_written: report.tensors_written as u64,
+            shards: report.shards as u64,
+            layers_failed: report.outcomes.iter().filter(|o| o.error.is_some()).count() as u64,
+            io: crate::obs::iostat::snapshot().since(&io_before),
+            layers: crate::obs::compress::snapshot().into_iter().map(Into::into).collect(),
+        };
+        let path = compress_report.write_to(&dir)?;
+        println!(
+            "wrote compress report ({} layers) → {}",
+            compress_report.layers.len(),
+            path.display()
+        );
+    }
+    if let Some(path) = trace_out {
+        let n = crate::obs::span::write_trace(&path)?;
+        println!("wrote {n} trace events → {}", path.display());
+    }
     Ok(())
+}
+
+/// `rsic inspect`: header-only per-layer table for any checkpoint form
+/// (single `.tenz`, sharded manifest, chunk-compressed either way).
+///
+/// Opening a container parses entry headers and seeks past every
+/// payload, so the whole walk is O(header bytes) — the trailing
+/// payload-read count printed at the end proves it stayed zero.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: rsic inspect <checkpoint (.tenz or manifest .toml)> [--json]")?;
+    print!("{}", render_inspect(path, args.flag("json"))?);
+    Ok(())
+}
+
+/// Build `rsic inspect`'s output — the per-layer table, or the `--json`
+/// document — as one string. Separate from the command so the
+/// golden-table integration test can assert on exact rendered rows.
+pub fn render_inspect(path: &str, json: bool) -> Result<String> {
+    use crate::io::checkpoint::{
+        factor_a_key, factor_a_scale_key, factor_b_key, factor_b_scale_key, layer_infos_from,
+        weight_key,
+    };
+    use crate::io::tenz::DType;
+    use std::collections::BTreeMap;
+    use std::fmt::Write as _;
+
+    fn dtype_name(d: DType) -> &'static str {
+        match d {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+            DType::F16 => "f16",
+        }
+    }
+
+    let src =
+        CheckpointSource::open(path).with_context(|| format!("opening checkpoint {path}"))?;
+
+    // Per-tensor header metadata, all from the open-time indexes.
+    struct Row {
+        dtype: DType,
+        dims: Vec<usize>,
+        nbytes: u64,
+        shard: Option<usize>,
+        codec: &'static str,
+    }
+    let mut rows: BTreeMap<String, Row> = BTreeMap::new();
+    let (form, shard_count, backend) = match &src {
+        CheckpointSource::Single(r) => {
+            let t = r.tenz();
+            let codec = if t.is_compressed() { "chunkz" } else { "raw" };
+            for m in t.metas() {
+                rows.insert(
+                    m.name.clone(),
+                    Row {
+                        dtype: m.dtype,
+                        dims: m.dims.clone(),
+                        nbytes: m.nbytes,
+                        shard: None,
+                        codec,
+                    },
+                );
+            }
+            ("single", 1usize, t.source_kind())
+        }
+        CheckpointSource::Sharded(s) => {
+            for (idx, entry) in s.manifest().shards.iter().enumerate() {
+                let codec = if entry.compressed { "chunkz" } else { "raw" };
+                let r = s
+                    .shard_reader(idx)
+                    .with_context(|| format!("opening shard {idx} of {path}"))?;
+                for m in r.metas() {
+                    rows.insert(
+                        m.name.clone(),
+                        Row {
+                            dtype: m.dtype,
+                            dims: m.dims.clone(),
+                            nbytes: m.nbytes,
+                            shard: Some(idx),
+                            codec,
+                        },
+                    );
+                }
+            }
+            ("sharded", s.shard_count(), "shards")
+        }
+    };
+    let payload_bytes: u64 = rows.values().map(|r| r.nbytes).sum();
+
+    // Fold tensors into the layer view: a factored layer's row sums its
+    // A/B (+ optional i8 scale) entries; a dense one is its weight.
+    struct LayerRow {
+        layer: String,
+        c: usize,
+        d: usize,
+        factored: bool,
+        k: Option<usize>,
+        dtype: &'static str,
+        bytes: u64,
+        codec: &'static str,
+        shard: Option<usize>,
+    }
+    let mut used: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let mut layer_rows: Vec<LayerRow> = Vec::new();
+    for info in layer_infos_from(&src) {
+        let (c, d) = info.shape;
+        let keys: Vec<String> = if info.factored {
+            vec![
+                factor_a_key(&info.layer),
+                factor_a_scale_key(&info.layer),
+                factor_b_key(&info.layer),
+                factor_b_scale_key(&info.layer),
+            ]
+        } else {
+            vec![weight_key(&info.layer)]
+        };
+        let mut bytes = 0u64;
+        for key in &keys {
+            if let Some(row) = rows.get(key) {
+                bytes += row.nbytes;
+                used.insert(key.clone());
+            }
+        }
+        // Representative entry: factor A when factored, else the weight.
+        let lead = rows.get(&keys[0]);
+        layer_rows.push(LayerRow {
+            layer: info.layer.clone(),
+            c,
+            d,
+            factored: info.factored,
+            // Stored params of a factored layer are (C+D)·k by
+            // construction, so the rank falls out of the header index.
+            k: info.factored.then(|| info.stored_params / (c + d)),
+            dtype: lead.map(|r| dtype_name(r.dtype)).unwrap_or("?"),
+            bytes,
+            codec: lead.map(|r| r.codec).unwrap_or("?"),
+            shard: lead.and_then(|r| r.shard),
+        });
+    }
+    let extras: Vec<(&String, &Row)> = rows.iter().filter(|(n, _)| !used.contains(*n)).collect();
+
+    if json {
+        let esc = crate::obs::esc_json;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\n  \"path\": \"{}\",\n  \"format\": \"{form}\",\n  \"shards\": {shard_count},\n  \"tensors\": {},\n  \"payload_bytes\": {payload_bytes},\n  \"layers\": [",
+            esc(path),
+            rows.len(),
+        ));
+        for (i, l) in layer_rows.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"layer\": \"{}\", \"c\": {}, \"d\": {}, \"factored\": {}, \"k\": {}, \"dtype\": \"{}\", \"bytes\": {}, \"codec\": \"{}\", \"shard\": {}}}",
+                esc(&l.layer),
+                l.c,
+                l.d,
+                l.factored,
+                l.k.map(|k| k.to_string()).unwrap_or_else(|| "null".into()),
+                l.dtype,
+                l.bytes,
+                l.codec,
+                l.shard.map(|x| x.to_string()).unwrap_or_else(|| "null".into()),
+            ));
+        }
+        s.push_str("\n  ],\n  \"extras\": [");
+        for (i, (name, r)) in extras.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let dims =
+                r.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+            s.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"dtype\": \"{}\", \"dims\": [{dims}], \"bytes\": {}, \"codec\": \"{}\", \"shard\": {}}}",
+                esc(name),
+                dtype_name(r.dtype),
+                r.nbytes,
+                r.codec,
+                r.shard.map(|x| x.to_string()).unwrap_or_else(|| "null".into()),
+            ));
+        }
+        s.push_str(&format!(
+            "\n  ],\n  \"payload_reads\": {}\n}}\n",
+            src.payload_reads()
+        ));
+        return Ok(s);
+    }
+
+    let mut out = String::new();
+    writeln!(
+        out,
+        "{path}: {form} ({backend}), {} tensor{} / {} shard{}, {:.1} MiB payload",
+        rows.len(),
+        if rows.len() == 1 { "" } else { "s" },
+        shard_count,
+        if shard_count == 1 { "" } else { "s" },
+        payload_bytes as f64 / (1 << 20) as f64,
+    )?;
+    let name_w = layer_rows
+        .iter()
+        .map(|l| l.layer.len())
+        .chain(extras.iter().map(|(n, _)| n.len()))
+        .max()
+        .unwrap_or(5)
+        .max(5);
+    writeln!(
+        out,
+        "  {:<name_w$}  {:>12}  {:<8}  {:>5}  {:<5}  {:>12}  {:<6}  {:>5}",
+        "layer", "shape", "form", "k", "dtype", "bytes", "codec", "shard"
+    )?;
+    for l in &layer_rows {
+        let shape = format!("{}x{}", l.c, l.d);
+        writeln!(
+            out,
+            "  {:<name_w$}  {:>12}  {:<8}  {:>5}  {:<5}  {:>12}  {:<6}  {:>5}",
+            l.layer,
+            shape,
+            if l.factored { "factored" } else { "dense" },
+            l.k.map(|k| k.to_string()).unwrap_or_else(|| "-".into()),
+            l.dtype,
+            l.bytes,
+            l.codec,
+            l.shard.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+        )?;
+    }
+    for (name, r) in &extras {
+        let dims = r.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+        writeln!(
+            out,
+            "  {:<name_w$}  {:>12}  {:<8}  {:>5}  {:<5}  {:>12}  {:<6}  {:>5}",
+            name,
+            dims,
+            "tensor",
+            "-",
+            dtype_name(r.dtype),
+            r.nbytes,
+            r.codec,
+            r.shard.map(|x| x.to_string()).unwrap_or_else(|| "-".into()),
+        )?;
+    }
+    writeln!(out, "  ({} payload reads — the walk touched entry headers only)", src.payload_reads())?;
+    Ok(out)
 }
 
 

@@ -174,15 +174,36 @@ pub fn rsi_factorize(
     let mut gsrc = GaussianSource::new(opts.seed);
     let mut y = Mat::from_vec(d, l, gsrc.matrix_f32(d, l));
 
+    // Telemetry reads the iterates, never writes them: X and Y evolve
+    // bit-identically with obs on or off.
+    if crate::obs::enabled() {
+        crate::obs::compress::stage_begin();
+    }
+
     // Lines 2–6.
     let mut x = Mat::zeros(c, l);
     for _t in 0..q {
         x = engine.wy(w, &y); // line 3: X = W·Y
         x = orthonormalize(&x, opts.ortho); // line 4
         y = engine.wtx(w, &x); // line 5: Y = Wᵀ·X
+        if crate::obs::enabled() {
+            crate::obs::compress::stage_iteration(captured_mass(&y));
+        }
     }
 
     finalize(&x, &y, k)
+}
+
+/// Convergence signal per power iteration: ‖WᵀXₜ‖_F = √(Σ‖yⱼ‖²), the
+/// spectral mass the current subspace captures. With X's columns
+/// orthonormal this climbs toward √(σ₁²+…+σ_ℓ²) as the subspace locks
+/// onto the leading singular directions — a plateau means converged.
+fn captured_mass(y: &Mat<f32>) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in y.data() {
+        acc += (v as f64) * (v as f64);
+    }
+    acc.sqrt()
 }
 
 /// Above this sketch width the ℓ×ℓ Jacobi eigensolve in [`finalize`]
@@ -208,6 +229,12 @@ pub fn finalize(x: &Mat<f32>, y: &Mat<f32>, k: usize) -> Factorization {
     let e = eigh::eigh_default(&g);
     // Singular values of Yᵀ are √λ.
     let s: Vec<f64> = e.values.iter().map(|&v| v.max(0.0).sqrt()).collect();
+    // The full ℓ-length spectrum exists only here, before truncation:
+    // σ_{k+1} (the gap's far side) is observable exactly when the
+    // sketch oversampled (ℓ > k).
+    if k >= 1 && crate::obs::enabled() {
+        crate::obs::compress::stage_spectrum(s[k - 1], s.get(k).copied().unwrap_or(0.0));
+    }
     let uhat = e.vectors.cast::<f32>(); // ℓ×ℓ: left singular vectors of Yᵀ
 
     // Ṽ = Y · Û S⁻¹ (D×ℓ): right singular vectors of Yᵀ.
@@ -278,7 +305,12 @@ fn finalize_fast_split(x: &Mat<f32>, y: &Mat<f32>) -> Factorization {
             b.set(new_j, col, y.get(col, old_j));
         }
     }
-    let s = perm.iter().map(|&j| norms[j]).collect();
+    let s: Vec<f64> = perm.iter().map(|&j| norms[j]).collect();
+    // ℓ == k on this path: no oversampling column exists, so σ_{k+1}
+    // is unobservable (reported as 0).
+    if crate::obs::enabled() {
+        crate::obs::compress::stage_spectrum(s.last().copied().unwrap_or(0.0), 0.0);
+    }
     Factorization { a, b, s }
 }
 

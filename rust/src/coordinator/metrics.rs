@@ -89,6 +89,19 @@ impl PipelineMetrics {
         for (name, secs) in self.stages() {
             s.push_str(&format!("\n  stage {name}: {secs:.3}s"));
         }
+        // Process-global storage-tier counters — cumulative across runs,
+        // like `runs` itself.
+        let io = crate::obs::iostat::snapshot();
+        s.push_str(&format!(
+            "\n  io: read {:.1} MiB (mmap {:.1} / pread {:.1} / seek {:.1}), written {:.1} MiB, chunk cache {} hits / {} misses",
+            io.read_bytes_total() as f64 / (1 << 20) as f64,
+            io.mmap_read_bytes as f64 / (1 << 20) as f64,
+            io.pread_read_bytes as f64 / (1 << 20) as f64,
+            io.seek_read_bytes as f64 / (1 << 20) as f64,
+            io.writer_bytes as f64 / (1 << 20) as f64,
+            io.chunk_cache_hits,
+            io.chunk_cache_misses,
+        ));
         s
     }
 }

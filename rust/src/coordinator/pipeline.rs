@@ -318,6 +318,8 @@ fn make_task(
         if cancel.load(std::sync::atomic::Ordering::Relaxed) {
             return (job, Err("run aborted before this layer started".into()));
         }
+        let read_span = crate::obs::now_if_enabled();
+        let t_read = Stopwatch::start();
         let stored = match load_weight_from(&*source, &job.layer) {
             Ok(s) => s,
             Err(e) => return (job, Err(e.to_string())),
@@ -336,24 +338,72 @@ fn make_task(
         };
         metrics.weight_materialized(bytes);
         let _resident = ResidentGuard { metrics: metrics.clone(), bytes };
+        // Stored bytes this layer occupies in the source — the report's
+        // before-side of the storage delta.
+        let bytes_before = (stored.param_count() * std::mem::size_of::<f32>()) as u64;
         let w = match stored {
             StoredWeight::Dense(w) => w,
             factored => factored.materialize(),
         };
+        let read_secs = t_read.secs();
+        if let Some(t0) = read_span {
+            crate::obs::span::record(
+                "compress.read",
+                t0,
+                vec![("layer", crate::obs::span::ArgVal::Str(job.layer.clone()))],
+            );
+        }
+        let fac_span = crate::obs::now_if_enabled();
         let t = Stopwatch::start();
         let f = factorizer.factorize(&w, job.k, &job.layer);
         let secs = t.secs();
         metrics.add_factorize_secs(secs);
+        if let Some(t0) = fac_span {
+            crate::obs::span::record(
+                "compress.factorize",
+                t0,
+                vec![
+                    ("layer", crate::obs::span::ArgVal::Str(job.layer.clone())),
+                    ("k", crate::obs::span::ArgVal::U64(job.k as u64)),
+                ],
+            );
+        }
+        // Taken even on failure, so an aborted factorization never leaks
+        // its staged convergence trace into the next layer on this thread.
+        let staged = crate::obs::compress::take_stage();
         let out = match f {
             Ok(f) => {
+                let mut validate_secs = 0.0;
                 let err = if validate {
                     let tv = Stopwatch::start();
                     let e = f.spectral_error(&w);
-                    metrics.add_validate_secs(tv.secs());
+                    validate_secs = tv.secs();
+                    metrics.add_validate_secs(validate_secs);
                     Some(e)
                 } else {
                     None
                 };
+                if crate::obs::enabled() {
+                    let staged = staged.unwrap_or_default();
+                    crate::obs::compress::record(crate::obs::compress::LayerTelemetry {
+                        layer: job.layer.clone(),
+                        c: job.c,
+                        d: job.d,
+                        k: job.k,
+                        method: factorizer.name(),
+                        read_secs,
+                        factorize_secs: secs,
+                        validate_secs,
+                        quantize_secs: 0.0,
+                        write_secs: 0.0,
+                        spectral_error: err,
+                        sigma_k: staged.sigma_k,
+                        sigma_k1: staged.sigma_k1,
+                        convergence: staged.convergence,
+                        bytes_before,
+                        bytes_after: 0,
+                    });
+                }
                 Ok((f, secs, err))
             }
             Err(e) => Err(format!("{e:#}")),
@@ -396,6 +446,12 @@ impl Pipeline {
 
     pub fn metrics(&self) -> &PipelineMetrics {
         &self.metrics
+    }
+
+    /// Shared handle to the metrics — what the CLI's progress ticker
+    /// polls from its own thread while a run is in flight.
+    pub fn metrics_handle(&self) -> Arc<PipelineMetrics> {
+        self.metrics.clone()
     }
 
     /// The persistent worker pool (one per pipeline, shared by all runs).
@@ -689,15 +745,39 @@ impl Pipeline {
                     // Factor entries land in sorted key order even with
                     // scales: "…A" < "…A.scale" < "…B" < "…B.scale".
                     let dtype = self.config.store_dtype;
+                    let tq = Stopwatch::start();
                     let (ea, sa) = encode_factor(&f.a, dtype);
+                    let (eb, sb) = encode_factor(&f.b, dtype);
+                    let quantize_secs = tq.secs();
+                    let bytes_after = (ea.bytes.len()
+                        + eb.bytes.len()
+                        + sa.as_ref().map_or(0, |s| s.bytes.len())
+                        + sb.as_ref().map_or(0, |s| s.bytes.len()))
+                        as u64;
+                    let write_span = crate::obs::now_if_enabled();
+                    let tw = Stopwatch::start();
                     writer.append_entry(&factor_a_key(&job.layer), &ea)?;
                     if let Some(s) = sa {
                         writer.append_entry(&factor_a_scale_key(&job.layer), &s)?;
                     }
-                    let (eb, sb) = encode_factor(&f.b, dtype);
                     writer.append_entry(&factor_b_key(&job.layer), &eb)?;
                     if let Some(s) = sb {
                         writer.append_entry(&factor_b_scale_key(&job.layer), &s)?;
+                    }
+                    let write_secs = tw.secs();
+                    if let Some(t0) = write_span {
+                        crate::obs::span::record(
+                            "compress.write",
+                            t0,
+                            vec![("layer", crate::obs::span::ArgVal::Str(job.layer.clone()))],
+                        );
+                    }
+                    if crate::obs::enabled() {
+                        crate::obs::compress::update(&job.layer, |t| {
+                            t.quantize_secs = quantize_secs;
+                            t.write_secs = write_secs;
+                            t.bytes_after = bytes_after;
+                        });
                     }
                     self.metrics.layers_completed.fetch_add(1, Ordering::Relaxed);
                     LayerOutcome { plan: job, seconds: secs, spectral_error: err, error: None }

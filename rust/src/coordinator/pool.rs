@@ -195,6 +195,10 @@ impl WorkerPool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Joined workers flushed their span buffers via Drop; sweep the
+        // rest (e.g. the submitter thread's) so a trace exported after
+        // quiesce is complete.
+        crate::obs::span::flush_all();
     }
 }
 

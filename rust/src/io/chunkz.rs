@@ -358,6 +358,7 @@ impl ChunkzReader {
             let cache = self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             if let Some((i, data)) = cache.as_ref() {
                 if *i == idx {
+                    crate::obs::iostat::add_chunk_hit();
                     return Ok(data.clone());
                 }
             }
@@ -382,6 +383,7 @@ impl ChunkzReader {
                 format!("raw hash mismatch (index {:016x}, data {got:016x})", f.hash),
             ));
         }
+        crate::obs::iostat::add_chunk_miss(raw.len() as u64);
         let mut cache = self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         *cache = Some((idx, raw.clone()));
         Ok(raw)

@@ -301,8 +301,17 @@ impl TenzReader {
         let m = self.index.get(name).ok_or_else(|| TenzError::NotFound(name.into()))?;
         let chunk = (chunk_bytes.max(1) as u64).min(m.nbytes.max(1)) as usize;
         if let Some(payload) = self.backend.as_slice(m.offset, m.nbytes as usize) {
+            // Sequential scan over a borrowed mapping: tell the kernel to
+            // read ahead for the pass, and that the pages are disposable
+            // once the payload has been handed off downstream.
+            if let Backend::Raw(src) = &self.backend {
+                src.advise_willneed(m.offset, m.nbytes as usize);
+            }
             for piece in payload.chunks(chunk) {
                 sink(piece)?;
+            }
+            if let Backend::Raw(src) = &self.backend {
+                src.advise_dontneed(m.offset, m.nbytes as usize);
             }
         } else {
             let mut buf = vec![0u8; chunk];

@@ -409,6 +409,14 @@ impl ShardedReader {
         self.readers.iter().filter_map(|r| r.get()).map(|r| r.payload_reads()).sum()
     }
 
+    /// Header-only access to one shard's indexed reader — the public
+    /// face of [`reader`](Self::reader) for metadata walks (`rsic
+    /// inspect`). Opening a shard parses its entry headers and seeks
+    /// past every payload, so a full walk stays O(total header bytes).
+    pub fn shard_reader(&self, idx: usize) -> Result<&TenzReader, TenzError> {
+        self.reader(idx)
+    }
+
     /// The shard reader for `idx`, opening it on first touch. Opening
     /// cross-checks the manifest's routing against the shard's own
     /// header index: a tensor the manifest routes here but the shard

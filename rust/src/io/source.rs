@@ -85,10 +85,15 @@ mod map {
             offset: i64,
         ) -> *mut core::ffi::c_void;
         fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+        fn madvise(addr: *mut core::ffi::c_void, len: usize, advice: i32) -> i32;
     }
 
     const PROT_READ: i32 = 1;
     const MAP_PRIVATE: i32 = 2;
+    /// `madvise` advice values (POSIX-stable on Linux and the BSDs).
+    pub const MADV_WILLNEED: i32 = 3;
+    pub const MADV_DONTNEED: i32 = 4;
+    const PAGE: usize = 4096;
 
     /// A read-only private mapping of a whole file. `Send + Sync`: the
     /// mapping is immutable for its lifetime and unmapped exactly once
@@ -122,6 +127,21 @@ mod map {
         pub fn as_slice(&self) -> &[u8] {
             // Safe: the region is PROT_READ, private, and lives until drop.
             unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+
+        /// Advise the kernel about `[offset, offset + len)`. The range
+        /// is widened to page boundaries (madvise requires a
+        /// page-aligned start) and clamped to the mapping; failures are
+        /// ignored — advice is best-effort by contract.
+        pub fn advise(&self, offset: usize, len: usize, advice: i32) {
+            if len == 0 || offset >= self.len {
+                return;
+            }
+            let start = offset & !(PAGE - 1);
+            let end = offset.saturating_add(len).min(self.len);
+            unsafe {
+                madvise((self.ptr as usize + start) as *mut core::ffi::c_void, end - start, advice);
+            }
         }
     }
 
@@ -210,10 +230,46 @@ impl PayloadSource {
                 let s = m.as_slice();
                 let start = usize::try_from(offset).ok()?;
                 let end = start.checked_add(len)?;
-                s.get(start..end)
+                let out = s.get(start..end);
+                if out.is_some() {
+                    crate::obs::iostat::add_mmap_read(len as u64);
+                }
+                out
             }
             _ => None,
         }
+    }
+
+    /// Hint that `[offset, offset + len)` will be read sequentially
+    /// soon (`MADV_WILLNEED`). Only the mmap backend can act on this;
+    /// everywhere else it is a no-op. Observable through the
+    /// `rsic_io_madvise_total` counter either way the call is real.
+    pub fn advise_willneed(&self, offset: u64, len: usize) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Imp::Mmap(m) = &self.imp {
+            if let Ok(off) = usize::try_from(offset) {
+                m.advise(off, len, map::MADV_WILLNEED);
+                crate::obs::iostat::add_madvise_willneed();
+            }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        let _ = (offset, len);
+    }
+
+    /// Hint that `[offset, offset + len)` has been handed off and its
+    /// pages can be reclaimed (`MADV_DONTNEED`). Safe on this mapping:
+    /// it is read-only and file-backed, so dropped pages re-fault from
+    /// the file. No-op off the mmap backend / off unix.
+    pub fn advise_dontneed(&self, offset: u64, len: usize) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Imp::Mmap(m) = &self.imp {
+            if let Ok(off) = usize::try_from(offset) {
+                m.advise(off, len, map::MADV_DONTNEED);
+                crate::obs::iostat::add_madvise_dontneed();
+            }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        let _ = (offset, len);
     }
 
     /// Fill `buf` from absolute `offset`. Reads past the snapshotted
@@ -241,12 +297,14 @@ impl PayloadSource {
                 let s = m.as_slice();
                 let start = offset as usize;
                 buf.copy_from_slice(&s[start..start + buf.len()]);
+                crate::obs::iostat::add_mmap_read(buf.len() as u64);
                 Ok(())
             }
             #[cfg(unix)]
             Imp::Direct(f) => {
                 use std::os::unix::fs::FileExt;
                 f.read_exact_at(buf, offset)?;
+                crate::obs::iostat::add_pread_read(buf.len() as u64);
                 Ok(())
             }
             #[cfg(windows)]
@@ -263,12 +321,14 @@ impl PayloadSource {
                     }
                     done += n;
                 }
+                crate::obs::iostat::add_pread_read(buf.len() as u64);
                 Ok(())
             }
             Imp::Seek(m) => {
                 let mut f = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                 f.seek(SeekFrom::Start(offset))?;
                 f.read_exact(buf)?;
+                crate::obs::iostat::add_seek_read(buf.len() as u64);
                 Ok(())
             }
         }
@@ -395,6 +455,34 @@ mod tests {
             assert_eq!(&buf, b"old-old-old-old!", "mode {mode:?} read replaced bytes");
             // Restore for the next mode.
             std::fs::write(&path, b"old-old-old-old!").unwrap();
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn madvise_hints_are_backend_gated_and_leave_bytes_readable() {
+        let data: Vec<u8> = (0..16384u32).map(|i| (i % 251) as u8).collect();
+        let path = tmp_file("advise", &data);
+        for mode in MODES {
+            let src = PayloadSource::open_mode(&path, mode).unwrap();
+            let before = crate::obs::iostat::snapshot();
+            // Unaligned range on purpose: advise must page-align itself.
+            src.advise_willneed(37, 9000);
+            let mut buf = vec![0u8; 9000];
+            src.read_at(&mut buf, 37).unwrap();
+            assert_eq!(buf, &data[37..37 + 9000], "mode {mode:?}");
+            src.advise_dontneed(37, 9000);
+            // DONTNEED pages must re-fault from the file transparently.
+            src.read_at(&mut buf, 37).unwrap();
+            assert_eq!(buf, &data[37..37 + 9000], "mode {mode:?} after dontneed");
+            // Past-the-end and empty ranges are harmless.
+            src.advise_willneed(src.len() + 10, 100);
+            src.advise_dontneed(0, 0);
+            let d = crate::obs::iostat::snapshot().since(&before);
+            if src.kind() == "mmap" {
+                assert!(d.madvise_willneed >= 1, "mode {mode:?}: {d:?}");
+                assert!(d.madvise_dontneed >= 1, "mode {mode:?}: {d:?}");
+            }
         }
         cleanup(&path);
     }

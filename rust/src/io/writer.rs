@@ -134,6 +134,7 @@ impl TenzWriter {
         }
         self.hasher.update(&header);
         self.entry_bytes += header.len() as u64;
+        crate::obs::iostat::add_writer_bytes(header.len() as u64);
         Ok(EntrySink { writer: self, remaining: nbytes, done: false })
     }
 
@@ -203,6 +204,7 @@ impl EntrySink<'_> {
         self.writer.hasher.update(bytes);
         self.writer.entry_bytes += bytes.len() as u64;
         self.remaining -= bytes.len() as u64;
+        crate::obs::iostat::add_writer_bytes(bytes.len() as u64);
         Ok(())
     }
 

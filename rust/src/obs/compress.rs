@@ -1,0 +1,206 @@
+//! Compression-path telemetry: one [`LayerTelemetry`] record per
+//! factorized layer.
+//!
+//! The pipeline computes everything the roadmap's rank-budget planner
+//! needs as a cost signal — per-layer spectral error, the σ_k/σ_{k+1}
+//! gap, the RSI power-iteration convergence trace — and used to throw
+//! it all away. This module keeps it, off the numeric path:
+//!
+//! * Workers *stage* what `rsi_factorize` observed in a `thread_local`
+//!   slot ([`stage_begin`]/[`stage_iteration`]/[`stage_spectrum`]),
+//!   because the factorizer knows its iterates but not the layer name;
+//!   the pipeline task that called it runs on the same thread and
+//!   claims the staged data with [`take_stage`].
+//! * Tasks then [`record`] a named record and the writer stage
+//!   [`update`]s it with quantize/write timings and stored bytes.
+//!
+//! Everything is gated on [`crate::obs::enabled`] — disabled, each
+//! site is one relaxed load — and nothing here ever touches a weight,
+//! an activation, or an accumulation order: compressed output is
+//! byte-identical with telemetry on or off (pinned by
+//! `tests/compress_obs.rs`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Registry bound: plenty for real checkpoints, small enough that a
+/// runaway caller cannot balloon the process (overflow is counted).
+pub const MAX_LAYERS: usize = 4096;
+
+/// Everything observed while compressing one layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerTelemetry {
+    pub layer: String,
+    /// Logical weight shape (C, D).
+    pub c: usize,
+    pub d: usize,
+    /// Target rank the planner chose.
+    pub k: usize,
+    /// Factorization method name (`rsi`, `rsvd`, `svd`, …).
+    pub method: String,
+    /// Stage timings, seconds. Read covers load + materialize;
+    /// quantize is the `encode_factor` dtype conversion.
+    pub read_secs: f64,
+    pub factorize_secs: f64,
+    pub validate_secs: f64,
+    pub quantize_secs: f64,
+    pub write_secs: f64,
+    /// ‖W − A·B‖₂ when `--validate` computed it.
+    pub spectral_error: Option<f64>,
+    /// Estimated σ_k and σ_{k+1} of W from the sketch spectrum
+    /// (σ_{k+1} is 0 when the sketch had no oversampling column to
+    /// estimate it from).
+    pub sigma_k: f64,
+    pub sigma_k1: f64,
+    /// Per-power-iteration captured spectral mass ‖WᵀXₜ‖_F — the
+    /// paper's Fig 4.1 convergence signal, one entry per q.
+    pub convergence: Vec<f64>,
+    /// Source payload bytes materialized for this layer.
+    pub bytes_before: u64,
+    /// Factor payload bytes written (codes + quantization scales).
+    pub bytes_after: u64,
+}
+
+static LAYERS: Mutex<BTreeMap<String, LayerTelemetry>> = Mutex::new(BTreeMap::new());
+static OVERFLOW: AtomicU64 = AtomicU64::new(0);
+
+/// Insert (or replace) the record for `t.layer`. No-op when obs is
+/// disabled; past [`MAX_LAYERS`] the record is dropped and counted.
+pub fn record(t: LayerTelemetry) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let mut map = crate::obs::lock(&LAYERS);
+    if map.len() >= MAX_LAYERS && !map.contains_key(&t.layer) {
+        OVERFLOW.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    map.insert(t.layer.clone(), t);
+}
+
+/// Mutate an existing record in place (writer-stage completion). A
+/// layer never recorded (obs was off during factorize, or overflow)
+/// is silently skipped.
+pub fn update(layer: &str, f: impl FnOnce(&mut LayerTelemetry)) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    if let Some(t) = crate::obs::lock(&LAYERS).get_mut(layer) {
+        f(t);
+    }
+}
+
+/// All records, in checkpoint layer order (trailing-integer-aware,
+/// matching `io::checkpoint::list_layers`).
+pub fn snapshot() -> Vec<LayerTelemetry> {
+    let mut out: Vec<LayerTelemetry> = crate::obs::lock(&LAYERS).values().cloned().collect();
+    out.sort_by_key(|t| {
+        let idx = t.layer.rsplit('.').next().and_then(|s| s.parse::<u64>().ok());
+        (idx.is_none(), idx, t.layer.clone())
+    });
+    out
+}
+
+pub fn overflow_total() -> u64 {
+    OVERFLOW.load(Ordering::Relaxed)
+}
+
+pub fn reset() {
+    crate::obs::lock(&LAYERS).clear();
+    OVERFLOW.store(0, Ordering::Relaxed);
+}
+
+/// What `rsi_factorize` observed before the layer name is known.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RsiStage {
+    pub convergence: Vec<f64>,
+    pub sigma_k: f64,
+    pub sigma_k1: f64,
+}
+
+thread_local! {
+    static STAGE: RefCell<Option<RsiStage>> = const { RefCell::new(None) };
+}
+
+/// Open a fresh staging slot on this thread (called at the top of
+/// `rsi_factorize` when obs is enabled; discards any stale slot).
+pub fn stage_begin() {
+    STAGE.with(|s| *s.borrow_mut() = Some(RsiStage::default()));
+}
+
+/// Append one power-iteration convergence sample. No-op without an
+/// open slot, so finalize-only callers cost nothing.
+pub fn stage_iteration(captured_mass: f64) {
+    STAGE.with(|s| {
+        if let Some(stage) = s.borrow_mut().as_mut() {
+            stage.convergence.push(captured_mass);
+        }
+    });
+}
+
+/// Record the sketch-spectrum gap estimates (σ_k, σ_{k+1}).
+pub fn stage_spectrum(sigma_k: f64, sigma_k1: f64) {
+    STAGE.with(|s| {
+        if let Some(stage) = s.borrow_mut().as_mut() {
+            stage.sigma_k = sigma_k;
+            stage.sigma_k1 = sigma_k1;
+        }
+    });
+}
+
+/// Claim and clear this thread's staged data — the pipeline task calls
+/// this right after the factorizer returns, on the same thread.
+pub fn take_stage() -> Option<RsiStage> {
+    STAGE.with(|s| s.borrow_mut().take())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(layer: &str) -> LayerTelemetry {
+        LayerTelemetry { layer: layer.into(), k: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn registry_respects_the_enable_gate_and_orders_layers() {
+        let _g = crate::obs::lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(false);
+        reset();
+        record(t("layers.0"));
+        assert!(snapshot().is_empty(), "disabled obs must record nothing");
+
+        crate::obs::set_enabled(true);
+        for name in ["layers.10", "head", "layers.2", "layers.0"] {
+            record(t(name));
+        }
+        update("layers.2", |rec| rec.write_secs = 1.5);
+        update("never.recorded", |rec| rec.write_secs = 9.0);
+        let snap = snapshot();
+        let names: Vec<&str> = snap.iter().map(|x| x.layer.as_str()).collect();
+        assert_eq!(names, vec!["layers.0", "layers.2", "layers.10", "head"]);
+        assert_eq!(snap[1].write_secs, 1.5);
+        crate::obs::set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn staging_is_per_thread_and_single_shot() {
+        let _g = crate::obs::lock(&crate::obs::TEST_GUARD);
+        stage_begin();
+        stage_iteration(1.0);
+        stage_iteration(2.0);
+        stage_spectrum(3.0, 0.5);
+        let got = take_stage().unwrap();
+        assert_eq!(got.convergence, vec![1.0, 2.0]);
+        assert_eq!((got.sigma_k, got.sigma_k1), (3.0, 0.5));
+        assert!(take_stage().is_none(), "stage is claimed exactly once");
+        // Without an open slot the samplers are inert.
+        stage_iteration(9.0);
+        assert!(take_stage().is_none());
+        // Another thread sees its own empty slot.
+        std::thread::spawn(|| assert!(take_stage().is_none())).join().unwrap();
+    }
+}

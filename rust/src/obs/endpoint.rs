@@ -309,6 +309,32 @@ pub fn gather(server: &Server) -> String {
     e.header("rsic_flight_dumps_total", "counter", "Postmortem dumps written.");
     e.sample("rsic_flight_dumps_total", &[], super::recorder::dumps_total() as f64);
 
+    let io = super::iostat::snapshot();
+    e.header("rsic_io_read_bytes_total", "counter", "Payload bytes read per storage backend.");
+    e.sample("rsic_io_read_bytes_total", &[("backend", "mmap")], io.mmap_read_bytes as f64);
+    e.sample("rsic_io_read_bytes_total", &[("backend", "pread")], io.pread_read_bytes as f64);
+    e.sample("rsic_io_read_bytes_total", &[("backend", "seek")], io.seek_read_bytes as f64);
+    e.header("rsic_io_chunk_cache_hits_total", "counter", "Chunkz cache hits.");
+    e.sample("rsic_io_chunk_cache_hits_total", &[], io.chunk_cache_hits as f64);
+    e.header("rsic_io_chunk_cache_misses_total", "counter", "Chunkz cache misses (decompresses).");
+    e.sample("rsic_io_chunk_cache_misses_total", &[], io.chunk_cache_misses as f64);
+    e.header("rsic_io_chunk_decompressed_bytes_total", "counter", "Bytes decompressed on misses.");
+    e.sample("rsic_io_chunk_decompressed_bytes_total", &[], io.chunk_decompressed_bytes as f64);
+    e.header("rsic_io_written_bytes_total", "counter", "Container bytes written (headers+payload).");
+    e.sample("rsic_io_written_bytes_total", &[], io.writer_bytes as f64);
+    e.header("rsic_io_madvise_total", "counter", "madvise hints issued on mmap payloads.");
+    e.sample("rsic_io_madvise_total", &[("advice", "willneed")], io.madvise_willneed as f64);
+    e.sample("rsic_io_madvise_total", &[("advice", "dontneed")], io.madvise_dontneed as f64);
+    e.header("rsic_exec_cache_hits_total", "counter", "Executable-cache hits.");
+    e.sample("rsic_exec_cache_hits_total", &[], io.exec_cache_hits as f64);
+    e.header("rsic_exec_cache_misses_total", "counter", "Executable-cache misses (compiles).");
+    e.sample("rsic_exec_cache_misses_total", &[], io.exec_cache_misses as f64);
+    e.header("rsic_exec_cache_hit_rate", "gauge", "Fraction of executable fetches served hot.");
+    let exec_total = io.exec_cache_hits + io.exec_cache_misses;
+    let exec_rate =
+        if exec_total == 0 { 0.0 } else { io.exec_cache_hits as f64 / exec_total as f64 };
+    e.sample("rsic_exec_cache_hit_rate", &[], exec_rate);
+
     if let Some(router) = server.router() {
         let snaps: Vec<(String, _)> = (0..router.worker_count())
             .map(|i| (i.to_string(), router.worker_snapshot(i)))

@@ -1,0 +1,185 @@
+//! Process-global I/O-tier counters.
+//!
+//! The storage tier (PR 9) made every read go through one of three
+//! `PayloadSource` backends and every write through `TenzWriter`, but
+//! none of that traffic was measurable. These counters sit directly in
+//! the byte-moving paths — `PayloadSource::read_at`/`as_slice`,
+//! `ChunkzReader::chunk`, `EntrySink::write` — and are *always on*,
+//! like `TenzReader::payload_reads`: a relaxed `fetch_add` per
+//! operation is far below the cost of the I/O it counts, and keeping
+//! them unconditional means `rsic inspect` can prove O(header) access
+//! even when `obs::enabled()` is off.
+//!
+//! Consumers: `PipelineMetrics::summary`, the `COMPRESS_REPORT_*.json`
+//! artifact, and the `rsic_io_*` / `rsic_exec_cache_*` series in
+//! [`super::endpoint::gather`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static MMAP_READ_BYTES: AtomicU64 = AtomicU64::new(0);
+static PREAD_READ_BYTES: AtomicU64 = AtomicU64::new(0);
+static SEEK_READ_BYTES: AtomicU64 = AtomicU64::new(0);
+static CHUNK_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CHUNK_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+static CHUNK_DECOMPRESSED_BYTES: AtomicU64 = AtomicU64::new(0);
+static WRITER_BYTES: AtomicU64 = AtomicU64::new(0);
+static MADVISE_WILLNEED: AtomicU64 = AtomicU64::new(0);
+static MADVISE_DONTNEED: AtomicU64 = AtomicU64::new(0);
+static EXEC_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static EXEC_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Bytes surfaced by an mmap-backed source (`read_at` copies and
+/// zero-copy `as_slice` windows both count — they are reads the page
+/// cache must satisfy either way).
+pub fn add_mmap_read(n: u64) {
+    MMAP_READ_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn add_pread_read(n: u64) {
+    PREAD_READ_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn add_seek_read(n: u64) {
+    SEEK_READ_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// One `ChunkzReader` chunk served from its single-slot cache.
+pub fn add_chunk_hit() {
+    CHUNK_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One chunk-cache miss that decompressed `raw_bytes` of payload.
+pub fn add_chunk_miss(raw_bytes: u64) {
+    CHUNK_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    CHUNK_DECOMPRESSED_BYTES.fetch_add(raw_bytes, Ordering::Relaxed);
+}
+
+/// Container bytes written by `TenzWriter` (headers and payloads; the
+/// sharded writer's shards flow through the same sink).
+pub fn add_writer_bytes(n: u64) {
+    WRITER_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+pub fn add_madvise_willneed() {
+    MADVISE_WILLNEED.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn add_madvise_dontneed() {
+    MADVISE_DONTNEED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One `ExecutableCache::get`, mirrored globally so `obs::gather` can
+/// export a fleet-wide hit rate without a handle to any one cache.
+pub fn add_exec_cache(hit: bool) {
+    if hit {
+        EXEC_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+    } else {
+        EXEC_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of every counter.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoSnapshot {
+    pub mmap_read_bytes: u64,
+    pub pread_read_bytes: u64,
+    pub seek_read_bytes: u64,
+    pub chunk_cache_hits: u64,
+    pub chunk_cache_misses: u64,
+    pub chunk_decompressed_bytes: u64,
+    pub writer_bytes: u64,
+    pub madvise_willneed: u64,
+    pub madvise_dontneed: u64,
+    pub exec_cache_hits: u64,
+    pub exec_cache_misses: u64,
+}
+
+impl IoSnapshot {
+    pub fn read_bytes_total(&self) -> u64 {
+        self.mmap_read_bytes + self.pread_read_bytes + self.seek_read_bytes
+    }
+
+    /// Counter deltas since `earlier` (saturating, so a concurrent
+    /// `reset` cannot produce garbage).
+    pub fn since(&self, earlier: &IoSnapshot) -> IoSnapshot {
+        IoSnapshot {
+            mmap_read_bytes: self.mmap_read_bytes.saturating_sub(earlier.mmap_read_bytes),
+            pread_read_bytes: self.pread_read_bytes.saturating_sub(earlier.pread_read_bytes),
+            seek_read_bytes: self.seek_read_bytes.saturating_sub(earlier.seek_read_bytes),
+            chunk_cache_hits: self.chunk_cache_hits.saturating_sub(earlier.chunk_cache_hits),
+            chunk_cache_misses: self.chunk_cache_misses.saturating_sub(earlier.chunk_cache_misses),
+            chunk_decompressed_bytes: self
+                .chunk_decompressed_bytes
+                .saturating_sub(earlier.chunk_decompressed_bytes),
+            writer_bytes: self.writer_bytes.saturating_sub(earlier.writer_bytes),
+            madvise_willneed: self.madvise_willneed.saturating_sub(earlier.madvise_willneed),
+            madvise_dontneed: self.madvise_dontneed.saturating_sub(earlier.madvise_dontneed),
+            exec_cache_hits: self.exec_cache_hits.saturating_sub(earlier.exec_cache_hits),
+            exec_cache_misses: self.exec_cache_misses.saturating_sub(earlier.exec_cache_misses),
+        }
+    }
+}
+
+pub fn snapshot() -> IoSnapshot {
+    IoSnapshot {
+        mmap_read_bytes: MMAP_READ_BYTES.load(Ordering::Relaxed),
+        pread_read_bytes: PREAD_READ_BYTES.load(Ordering::Relaxed),
+        seek_read_bytes: SEEK_READ_BYTES.load(Ordering::Relaxed),
+        chunk_cache_hits: CHUNK_CACHE_HITS.load(Ordering::Relaxed),
+        chunk_cache_misses: CHUNK_CACHE_MISSES.load(Ordering::Relaxed),
+        chunk_decompressed_bytes: CHUNK_DECOMPRESSED_BYTES.load(Ordering::Relaxed),
+        writer_bytes: WRITER_BYTES.load(Ordering::Relaxed),
+        madvise_willneed: MADVISE_WILLNEED.load(Ordering::Relaxed),
+        madvise_dontneed: MADVISE_DONTNEED.load(Ordering::Relaxed),
+        exec_cache_hits: EXEC_CACHE_HITS.load(Ordering::Relaxed),
+        exec_cache_misses: EXEC_CACHE_MISSES.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero every counter (tests only — production readers take deltas).
+pub fn reset() {
+    for c in [
+        &MMAP_READ_BYTES,
+        &PREAD_READ_BYTES,
+        &SEEK_READ_BYTES,
+        &CHUNK_CACHE_HITS,
+        &CHUNK_CACHE_MISSES,
+        &CHUNK_DECOMPRESSED_BYTES,
+        &WRITER_BYTES,
+        &MADVISE_WILLNEED,
+        &MADVISE_DONTNEED,
+        &EXEC_CACHE_HITS,
+        &EXEC_CACHE_MISSES,
+    ] {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot_deltas() {
+        let _g = crate::obs::lock(&crate::obs::TEST_GUARD);
+        let before = snapshot();
+        add_mmap_read(100);
+        add_pread_read(7);
+        add_seek_read(3);
+        add_chunk_hit();
+        add_chunk_miss(4096);
+        add_writer_bytes(55);
+        add_madvise_willneed();
+        add_madvise_dontneed();
+        add_exec_cache(true);
+        add_exec_cache(false);
+        let d = snapshot().since(&before);
+        assert_eq!(d.mmap_read_bytes, 100);
+        assert_eq!(d.read_bytes_total(), 110);
+        assert_eq!((d.chunk_cache_hits, d.chunk_cache_misses), (1, 1));
+        assert_eq!(d.chunk_decompressed_bytes, 4096);
+        assert_eq!(d.writer_bytes, 55);
+        assert_eq!((d.madvise_willneed, d.madvise_dontneed), (1, 1));
+        assert_eq!((d.exec_cache_hits, d.exec_cache_misses), (1, 1));
+    }
+}

@@ -23,6 +23,13 @@
 //! * [`recorder`] — the flight recorder: a bounded ring of recent
 //!   request events, dumped to a JSON postmortem on shed bursts,
 //!   failover, or worker death.
+//! * [`compress`] — the compression-path twin of [`layers`]: one
+//!   [`compress::LayerTelemetry`] per factorized layer (stage timings,
+//!   spectral error, σ_k/σ_{k+1} gap, the per-power-iteration RSI
+//!   convergence trace), feeding `COMPRESS_REPORT_*.json`.
+//! * [`iostat`] — always-on storage-tier counters: bytes read per
+//!   `PayloadSource` backend, chunk-cache hits/misses, writer bytes,
+//!   `madvise` hints, and the executable-cache mirror.
 //!
 //! **The invariant that shapes everything here:** instrumentation never
 //! changes numerics. Every hook is `Instant::now()` bookkeeping *around*
@@ -38,8 +45,10 @@
 //! deployments get per-process stats that the cluster `Stats` exchange
 //! merges fleet-wide (protocol v3).
 
+pub mod compress;
 pub mod endpoint;
 pub mod expo;
+pub mod iostat;
 pub mod layers;
 pub mod recorder;
 pub mod span;

@@ -1,14 +1,18 @@
-//! Request-lifecycle spans: lock-free per-thread buffers over
-//! [`Instant`], flushed in chunks to a bounded global store and
-//! exportable as Chrome trace-event JSON (`chrome://tracing`,
-//! Perfetto).
+//! Request-lifecycle spans: per-thread buffers over [`Instant`],
+//! flushed in chunks to a bounded global store and exportable as
+//! Chrome trace-event JSON (`chrome://tracing`, Perfetto).
 //!
-//! The hot path never takes a lock: [`record`] pushes into a
-//! `thread_local!` vector and only touches the global mutex every
-//! [`FLUSH_CHUNK`] spans (or at thread exit, via the buffer's `Drop`).
-//! The store is capped at [`MAX_SPANS`]; overflow increments a dropped
-//! counter instead of growing without bound — a long soak keeps the
-//! newest [`MAX_SPANS`]-sized prefix of history, never the whole run.
+//! The hot path never contends: [`record`] pushes into a
+//! `thread_local!` buffer behind a mutex only its own thread locks on
+//! that path, and only touches the global store every [`FLUSH_CHUNK`]
+//! spans (or at thread exit, via the buffer's `Drop`). Every buffer is
+//! also registered in a process-wide list so [`drain`] can sweep
+//! *live* threads' partial buffers — persistent pool workers and short
+//! runs park well under [`FLUSH_CHUNK`] spans, and a trace export must
+//! see them without waiting for thread exit. The store is capped at
+//! [`MAX_SPANS`]; overflow increments a dropped counter instead of
+//! growing without bound — a long soak keeps the newest
+//! [`MAX_SPANS`]-sized prefix of history, never the whole run.
 //!
 //! Timestamps are microseconds since [`crate::obs::epoch`], so spans
 //! from every thread (and the `ts`/`dur` fields Chrome expects) share
@@ -18,7 +22,7 @@ use super::{enabled, esc_json, lock, micros_since_epoch};
 use std::cell::RefCell;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Global-store cap: beyond this, new spans are counted as dropped.
@@ -51,26 +55,34 @@ static STORE: Mutex<Vec<Span>> = Mutex::new(Vec::new());
 static RECORDED: AtomicU64 = AtomicU64::new(0);
 static DROPPED: AtomicU64 = AtomicU64::new(0);
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+/// Every live thread's buffer, so [`drain`] can sweep partial buffers
+/// without waiting for thread exit. Entries deregister on `Drop`.
+static REGISTRY: Mutex<Vec<Arc<Mutex<Vec<Span>>>>> = Mutex::new(Vec::new());
 
 /// The per-thread buffer; `Drop` flushes whatever the thread still
-/// holds when it exits, so joined pool/batcher threads never lose
-/// spans.
+/// holds when it exits (so joined pool/batcher threads never lose
+/// spans) and removes the buffer from the sweep registry.
 struct LocalBuf {
     tid: u64,
-    spans: Vec<Span>,
+    spans: Arc<Mutex<Vec<Span>>>,
 }
 
 impl Drop for LocalBuf {
     fn drop(&mut self) {
-        flush_into_store(&mut self.spans);
+        let mut spans = std::mem::take(&mut *lock(&self.spans));
+        flush_into_store(&mut spans);
+        lock(&REGISTRY).retain(|e| !Arc::ptr_eq(e, &self.spans));
     }
 }
 
+fn new_local_buf() -> LocalBuf {
+    let spans = Arc::new(Mutex::new(Vec::new()));
+    lock(&REGISTRY).push(spans.clone());
+    LocalBuf { tid: NEXT_TID.fetch_add(1, Ordering::Relaxed), spans }
+}
+
 thread_local! {
-    static BUF: RefCell<LocalBuf> = RefCell::new(LocalBuf {
-        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
-        spans: Vec::new(),
-    });
+    static BUF: RefCell<LocalBuf> = RefCell::new(new_local_buf());
 }
 
 fn flush_into_store(spans: &mut Vec<Span>) {
@@ -98,11 +110,14 @@ pub fn record(name: &'static str, start: Instant, args: Vec<(&'static str, ArgVa
     let start_us = micros_since_epoch(start);
     RECORDED.fetch_add(1, Ordering::Relaxed);
     BUF.with(|b| {
-        let mut b = b.borrow_mut();
-        let tid = b.tid;
-        b.spans.push(Span { name, start_us, dur_us, tid, args });
-        if b.spans.len() >= FLUSH_CHUNK {
-            let mut full = std::mem::take(&mut b.spans);
+        let b = b.borrow();
+        // Uncontended on the hot path: only a concurrent drain() sweep
+        // ever takes this mutex from another thread.
+        let mut spans = lock(&b.spans);
+        spans.push(Span { name, start_us, dur_us, tid: b.tid, args });
+        if spans.len() >= FLUSH_CHUNK {
+            let mut full = std::mem::take(&mut *spans);
+            drop(spans);
             flush_into_store(&mut full);
         }
     });
@@ -119,10 +134,23 @@ pub fn instant(name: &'static str, args: Vec<(&'static str, ArgVal)>) {
 /// Force the calling thread's buffer into the global store.
 pub fn flush_thread() {
     BUF.with(|b| {
-        let mut b = b.borrow_mut();
-        let mut full = std::mem::take(&mut b.spans);
+        let b = b.borrow();
+        let mut full = std::mem::take(&mut *lock(&b.spans));
         flush_into_store(&mut full);
     });
+}
+
+/// Flush every live thread's partial buffer into the global store —
+/// the global counterpart of [`flush_thread`]. Called before trace
+/// export (via [`drain`]) and on worker-pool quiesce, so spans sitting
+/// under [`FLUSH_CHUNK`] in parked pool threads are never truncated
+/// out of a trace.
+pub fn flush_all() {
+    let bufs: Vec<Arc<Mutex<Vec<Span>>>> = lock(&REGISTRY).clone();
+    for buf in bufs {
+        let mut spans = std::mem::take(&mut *lock(&buf));
+        flush_into_store(&mut spans);
+    }
 }
 
 /// Spans recorded since process start (including any later dropped).
@@ -135,13 +163,12 @@ pub fn dropped_total() -> u64 {
     DROPPED.load(Ordering::Relaxed)
 }
 
-/// Drain every flushed span (the calling thread is force-flushed
-/// first). Other threads' partially-filled buffers flush when those
-/// threads exit or next cross [`FLUSH_CHUNK`] — callers wanting a
-/// complete trace should join worker threads first (dropping a
-/// `Server` does).
+/// Drain every span: sweeps *all* live threads' partial buffers into
+/// the store (via [`flush_all`]), then takes the store. A 1-span run
+/// exports 1 span, even when the recording thread is a persistent
+/// pool worker that never exits and never crosses [`FLUSH_CHUNK`].
 pub fn drain() -> Vec<Span> {
-    flush_thread();
+    flush_all();
     std::mem::take(&mut *lock(&STORE))
 }
 
@@ -244,6 +271,36 @@ mod tests {
         tids.sort_unstable();
         tids.dedup();
         assert_eq!(tids.len(), 3, "threads must not share a tid");
+        reset();
+    }
+
+    /// The short-run truncation regression: a thread that recorded
+    /// fewer than [`FLUSH_CHUNK`] spans and is still alive (a parked
+    /// pool worker) must not be invisible to a trace export — drain()
+    /// sweeps live buffers, it does not wait for thread exit.
+    #[test]
+    fn drain_sweeps_live_threads_partial_buffers() {
+        let _g = lock(&crate::obs::TEST_GUARD);
+        crate::obs::set_enabled(true);
+        reset();
+        let (recorded_tx, recorded_rx) = std::sync::mpsc::channel();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let h = std::thread::spawn(move || {
+            record("pool-span", Instant::now(), vec![]);
+            recorded_tx.send(()).unwrap();
+            // Park, buffer unflushed, until the assertion has run.
+            release_rx.recv().unwrap();
+        });
+        recorded_rx.recv().unwrap();
+        let spans = drain();
+        assert_eq!(
+            spans.iter().filter(|s| s.name == "pool-span").count(),
+            1,
+            "a 1-span run must export 1 span while the thread still lives"
+        );
+        release_tx.send(()).unwrap();
+        h.join().unwrap();
+        crate::obs::set_enabled(false);
         reset();
     }
 

@@ -28,9 +28,11 @@ impl ExecutableCache {
         use std::sync::atomic::Ordering;
         if let Some(exe) = self.inner.lock().unwrap().get(path) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::iostat::add_exec_cache(true);
             return Ok(exe.clone());
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        crate::obs::iostat::add_exec_cache(false);
         let client = shared_client()?;
         let exe = Arc::new(compile_hlo_file(&client, path)?);
         self.inner.lock().unwrap().insert(path.to_path_buf(), exe.clone());

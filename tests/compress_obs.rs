@@ -1,0 +1,382 @@
+//! Compression-path observability (the compress twin of `tests/obs.rs`):
+//!
+//! * obs on/off **byte-identity** of `compress_to_path` output across all
+//!   three checkpoint forms (single `.tenz`, sharded manifest, sharded +
+//!   chunk-compressed payload) — telemetry observes, it never touches
+//!   the numeric path,
+//! * the `COMPRESS_REPORT` render → parse round-trip on a *live* run,
+//!   with the per-layer schema (rank, stage timings, spectral error,
+//!   per-iteration RSI convergence trace, stored-bytes delta) checked
+//!   field by field,
+//! * the `rsic inspect` golden table on a sharded chunk-compressed
+//!   checkpoint, proving the walk is O(header) via the payload-read
+//!   counter and the storage-tier I/O counters,
+//! * live-thread span export through the compress pipeline (parked pool
+//!   workers must not hide spans from a trace), and
+//! * the CI-gated obs-overhead budget (`RSIC_BENCH_ENFORCE=1` enforces
+//!   obs-enabled compress within `RSIC_COMPRESS_OBS_MAX_PCT` ≈ 5% of
+//!   disabled on the smoke shape).
+//!
+//! Tests that flip the process-global obs switch serialize on a local
+//! mutex (`GUARD`) — the crate's internal TEST_GUARD is not visible
+//! from an integration test.
+
+use rsi_compress::bench::record;
+use rsi_compress::bench::{CompressReport, LayerReport};
+use rsi_compress::cli::commands::render_inspect;
+use rsi_compress::compress::plan::{CompressionPlan, Method};
+use rsi_compress::compress::rsi::RsiOptions;
+use rsi_compress::coordinator::pipeline::{Pipeline, PipelineConfig};
+use rsi_compress::io::checkpoint::{store_weight, CheckpointSource, StoreDType, StoredWeight};
+use rsi_compress::io::tenz::{TensorEntry, TensorFile};
+use rsi_compress::obs;
+use rsi_compress::rng::GaussianSource;
+use rsi_compress::tensor::init::gaussian;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("compress_obs_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A checkpoint with weights, biases and a spectrum side-tensor per
+/// layer (the shapes aot.py ships).
+fn checkpoint(n_layers: usize, c: usize, d: usize, seed: u64) -> TensorFile {
+    let mut g = GaussianSource::new(seed);
+    let mut tf = TensorFile::new();
+    let bias = vec![0.5f32; c];
+    for i in 0..n_layers {
+        let layer = format!("layers.{i}");
+        store_weight(&mut tf, &layer, &StoredWeight::Dense(gaussian(c, d, 1.0, &mut g)));
+        tf.insert(format!("{layer}.bias"), TensorEntry::from_f32(vec![c], &bias));
+        tf.insert(
+            format!("{layer}.spectrum"),
+            TensorEntry::from_f32(vec![4], &[4.0, 3.0, 2.0, 1.0]),
+        );
+    }
+    tf
+}
+
+fn plan(q: usize) -> CompressionPlan {
+    CompressionPlan::uniform_alpha(0.3, Method::Rsi(RsiOptions::with_q(q, 42)))
+}
+
+/// One output configuration per checkpoint form the byte-identity
+/// property must cover.
+fn form_config(form: &str) -> PipelineConfig {
+    match form {
+        "single" => PipelineConfig { workers: 2, ..Default::default() },
+        "sharded" => {
+            PipelineConfig { workers: 2, shard_size: Some(4096), ..Default::default() }
+        }
+        // Chunk-compressed shards with i8 factors: the form with the
+        // most machinery between telemetry and the output bytes.
+        "chunkz" => PipelineConfig {
+            workers: 2,
+            shard_size: Some(4096),
+            compress_payload: true,
+            store_dtype: StoreDType::I8,
+            ..Default::default()
+        },
+        other => panic!("unknown form {other}"),
+    }
+}
+
+/// Compress `src_path` into `out_dir/out_name` and return every file the
+/// run produced (manifest + shards for sharded outputs), name → bytes.
+fn compress_files(
+    src_path: &Path,
+    out_dir: &Path,
+    out_name: &str,
+    cfg: PipelineConfig,
+    plan: &CompressionPlan,
+) -> BTreeMap<String, Vec<u8>> {
+    std::fs::create_dir_all(out_dir).unwrap();
+    let pipe = Pipeline::new(cfg).unwrap();
+    let src = Arc::new(CheckpointSource::open(src_path).unwrap());
+    let report = pipe.compress_to_path(src, plan, out_dir.join(out_name)).unwrap();
+    assert!(report.outcomes.iter().all(|o| o.error.is_none()), "{:?}", report.outcomes);
+    let mut files = BTreeMap::new();
+    for e in std::fs::read_dir(out_dir).unwrap() {
+        let e = e.unwrap();
+        files.insert(
+            e.file_name().to_string_lossy().into_owned(),
+            std::fs::read(e.path()).unwrap(),
+        );
+    }
+    files
+}
+
+/// The tentpole invariant: compressed output is byte-identical with
+/// observability on or off, for every checkpoint form.
+#[test]
+fn obs_toggle_never_changes_compressed_bytes() {
+    let _g = guard();
+    let dir = tmp_dir("identity");
+    let src_path = dir.join("in.tenz");
+    let n_layers = 4;
+    checkpoint(n_layers, 16, 24, 11).write(&src_path).unwrap();
+    let plan = plan(2);
+
+    for (form, out_name) in [("single", "out.tenz"), ("sharded", "out.toml"), ("chunkz", "out.toml")]
+    {
+        obs::set_enabled(false);
+        let off = compress_files(
+            &src_path,
+            &dir.join(format!("{form}_off")),
+            out_name,
+            form_config(form),
+            &plan,
+        );
+        obs::set_enabled(true);
+        obs::compress::reset();
+        let on = compress_files(
+            &src_path,
+            &dir.join(format!("{form}_on")),
+            out_name,
+            form_config(form),
+            &plan,
+        );
+        obs::set_enabled(false);
+        assert_eq!(
+            off.keys().collect::<Vec<_>>(),
+            on.keys().collect::<Vec<_>>(),
+            "{form}: obs toggle changed the set of output files"
+        );
+        for (name, bytes) in &off {
+            assert_eq!(bytes, &on[name], "{form}/{name}: obs toggle changed output bytes");
+        }
+        // ... while the obs-on run really did record telemetry.
+        assert_eq!(obs::compress::snapshot().len(), n_layers, "{form}");
+    }
+    obs::compress::reset();
+    obs::span::reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Report round-trip on a live run: every planner-facing cost signal is
+/// populated, renders to JSON, and parses back bit-equal. Doubles as
+/// the CI smoke artifact writer — under `RSIC_COMPRESS_SMOKE=1` the
+/// report lands in the bench dir for upload next to `BENCH_*.json`.
+#[test]
+fn compress_report_round_trips_from_a_live_run() {
+    let _g = guard();
+    let dir = tmp_dir("report");
+    let src_path = dir.join("in.tenz");
+    let (n_layers, c, d, q) = (3usize, 20usize, 28usize, 3usize);
+    checkpoint(n_layers, c, d, 7).write(&src_path).unwrap();
+
+    obs::set_enabled(true);
+    obs::compress::reset();
+    let io_before = obs::iostat::snapshot();
+    let pipe =
+        Pipeline::new(PipelineConfig { workers: 2, validate: true, ..Default::default() })
+            .unwrap();
+    let src = Arc::new(CheckpointSource::open(&src_path).unwrap());
+    let out_path = dir.join("out.tenz");
+    let stream = pipe.compress_to_path(src, &plan(q), &out_path).unwrap();
+    obs::set_enabled(false);
+    assert!(stream.outcomes.iter().all(|o| o.error.is_none()), "{:?}", stream.outcomes);
+
+    let layers: Vec<LayerReport> =
+        obs::compress::snapshot().into_iter().map(Into::into).collect();
+    assert_eq!(layers.len(), n_layers);
+    for l in &layers {
+        assert_eq!((l.c, l.d), (c, d), "{}", l.layer);
+        assert!(l.k > 0, "{}: rank recorded", l.layer);
+        assert_eq!(l.convergence.len(), q, "{}: one sample per power iteration", l.layer);
+        assert!(l.convergence.iter().all(|&m| m.is_finite() && m > 0.0), "{}", l.layer);
+        assert!(l.sigma_k > 0.0, "{}", l.layer);
+        assert!(l.spectral_error.is_some(), "{}: --validate computed the error", l.layer);
+        assert_eq!(l.bytes_before, (c * d * 4) as u64, "{}", l.layer);
+        assert_eq!(l.bytes_after, ((c + d) * l.k * 4) as u64, "{}: f32 factors", l.layer);
+        assert!(l.bytes_after < l.bytes_before, "{}: factors store fewer bytes", l.layer);
+        assert!(!l.method.is_empty());
+        assert!(l.read_secs >= 0.0 && l.factorize_secs >= 0.0 && l.write_secs >= 0.0);
+    }
+
+    let report = CompressReport {
+        date: record::today_utc(),
+        git_rev: record::git_rev(),
+        method: stream.method.clone(),
+        factorizer: stream.factorizer.clone(),
+        backend: stream.backend.to_string(),
+        out_path: out_path.display().to_string(),
+        total_seconds: stream.total_seconds,
+        ratio: stream.ratio,
+        tensors_written: stream.tensors_written as u64,
+        shards: stream.shards as u64,
+        layers_failed: 0,
+        io: obs::iostat::snapshot().since(&io_before),
+        layers,
+    };
+    assert!(report.io.read_bytes_total() > 0, "the run's reads were counted");
+    assert!(report.io.writer_bytes > 0, "the run's writes were counted");
+
+    let back = CompressReport::from_json(&report.to_json()).unwrap();
+    assert_eq!(back, report, "render → parse must reconstruct every field");
+
+    let report_dir = if std::env::var("RSIC_COMPRESS_SMOKE").as_deref() == Ok("1") {
+        record::bench_dir()
+    } else {
+        dir.clone()
+    };
+    let path = report.write_to(&report_dir).unwrap();
+    let disk = CompressReport::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(disk, report, "the on-disk artifact parses back identically");
+
+    obs::compress::reset();
+    obs::span::reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `rsic inspect` golden table on a sharded chunk-compressed checkpoint:
+/// rows carry rank/dtype/codec/shard, and the walk is O(header) — zero
+/// payload reads, no writes, only header-scan reads in the I/O counters.
+#[test]
+fn inspect_renders_golden_table_from_headers_only() {
+    let _g = guard();
+    obs::set_enabled(false);
+    let dir = tmp_dir("inspect");
+    let src_path = dir.join("in.tenz");
+    checkpoint(3, 16, 24, 5).write(&src_path).unwrap();
+    let manifest = dir.join("ck.toml");
+    compress_files(&src_path, &dir, "ck.toml", form_config("chunkz"), &plan(2));
+
+    let io_before = obs::iostat::snapshot();
+    let table = render_inspect(manifest.to_str().unwrap(), false).unwrap();
+    let io = obs::iostat::snapshot().since(&io_before);
+
+    // Golden rows: factored i8 layers in chunk-compressed shards, the
+    // bias/spectrum passthroughs as plain tensor rows.
+    assert!(table.contains("sharded"), "{table}");
+    for col in ["layer", "shape", "form", "k", "dtype", "bytes", "codec", "shard"] {
+        assert!(table.contains(col), "missing column {col} in:\n{table}");
+    }
+    for (row, needle) in [("layers.0", "factored"), ("layers.0", "16x24"), ("layers.0", "i8")] {
+        let line = table.lines().find(|l| l.trim_start().starts_with(row)).unwrap();
+        assert!(line.contains(needle), "{row} row missing {needle}: {line}");
+    }
+    assert!(table.contains("chunkz"), "codec column shows the at-rest form:\n{table}");
+    assert!(table.contains("layers.0.bias"), "passthrough tensors listed:\n{table}");
+    assert!(
+        table.contains("(0 payload reads"),
+        "the walk must not materialize any payload:\n{table}"
+    );
+    assert!(io.read_bytes_total() > 0, "header scans are counted reads");
+    assert_eq!(io.writer_bytes, 0, "inspect writes nothing");
+
+    // The --json document agrees and stays parseable by the shared
+    // strict parser discipline (payload_reads pinned at zero).
+    let json = render_inspect(manifest.to_str().unwrap(), true).unwrap();
+    assert!(json.contains("\"format\": \"sharded\""), "{json}");
+    assert!(json.contains("\"factored\": true"), "{json}");
+    assert!(json.contains("\"codec\": \"chunkz\""), "{json}");
+    assert!(json.contains("\"payload_reads\": 0"), "{json}");
+
+    // A plain single-file checkpoint renders dense rows the same way.
+    let single = render_inspect(src_path.to_str().unwrap(), false).unwrap();
+    assert!(single.contains("single"), "{single}");
+    assert!(single.contains("dense"), "{single}");
+    assert!(single.contains("(0 payload reads"), "{single}");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The PR-8 span-drain regression at pipeline scale: a compress run's
+/// spans live in parked pool-worker buffers (well under the flush
+/// chunk); a trace export must sweep them while those threads are still
+/// alive — without waiting for the pipeline to drop.
+#[test]
+fn trace_export_sweeps_parked_pool_worker_spans() {
+    let _g = guard();
+    let dir = tmp_dir("trace");
+    let src_path = dir.join("in.tenz");
+    let n_layers = 3;
+    checkpoint(n_layers, 12, 20, 3).write(&src_path).unwrap();
+
+    obs::set_enabled(true);
+    obs::span::reset();
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+    let src = Arc::new(CheckpointSource::open(&src_path).unwrap());
+    pipe.compress_to_path(src, &plan(1), dir.join("out.tenz")).unwrap();
+
+    // The pipeline (and its worker pool) is still alive here.
+    let trace_path = dir.join("trace.json");
+    let n = obs::span::write_trace(&trace_path).unwrap();
+    obs::set_enabled(false);
+    assert!(
+        n >= n_layers * 3,
+        "expected ≥ {} spans (read/factorize/write per layer), got {n}",
+        n_layers * 3
+    );
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    for name in ["compress.read", "compress.factorize", "compress.write"] {
+        assert!(text.contains(name), "trace missing {name} spans");
+    }
+    drop(pipe);
+    obs::span::reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// CI smoke budget: obs-enabled compress stays within
+/// `RSIC_COMPRESS_OBS_MAX_PCT` (default 5%) of disabled on the smoke
+/// shape. Trials interleave on/off so drift hits both arms; the gate
+/// only enforces under `RSIC_BENCH_ENFORCE=1` (locally it reports).
+#[test]
+fn obs_overhead_within_budget_on_smoke_shape() {
+    let _g = guard();
+    let dir = tmp_dir("overhead");
+    let src_path = dir.join("in.tenz");
+    checkpoint(6, 96, 64, 13).write(&src_path).unwrap();
+    let plan = plan(2);
+    let pipe = Pipeline::new(PipelineConfig { workers: 2, ..Default::default() }).unwrap();
+
+    let run = |enabled: bool, out: &Path| -> f64 {
+        obs::set_enabled(enabled);
+        let src = Arc::new(CheckpointSource::open(&src_path).unwrap());
+        let t0 = std::time::Instant::now();
+        pipe.compress_to_path(src, &plan, out).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        obs::set_enabled(false);
+        secs
+    };
+    // Warmup both arms, then interleave timed trials.
+    run(false, &dir.join("warm_off.tenz"));
+    run(true, &dir.join("warm_on.tenz"));
+    let (mut off, mut on) = (Vec::new(), Vec::new());
+    for trial in 0..5 {
+        off.push(run(false, &dir.join(format!("off_{trial}.tenz"))));
+        on.push(run(true, &dir.join(format!("on_{trial}.tenz"))));
+    }
+    obs::compress::reset();
+    obs::span::reset();
+
+    let median = |v: &mut Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let (m_off, m_on) = (median(&mut off), median(&mut on));
+    let pct = (m_on - m_off) / m_off * 100.0;
+    let max_pct: f64 = std::env::var("RSIC_COMPRESS_OBS_MAX_PCT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5.0);
+    println!("obs overhead: off {m_off:.4}s, on {m_on:.4}s ({pct:+.2}%)");
+    if record::enforce() {
+        assert!(
+            pct <= max_pct,
+            "obs-enabled compress is {pct:.2}% over disabled (budget {max_pct}%)"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
